@@ -1,0 +1,120 @@
+//! END-TO-END DRIVER: the full three-layer system on a real workload.
+//!
+//! 1. loads the AOT-compiled quantized CNN (JAX/Pallas → HLO text) into
+//!    the PJRT CPU runtime — no Python anywhere on this path;
+//! 2. serves the held-out eval set and reports healthy accuracy;
+//! 3. injects persistent faults into the simulated computing array,
+//!    derives the per-layer stuck-at masks through the
+//!    output-stationary mapping, and measures the degraded accuracy;
+//! 4. runs the HyCA fault-detection scan, fills the FPT, repairs with
+//!    the DPPU, and shows accuracy restored — plus throughput numbers
+//!    for the serving loop.
+//!
+//! Run `make artifacts` first. Results are recorded in EXPERIMENTS.md.
+//!
+//! ```sh
+//! cargo run --release --example e2e_fault_tolerant_inference [PER%] [seed]
+//! ```
+
+use hyca::array::Dims;
+use hyca::faults::ber::ber_from_per;
+use hyca::faults::montecarlo::FaultModel;
+use hyca::faults::stuckat::sample_stuck_mask;
+use hyca::hyca::detect::simulate_scan;
+use hyca::hyca::fpt::FaultPeTable;
+use hyca::inference::masks::ModelGeometry;
+use hyca::inference::{Engine, LayerMasks};
+use hyca::redundancy::{hyca::HycaScheme, RepairCtx, Scheme};
+use hyca::util::rng::Pcg32;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let per: f64 = args.first().and_then(|s| s.parse().ok()).unwrap_or(6.0) / 100.0;
+    let seed: u64 = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(2);
+    // the functional pipeline maps the CNN onto an 8×8 array — see
+    // coordinator::exp_fig02 for the model:array ratio rationale.
+    let dims = Dims::new(8, 8);
+
+    println!("== 1. load AOT artifacts into PJRT ==");
+    let t0 = std::time::Instant::now();
+    let engine = Engine::load()?;
+    println!(
+        "   platform={} model={} ({} eval images, batch {}) in {:.2}s",
+        engine.runtime.platform(),
+        engine.model.name,
+        engine.eval.images.len(),
+        engine.batch,
+        t0.elapsed().as_secs_f64()
+    );
+    let geometry = ModelGeometry { batch: engine.batch, ..ModelGeometry::default() };
+
+    println!("\n== 2. healthy serving ==");
+    let t0 = std::time::Instant::now();
+    let clean = engine.accuracy(&LayerMasks::identity(&geometry))?;
+    let dt = t0.elapsed().as_secs_f64();
+    let n = (engine.eval.images.len() / engine.batch) * engine.batch;
+    println!(
+        "   accuracy {:.4} | {} images in {:.2}s → {:.0} img/s",
+        clean, n, dt, n as f64 / dt
+    );
+
+    println!("\n== 3. inject faults (PER {:.2}%) ==", per * 100.0);
+    let cfg = FaultModel::Random.sample_indexed(seed, 0, dims, per);
+    println!("   {} faulty PEs on the {dims} array:", cfg.count());
+    for c in cfg.faulty() {
+        print!(" ({},{})", c.row, c.col);
+    }
+    println!();
+    let ber = ber_from_per(per).max(1e-6);
+    let faulty_masks = LayerMasks::from_faults(&geometry, &cfg, &|_, _| false, ber, seed);
+    let acc_faulty = engine.accuracy(&faulty_masks)?;
+    println!("   degraded accuracy: {:.4} (clean {:.4})", acc_faulty, clean);
+
+    println!("\n== 4. detect + repair with HyCA ==");
+    let mut rng = Pcg32::new(seed, 3);
+    let masks: Vec<_> = (0..cfg.count())
+        .map(|_| sample_stuck_mask(&mut rng, ber, 144))
+        .collect();
+    let scan = simulate_scan(&cfg, &masks, 8, &mut rng);
+    println!(
+        "   scan ({} cycles): detected {}/{} faults{}",
+        scan.total_cycles,
+        scan.detected.len(),
+        cfg.count(),
+        if scan.escaped.is_empty() { "".to_string() } else {
+            format!(" ({} escaped this window)", scan.escaped.len())
+        }
+    );
+    let mut fpt = FaultPeTable::new(8, dims);
+    for c in &scan.detected {
+        fpt.insert(*c);
+    }
+    let scheme = HycaScheme::paper(8);
+    let mut rng2 = Pcg32::new(seed, 4);
+    let mut ctx = RepairCtx { per, rng: &mut rng2 };
+    let outcome = scheme.repair(&cfg, &mut ctx);
+    println!(
+        "   DPPU(8) repair: fully_functional={} surviving {}/{} columns",
+        outcome.fully_functional, outcome.surviving_cols, outcome.total_cols
+    );
+    let repaired_masks = LayerMasks::from_faults(
+        &geometry,
+        &cfg,
+        &|r, c| fpt.contains(hyca::faults::Coord::new(r, c)),
+        ber,
+        seed,
+    );
+    let acc_repaired = engine.accuracy(&repaired_masks)?;
+    println!("   repaired accuracy: {:.4}", acc_repaired);
+
+    println!("\n== summary ==");
+    println!(
+        "   clean {:.4} → faulty {:.4} → HyCA-repaired {:.4}",
+        clean, acc_faulty, acc_repaired
+    );
+    if scan.escaped.is_empty() && outcome.fully_functional && (acc_repaired - clean).abs() < 1e-12
+    {
+        println!("   full recovery: repaired accuracy identical to clean. ✔");
+    }
+    Ok(())
+}

@@ -1,0 +1,75 @@
+//! Quickstart: sample a faulty 32×32 computing array, try to repair it
+//! with the four redundancy schemes, and print what survives.
+//!
+//! ```sh
+//! cargo run --release --example quickstart [PER%] [seed]
+//! ```
+
+use hyca::array::Dims;
+use hyca::faults::montecarlo::FaultModel;
+use hyca::redundancy::{
+    cr::ColumnRedundancy, dr::DiagonalRedundancy, evaluate_scheme, hyca::HycaScheme,
+    rr::RowRedundancy, RepairCtx, Scheme,
+};
+use hyca::util::rng::Pcg32;
+use hyca::util::table::{f, Table};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let per: f64 = args.first().and_then(|s| s.parse().ok()).unwrap_or(2.0) / 100.0;
+    let seed: u64 = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(42);
+    let dims = Dims::PAPER;
+
+    // 1. sample one fault configuration
+    let cfg = FaultModel::Random.sample_indexed(seed, 0, dims, per);
+    println!(
+        "sampled {} faulty PEs on a {dims} array at PER {:.2}% (seed {seed}):",
+        cfg.count(),
+        per * 100.0
+    );
+    for c in cfg.faulty().iter().take(12) {
+        print!(" ({},{})", c.row, c.col);
+    }
+    if cfg.count() > 12 {
+        print!(" …");
+    }
+    println!("\n");
+
+    // 2. repair with each scheme
+    let schemes: Vec<Box<dyn Scheme>> = vec![
+        Box::new(RowRedundancy::default()),
+        Box::new(ColumnRedundancy::default()),
+        Box::new(DiagonalRedundancy),
+        Box::new(HycaScheme::paper(32)),
+    ];
+    let mut t = Table::new(
+        "repair outcome for this configuration",
+        &["scheme", "spares", "fully functional", "surviving cols", "remaining power"],
+    );
+    for s in &schemes {
+        let mut rng = Pcg32::split(seed, 1);
+        let mut ctx = RepairCtx { per, rng: &mut rng };
+        let o = s.repair(&cfg, &mut ctx);
+        t.push_row(vec![
+            s.name(),
+            s.spare_count(dims).to_string(),
+            o.fully_functional.to_string(),
+            format!("{}/{}", o.surviving_cols, o.total_cols),
+            f(o.remaining_power(), 3),
+        ]);
+    }
+    println!("{}", t.to_markdown());
+
+    // 3. Monte-Carlo: fully-functional probability at this PER
+    let mut t = Table::new(
+        format!("fully-functional probability at PER {:.2}% (2000 configs)", per * 100.0),
+        &["scheme", "FFP", "mean remaining power"],
+    );
+    for s in &schemes {
+        let (ffp, power) =
+            evaluate_scheme(s.as_ref(), dims, per, FaultModel::Random, seed, 2000, 4);
+        t.push_row(vec![s.name(), f(ffp, 4), f(power, 4)]);
+    }
+    println!("{}", t.to_markdown());
+    println!("next: `cargo run --release -- list` for the full experiment registry");
+}

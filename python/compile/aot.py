@@ -1,0 +1,184 @@
+"""AOT compile path: train → quantize → lower to HLO **text** →
+artifacts/.
+
+Run via ``make artifacts`` (no-op when artifacts are newer than the
+sources). Python never runs again after this step: the rust coordinator
+loads the HLO through the PJRT C API.
+
+Interchange is HLO *text*, not serialized HloModuleProto: jax ≥ 0.5
+emits 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+parser reassigns ids (see /opt/xla-example/README.md).
+
+Artifacts:
+  model.hlo.txt            — forward_quant, batch 16: inputs
+                             (x s32 (16,1,16,16),
+                              and/or masks per layer — see manifest)
+                             → logits s32 (16,10). Weights are baked
+                             in as constants (deployment-style).
+  kernel_faulty_matmul.hlo.txt — the L1 kernel standalone
+                             (256,128)·(128,64) for rust-side
+                             microbenchmarks.
+  model_params.txt         — quantized weights/biases/requant constants
+                             (rust parses this to run its bit-exact
+                             oracle).
+  eval_set.bin             — held-out eval images + labels (binary,
+                             magic "HYCAEVAL").
+  manifest.txt             — shapes and seeds.
+"""
+
+import argparse
+import os
+import struct
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels.faulty_matmul import faulty_matmul
+
+TRAIN_SEED = 0
+TRAIN_STEPS = 300
+EVAL_SEED = 123
+EVAL_PER_CLASS = 26  # 260 images; rust batches 16 → 256 used
+BATCH = 16
+KERNEL_SHAPE = (256, 128, 64)  # M, K, N of the standalone kernel
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (id-safe interchange).
+
+    Two print options matter (found the hard way — see EXPERIMENTS.md
+    §Gotchas): `print_large_constants` (the default ELIDES constants as
+    `constant({...})`, silently corrupting any graph with baked
+    weights: the old text parser "recovers" with garbage values), and
+    `print_metadata = False` (xla_extension 0.5.1 rejects the newer
+    `source_end_line` metadata attribute).
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    opts = xc._xla.HloPrintOptions()
+    opts.print_large_constants = True
+    opts.print_metadata = False
+    return comp.get_hlo_module().to_string(opts)
+
+
+def export_model_hlo(qm: model.QuantModel, out_path: str) -> None:
+    """Lower the faulty quantized forward pass, weights baked in."""
+
+    def fwd(x_s32, a1, o1, a2, o2, a3, o3, af, of):
+        x8 = x_s32.astype(jnp.int8)
+        masks = [(a1, o1), (a2, o2), (a3, o3), (af, of)]
+        return (model.forward_quant(qm, x8, masks),)
+
+    shapes = model.mask_shapes(BATCH)
+    args = [jax.ShapeDtypeStruct((BATCH, 1, model.IMG, model.IMG), jnp.int32)]
+    for shp in shapes:
+        args.append(jax.ShapeDtypeStruct(shp, jnp.int32))
+        args.append(jax.ShapeDtypeStruct(shp, jnp.int32))
+    lowered = jax.jit(fwd).lower(*args)
+    with open(out_path, "w") as f:
+        f.write(to_hlo_text(lowered))
+
+
+def export_kernel_hlo(out_path: str) -> None:
+    """Standalone L1 kernel for rust-side microbenchmarks."""
+    m, k, n = KERNEL_SHAPE
+
+    def kern(x_s32, w_s32, am, om, bias):
+        return (
+            faulty_matmul(
+                x_s32.astype(jnp.int8), w_s32.astype(jnp.int8), am, om, bias
+            ),
+        )
+
+    args = [
+        jax.ShapeDtypeStruct((m, k), jnp.int32),
+        jax.ShapeDtypeStruct((k, n), jnp.int32),
+        jax.ShapeDtypeStruct((m, n), jnp.int32),
+        jax.ShapeDtypeStruct((m, n), jnp.int32),
+        jax.ShapeDtypeStruct((n,), jnp.int32),
+    ]
+    lowered = jax.jit(kern).lower(*args)
+    with open(out_path, "w") as f:
+        f.write(to_hlo_text(lowered))
+
+
+def export_params(qm: model.QuantModel, out_path: str) -> None:
+    """Human-readable parameter dump (rust parses this for its oracle)."""
+    lines = [f"in_scale {qm.in_scale!r}"]
+    for i, (c, l) in enumerate(zip(model.CONVS, qm.convs)):
+        lines.append(
+            f"conv {i} oc {c['oc']} ic {c['ic']} k {c['k']} stride {c['stride']} "
+            f"pad {c['pad']} m {l.m} shift {l.shift} relu {int(l.relu)}"
+        )
+        lines.append("w " + " ".join(str(int(v)) for v in l.w.ravel()))
+        lines.append("b " + " ".join(str(int(v)) for v in l.b.ravel()))
+    lines.append(f"fc out {model.N_CLASSES} in {model.FC_IN}")
+    lines.append("w " + " ".join(str(int(v)) for v in qm.fc.w.ravel()))
+    lines.append("b " + " ".join(str(int(v)) for v in qm.fc.b.ravel()))
+    with open(out_path, "w") as f:
+        f.write("\n".join(lines) + "\n")
+
+
+def export_eval_set(out_path: str) -> None:
+    """Binary eval split: magic, n, c, h, w, images int8, labels int32."""
+    imgs, labels = model.make_dataset(EVAL_SEED, n_per_class=EVAL_PER_CLASS)
+    n, c, h, w = imgs.shape
+    with open(out_path, "wb") as f:
+        f.write(b"HYCAEVAL")
+        f.write(struct.pack("<IIII", n, c, h, w))
+        f.write(imgs.astype(np.int8).tobytes())
+        f.write(labels.astype("<i4").tobytes())
+
+
+def export_manifest(qm, acc_float, acc_quant, out_path: str) -> None:
+    shapes = model.mask_shapes(BATCH)
+    with open(out_path, "w") as f:
+        f.write(f"batch {BATCH}\n")
+        f.write(f"img {model.IMG}\n")
+        f.write(f"classes {model.N_CLASSES}\n")
+        f.write(f"train_seed {TRAIN_SEED}\n")
+        f.write(f"eval_seed {EVAL_SEED}\n")
+        f.write(f"float_train_acc {acc_float}\n")
+        f.write(f"quant_eval_acc {acc_quant}\n")
+        f.write(f"kernel_shape {KERNEL_SHAPE[0]} {KERNEL_SHAPE[1]} {KERNEL_SHAPE[2]}\n")
+        for i, s in enumerate(shapes):
+            f.write(f"mask_shape {i} {s[0]} {s[1]}\n")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--steps", type=int, default=TRAIN_STEPS)
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    print(f"[aot] training float model ({args.steps} steps)…", flush=True)
+    params, acc_float = model.train_float(seed=TRAIN_SEED, steps=args.steps)
+    print(f"[aot] float train accuracy: {acc_float:.4f}")
+    qm = model.quantize(params, seed=TRAIN_SEED)
+    imgs, labels = model.make_dataset(EVAL_SEED, n_per_class=EVAL_PER_CLASS)
+    acc_quant = model.quant_accuracy(qm, imgs, labels)
+    print(f"[aot] quantized eval accuracy: {acc_quant:.4f}")
+    if acc_quant < 0.9:
+        print("[aot] ERROR: quantized accuracy too low — aborting", file=sys.stderr)
+        sys.exit(1)
+
+    p = lambda name: os.path.join(args.out_dir, name)
+    export_model_hlo(qm, p("model.hlo.txt"))
+    print("[aot] wrote model.hlo.txt")
+    export_kernel_hlo(p("kernel_faulty_matmul.hlo.txt"))
+    print("[aot] wrote kernel_faulty_matmul.hlo.txt")
+    export_params(qm, p("model_params.txt"))
+    export_eval_set(p("eval_set.bin"))
+    export_manifest(qm, acc_float, acc_quant, p("manifest.txt"))
+    print("[aot] done")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,82 @@
+"""L1 Pallas kernel: DPPU-style recompute of faulty output features.
+
+The HyCA DPPU walks the FPT and, for each faulty PE, recomputes the
+full dot product from the shadowed operand streams (IRF/WRF) and
+overwrites the corrupted output with a byte mask. This kernel is that
+datapath on TPU-shaped hardware:
+
+* the grid iterates over FPT entries (one program = one faulty PE, the
+  analogue of one grouped-DPPU group draining one fault);
+* the operand rows are gathered up front (the AGU's register-file
+  addressing) and streamed through VMEM in ``group``-wide segments —
+  the circular-shift segment reads of the banked register files;
+* the segment loop accumulates ``group`` products per step, mirroring a
+  group of `group` multipliers + adder tree.
+
+Like every kernel in this repo it runs with ``interpret=True`` (CPU
+PJRT cannot execute Mosaic custom-calls).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(xg_ref, wg_ref, o_ref, *, k: int, group: int):
+    """Recompute one faulty PE's dot product in `group`-wide segments."""
+    segs = k // group
+    acc = jnp.zeros((), jnp.int32)
+
+    def body(s, acc):
+        xs = jax.lax.dynamic_slice(xg_ref[...], (0, s * group), (1, group))
+        ws = jax.lax.dynamic_slice(wg_ref[...], (0, s * group), (1, group))
+        prod = xs.astype(jnp.int32) * ws.astype(jnp.int32)
+        return acc + jnp.sum(prod, dtype=jnp.int32)
+
+    acc = jax.lax.fori_loop(0, segs, body, acc)
+    o_ref[0] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("group", "interpret"))
+def dppu_recompute(x, w, coords, *, group=8, interpret=True):
+    """Recompute the dot products of faulty coordinates.
+
+    Args:
+      x: int8 (M, K) streamed operand.
+      w: int8 (K, N) stationary operand.
+      coords: int32 (F, 2) — (row in M, col in N) per FPT entry.
+      group: DPPU compute-group width (paper: 8).
+
+    Returns: int32 (F,) clean accumulator values.
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2
+    f = coords.shape[0]
+    assert coords.shape == (f, 2)
+    if k % group != 0:
+        group = 1  # degenerate fallback keeps semantics
+    # AGU gather: operand rows per FPT entry (outside the kernel, as the
+    # register files are indexed by the AGU before the DPPU consumes
+    # them).
+    xg = x[coords[:, 0], :]  # (F, K)
+    wg = w[:, coords[:, 1]].T  # (F, K)
+    return pl.pallas_call(
+        functools.partial(_kernel, k=k, group=group),
+        grid=(f,),
+        in_specs=[
+            pl.BlockSpec((1, k), lambda i: (i, 0)),
+            pl.BlockSpec((1, k), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((f,), jnp.int32),
+        interpret=interpret,
+    )(xg, wg)
+
+
+def apply_repair(y_faulty, coords, recomputed):
+    """Overwrite repaired outputs (the ORF → output-buffer masked
+    write): y[row, col] = recomputed for each FPT entry."""
+    return y_faulty.at[coords[:, 0], coords[:, 1]].set(recomputed)

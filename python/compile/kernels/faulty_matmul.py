@@ -1,0 +1,124 @@
+"""L1 Pallas kernel: output-stationary int8 matmul with stuck-at fault
+corruption — the compute hot-spot of the faulty 2-D array.
+
+The kernel mirrors the accelerator's dataflow on TPU-shaped hardware
+(DESIGN.md §3 "Hardware adaptation"):
+
+* the grid tiles the *output* (M, N) — each grid step owns a block of
+  output features exactly like a fold of the PE array owns one output
+  feature per PE (output-stationary);
+* the K reduction streams through VMEM in blocks via BlockSpec, the
+  analogue of the operand streams flowing through the array (and of the
+  IRF/WRF staging for the DPPU);
+* the stuck-at masks are applied to the finished int32 accumulator
+  block, the analogue of a faulty PE corrupting the value it writes to
+  the output buffer;
+* the inner product targets the MXU with (8,128)-aligned tiles and
+  ``preferred_element_type=int32``.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute
+Mosaic custom-calls; correctness is validated on the interpret path and
+the real-TPU efficiency is estimated structurally (EXPERIMENTS.md
+§Perf-L1).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+DEF_BM, DEF_BN, DEF_BK = 8, 128, 128
+
+
+def _kernel(x_ref, w_ref, and_ref, or_ref, bias_ref, o_ref, *, n_k: int):
+    """One (bm, bn) output block; grid = (M/bm, N/bn, K/bk)."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        # bias is preloaded into the accumulator, as in the PE array
+        o_ref[...] = jnp.broadcast_to(
+            bias_ref[...].astype(jnp.int32)[None, :], o_ref.shape
+        )
+
+    xb = x_ref[...].astype(jnp.int32)
+    wb = w_ref[...].astype(jnp.int32)
+    o_ref[...] += jnp.dot(xb, wb, preferred_element_type=jnp.int32)
+
+    @pl.when(k == n_k - 1)
+    def _corrupt():
+        o_ref[...] = (o_ref[...] & and_ref[...]) | or_ref[...]
+
+
+def _block(dim, default):
+    """Largest block ≤ default that divides dim (shapes here are powers
+    of two; fall back to the full dim)."""
+    b = min(default, dim)
+    while dim % b != 0:
+        b //= 2
+        if b == 0:
+            return dim
+    return max(b, 1)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bm", "bn", "bk", "interpret")
+)
+def faulty_matmul(
+    x, w, and_mask, or_mask, bias, *, bm=DEF_BM, bn=DEF_BN, bk=DEF_BK, interpret=True
+):
+    """Faulty output-stationary matmul.
+
+    Args:
+      x: int8 (M, K) — streamed operand (input-feature patches).
+      w: int8 (K, N) — stationary operand (weights).
+      and_mask / or_mask: int32 (M, N) — per-output stuck-at masks
+        (identity = and 0xFFFFFFFF / or 0).
+      bias: int32 (N,) — accumulator preload per output channel.
+
+    Returns: int32 (M, N) corrupted accumulator.
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, (x.shape, w.shape)
+    assert and_mask.shape == (m, n) and or_mask.shape == (m, n)
+    assert bias.shape == (n,)
+    bm = _block(m, bm)
+    bn = _block(n, bn)
+    bk = _block(k, bk)
+    n_k = k // bk
+    grid = (m // bm, n // bn, n_k)
+    return pl.pallas_call(
+        functools.partial(_kernel, n_k=n_k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+            pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+            pl.BlockSpec((bn,), lambda i, j, kk: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.int32),
+        interpret=interpret,
+    )(x, w, and_mask, or_mask, bias)
+
+
+def vmem_bytes(bm=DEF_BM, bn=DEF_BN, bk=DEF_BK):
+    """Structural VMEM footprint of one grid step (bytes): x, w, two
+    masks, bias and the int32 output block. Used by the §Perf-L1
+    estimate in EXPERIMENTS.md."""
+    return bm * bk + bk * bn + 2 * 4 * bm * bn + 4 * bn + 4 * bm * bn
+
+
+def mxu_utilisation_estimate(m, k, n, bm=DEF_BM, bn=DEF_BN, bk=DEF_BK):
+    """Fraction of MXU issue slots doing useful MACs, assuming one
+    (bm×bk)·(bk×bn) pass per grid step on a 128×128 MXU with 8-row
+    feeds: useful = m·k·n, issued = ceil-padded blocks."""
+    import math
+
+    gm, gn, gk = math.ceil(m / bm), math.ceil(n / bn), math.ceil(k / bk)
+    issued = gm * gn * gk * (bm * bk * bn)
+    return (m * k * n) / issued

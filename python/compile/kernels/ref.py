@@ -1,0 +1,104 @@
+"""Pure-jnp reference oracle for the L1 Pallas kernels and the L2
+quantized model.
+
+Numerics contract (must match rust/src/array/sim.rs bit-for-bit):
+
+* operands int8, accumulation int32 (the PE accumulator);
+* bias preloaded into the accumulator;
+* stuck-at corruption on the biased accumulator:
+  ``acc' = (acc & and_mask) | or_mask`` (int32 bitwise);
+* requant: ``clamp((acc' * m + 2**(shift-1)) >> shift)`` in int64,
+  to [0,127] after ReLU else [-128,127];
+* avgpool2: ``(sum4 + 2) >> 2`` (round-half-up).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def matmul_acc_ref(x, w):
+    """int8(M,K) @ int8(K,N) -> int32(M,N) raw accumulator."""
+    return jnp.matmul(
+        x.astype(jnp.int32), w.astype(jnp.int32), preferred_element_type=jnp.int32
+    )
+
+
+def apply_stuck_ref(acc, and_mask, or_mask):
+    """Stuck-at corruption of an int32 accumulator tensor.
+
+    Bitwise ops on int32 in jnp operate on the two's-complement pattern,
+    matching rust's ``(y as u32 & and) | or``.
+    """
+    return (acc & and_mask) | or_mask
+
+
+def faulty_matmul_ref(x, w, and_mask, or_mask, bias=None):
+    """The full faulty output-stationary matmul: accumulate, preload
+    bias (broadcast over M), corrupt."""
+    acc = matmul_acc_ref(x, w)
+    if bias is not None:
+        acc = acc + bias[None, :].astype(jnp.int32)
+    return apply_stuck_ref(acc, and_mask, or_mask)
+
+
+def requant_ref(acc, m, shift, relu):
+    """Fixed-point requantisation to int8 (round-half-up shift)."""
+    v = acc.astype(jnp.int64) * jnp.int64(m)
+    q = (v + (jnp.int64(1) << (shift - 1))) >> shift
+    lo = 0 if relu else -128
+    return jnp.clip(q, lo, 127).astype(jnp.int8)
+
+
+def avgpool2_ref(x):
+    """2x2 average pool on int8 CHW, round-half-up, exact int."""
+    c, h, w = x.shape
+    xs = x.astype(jnp.int32).reshape(c, h // 2, 2, w // 2, 2)
+    s = xs.sum(axis=(2, 4))
+    return ((s + 2) >> 2).astype(jnp.int8)
+
+
+def im2col_ref(x, k, stride, pad):
+    """int8 CHW -> (OH*OW, C*k*k) patch matrix (zero padding).
+
+    Column ordering is (ic, ky, kx) to match OIHW weight flattening.
+    """
+    c, h, w = x.shape
+    xp = jnp.pad(x, ((0, 0), (pad, pad), (pad, pad)))
+    oh = (h + 2 * pad - k) // stride + 1
+    ow = (w + 2 * pad - k) // stride + 1
+    cols = []
+    for ky in range(k):
+        for kx in range(k):
+            patch = xp[:, ky : ky + stride * oh : stride, kx : kx + stride * ow : stride]
+            cols.append(patch.reshape(c, oh * ow))  # (C, M)
+    # stack to (C, k*k, M) -> (C*k*k, M): row index = ic*k*k + ky*k + kx
+    mat = jnp.stack(cols, axis=1).reshape(c * k * k, oh * ow)
+    return mat.T  # (M, C*k*k)
+
+
+def conv_acc_ref(x, w_oihw, stride, pad):
+    """int8 conv accumulator via im2col: returns int32 (OC, OH, OW)."""
+    oc, ic, k, _ = w_oihw.shape
+    c, h, w = x.shape
+    assert c == ic
+    patches = im2col_ref(x, k, stride, pad)  # (M, ic*k*k)
+    wmat = w_oihw.reshape(oc, ic * k * k).T  # (ic*k*k, OC)
+    acc = matmul_acc_ref(patches, wmat)  # (M, OC)
+    oh = (h + 2 * pad - k) // stride + 1
+    ow = (w + 2 * pad - k) // stride + 1
+    return acc.T.reshape(oc, oh, ow)
+
+
+def dppu_recompute_ref(x, w, coords):
+    """Golden DPPU recompute: for each (row, col) in coords (F, 2),
+    return the clean dot product x[row, :] . w[:, col] as int32 (F,)."""
+    rows = coords[:, 0]
+    cols = coords[:, 1]
+    xs = x[rows, :].astype(jnp.int32)  # (F, K)
+    ws = w[:, cols].astype(jnp.int32)  # (K, F)
+    return jnp.sum(xs * ws.T, axis=1, dtype=jnp.int32)
+
+
+def random_int8(rng: np.random.Generator, shape):
+    """Uniform int8 test tensor."""
+    return rng.integers(-128, 128, size=shape, dtype=np.int8)

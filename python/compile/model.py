@@ -1,0 +1,311 @@
+"""L2: the quantized CNN whose output features are mapped onto the
+faulty 2-D computing array.
+
+This is the functional model behind the paper's Fig. 2 experiment
+(accuracy vs PER): the paper runs ResNet18/ImageNet on a fault-injected
+DLA simulator; we substitute a small int8 CNN on a synthetic-but-
+learnable 10-class dataset (DESIGN.md §2 — the accuracy-collapse
+mechanism is the output-stationary mapping of corrupted PEs, which we
+reproduce bit-exactly, not the dataset).
+
+Pipeline:
+  1. `make_dataset`  — deterministic 10-class 16×16 image set;
+  2. `train_float`   — float CNN (conv-pool-conv-pool-conv-fc), Adam;
+  3. `quantize`      — post-training symmetric int8 quantization with
+     fixed-point requant constants (m, shift);
+  4. `forward_quant` — the *exported* int8 forward pass: every conv/FC
+     runs through the L1 Pallas `faulty_matmul` kernel with per-output
+     stuck-at masks; bias preloaded; exact int semantics mirrored by
+     rust/src/array/sim.rs.
+
+Numerics contract: see kernels/ref.py. All arrays CHW / OIHW.
+"""
+
+import dataclasses
+import functools
+
+import jax
+
+jax.config.update("jax_enable_x64", True)  # int64 requant path
+
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels.faulty_matmul import faulty_matmul
+from .kernels import ref
+
+# ---------------------------------------------------------------------------
+# architecture constants (also encoded in artifacts/model_params.txt)
+
+IMG = 16
+N_CLASSES = 10
+CONVS = (
+    # (out_c, in_c, k, stride, pad, relu) — feature map halves via pools
+    dict(oc=8, ic=1, k=3, stride=1, pad=1),   # 16×16 → pool → 8×8
+    dict(oc=16, ic=8, k=3, stride=1, pad=1),  # 8×8  → pool → 4×4
+    dict(oc=16, ic=16, k=3, stride=1, pad=1), # 4×4
+)
+FC_IN = 16 * 4 * 4
+REQUANT_SHIFT = 24
+
+
+# ---------------------------------------------------------------------------
+# dataset
+
+TEMPLATE_SEED = 0xDA7A  # class templates are fixed across all splits
+
+
+def make_dataset(seed: int, n_per_class: int, noise_sigma: float = 22.0):
+    """10 fixed random smooth templates + Gaussian noise, int8 images.
+
+    The class templates are always drawn from `TEMPLATE_SEED` so that
+    different `seed`s give different *samples of the same task* (train
+    vs eval splits); `seed` only drives the noise and shuffling.
+
+    Returns (images int8 (N,1,16,16), labels int32 (N,)).
+    """
+    trng = np.random.default_rng(TEMPLATE_SEED)
+    rng = np.random.default_rng(seed)
+    # smooth templates: low-frequency random Fourier features
+    yy, xx = np.mgrid[0:IMG, 0:IMG].astype(np.float64) / IMG
+    templates = []
+    for _ in range(N_CLASSES):
+        t = np.zeros((IMG, IMG))
+        for _ in range(4):
+            fy, fx = trng.uniform(0.5, 3.0, 2)
+            ph = trng.uniform(0, 2 * np.pi, 2)
+            t += trng.uniform(0.5, 1.0) * np.sin(2 * np.pi * fy * yy + ph[0]) * np.sin(
+                2 * np.pi * fx * xx + ph[1]
+            )
+        t = t / np.abs(t).max() * 90.0
+        templates.append(t)
+    imgs, labels = [], []
+    for cls, t in enumerate(templates):
+        noise = rng.normal(0.0, noise_sigma, size=(n_per_class, IMG, IMG))
+        batch = np.clip(t[None] + noise, -128, 127).astype(np.int8)
+        imgs.append(batch[:, None, :, :])
+        labels.append(np.full(n_per_class, cls, np.int32))
+    imgs = np.concatenate(imgs)
+    labels = np.concatenate(labels)
+    perm = rng.permutation(len(imgs))
+    return imgs[perm], labels[perm]
+
+
+# ---------------------------------------------------------------------------
+# float model + training
+
+def init_params(seed: int):
+    rng = np.random.default_rng(seed)
+    params = []
+    for c in CONVS:
+        fan_in = c["ic"] * c["k"] * c["k"]
+        w = rng.normal(0, (2.0 / fan_in) ** 0.5, (c["oc"], c["ic"], c["k"], c["k"]))
+        params.append(
+            {"w": jnp.asarray(w, jnp.float32), "b": jnp.zeros(c["oc"], jnp.float32)}
+        )
+    wfc = rng.normal(0, (2.0 / FC_IN) ** 0.5, (N_CLASSES, FC_IN))
+    params.append(
+        {"w": jnp.asarray(wfc, jnp.float32), "b": jnp.zeros(N_CLASSES, jnp.float32)}
+    )
+    return params
+
+
+def forward_float(params, x, collect_acts=False):
+    """Float forward (x float32 NCHW in ≈[-4, 4]); optionally returns
+    post-activation tensors for quantization calibration."""
+    acts = []
+    h = x
+    for i, c in enumerate(CONVS):
+        h = jax.lax.conv_general_dilated(
+            h,
+            params[i]["w"],
+            window_strides=(c["stride"], c["stride"]),
+            padding=[(c["pad"], c["pad"])] * 2,
+            dimension_numbers=("NCHW", "OIHW", "NCHW"),
+        )
+        h = h + params[i]["b"][None, :, None, None]
+        h = jax.nn.relu(h)
+        acts.append(h)
+        if i < 2:  # pools after conv1, conv2
+            h = jax.lax.reduce_window(
+                h, 0.0, jax.lax.add, (1, 1, 2, 2), (1, 1, 2, 2), "VALID"
+            ) / 4.0
+    h = h.reshape(h.shape[0], -1)
+    logits = h @ params[-1]["w"].T + params[-1]["b"]
+    if collect_acts:
+        return logits, acts
+    return logits
+
+
+def _loss(params, x, y):
+    logits = forward_float(params, x)
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(logp[jnp.arange(y.shape[0]), y])
+
+
+def train_float(seed: int = 0, steps: int = 400, batch: int = 256, lr: float = 2e-3):
+    """Train the float model with hand-rolled Adam; returns (params,
+    train_acc)."""
+    imgs, labels = make_dataset(seed, n_per_class=400)
+    x_all = jnp.asarray(imgs[:, :, :, :].astype(np.float32) / 32.0)
+    y_all = jnp.asarray(labels)
+    params = init_params(seed + 1)
+    flat, tree = jax.tree_util.tree_flatten(params)
+    m = [jnp.zeros_like(p) for p in flat]
+    v = [jnp.zeros_like(p) for p in flat]
+    grad_fn = jax.jit(jax.grad(_loss))
+    rng = np.random.default_rng(seed + 2)
+    b1, b2, eps = 0.9, 0.999, 1e-8
+    for t in range(1, steps + 1):
+        idx = rng.integers(0, x_all.shape[0], batch)
+        g = grad_fn(params, x_all[idx], y_all[idx])
+        gflat, _ = jax.tree_util.tree_flatten(g)
+        flat, _ = jax.tree_util.tree_flatten(params)
+        new_flat = []
+        for i, (p, gi) in enumerate(zip(flat, gflat)):
+            m[i] = b1 * m[i] + (1 - b1) * gi
+            v[i] = b2 * v[i] + (1 - b2) * gi * gi
+            mh = m[i] / (1 - b1**t)
+            vh = v[i] / (1 - b2**t)
+            new_flat.append(p - lr * mh / (jnp.sqrt(vh) + eps))
+        params = jax.tree_util.tree_unflatten(tree, new_flat)
+    logits = forward_float(params, x_all[:1024])
+    acc = float(jnp.mean(jnp.argmax(logits, -1) == y_all[:1024]))
+    return params, acc
+
+
+# ---------------------------------------------------------------------------
+# post-training quantization
+
+@dataclasses.dataclass
+class QuantLayer:
+    w: np.ndarray      # int8, OIHW (conv) or (out, in) (fc)
+    b: np.ndarray      # int32 (in input·weight scale)
+    m: int             # requant multiplier (unused for fc)
+    shift: int
+    relu: bool
+
+
+@dataclasses.dataclass
+class QuantModel:
+    convs: list
+    fc: QuantLayer
+    in_scale: float    # float input value per int8 LSB (1/32)
+
+
+def _qtensor(w: np.ndarray):
+    s = float(np.abs(w).max()) / 127.0
+    q = np.clip(np.round(w / s), -127, 127).astype(np.int8)
+    return q, s
+
+
+def quantize(params, seed: int = 0) -> QuantModel:
+    """Symmetric per-tensor PTQ with activation calibration."""
+    imgs, _ = make_dataset(seed, n_per_class=32)
+    x = jnp.asarray(imgs.astype(np.float32) / 32.0)
+    _, acts = forward_float(params, x, collect_acts=True)
+    in_scale = 1.0 / 32.0
+    scales_in = [in_scale]
+    for a in acts[:-1]:
+        scales_in.append(float(jnp.max(jnp.abs(a))) / 127.0)
+    convs = []
+    for i, c in enumerate(CONVS):
+        wq, ws = _qtensor(np.asarray(params[i]["w"]))
+        s_in = scales_in[i]
+        s_out = float(jnp.max(jnp.abs(acts[i]))) / 127.0
+        eff = s_in * ws / s_out
+        mi = int(round(eff * (1 << REQUANT_SHIFT)))
+        assert 0 < mi < 2**31, f"requant multiplier overflow layer {i}: {mi}"
+        bq = np.round(np.asarray(params[i]["b"]) / (s_in * ws)).astype(np.int32)
+        convs.append(QuantLayer(w=wq, b=bq, m=mi, shift=REQUANT_SHIFT, relu=True))
+    wq, ws = _qtensor(np.asarray(params[-1]["w"]))
+    s_in = float(jnp.max(jnp.abs(acts[-1]))) / 127.0
+    bq = np.round(np.asarray(params[-1]["b"]) / (s_in * ws)).astype(np.int32)
+    fc = QuantLayer(w=wq, b=bq, m=1, shift=1, relu=False)
+    return QuantModel(convs=convs, fc=fc, in_scale=in_scale)
+
+
+# ---------------------------------------------------------------------------
+# quantized (exported) forward with fault masks
+
+def conv_out_hw(i: int):
+    """Output spatial dims of conv layer i (after preceding pools)."""
+    side = IMG // (2**i) if i < 3 else 4
+    return side, side
+
+
+def mask_shapes(batch: int):
+    """Exported mask input shapes per layer: conv i → (OH·OW, OC) in
+    (spatial, channel) layout; fc → (batch, N_CLASSES)."""
+    shapes = []
+    for i, c in enumerate(CONVS):
+        oh, ow = conv_out_hw(i)
+        shapes.append((oh * ow, c["oc"]))
+    shapes.append((batch, N_CLASSES))
+    return shapes
+
+
+def _conv_quant(x, layer: QuantLayer, c, and_m, or_m, *, interpret=True):
+    """One quantized conv via im2col + the L1 Pallas kernel.
+
+    x: int8 (B, IC, H, W); masks (OH·OW, OC) broadcast over batch.
+    Returns int8 (B, OC, OH, OW).
+    """
+    b = x.shape[0]
+    oh = (x.shape[2] + 2 * c["pad"] - c["k"]) // c["stride"] + 1
+    ow = (x.shape[3] + 2 * c["pad"] - c["k"]) // c["stride"] + 1
+    patches = jax.vmap(lambda im: ref.im2col_ref(im, c["k"], c["stride"], c["pad"]))(x)
+    m_per = oh * ow
+    pk = patches.reshape(b * m_per, -1)  # (B·M, K)
+    wmat = jnp.asarray(layer.w.reshape(c["oc"], -1).T)  # (K, OC)
+    am = jnp.tile(and_m, (b, 1))
+    om = jnp.tile(or_m, (b, 1))
+    acc = faulty_matmul(
+        pk, wmat, am, om, jnp.asarray(layer.b), interpret=interpret
+    )  # (B·M, OC)
+    y = ref.requant_ref(acc, layer.m, layer.shift, layer.relu)
+    # (B·M, OC) → (B, OC, OH, OW)
+    return y.reshape(b, m_per, c["oc"]).transpose(0, 2, 1).reshape(b, c["oc"], oh, ow)
+
+
+def forward_quant(qm: QuantModel, x, masks, *, interpret=True):
+    """The exported int8 forward pass.
+
+    Args:
+      x: int8 (B, 1, 16, 16);
+      masks: list of (and_mask, or_mask) int32 pairs, shapes per
+        `mask_shapes` (identity = (-1, 0)).
+
+    Returns int32 logits (B, 10).
+    """
+    h = x
+    for i, c in enumerate(CONVS):
+        h = _conv_quant(h, qm.convs[i], c, masks[i][0], masks[i][1], interpret=interpret)
+        if i < 2:
+            h = jax.vmap(ref.avgpool2_ref)(h)
+    flat = h.reshape(h.shape[0], -1)  # (B, 256)
+    wfc = jnp.asarray(qm.fc.w.T)  # (256, 10)
+    logits = faulty_matmul(
+        flat, wfc, masks[3][0], masks[3][1], jnp.asarray(qm.fc.b), interpret=interpret
+    )
+    return logits
+
+
+def identity_masks(batch: int):
+    """All-healthy masks (and = -1 i.e. 0xFFFFFFFF, or = 0)."""
+    out = []
+    for shp in mask_shapes(batch):
+        out.append((jnp.full(shp, -1, jnp.int32), jnp.zeros(shp, jnp.int32)))
+    return out
+
+
+def quant_accuracy(qm: QuantModel, imgs: np.ndarray, labels: np.ndarray, batch=64):
+    """Healthy-hardware accuracy of the quantized model."""
+    correct = 0
+    fwd = jax.jit(functools.partial(forward_quant, qm))
+    masks = identity_masks(batch)
+    for i in range(0, len(imgs) - batch + 1, batch):
+        logits = fwd(jnp.asarray(imgs[i : i + batch]), masks)
+        correct += int(jnp.sum(jnp.argmax(logits, -1) == labels[i : i + batch]))
+    n = (len(imgs) // batch) * batch
+    return correct / n

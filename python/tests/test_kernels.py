@@ -1,0 +1,155 @@
+"""L1 kernel correctness: Pallas kernels vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes, block sizes and mask densities; every case
+asserts exact equality (integer arithmetic — no tolerance)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.dppu_recompute import apply_repair, dppu_recompute
+from compile.kernels.faulty_matmul import (
+    faulty_matmul,
+    mxu_utilisation_estimate,
+    vmem_bytes,
+)
+
+pow2 = lambda lo, hi: st.sampled_from([2**i for i in range(lo, hi + 1)])
+
+
+def random_masks(rng, m, n, density):
+    """Random stuck-at masks at the given corruption density."""
+    am = np.full((m, n), -1, np.int32)
+    om = np.zeros((m, n), np.int32)
+    hits = rng.random((m, n)) < density
+    bits = rng.integers(0, 32, (m, n))
+    sa1 = rng.random((m, n)) < 0.5
+    om = np.where(hits & sa1, (np.int32(1) << bits).astype(np.int32), om)
+    am = np.where(hits & ~sa1, np.int32(~(np.int32(1) << bits)), am)
+    return am.astype(np.int32), om.astype(np.int32)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=pow2(0, 6),
+    k=pow2(0, 8),
+    n=pow2(0, 8),
+    density=st.sampled_from([0.0, 0.05, 1.0]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_faulty_matmul_matches_ref(m, k, n, density, seed):
+    rng = np.random.default_rng(seed)
+    x = ref.random_int8(rng, (m, k))
+    w = ref.random_int8(rng, (k, n))
+    am, om = random_masks(rng, m, n, density)
+    bias = rng.integers(-(2**20), 2**20, n).astype(np.int32)
+    got = faulty_matmul(
+        jnp.asarray(x), jnp.asarray(w), jnp.asarray(am), jnp.asarray(om),
+        jnp.asarray(bias),
+    )
+    want = ref.faulty_matmul_ref(
+        jnp.asarray(x), jnp.asarray(w), jnp.asarray(am), jnp.asarray(om),
+        jnp.asarray(bias),
+    )
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    bm=pow2(0, 5),
+    bn=pow2(3, 7),
+    bk=pow2(3, 7),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_faulty_matmul_block_shape_invariance(bm, bn, bk, seed):
+    """Any block decomposition yields the same numbers."""
+    rng = np.random.default_rng(seed)
+    m, k, n = 32, 128, 128
+    x = ref.random_int8(rng, (m, k))
+    w = ref.random_int8(rng, (k, n))
+    am, om = random_masks(rng, m, n, 0.1)
+    bias = rng.integers(-100, 100, n).astype(np.int32)
+    got = faulty_matmul(
+        jnp.asarray(x), jnp.asarray(w), jnp.asarray(am), jnp.asarray(om),
+        jnp.asarray(bias), bm=bm, bn=bn, bk=bk,
+    )
+    want = ref.faulty_matmul_ref(
+        jnp.asarray(x), jnp.asarray(w), jnp.asarray(am), jnp.asarray(om),
+        jnp.asarray(bias),
+    )
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_identity_masks_are_noop():
+    rng = np.random.default_rng(7)
+    x = ref.random_int8(rng, (16, 32))
+    w = ref.random_int8(rng, (32, 8))
+    bias = np.zeros(8, np.int32)
+    am = np.full((16, 8), -1, np.int32)
+    om = np.zeros((16, 8), np.int32)
+    got = faulty_matmul(
+        jnp.asarray(x), jnp.asarray(w), jnp.asarray(am), jnp.asarray(om),
+        jnp.asarray(bias),
+    )
+    want = ref.matmul_acc_ref(jnp.asarray(x), jnp.asarray(w))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    k=pow2(3, 8),
+    f=st.integers(1, 24),
+    group=st.sampled_from([4, 8, 16]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_dppu_recompute_matches_ref(k, f, group, seed):
+    rng = np.random.default_rng(seed)
+    m, n = 32, 64
+    x = ref.random_int8(rng, (m, k))
+    w = ref.random_int8(rng, (k, n))
+    coords = np.stack(
+        [rng.integers(0, m, f), rng.integers(0, n, f)], axis=1
+    ).astype(np.int32)
+    got = dppu_recompute(jnp.asarray(x), jnp.asarray(w), jnp.asarray(coords), group=group)
+    want = ref.dppu_recompute_ref(jnp.asarray(x), jnp.asarray(w), jnp.asarray(coords))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_recompute_then_repair_restores_clean_output():
+    """End-to-end L1 story: corrupt → recompute → overwrite == clean."""
+    rng = np.random.default_rng(11)
+    m, k, n = 32, 64, 32
+    x = ref.random_int8(rng, (m, k))
+    w = ref.random_int8(rng, (k, n))
+    bias = rng.integers(-50, 50, n).astype(np.int32)
+    coords = np.stack(
+        [rng.permutation(m)[:5], rng.permutation(n)[:5]], axis=1
+    ).astype(np.int32)
+    am = np.full((m, n), -1, np.int32)
+    om = np.zeros((m, n), np.int32)
+    am[coords[:, 0], coords[:, 1]] = 0  # stuck all-zero outputs
+    faulty = faulty_matmul(
+        jnp.asarray(x), jnp.asarray(w), jnp.asarray(am), jnp.asarray(om),
+        jnp.asarray(bias),
+    )
+    clean = ref.matmul_acc_ref(jnp.asarray(x), jnp.asarray(w)) + jnp.asarray(bias)[None, :]
+    assert not np.array_equal(np.asarray(faulty), np.asarray(clean))
+    rec = dppu_recompute(jnp.asarray(x), jnp.asarray(w), jnp.asarray(coords))
+    rec_biased = rec + jnp.asarray(bias)[coords[:, 1]]
+    repaired = apply_repair(faulty, jnp.asarray(coords), rec_biased)
+    np.testing.assert_array_equal(np.asarray(repaired), np.asarray(clean))
+
+
+def test_vmem_footprint_within_budget():
+    """Default blocks fit comfortably in a 16 MiB VMEM (stay ≤ 2 MiB to
+    leave room for double buffering — §Perf-L1)."""
+    assert vmem_bytes() <= 2 * 1024 * 1024
+
+
+def test_mxu_utilisation_estimates():
+    # perfectly tiled problem → full utilisation
+    assert mxu_utilisation_estimate(256, 128, 128) == pytest.approx(1.0)
+    # pathological small N wastes lanes
+    assert mxu_utilisation_estimate(256, 128, 8) < 0.1

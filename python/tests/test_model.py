@@ -1,0 +1,135 @@
+"""L2 model tests: dataset, training, quantization and the exported
+faulty forward pass."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+
+@pytest.fixture(scope="module")
+def trained():
+    params, acc = model.train_float(seed=0, steps=150)
+    qm = model.quantize(params)
+    return params, acc, qm
+
+
+def test_dataset_shapes_and_determinism():
+    a_imgs, a_lbl = model.make_dataset(seed=5, n_per_class=3)
+    b_imgs, b_lbl = model.make_dataset(seed=5, n_per_class=3)
+    c_imgs, _ = model.make_dataset(seed=6, n_per_class=3)
+    assert a_imgs.shape == (30, 1, 16, 16)
+    assert a_imgs.dtype == np.int8
+    np.testing.assert_array_equal(a_imgs, b_imgs)
+    np.testing.assert_array_equal(a_lbl, b_lbl)
+    assert not np.array_equal(a_imgs, c_imgs), "different seeds, different noise"
+    assert sorted(np.unique(a_lbl)) == list(range(10))
+
+
+def test_templates_shared_across_seeds():
+    """Different seeds = same task: class means stay close."""
+    a_imgs, a_lbl = model.make_dataset(seed=1, n_per_class=64)
+    b_imgs, b_lbl = model.make_dataset(seed=2, n_per_class=64)
+    for cls in range(3):
+        ma = a_imgs[a_lbl == cls].astype(np.float64).mean(0)
+        mb = b_imgs[b_lbl == cls].astype(np.float64).mean(0)
+        corr = np.corrcoef(ma.ravel(), mb.ravel())[0, 1]
+        assert corr > 0.9, f"class {cls}: {corr}"
+
+
+def test_float_training_learns(trained):
+    _, acc, _ = trained
+    assert acc > 0.95, f"float training accuracy only {acc}"
+
+
+def test_quantized_accuracy_close_to_float(trained):
+    _, acc_f, qm = trained
+    imgs, labels = model.make_dataset(seed=77, n_per_class=16)
+    acc_q = model.quant_accuracy(qm, imgs, labels)
+    assert acc_q > acc_f - 0.05, f"quantized {acc_q} vs float {acc_f}"
+
+
+def test_quantized_weights_are_int8(trained):
+    _, _, qm = trained
+    for l in qm.convs + [qm.fc]:
+        assert l.w.dtype == np.int8
+        assert l.b.dtype == np.int32
+        assert 0 < l.m < 2**31
+
+
+def test_forward_quant_shapes(trained):
+    _, _, qm = trained
+    b = 4
+    imgs, _ = model.make_dataset(seed=3, n_per_class=1)
+    x = jnp.asarray(imgs[:b])
+    logits = model.forward_quant(qm, x, model.identity_masks(b))
+    assert logits.shape == (b, 10)
+    assert logits.dtype == jnp.int32
+
+
+def test_mask_shapes_match_architecture():
+    shapes = model.mask_shapes(16)
+    assert shapes == [(256, 8), (64, 16), (16, 16), (16, 10)]
+
+
+def test_forward_quant_matches_layerwise_oracle(trained):
+    """The exported forward == composing the pure-jnp oracle layer by
+    layer (bit-exact)."""
+    _, _, qm = trained
+    imgs, _ = model.make_dataset(seed=4, n_per_class=1)
+    x = imgs[:2]
+    logits = model.forward_quant(qm, jnp.asarray(x), model.identity_masks(2))
+    # oracle path
+    outs = []
+    for img in x:
+        h = jnp.asarray(img)
+        for i, c in enumerate(model.CONVS):
+            acc = ref.conv_acc_ref(h, jnp.asarray(qm.convs[i].w), c["stride"], c["pad"])
+            acc = acc + jnp.asarray(qm.convs[i].b)[:, None, None]
+            h = ref.requant_ref(acc, qm.convs[i].m, qm.convs[i].shift, True)
+            if i < 2:
+                h = ref.avgpool2_ref(h)
+        flat = h.reshape(-1).astype(jnp.int32)
+        logit = flat @ jnp.asarray(qm.fc.w.T).astype(jnp.int32) + jnp.asarray(qm.fc.b)
+        outs.append(np.asarray(logit))
+    np.testing.assert_array_equal(np.asarray(logits), np.stack(outs))
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), layer=st.integers(0, 3))
+def test_corruption_changes_predictions_or_logits(trained, seed, layer):
+    """Severe stuck-at-zero corruption of a whole layer must change the
+    logits (sanity of the fault path through the exported graph)."""
+    _, _, qm = trained
+    rng = np.random.default_rng(seed)
+    imgs, _ = model.make_dataset(seed=8, n_per_class=1)
+    b = 2
+    x = jnp.asarray(imgs[:b])
+    masks = model.identity_masks(b)
+    clean = model.forward_quant(qm, x, masks)
+    shp = model.mask_shapes(b)[layer]
+    corrupt = list(masks)
+    corrupt[layer] = (jnp.zeros(shp, jnp.int32), jnp.zeros(shp, jnp.int32))
+    faulty = model.forward_quant(qm, x, corrupt)
+    assert not np.array_equal(np.asarray(clean), np.asarray(faulty))
+
+
+def test_single_pe_corruption_is_localised(trained):
+    """Corrupting one FC output only perturbs that logit column."""
+    _, _, qm = trained
+    imgs, _ = model.make_dataset(seed=9, n_per_class=1)
+    b = 2
+    x = jnp.asarray(imgs[:b])
+    masks = model.identity_masks(b)
+    clean = model.forward_quant(qm, x, masks)
+    am = np.full((b, 10), -1, np.int32)
+    am[:, 3] = 0
+    corrupt = list(masks)
+    corrupt[3] = (jnp.asarray(am), jnp.zeros((b, 10), jnp.int32))
+    faulty = model.forward_quant(qm, x, corrupt)
+    diff = np.asarray(clean) != np.asarray(faulty)
+    assert diff[:, 3].all()
+    assert not diff[:, [0, 1, 2, 4, 5, 6, 7, 8, 9]].any()

@@ -1,0 +1,26 @@
+//! Bench + regeneration for Fig. 3: classical-scheme FFP on the 32×32
+//! array (random faults). Times the Monte-Carlo hot path per scheme.
+use hyca::array::Dims;
+use hyca::benchkit::Bench;
+use hyca::coordinator::{find, report, RunOpts};
+use hyca::faults::montecarlo::FaultModel;
+use hyca::redundancy::{cr::ColumnRedundancy, dr::DiagonalRedundancy, evaluate_scheme, rr::RowRedundancy, Scheme};
+
+fn main() {
+    let opts = RunOpts { configs: 3000, out_dir: "results/bench".into(), ..RunOpts::default() };
+    let tables = find("fig3").unwrap().run(&opts).unwrap();
+    report::emit(&opts.out_dir, "fig3", &tables).unwrap();
+
+    let mut b = Bench::new("fig03");
+    let dims = Dims::PAPER;
+    for (name, s) in [
+        ("rr", &RowRedundancy::default() as &dyn Scheme),
+        ("cr", &ColumnRedundancy::default()),
+        ("dr", &DiagonalRedundancy),
+    ] {
+        b.bench_units(format!("ffp_1000cfg/{name}"), Some(1000.0), || {
+            std::hint::black_box(evaluate_scheme(s, dims, 0.02, FaultModel::Random, 1, 1000, 1));
+        });
+    }
+    b.report();
+}

@@ -1,0 +1,20 @@
+//! Bench + regeneration for Fig. 9: chip-area model.
+use hyca::area::{dla_area, fig9_lineup, AreaConstants};
+use hyca::array::Dims;
+use hyca::benchkit::Bench;
+use hyca::coordinator::{find, report, RunOpts};
+
+fn main() {
+    let opts = RunOpts { out_dir: "results/bench".into(), ..RunOpts::default() };
+    let tables = find("fig9").unwrap().run(&opts).unwrap();
+    report::emit(&opts.out_dir, "fig9", &tables).unwrap();
+
+    let mut b = Bench::new("fig09");
+    let c = AreaConstants::default();
+    b.bench_units("area_all_schemes", Some(fig9_lineup().len() as f64), || {
+        for s in fig9_lineup() {
+            std::hint::black_box(dla_area(&c, Dims::PAPER, s));
+        }
+    });
+    b.report();
+}

@@ -1,0 +1,23 @@
+//! Bench + regeneration for Fig. 10: FFP of all four schemes under
+//! both fault models — the paper's headline reliability figure.
+use hyca::array::Dims;
+use hyca::benchkit::Bench;
+use hyca::coordinator::{find, report, RunOpts};
+use hyca::faults::montecarlo::FaultModel;
+use hyca::redundancy::{evaluate_scheme, hyca::HycaScheme};
+
+fn main() {
+    let opts = RunOpts { configs: 3000, out_dir: "results/bench".into(), ..RunOpts::default() };
+    let tables = find("fig10").unwrap().run(&opts).unwrap();
+    report::emit(&opts.out_dir, "fig10", &tables).unwrap();
+
+    let mut b = Bench::new("fig10");
+    let dims = Dims::PAPER;
+    let hyca = HycaScheme::paper(32);
+    for m in FaultModel::both() {
+        b.bench_units(format!("hyca_ffp_1000cfg/{}", m.label()), Some(1000.0), || {
+            std::hint::black_box(evaluate_scheme(&hyca, dims, 0.03, m, 1, 1000, 1));
+        });
+    }
+    b.report();
+}

@@ -1,0 +1,25 @@
+//! Bench + regeneration for Fig. 11: normalised remaining computing
+//! power under the column-discard degradation policy.
+use hyca::array::Dims;
+use hyca::benchkit::Bench;
+use hyca::coordinator::{find, report, RunOpts};
+use hyca::faults::montecarlo::FaultModel;
+use hyca::redundancy::{evaluate_scheme, rr::RowRedundancy, hyca::HycaScheme, Scheme};
+
+fn main() {
+    let opts = RunOpts { configs: 3000, out_dir: "results/bench".into(), ..RunOpts::default() };
+    let tables = find("fig11").unwrap().run(&opts).unwrap();
+    report::emit(&opts.out_dir, "fig11", &tables).unwrap();
+
+    let mut b = Bench::new("fig11");
+    let dims = Dims::PAPER;
+    for (name, s) in [
+        ("rr", &RowRedundancy::default() as &dyn Scheme),
+        ("hyca32", &HycaScheme::paper(32)),
+    ] {
+        b.bench_units(format!("power_1000cfg/{name}"), Some(1000.0), || {
+            std::hint::black_box(evaluate_scheme(s, dims, 0.06, FaultModel::Random, 1, 1000, 1));
+        });
+    }
+    b.report();
+}

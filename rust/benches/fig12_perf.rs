@@ -1,0 +1,27 @@
+//! Bench + regeneration for Fig. 12: normalised NN performance across
+//! schemes (Scale-sim-analogue model over surviving arrays).
+use hyca::array::Dims;
+use hyca::benchkit::Bench;
+use hyca::coordinator::{find, report, RunOpts};
+use hyca::faults::montecarlo::FaultModel;
+use hyca::perfmodel::{mean_normalised_perf, networks, DegradedPerf};
+use hyca::redundancy::hyca::HycaScheme;
+
+fn main() {
+    let opts = RunOpts { configs: 800, fast: true, out_dir: "results/bench".into(), ..RunOpts::default() };
+    let tables = find("fig12").unwrap().run(&opts).unwrap();
+    report::emit(&opts.out_dir, "fig12", &tables).unwrap();
+
+    let mut b = Bench::new("fig12");
+    let dims = Dims::PAPER;
+    let net = networks::vgg16();
+    let dp = DegradedPerf::new(&net, dims);
+    let full = dp.cycles(dims.cols).unwrap();
+    let hyca = HycaScheme::paper(32);
+    b.bench_units("vgg_norm_perf_500cfg", Some(500.0), || {
+        std::hint::black_box(mean_normalised_perf(
+            &hyca, &dp, full, dims, 0.04, FaultModel::Random, 1, 500, 1,
+        ));
+    });
+    b.report();
+}

@@ -1,0 +1,22 @@
+//! Bench + regeneration for Fig. 13: NN runtime vs array width.
+use hyca::array::Dims;
+use hyca::benchkit::Bench;
+use hyca::coordinator::{find, report, RunOpts};
+use hyca::perfmodel::networks;
+
+fn main() {
+    let opts = RunOpts { out_dir: "results/bench".into(), ..RunOpts::default() };
+    let tables = find("fig13").unwrap().run(&opts).unwrap();
+    report::emit(&opts.out_dir, "fig13", &tables).unwrap();
+
+    let mut b = Bench::new("fig13");
+    let nets = networks::benchmark();
+    b.bench_units("runtime_model_4nets_x_61widths", Some(4.0 * 61.0), || {
+        for net in &nets {
+            for w in 4..=64usize {
+                std::hint::black_box(net.cycles(Dims::new(32, w)));
+            }
+        }
+    });
+    b.report();
+}

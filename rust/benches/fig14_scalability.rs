@@ -1,0 +1,20 @@
+//! Bench + regeneration for Fig. 14: FFP scalability across array sizes.
+use hyca::benchkit::Bench;
+use hyca::coordinator::{find, report, RunOpts};
+use hyca::faults::montecarlo::FaultModel;
+use hyca::redundancy::{evaluate_scheme, hyca::HycaScheme};
+
+fn main() {
+    let opts = RunOpts { configs: 1500, fast: true, out_dir: "results/bench".into(), ..RunOpts::default() };
+    let tables = find("fig14").unwrap().run(&opts).unwrap();
+    report::emit(&opts.out_dir, "fig14", &tables).unwrap();
+
+    let mut b = Bench::new("fig14");
+    for dims in hyca::coordinator::exp_fig14::array_sizes() {
+        let s = HycaScheme::paper(dims.cols);
+        b.bench_units(format!("hyca_ffp_500cfg/{dims}"), Some(500.0), || {
+            std::hint::black_box(evaluate_scheme(&s, dims, 0.02, FaultModel::Random, 1, 500, 1));
+        });
+    }
+    b.report();
+}

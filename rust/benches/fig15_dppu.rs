@@ -1,0 +1,22 @@
+//! Bench + regeneration for Fig. 15: unified vs grouped DPPU structure.
+use hyca::array::Dims;
+use hyca::benchkit::Bench;
+use hyca::coordinator::{find, report, RunOpts};
+use hyca::hyca::dppu::DppuConfig;
+use hyca::hyca::schedule::simulate_window_drain;
+
+fn main() {
+    let opts = RunOpts { configs: 1500, fast: true, out_dir: "results/bench".into(), ..RunOpts::default() };
+    let tables = find("fig15").unwrap().run(&opts).unwrap();
+    report::emit(&opts.out_dir, "fig15", &tables).unwrap();
+
+    let mut b = Bench::new("fig15");
+    let _ = Dims::PAPER;
+    for size in hyca::coordinator::exp_fig15::DPPU_SIZES {
+        b.bench(format!("window_drain_sim/size{size}"), move || {
+            std::hint::black_box(simulate_window_drain(&DppuConfig::paper(size), 32, size + 7));
+            std::hint::black_box(simulate_window_drain(&DppuConfig::unified(size), 32, size + 7));
+        });
+    }
+    b.report();
+}

@@ -1,0 +1,27 @@
+//! Bench + regeneration for Table I: fault-detection scan coverage.
+use hyca::array::Dims;
+use hyca::benchkit::Bench;
+use hyca::coordinator::{find, report, RunOpts};
+use hyca::faults::random;
+use hyca::faults::stuckat::sample_stuck_mask;
+use hyca::hyca::detect::simulate_scan;
+use hyca::util::rng::Pcg32;
+
+fn main() {
+    let opts = RunOpts { out_dir: "results/bench".into(), ..RunOpts::default() };
+    let tables = find("table1").unwrap().run(&opts).unwrap();
+    report::emit(&opts.out_dir, "table1", &tables).unwrap();
+
+    let mut b = Bench::new("tab01");
+    for n in [16usize, 32, 64, 128] {
+        let dims = Dims::new(n, n);
+        let mut rng = Pcg32::new(1, 0);
+        let cfg = random::sample_exact(&mut rng, dims, 8);
+        let masks: Vec<_> = (0..8).map(|_| sample_stuck_mask(&mut rng, 1e-4, 576)).collect();
+        b.bench_units(format!("scan_sim/{dims}"), Some((n * n) as f64), move || {
+            let mut r = Pcg32::new(2, 0);
+            std::hint::black_box(simulate_scan(&cfg, &masks, 8, &mut r));
+        });
+    }
+    b.report();
+}

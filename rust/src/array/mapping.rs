@@ -1,0 +1,222 @@
+//! Output-stationary mapping of neural-network layers onto the 2-D
+//! computing array (paper §III-A).
+//!
+//! Under the output-stationary dataflow every PE owns the accumulation
+//! of exactly one output feature per iteration:
+//!
+//! * conv layers: PEs in the same **column** compute output features of
+//!   the same **output channel**; the **row** indexes the flattened
+//!   spatial position. Output `(oc, oy, ox)` with spatial index
+//!   `sp = oy·OW + ox` maps to PE `(sp mod R, oc mod C)`, and the
+//!   whole output tensor is covered in `ceil(OH·OW / R) · ceil(OC / C)`
+//!   iterations of `k·k·c` cycles each.
+//! * fully-connected layers: only a **single column** of PEs is usable
+//!   (paper §V-D) — output `n` maps to PE `(n mod R, 0)`.
+//!
+//! This module is the single source of truth for "which outputs does a
+//! faulty PE corrupt": the functional simulator, the HLO fault-mask
+//! builder, and the µarch recompute scheduler all consult it.
+
+use super::Dims;
+use crate::faults::FaultConfig;
+
+/// Shape of a layer's output as mapped onto the array.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LayerOutput {
+    /// Convolution output: channels × height × width.
+    Conv { oc: usize, oh: usize, ow: usize },
+    /// Fully-connected output vector of length `n`.
+    Fc { n: usize },
+}
+
+impl LayerOutput {
+    /// Total number of output features.
+    pub fn len(&self) -> usize {
+        match *self {
+            LayerOutput::Conv { oc, oh, ow } => oc * oh * ow,
+            LayerOutput::Fc { n } => n,
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// The PE that computes output feature `(oc, sp)` of a conv layer
+/// (`sp` = flattened spatial index) on an `dims` array.
+#[inline]
+pub fn conv_pe(dims: Dims, oc: usize, sp: usize) -> (usize, usize) {
+    (sp % dims.rows, oc % dims.cols)
+}
+
+/// The PE that computes output `n` of an FC layer: single leftmost
+/// column (paper §V-D: "only a single column of PEs is used for the
+/// full connection operations given the output stationary dataflow").
+#[inline]
+pub fn fc_pe(dims: Dims, n: usize) -> (usize, usize) {
+    (n % dims.rows, 0)
+}
+
+/// Number of array iterations needed to cover the layer.
+pub fn iterations(dims: Dims, out: LayerOutput) -> usize {
+    match out {
+        LayerOutput::Conv { oc, oh, ow } => (oh * ow).div_ceil(dims.rows) * oc.div_ceil(dims.cols),
+        LayerOutput::Fc { n } => n.div_ceil(dims.rows),
+    }
+}
+
+/// Row-major (oc-major) boolean corruption map for a layer: element
+/// `oc·OH·OW + sp` (conv) or `n` (FC) is true iff the output feature is
+/// computed on a faulty PE. This is what the HLO fault-mask inputs are
+/// built from.
+pub fn corrupted_outputs(faults: &FaultConfig, out: LayerOutput) -> Vec<bool> {
+    let dims = faults.dims;
+    match out {
+        LayerOutput::Conv { oc, oh, ow } => {
+            // Precompute per-(row,col) faultiness once; then the map is a
+            // cheap modular tiling.
+            let grid = super::PeGrid::from_faults(faults);
+            let mut v = vec![false; oc * oh * ow];
+            for c in 0..oc {
+                let col = c % dims.cols;
+                for sp in 0..oh * ow {
+                    let row = sp % dims.rows;
+                    v[c * oh * ow + sp] = grid.get(row, col);
+                }
+            }
+            v
+        }
+        LayerOutput::Fc { n } => (0..n)
+            .map(|i| {
+                let (r, c) = fc_pe(dims, i);
+                faults.is_faulty(r, c)
+            })
+            .collect(),
+    }
+}
+
+/// For each faulty PE, the list of output-feature indices it corrupts
+/// in this layer (used by the µarch scheduler to size recompute work).
+pub fn outputs_of_faulty_pes(faults: &FaultConfig, out: LayerOutput) -> Vec<(usize, usize, Vec<usize>)> {
+    let dims = faults.dims;
+    faults
+        .faulty()
+        .iter()
+        .map(|pe| {
+            let (r, c) = (pe.row as usize, pe.col as usize);
+            let mut outs = Vec::new();
+            match out {
+                LayerOutput::Conv { oc, oh, ow } => {
+                    let mut ch = c;
+                    while ch < oc {
+                        let mut sp = r;
+                        while sp < oh * ow {
+                            outs.push(ch * oh * ow + sp);
+                            sp += dims.rows;
+                        }
+                        ch += dims.cols;
+                    }
+                }
+                LayerOutput::Fc { n } => {
+                    if c == 0 {
+                        let mut i = r;
+                        while i < n {
+                            outs.push(i);
+                            i += dims.rows;
+                        }
+                    }
+                }
+            }
+            (r, c, outs)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::faults::Coord;
+
+    const D: Dims = Dims::new(4, 4);
+
+    #[test]
+    fn conv_mapping_tiles_modularly() {
+        assert_eq!(conv_pe(D, 0, 0), (0, 0));
+        assert_eq!(conv_pe(D, 5, 6), (2, 1));
+        assert_eq!(conv_pe(D, 4, 4), (0, 0)); // wraps both dims
+    }
+
+    #[test]
+    fn fc_mapping_single_column() {
+        for n in 0..16 {
+            let (r, c) = fc_pe(D, n);
+            assert_eq!(c, 0);
+            assert_eq!(r, n % 4);
+        }
+    }
+
+    #[test]
+    fn iteration_counts() {
+        let out = LayerOutput::Conv { oc: 8, oh: 3, ow: 3 };
+        // spatial 9 → ceil(9/4)=3 folds; channels 8 → 2 folds.
+        assert_eq!(iterations(D, out), 6);
+        assert_eq!(iterations(D, LayerOutput::Fc { n: 10 }), 3);
+        // exact fits
+        assert_eq!(
+            iterations(D, LayerOutput::Conv { oc: 4, oh: 2, ow: 2 }),
+            1
+        );
+    }
+
+    #[test]
+    fn corrupted_outputs_match_pe_mapping() {
+        let faults = FaultConfig::new(D, vec![Coord::new(1, 2)]);
+        let out = LayerOutput::Conv { oc: 8, oh: 2, ow: 3 };
+        let map = corrupted_outputs(&faults, out);
+        assert_eq!(map.len(), 48);
+        for oc in 0..8 {
+            for sp in 0..6 {
+                let (r, c) = conv_pe(D, oc, sp);
+                assert_eq!(
+                    map[oc * 6 + sp],
+                    (r, c) == (1, 2),
+                    "oc={oc} sp={sp}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn corrupted_fc_only_first_column_matters() {
+        let f_col0 = FaultConfig::new(D, vec![Coord::new(2, 0)]);
+        let f_col3 = FaultConfig::new(D, vec![Coord::new(2, 3)]);
+        let out = LayerOutput::Fc { n: 8 };
+        assert_eq!(
+            corrupted_outputs(&f_col0, out),
+            vec![false, false, true, false, false, false, true, false]
+        );
+        assert!(corrupted_outputs(&f_col3, out).iter().all(|&b| !b));
+    }
+
+    #[test]
+    fn outputs_of_faulty_pes_consistent_with_map() {
+        let faults = FaultConfig::new(D, vec![Coord::new(0, 1), Coord::new(3, 3)]);
+        let out = LayerOutput::Conv { oc: 6, oh: 3, ow: 2 };
+        let map = corrupted_outputs(&faults, out);
+        let mut from_list = vec![false; out.len()];
+        for (_, _, outs) in outputs_of_faulty_pes(&faults, out) {
+            for o in outs {
+                from_list[o] = true;
+            }
+        }
+        assert_eq!(map, from_list);
+    }
+
+    #[test]
+    fn healthy_config_corrupts_nothing() {
+        let faults = FaultConfig::healthy(D);
+        let out = LayerOutput::Conv { oc: 4, oh: 4, ow: 4 };
+        assert!(corrupted_outputs(&faults, out).iter().all(|&b| !b));
+    }
+}

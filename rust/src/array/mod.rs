@@ -1,0 +1,166 @@
+//! The regular 2-D computing array of the baseline DLA (paper §III-A,
+//! Fig. 1) and its output-stationary mapping.
+//!
+//! * [`Dims`] / [`PeGrid`] — array geometry and a compact PE bitset;
+//! * [`mapping`] — which PE computes which output feature under the
+//!   output-stationary dataflow (each PE owns one output feature per
+//!   iteration; PEs in one column compute outputs of one channel);
+//! * [`sim`] — a bit-exact functional simulation of the quantized
+//!   convolution the array performs, including fault corruption. This
+//!   is the rust-side oracle the PJRT-executed L2 model is checked
+//!   against in `rust/tests/runtime_e2e.rs`.
+
+pub mod mapping;
+pub mod sim;
+
+/// Computing-array dimensions. `rows × cols` PEs; weights flow
+/// left→right across columns, inputs stream across rows.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Dims {
+    pub rows: usize,
+    pub cols: usize,
+}
+
+impl Dims {
+    pub const fn new(rows: usize, cols: usize) -> Self {
+        Self { rows, cols }
+    }
+
+    /// Total number of PEs.
+    pub fn len(&self) -> usize {
+        self.rows * self.cols
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// The paper's default configuration: a 32 × 32 array.
+    pub const PAPER: Dims = Dims::new(32, 32);
+}
+
+impl std::fmt::Display for Dims {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}x{}", self.rows, self.cols)
+    }
+}
+
+/// A dense bitset over the PEs of an array (row-major), used in the
+/// Monte-Carlo hot path where `HashSet<Coord>` would allocate.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PeGrid {
+    dims: Dims,
+    words: Vec<u64>,
+}
+
+impl PeGrid {
+    pub fn new(dims: Dims) -> Self {
+        Self {
+            dims,
+            words: vec![0; dims.len().div_ceil(64)],
+        }
+    }
+
+    pub fn dims(&self) -> Dims {
+        self.dims
+    }
+
+    #[inline]
+    fn bit(&self, row: usize, col: usize) -> (usize, u64) {
+        let idx = row * self.dims.cols + col;
+        (idx / 64, 1u64 << (idx % 64))
+    }
+
+    /// Mark a PE.
+    #[inline]
+    pub fn set(&mut self, row: usize, col: usize) {
+        let (w, m) = self.bit(row, col);
+        self.words[w] |= m;
+    }
+
+    /// Clear a PE.
+    #[inline]
+    pub fn clear(&mut self, row: usize, col: usize) {
+        let (w, m) = self.bit(row, col);
+        self.words[w] &= !m;
+    }
+
+    /// Is the PE marked?
+    #[inline]
+    pub fn get(&self, row: usize, col: usize) -> bool {
+        let (w, m) = self.bit(row, col);
+        self.words[w] & m != 0
+    }
+
+    /// Number of marked PEs.
+    pub fn count(&self) -> usize {
+        self.words.iter().map(|w| w.count_ones() as usize).sum()
+    }
+
+    /// Clear all marks (reused across Monte-Carlo iterations).
+    pub fn reset(&mut self) {
+        self.words.fill(0);
+    }
+
+    /// Build from a fault configuration.
+    pub fn from_faults(cfg: &crate::faults::FaultConfig) -> Self {
+        let mut g = PeGrid::new(cfg.dims);
+        for c in cfg.faulty() {
+            g.set(c.row as usize, c.col as usize);
+        }
+        g
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::faults::{Coord, FaultConfig};
+
+    #[test]
+    fn dims_basics() {
+        let d = Dims::new(32, 16);
+        assert_eq!(d.len(), 512);
+        assert_eq!(d.to_string(), "32x16");
+        assert_eq!(Dims::PAPER.len(), 1024);
+    }
+
+    #[test]
+    fn grid_set_get_clear_count() {
+        let mut g = PeGrid::new(Dims::new(10, 7));
+        assert!(!g.get(3, 4));
+        g.set(3, 4);
+        g.set(9, 6);
+        g.set(0, 0);
+        assert!(g.get(3, 4) && g.get(9, 6) && g.get(0, 0));
+        assert_eq!(g.count(), 3);
+        g.clear(3, 4);
+        assert!(!g.get(3, 4));
+        assert_eq!(g.count(), 2);
+        g.reset();
+        assert_eq!(g.count(), 0);
+    }
+
+    #[test]
+    fn grid_from_faults_matches_membership() {
+        let d = Dims::new(6, 6);
+        let cfg = FaultConfig::new(d, vec![Coord::new(1, 2), Coord::new(5, 5)]);
+        let g = PeGrid::from_faults(&cfg);
+        for r in 0..6 {
+            for c in 0..6 {
+                assert_eq!(g.get(r, c), cfg.is_faulty(r, c));
+            }
+        }
+    }
+
+    #[test]
+    fn grid_word_boundaries() {
+        // 8x9=72 PEs spans the 64-bit word boundary.
+        let mut g = PeGrid::new(Dims::new(8, 9));
+        g.set(7, 8); // idx 71
+        g.set(7, 0); // idx 63
+        g.set(0, 0); // idx 0
+        assert_eq!(g.count(), 3);
+        assert!(g.get(7, 8) && g.get(7, 0) && g.get(0, 0));
+    }
+}

@@ -1,0 +1,331 @@
+//! Bit-exact functional simulation of the quantized inference the 2-D
+//! computing array performs, including per-PE fault corruption.
+//!
+//! Numerics contract (mirrored exactly by `python/compile/model.py`, so
+//! the PJRT-executed HLO and this simulator must agree bit-for-bit —
+//! enforced by `rust/tests/runtime_e2e.rs`):
+//!
+//! * operands: int8 inputs and weights;
+//! * accumulation: int32 (the PE accumulator the stuck-at faults hit);
+//! * bias: preloaded into the PE accumulator (standard practice), so
+//!   the value a stuck-at fault corrupts is `acc + bias`;
+//! * fault corruption: `acc' = (acc & and_mask) | or_mask`, applied to
+//!   the biased accumulator *before* requantisation (the PE produces
+//!   the corrupted value; requant happens downstream of the array);
+//! * requantisation: `y = clamp(round_half_up(acc' · m / 2^s))`
+//!   computed in int64 as `(acc' · m + 2^(s−1)) >> s`, clamped to
+//!   `[0, 127]` after ReLU or `[-128, 127]` without.
+
+use crate::faults::stuckat::StuckMask;
+
+/// Shape of a CHW activation tensor.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Chw {
+    pub c: usize,
+    pub h: usize,
+    pub w: usize,
+}
+
+impl Chw {
+    pub fn new(c: usize, h: usize, w: usize) -> Self {
+        Self { c, h, w }
+    }
+    pub fn len(&self) -> usize {
+        self.c * self.h * self.w
+    }
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// A quantized convolution layer (weights in OIHW order).
+#[derive(Debug, Clone)]
+pub struct ConvLayer {
+    pub out_c: usize,
+    pub in_c: usize,
+    pub k: usize,
+    pub stride: usize,
+    pub pad: usize,
+    /// int8 weights, OIHW, length `out_c · in_c · k · k`.
+    pub weights: Vec<i8>,
+    /// int32 bias per output channel.
+    pub bias: Vec<i32>,
+    /// Requant multiplier (fixed-point: `m / 2^shift`).
+    pub m: i32,
+    pub shift: u32,
+    pub relu: bool,
+}
+
+impl ConvLayer {
+    /// Output spatial dims for an input of `h × w`.
+    pub fn out_hw(&self, h: usize, w: usize) -> (usize, usize) {
+        (
+            (h + 2 * self.pad - self.k) / self.stride + 1,
+            (w + 2 * self.pad - self.k) / self.stride + 1,
+        )
+    }
+
+    /// MACs accumulated per output feature (the paper's `k·k·c`).
+    pub fn macs_per_output(&self) -> usize {
+        self.k * self.k * self.in_c
+    }
+}
+
+/// A quantized fully-connected layer.
+#[derive(Debug, Clone)]
+pub struct FcLayer {
+    pub out_n: usize,
+    pub in_n: usize,
+    /// int8 weights, row-major `out_n × in_n`.
+    pub weights: Vec<i8>,
+    pub bias: Vec<i32>,
+}
+
+/// Raw int32 accumulator of a conv layer: output shape `(out_c, oh, ow)`
+/// flattened oc-major — the exact values the PEs accumulate.
+pub fn conv_acc(layer: &ConvLayer, x: &[i8], in_shape: Chw) -> Vec<i32> {
+    assert_eq!(in_shape.c, layer.in_c, "channel mismatch");
+    assert_eq!(x.len(), in_shape.len(), "input length mismatch");
+    assert_eq!(
+        layer.weights.len(),
+        layer.out_c * layer.in_c * layer.k * layer.k
+    );
+    let (oh, ow) = layer.out_hw(in_shape.h, in_shape.w);
+    let mut acc = vec![0i32; layer.out_c * oh * ow];
+    let (h, w, k) = (in_shape.h, in_shape.w, layer.k);
+    for oc in 0..layer.out_c {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let mut s: i32 = 0;
+                for ic in 0..layer.in_c {
+                    for ky in 0..k {
+                        let iy = (oy * layer.stride + ky) as isize - layer.pad as isize;
+                        if iy < 0 || iy as usize >= h {
+                            continue;
+                        }
+                        for kx in 0..k {
+                            let ix = (ox * layer.stride + kx) as isize - layer.pad as isize;
+                            if ix < 0 || ix as usize >= w {
+                                continue;
+                            }
+                            let xv = x[ic * h * w + iy as usize * w + ix as usize] as i32;
+                            let wv = layer.weights
+                                [((oc * layer.in_c + ic) * k + ky) * k + kx]
+                                as i32;
+                            s = s.wrapping_add(xv * wv);
+                        }
+                    }
+                }
+                acc[oc * oh * ow + oy * ow + ox] = s;
+            }
+        }
+    }
+    acc
+}
+
+/// Apply per-output stuck-at corruption to a raw accumulator tensor.
+/// `masks[i]` corrupts output feature `i` (IDENTITY = healthy).
+pub fn corrupt_acc(acc: &mut [i32], masks: &[StuckMask]) {
+    assert_eq!(acc.len(), masks.len());
+    for (a, m) in acc.iter_mut().zip(masks) {
+        *a = m.apply(*a);
+    }
+}
+
+/// Add a per-channel bias in place (`ch_stride` features per channel) —
+/// models the bias preload of the PE accumulators.
+pub fn add_bias(acc: &mut [i32], bias: &[i32], ch_stride: usize) {
+    assert_eq!(acc.len() % ch_stride.max(1), 0);
+    assert_eq!(acc.len() / ch_stride.max(1), bias.len());
+    for (i, a) in acc.iter_mut().enumerate() {
+        *a = a.wrapping_add(bias[i / ch_stride]);
+    }
+}
+
+/// Requantise a (biased, possibly corrupted) accumulator tensor to
+/// int8: fixed-point multiply, round-half-up shift, clamp.
+pub fn requant(acc: &[i32], m: i32, shift: u32, relu: bool) -> Vec<i8> {
+    assert!(shift >= 1 && shift < 63);
+    let half = 1i64 << (shift - 1);
+    acc.iter()
+        .map(|&a| {
+            let v = a as i64 * m as i64;
+            let q = (v + half) >> shift;
+            let lo = if relu { 0 } else { -128 };
+            q.clamp(lo, 127) as i8
+        })
+        .collect()
+}
+
+/// Raw int32 accumulator of an FC layer, bias preloaded.
+pub fn fc_acc(layer: &FcLayer, x: &[i8]) -> Vec<i32> {
+    assert_eq!(x.len(), layer.in_n);
+    assert_eq!(layer.weights.len(), layer.out_n * layer.in_n);
+    (0..layer.out_n)
+        .map(|o| {
+            let mut s = layer.bias[o];
+            for i in 0..layer.in_n {
+                s = s.wrapping_add(x[i] as i32 * layer.weights[o * layer.in_n + i] as i32);
+            }
+            s
+        })
+        .collect()
+}
+
+/// 2×2 average pool on int8 (exact: round-half-up of the 4-sum), used by
+/// the tiny CNN between conv stages. Mirrors `model.py::avgpool2`.
+pub fn avgpool2(x: &[i8], shape: Chw) -> (Vec<i8>, Chw) {
+    assert_eq!(shape.h % 2, 0);
+    assert_eq!(shape.w % 2, 0);
+    let out = Chw::new(shape.c, shape.h / 2, shape.w / 2);
+    let mut y = vec![0i8; out.len()];
+    for c in 0..shape.c {
+        for oy in 0..out.h {
+            for ox in 0..out.w {
+                let mut s = 0i32;
+                for dy in 0..2 {
+                    for dx in 0..2 {
+                        s += x[c * shape.h * shape.w + (2 * oy + dy) * shape.w + (2 * ox + dx)]
+                            as i32;
+                    }
+                }
+                // round-half-up division by 4 (s+2)>>2 matches jnp
+                y[c * out.h * out.w + oy * out.w + ox] = ((s + 2) >> 2) as i8;
+            }
+        }
+    }
+    (y, out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn identity_layer(c: usize) -> ConvLayer {
+        // 1x1 conv with identity-ish weights: w[oc][ic] = 1 if oc==ic.
+        let mut w = vec![0i8; c * c];
+        for i in 0..c {
+            w[i * c + i] = 1;
+        }
+        ConvLayer {
+            out_c: c,
+            in_c: c,
+            k: 1,
+            stride: 1,
+            pad: 0,
+            weights: w,
+            bias: vec![0; c],
+            m: 1,
+            shift: 1,
+            relu: false,
+        }
+    }
+
+    #[test]
+    fn conv_1x1_identity_accumulates_input() {
+        let l = identity_layer(2);
+        let x = vec![1i8, 2, 3, 4, 5, 6, 7, 8]; // 2x2x2
+        let acc = conv_acc(&l, &x, Chw::new(2, 2, 2));
+        assert_eq!(acc, vec![1, 2, 3, 4, 5, 6, 7, 8]);
+    }
+
+    #[test]
+    fn conv_3x3_hand_computed() {
+        // Single channel, 3x3 input, 3x3 all-ones kernel, pad 1:
+        // centre output = sum of all inputs.
+        let l = ConvLayer {
+            out_c: 1,
+            in_c: 1,
+            k: 3,
+            stride: 1,
+            pad: 1,
+            weights: vec![1; 9],
+            bias: vec![0],
+            m: 1,
+            shift: 1,
+            relu: false,
+        };
+        let x = vec![1i8, 2, 3, 4, 5, 6, 7, 8, 9];
+        let acc = conv_acc(&l, &x, Chw::new(1, 3, 3));
+        assert_eq!(acc[4], 45); // centre
+        assert_eq!(acc[0], 1 + 2 + 4 + 5); // top-left corner
+        assert_eq!(acc.len(), 9);
+    }
+
+    #[test]
+    fn conv_stride_2_shapes() {
+        let l = ConvLayer {
+            out_c: 3,
+            in_c: 1,
+            k: 3,
+            stride: 2,
+            pad: 1,
+            weights: vec![0; 27],
+            bias: vec![0; 3],
+            m: 1,
+            shift: 1,
+            relu: false,
+        };
+        assert_eq!(l.out_hw(16, 16), (8, 8));
+        assert_eq!(l.macs_per_output(), 9);
+    }
+
+    #[test]
+    fn requant_round_and_clamp() {
+        // acc=100, m=1, shift=2 → (100+2)>>2 = 25
+        assert_eq!(requant(&[100], 1, 2, false), vec![25]);
+        // negative, round-half-up: (-3*1+1)>>1 = -1
+        assert_eq!(requant(&[-3], 1, 1, false), vec![-1]);
+        // clamp positive
+        assert_eq!(requant(&[100_000], 1, 1, false), vec![127]);
+        // clamp negative / relu
+        assert_eq!(requant(&[-100_000], 1, 1, false), vec![-128]);
+        assert_eq!(requant(&[-100_000], 1, 1, true), vec![0]);
+    }
+
+    #[test]
+    fn bias_broadcast_per_channel() {
+        let mut acc = vec![0, 0, 0, 0];
+        add_bias(&mut acc, &[4, 8], 2);
+        assert_eq!(acc, vec![4, 4, 8, 8]);
+    }
+
+    #[test]
+    fn corruption_changes_only_masked_outputs() {
+        let mut acc = vec![10, 20, 30];
+        let masks = vec![
+            StuckMask::IDENTITY,
+            StuckMask {
+                and_mask: 0,
+                or_mask: 0,
+            }, // stuck all-zero
+            StuckMask::IDENTITY,
+        ];
+        corrupt_acc(&mut acc, &masks);
+        assert_eq!(acc, vec![10, 0, 30]);
+    }
+
+    #[test]
+    fn fc_known_values() {
+        let l = FcLayer {
+            out_n: 2,
+            in_n: 3,
+            weights: vec![1, 2, 3, -1, 0, 1],
+            bias: vec![10, -10],
+            };
+        let y = fc_acc(&l, &[1, 1, 1]);
+        assert_eq!(y, vec![1 + 2 + 3 + 10, -1 + 1 - 10]);
+    }
+
+    #[test]
+    fn avgpool_rounds_half_up() {
+        let x = vec![1i8, 2, 3, 4]; // sum 10 → (10+2)>>2 = 3
+        let (y, s) = avgpool2(&x, Chw::new(1, 2, 2));
+        assert_eq!(y, vec![3]);
+        assert_eq!(s, Chw::new(1, 1, 1));
+        // negative: sum -10 → (-10+2)>>2 = -2
+        let x2 = vec![-1i8, -2, -3, -4];
+        let (y2, _) = avgpool2(&x2, Chw::new(1, 2, 2));
+        assert_eq!(y2, vec![-2]);
+    }
+}

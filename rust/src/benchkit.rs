@@ -1,0 +1,264 @@
+//! Criterion-style micro/meso benchmark harness (the offline build has
+//! no `criterion`). Each `cargo bench` target is a plain binary
+//! (`harness = false`) that builds a [`Bench`] session, registers
+//! closures, and at the end prints a markdown report and writes
+//! machine-readable CSV next to the experiment results.
+//!
+//! Method: per benchmark we (1) warm up for a fixed duration, (2) pick an
+//! inner iteration count so one sample costs ≳ `min_sample`, (3) collect
+//! `samples` timed samples, and (4) report mean/median/σ plus optional
+//! throughput. Baselines: if `target/benchkit/<name>.csv` exists from a
+//! previous run, the report includes the delta vs that baseline — this is
+//! what the EXPERIMENTS.md §Perf iteration log is produced from.
+
+use crate::util::stats::Summary;
+use crate::util::table::{f, Table};
+use std::time::{Duration, Instant};
+
+/// Configuration for a bench session.
+#[derive(Debug, Clone)]
+pub struct BenchConfig {
+    /// Wall-clock spent warming each benchmark up.
+    pub warmup: Duration,
+    /// Number of timed samples collected.
+    pub samples: usize,
+    /// Minimum duration of one sample; the inner iteration count is
+    /// scaled until a sample is at least this long.
+    pub min_sample: Duration,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        // Env knobs let `make bench-fast` shrink runs during iteration.
+        let fast = std::env::var("HYCA_BENCH_FAST").is_ok();
+        Self {
+            warmup: Duration::from_millis(if fast { 50 } else { 300 }),
+            samples: if fast { 10 } else { 30 },
+            min_sample: Duration::from_millis(if fast { 5 } else { 25 }),
+        }
+    }
+}
+
+/// One measured benchmark result.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    /// Per-iteration time in nanoseconds across samples.
+    pub ns_per_iter: Summary,
+    /// Optional units processed per iteration (for throughput).
+    pub units_per_iter: Option<f64>,
+    pub inner_iters: u64,
+}
+
+/// A bench session: register benchmarks, then `report()`.
+pub struct Bench {
+    pub group: String,
+    cfg: BenchConfig,
+    results: Vec<BenchResult>,
+}
+
+impl Bench {
+    pub fn new(group: impl Into<String>) -> Self {
+        Self {
+            group: group.into(),
+            cfg: BenchConfig::default(),
+            results: Vec::new(),
+        }
+    }
+
+    pub fn with_config(group: impl Into<String>, cfg: BenchConfig) -> Self {
+        Self {
+            group: group.into(),
+            cfg,
+            results: Vec::new(),
+        }
+    }
+
+    /// Benchmark `body`, which performs ONE logical iteration per call.
+    /// Use `std::hint::black_box` inside the closure on inputs/outputs.
+    pub fn bench<F: FnMut()>(&mut self, name: impl Into<String>, body: F) -> &BenchResult {
+        self.bench_units(name, None, body)
+    }
+
+    /// As [`bench`], additionally recording `units` processed per
+    /// iteration so the report can print a throughput column.
+    pub fn bench_units<F: FnMut()>(
+        &mut self,
+        name: impl Into<String>,
+        units: Option<f64>,
+        mut body: F,
+    ) -> &BenchResult {
+        let name = name.into();
+        // Warmup + calibration of the inner iteration count.
+        let warm_deadline = Instant::now() + self.cfg.warmup;
+        let mut calib_iters: u64 = 0;
+        let calib_start = Instant::now();
+        while Instant::now() < warm_deadline {
+            body();
+            calib_iters += 1;
+        }
+        let per_iter = calib_start.elapsed().as_secs_f64() / calib_iters.max(1) as f64;
+        let inner = ((self.cfg.min_sample.as_secs_f64() / per_iter.max(1e-9)).ceil() as u64).max(1);
+
+        let mut ns: Vec<f64> = Vec::with_capacity(self.cfg.samples);
+        for _ in 0..self.cfg.samples {
+            let t0 = Instant::now();
+            for _ in 0..inner {
+                body();
+            }
+            let dt = t0.elapsed();
+            ns.push(dt.as_nanos() as f64 / inner as f64);
+        }
+        self.results.push(BenchResult {
+            name,
+            ns_per_iter: Summary::of(&ns),
+            units_per_iter: units,
+            inner_iters: inner,
+        });
+        self.results.last().unwrap()
+    }
+
+    /// Render the report, print it, persist CSV under `target/benchkit/`,
+    /// and show deltas vs any previous baseline.
+    pub fn report(&self) {
+        let mut t = Table::new(
+            format!("bench group: {}", self.group),
+            &["benchmark", "mean", "median", "σ", "throughput", "Δ vs baseline"],
+        );
+        let baseline = self.load_baseline();
+        for r in &self.results {
+            let thr = match r.units_per_iter {
+                Some(u) => {
+                    let per_sec = u / (r.ns_per_iter.mean / 1e9);
+                    format!("{}/s", human_count(per_sec))
+                }
+                None => "-".to_string(),
+            };
+            let delta = baseline
+                .as_ref()
+                .and_then(|b| b.get(&r.name))
+                .map(|&old| {
+                    let d = (r.ns_per_iter.mean - old) / old * 100.0;
+                    format!("{:+.1}%", d)
+                })
+                .unwrap_or_else(|| "-".to_string());
+            t.push_row(vec![
+                r.name.clone(),
+                human_time(r.ns_per_iter.mean),
+                human_time(r.ns_per_iter.median),
+                human_time(r.ns_per_iter.std),
+                thr,
+                delta,
+            ]);
+        }
+        println!("{}", t.to_markdown());
+        if let Err(e) = self.save_csv() {
+            eprintln!("benchkit: could not persist baseline: {e}");
+        }
+    }
+
+    fn baseline_path(&self) -> std::path::PathBuf {
+        std::path::Path::new("target/benchkit").join(format!("{}.csv", self.group))
+    }
+
+    fn load_baseline(&self) -> Option<std::collections::HashMap<String, f64>> {
+        let text = std::fs::read_to_string(self.baseline_path()).ok()?;
+        let mut m = std::collections::HashMap::new();
+        for line in text.lines().skip(1) {
+            let mut parts = line.rsplitn(2, ',');
+            let ns: f64 = parts.next()?.parse().ok()?;
+            let name = parts.next()?.to_string();
+            m.insert(name, ns);
+        }
+        Some(m)
+    }
+
+    fn save_csv(&self) -> std::io::Result<()> {
+        std::fs::create_dir_all("target/benchkit")?;
+        let mut s = String::from("benchmark,mean_ns\n");
+        for r in &self.results {
+            s.push_str(&format!("{},{}\n", r.name, r.ns_per_iter.mean));
+        }
+        std::fs::write(self.baseline_path(), s)
+    }
+
+    /// Access collected results (used by tests).
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+}
+
+/// Format nanoseconds with an adaptive unit.
+pub fn human_time(ns: f64) -> String {
+    if ns.is_nan() {
+        return "nan".into();
+    }
+    if ns < 1e3 {
+        format!("{} ns", f(ns, 1))
+    } else if ns < 1e6 {
+        format!("{} µs", f(ns / 1e3, 2))
+    } else if ns < 1e9 {
+        format!("{} ms", f(ns / 1e6, 2))
+    } else {
+        format!("{} s", f(ns / 1e9, 3))
+    }
+}
+
+/// Format a count with K/M/G suffix.
+pub fn human_count(v: f64) -> String {
+    if v < 1e3 {
+        f(v, 1)
+    } else if v < 1e6 {
+        format!("{}K", f(v / 1e3, 2))
+    } else if v < 1e9 {
+        format!("{}M", f(v / 1e6, 2))
+    } else {
+        format!("{}G", f(v / 1e9, 2))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fast_cfg() -> BenchConfig {
+        BenchConfig {
+            warmup: Duration::from_millis(1),
+            samples: 3,
+            min_sample: Duration::from_micros(100),
+        }
+    }
+
+    #[test]
+    fn measures_something_positive() {
+        let mut b = Bench::with_config("testgroup", fast_cfg());
+        let r = b.bench("spin", || {
+            let mut acc = 0u64;
+            for i in 0..1000u64 {
+                acc = acc.wrapping_add(std::hint::black_box(i));
+            }
+            std::hint::black_box(acc);
+        });
+        assert!(r.ns_per_iter.mean > 0.0);
+        assert!(r.inner_iters >= 1);
+    }
+
+    #[test]
+    fn throughput_reported() {
+        let mut b = Bench::with_config("testgroup2", fast_cfg());
+        b.bench_units("units", Some(1000.0), || {
+            std::hint::black_box((0..100u32).sum::<u32>());
+        });
+        assert_eq!(b.results().len(), 1);
+        assert_eq!(b.results()[0].units_per_iter, Some(1000.0));
+    }
+
+    #[test]
+    fn human_units() {
+        assert_eq!(human_time(12.34), "12.3 ns");
+        assert!(human_time(12_345.0).ends_with("µs"));
+        assert!(human_time(12_345_678.0).ends_with("ms"));
+        assert!(human_count(5_000.0).ends_with('K'));
+        assert!(human_count(5_000_000.0).ends_with('M'));
+    }
+}

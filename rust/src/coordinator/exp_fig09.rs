@@ -1,0 +1,58 @@
+//! Fig. 9 (§V-B): chip area of the DLA under the different redundancy
+//! approaches (RR, CR, DR, HyCA24/32/40) — component-level GE model,
+//! see `crate::area` for the substitution rationale.
+
+use super::{Experiment, RunOpts};
+use crate::area::{dla_area, fig9_lineup, AreaConstants};
+use crate::array::Dims;
+use crate::util::table::{f, Table};
+use anyhow::Result;
+
+pub struct Fig09;
+
+impl Experiment for Fig09 {
+    fn id(&self) -> &'static str {
+        "fig9"
+    }
+
+    fn title(&self) -> &'static str {
+        "Chip area under different redundancy approaches (kGE)"
+    }
+
+    fn run(&self, _opts: &RunOpts) -> Result<Vec<Table>> {
+        let consts = AreaConstants::default();
+        let mut t = Table::new(
+            self.title(),
+            &[
+                "design",
+                "base_array",
+                "buffers",
+                "red_PEs",
+                "MUX",
+                "regfiles",
+                "control",
+                "overhead",
+                "total",
+                "overhead_vs_RR",
+            ],
+        );
+        let rr_overhead = dla_area(&consts, Dims::PAPER, crate::area::AreaScheme::Rr)
+            .overhead_kge();
+        for scheme in fig9_lineup() {
+            let a = dla_area(&consts, Dims::PAPER, scheme);
+            t.push_row(vec![
+                scheme.label(),
+                f(a.base_array_kge, 0),
+                f(a.buffers_kge, 0),
+                f(a.redundant_pes_kge, 1),
+                f(a.mux_kge, 1),
+                f(a.regfiles_kge, 1),
+                f(a.control_kge, 1),
+                f(a.overhead_kge(), 1),
+                f(a.total_kge(), 0),
+                f(a.overhead_kge() / rr_overhead, 3),
+            ]);
+        }
+        Ok(vec![t])
+    }
+}

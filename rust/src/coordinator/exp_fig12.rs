@@ -1,0 +1,69 @@
+//! Fig. 12 (§V-D): normalised performance of the neural-network
+//! benchmark (AlexNet/VGG/YOLO/ResNet) on DLAs protected with the four
+//! schemes, normalised to RR, under both fault models. Uses the
+//! Scale-sim-analogue perf model memoised over unique surviving-array
+//! widths (§V-A3).
+
+use super::{exp_fig10::schemes, Experiment, RunOpts};
+use crate::array::Dims;
+use crate::faults::montecarlo::FaultModel;
+use crate::perfmodel::{mean_normalised_perf, networks, DegradedPerf};
+use crate::util::table::{f, Table};
+use anyhow::Result;
+
+pub struct Fig12;
+
+impl Experiment for Fig12 {
+    fn id(&self) -> &'static str {
+        "fig12"
+    }
+
+    fn title(&self) -> &'static str {
+        "Normalized performance (to RR) of the NN benchmark, both fault models"
+    }
+
+    fn run(&self, opts: &RunOpts) -> Result<Vec<Table>> {
+        let dims = Dims::PAPER;
+        let nets = networks::benchmark();
+        let mut tables = Vec::new();
+        for model in FaultModel::both() {
+            let mut t = Table::new(
+                format!(
+                    "Fig.12 ({}) — geo-mean normalized performance vs RR",
+                    model.label()
+                ),
+                &["PER(%)", "net", "RR", "CR", "DR", "HyCA32", "HyCA32_speedup"],
+            );
+            for per in opts.per_sweep() {
+                for net in &nets {
+                    let dp = DegradedPerf::new(net, dims);
+                    let full = dp.cycles(dims.cols).unwrap();
+                    let schemes = schemes();
+                    let mut perfs = Vec::new();
+                    for s in &schemes {
+                        perfs.push(mean_normalised_perf(
+                            s.as_ref(),
+                            &dp,
+                            full,
+                            dims,
+                            per,
+                            model,
+                            opts.seed,
+                            opts.n_configs(),
+                            opts.threads,
+                        ));
+                    }
+                    let rr = perfs[0].max(1e-9);
+                    let mut row = vec![f(per * 100.0, 2), net.name.to_string()];
+                    for p in &perfs {
+                        row.push(f(p / rr, 3));
+                    }
+                    row.push(f(perfs[3] / rr, 2));
+                    t.push_row(row);
+                }
+            }
+            tables.push(t);
+        }
+        Ok(tables)
+    }
+}

@@ -1,0 +1,42 @@
+//! Fig. 13 (§V-D): neural-network runtime vs computing-array width
+//! (row size fixed at 32) — explains why the performance gap in
+//! Fig. 12 is smaller than the computing-power gap in Fig. 11 (runtime
+//! is sub-linear in array width, and FC layers use one column only).
+
+use super::{Experiment, RunOpts};
+use crate::array::Dims;
+use crate::perfmodel::networks;
+use crate::util::table::{f, Table};
+use anyhow::Result;
+
+pub struct Fig13;
+
+impl Experiment for Fig13 {
+    fn id(&self) -> &'static str {
+        "fig13"
+    }
+
+    fn title(&self) -> &'static str {
+        "NN runtime (Mcycles) vs array width, rows fixed at 32"
+    }
+
+    fn run(&self, _opts: &RunOpts) -> Result<Vec<Table>> {
+        let widths = [4usize, 8, 12, 16, 20, 24, 28, 32, 40, 48, 56, 64];
+        let nets = networks::benchmark();
+        let mut cols = vec!["cols".to_string()];
+        cols.extend(nets.iter().map(|n| n.name.to_string()));
+        let mut t = Table::new(
+            self.title(),
+            &cols.iter().map(|s| s.as_str()).collect::<Vec<_>>(),
+        );
+        for w in widths {
+            let mut row = vec![w.to_string()];
+            for net in &nets {
+                let cy = net.cycles(Dims::new(32, w)).unwrap();
+                row.push(f(cy as f64 / 1e6, 2));
+            }
+            t.push_row(row);
+        }
+        Ok(vec![t])
+    }
+}

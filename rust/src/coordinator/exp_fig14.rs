@@ -1,0 +1,74 @@
+//! Fig. 14 (§V-E): redundancy scalability — fully functional
+//! probability across computing-array sizes (16×16, 32×32, 64×32,
+//! 64×64) for all four schemes under both fault models. Spare budgets
+//! follow the paper: RR = rows, CR = cols, DR = diagonal per square
+//! sub-array, HyCA = Col.
+
+use super::{Experiment, RunOpts};
+use crate::array::Dims;
+use crate::faults::montecarlo::FaultModel;
+use crate::redundancy::{
+    cr::ColumnRedundancy, dr::DiagonalRedundancy, evaluate_scheme, hyca::HycaScheme,
+    rr::RowRedundancy, Scheme,
+};
+use crate::util::table::{f, Table};
+use anyhow::Result;
+
+pub struct Fig14;
+
+/// The four array sizes of Fig. 14 (a–d / e–h).
+pub fn array_sizes() -> [Dims; 4] {
+    [
+        Dims::new(16, 16),
+        Dims::new(32, 32),
+        Dims::new(64, 32),
+        Dims::new(64, 64),
+    ]
+}
+
+impl Experiment for Fig14 {
+    fn id(&self) -> &'static str {
+        "fig14"
+    }
+
+    fn title(&self) -> &'static str {
+        "FFP scalability across array sizes, both fault models"
+    }
+
+    fn run(&self, opts: &RunOpts) -> Result<Vec<Table>> {
+        let mut tables = Vec::new();
+        for model in FaultModel::both() {
+            let mut t = Table::new(
+                format!("Fig.14 ({}) — FFP by array size", model.label()),
+                &["array", "PER(%)", "RR", "CR", "DR", "HyCA(Col)"],
+            );
+            for dims in array_sizes() {
+                // HyCA sized to Col for a fair comparison (§V-E)
+                let schemes: Vec<Box<dyn Scheme>> = vec![
+                    Box::new(RowRedundancy::default()),
+                    Box::new(ColumnRedundancy::default()),
+                    Box::new(DiagonalRedundancy),
+                    Box::new(HycaScheme::paper(dims.cols)),
+                ];
+                for per in opts.per_sweep() {
+                    let mut row = vec![dims.to_string(), f(per * 100.0, 2)];
+                    for s in &schemes {
+                        let (ffp, _) = evaluate_scheme(
+                            s.as_ref(),
+                            dims,
+                            per,
+                            model,
+                            opts.seed,
+                            opts.n_configs(),
+                            opts.threads,
+                        );
+                        row.push(f(ffp, 4));
+                    }
+                    t.push_row(row);
+                }
+            }
+            tables.push(t);
+        }
+        Ok(tables)
+    }
+}

@@ -1,0 +1,65 @@
+//! Fig. 15 (§V-E): DPPU structure scalability — unified vs grouped
+//! DPPU at sizes 16/24/32/40/48 on the 32×32 array. The grouped
+//! structure's FFP cliff tracks the DPPU size exactly; the unified
+//! structure plateaus at the register-file alignment (capacity 16 for
+//! size 24, 32 for sizes 40/48).
+
+use super::{Experiment, RunOpts};
+use crate::array::Dims;
+use crate::faults::montecarlo::FaultModel;
+use crate::redundancy::{evaluate_scheme, hyca::HycaScheme};
+use crate::util::table::{f, Table};
+use anyhow::Result;
+
+pub struct Fig15;
+
+pub const DPPU_SIZES: [usize; 5] = [16, 24, 32, 40, 48];
+
+impl Experiment for Fig15 {
+    fn id(&self) -> &'static str {
+        "fig15"
+    }
+
+    fn title(&self) -> &'static str {
+        "FFP of unified vs grouped DPPU at sizes 16-48, both fault models"
+    }
+
+    fn run(&self, opts: &RunOpts) -> Result<Vec<Table>> {
+        let dims = Dims::PAPER;
+        let mut tables = Vec::new();
+        for model in FaultModel::both() {
+            let mut cols = vec!["PER(%)".to_string()];
+            for s in DPPU_SIZES {
+                cols.push(format!("G{s}"));
+                cols.push(format!("U{s}"));
+            }
+            let mut t = Table::new(
+                format!(
+                    "Fig.15 ({}) — FFP, Grouped (G) vs Unified (U) DPPU",
+                    model.label()
+                ),
+                &cols.iter().map(|s| s.as_str()).collect::<Vec<_>>(),
+            );
+            for per in opts.per_sweep() {
+                let mut row = vec![f(per * 100.0, 2)];
+                for size in DPPU_SIZES {
+                    for scheme in [HycaScheme::paper(size), HycaScheme::unified(size)] {
+                        let (ffp, _) = evaluate_scheme(
+                            &scheme,
+                            dims,
+                            per,
+                            model,
+                            opts.seed,
+                            opts.n_configs(),
+                            opts.threads,
+                        );
+                        row.push(f(ffp, 4));
+                    }
+                }
+                t.push_row(row);
+            }
+            tables.push(t);
+        }
+        Ok(tables)
+    }
+}

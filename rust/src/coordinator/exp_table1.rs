@@ -1,0 +1,58 @@
+//! Table I (§V-F): the proportion of network layers whose execution
+//! time covers one full fault-detection scan of the 2-D computing
+//! array (`Row·Col + Col` cycles), across array sizes 16² … 128².
+
+use super::{Experiment, RunOpts};
+use crate::array::Dims;
+use crate::hyca::detect::{layers_covering_scan, scan_cycles};
+use crate::perfmodel::networks;
+use crate::util::table::Table;
+use anyhow::Result;
+
+pub struct Table1;
+
+pub fn array_sizes() -> [Dims; 4] {
+    [
+        Dims::new(16, 16),
+        Dims::new(32, 32),
+        Dims::new(64, 64),
+        Dims::new(128, 128),
+    ]
+}
+
+impl Experiment for Table1 {
+    fn id(&self) -> &'static str {
+        "table1"
+    }
+
+    fn title(&self) -> &'static str {
+        "Layers whose execution covers a full fault-detection scan"
+    }
+
+    fn run(&self, _opts: &RunOpts) -> Result<Vec<Table>> {
+        let mut cols = vec!["network".to_string()];
+        for d in array_sizes() {
+            cols.push(d.to_string());
+        }
+        let mut t = Table::new(
+            self.title(),
+            &cols.iter().map(|s| s.as_str()).collect::<Vec<_>>(),
+        );
+        for net in networks::benchmark() {
+            let mut row = vec![net.name.to_string()];
+            for dims in array_sizes() {
+                let per_layer = net.layer_cycles(dims).unwrap();
+                let covered = layers_covering_scan(dims, &per_layer);
+                row.push(format!("{}/{}", covered, per_layer.len()));
+            }
+            t.push_row(row);
+        }
+        // scan-time reference row
+        let mut scan_row = vec!["scan_cycles".to_string()];
+        for dims in array_sizes() {
+            scan_row.push(scan_cycles(dims).to_string());
+        }
+        t.push_row(scan_row);
+        Ok(vec![t])
+    }
+}

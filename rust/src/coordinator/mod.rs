@@ -1,0 +1,134 @@
+//! Experiment coordinator: one [`Experiment`] per figure/table of the
+//! paper's evaluation (§V), a threaded Monte-Carlo driver, and report
+//! writers.
+//!
+//! Every experiment is pure and deterministic given [`RunOpts`] (seed,
+//! config count); the CLI (`repro exp <id>`) prints markdown tables and
+//! persists CSV under `results/`. EXPERIMENTS.md records a full run.
+
+pub mod exp_fig02;
+pub mod exp_fig03;
+pub mod exp_fig09;
+pub mod exp_fig10;
+pub mod exp_fig11;
+pub mod exp_fig12;
+pub mod exp_fig13;
+pub mod exp_fig14;
+pub mod exp_fig15;
+pub mod exp_table1;
+pub mod report;
+
+use crate::util::table::Table;
+use anyhow::Result;
+
+/// Options shared by all experiments.
+#[derive(Debug, Clone)]
+pub struct RunOpts {
+    /// Monte-Carlo configurations per (PER, scheme, model) point
+    /// (paper: 10 000).
+    pub configs: usize,
+    /// Master seed; every sampled quantity derives from it.
+    pub seed: u64,
+    /// Worker threads for the Monte-Carlo fan-out.
+    pub threads: usize,
+    /// Output directory for CSV reports.
+    pub out_dir: std::path::PathBuf,
+    /// Reduced sweep for quick iterations (`--fast`).
+    pub fast: bool,
+}
+
+impl Default for RunOpts {
+    fn default() -> Self {
+        Self {
+            configs: 10_000,
+            seed: 0xC0FFEE,
+            threads: crate::faults::montecarlo::default_threads(),
+            out_dir: "results".into(),
+            fast: false,
+        }
+    }
+}
+
+impl RunOpts {
+    /// The PER sweep (fractions), reduced under `--fast`.
+    pub fn per_sweep(&self) -> Vec<f64> {
+        let full = crate::faults::ber::paper_per_sweep();
+        if self.fast {
+            full.into_iter().step_by(3).collect()
+        } else {
+            full
+        }
+    }
+
+    /// Config count, reduced under `--fast`.
+    pub fn n_configs(&self) -> usize {
+        if self.fast {
+            self.configs.min(500)
+        } else {
+            self.configs
+        }
+    }
+}
+
+/// One reproducible paper artefact (figure or table).
+pub trait Experiment: Sync {
+    /// Stable identifier: "fig10", "table1", …
+    fn id(&self) -> &'static str;
+    /// Paper caption, abbreviated.
+    fn title(&self) -> &'static str;
+    /// Produce the result tables.
+    fn run(&self, opts: &RunOpts) -> Result<Vec<Table>>;
+}
+
+/// All experiments in paper order.
+pub fn registry() -> Vec<Box<dyn Experiment>> {
+    vec![
+        Box::new(exp_fig02::Fig02),
+        Box::new(exp_fig03::Fig03),
+        Box::new(exp_fig09::Fig09),
+        Box::new(exp_fig10::Fig10),
+        Box::new(exp_fig11::Fig11),
+        Box::new(exp_fig12::Fig12),
+        Box::new(exp_fig13::Fig13),
+        Box::new(exp_fig14::Fig14),
+        Box::new(exp_fig15::Fig15),
+        Box::new(exp_table1::Table1),
+    ]
+}
+
+/// Look an experiment up by id.
+pub fn find(id: &str) -> Option<Box<dyn Experiment>> {
+    registry().into_iter().find(|e| e.id() == id)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_ids_unique_and_complete() {
+        let ids: Vec<&str> = registry().iter().map(|e| e.id()).collect();
+        let set: std::collections::HashSet<_> = ids.iter().collect();
+        assert_eq!(ids.len(), set.len());
+        for want in [
+            "fig2", "fig3", "fig9", "fig10", "fig11", "fig12", "fig13", "fig14", "fig15",
+            "table1",
+        ] {
+            assert!(ids.contains(&want), "missing {want}");
+        }
+    }
+
+    #[test]
+    fn find_works() {
+        assert!(find("fig10").is_some());
+        assert!(find("nope").is_none());
+    }
+
+    #[test]
+    fn fast_opts_shrink_work() {
+        let slow = RunOpts::default();
+        let fast = RunOpts { fast: true, ..RunOpts::default() };
+        assert!(fast.n_configs() < slow.n_configs());
+        assert!(fast.per_sweep().len() < slow.per_sweep().len());
+    }
+}

@@ -1,0 +1,45 @@
+//! Report writer: render experiment tables to the console (markdown)
+//! and persist CSV under the run's output directory.
+
+use crate::util::table::Table;
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// Print tables and write `<out_dir>/<exp_id>_<n>.csv` for each.
+pub fn emit(out_dir: &Path, exp_id: &str, tables: &[Table]) -> Result<()> {
+    std::fs::create_dir_all(out_dir)
+        .with_context(|| format!("creating {}", out_dir.display()))?;
+    for (i, t) in tables.iter().enumerate() {
+        println!("{}", t.to_markdown());
+        let suffix = if tables.len() > 1 {
+            format!("_{i}")
+        } else {
+            String::new()
+        };
+        let path = out_dir.join(format!("{exp_id}{suffix}.csv"));
+        std::fs::write(&path, t.to_csv())
+            .with_context(|| format!("writing {}", path.display()))?;
+        println!("(csv: {})\n", path.display());
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn emit_writes_csv_per_table() {
+        let dir = std::env::temp_dir().join(format!("hyca_report_{}", std::process::id()));
+        let mut t1 = Table::new("one", &["a"]);
+        t1.push(&["1"]);
+        let t2 = Table::new("two", &["b"]);
+        emit(&dir, "figX", &[t1, t2]).unwrap();
+        assert!(dir.join("figX_0.csv").exists());
+        assert!(dir.join("figX_1.csv").exists());
+        let single = Table::new("solo", &["c"]);
+        emit(&dir, "figY", &[single]).unwrap();
+        assert!(dir.join("figY.csv").exists());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

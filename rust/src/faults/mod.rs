@@ -1,0 +1,186 @@
+//! Fault models for the 2-D computing array (paper §III-B, §V-A2).
+//!
+//! A *fault configuration* is the set of faulty PEs of an `rows × cols`
+//! computing array, produced by one of two spatial models:
+//!
+//! * [`random`] — uniform i.i.d. stuck-at faults (each PE fails with
+//!   probability PER independently), the paper's "random distribution
+//!   model";
+//! * [`clustered`] — a Meyer–Pradhan-style centre–satellite model in
+//!   which manufacturing defects attract each other spatially, the
+//!   paper's "clustered distribution model" [42].
+//!
+//! The fault-rate metric is PER (PE error rate), derived from BER (bit
+//! error rate over the 64 register bits of a PE) by Eq. (1):
+//! `PER = 1 − (1 − BER)^64` — see [`ber`].
+//!
+//! [`stuckat`] refines a faulty PE into concrete stuck bits so the
+//! functional pipeline (L2 model via PJRT) can corrupt output features
+//! the way real silicon would.
+
+pub mod ber;
+pub mod clustered;
+pub mod montecarlo;
+pub mod random;
+pub mod stuckat;
+
+use crate::array::Dims;
+
+/// Coordinate of a PE in the 2-D computing array. `row` indexes the
+/// vertical dimension (input-feature rows stream across it), `col` the
+/// horizontal one (weights are forwarded column-to-column, left→right).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct Coord {
+    pub row: u16,
+    pub col: u16,
+}
+
+impl Coord {
+    pub fn new(row: usize, col: usize) -> Self {
+        Self {
+            row: row as u16,
+            col: col as u16,
+        }
+    }
+}
+
+/// A fault configuration: the faulty PEs of one sampled array instance.
+///
+/// Invariants (enforced by `new`): coordinates are in-bounds, unique,
+/// and sorted by `(col, row)` — column-major order matches the
+/// left-priority repair policy of §IV-B.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FaultConfig {
+    pub dims: Dims,
+    faulty: Vec<Coord>,
+}
+
+impl FaultConfig {
+    /// Build a configuration from an arbitrary coordinate list
+    /// (deduplicated + sorted). Panics on out-of-bounds coordinates.
+    pub fn new(dims: Dims, mut faulty: Vec<Coord>) -> Self {
+        for c in &faulty {
+            assert!(
+                (c.row as usize) < dims.rows && (c.col as usize) < dims.cols,
+                "fault {c:?} out of bounds for {dims:?}"
+            );
+        }
+        faulty.sort_by_key(|c| (c.col, c.row));
+        faulty.dedup();
+        Self { dims, faulty }
+    }
+
+    /// The empty (fault-free) configuration.
+    pub fn healthy(dims: Dims) -> Self {
+        Self {
+            dims,
+            faulty: Vec::new(),
+        }
+    }
+
+    /// Faulty PE coordinates, sorted by `(col, row)`.
+    pub fn faulty(&self) -> &[Coord] {
+        &self.faulty
+    }
+
+    /// Number of faulty PEs.
+    pub fn count(&self) -> usize {
+        self.faulty.len()
+    }
+
+    /// Is the given PE faulty? (binary search on the sorted list)
+    pub fn is_faulty(&self, row: usize, col: usize) -> bool {
+        self.faulty
+            .binary_search_by_key(&(col as u16, row as u16), |c| (c.col, c.row))
+            .is_ok()
+    }
+
+    /// Number of faults per row.
+    pub fn faults_per_row(&self) -> Vec<usize> {
+        let mut v = vec![0usize; self.dims.rows];
+        for c in &self.faulty {
+            v[c.row as usize] += 1;
+        }
+        v
+    }
+
+    /// Number of faults per column.
+    pub fn faults_per_col(&self) -> Vec<usize> {
+        let mut v = vec![0usize; self.dims.cols];
+        for c in &self.faulty {
+            v[c.col as usize] += 1;
+        }
+        v
+    }
+
+    /// Mean pairwise Manhattan distance between faulty PEs; used as a
+    /// clustering statistic in tests (clustered ≪ random).
+    pub fn mean_pairwise_distance(&self) -> f64 {
+        let n = self.faulty.len();
+        if n < 2 {
+            return 0.0;
+        }
+        let mut sum = 0u64;
+        for i in 0..n {
+            for j in (i + 1)..n {
+                let a = self.faulty[i];
+                let b = self.faulty[j];
+                sum += (a.row as i64 - b.row as i64).unsigned_abs()
+                    + (a.col as i64 - b.col as i64).unsigned_abs();
+            }
+        }
+        sum as f64 / (n * (n - 1) / 2) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn config_sorts_dedups_and_bounds_checks() {
+        let d = Dims::new(4, 4);
+        let cfg = FaultConfig::new(
+            d,
+            vec![
+                Coord::new(3, 2),
+                Coord::new(0, 0),
+                Coord::new(3, 2),
+                Coord::new(1, 0),
+            ],
+        );
+        assert_eq!(cfg.count(), 3);
+        assert_eq!(
+            cfg.faulty(),
+            &[Coord::new(0, 0), Coord::new(1, 0), Coord::new(3, 2)]
+        );
+        assert!(cfg.is_faulty(3, 2));
+        assert!(!cfg.is_faulty(2, 3));
+    }
+
+    #[test]
+    #[should_panic(expected = "out of bounds")]
+    fn out_of_bounds_fault_panics() {
+        FaultConfig::new(Dims::new(2, 2), vec![Coord::new(2, 0)]);
+    }
+
+    #[test]
+    fn per_row_col_counts() {
+        let d = Dims::new(3, 3);
+        let cfg = FaultConfig::new(
+            d,
+            vec![Coord::new(0, 0), Coord::new(0, 1), Coord::new(2, 1)],
+        );
+        assert_eq!(cfg.faults_per_row(), vec![2, 0, 1]);
+        assert_eq!(cfg.faults_per_col(), vec![1, 2, 0]);
+    }
+
+    #[test]
+    fn pairwise_distance() {
+        let d = Dims::new(8, 8);
+        let tight = FaultConfig::new(d, vec![Coord::new(0, 0), Coord::new(0, 1)]);
+        let wide = FaultConfig::new(d, vec![Coord::new(0, 0), Coord::new(7, 7)]);
+        assert!(tight.mean_pairwise_distance() < wide.mean_pairwise_distance());
+        assert_eq!(FaultConfig::healthy(d).mean_pairwise_distance(), 0.0);
+    }
+}

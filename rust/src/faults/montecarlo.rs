@@ -1,0 +1,152 @@
+//! Monte-Carlo fault-configuration sampling (paper §V-A2: "we generate
+//! 10000 configurations randomly for each fault injection rate and
+//! average the evaluation").
+//!
+//! Reproducibility contract: configuration `i` of a run is a pure
+//! function of `(master_seed, i)` — every worker thread derives its own
+//! PRNG stream via [`Pcg32::split`], so results are identical regardless
+//! of thread count. EXPERIMENTS.md records the master seeds.
+
+use super::clustered::{self, ClusterParams};
+use super::{random, FaultConfig};
+use crate::array::Dims;
+use crate::util::rng::Pcg32;
+
+/// Which spatial fault model to sample from.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FaultModel {
+    /// Uniform i.i.d. faults (paper's "random distribution model").
+    Random,
+    /// Meyer–Pradhan centre–satellite clusters (paper's "clustered
+    /// distribution model").
+    Clustered(ClusterParams),
+}
+
+impl FaultModel {
+    /// Sample one configuration at the given PER.
+    pub fn sample(&self, rng: &mut Pcg32, dims: Dims, per: f64) -> FaultConfig {
+        match self {
+            FaultModel::Random => random::sample(rng, dims, per),
+            FaultModel::Clustered(p) => clustered::sample(rng, dims, per, *p),
+        }
+    }
+
+    /// Deterministic configuration #`index` for a master seed.
+    pub fn sample_indexed(
+        &self,
+        master_seed: u64,
+        index: u64,
+        dims: Dims,
+        per: f64,
+    ) -> FaultConfig {
+        let mut rng = Pcg32::split(master_seed, index);
+        self.sample(&mut rng, dims, per)
+    }
+
+    /// Human-readable label used in reports.
+    pub fn label(&self) -> &'static str {
+        match self {
+            FaultModel::Random => "random",
+            FaultModel::Clustered(_) => "clustered",
+        }
+    }
+
+    /// The two models evaluated in the paper, with default parameters.
+    pub fn both() -> [FaultModel; 2] {
+        [
+            FaultModel::Random,
+            FaultModel::Clustered(ClusterParams::default()),
+        ]
+    }
+}
+
+/// Run `f` over `n` deterministic Monte-Carlo configurations, fanning
+/// out across `threads` OS threads, and collect per-config outputs in
+/// index order. The closure must be `Sync` (it is called concurrently).
+pub fn map_configs<T, F>(
+    master_seed: u64,
+    n: usize,
+    dims: Dims,
+    per: f64,
+    model: FaultModel,
+    threads: usize,
+    f: F,
+) -> Vec<T>
+where
+    T: Send + Default + Clone,
+    F: Fn(u64, &FaultConfig) -> T + Sync,
+{
+    let threads = threads.max(1).min(n.max(1));
+    let mut out = vec![T::default(); n];
+    let chunk = n.div_ceil(threads);
+    std::thread::scope(|scope| {
+        for (t, slot) in out.chunks_mut(chunk).enumerate() {
+            let f = &f;
+            scope.spawn(move || {
+                let base = (t * chunk) as u64;
+                for (j, s) in slot.iter_mut().enumerate() {
+                    let idx = base + j as u64;
+                    let cfg = model.sample_indexed(master_seed, idx, dims, per);
+                    *s = f(idx, &cfg);
+                }
+            });
+        }
+    });
+    out
+}
+
+/// Number of worker threads to use by default: respects
+/// `HYCA_THREADS`, else available parallelism.
+pub fn default_threads() -> usize {
+    std::env::var("HYCA_THREADS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or_else(|| {
+            std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(4)
+        })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn indexed_sampling_is_deterministic() {
+        let dims = Dims::new(32, 32);
+        let a = FaultModel::Random.sample_indexed(99, 7, dims, 0.03);
+        let b = FaultModel::Random.sample_indexed(99, 7, dims, 0.03);
+        let c = FaultModel::Random.sample_indexed(99, 8, dims, 0.03);
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn map_configs_is_threadcount_invariant() {
+        let dims = Dims::new(16, 16);
+        let run = |threads| {
+            map_configs(42, 64, dims, 0.05, FaultModel::Random, threads, |_, cfg| {
+                cfg.count()
+            })
+        };
+        assert_eq!(run(1), run(4));
+        assert_eq!(run(4), run(13));
+    }
+
+    #[test]
+    fn map_configs_preserves_index_order() {
+        let dims = Dims::new(8, 8);
+        let idxs = map_configs(1, 32, dims, 0.1, FaultModel::Random, 4, |i, _| i);
+        assert_eq!(idxs, (0..32).collect::<Vec<u64>>());
+    }
+
+    #[test]
+    fn both_models_sample() {
+        let dims = Dims::new(32, 32);
+        for m in FaultModel::both() {
+            let cfg = m.sample_indexed(5, 0, dims, 0.05);
+            assert!(cfg.count() > 0, "{}", m.label());
+        }
+    }
+}

@@ -1,0 +1,199 @@
+//! Bit-level stuck-at refinement of a faulty PE.
+//!
+//! The spatial models decide *which* PEs are faulty; this module decides
+//! *how* they fail, so the functional pipeline (the PJRT-executed L2
+//! model) can corrupt output-feature values realistically.
+//!
+//! A faulty PE has ≥1 stuck bit among its 64 register bits
+//! ([`crate::faults::ber::REGISTER_WIDTHS`]). The functional effect we
+//! export is a pair of masks applied to the PE's 32-bit accumulated
+//! output: `y' = (y & and_mask) | or_mask` — i.e. stuck-at-0 clears a
+//! bit, stuck-at-1 sets it.
+//!
+//! Faults in the operand / intermediate registers corrupt every MAC of
+//! the accumulation rather than the final value; their accumulated
+//! effect over the k·k·c MACs of an output feature is data-dependent
+//! garbage of large magnitude (the paper §IV-D: "hard faults in a PE
+//! can usually lead to computing errors of most of the computation").
+//! A static mask cannot reproduce the data dependence, so we
+//! approximate an operand-register fault by a *wide* random stuck
+//! pattern over the accumulator's upper bits (8..31) — the closest
+//! static equivalent of "the accumulated value is garbage". Pure
+//! accumulator-register faults stay physical: the single stuck bit,
+//! 1:1. This preserves the two properties the paper's accuracy
+//! experiment (Fig. 2) rests on: (a) a faulty PE corrupts *all*
+//! outputs it computes, and (b) operand corruption magnitude is large,
+//! collapsing accuracy as PER grows. DESIGN.md §2 documents the
+//! substitution.
+
+use super::ber::{BITS_PER_PE, REGISTER_WIDTHS};
+use crate::util::rng::Pcg32;
+
+/// Stuck-at corruption of one PE, expressed on its 32-bit accumulator.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StuckMask {
+    /// AND mask: bits stuck at 0 are cleared here.
+    pub and_mask: u32,
+    /// OR mask: bits stuck at 1 are set here.
+    pub or_mask: u32,
+}
+
+impl StuckMask {
+    /// The identity (healthy) mask.
+    pub const IDENTITY: StuckMask = StuckMask {
+        and_mask: u32::MAX,
+        or_mask: 0,
+    };
+
+    /// Apply to an accumulator value.
+    #[inline]
+    pub fn apply(&self, y: i32) -> i32 {
+        ((y as u32 & self.and_mask) | self.or_mask) as i32
+    }
+
+    /// Does this mask change anything at all?
+    pub fn is_corrupting(&self) -> bool {
+        self.and_mask != u32::MAX || self.or_mask != 0
+    }
+}
+
+/// Sample the stuck bits of a PE *known to be faulty* and reduce them to
+/// an accumulator [`StuckMask`].
+///
+/// `ber` conditions how many bits are stuck (given ≥ 1);
+/// `macs_per_output` = k·k·c of the layer, used to scale operand-bit
+/// faults to their accumulated significance.
+pub fn sample_stuck_mask(rng: &mut Pcg32, ber: f64, macs_per_output: u32) -> StuckMask {
+    // Rejection-sample the per-bit fault vector conditioned on ≥1 stuck
+    // bit. At the BERs in scope (≤1e-3) a faulty PE almost always has
+    // exactly one stuck bit, so force one uniformly-chosen bit first and
+    // add extras i.i.d. — this is the exact conditional distribution for
+    // the "which bits" marginal up to O(ber²).
+    let _ = macs_per_output; // magnitude is folded into the wide window
+    let forced = rng.below(BITS_PER_PE);
+    let mut and_mask = u32::MAX;
+    let mut or_mask = 0u32;
+    /// Accumulator bits an operand-register fault scrambles (8..31):
+    /// the low byte survives-ish, everything above is garbage.
+    const GARBAGE_WINDOW: u32 = 0xFFFF_FF00;
+    let mut apply_bit = |bit_idx: u32, rng: &mut Pcg32| {
+        let (reg, offset) = register_of(bit_idx);
+        match reg {
+            // operand / intermediate registers: the accumulated value
+            // is data-dependent garbage — wide random stuck pattern.
+            0 | 1 | 2 => {
+                let pattern = rng.next_u32() & GARBAGE_WINDOW;
+                if rng.bernoulli(0.5) {
+                    and_mask &= !pattern;
+                } else {
+                    or_mask |= pattern;
+                }
+            }
+            // accumulator bits map 1:1 (physically a stuck latch)
+            _ => {
+                if rng.bernoulli(0.5) {
+                    and_mask &= !(1u32 << offset); // stuck-at-0
+                } else {
+                    or_mask |= 1u32 << offset; // stuck-at-1
+                }
+            }
+        }
+    };
+    apply_bit(forced, rng);
+    for b in 0..BITS_PER_PE {
+        if b != forced && rng.bernoulli(ber) {
+            apply_bit(b, rng);
+        }
+    }
+    StuckMask { and_mask, or_mask }
+}
+
+/// Which register does absolute bit index `b` (0..64) live in, and at
+/// what offset within that register?
+fn register_of(b: u32) -> (usize, u32) {
+    let mut rem = b;
+    for (i, &w) in REGISTER_WIDTHS.iter().enumerate() {
+        if rem < w {
+            return (i, rem);
+        }
+        rem -= w;
+    }
+    unreachable!("bit index {b} exceeds {BITS_PER_PE}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identity_mask_is_noop() {
+        for v in [-5i32, 0, 123456, i32::MIN, i32::MAX] {
+            assert_eq!(StuckMask::IDENTITY.apply(v), v);
+        }
+        assert!(!StuckMask::IDENTITY.is_corrupting());
+    }
+
+    #[test]
+    fn register_of_partitions_all_bits() {
+        let mut counts = [0u32; 4];
+        for b in 0..BITS_PER_PE {
+            let (r, off) = register_of(b);
+            assert!(off < REGISTER_WIDTHS[r]);
+            counts[r] += 1;
+        }
+        assert_eq!(counts, REGISTER_WIDTHS);
+    }
+
+    #[test]
+    fn sampled_mask_always_corrupts() {
+        let mut rng = Pcg32::new(21, 0);
+        for _ in 0..1000 {
+            let m = sample_stuck_mask(&mut rng, 1e-3, 9 * 64);
+            assert!(m.is_corrupting());
+        }
+    }
+
+    #[test]
+    fn stuck_at_semantics() {
+        let m = StuckMask {
+            and_mask: !(1 << 5),
+            or_mask: 1 << 7,
+        };
+        let y = 0b0010_0000; // bit5 set
+        let out = m.apply(y);
+        assert_eq!(out & (1 << 5), 0, "stuck-at-0 cleared");
+        assert_ne!(out & (1 << 7), 0, "stuck-at-1 set");
+    }
+
+    #[test]
+    fn high_significance_bias_for_operand_faults() {
+        // With many MACs per output, corrupted accumulator bits should
+        // frequently be high-significance → large magnitude errors.
+        let mut rng = Pcg32::new(22, 0);
+        let mut high = 0;
+        let n = 2000;
+        for _ in 0..n {
+            let m = sample_stuck_mask(&mut rng, 1e-4, 3 * 3 * 64);
+            let bits = (!m.and_mask) | m.or_mask;
+            if bits >> 8 != 0 {
+                high += 1;
+            }
+        }
+        // operand+intermediate registers are 32/64 of the bits and all
+        // get shifted up by 8-ish; accumulator's own top bits add more.
+        assert!(high > n / 2, "only {high}/{n} high-significance corruptions");
+    }
+
+    #[test]
+    fn corruption_changes_values() {
+        let mut rng = Pcg32::new(23, 0);
+        let m = sample_stuck_mask(&mut rng, 1e-3, 576);
+        let mut changed = 0;
+        for v in [-1000i32, -1, 0, 1, 7, 1 << 20] {
+            if m.apply(v) != v {
+                changed += 1;
+            }
+        }
+        assert!(changed >= 1);
+    }
+}

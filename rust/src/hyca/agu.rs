@@ -1,0 +1,117 @@
+//! Address Generation Unit (AGU) — paper §IV-A/§IV-C: "with the
+//! coordinates [from the FPT], an address generation unit is used to
+//! generate the read addresses and instruct the DPPU to read the right
+//! input features and weights from the register files. Moreover, AGU
+//! also determines the addresses to the output buffer for the
+//! overlapped writes of the recomputed output features."
+//!
+//! Addressing scheme (output-stationary dataflow):
+//! * the IRF shadows the input-feature stream row-by-row → the inputs a
+//!   faulty PE `(r, c)` consumed live in IRF row `r`;
+//! * the WRF is written column-wise (one column of forwarded weights
+//!   per cycle) but read row-wise: the weights consumed by array column
+//!   `c` occupy WRF row `c`;
+//! * the output buffer holds one output feature per PE per iteration,
+//!   written a column at a time, so feature `(r, c)` of iteration `i`
+//!   lives at offset `i · R · C + c · R + r`.
+
+use crate::array::Dims;
+use crate::faults::Coord;
+
+/// Addresses for recomputing one faulty PE's output feature.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RecomputeAddrs {
+    /// IRF row holding the PE's input-feature stream.
+    pub irf_row: usize,
+    /// WRF row holding the PE's weight stream.
+    pub wrf_row: usize,
+    /// Output-buffer byte offset of the feature to overwrite
+    /// (features are 1 byte after requantisation).
+    pub obuf_offset: usize,
+    /// Byte-mask lane within the output-buffer word (the DPPU writes
+    /// with a byte mask so only the recomputed feature is updated).
+    pub obuf_lane: usize,
+}
+
+/// The address generation unit.
+#[derive(Debug, Clone, Copy)]
+pub struct Agu {
+    pub dims: Dims,
+    /// Output-buffer write-port width in bytes (one array column).
+    pub port_bytes: usize,
+}
+
+impl Agu {
+    pub fn new(dims: Dims) -> Self {
+        Self {
+            dims,
+            port_bytes: dims.rows,
+        }
+    }
+
+    /// Addresses for FPT entry `fault` during iteration `iteration`.
+    pub fn recompute_addrs(&self, fault: Coord, iteration: usize) -> RecomputeAddrs {
+        let (r, c) = (fault.row as usize, fault.col as usize);
+        assert!(r < self.dims.rows && c < self.dims.cols, "fault out of range");
+        let feature = c * self.dims.rows + r;
+        RecomputeAddrs {
+            irf_row: r,
+            wrf_row: c,
+            obuf_offset: iteration * self.dims.len() + feature,
+            obuf_lane: r % self.port_bytes,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const D: Dims = Dims::new(32, 32);
+
+    #[test]
+    fn addresses_are_structured() {
+        let agu = Agu::new(D);
+        let a = agu.recompute_addrs(Coord::new(5, 9), 0);
+        assert_eq!(a.irf_row, 5);
+        assert_eq!(a.wrf_row, 9);
+        assert_eq!(a.obuf_offset, 9 * 32 + 5);
+        assert_eq!(a.obuf_lane, 5);
+    }
+
+    #[test]
+    fn iteration_strides_whole_array() {
+        let agu = Agu::new(D);
+        let a0 = agu.recompute_addrs(Coord::new(0, 0), 0);
+        let a1 = agu.recompute_addrs(Coord::new(0, 0), 1);
+        assert_eq!(a1.obuf_offset - a0.obuf_offset, 1024);
+    }
+
+    #[test]
+    fn offsets_are_unique_per_pe_within_iteration() {
+        let agu = Agu::new(Dims::new(8, 8));
+        let mut seen = std::collections::HashSet::new();
+        for r in 0..8 {
+            for c in 0..8 {
+                let a = agu.recompute_addrs(Coord::new(r, c), 3);
+                assert!(seen.insert(a.obuf_offset), "collision at ({r},{c})");
+            }
+        }
+        assert_eq!(seen.len(), 64);
+    }
+
+    #[test]
+    fn lane_stays_within_port() {
+        let agu = Agu::new(Dims::new(16, 4));
+        for r in 0..16 {
+            let a = agu.recompute_addrs(Coord::new(r, 2), 0);
+            assert!(a.obuf_lane < agu.port_bytes);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn oob_fault_panics() {
+        Agu::new(Dims::new(4, 4)).recompute_addrs(Coord::new(4, 0), 0);
+    }
+}

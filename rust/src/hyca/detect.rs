@@ -1,0 +1,212 @@
+//! Runtime fault detection with HyCA (paper §IV-D, Fig. 8).
+//!
+//! One DPPU group is reserved as a scanner. For each PE `(r, c)` of the
+//! 2-D array, the checking-list buffer (CLB) captures the PE's *base
+//! accumulated result* (BAR) and the *accumulated result* `S` cycles
+//! later (AR), where `S` is the group width. The reserved group then
+//! recomputes the same `S`-term partial dot product (PR) from the
+//! register files and compares `AR == BAR + PR`; a mismatch flags the
+//! PE and its coordinates are pushed into the FPT.
+//!
+//! Timing model (paper): the scanner checks one PE per cycle after a
+//! `Col`-cycle pipeline delay, so a full-array scan takes
+//! `Row·Col + Col` cycles — independent of the group width `S`
+//! (a wider group checks a wider partial result at the same rate).
+//! Table I asks, per network layer, whether the layer's runtime covers
+//! a full scan.
+//!
+//! The detector compares *values*, not ground truth: a stuck bit whose
+//! stuck value coincides with the correct computation this window
+//! produces no mismatch and escapes the scan (caught by a later scan
+//! with different data) — the simulation below models exactly that.
+
+use crate::array::Dims;
+use crate::faults::stuckat::StuckMask;
+use crate::faults::{Coord, FaultConfig};
+use crate::util::rng::Pcg32;
+
+/// Cycles for one full scan of the array: `Row·Col + Col` (paper §IV-D).
+pub fn scan_cycles(dims: Dims) -> usize {
+    dims.rows * dims.cols + dims.cols
+}
+
+/// CLB size in bytes: `4 · W · Col` where `W` is the accumulator width
+/// in bytes (ping-pong pairs of (BAR, AR) for `Col` in-flight checks).
+pub fn clb_bytes(dims: Dims, acc_bytes: usize) -> usize {
+    4 * acc_bytes * dims.cols
+}
+
+/// Result of scanning one array with the detection module.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ScanReport {
+    /// PEs flagged faulty, in scan order.
+    pub detected: Vec<Coord>,
+    /// Faulty PEs that escaped this scan (stuck value coincided).
+    pub escaped: Vec<Coord>,
+    /// Cycle at which each detection fired (scan-order position + Col
+    /// compare latency).
+    pub detect_cycle: Vec<usize>,
+    /// Total scan duration in cycles.
+    pub total_cycles: usize,
+}
+
+/// Functional + timing simulation of one full detection scan.
+///
+/// `masks[i]` is the stuck-at corruption of `faults.faulty()[i]`;
+/// the partial sums the PEs accumulate are drawn from `rng` (they model
+/// the live layer data streaming through the array during the scan).
+pub fn simulate_scan(
+    faults: &FaultConfig,
+    masks: &[StuckMask],
+    group_width: usize,
+    rng: &mut Pcg32,
+) -> ScanReport {
+    assert_eq!(faults.count(), masks.len());
+    let dims = faults.dims;
+    let mut detected = Vec::new();
+    let mut escaped = Vec::new();
+    let mut detect_cycle = Vec::new();
+    let mut pos = 0usize;
+    for r in 0..dims.rows {
+        for c in 0..dims.cols {
+            // BAR: accumulator before the checked window; PR: the
+            // S-term partial the reserved DPPU group recomputes.
+            let bar: i32 = rng.next_u32() as i32 >> 8; // plausible mid-layer acc
+            let pr: i32 = (0..group_width)
+                .map(|_| ((rng.next_u32() as i32) >> 24) * ((rng.next_u32() as i32) >> 24))
+                .sum();
+            let true_ar = bar.wrapping_add(pr);
+            let fault_idx = faults
+                .faulty()
+                .iter()
+                .position(|f| (f.row as usize, f.col as usize) == (r, c));
+            let observed_ar = match fault_idx {
+                Some(i) => masks[i].apply(true_ar),
+                None => true_ar,
+            };
+            // detector compares AR against BAR + PR (DPPU is golden)
+            let mismatch = observed_ar != true_ar;
+            if let Some(i) = fault_idx {
+                if mismatch {
+                    detected.push(faults.faulty()[i]);
+                    detect_cycle.push(pos + dims.cols);
+                } else {
+                    escaped.push(faults.faulty()[i]);
+                }
+            } else {
+                debug_assert!(!mismatch, "healthy PE can never mismatch");
+            }
+            pos += 1;
+        }
+    }
+    ScanReport {
+        detected,
+        escaped,
+        detect_cycle,
+        total_cycles: scan_cycles(dims),
+    }
+}
+
+/// Table-I metric: of the given per-layer runtimes (cycles), how many
+/// fully cover one scan of the array?
+pub fn layers_covering_scan(dims: Dims, layer_cycles: &[u64]) -> usize {
+    let scan = scan_cycles(dims) as u64;
+    layer_cycles.iter().filter(|&&c| c >= scan).count()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scan_cycle_formula() {
+        assert_eq!(scan_cycles(Dims::new(32, 32)), 1056);
+        assert_eq!(scan_cycles(Dims::new(16, 16)), 272);
+        assert_eq!(scan_cycles(Dims::new(128, 128)), 16512);
+    }
+
+    #[test]
+    fn clb_is_quarter_of_irf_for_paper_config() {
+        // paper §V-F: CLB = Col·W·4 bytes = 32·4·4 = 512 B, i.e. 1/4 of
+        // the 2 KB input register file.
+        let clb = clb_bytes(Dims::new(32, 32), 4);
+        assert_eq!(clb, 512);
+        let irf_bytes = 2 * 32 * 32; // 2KB
+        assert_eq!(irf_bytes / clb, 4);
+    }
+
+    #[test]
+    fn healthy_array_detects_nothing() {
+        let dims = Dims::new(8, 8);
+        let mut rng = Pcg32::new(41, 0);
+        let rep = simulate_scan(&FaultConfig::healthy(dims), &[], 8, &mut rng);
+        assert!(rep.detected.is_empty());
+        assert!(rep.escaped.is_empty());
+        assert_eq!(rep.total_cycles, 72);
+    }
+
+    #[test]
+    fn corrupting_faults_are_detected_with_correct_latency() {
+        let dims = Dims::new(8, 8);
+        let faults = FaultConfig::new(dims, vec![Coord::new(2, 3)]);
+        // a mask that always perturbs: force a mid bit to flip both ways
+        let mask = StuckMask { and_mask: !(1 << 30), or_mask: 1 << 29 };
+        let mut rng = Pcg32::new(42, 0);
+        let rep = simulate_scan(&faults, &[mask], 8, &mut rng);
+        // detection is probabilistic in principle, but this mask flips
+        // bit 29 or 30 unless the value already matches — overwhelming
+        if rep.detected.len() == 1 {
+            // scan order position of (2,3) on 8×8 = 2*8+3 = 19; +Col=8
+            assert_eq!(rep.detect_cycle, vec![19 + 8]);
+        } else {
+            assert_eq!(rep.escaped.len(), 1);
+        }
+    }
+
+    #[test]
+    fn coincident_stuck_value_escapes() {
+        // stuck-at-1 on a bit that is already 1 in the observed window
+        // never mismatches: mask with or_mask only and and_mask = MAX
+        // escapes whenever the true AR already has that bit set. Use a
+        // deterministic check by scanning many seeds and requiring at
+        // least one escape and at least one detection.
+        let dims = Dims::new(4, 4);
+        let faults = FaultConfig::new(dims, vec![Coord::new(1, 1)]);
+        let mask = StuckMask { and_mask: u32::MAX, or_mask: 1 << 4 };
+        let (mut esc, mut det) = (0, 0);
+        for seed in 0..200 {
+            let mut rng = Pcg32::new(seed, 0);
+            let rep = simulate_scan(&faults, &[mask], 4, &mut rng);
+            esc += rep.escaped.len();
+            det += rep.detected.len();
+        }
+        assert!(esc > 0, "some scans must escape");
+        assert!(det > 0, "some scans must detect");
+    }
+
+    #[test]
+    fn multiple_faults_partition_into_detected_or_escaped() {
+        let dims = Dims::new(16, 16);
+        let mut rng = Pcg32::new(43, 0);
+        let cfg = crate::faults::random::sample_exact(&mut rng, dims, 10);
+        let masks: Vec<StuckMask> = (0..10)
+            .map(|_| crate::faults::stuckat::sample_stuck_mask(&mut rng, 1e-3, 576))
+            .collect();
+        let rep = simulate_scan(&cfg, &masks, 8, &mut rng);
+        assert_eq!(rep.detected.len() + rep.escaped.len(), 10);
+        assert_eq!(rep.detected.len(), rep.detect_cycle.len());
+        // detections are in scan (row-major) order
+        let mut last = 0;
+        for &cy in &rep.detect_cycle {
+            assert!(cy >= last);
+            last = cy;
+        }
+    }
+
+    #[test]
+    fn coverage_metric_counts_layers() {
+        let dims = Dims::new(32, 32); // scan = 1056
+        assert_eq!(layers_covering_scan(dims, &[2000, 1056, 1000, 50_000]), 3);
+        assert_eq!(layers_covering_scan(dims, &[]), 0);
+    }
+}

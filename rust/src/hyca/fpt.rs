@@ -1,0 +1,157 @@
+//! Fault PE Table (FPT) — paper §IV-C: "FPT keeps the coordinates of
+//! the faulty PEs that will be repaired by the DPPU. As the maximum
+//! number of faulty PEs that can be tolerated without performance
+//! penalty is determined by the DPPU size, FPT is configured with
+//! DPPU_size entries."
+//!
+//! Each entry stores `⌈log2 rows⌉ + ⌈log2 cols⌉` bits (5 + 5 for the
+//! 32 × 32 array ⇒ the paper's "32 × 10 bits" table). Entries are kept
+//! sorted by `(col, row)` so the AGU walks them in left-priority order
+//! and the degradation policy falls out of table order.
+
+use crate::array::Dims;
+use crate::faults::Coord;
+
+/// The fault-PE table.
+#[derive(Debug, Clone)]
+pub struct FaultPeTable {
+    capacity: usize,
+    dims: Dims,
+    entries: Vec<Coord>,
+}
+
+impl FaultPeTable {
+    /// New table sized to the DPPU (capacity = DPPU size).
+    pub fn new(capacity: usize, dims: Dims) -> Self {
+        Self {
+            capacity,
+            dims,
+            entries: Vec::with_capacity(capacity),
+        }
+    }
+
+    /// Insert a faulty-PE coordinate (e.g. from power-on self-test or
+    /// the runtime detector). Returns `false` if the table is full or
+    /// the coordinate is already present (idempotent update).
+    pub fn insert(&mut self, c: Coord) -> bool {
+        assert!(
+            (c.row as usize) < self.dims.rows && (c.col as usize) < self.dims.cols,
+            "FPT coordinate out of range"
+        );
+        match self.entries.binary_search_by_key(&(c.col, c.row), |e| (e.col, e.row)) {
+            Ok(_) => false,
+            Err(pos) => {
+                if self.entries.len() >= self.capacity {
+                    return false;
+                }
+                self.entries.insert(pos, c);
+                true
+            }
+        }
+    }
+
+    /// Is a PE registered for repair?
+    pub fn contains(&self, c: Coord) -> bool {
+        self.entries
+            .binary_search_by_key(&(c.col, c.row), |e| (e.col, e.row))
+            .is_ok()
+    }
+
+    /// Entries in left-priority (col-major) order.
+    pub fn entries(&self) -> &[Coord] {
+        &self.entries
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn is_full(&self) -> bool {
+        self.entries.len() >= self.capacity
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Clear (new self-test cycle).
+    pub fn clear(&mut self) {
+        self.entries.clear();
+    }
+
+    /// Storage bits of the table: capacity × (row bits + col bits).
+    /// For the paper's 32-entry table on 32 × 32: 32 × 10 bits.
+    pub fn storage_bits(&self) -> usize {
+        let row_bits = usize::BITS - (self.dims.rows - 1).max(1).leading_zeros();
+        let col_bits = usize::BITS - (self.dims.cols - 1).max(1).leading_zeros();
+        self.capacity * (row_bits + col_bits) as usize
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn table() -> FaultPeTable {
+        FaultPeTable::new(4, Dims::new(32, 32))
+    }
+
+    #[test]
+    fn insert_contains_and_order() {
+        let mut t = table();
+        assert!(t.insert(Coord::new(3, 7)));
+        assert!(t.insert(Coord::new(1, 2)));
+        assert!(t.insert(Coord::new(9, 2)));
+        assert!(t.contains(Coord::new(3, 7)));
+        assert!(!t.contains(Coord::new(0, 0)));
+        // col-major, row-minor order
+        assert_eq!(
+            t.entries(),
+            &[Coord::new(1, 2), Coord::new(9, 2), Coord::new(3, 7)]
+        );
+    }
+
+    #[test]
+    fn duplicate_insert_rejected() {
+        let mut t = table();
+        assert!(t.insert(Coord::new(5, 5)));
+        assert!(!t.insert(Coord::new(5, 5)));
+        assert_eq!(t.len(), 1);
+    }
+
+    #[test]
+    fn capacity_enforced() {
+        let mut t = table();
+        for i in 0..4 {
+            assert!(t.insert(Coord::new(i, 0)));
+        }
+        assert!(t.is_full());
+        assert!(!t.insert(Coord::new(10, 10)));
+        assert_eq!(t.len(), 4);
+    }
+
+    #[test]
+    fn paper_storage_is_32x10_bits() {
+        let t = FaultPeTable::new(32, Dims::new(32, 32));
+        assert_eq!(t.storage_bits(), 320);
+    }
+
+    #[test]
+    fn clear_resets() {
+        let mut t = table();
+        t.insert(Coord::new(1, 1));
+        t.clear();
+        assert!(t.is_empty());
+        assert!(!t.contains(Coord::new(1, 1)));
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn oob_panics() {
+        table().insert(Coord::new(32, 0));
+    }
+}

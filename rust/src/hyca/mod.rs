@@ -1,0 +1,24 @@
+//! HyCA micro-architecture (paper §IV, Figs. 4–8).
+//!
+//! The components added to the baseline DLA:
+//!
+//! * [`dppu`] — the dot-production processing unit (unified vs grouped
+//!   structure, ring-redundant multipliers/adders, repair capacity);
+//! * [`fpt`] — the fault-PE table holding the coordinates the DPPU
+//!   repairs;
+//! * [`agu`] — address generation for the register files and the
+//!   overlapped output-buffer writes;
+//! * [`regfile`] — the banked ping-pong weight/input register files
+//!   with circular-shift read access;
+//! * [`schedule`] — the cycle-level recompute dataflow of §IV-B (the
+//!   six-step iteration walkthrough of Fig. 5), with the conflict- and
+//!   deadline-freedom checks;
+//! * [`detect`] — the runtime fault-detection module (checking-list
+//!   buffer + sequential PE scan) of §IV-D.
+
+pub mod agu;
+pub mod detect;
+pub mod dppu;
+pub mod fpt;
+pub mod regfile;
+pub mod schedule;

@@ -1,0 +1,237 @@
+//! Weight / Input Register Files (WRF / IRF) — paper §IV-C2, Fig. 7.
+//!
+//! The register files shadow the operand streams consumed by the 2-D
+//! array so the DPPU can replay them `D = Col` cycles later:
+//!
+//! * **Ping-pong**: two banks of `D × Row` 8-bit entries each (total
+//!   depth `2·D·Row`). While the array fills bank *ping* (one row-wide
+//!   vector per cycle, `D` cycles per window), the DPPU drains bank
+//!   *pong* holding the previous window. A bank's content is therefore
+//!   valid for exactly one window after it was written; reads after
+//!   that are *stale* and the model rejects them — this is the deadline
+//!   that bounds DPPU capacity.
+//! * **Banked + circular shift**: a row of `D` entries is split into
+//!   `D / group_size` segments, one bank per DPPU compute group, each
+//!   with a single read port. A group needing a segment other than its
+//!   home segment rotates the row's circular shift register; the model
+//!   charges one cycle per rotation step, which is where the grouped
+//!   DPPU's `Col / group_size`-cycle per-fault latency comes from.
+
+/// Error returned for reads that violate the ping-pong retention window.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, thiserror::Error)]
+pub enum RfError {
+    #[error("window {read} is stale: write window is already {current}")]
+    Stale { read: u64, current: u64 },
+    #[error("window {read} has not been written yet (current {current})")]
+    Future { read: u64, current: u64 },
+}
+
+/// A banked, ping-pong, circular-shift register file (models both WRF
+/// and IRF — they are structurally identical, 8-bit entries).
+#[derive(Debug, Clone)]
+pub struct BankedPingPong {
+    pub rows: usize,
+    /// Entries per row per bank = D = Col of the array.
+    pub depth: usize,
+    /// DPPU compute-group width; a read port returns this many entries.
+    pub group_size: usize,
+    /// data[bank][row * depth + slot]
+    data: [Vec<u8>; 2],
+    /// Which window each bank currently holds (u64::MAX = empty).
+    holds: [u64; 2],
+    /// Current write window.
+    window: u64,
+    /// Per-row rotation cursor of the circular shift register.
+    cursor: Vec<usize>,
+}
+
+impl BankedPingPong {
+    /// Create a register file; `depth` must be a multiple of
+    /// `group_size` (the banked layout requires whole segments).
+    pub fn new(rows: usize, depth: usize, group_size: usize) -> Self {
+        assert!(group_size > 0 && depth % group_size == 0,
+            "depth {depth} must be a positive multiple of group size {group_size}");
+        Self {
+            rows,
+            depth,
+            group_size,
+            data: [vec![0; rows * depth], vec![0; rows * depth]],
+            holds: [u64::MAX, u64::MAX],
+            window: 0,
+            cursor: vec![0; rows],
+        }
+    }
+
+    /// Total storage in bits (paper: 2 × 32 × 32 × 8 bits = 2 KB for
+    /// the default configuration).
+    pub fn storage_bits(&self) -> usize {
+        2 * self.rows * self.depth * 8
+    }
+
+    /// Segments per row (= read latency bound of the shift register).
+    pub fn segments(&self) -> usize {
+        self.depth / self.group_size
+    }
+
+    /// Write one entry of the current window. `slot` is the cycle
+    /// offset within the window (0..depth).
+    pub fn write(&mut self, row: usize, slot: usize, value: u8) {
+        assert!(row < self.rows && slot < self.depth);
+        let bank = (self.window % 2) as usize;
+        self.holds[bank] = self.window;
+        self.data[bank][row * self.depth + slot] = value;
+    }
+
+    /// Close the current write window and open the next: the bank
+    /// holding window `w − 1` becomes the DPPU's read bank; the bank
+    /// holding `w − 2` (if any) is invalidated for overwrite.
+    pub fn advance_window(&mut self) {
+        self.window += 1;
+        self.cursor.fill(0);
+    }
+
+    /// Current write window index.
+    pub fn window(&self) -> u64 {
+        self.window
+    }
+
+    /// Read one entry written during `window` (must be the previous
+    /// window or the in-flight one — anything older is gone).
+    pub fn read(&self, window: u64, row: usize, slot: usize) -> Result<u8, RfError> {
+        assert!(row < self.rows && slot < self.depth);
+        if window > self.window {
+            return Err(RfError::Future { read: window, current: self.window });
+        }
+        let bank = (window % 2) as usize;
+        if self.holds[bank] != window {
+            return Err(RfError::Stale { read: window, current: self.window });
+        }
+        Ok(self.data[bank][row * self.depth + slot])
+    }
+
+    /// Read a whole segment of a row through the group's single port,
+    /// rotating the circular shift register as needed. Returns the
+    /// segment data and the access latency in cycles (1 for the segment
+    /// under the cursor, +1 per rotation step).
+    pub fn read_segment(
+        &mut self,
+        window: u64,
+        row: usize,
+        segment: usize,
+    ) -> Result<(Vec<u8>, usize), RfError> {
+        assert!(segment < self.segments());
+        let segs = self.segments();
+        let dist = (segment + segs - self.cursor[row]) % segs;
+        self.cursor[row] = (segment + 1) % segs; // cursor rests after the read
+        let base = segment * self.group_size;
+        let mut out = Vec::with_capacity(self.group_size);
+        for i in 0..self.group_size {
+            out.push(self.read(window, row, base + i)?);
+        }
+        Ok((out, 1 + dist))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rf() -> BankedPingPong {
+        BankedPingPong::new(4, 32, 8)
+    }
+
+    #[test]
+    fn paper_storage_is_2kb() {
+        let wrf = BankedPingPong::new(32, 32, 8);
+        assert_eq!(wrf.storage_bits(), 2 * 1024 * 8);
+    }
+
+    #[test]
+    fn write_then_read_same_and_next_window() {
+        let mut rf = rf();
+        rf.write(1, 5, 0xAB);
+        assert_eq!(rf.read(0, 1, 5), Ok(0xAB));
+        rf.advance_window(); // DPPU drains window 0 while window 1 fills
+        assert_eq!(rf.read(0, 1, 5), Ok(0xAB));
+    }
+
+    #[test]
+    fn read_two_windows_late_is_stale() {
+        let mut rf = rf();
+        rf.write(0, 0, 7);
+        rf.advance_window();
+        rf.write(0, 0, 8); // window 1 → bank 1
+        rf.advance_window();
+        rf.write(0, 0, 9); // window 2 overwrites bank 0
+        assert_eq!(
+            rf.read(0, 0, 0),
+            Err(RfError::Stale { read: 0, current: 2 })
+        );
+        assert_eq!(rf.read(2, 0, 0), Ok(9));
+    }
+
+    #[test]
+    fn future_window_rejected() {
+        let rf = rf();
+        assert_eq!(
+            rf.read(3, 0, 0),
+            Err(RfError::Future { read: 3, current: 0 })
+        );
+    }
+
+    #[test]
+    fn ping_pong_banks_alternate() {
+        let mut rf = rf();
+        rf.write(2, 3, 1);
+        rf.advance_window();
+        rf.write(2, 3, 2);
+        // both windows readable simultaneously from different banks
+        assert_eq!(rf.read(0, 2, 3), Ok(1));
+        assert_eq!(rf.read(1, 2, 3), Ok(2));
+    }
+
+    #[test]
+    fn segment_read_returns_right_slice_and_latency() {
+        let mut rf = rf();
+        for slot in 0..32 {
+            rf.write(0, slot, slot as u8);
+        }
+        // home segment: latency 1
+        let (seg0, lat0) = rf.read_segment(0, 0, 0).unwrap();
+        assert_eq!(seg0, (0..8).collect::<Vec<u8>>());
+        assert_eq!(lat0, 1);
+        // cursor now at segment 1 → segment 3 needs 2 rotations
+        let (seg3, lat3) = rf.read_segment(0, 0, 3).unwrap();
+        assert_eq!(seg3, (24..32).collect::<Vec<u8>>());
+        assert_eq!(lat3, 3);
+        // latency never exceeds the segment count
+        for s in 0..4 {
+            let (_, lat) = rf.read_segment(0, 0, s).unwrap();
+            assert!(lat <= rf.segments());
+        }
+    }
+
+    #[test]
+    fn full_row_drain_costs_segments_cycles_when_sequential() {
+        // A grouped-DPPU group drains a Col-wide dot product in
+        // Col/group_size sequential segment reads — total latency =
+        // segments when walked in order (this is the 4-cycle figure for
+        // Col=32, group=8 in the paper).
+        let mut rf = rf();
+        for slot in 0..32 {
+            rf.write(0, slot, slot as u8);
+        }
+        let mut total = 0;
+        for s in 0..rf.segments() {
+            let (_, lat) = rf.read_segment(0, 0, s).unwrap();
+            total += lat;
+        }
+        assert_eq!(total, rf.segments());
+    }
+
+    #[test]
+    #[should_panic(expected = "multiple")]
+    fn depth_must_be_multiple_of_group() {
+        BankedPingPong::new(4, 30, 8);
+    }
+}

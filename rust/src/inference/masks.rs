@@ -1,0 +1,258 @@
+//! Build the per-layer stuck-at mask tensors the exported HLO consumes
+//! from a fault configuration + the output-stationary mapping.
+//!
+//! Layouts (fixed by `python/compile/model.py::mask_shapes`):
+//! * conv layer `i`: `(OH·OW, OC)` — element `(sp, oc)` corrupts the
+//!   output feature computed on PE `conv_pe(dims, oc, sp)`;
+//! * fc: `(batch, 10)` — element `(b, n)` corrupts output `n` on PE
+//!   `fc_pe(dims, n)` (identical for every batch row: same silicon).
+//!
+//! Identity = `(and = -1 (0xFFFF_FFFF), or = 0)`.
+
+use crate::array::mapping;
+#[cfg(test)]
+use crate::array::Dims;
+use crate::faults::stuckat::{sample_stuck_mask, StuckMask};
+use crate::faults::FaultConfig;
+use crate::runtime::I32Tensor;
+use crate::util::rng::Pcg32;
+
+/// One layer's (and, or) mask pair in export layout.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct MaskPair {
+    pub rows: usize,
+    pub cols: usize,
+    pub and_mask: Vec<i32>,
+    pub or_mask: Vec<i32>,
+}
+
+impl MaskPair {
+    /// Identity masks of the given shape.
+    pub fn identity(rows: usize, cols: usize) -> Self {
+        Self {
+            rows,
+            cols,
+            and_mask: vec![-1; rows * cols],
+            or_mask: vec![0; rows * cols],
+        }
+    }
+
+    /// Masks at element (r, c).
+    pub fn at(&self, r: usize, c: usize) -> (i32, i32) {
+        let i = r * self.cols + c;
+        (self.and_mask[i], self.or_mask[i])
+    }
+
+    fn set(&mut self, r: usize, c: usize, m: StuckMask) {
+        let i = r * self.cols + c;
+        self.and_mask[i] = m.and_mask as i32;
+        self.or_mask[i] = m.or_mask as i32;
+    }
+
+    /// Any corrupting element?
+    pub fn is_identity(&self) -> bool {
+        self.and_mask.iter().all(|&v| v == -1) && self.or_mask.iter().all(|&v| v == 0)
+    }
+}
+
+/// The full mask set for one forward pass (3 convs + fc).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LayerMasks {
+    pub conv: [MaskPair; 3],
+    pub fc: MaskPair,
+}
+
+/// Geometry of the exported model's layers on the simulated array.
+#[derive(Debug, Clone, Copy)]
+pub struct ModelGeometry {
+    pub batch: usize,
+    /// (OH·OW, OC) per conv layer.
+    pub conv_shapes: [(usize, usize); 3],
+    pub classes: usize,
+}
+
+impl Default for ModelGeometry {
+    fn default() -> Self {
+        Self {
+            batch: 16,
+            conv_shapes: [(256, 8), (64, 16), (16, 16)],
+            classes: 10,
+        }
+    }
+}
+
+impl LayerMasks {
+    /// All-healthy masks.
+    pub fn identity(g: &ModelGeometry) -> Self {
+        Self {
+            conv: [
+                MaskPair::identity(g.conv_shapes[0].0, g.conv_shapes[0].1),
+                MaskPair::identity(g.conv_shapes[1].0, g.conv_shapes[1].1),
+                MaskPair::identity(g.conv_shapes[2].0, g.conv_shapes[2].1),
+            ],
+            fc: MaskPair::identity(g.batch, g.classes),
+        }
+    }
+
+    /// Derive masks from a fault configuration: each faulty PE gets a
+    /// sampled bit-level stuck pattern (deterministic in `seed`), and
+    /// every output feature mapped onto it is corrupted accordingly.
+    ///
+    /// `repaired`: PEs whose recompute the DPPU covers — their masks
+    /// stay identity (the DPPU overwrites their outputs; this is the
+    /// functional effect of HyCA repair on the model).
+    pub fn from_faults(
+        g: &ModelGeometry,
+        faults: &FaultConfig,
+        repaired: &dyn Fn(usize, usize) -> bool,
+        ber: f64,
+        seed: u64,
+    ) -> Self {
+        let mut out = Self::identity(g);
+        let dims = faults.dims;
+        // one stuck pattern per faulty PE, stable across layers
+        let pe_masks: Vec<(usize, usize, StuckMask)> = faults
+            .faulty()
+            .iter()
+            .enumerate()
+            .map(|(i, c)| {
+                let mut rng = Pcg32::split(seed, i as u64);
+                // macs/output of the deepest layer dominates; use 3·3·16
+                (
+                    c.row as usize,
+                    c.col as usize,
+                    sample_stuck_mask(&mut rng, ber, 144),
+                )
+            })
+            .collect();
+        for (r, c, m) in &pe_masks {
+            if repaired(*r, *c) {
+                continue;
+            }
+            for layer in 0..3 {
+                let (spatial, oc_total) = g.conv_shapes[layer];
+                // outputs of this PE: oc ≡ c (mod cols), sp ≡ r (mod rows)
+                let mut oc = *c;
+                while oc < oc_total {
+                    let mut sp = *r;
+                    while sp < spatial {
+                        debug_assert_eq!(mapping::conv_pe(dims, oc, sp), (*r, *c));
+                        out.conv[layer].set(sp, oc, *m);
+                        sp += dims.rows;
+                    }
+                    oc += dims.cols;
+                }
+            }
+            // fc: column 0 only
+            if *c == 0 {
+                let mut n = *r;
+                while n < g.classes {
+                    for b in 0..g.batch {
+                        out.fc.set(b, n, *m);
+                    }
+                    n += dims.rows;
+                }
+            }
+        }
+        out
+    }
+
+    /// Flatten into runtime input tensors, in the exported order
+    /// (and1, or1, and2, or2, and3, or3, andfc, orfc).
+    pub fn to_tensors(&self) -> Vec<I32Tensor> {
+        let mut v = Vec::with_capacity(8);
+        for mp in self.conv.iter().chain(std::iter::once(&self.fc)) {
+            v.push(I32Tensor::new(
+                vec![mp.rows, mp.cols],
+                mp.and_mask.clone(),
+            ));
+            v.push(I32Tensor::new(vec![mp.rows, mp.cols], mp.or_mask.clone()));
+        }
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::faults::Coord;
+
+    fn geometry() -> ModelGeometry {
+        ModelGeometry::default()
+    }
+
+    #[test]
+    fn identity_masks_are_identity() {
+        let m = LayerMasks::identity(&geometry());
+        assert!(m.conv.iter().all(|c| c.is_identity()));
+        assert!(m.fc.is_identity());
+        let tensors = m.to_tensors();
+        assert_eq!(tensors.len(), 8);
+        assert_eq!(tensors[0].shape, vec![256, 8]);
+        assert_eq!(tensors[7].shape, vec![16, 10]);
+    }
+
+    #[test]
+    fn healthy_config_yields_identity() {
+        let g = geometry();
+        let faults = FaultConfig::healthy(Dims::PAPER);
+        let m = LayerMasks::from_faults(&g, &faults, &|_, _| false, 1e-4, 7);
+        assert_eq!(m, LayerMasks::identity(&g));
+    }
+
+    #[test]
+    fn faulty_pe_corrupts_exactly_its_mapped_outputs() {
+        let g = geometry();
+        let dims = Dims::PAPER;
+        let faults = FaultConfig::new(dims, vec![Coord::new(3, 5)]);
+        let m = LayerMasks::from_faults(&g, &faults, &|_, _| false, 1e-4, 7);
+        for layer in 0..3 {
+            let (spatial, oc_total) = g.conv_shapes[layer];
+            for sp in 0..spatial {
+                for oc in 0..oc_total {
+                    let expect = mapping::conv_pe(dims, oc, sp) == (3, 5);
+                    let got = m.conv[layer].at(sp, oc) != (-1, 0);
+                    assert_eq!(got, expect, "layer {layer} sp {sp} oc {oc}");
+                }
+            }
+        }
+        // PE col 5 ≠ 0 → fc untouched
+        assert!(m.fc.is_identity());
+    }
+
+    #[test]
+    fn fc_corruption_from_column_zero() {
+        let g = geometry();
+        let dims = Dims::PAPER;
+        let faults = FaultConfig::new(dims, vec![Coord::new(4, 0)]);
+        let m = LayerMasks::from_faults(&g, &faults, &|_, _| false, 1e-4, 7);
+        for b in 0..g.batch {
+            assert_ne!(m.fc.at(b, 4), (-1, 0));
+            assert_eq!(m.fc.at(b, 3), (-1, 0));
+        }
+    }
+
+    #[test]
+    fn repaired_pes_stay_identity() {
+        let g = geometry();
+        let dims = Dims::PAPER;
+        let faults = FaultConfig::new(dims, vec![Coord::new(3, 5), Coord::new(7, 9)]);
+        let all = LayerMasks::from_faults(&g, &faults, &|_, _| false, 1e-4, 7);
+        let repaired = LayerMasks::from_faults(&g, &faults, &|r, c| (r, c) == (3, 5), 1e-4, 7);
+        assert_ne!(all, repaired);
+        // with both repaired → identity
+        let full = LayerMasks::from_faults(&g, &faults, &|_, _| true, 1e-4, 7);
+        assert_eq!(full, LayerMasks::identity(&g));
+    }
+
+    #[test]
+    fn masks_deterministic_in_seed() {
+        let g = geometry();
+        let faults = FaultConfig::new(Dims::PAPER, vec![Coord::new(1, 1)]);
+        let a = LayerMasks::from_faults(&g, &faults, &|_, _| false, 1e-4, 7);
+        let b = LayerMasks::from_faults(&g, &faults, &|_, _| false, 1e-4, 7);
+        let c = LayerMasks::from_faults(&g, &faults, &|_, _| false, 1e-4, 8);
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+    }
+}

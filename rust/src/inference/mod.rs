@@ -1,0 +1,198 @@
+//! Functional inference pipeline: run the AOT-compiled quantized CNN
+//! on the (simulated) faulty DLA and measure prediction accuracy —
+//! the Fig. 2 experiment and the end-to-end driver.
+//!
+//! Responsibilities:
+//! * parse `artifacts/model_params.txt` (quantized weights) and
+//!   `artifacts/eval_set.bin` (held-out images + labels);
+//! * derive per-layer stuck-at mask tensors from a [`FaultConfig`] via
+//!   the output-stationary mapping ([`crate::array::mapping`]) — the
+//!   exact inputs the exported HLO expects;
+//! * evaluate accuracy through the PJRT runtime, healthy / faulty /
+//!   HyCA-repaired;
+//! * provide a bit-exact rust oracle of the same forward pass
+//!   ([`oracle_logits`]) used by `rust/tests/runtime_e2e.rs` to verify
+//!   the HLO path end to end.
+
+pub mod masks;
+pub mod params;
+
+use anyhow::{Context, Result};
+use std::path::Path;
+
+use crate::runtime::{I32Tensor, LoadedModule, Runtime};
+
+pub use masks::LayerMasks;
+pub use params::{ModelParams, EVAL_MAGIC};
+
+/// The held-out evaluation set.
+#[derive(Debug, Clone)]
+pub struct EvalSet {
+    pub images: Vec<Vec<i8>>, // each 1·16·16
+    pub labels: Vec<i32>,
+    pub chw: (usize, usize, usize),
+}
+
+impl EvalSet {
+    /// Parse `eval_set.bin` (see python/compile/aot.py for the format).
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let bytes = std::fs::read(path.as_ref())
+            .with_context(|| format!("reading {}", path.as_ref().display()))?;
+        anyhow::ensure!(bytes.len() > 24 && &bytes[..8] == EVAL_MAGIC, "bad magic");
+        let rd = |o: usize| {
+            u32::from_le_bytes(bytes[o..o + 4].try_into().unwrap()) as usize
+        };
+        let (n, c, h, w) = (rd(8), rd(12), rd(16), rd(20));
+        let img_len = c * h * w;
+        let img_base = 24;
+        let lbl_base = img_base + n * img_len;
+        anyhow::ensure!(bytes.len() == lbl_base + n * 4, "truncated eval set");
+        let images = (0..n)
+            .map(|i| {
+                bytes[img_base + i * img_len..img_base + (i + 1) * img_len]
+                    .iter()
+                    .map(|&b| b as i8)
+                    .collect()
+            })
+            .collect();
+        let labels = (0..n)
+            .map(|i| {
+                i32::from_le_bytes(
+                    bytes[lbl_base + i * 4..lbl_base + (i + 1) * 4]
+                        .try_into()
+                        .unwrap(),
+                )
+            })
+            .collect();
+        Ok(Self {
+            images,
+            labels,
+            chw: (c, h, w),
+        })
+    }
+}
+
+/// The full inference engine: runtime + compiled model + parameters.
+pub struct Engine {
+    pub runtime: Runtime,
+    pub model: LoadedModule,
+    pub params: ModelParams,
+    pub eval: EvalSet,
+    pub batch: usize,
+}
+
+impl Engine {
+    /// Load everything from the artifacts directory.
+    pub fn load() -> Result<Self> {
+        let dir = crate::runtime::artifacts_dir()?;
+        let runtime = Runtime::cpu()?;
+        let model = runtime.load_hlo(dir.join("model.hlo.txt"))?;
+        let params = ModelParams::load(dir.join("model_params.txt"))?;
+        let eval = EvalSet::load(dir.join("eval_set.bin"))?;
+        let manifest = std::fs::read_to_string(dir.join("manifest.txt"))?;
+        let batch = manifest
+            .lines()
+            .find_map(|l| l.strip_prefix("batch "))
+            .and_then(|v| v.parse().ok())
+            .context("manifest missing batch")?;
+        Ok(Self {
+            runtime,
+            model,
+            params,
+            eval,
+            batch,
+        })
+    }
+
+    /// Run one batch of images through the compiled model with the
+    /// given masks; returns argmax predictions.
+    pub fn predict_batch(&self, images: &[Vec<i8>], masks: &LayerMasks) -> Result<Vec<usize>> {
+        anyhow::ensure!(images.len() == self.batch, "batch size mismatch");
+        let (c, h, w) = self.eval.chw;
+        let mut x = Vec::with_capacity(self.batch * c * h * w);
+        for img in images {
+            x.extend(img.iter().map(|&v| v as i32));
+        }
+        let mut inputs = vec![I32Tensor::new(vec![self.batch, c, h, w], x)];
+        inputs.extend(masks.to_tensors());
+        let logits = self.model.execute_i32(&inputs)?;
+        anyhow::ensure!(logits.shape == vec![self.batch, 10], "bad logits shape");
+        Ok(argmax_rows(&logits.data, 10))
+    }
+
+    /// Accuracy of the model over the eval set under the given masks.
+    pub fn accuracy(&self, masks: &LayerMasks) -> Result<f64> {
+        let mut correct = 0usize;
+        let mut total = 0usize;
+        let n_batches = self.eval.images.len() / self.batch;
+        for b in 0..n_batches {
+            let images = &self.eval.images[b * self.batch..(b + 1) * self.batch];
+            let preds = self.predict_batch(images, masks)?;
+            for (p, &l) in preds.iter().zip(&self.eval.labels[b * self.batch..]) {
+                correct += usize::from(*p as i32 == l);
+                total += 1;
+            }
+        }
+        Ok(correct as f64 / total as f64)
+    }
+}
+
+/// Row-wise argmax over a flat row-major matrix.
+pub fn argmax_rows(data: &[i32], width: usize) -> Vec<usize> {
+    data.chunks(width)
+        .map(|row| {
+            row.iter()
+                .enumerate()
+                .max_by_key(|(_, &v)| v)
+                .map(|(i, _)| i)
+                .unwrap()
+        })
+        .collect()
+}
+
+/// Bit-exact rust oracle of the exported forward pass (one image):
+/// conv×3 (+pool×2) + fc, with per-output stuck-at corruption applied
+/// through the same masks the HLO receives.
+pub fn oracle_logits(params: &ModelParams, image: &[i8], masks: &LayerMasks) -> Vec<i32> {
+    use crate::array::sim;
+    let mut h = image.to_vec();
+    let mut shape = sim::Chw::new(1, 16, 16);
+    for (i, conv) in params.convs.iter().enumerate() {
+        let mut acc = sim::conv_acc(conv, &h, shape);
+        let (oh, ow) = conv.out_hw(shape.h, shape.w);
+        sim::add_bias(&mut acc, &conv.bias, oh * ow);
+        // masks are stored (sp, oc); acc is (oc, sp)
+        let m = oh * ow;
+        for oc in 0..conv.out_c {
+            for sp in 0..m {
+                let (and_m, or_m) = masks.conv[i].at(sp, oc);
+                let v = acc[oc * m + sp];
+                acc[oc * m + sp] = (((v as u32) & (and_m as u32)) | (or_m as u32)) as i32;
+            }
+        }
+        h = sim::requant(&acc, conv.m, conv.shift, conv.relu);
+        shape = sim::Chw::new(conv.out_c, oh, ow);
+        if i < 2 {
+            let (p, s) = sim::avgpool2(&h, shape);
+            h = p;
+            shape = s;
+        }
+    }
+    let mut logits = sim::fc_acc(&params.fc, &h);
+    for (n, v) in logits.iter_mut().enumerate() {
+        let (and_m, or_m) = masks.fc.at(0, n); // same for every batch row
+        *v = (((*v as u32) & (and_m as u32)) | (or_m as u32)) as i32;
+    }
+    logits
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_rows_basic() {
+        let d = vec![1, 5, 3, 9, 2, 2];
+        assert_eq!(argmax_rows(&d, 3), vec![1, 0]);
+    }
+}

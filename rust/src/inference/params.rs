@@ -1,0 +1,150 @@
+//! Parser for `artifacts/model_params.txt` — the quantized weights the
+//! AOT step dumped, used by the rust-side bit-exact oracle.
+
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+use crate::array::sim::{ConvLayer, FcLayer};
+
+/// Magic header of `eval_set.bin`.
+pub const EVAL_MAGIC: &[u8; 8] = b"HYCAEVAL";
+
+/// Parsed quantized model parameters.
+#[derive(Debug, Clone)]
+pub struct ModelParams {
+    pub convs: Vec<ConvLayer>,
+    pub fc: FcLayer,
+    pub in_scale: f64,
+}
+
+fn parse_ints<T: std::str::FromStr>(line: &str, prefix: &str) -> Result<Vec<T>> {
+    let body = line
+        .strip_prefix(prefix)
+        .with_context(|| format!("expected line starting with {prefix:?}"))?;
+    body.split_whitespace()
+        .map(|t| t.parse::<T>().map_err(|_| anyhow::anyhow!("bad int {t:?}")))
+        .collect()
+}
+
+impl ModelParams {
+    /// Parse the dump written by `python/compile/aot.py::export_params`.
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("reading {}", path.as_ref().display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut lines = text.lines();
+        let first = lines.next().context("empty params file")?;
+        let in_scale: f64 = first
+            .strip_prefix("in_scale ")
+            .context("missing in_scale")?
+            .trim()
+            .parse()?;
+        let mut convs = Vec::new();
+        let mut fc = None;
+        while let Some(header) = lines.next() {
+            if header.starts_with("conv ") {
+                let kv: Vec<&str> = header.split_whitespace().collect();
+                let get = |key: &str| -> Result<i64> {
+                    let pos = kv
+                        .iter()
+                        .position(|&t| t == key)
+                        .with_context(|| format!("conv header missing {key}"))?;
+                    Ok(kv[pos + 1].parse()?)
+                };
+                let (oc, ic, k) = (get("oc")? as usize, get("ic")? as usize, get("k")? as usize);
+                let w_line = lines.next().context("missing conv w")?;
+                let b_line = lines.next().context("missing conv b")?;
+                let w: Vec<i8> = parse_ints(w_line, "w ")?;
+                let bias: Vec<i32> = parse_ints(b_line, "b ")?;
+                anyhow::ensure!(w.len() == oc * ic * k * k, "conv weight length");
+                anyhow::ensure!(bias.len() == oc, "conv bias length");
+                convs.push(ConvLayer {
+                    out_c: oc,
+                    in_c: ic,
+                    k,
+                    stride: get("stride")? as usize,
+                    pad: get("pad")? as usize,
+                    weights: w,
+                    bias,
+                    m: get("m")? as i32,
+                    shift: get("shift")? as u32,
+                    relu: get("relu")? != 0,
+                });
+            } else if header.starts_with("fc ") {
+                let kv: Vec<&str> = header.split_whitespace().collect();
+                let out_n: usize = kv[kv.iter().position(|&t| t == "out").unwrap() + 1].parse()?;
+                let in_n: usize = kv[kv.iter().position(|&t| t == "in").unwrap() + 1].parse()?;
+                let w: Vec<i8> = parse_ints(lines.next().context("missing fc w")?, "w ")?;
+                let bias: Vec<i32> = parse_ints(lines.next().context("missing fc b")?, "b ")?;
+                anyhow::ensure!(w.len() == out_n * in_n, "fc weight length");
+                anyhow::ensure!(bias.len() == out_n, "fc bias length");
+                fc = Some(FcLayer {
+                    out_n,
+                    in_n,
+                    weights: w,
+                    bias,
+                });
+            } else if !header.trim().is_empty() {
+                bail!("unexpected line in params: {header:?}");
+            }
+        }
+        Ok(Self {
+            convs,
+            fc: fc.context("params file missing fc layer")?,
+            in_scale,
+        })
+    }
+
+    /// Output spatial side of conv layer `i` in the fixed architecture
+    /// (16×16 input, pools after conv 0 and 1).
+    pub fn conv_out_side(&self, i: usize) -> usize {
+        match i {
+            0 => 16,
+            1 => 8,
+            _ => 4,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+in_scale 0.03125
+conv 0 oc 1 ic 1 k 1 stride 1 pad 0 m 77 shift 24 relu 1
+w 3
+b -4
+fc out 2 in 4
+w 1 2 3 4 5 6 7 8
+b 9 10
+";
+
+    #[test]
+    fn parses_sample() {
+        let p = ModelParams::parse(SAMPLE).unwrap();
+        assert_eq!(p.in_scale, 0.03125);
+        assert_eq!(p.convs.len(), 1);
+        assert_eq!(p.convs[0].weights, vec![3]);
+        assert_eq!(p.convs[0].bias, vec![-4]);
+        assert_eq!(p.convs[0].m, 77);
+        assert!(p.convs[0].relu);
+        assert_eq!(p.fc.out_n, 2);
+        assert_eq!(p.fc.weights.len(), 8);
+        assert_eq!(p.fc.bias, vec![9, 10]);
+    }
+
+    #[test]
+    fn rejects_bad_lengths() {
+        let bad = SAMPLE.replace("w 3", "w 3 4");
+        assert!(ModelParams::parse(&bad).is_err());
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(ModelParams::parse("nonsense").is_err());
+    }
+}

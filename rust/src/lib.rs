@@ -1,0 +1,36 @@
+//! # HyCA — A Hybrid Computing Architecture for Fault-Tolerant Deep Learning
+//!
+//! Full reproduction of Liu et al., *"HyCA: A Hybrid Computing
+//! Architecture for Fault Tolerant Deep Learning"* (TCAD 2021,
+//! extending ICCD'20), as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the DLA simulator, fault models, redundancy
+//!   schemes (RR/CR/DR/HyCA), the HyCA micro-architecture (DPPU,
+//!   register files, FPT/AGU, runtime fault detection), the Scale-sim
+//!   analogue performance model, the area model and the experiment
+//!   coordinator that regenerates every figure and table of the paper.
+//! * **L2 (python/compile/model.py, build-time)** — the quantized CNN
+//!   forward pass with output-feature fault corruption and DPPU
+//!   recompute, lowered once to HLO text.
+//! * **L1 (python/compile/kernels/, build-time)** — the Pallas
+//!   output-stationary matmul kernel with stuck-at corruption, checked
+//!   against a pure-jnp oracle.
+//!
+//! At experiment time only the rust binary runs; compiled HLO artifacts
+//! are loaded through the PJRT C API ([`runtime`]).
+//!
+//! Start at [`coordinator`] for the experiment registry, or run
+//! `cargo run --release -- list`.
+
+pub mod area;
+pub mod array;
+pub mod benchkit;
+pub mod coordinator;
+pub mod faults;
+pub mod hyca;
+pub mod inference;
+pub mod perfmodel;
+pub mod redundancy;
+pub mod runtime;
+pub mod testkit;
+pub mod util;

@@ -1,0 +1,130 @@
+//! `repro` — the HyCA reproduction coordinator CLI.
+//!
+//! ```text
+//! repro list                      # experiments and what they reproduce
+//! repro exp <id> [flags]         # run one experiment (fig2..fig15, table1)
+//! repro all [flags]              # run every experiment
+//! repro info                     # artifact + runtime status
+//!
+//! flags: --configs N   Monte-Carlo configs per point (default 10000)
+//!        --seed S      master seed (default 0xC0FFEE)
+//!        --threads T   worker threads (default: all cores)
+//!        --out DIR     CSV output directory (default results/)
+//!        --fast        reduced sweep for quick iteration
+//! ```
+
+use anyhow::{bail, Context, Result};
+use hyca::coordinator::{self, report, RunOpts};
+use hyca::util::cli::{usage, Args, FlagSpec};
+
+fn flag_specs() -> Vec<FlagSpec> {
+    vec![
+        FlagSpec { name: "configs", takes_value: true, help: "Monte-Carlo configs per point" },
+        FlagSpec { name: "seed", takes_value: true, help: "master PRNG seed" },
+        FlagSpec { name: "threads", takes_value: true, help: "worker threads" },
+        FlagSpec { name: "out", takes_value: true, help: "CSV output directory" },
+        FlagSpec { name: "fast", takes_value: false, help: "reduced sweep for iteration" },
+    ]
+}
+
+fn opts_from(args: &Args) -> Result<RunOpts> {
+    let d = RunOpts::default();
+    Ok(RunOpts {
+        configs: args.get_parse("configs", d.configs)?,
+        seed: args.get_parse("seed", d.seed)?,
+        threads: args.get_parse("threads", d.threads)?,
+        out_dir: args.get("out").unwrap_or("results").into(),
+        fast: args.has("fast"),
+    })
+}
+
+fn cmd_list() {
+    println!("experiments (paper artefact → `repro exp <id>`):\n");
+    for e in coordinator::registry() {
+        println!("  {:<8} {}", e.id(), e.title());
+    }
+}
+
+fn cmd_info() -> Result<()> {
+    match hyca::runtime::artifacts_dir() {
+        Ok(dir) => {
+            println!("artifacts: {}", dir.display());
+            for f in [
+                "model.hlo.txt",
+                "kernel_faulty_matmul.hlo.txt",
+                "model_params.txt",
+                "eval_set.bin",
+                "manifest.txt",
+            ] {
+                let p = dir.join(f);
+                println!("  {:<28} {}", f, if p.exists() { "ok" } else { "MISSING" });
+            }
+            if let Ok(m) = std::fs::read_to_string(dir.join("manifest.txt")) {
+                println!("\nmanifest:\n{m}");
+            }
+        }
+        Err(e) => println!("artifacts: {e}"),
+    }
+    let rt = hyca::runtime::Runtime::cpu()?;
+    println!("PJRT platform: {}", rt.platform());
+    Ok(())
+}
+
+fn run_experiment(id: &str, opts: &RunOpts) -> Result<()> {
+    let exp = coordinator::find(id)
+        .with_context(|| format!("unknown experiment {id:?} — see `repro list`"))?;
+    eprintln!(
+        "[repro] {} — {} (configs={}, seed={:#x}, threads={}{})",
+        exp.id(),
+        exp.title(),
+        opts.n_configs(),
+        opts.seed,
+        opts.threads,
+        if opts.fast { ", fast" } else { "" }
+    );
+    let t0 = std::time::Instant::now();
+    let tables = exp.run(opts)?;
+    report::emit(&opts.out_dir, exp.id(), &tables)?;
+    eprintln!(
+        "[repro] {} done in {:.1}s",
+        exp.id(),
+        t0.elapsed().as_secs_f64()
+    );
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = argv.first().map(|s| s.as_str()) else {
+        println!(
+            "{}",
+            usage(
+                "repro <list|exp|all|info>",
+                "HyCA reproduction CLI",
+                &flag_specs()
+            )
+        );
+        return Ok(());
+    };
+    let rest = &argv[1..];
+    match cmd {
+        "list" => cmd_list(),
+        "info" => cmd_info()?,
+        "exp" => {
+            let args = Args::parse(rest, &flag_specs())?;
+            let Some(id) = args.positionals.first() else {
+                bail!("usage: repro exp <id> [flags] — see `repro list`");
+            };
+            run_experiment(id, &opts_from(&args)?)?;
+        }
+        "all" => {
+            let args = Args::parse(rest, &flag_specs())?;
+            let opts = opts_from(&args)?;
+            for e in coordinator::registry() {
+                run_experiment(e.id(), &opts)?;
+            }
+        }
+        other => bail!("unknown command {other:?} — try `repro list`"),
+    }
+    Ok(())
+}

@@ -1,0 +1,196 @@
+//! Layer descriptions and the closed-form output-stationary runtime
+//! model (our Scale-sim [47] analogue — see DESIGN.md §2 for why the
+//! closed form is the faithful substitution).
+//!
+//! Output-stationary runtime of a conv layer on an `R × C` array:
+//! every PE owns one output feature for `k·k·c_in` cycles, so the layer
+//! needs `ceil(OH·OW / R) · ceil(OC / C)` iterations of `k·k·c_in`
+//! cycles, plus a `C`-cycle pipeline fill while the first weights
+//! propagate across the columns.
+//!
+//! Fully-connected layers degenerate to a **single column** of PEs
+//! under this dataflow (paper §V-D observes exactly this), giving
+//! `ceil(N / R)` iterations of `c_in` cycles.
+
+use crate::array::Dims;
+
+/// One weight layer of a network, as mapped onto the computing array.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Layer {
+    Conv {
+        /// input channels
+        in_c: usize,
+        /// output channels
+        out_c: usize,
+        /// kernel size (square)
+        k: usize,
+        /// output feature-map height × width
+        oh: usize,
+        ow: usize,
+    },
+    Fc {
+        in_n: usize,
+        out_n: usize,
+    },
+}
+
+impl Layer {
+    /// MACs in the layer (for utilisation metrics).
+    pub fn macs(&self) -> u64 {
+        match *self {
+            Layer::Conv { in_c, out_c, k, oh, ow } => {
+                (in_c * out_c * k * k * oh * ow) as u64
+            }
+            Layer::Fc { in_n, out_n } => (in_n * out_n) as u64,
+        }
+    }
+
+    /// Runtime in cycles on an `dims` output-stationary array.
+    /// Returns `None` for a dead array (zero rows or columns).
+    pub fn cycles(&self, dims: Dims) -> Option<u64> {
+        if dims.rows == 0 || dims.cols == 0 {
+            return None;
+        }
+        // Per-fold pipeline fill/drain: operands enter the array
+        // staggered across rows and columns and partial sums drain the
+        // same way — the standard systolic estimate 2R + C − 2 per fold
+        // (Scale-sim's output-stationary formula). It only matters for
+        // layers whose t_iter is small (1×1 convs) but those are
+        // exactly the Table-I borderline cases.
+        Some(match *self {
+            Layer::Conv { in_c, out_c, k, oh, ow } => {
+                let t_iter = (k * k * in_c) as u64;
+                let fill = (2 * dims.rows + dims.cols - 2) as u64;
+                let folds = ((oh * ow).div_ceil(dims.rows) * out_c.div_ceil(dims.cols)) as u64;
+                folds * (t_iter + fill)
+            }
+            Layer::Fc { in_n, out_n } => {
+                // single usable column; fill spans the rows only
+                let fill = (2 * dims.rows - 1) as u64;
+                let folds = out_n.div_ceil(dims.rows) as u64;
+                folds * (in_n as u64 + fill)
+            }
+        })
+    }
+
+    /// The paper's iteration period `T_iter` (cycles a PE accumulates
+    /// one output feature), used by the µarch schedule.
+    pub fn t_iter(&self) -> usize {
+        match *self {
+            Layer::Conv { in_c, k, .. } => k * k * in_c,
+            Layer::Fc { in_n, .. } => in_n,
+        }
+    }
+
+    /// Array utilisation: MACs over (cycles × array PEs).
+    pub fn utilisation(&self, dims: Dims) -> f64 {
+        match self.cycles(dims) {
+            None => 0.0,
+            Some(cy) => self.macs() as f64 / (cy as f64 * dims.len() as f64),
+        }
+    }
+}
+
+/// A named network: an ordered list of weight layers.
+#[derive(Debug, Clone)]
+pub struct Network {
+    pub name: &'static str,
+    pub layers: Vec<Layer>,
+}
+
+impl Network {
+    /// End-to-end runtime in cycles; `None` if the array is dead.
+    pub fn cycles(&self, dims: Dims) -> Option<u64> {
+        self.layers.iter().map(|l| l.cycles(dims)).sum()
+    }
+
+    /// Per-layer runtimes.
+    pub fn layer_cycles(&self, dims: Dims) -> Option<Vec<u64>> {
+        self.layers.iter().map(|l| l.cycles(dims)).collect()
+    }
+
+    /// Total MACs.
+    pub fn macs(&self) -> u64 {
+        self.layers.iter().map(|l| l.macs()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const D: Dims = Dims::new(32, 32);
+
+    /// fill/drain on the 32×32 array: 2·32 + 32 − 2.
+    const FILL: u64 = 94;
+
+    #[test]
+    fn conv_cycles_exact_fit() {
+        // spatial = oh·ow = 32, oc = 32 → exactly one fold of
+        // t_iter = 3·3·64 = 576 plus the fold fill.
+        let l = Layer::Conv { in_c: 64, out_c: 32, k: 3, oh: 8, ow: 4 };
+        assert_eq!(l.cycles(D), Some(576 + FILL));
+    }
+
+    #[test]
+    fn conv_cycles_folds() {
+        // spatial 33 → 2 folds; channels 33 → 2 folds; 4 iterations.
+        let l = Layer::Conv { in_c: 16, out_c: 33, k: 1, oh: 33, ow: 1 };
+        assert_eq!(l.cycles(D), Some(4 * (16 + FILL)));
+    }
+
+    #[test]
+    fn fc_uses_single_column() {
+        let l = Layer::Fc { in_n: 256, out_n: 64 };
+        // 64 outputs / 32 rows = 2 folds × (256 + 2·32 − 1) cycles
+        assert_eq!(l.cycles(D), Some(2 * (256 + 63)));
+    }
+
+    #[test]
+    fn dead_array_is_none() {
+        let l = Layer::Fc { in_n: 8, out_n: 8 };
+        assert_eq!(l.cycles(Dims::new(32, 0)), None);
+        assert_eq!(l.cycles(Dims::new(0, 32)), None);
+    }
+
+    #[test]
+    fn halving_the_array_is_never_faster() {
+        // Coarse monotonicity (the fill term makes runtime only
+        // *approximately* monotone in width): halving the column count
+        // never speeds a layer up.
+        let l = Layer::Conv { in_c: 128, out_c: 96, k: 3, oh: 28, ow: 28 };
+        for cols in [8usize, 16, 32, 64] {
+            let full = l.cycles(Dims::new(32, cols)).unwrap();
+            let half = l.cycles(Dims::new(32, cols / 2)).unwrap();
+            assert!(half >= full, "cols={cols}: {half} < {full}");
+        }
+    }
+
+    #[test]
+    fn macs_and_utilisation() {
+        let l = Layer::Conv { in_c: 64, out_c: 32, k: 3, oh: 8, ow: 4 };
+        assert_eq!(l.macs(), 64 * 32 * 9 * 32);
+        let u = l.utilisation(D);
+        // exact fit: utilisation = t_iter / (t_iter + fill) ≈ 0.86
+        assert!(u > 0.8 && u <= 1.0, "{u}");
+        // FC utilisation is ~1/cols (single column)
+        let fc = Layer::Fc { in_n: 4096, out_n: 4096 };
+        let uf = fc.utilisation(D);
+        assert!(uf < 0.04, "{uf}");
+    }
+
+    #[test]
+    fn network_sums_layers() {
+        let net = Network {
+            name: "toy",
+            layers: vec![
+                Layer::Conv { in_c: 3, out_c: 8, k: 3, oh: 8, ow: 8 },
+                Layer::Fc { in_n: 512, out_n: 10 },
+            ],
+        };
+        let total = net.cycles(D).unwrap();
+        let parts: u64 = net.layer_cycles(D).unwrap().iter().sum();
+        assert_eq!(total, parts);
+        assert_eq!(net.cycles(Dims::new(32, 0)), None);
+    }
+}

@@ -1,0 +1,127 @@
+//! Performance model of the DLA (Scale-sim analogue, see DESIGN.md §2)
+//! and the degraded-array evaluation used by Figs. 12–13.
+//!
+//! The paper runs Scale-sim only on the *unique* surviving-array
+//! configurations ("as many fault configurations lead to the same
+//! computing array setups eventually, this approach greatly reduces the
+//! simulation time", §V-A3) — [`DegradedPerf`] implements the same
+//! memoisation over surviving column counts.
+
+pub mod layers;
+pub mod networks;
+
+use crate::array::Dims;
+use crate::redundancy::{RepairCtx, Scheme};
+use crate::util::rng::Pcg32;
+use layers::Network;
+
+/// Memoised runtime of one network over surviving-array widths:
+/// `runtime[c]` = cycles on an `rows × c` array (`None` = dead array).
+#[derive(Debug, Clone)]
+pub struct DegradedPerf {
+    pub rows: usize,
+    runtime: Vec<Option<u64>>,
+}
+
+impl DegradedPerf {
+    /// Precompute runtimes for all surviving widths 0..=cols.
+    pub fn new(net: &Network, dims: Dims) -> Self {
+        let runtime = (0..=dims.cols)
+            .map(|c| net.cycles(Dims::new(dims.rows, c)))
+            .collect();
+        Self {
+            rows: dims.rows,
+            runtime,
+        }
+    }
+
+    /// Runtime on a surviving prefix of `cols` columns.
+    pub fn cycles(&self, cols: usize) -> Option<u64> {
+        self.runtime.get(cols).copied().flatten()
+    }
+}
+
+/// Mean normalised performance of `scheme` vs a reference runtime:
+/// `perf = ref_runtime / runtime(surviving array)`, with a dead array
+/// contributing zero performance (the paper's Fig. 12 normalises to the
+/// RR-protected DLA).
+pub fn mean_normalised_perf(
+    scheme: &dyn Scheme,
+    net_perf: &DegradedPerf,
+    ref_cycles: u64,
+    dims: Dims,
+    per: f64,
+    model: crate::faults::montecarlo::FaultModel,
+    seed: u64,
+    n: usize,
+    threads: usize,
+) -> f64 {
+    let vals = crate::faults::montecarlo::map_configs(
+        seed,
+        n,
+        dims,
+        per,
+        model,
+        threads,
+        |idx, cfg| {
+            let mut rng = Pcg32::split(seed ^ 0xFACE, idx);
+            let mut ctx = RepairCtx { per, rng: &mut rng };
+            let out = scheme.repair(cfg, &mut ctx);
+            match net_perf.cycles(out.surviving_cols) {
+                Some(cy) => ref_cycles as f64 / cy as f64,
+                None => 0.0,
+            }
+        },
+    );
+    vals.iter().sum::<f64>() / vals.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::faults::montecarlo::FaultModel;
+    use crate::redundancy::hyca::HycaScheme;
+    use crate::redundancy::rr::RowRedundancy;
+
+    #[test]
+    fn degraded_perf_memoises_consistently() {
+        let net = networks::alexnet();
+        let d = Dims::PAPER;
+        let dp = DegradedPerf::new(&net, d);
+        assert_eq!(dp.cycles(32), net.cycles(d));
+        assert_eq!(dp.cycles(0), None);
+        assert_eq!(
+            dp.cycles(16),
+            net.cycles(Dims::new(32, 16))
+        );
+        // coarse monotonicity: halving the surviving width never
+        // shrinks the runtime (exact per-column monotonicity is broken
+        // by the fill term at the ±fill level, which is fine).
+        for c in [2usize, 4, 8, 16, 32] {
+            assert!(dp.cycles(c / 2).unwrap() >= dp.cycles(c).unwrap(), "c={c}");
+        }
+    }
+
+    #[test]
+    fn hyca_outperforms_rr_at_high_per() {
+        let net = networks::alexnet();
+        let d = Dims::PAPER;
+        let dp = DegradedPerf::new(&net, d);
+        let r = dp.cycles(32).unwrap();
+        let args = (d, 0.06, FaultModel::Random, 7u64, 300usize, 4usize);
+        let p_rr = mean_normalised_perf(
+            &RowRedundancy::default(), &dp, r, args.0, args.1, args.2, args.3, args.4, args.5,
+        );
+        let p_hyca = mean_normalised_perf(
+            &HycaScheme::paper(32), &dp, r, args.0, args.1, args.2, args.3, args.4, args.5,
+        );
+        // AlexNet is FC-heavy and FC runtime is column-independent
+        // (single-column mapping), which mutes the gap — the paper's
+        // up-to-9× speedup comes from the conv-heavy members of the
+        // benchmark (see the fig12 bench). Require a clear win here.
+        assert!(
+            p_hyca > p_rr * 2.0,
+            "HyCA {p_hyca:.3} should dominate RR {p_rr:.3} at 6% PER"
+        );
+    }
+}

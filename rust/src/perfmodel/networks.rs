@@ -1,0 +1,181 @@
+//! The neural-network benchmark of the paper (§V-A3): AlexNet, VGG16,
+//! ResNet18 and YOLO (v2), "all pre-trained on ImageNet". Only layer
+//! *shapes* matter to the runtime model; they are the standard
+//! published configurations.
+//!
+//! Layer counts match the paper's Table I denominators:
+//! AlexNet 8, VGG 16, YOLO 22, ResNet 21.
+
+use super::layers::{Layer, Network};
+
+fn conv(in_c: usize, out_c: usize, k: usize, oh: usize, ow: usize) -> Layer {
+    Layer::Conv { in_c, out_c, k, oh, ow }
+}
+
+fn fc(in_n: usize, out_n: usize) -> Layer {
+    Layer::Fc { in_n, out_n }
+}
+
+/// AlexNet: 5 conv + 3 FC = 8 weight layers (input 227×227×3).
+/// Conv 2/4/5 are 2-way grouped convolutions in the original network —
+/// each output channel sees half the input channels, so `in_c` is
+/// halved (MAC-exact).
+pub fn alexnet() -> Network {
+    Network {
+        name: "Alexnet",
+        layers: vec![
+            conv(3, 96, 11, 55, 55),
+            conv(48, 256, 5, 27, 27),
+            conv(256, 384, 3, 13, 13),
+            conv(192, 384, 3, 13, 13),
+            conv(192, 256, 3, 13, 13),
+            fc(9216, 4096),
+            fc(4096, 4096),
+            fc(4096, 1000),
+        ],
+    }
+}
+
+/// VGG16: 13 conv + 3 FC = 16 weight layers (input 224×224×3).
+pub fn vgg16() -> Network {
+    Network {
+        name: "VGG",
+        layers: vec![
+            conv(3, 64, 3, 224, 224),
+            conv(64, 64, 3, 224, 224),
+            conv(64, 128, 3, 112, 112),
+            conv(128, 128, 3, 112, 112),
+            conv(128, 256, 3, 56, 56),
+            conv(256, 256, 3, 56, 56),
+            conv(256, 256, 3, 56, 56),
+            conv(256, 512, 3, 28, 28),
+            conv(512, 512, 3, 28, 28),
+            conv(512, 512, 3, 28, 28),
+            conv(512, 512, 3, 14, 14),
+            conv(512, 512, 3, 14, 14),
+            conv(512, 512, 3, 14, 14),
+            fc(25088, 4096),
+            fc(4096, 4096),
+            fc(4096, 1000),
+        ],
+    }
+}
+
+/// ResNet18: stem conv + 16 block convs + 3 projection (1×1) convs +
+/// 1 FC = 21 weight layers (input 224×224×3).
+pub fn resnet18() -> Network {
+    let mut layers = vec![conv(3, 64, 7, 112, 112)];
+    // stage 1: 56×56, 64ch
+    for _ in 0..4 {
+        layers.push(conv(64, 64, 3, 56, 56));
+    }
+    // stage 2: 28×28, 128ch (+1×1 projection)
+    layers.push(conv(64, 128, 3, 28, 28));
+    layers.push(conv(128, 128, 3, 28, 28));
+    layers.push(conv(64, 128, 1, 28, 28)); // downsample
+    layers.push(conv(128, 128, 3, 28, 28));
+    layers.push(conv(128, 128, 3, 28, 28));
+    // stage 3: 14×14, 256ch (+projection)
+    layers.push(conv(128, 256, 3, 14, 14));
+    layers.push(conv(256, 256, 3, 14, 14));
+    layers.push(conv(128, 256, 1, 14, 14));
+    layers.push(conv(256, 256, 3, 14, 14));
+    layers.push(conv(256, 256, 3, 14, 14));
+    // stage 4: 7×7, 512ch (+projection)
+    layers.push(conv(256, 512, 3, 7, 7));
+    layers.push(conv(512, 512, 3, 7, 7));
+    layers.push(conv(256, 512, 1, 7, 7));
+    layers.push(conv(512, 512, 3, 7, 7));
+    layers.push(conv(512, 512, 3, 7, 7));
+    layers.push(fc(512, 1000));
+    Network {
+        name: "Resnet",
+        layers,
+    }
+}
+
+/// YOLOv2: 22 conv layers (Darknet-19 backbone + detection head),
+/// input 416×416×3.
+pub fn yolo() -> Network {
+    Network {
+        name: "YOLO",
+        layers: vec![
+            conv(3, 32, 3, 416, 416),
+            conv(32, 64, 3, 208, 208),
+            conv(64, 128, 3, 104, 104),
+            conv(128, 64, 1, 104, 104),
+            conv(64, 128, 3, 104, 104),
+            conv(128, 256, 3, 52, 52),
+            conv(256, 128, 1, 52, 52),
+            conv(128, 256, 3, 52, 52),
+            conv(256, 512, 3, 26, 26),
+            conv(512, 256, 1, 26, 26),
+            conv(256, 512, 3, 26, 26),
+            conv(512, 256, 1, 26, 26),
+            conv(256, 512, 3, 26, 26),
+            conv(512, 1024, 3, 13, 13),
+            conv(1024, 512, 1, 13, 13),
+            conv(512, 1024, 3, 13, 13),
+            conv(1024, 512, 1, 13, 13),
+            conv(512, 1024, 3, 13, 13),
+            conv(1024, 1024, 3, 13, 13),
+            conv(1024, 1024, 3, 13, 13),
+            conv(1280, 1024, 3, 13, 13), // after passthrough concat
+            conv(1024, 125, 1, 13, 13),  // detection head (5·(20+5))
+        ],
+    }
+}
+
+/// The full benchmark in the paper's presentation order.
+pub fn benchmark() -> Vec<Network> {
+    vec![alexnet(), vgg16(), yolo(), resnet18()]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::array::Dims;
+
+    #[test]
+    fn layer_counts_match_table1_denominators() {
+        assert_eq!(alexnet().layers.len(), 8);
+        assert_eq!(vgg16().layers.len(), 16);
+        assert_eq!(yolo().layers.len(), 22);
+        assert_eq!(resnet18().layers.len(), 21);
+    }
+
+    #[test]
+    fn mac_totals_are_plausible() {
+        // Published MAC counts (multiply-accumulate, per inference):
+        // AlexNet ≈ 0.7 G, VGG16 ≈ 15.5 G, ResNet18 ≈ 1.8 G,
+        // YOLOv2 ≈ 14.8 G (at 416²). Allow 20% for variant drift.
+        let close = |got: u64, expect: f64| {
+            let g = got as f64;
+            assert!(
+                (g - expect).abs() / expect < 0.2,
+                "got {g:.2e}, expected ≈{expect:.2e}"
+            );
+        };
+        close(alexnet().macs(), 0.71e9);
+        close(vgg16().macs(), 15.5e9);
+        close(resnet18().macs(), 1.8e9);
+        close(yolo().macs(), 14.8e9);
+    }
+
+    #[test]
+    fn all_networks_run_on_paper_array() {
+        for net in benchmark() {
+            let cy = net.cycles(Dims::PAPER).unwrap();
+            assert!(cy > 0, "{}", net.name);
+            // sanity: runtime must exceed MACs / array size
+            assert!(cy >= net.macs() / 1024, "{}", net.name);
+        }
+    }
+
+    #[test]
+    fn vgg_is_the_heaviest_classifier() {
+        let d = Dims::PAPER;
+        assert!(vgg16().cycles(d).unwrap() > alexnet().cycles(d).unwrap());
+        assert!(vgg16().cycles(d).unwrap() > resnet18().cycles(d).unwrap());
+    }
+}

@@ -1,0 +1,111 @@
+//! Column redundancy (CR): one spare PE per column, shared by all PEs
+//! of that column (paper §II, [19]).
+//!
+//! A column with at most `spares_per_col` faults is fully repaired; the
+//! first column that exceeds the budget is discarded together with
+//! everything to its right (degradation policy, §IV-B).
+
+use super::{RepairCtx, RepairOutcome, Scheme};
+use crate::array::Dims;
+use crate::faults::FaultConfig;
+
+/// Column-redundancy scheme (spares per column = `spares_per_col`,
+/// paper: 1).
+#[derive(Debug, Clone, Copy)]
+pub struct ColumnRedundancy {
+    pub spares_per_col: usize,
+}
+
+impl Default for ColumnRedundancy {
+    fn default() -> Self {
+        Self { spares_per_col: 1 }
+    }
+}
+
+impl Scheme for ColumnRedundancy {
+    fn name(&self) -> String {
+        "CR".to_string()
+    }
+
+    fn repair(&self, faults: &FaultConfig, _ctx: &mut RepairCtx) -> RepairOutcome {
+        let dims = faults.dims;
+        let per_col = faults.faults_per_col();
+        let prefix = per_col
+            .iter()
+            .position(|&f| f > self.spares_per_col)
+            .unwrap_or(dims.cols);
+        RepairOutcome {
+            fully_functional: prefix == dims.cols,
+            surviving_cols: prefix,
+            total_cols: dims.cols,
+        }
+    }
+
+    fn spare_count(&self, dims: Dims) -> usize {
+        dims.cols * self.spares_per_col
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::faults::Coord;
+    use crate::util::rng::Pcg32;
+
+    fn outcome(faults: Vec<Coord>) -> RepairOutcome {
+        let cfg = FaultConfig::new(Dims::new(4, 8), faults);
+        let mut rng = Pcg32::new(0, 0);
+        let mut ctx = RepairCtx { per: 0.0, rng: &mut rng };
+        ColumnRedundancy::default().repair(&cfg, &mut ctx)
+    }
+
+    #[test]
+    fn healthy_is_fully_functional() {
+        assert!(outcome(vec![]).fully_functional);
+    }
+
+    #[test]
+    fn one_fault_per_column_repairable() {
+        let o = outcome(vec![
+            Coord::new(0, 0),
+            Coord::new(1, 1),
+            Coord::new(3, 7),
+        ]);
+        assert!(o.fully_functional);
+        assert_eq!(o.surviving_cols, 8);
+    }
+
+    #[test]
+    fn overloaded_column_kills_prefix_from_that_column() {
+        // column 3 has two faults → prefix is 3.
+        let o = outcome(vec![Coord::new(0, 3), Coord::new(2, 3), Coord::new(1, 6)]);
+        assert!(!o.fully_functional);
+        assert_eq!(o.surviving_cols, 3);
+    }
+
+    #[test]
+    fn leftmost_overloaded_column_binds() {
+        let o = outcome(vec![
+            Coord::new(0, 5),
+            Coord::new(1, 5),
+            Coord::new(0, 2),
+            Coord::new(3, 2),
+        ]);
+        assert_eq!(o.surviving_cols, 2);
+    }
+
+    #[test]
+    fn column_overload_in_col_zero_survives_nothing() {
+        let o = outcome(vec![Coord::new(0, 0), Coord::new(1, 0)]);
+        assert_eq!(o.surviving_cols, 0);
+        assert_eq!(o.remaining_power(), 0.0);
+    }
+
+    #[test]
+    fn spare_count_scales_with_cols() {
+        assert_eq!(
+            ColumnRedundancy::default().spare_count(Dims::new(64, 32)),
+            32
+        );
+    }
+}

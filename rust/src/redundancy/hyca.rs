@@ -1,0 +1,230 @@
+//! HyCA as a repair scheme (paper §IV): the DPPU recomputes the output
+//! features of up to `capacity` faulty PEs per iteration, *regardless
+//! of their location* in the 2-D array.
+//!
+//! * Fully functional ⇔ `#faults ≤ capacity` (with capacity possibly
+//!   reduced by DPPU-internal faults — §IV-C1's ring redundancy absorbs
+//!   one fault per ring; beyond that, lanes die and capacity shrinks,
+//!   which is why Fig. 10's HyCA curve bends slightly before the
+//!   32-fault cliff at PER 3.13%).
+//! * Degradation: repair budget is spent **left-first** (paper §IV-B:
+//!   "assigning higher repairing priority to the faulty PEs on the
+//!   left"), which is optimal under the column-prefix survival policy:
+//!   exchanging any repaired fault for an unrepaired fault further left
+//!   can only shorten the prefix. The surviving prefix ends at the
+//!   column of the first unrepaired (capacity+1-th) fault.
+
+use super::{RepairCtx, RepairOutcome, Scheme};
+use crate::array::Dims;
+use crate::faults::FaultConfig;
+use crate::hyca::dppu::DppuConfig;
+
+/// HyCA repair scheme wrapping a DPPU configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct HycaScheme {
+    pub dppu: DppuConfig,
+    /// Model DPPU-internal faults at the ambient PER (paper's Fig. 10
+    /// behaviour). Disable for idealised ablations.
+    pub model_dppu_faults: bool,
+}
+
+impl HycaScheme {
+    /// Paper default: grouped DPPU of the given size, internal faults
+    /// modelled.
+    pub fn paper(size: usize) -> Self {
+        Self {
+            dppu: DppuConfig::paper(size),
+            model_dppu_faults: true,
+        }
+    }
+
+    /// Unified-DPPU variant (Fig. 15).
+    pub fn unified(size: usize) -> Self {
+        Self {
+            dppu: DppuConfig::unified(size),
+            model_dppu_faults: true,
+        }
+    }
+
+    /// Idealised variant without DPPU-internal fault modelling.
+    pub fn ideal(size: usize) -> Self {
+        Self {
+            dppu: DppuConfig::paper(size),
+            model_dppu_faults: false,
+        }
+    }
+}
+
+impl Scheme for HycaScheme {
+    fn name(&self) -> String {
+        let s = match self.dppu.structure {
+            crate::hyca::dppu::DppuStructure::Unified => "HyCA-U",
+            crate::hyca::dppu::DppuStructure::Grouped { .. } => "HyCA",
+        };
+        format!("{s}{}", self.dppu.size)
+    }
+
+    fn repair(&self, faults: &FaultConfig, ctx: &mut RepairCtx) -> RepairOutcome {
+        let dims = faults.dims;
+        let effective = if self.model_dppu_faults {
+            self.dppu.sample_effective_mults(ctx.rng, ctx.per)
+        } else {
+            self.dppu.size
+        };
+        let capacity = self.dppu.capacity_with_effective(effective, dims.cols);
+        let n = faults.count();
+        if n <= capacity {
+            return RepairOutcome {
+                fully_functional: true,
+                surviving_cols: dims.cols,
+                total_cols: dims.cols,
+            };
+        }
+        // Left-first budget: faults are sorted by (col, row); the first
+        // unrepaired fault is the (capacity+1)-th, and its column is the
+        // first discarded one.
+        let first_unrepaired = faults.faulty()[capacity];
+        RepairOutcome {
+            fully_functional: false,
+            surviving_cols: first_unrepaired.col as usize,
+            total_cols: dims.cols,
+        }
+    }
+
+    fn spare_count(&self, _dims: Dims) -> usize {
+        self.dppu.size
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::faults::Coord;
+    use crate::util::rng::Pcg32;
+
+    fn repair(scheme: &HycaScheme, faults: Vec<Coord>) -> RepairOutcome {
+        let cfg = FaultConfig::new(Dims::new(4, 8), faults);
+        let mut rng = Pcg32::new(0, 0);
+        let mut ctx = RepairCtx { per: 0.0, rng: &mut rng };
+        scheme.repair(&cfg, &mut ctx)
+    }
+
+    #[test]
+    fn within_capacity_any_distribution_is_fully_functional() {
+        let s = HycaScheme::ideal(4);
+        // worst cases for RR (row cluster) and CR (column cluster):
+        let row_cluster = vec![
+            Coord::new(1, 0),
+            Coord::new(1, 1),
+            Coord::new(1, 2),
+            Coord::new(1, 3),
+        ];
+        let col_cluster = vec![
+            Coord::new(0, 5),
+            Coord::new(1, 5),
+            Coord::new(2, 5),
+            Coord::new(3, 5),
+        ];
+        assert!(repair(&s, row_cluster).fully_functional);
+        assert!(repair(&s, col_cluster).fully_functional);
+    }
+
+    #[test]
+    fn over_capacity_keeps_left_prefix() {
+        let s = HycaScheme::ideal(2);
+        // 3 faults at cols 1, 3, 6 → repair cols 1 & 3, discard from 6.
+        let o = repair(
+            &s,
+            vec![Coord::new(0, 1), Coord::new(2, 3), Coord::new(1, 6)],
+        );
+        assert!(!o.fully_functional);
+        assert_eq!(o.surviving_cols, 6);
+    }
+
+    #[test]
+    fn zero_capacity_prefix_ends_at_first_fault() {
+        let s = HycaScheme::ideal(0);
+        let o = repair(&s, vec![Coord::new(3, 4)]);
+        assert_eq!(o.surviving_cols, 4);
+        assert!(!o.fully_functional);
+    }
+
+    #[test]
+    fn exactly_at_capacity_is_functional() {
+        // size 4 divides the 8-column operand rows → capacity = 4.
+        let s = HycaScheme::ideal(4);
+        assert_eq!(s.dppu.capacity(8), 4);
+        let o = repair(
+            &s,
+            vec![
+                Coord::new(0, 0),
+                Coord::new(1, 0),
+                Coord::new(2, 0),
+                Coord::new(3, 0),
+            ],
+        );
+        assert!(o.fully_functional);
+    }
+
+    #[test]
+    fn misaligned_dppu_size_loses_capacity() {
+        // size 3 does not divide the 8-wide operand rows: each 3-wide
+        // group needs ceil(8/3)=3 segment reads per fault → only 2
+        // faults per window (the Fig. 15 alignment effect).
+        let s = HycaScheme::ideal(3);
+        assert_eq!(s.dppu.capacity(8), 2);
+    }
+
+    #[test]
+    fn dppu_fault_modelling_reduces_ffp_near_capacity() {
+        // At high ambient PER, HyCA with internal fault modelling should
+        // occasionally fail configurations with exactly `size` faults.
+        let dims = Dims::new(32, 32);
+        let mut rng = Pcg32::new(77, 0);
+        let s = HycaScheme::paper(32);
+        let mut failures = 0;
+        for i in 0..500 {
+            let cfg = crate::faults::random::sample_exact(&mut rng, dims, 32);
+            let mut r2 = Pcg32::split(1234, i);
+            let mut ctx = RepairCtx { per: 0.03, rng: &mut r2 };
+            if !s.repair(&cfg, &mut ctx).fully_functional {
+                failures += 1;
+            }
+        }
+        assert!(failures > 0, "internal DPPU faults should bite sometimes");
+        // but the ideal scheme never fails at exactly-capacity:
+        let s_ideal = HycaScheme::ideal(32);
+        for i in 0..200 {
+            let cfg = crate::faults::random::sample_exact(&mut rng, dims, 32);
+            let mut r2 = Pcg32::split(99, i);
+            let mut ctx = RepairCtx { per: 0.03, rng: &mut r2 };
+            assert!(s_ideal.repair(&cfg, &mut ctx).fully_functional);
+        }
+    }
+
+    #[test]
+    fn unified_vs_grouped_capacity_difference_shows() {
+        // 24-size unified has capacity 16 on col=32 arrays; grouped 24.
+        let dims = Dims::new(32, 32);
+        let mut rng = Pcg32::new(88, 0);
+        let cfg = crate::faults::random::sample_exact(&mut rng, dims, 20);
+        let mut r1 = Pcg32::new(1, 1);
+        let grouped = HycaScheme {
+            model_dppu_faults: false,
+            ..HycaScheme::paper(24)
+        };
+        let unified = HycaScheme {
+            model_dppu_faults: false,
+            ..HycaScheme::unified(24)
+        };
+        let mut ctx = RepairCtx { per: 0.0, rng: &mut r1 };
+        assert!(grouped.repair(&cfg, &mut ctx).fully_functional);
+        assert!(!unified.repair(&cfg, &mut ctx).fully_functional);
+    }
+
+    #[test]
+    fn names() {
+        assert_eq!(HycaScheme::paper(32).name(), "HyCA32");
+        assert_eq!(HycaScheme::unified(24).name(), "HyCA-U24");
+    }
+}

@@ -1,0 +1,116 @@
+//! Redundancy / repair schemes for the 2-D computing array.
+//!
+//! Four schemes are evaluated throughout the paper:
+//!
+//! * [`rr::RowRedundancy`] — one spare PE shared per **row** [19];
+//! * [`cr::ColumnRedundancy`] — one spare PE shared per **column**;
+//! * [`dr::DiagonalRedundancy`] — spare `i` serves row `i` *and*
+//!   column `i` [20] (non-square arrays are split into square
+//!   sub-arrays, §V-E);
+//! * [`hyca::HycaScheme`] — the paper's contribution: a DPPU of
+//!   `size` multipliers recomputes the outputs of *any* faulty PEs,
+//!   up to its per-iteration capacity.
+//!
+//! Degradation policy (paper §IV-B, end): when a scheme cannot repair
+//! every fault, columns containing unrepaired faulty PEs are discarded
+//! **along with all columns to their right** (those become disconnected
+//! from the weight-forwarding chain / on-chip buffers). The surviving
+//! array is therefore a prefix of columns; schemes differ in how long a
+//! prefix they can keep. HyCA's freedom to repair arbitrary faults lets
+//! it spend its budget strictly left-first, which is optimal under this
+//! policy (proved by the exchange argument in `hyca.rs`, checked by
+//! property tests).
+
+pub mod cr;
+pub mod dr;
+pub mod hyca;
+pub mod rr;
+
+use crate::faults::FaultConfig;
+use crate::util::rng::Pcg32;
+
+/// Context passed to `repair`: the PER the configuration was sampled at
+/// (used by HyCA to sample DPPU-internal faults) and a PRNG stream.
+pub struct RepairCtx<'a> {
+    pub per: f64,
+    pub rng: &'a mut Pcg32,
+}
+
+/// Result of attempting to repair one fault configuration.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RepairOutcome {
+    /// All faulty PEs repaired: no performance penalty, no model change.
+    pub fully_functional: bool,
+    /// Length of the surviving column prefix after degradation.
+    pub surviving_cols: usize,
+    /// Total columns of the original array (for normalisation).
+    pub total_cols: usize,
+}
+
+impl RepairOutcome {
+    /// Normalised remaining computing power (paper Fig. 11): surviving
+    /// array size over original array size.
+    pub fn remaining_power(&self) -> f64 {
+        self.surviving_cols as f64 / self.total_cols as f64
+    }
+}
+
+/// A redundancy scheme that can attempt to repair fault configurations.
+pub trait Scheme: Sync {
+    /// Short label used in reports ("RR", "CR", "DR", "HyCA32", …).
+    fn name(&self) -> String;
+
+    /// Attempt repair of `faults`; apply the column-discard degradation
+    /// policy if full repair is impossible.
+    fn repair(&self, faults: &FaultConfig, ctx: &mut RepairCtx) -> RepairOutcome;
+
+    /// Number of redundant PEs the scheme adds (area accounting).
+    fn spare_count(&self, dims: crate::array::Dims) -> usize;
+}
+
+/// Convenience: run a scheme over one deterministic Monte-Carlo stream
+/// and return (fully-functional count, mean remaining power).
+pub fn evaluate_scheme(
+    scheme: &dyn Scheme,
+    dims: crate::array::Dims,
+    per: f64,
+    model: crate::faults::montecarlo::FaultModel,
+    seed: u64,
+    n: usize,
+    threads: usize,
+) -> (f64, f64) {
+    let results = crate::faults::montecarlo::map_configs(
+        seed,
+        n,
+        dims,
+        per,
+        model,
+        threads,
+        |idx, cfg| {
+            // independent PRNG stream for repair-internal sampling
+            let mut rng = Pcg32::split(seed ^ 0x5eed, idx);
+            let mut ctx = RepairCtx { per, rng: &mut rng };
+            let out = scheme.repair(cfg, &mut ctx);
+            (out.fully_functional as u32, out.remaining_power())
+        },
+    );
+    let n = results.len() as f64;
+    let ff: u32 = results.iter().map(|r| r.0).sum();
+    let power: f64 = results.iter().map(|r| r.1).sum();
+    (ff as f64 / n, power / n)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn remaining_power_normalisation() {
+        let o = RepairOutcome {
+            fully_functional: false,
+            surviving_cols: 8,
+            total_cols: 32,
+        };
+        assert!((o.remaining_power() - 0.25).abs() < 1e-12);
+    }
+}

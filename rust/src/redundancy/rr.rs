@@ -1,0 +1,200 @@
+//! Row redundancy (RR): one spare PE per row, shared by all PEs of that
+//! row (paper §II, [19]).
+//!
+//! The spare repairs by shifting the row's PEs toward the spare
+//! position, so repair is **all-or-nothing per row**: a row with at
+//! most `spares_per_row` faults is fully repaired; a row with more
+//! cannot establish a consistent shift chain and keeps *all* its
+//! faults (paper §V-C: "RR cannot effectively shift the faulty PEs to
+//! a different column and has to discard the column whenever there are
+//! more than one faulty PEs" — which is why Fig. 11 shows RR with the
+//! lowest remaining computing power, ~25× below HyCA at 6% PER).
+//! Under the column-discard policy the surviving prefix therefore ends
+//! at the leftmost fault of any over-budget row.
+
+use super::{RepairCtx, RepairOutcome, Scheme};
+use crate::array::Dims;
+use crate::faults::FaultConfig;
+
+/// Row-redundancy scheme (spares per row = `spares_per_row`, paper: 1).
+///
+/// `all_or_nothing` selects the degradation semantics — the paper does
+/// not fully specify it, and the remaining-computing-power metric is
+/// sensitive to the choice (EXPERIMENTS.md quantifies both):
+/// * `true` (default, matches the paper's §V-C wording): a row beyond
+///   its spare budget keeps **all** its faults (shift-chain repair is
+///   all-or-nothing);
+/// * `false`: each spare is a direct per-PE replacement that can still
+///   absorb the row's leftmost fault even when the row is over budget.
+#[derive(Debug, Clone, Copy)]
+pub struct RowRedundancy {
+    pub spares_per_row: usize,
+    pub all_or_nothing: bool,
+}
+
+impl Default for RowRedundancy {
+    fn default() -> Self {
+        Self {
+            spares_per_row: 1,
+            all_or_nothing: true,
+        }
+    }
+}
+
+impl RowRedundancy {
+    /// The per-PE-spare (partial-repair) variant — the optimistic
+    /// reading of the paper's RR.
+    pub fn per_pe_spare() -> Self {
+        Self {
+            spares_per_row: 1,
+            all_or_nothing: false,
+        }
+    }
+}
+
+impl Scheme for RowRedundancy {
+    fn name(&self) -> String {
+        "RR".to_string()
+    }
+
+    fn repair(&self, faults: &FaultConfig, _ctx: &mut RepairCtx) -> RepairOutcome {
+        let dims = faults.dims;
+        // A row whose fault count exceeds the spare budget keeps all
+        // its faults (shift-chain repair is all-or-nothing), so its
+        // *leftmost* fault caps the surviving prefix.
+        let per_row = faults.faults_per_row();
+        let mut prefix = dims.cols;
+        // faults are sorted by (col, row) ⇒ the first binding fault is
+        // found in one pass.
+        let mut seen = vec![0usize; dims.rows];
+        for c in faults.faulty() {
+            let r = c.row as usize;
+            if per_row[r] <= self.spares_per_row {
+                continue; // row fully repaired either way
+            }
+            if self.all_or_nothing {
+                // over-budget row keeps all its faults
+                prefix = c.col as usize;
+                break;
+            }
+            // per-PE spares: the budget absorbs the leftmost faults of
+            // the row; the (budget+1)-th one binds.
+            seen[r] += 1;
+            if seen[r] > self.spares_per_row {
+                prefix = c.col as usize;
+                break;
+            }
+        }
+        RepairOutcome {
+            fully_functional: prefix == dims.cols,
+            surviving_cols: prefix,
+            total_cols: dims.cols,
+        }
+    }
+
+    fn spare_count(&self, dims: Dims) -> usize {
+        dims.rows * self.spares_per_row
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::faults::Coord;
+    use crate::util::rng::Pcg32;
+
+    fn ctx(rng: &mut Pcg32) -> RepairCtx {
+        RepairCtx { per: 0.0, rng }
+    }
+
+    fn outcome(faults: Vec<Coord>) -> RepairOutcome {
+        let cfg = FaultConfig::new(Dims::new(4, 8), faults);
+        let mut rng = Pcg32::new(0, 0);
+        RowRedundancy::default().repair(&cfg, &mut ctx(&mut rng))
+    }
+
+    #[test]
+    fn healthy_is_fully_functional() {
+        let o = outcome(vec![]);
+        assert!(o.fully_functional);
+        assert_eq!(o.surviving_cols, 8);
+    }
+
+    #[test]
+    fn one_fault_per_row_is_repairable() {
+        let o = outcome(vec![
+            Coord::new(0, 3),
+            Coord::new(1, 7),
+            Coord::new(2, 0),
+            Coord::new(3, 5),
+        ]);
+        assert!(o.fully_functional);
+    }
+
+    #[test]
+    fn overloaded_row_keeps_all_its_faults() {
+        // row 1 faults at cols 2 and 5 → shift chain fails, BOTH faults
+        // stay → prefix ends at col 2 (all-or-nothing repair).
+        let o = outcome(vec![Coord::new(1, 2), Coord::new(1, 5)]);
+        assert!(!o.fully_functional);
+        assert_eq!(o.surviving_cols, 2);
+        assert!((o.remaining_power() - 2.0 / 8.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn prefix_is_min_over_overloaded_rows() {
+        let o = outcome(vec![
+            Coord::new(0, 1),
+            Coord::new(0, 6), // row 0 overloaded: leftmost fault at 1
+            Coord::new(2, 4),
+            Coord::new(2, 5), // row 2 overloaded: leftmost fault at 4
+        ]);
+        assert_eq!(o.surviving_cols, 1);
+    }
+
+    #[test]
+    fn healthy_rows_do_not_bind_the_prefix() {
+        // row 3 has a single (repairable) fault left of row 1's pair.
+        let o = outcome(vec![
+            Coord::new(3, 0),
+            Coord::new(1, 4),
+            Coord::new(1, 6),
+        ]);
+        assert_eq!(o.surviving_cols, 4);
+    }
+
+    #[test]
+    fn per_pe_spare_variant_keeps_the_second_fault_column() {
+        let cfg = FaultConfig::new(
+            Dims::new(4, 8),
+            vec![Coord::new(1, 2), Coord::new(1, 5)],
+        );
+        let mut rng = Pcg32::new(0, 0);
+        let mut ctx = RepairCtx { per: 0.0, rng: &mut rng };
+        let o = RowRedundancy::per_pe_spare().repair(&cfg, &mut ctx);
+        // leftmost fault repaired; the second binds
+        assert_eq!(o.surviving_cols, 5);
+        // while the default (all-or-nothing) loses both
+        let mut rng = Pcg32::new(0, 0);
+        let mut ctx = RepairCtx { per: 0.0, rng: &mut rng };
+        let o2 = RowRedundancy::default().repair(&cfg, &mut ctx);
+        assert_eq!(o2.surviving_cols, 2);
+        // FFP is identical between the variants
+        assert_eq!(o.fully_functional, o2.fully_functional);
+    }
+
+    #[test]
+    fn variants_agree_when_fully_functional() {
+        let cfg = FaultConfig::new(Dims::new(4, 8), vec![Coord::new(1, 2), Coord::new(2, 5)]);
+        let mut rng = Pcg32::new(0, 0);
+        let mut ctx = RepairCtx { per: 0.0, rng: &mut rng };
+        assert!(RowRedundancy::default().repair(&cfg, &mut ctx).fully_functional);
+        assert!(RowRedundancy::per_pe_spare().repair(&cfg, &mut ctx).fully_functional);
+    }
+
+    #[test]
+    fn spare_count_scales_with_rows() {
+        assert_eq!(RowRedundancy::default().spare_count(Dims::new(32, 32)), 32);
+        assert_eq!(RowRedundancy::default().spare_count(Dims::new(64, 32)), 64);
+    }
+}

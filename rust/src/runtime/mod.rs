@@ -1,0 +1,147 @@
+//! PJRT runtime: load AOT-compiled HLO text artifacts and execute them
+//! from the rust hot path (no Python anywhere near here).
+//!
+//! Wraps the `xla` crate (docs.rs/xla 0.1.6 → xla_extension 0.5.1 CPU):
+//! `PjRtClient::cpu()` → `HloModuleProto::from_text_file` →
+//! `client.compile` → `execute`. Interchange is HLO **text** because
+//! jax ≥ 0.5 emits protos with 64-bit instruction ids that this XLA
+//! rejects; the text parser reassigns ids (see /opt/xla-example).
+//!
+//! The exported computations return a 1-tuple (lowered with
+//! `return_tuple=True`), hence the `to_tuple1` unwrap on results.
+
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// A PJRT CPU client plus the executables loaded onto it.
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+/// One compiled HLO module ready to execute.
+pub struct LoadedModule {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+}
+
+/// An int32 tensor exchanged with the runtime (all exported model
+/// inputs/outputs are s32 — the crate has no i8 literal support, so
+/// the graphs take s32 and convert internally).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct I32Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<i32>,
+}
+
+impl I32Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<i32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        Self { shape, data }
+    }
+
+    /// Convenience: an all-`v` tensor.
+    pub fn full(shape: Vec<usize>, v: i32) -> Self {
+        let n = shape.iter().product();
+        Self {
+            shape,
+            data: vec![v; n],
+        }
+    }
+
+    fn to_literal(&self) -> Result<xla::Literal> {
+        let lit = xla::Literal::vec1(&self.data);
+        let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
+        Ok(lit.reshape(&dims)?)
+    }
+}
+
+impl Runtime {
+    /// Create the PJRT CPU client.
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Self { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load and compile an HLO text artifact.
+    pub fn load_hlo(&self, path: impl AsRef<Path>) -> Result<LoadedModule> {
+        let path = path.as_ref();
+        let proto =
+            xla::HloModuleProto::from_text_file(path.to_str().context("non-utf8 path")?)
+                .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        Ok(LoadedModule {
+            exe,
+            name: path
+                .file_stem()
+                .map(|s| s.to_string_lossy().into_owned())
+                .unwrap_or_default(),
+        })
+    }
+}
+
+impl LoadedModule {
+    /// Execute with int32 tensor inputs; returns the first element of
+    /// the output tuple as an [`I32Tensor`].
+    pub fn execute_i32(&self, inputs: &[I32Tensor]) -> Result<I32Tensor> {
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|t| t.to_literal())
+            .collect::<Result<_>>()?;
+        let result = self.exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        let out = result.to_tuple1().context("unwrapping 1-tuple result")?;
+        let shape = out.array_shape()?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        let data = out.to_vec::<i32>().context("reading s32 output")?;
+        Ok(I32Tensor::new(dims, data))
+    }
+}
+
+/// Locate the artifacts directory: `$HYCA_ARTIFACTS`, else
+/// `artifacts/` walking up from the current directory.
+pub fn artifacts_dir() -> Result<std::path::PathBuf> {
+    if let Ok(p) = std::env::var("HYCA_ARTIFACTS") {
+        return Ok(p.into());
+    }
+    let mut dir = std::env::current_dir()?;
+    loop {
+        let cand = dir.join("artifacts");
+        if cand.join("manifest.txt").exists() {
+            return Ok(cand);
+        }
+        if !dir.pop() {
+            anyhow::bail!(
+                "artifacts/ not found — run `make artifacts` first \
+                 (or set HYCA_ARTIFACTS)"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_shape_product_checked() {
+        let t = I32Tensor::new(vec![2, 3], vec![0; 6]);
+        assert_eq!(t.shape, vec![2, 3]);
+        assert_eq!(I32Tensor::full(vec![4], 7).data, vec![7; 4]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn tensor_mismatch_panics() {
+        I32Tensor::new(vec![2, 3], vec![0; 5]);
+    }
+
+    // PJRT-dependent tests live in rust/tests/runtime_e2e.rs — they
+    // need the artifacts built by `make artifacts`.
+}

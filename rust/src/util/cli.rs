@@ -1,0 +1,169 @@
+//! Minimal typed command-line flag parser (the offline build has no
+//! `clap`). Supports `--flag value`, `--flag=value`, boolean `--flag`,
+//! and positional arguments, with auto-generated usage text.
+
+use std::collections::BTreeMap;
+
+/// A parsed command line: positionals in order plus a flag map.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positionals: Vec<String>,
+    flags: BTreeMap<String, String>,
+    bools: Vec<String>,
+}
+
+/// Error raised on malformed or unknown arguments.
+#[derive(Debug, thiserror::Error)]
+pub enum CliError {
+    #[error("unknown flag --{0}")]
+    UnknownFlag(String),
+    #[error("flag --{0} expects a value")]
+    MissingValue(String),
+    #[error("flag --{0}: cannot parse {1:?} as {2}")]
+    BadValue(String, String, &'static str),
+}
+
+/// Declarative flag specification used for parsing + usage text.
+#[derive(Debug, Clone)]
+pub struct FlagSpec {
+    pub name: &'static str,
+    pub takes_value: bool,
+    pub help: &'static str,
+}
+
+impl Args {
+    /// Parse `argv` (without the program name) against the declared
+    /// flag specs.
+    pub fn parse(argv: &[String], specs: &[FlagSpec]) -> Result<Self, CliError> {
+        let mut out = Args::default();
+        let mut it = argv.iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(body) = a.strip_prefix("--") {
+                let (name, inline_val) = match body.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (body.to_string(), None),
+                };
+                let spec = specs
+                    .iter()
+                    .find(|s| s.name == name)
+                    .ok_or_else(|| CliError::UnknownFlag(name.clone()))?;
+                if spec.takes_value {
+                    let v = match inline_val {
+                        Some(v) => v,
+                        None => it
+                            .next()
+                            .cloned()
+                            .ok_or_else(|| CliError::MissingValue(name.clone()))?,
+                    };
+                    out.flags.insert(name, v);
+                } else {
+                    out.bools.push(name);
+                }
+            } else {
+                out.positionals.push(a.clone());
+            }
+        }
+        Ok(out)
+    }
+
+    /// Raw string value of a flag, if provided.
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    /// Boolean flag presence.
+    pub fn has(&self, name: &str) -> bool {
+        self.bools.iter().any(|b| b == name)
+    }
+
+    /// Typed flag with default.
+    pub fn get_parse<T: std::str::FromStr>(
+        &self,
+        name: &str,
+        default: T,
+    ) -> Result<T, CliError> {
+        match self.flags.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse::<T>().map_err(|_| {
+                CliError::BadValue(name.to_string(), v.clone(), std::any::type_name::<T>())
+            }),
+        }
+    }
+}
+
+/// Render usage text for a subcommand.
+pub fn usage(cmd: &str, about: &str, specs: &[FlagSpec]) -> String {
+    let mut s = format!("{about}\n\nUSAGE: {cmd} [FLAGS]\n\nFLAGS:\n");
+    for f in specs {
+        let val = if f.takes_value { " <value>" } else { "" };
+        s.push_str(&format!("  --{}{:<12} {}\n", f.name, val, f.help));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn specs() -> Vec<FlagSpec> {
+        vec![
+            FlagSpec { name: "configs", takes_value: true, help: "MC configs" },
+            FlagSpec { name: "seed", takes_value: true, help: "seed" },
+            FlagSpec { name: "verbose", takes_value: false, help: "chatty" },
+        ]
+    }
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_flags_positionals_and_bools() {
+        let a = Args::parse(&sv(&["fig10", "--configs", "500", "--verbose", "--seed=9"]), &specs())
+            .unwrap();
+        assert_eq!(a.positionals, vec!["fig10"]);
+        assert_eq!(a.get_parse::<usize>("configs", 0).unwrap(), 500);
+        assert_eq!(a.get_parse::<u64>("seed", 0).unwrap(), 9);
+        assert!(a.has("verbose"));
+    }
+
+    #[test]
+    fn default_when_absent() {
+        let a = Args::parse(&sv(&["x"]), &specs()).unwrap();
+        assert_eq!(a.get_parse::<usize>("configs", 123).unwrap(), 123);
+        assert!(!a.has("verbose"));
+    }
+
+    #[test]
+    fn unknown_flag_errors() {
+        assert!(matches!(
+            Args::parse(&sv(&["--nope"]), &specs()),
+            Err(CliError::UnknownFlag(_))
+        ));
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        assert!(matches!(
+            Args::parse(&sv(&["--configs"]), &specs()),
+            Err(CliError::MissingValue(_))
+        ));
+    }
+
+    #[test]
+    fn bad_value_errors() {
+        let a = Args::parse(&sv(&["--configs", "abc"]), &specs()).unwrap();
+        assert!(matches!(
+            a.get_parse::<usize>("configs", 0),
+            Err(CliError::BadValue(..))
+        ));
+    }
+
+    #[test]
+    fn usage_mentions_all_flags() {
+        let u = usage("repro exp", "run experiment", &specs());
+        for f in specs() {
+            assert!(u.contains(f.name));
+        }
+    }
+}

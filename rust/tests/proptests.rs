@@ -1,0 +1,338 @@
+//! Property-based tests on the coordinator's invariants (testkit::prop
+//! — the in-repo proptest substitute, see DESIGN.md §2.1).
+//!
+//! These pin the algebraic properties the paper's claims rest on:
+//! repair-scheme dominance, left-first optimality, capacity formulas,
+//! schedule safety and mapping consistency.
+
+use hyca::array::{mapping, Dims};
+use hyca::faults::montecarlo::FaultModel;
+use hyca::faults::{random, FaultConfig};
+use hyca::hyca::dppu::DppuConfig;
+use hyca::hyca::schedule::{build_schedule, simulate_window_drain};
+use hyca::redundancy::{
+    cr::ColumnRedundancy, dr::DiagonalRedundancy, hyca::HycaScheme, rr::RowRedundancy,
+    RepairCtx, RepairOutcome, Scheme,
+};
+use hyca::testkit::{check, Gen};
+use hyca::util::rng::Pcg32;
+
+fn random_dims(g: &mut Gen) -> Dims {
+    Dims::new(g.usize_in(2, 48), g.usize_in(2, 48))
+}
+
+fn random_cfg(g: &mut Gen, dims: Dims, max_frac: f64) -> FaultConfig {
+    let hi = ((dims.len() as f64 * max_frac) as usize).max(1);
+    let k = g.usize_in(0, hi.min(dims.len()));
+    random::sample_exact(g.rng(), dims, k)
+}
+
+fn repair(s: &dyn Scheme, cfg: &FaultConfig, g: &mut Gen) -> RepairOutcome {
+    let mut rng = Pcg32::split(0xABCD, g.usize_in(0, 1 << 20) as u64);
+    let mut ctx = RepairCtx { per: 0.0, rng: &mut rng };
+    s.repair(cfg, &mut ctx)
+}
+
+#[test]
+fn prop_outcome_bounds() {
+    // surviving prefix is always within [0, cols]; fully functional ⇔
+    // full prefix survives under every scheme.
+    check("outcome bounds", 300, |g| {
+        let dims = random_dims(g);
+        let cfg = random_cfg(g, dims, 0.2);
+        let schemes: Vec<Box<dyn Scheme>> = vec![
+            Box::new(RowRedundancy::default()),
+            Box::new(ColumnRedundancy::default()),
+            Box::new(DiagonalRedundancy),
+            Box::new(HycaScheme::ideal(g.usize_in(0, 64))),
+        ];
+        for s in &schemes {
+            let o = repair(s.as_ref(), &cfg, g);
+            assert!(o.surviving_cols <= dims.cols, "{}", s.name());
+            assert_eq!(o.total_cols, dims.cols);
+            if o.fully_functional {
+                assert_eq!(o.surviving_cols, dims.cols, "{}", s.name());
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_surviving_prefix_is_actually_repairable() {
+    // For each scheme, the surviving prefix must itself be fully
+    // repairable: re-running repair on the faults restricted to the
+    // prefix yields fully-functional.
+    check("prefix self-consistency", 300, |g| {
+        let dims = random_dims(g);
+        let cfg = random_cfg(g, dims, 0.3);
+        let schemes: Vec<Box<dyn Scheme>> = vec![
+            Box::new(RowRedundancy::default()),
+            Box::new(ColumnRedundancy::default()),
+            Box::new(DiagonalRedundancy),
+        ];
+        for s in &schemes {
+            let o = repair(s.as_ref(), &cfg, g);
+            if o.surviving_cols == 0 {
+                continue;
+            }
+            // restrict the fault set to the surviving prefix but keep
+            // the *physical* array (the spare structure is unchanged by
+            // degradation): the restricted set must be fully repairable.
+            let sub = FaultConfig::new(
+                dims,
+                cfg.faulty()
+                    .iter()
+                    .filter(|c| (c.col as usize) < o.surviving_cols)
+                    .copied()
+                    .collect(),
+            );
+            let o2 = repair(s.as_ref(), &sub, g);
+            assert!(
+                o2.fully_functional,
+                "{}: prefix {} not self-repairable",
+                s.name(),
+                o.surviving_cols
+            );
+        }
+        // HyCA's capacity is evaluated at the *original* column count
+        // (the register-file window is sized by the physical array, not
+        // the surviving prefix), so its self-consistency criterion is
+        // count-based:
+        let hyca = HycaScheme::ideal(g.usize_in(0, 48));
+        let o = repair(&hyca, &cfg, g);
+        let in_prefix = cfg
+            .faulty()
+            .iter()
+            .filter(|c| (c.col as usize) < o.surviving_cols)
+            .count();
+        assert!(
+            in_prefix <= hyca.dppu.capacity(dims.cols),
+            "HyCA prefix holds more faults than capacity"
+        );
+    });
+}
+
+#[test]
+fn prop_hyca_dominates_classical_schemes() {
+    // With spares = Col (the paper's sizing), ideal HyCA's surviving
+    // prefix is ≥ every classical scheme's on every configuration:
+    // arbitrary-location repair subsumes constrained repair.
+    // (n is a multiple of the DPPU group width 8: otherwise the grouped
+    // register-file alignment caps capacity below Col — exactly the
+    // Fig. 15 misalignment effect — and dominance is not claimed.)
+    check("hyca dominance", 300, |g| {
+        let n = 8 * g.usize_in(1, 5);
+        let dims = Dims::new(n, n);
+        let cfg = random_cfg(g, dims, 0.25);
+        let hyca = repair(&HycaScheme::ideal(dims.cols), &cfg, g);
+        for s in [
+            &RowRedundancy::default() as &dyn Scheme,
+            &ColumnRedundancy::default(),
+            &DiagonalRedundancy,
+        ] {
+            let o = repair(s, &cfg, g);
+            assert!(
+                hyca.surviving_cols >= o.surviving_cols,
+                "HyCA {} < {} {}",
+                hyca.surviving_cols,
+                s.name(),
+                o.surviving_cols
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_hyca_ffp_iff_count_within_capacity() {
+    check("hyca capacity criterion", 400, |g| {
+        let dims = Dims::new(32, 32);
+        let cap = g.usize_in(0, 64);
+        let cfg = random_cfg(g, dims, 0.08);
+        let scheme = HycaScheme::ideal(cap);
+        let o = repair(&scheme, &cfg, g);
+        let capacity = scheme.dppu.capacity(dims.cols);
+        assert_eq!(o.fully_functional, cfg.count() <= capacity);
+    });
+}
+
+#[test]
+fn prop_hyca_left_first_is_optimal() {
+    // No repair subset of size ≤ capacity yields a longer prefix than
+    // the left-first choice: the prefix is bounded by the (cap+1)-th
+    // fault's column no matter which faults are repaired.
+    check("left-first optimality", 300, |g| {
+        let dims = Dims::new(16, 32);
+        let cfg = random_cfg(g, dims, 0.15);
+        let cap = g.usize_in(0, 12);
+        let scheme = HycaScheme::ideal(cap);
+        let capacity = scheme.dppu.capacity(dims.cols);
+        let o = repair(&scheme, &cfg, g);
+        if cfg.count() <= capacity {
+            assert!(o.fully_functional);
+            return;
+        }
+        // any strategy leaves ≥ count-capacity faults unrepaired; the
+        // best achievable prefix is the column of the (capacity+1)-th
+        // fault in column order (faults() is column-sorted).
+        let bound = cfg.faulty()[capacity].col as usize;
+        assert_eq!(o.surviving_cols, bound);
+    });
+}
+
+#[test]
+fn prop_more_spares_never_hurt() {
+    // Monotonicity: HyCA with a larger DPPU never yields a shorter
+    // prefix; RR/CR with more spares per region likewise.
+    check("spare monotonicity", 300, |g| {
+        let dims = random_dims(g);
+        let cfg = random_cfg(g, dims, 0.2);
+        let a = g.usize_in(0, 32);
+        let b = a + g.usize_in(0, 32);
+        let oa = repair(&HycaScheme::ideal(a), &cfg, g);
+        let ob = repair(&HycaScheme::ideal(b), &cfg, g);
+        assert!(ob.surviving_cols >= oa.surviving_cols);
+        let r1 = repair(&RowRedundancy { spares_per_row: 1, ..Default::default() }, &cfg, g);
+        let r2 = repair(&RowRedundancy { spares_per_row: 2, ..Default::default() }, &cfg, g);
+        // and the per-PE-spare variant dominates all-or-nothing
+        let rp = repair(&RowRedundancy::per_pe_spare(), &cfg, g);
+        assert!(rp.surviving_cols >= r1.surviving_cols);
+        assert!(r2.surviving_cols >= r1.surviving_cols);
+        let c1 = repair(&ColumnRedundancy { spares_per_col: 1 }, &cfg, g);
+        let c2 = repair(&ColumnRedundancy { spares_per_col: 2 }, &cfg, g);
+        assert!(c2.surviving_cols >= c1.surviving_cols);
+    });
+}
+
+#[test]
+fn prop_fewer_faults_never_hurt() {
+    // Removing a fault never shrinks any scheme's surviving prefix.
+    check("fault monotonicity", 200, |g| {
+        let dims = Dims::new(g.usize_in(4, 24), g.usize_in(4, 24));
+        let cfg = random_cfg(g, dims, 0.25);
+        if cfg.count() == 0 {
+            return;
+        }
+        let drop = g.usize_in(0, cfg.count() - 1);
+        let reduced = FaultConfig::new(
+            dims,
+            cfg.faulty()
+                .iter()
+                .enumerate()
+                .filter(|(i, _)| *i != drop)
+                .map(|(_, c)| *c)
+                .collect(),
+        );
+        for s in [
+            &RowRedundancy::default() as &dyn Scheme,
+            &ColumnRedundancy::default(),
+            &DiagonalRedundancy,
+            &HycaScheme::ideal(8),
+        ] {
+            let full = repair(s, &cfg, g);
+            let red = repair(s, &reduced, g);
+            assert!(
+                red.surviving_cols >= full.surviving_cols,
+                "{}: removing a fault shrank prefix",
+                s.name()
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_window_sim_matches_capacity_formula() {
+    // The event-level window simulation and the closed-form capacity
+    // agree for every structure/size/col combination.
+    check("window sim == capacity", 400, |g| {
+        let col = *g.choose(&[8usize, 16, 32, 64]);
+        let group = *g.choose(&[4usize, 8, 16]);
+        let size = group * g.usize_in(1, 8);
+        let cfgs = [
+            DppuConfig {
+                size,
+                structure: hyca::hyca::dppu::DppuStructure::Grouped { group_size: group },
+                mult_ring: 4,
+                add_ring: 3,
+            },
+            DppuConfig::unified(size),
+        ];
+        for d in cfgs {
+            let cap = d.capacity(col);
+            let offered = g.usize_in(0, 2 * cap + 8);
+            let drained = simulate_window_drain(&d, col, offered);
+            assert_eq!(drained, offered.min(cap), "{d:?} col={col}");
+        }
+    });
+}
+
+#[test]
+fn prop_schedule_safety() {
+    // build_schedule accepts exactly the configurations whose phases
+    // fit: D + F ≤ T_iter and F ≤ capacity; accepted schedules are
+    // internally consistent.
+    check("schedule safety", 400, |g| {
+        let col = *g.choose(&[16usize, 32]);
+        let dppu = DppuConfig::paper(*g.choose(&[16usize, 32, 48]));
+        let t_iter = g.usize_in(col / 2, 4096);
+        let faults = g.usize_in(0, 64);
+        match build_schedule(&dppu, t_iter, col, faults) {
+            Ok(ph) => {
+                assert!(faults <= dppu.capacity(col));
+                assert!(col + faults <= t_iter);
+                assert_eq!(ph.array_write_end, col);
+                assert_eq!(ph.dppu_write_end, col + faults);
+                assert_eq!(ph.t_iter, t_iter);
+                assert_eq!(ph.idle_cycles(), t_iter - col - faults);
+            }
+            Err(_) => {
+                assert!(faults > dppu.capacity(col) || col + faults > t_iter);
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_mapping_partition() {
+    // Every output feature of a layer maps to exactly one PE, and the
+    // per-PE output lists partition the corrupted-output map.
+    check("mapping partition", 200, |g| {
+        let dims = Dims::new(g.usize_in(2, 16), g.usize_in(2, 16));
+        let out = mapping::LayerOutput::Conv {
+            oc: g.usize_in(1, 24),
+            oh: g.usize_in(1, 12),
+            ow: g.usize_in(1, 12),
+        };
+        let cfg = random_cfg(g, dims, 1.0); // any subset of PEs
+        let map = mapping::corrupted_outputs(&cfg, out);
+        let mut covered = vec![false; out.len()];
+        for (_, _, outs) in mapping::outputs_of_faulty_pes(&cfg, out) {
+            for o in outs {
+                assert!(!covered[o], "output {o} claimed twice");
+                covered[o] = true;
+            }
+        }
+        assert_eq!(covered, map, "per-PE lists must equal the corruption map");
+    });
+}
+
+#[test]
+fn prop_montecarlo_thread_invariance() {
+    // Same seed → same per-config outcome regardless of fan-out width.
+    check("thread invariance", 20, |g| {
+        let dims = Dims::new(16, 16);
+        let per = g.f64_in(0.0, 0.1);
+        let seed = g.usize_in(0, 1 << 30) as u64;
+        let run = |threads| {
+            hyca::faults::montecarlo::map_configs(
+                seed,
+                48,
+                dims,
+                per,
+                FaultModel::Random,
+                threads,
+                |_, cfg| cfg.count(),
+            )
+        };
+        assert_eq!(run(1), run(7));
+    });
+}
