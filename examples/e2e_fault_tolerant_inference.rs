@@ -1,7 +1,9 @@
 //! END-TO-END DRIVER: the full three-layer system on a real workload.
 //!
-//! 1. loads the AOT-compiled quantized CNN (JAX/Pallas → HLO text) into
-//!    the PJRT CPU runtime — no Python anywhere on this path;
+//! 1. loads the quantized CNN into an inference backend — the
+//!    AOT-compiled HLO through PJRT when built with `--features pjrt`
+//!    and artifacts exist, else the hermetic native backend over the
+//!    builtin model (no Python anywhere on this path either way);
 //! 2. serves the held-out eval set and reports healthy accuracy;
 //! 3. injects persistent faults into the simulated computing array,
 //!    derives the per-layer stuck-at masks through the
@@ -10,7 +12,8 @@
 //!    the DPPU, and shows accuracy restored — plus throughput numbers
 //!    for the serving loop.
 //!
-//! Run `make artifacts` first. Results are recorded in EXPERIMENTS.md.
+//! Runs out of the box; `make artifacts` + `--features pjrt` switches
+//! to the compiled path. Results are recorded in EXPERIMENTS.md.
 //!
 //! ```sh
 //! cargo run --release --example e2e_fault_tolerant_inference [PER%] [seed]
@@ -22,7 +25,6 @@ use hyca::faults::montecarlo::FaultModel;
 use hyca::faults::stuckat::sample_stuck_mask;
 use hyca::hyca::detect::simulate_scan;
 use hyca::hyca::fpt::FaultPeTable;
-use hyca::inference::masks::ModelGeometry;
 use hyca::inference::{Engine, LayerMasks};
 use hyca::redundancy::{hyca::HycaScheme, RepairCtx, Scheme};
 use hyca::util::rng::Pcg32;
@@ -35,18 +37,18 @@ fn main() -> anyhow::Result<()> {
     // coordinator::exp_fig02 for the model:array ratio rationale.
     let dims = Dims::new(8, 8);
 
-    println!("== 1. load AOT artifacts into PJRT ==");
+    println!("== 1. load the model into an inference backend ==");
     let t0 = std::time::Instant::now();
-    let engine = Engine::load()?;
+    let engine = Engine::auto();
     println!(
-        "   platform={} model={} ({} eval images, batch {}) in {:.2}s",
-        engine.runtime.platform(),
-        engine.model.name,
+        "   backend={} source={} ({} eval images, batch {}) in {:.2}s",
+        engine.backend.name(),
+        engine.source,
         engine.eval.images.len(),
         engine.batch,
         t0.elapsed().as_secs_f64()
     );
-    let geometry = ModelGeometry { batch: engine.batch, ..ModelGeometry::default() };
+    let geometry = engine.geometry();
 
     println!("\n== 2. healthy serving ==");
     let t0 = std::time::Instant::now();

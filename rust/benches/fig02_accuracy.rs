@@ -1,20 +1,14 @@
 //! Bench + regeneration for Fig. 2: end-to-end accuracy vs PER through
-//! the PJRT-compiled model. Requires `make artifacts`; skips loudly
-//! otherwise. Also times the serving hot path (one full eval pass).
+//! the active inference backend (compiled artifacts when present, the
+//! builtin model on the native backend otherwise). Also times the
+//! serving hot path (one batch through the backend).
 use hyca::benchkit::{Bench, BenchConfig};
 use hyca::coordinator::{find, report, RunOpts};
 use hyca::inference::{Engine, LayerMasks};
-use hyca::inference::masks::ModelGeometry;
 use std::time::Duration;
 
 fn main() {
-    let engine = match Engine::load() {
-        Ok(e) => e,
-        Err(e) => {
-            eprintln!("SKIPPING fig02 bench (run `make artifacts`): {e}");
-            return;
-        }
-    };
+    let engine = Engine::auto();
     let opts = RunOpts { fast: true, out_dir: "results/bench".into(), ..RunOpts::default() };
     let tables = find("fig2").unwrap().run(&opts).unwrap();
     report::emit(&opts.out_dir, "fig2", &tables).unwrap();
@@ -23,12 +17,20 @@ fn main() {
         "fig02",
         BenchConfig { warmup: Duration::from_millis(500), samples: 10, min_sample: Duration::from_millis(100) },
     );
-    let geometry = ModelGeometry { batch: engine.batch, ..ModelGeometry::default() };
+    let geometry = engine.geometry();
     let masks = LayerMasks::identity(&geometry);
     let images = engine.eval.images[..engine.batch].to_vec();
-    b.bench_units("pjrt_infer_batch16", Some(16.0), || {
-        std::hint::black_box(engine.predict_batch(&images, &masks).unwrap());
-    });
+    b.bench_units(
+        format!(
+            "{}_infer_batch{}",
+            engine.backend.name().replace(':', "_"),
+            engine.batch
+        ),
+        Some(engine.batch as f64),
+        || {
+            std::hint::black_box(engine.predict_batch(&images, &masks).unwrap());
+        },
+    );
     b.bench_units("mask_build_30faults", Some(1.0), || {
         let cfg = hyca::faults::montecarlo::FaultModel::Random.sample_indexed(
             1, 1, hyca::array::Dims::PAPER, 0.03,

@@ -13,14 +13,18 @@
 //! stays comparable to ResNet18 : 32×32 — on the full 32×32 array the
 //! tiny CNN would exercise only a sliver of the PEs and no fault rate
 //! could reproduce the paper's accuracy cliff. Default 12 configs/PER
-//! because each inference pass runs the full compiled model.
+//! because each inference pass runs the full model.
+//!
+//! Runs on [`Engine::auto`]: the compiled artifacts when present, the
+//! deterministic builtin model on the native backend otherwise — so the
+//! experiment (and its golden test, `rust/tests/golden.rs`) is fully
+//! hermetic.
 
 use super::{Experiment, RunOpts};
 use crate::array::Dims;
 use crate::faults::ber::ber_from_per;
 use crate::faults::montecarlo::FaultModel;
 use crate::inference::{Engine, LayerMasks};
-use crate::inference::masks::ModelGeometry;
 use crate::redundancy::hyca::HycaScheme;
 use crate::redundancy::{RepairCtx, Scheme};
 use crate::util::rng::Pcg32;
@@ -36,22 +40,30 @@ impl Experiment for Fig02 {
     }
 
     fn title(&self) -> &'static str {
-        "Prediction accuracy vs PER (PJRT end-to-end), faulty vs HyCA-repaired"
+        "Prediction accuracy vs PER (backend end-to-end), faulty vs HyCA-repaired"
     }
 
     fn run(&self, opts: &RunOpts) -> Result<Vec<Table>> {
-        let engine = Engine::load()?;
-        let dims = Dims::new(8, 8); // see header: ratio-preserving mapping
-        let geometry = ModelGeometry {
-            batch: engine.batch,
-            ..ModelGeometry::default()
+        let engine = if opts.builtin_model {
+            Engine::builtin()
+        } else {
+            Engine::auto()
         };
+        let dims = Dims::new(8, 8); // see header: ratio-preserving mapping
+        let geometry = engine.geometry();
         let hyca = HycaScheme::paper(8); // DPPU sized to Col, as in the paper
         let configs = if opts.fast { 4 } else { 12.min(opts.n_configs()) };
         let pers = [0.0, 0.001, 0.0025, 0.005, 0.01, 0.02, 0.03, 0.06];
         let clean_acc = engine.accuracy(&LayerMasks::identity(&geometry))?;
+        // record which model/backend produced these numbers so builtin
+        // results can never be mistaken for the artifact reproduction
         let mut t = Table::new(
-            self.title(),
+            format!(
+                "{} [model: {}, backend: {}]",
+                self.title(),
+                engine.source,
+                engine.backend.name()
+            ),
             &[
                 "PER(%)",
                 "configs",

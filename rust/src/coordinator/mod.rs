@@ -35,6 +35,11 @@ pub struct RunOpts {
     pub out_dir: std::path::PathBuf,
     /// Reduced sweep for quick iterations (`--fast`).
     pub fast: bool,
+    /// Force the builtin synthetic model for functional experiments
+    /// (`--builtin`): skip the artifact probe so results never depend
+    /// on local artifact state. The golden and integration tests set
+    /// this for hermetic byte-exact runs.
+    pub builtin_model: bool,
 }
 
 impl Default for RunOpts {
@@ -45,6 +50,7 @@ impl Default for RunOpts {
             threads: crate::faults::montecarlo::default_threads(),
             out_dir: "results".into(),
             fast: false,
+            builtin_model: false,
         }
     }
 }

@@ -43,7 +43,9 @@ impl MaskPair {
         (self.and_mask[i], self.or_mask[i])
     }
 
-    fn set(&mut self, r: usize, c: usize, m: StuckMask) {
+    /// Overwrite element (r, c) with a concrete stuck mask (used by the
+    /// fault-derivation below and by tests that build ad-hoc mask sets).
+    pub fn set(&mut self, r: usize, c: usize, m: StuckMask) {
         let i = r * self.cols + c;
         self.and_mask[i] = m.and_mask as i32;
         self.or_mask[i] = m.or_mask as i32;

@@ -1,18 +1,23 @@
-//! Functional inference pipeline: run the AOT-compiled quantized CNN
-//! on the (simulated) faulty DLA and measure prediction accuracy —
-//! the Fig. 2 experiment and the end-to-end driver.
+//! Functional inference pipeline: run the quantized CNN on the
+//! (simulated) faulty DLA and measure prediction accuracy — the Fig. 2
+//! experiment and the end-to-end driver.
 //!
 //! Responsibilities:
 //! * parse `artifacts/model_params.txt` (quantized weights) and
-//!   `artifacts/eval_set.bin` (held-out images + labels);
+//!   `artifacts/eval_set.bin` (held-out images + labels), or construct
+//!   the deterministic builtin model when no artifacts exist
+//!   ([`Engine::builtin`] — master seed recorded in EXPERIMENTS.md);
 //! * derive per-layer stuck-at mask tensors from a [`FaultConfig`] via
 //!   the output-stationary mapping ([`crate::array::mapping`]) — the
-//!   exact inputs the exported HLO expects;
-//! * evaluate accuracy through the PJRT runtime, healthy / faulty /
+//!   exact inputs the backends expect;
+//! * evaluate accuracy through a pluggable [`Backend`] (native by
+//!   default, PJRT under `--features pjrt`), healthy / faulty /
 //!   HyCA-repaired;
 //! * provide a bit-exact rust oracle of the same forward pass
-//!   ([`oracle_logits`]) used by `rust/tests/runtime_e2e.rs` to verify
-//!   the HLO path end to end.
+//!   ([`oracle_logits`]) used by `rust/tests/proptests.rs` and
+//!   `rust/tests/runtime_e2e.rs` to verify every backend end to end.
+//!
+//! [`FaultConfig`]: crate::faults::FaultConfig
 
 pub mod masks;
 pub mod params;
@@ -20,15 +25,20 @@ pub mod params;
 use anyhow::{Context, Result};
 use std::path::Path;
 
-use crate::runtime::{I32Tensor, LoadedModule, Runtime};
+use crate::runtime::{Backend, I32Tensor, NativeBackend};
+use crate::util::rng::Pcg32;
 
 pub use masks::LayerMasks;
 pub use params::{ModelParams, EVAL_MAGIC};
 
+/// Master seed of the builtin synthetic model and its eval set
+/// (EXPERIMENTS.md §Seeds). Spells "HyCA".
+pub const BUILTIN_SEED: u64 = 0x48_79_43_41;
+
 /// The held-out evaluation set.
 #[derive(Debug, Clone)]
 pub struct EvalSet {
-    pub images: Vec<Vec<i8>>, // each 1·16·16
+    pub images: Vec<Vec<i8>>, // each c·h·w
     pub labels: Vec<i32>,
     pub chw: (usize, usize, usize),
 }
@@ -70,23 +80,77 @@ impl EvalSet {
             chw: (c, h, w),
         })
     }
+
+    /// Deterministic synthetic eval set for the builtin model: random
+    /// int8 images whose labels are *defined* as the clean model's own
+    /// argmax — so the healthy accuracy is exactly 1.0 by construction,
+    /// fault injection measurably degrades it, and a full HyCA repair
+    /// must restore exactly 1.0 (the bit-exactness contract of
+    /// `array::sim`, exercised without any artifacts).
+    pub fn synthetic(params: &ModelParams, n: usize, seed: u64) -> Self {
+        // This helper labels through identity masks of the *builtin*
+        // geometry, so the params must match it exactly — assert the
+        // coupling up front instead of indexing out of bounds later.
+        let g = masks::ModelGeometry::default();
+        assert_eq!(
+            params.convs.len(),
+            g.conv_shapes.len(),
+            "EvalSet::synthetic expects the builtin 3-conv geometry"
+        );
+        for (i, (conv, &(sp, oc))) in
+            params.convs.iter().zip(&g.conv_shapes).enumerate()
+        {
+            let side = params.conv_out_side(i);
+            assert_eq!(
+                (side * side, conv.out_c),
+                (sp, oc),
+                "conv {i} deviates from the builtin geometry"
+            );
+        }
+        assert_eq!(params.fc.out_n, g.classes, "fc width deviates");
+        let chw = (params.convs[0].in_c, 16, 16);
+        let img_len = chw.0 * chw.1 * chw.2;
+        let mut rng = Pcg32::new(seed, 0xE7A1);
+        let images: Vec<Vec<i8>> = (0..n)
+            .map(|_| {
+                (0..img_len)
+                    .map(|_| (rng.below(256) as i32 - 128) as i8)
+                    .collect()
+            })
+            .collect();
+        let identity = LayerMasks::identity(&g);
+        let labels = images
+            .iter()
+            .map(|img| {
+                let logits = oracle_logits(params, img, &identity);
+                argmax_rows(&logits, logits.len())[0] as i32
+            })
+            .collect();
+        Self {
+            images,
+            labels,
+            chw,
+        }
+    }
 }
 
-/// The full inference engine: runtime + compiled model + parameters.
+/// The full inference engine: a pluggable backend + model parameters +
+/// eval data. `repro info` reports `backend.name()` and `source`.
 pub struct Engine {
-    pub runtime: Runtime,
-    pub model: LoadedModule,
+    pub backend: Box<dyn Backend>,
     pub params: ModelParams,
     pub eval: EvalSet,
     pub batch: usize,
+    /// Where the model came from: "artifacts" or "builtin".
+    pub source: &'static str,
 }
 
 impl Engine {
-    /// Load everything from the artifacts directory.
+    /// Load everything from the artifacts directory. The backend is
+    /// PJRT when the `pjrt` feature is enabled, the native interpreter
+    /// (over the parsed quantized weights) otherwise.
     pub fn load() -> Result<Self> {
         let dir = crate::runtime::artifacts_dir()?;
-        let runtime = Runtime::cpu()?;
-        let model = runtime.load_hlo(dir.join("model.hlo.txt"))?;
         let params = ModelParams::load(dir.join("model_params.txt"))?;
         let eval = EvalSet::load(dir.join("eval_set.bin"))?;
         let manifest = std::fs::read_to_string(dir.join("manifest.txt"))?;
@@ -95,29 +159,128 @@ impl Engine {
             .find_map(|l| l.strip_prefix("batch "))
             .and_then(|v| v.parse().ok())
             .context("manifest missing batch")?;
+        anyhow::ensure!(
+            params.convs.len() == 3,
+            "exported model must have the 3-conv architecture (got {})",
+            params.convs.len()
+        );
+        let backend = Self::artifact_backend(&dir, &params)?;
         Ok(Self {
-            runtime,
-            model,
+            backend,
             params,
             eval,
             batch,
+            source: "artifacts",
         })
     }
 
-    /// Run one batch of images through the compiled model with the
-    /// given masks; returns argmax predictions.
-    pub fn predict_batch(&self, images: &[Vec<i8>], masks: &LayerMasks) -> Result<Vec<usize>> {
+    #[cfg(feature = "pjrt")]
+    fn artifact_backend(
+        dir: &std::path::Path,
+        _params: &ModelParams,
+    ) -> Result<Box<dyn Backend>> {
+        Ok(Box::new(crate::runtime::pjrt::PjrtBackend::load(
+            dir.join("model.hlo.txt"),
+        )?))
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    fn artifact_backend(
+        _dir: &std::path::Path,
+        params: &ModelParams,
+    ) -> Result<Box<dyn Backend>> {
+        Ok(Box::new(NativeBackend::new(params.clone())))
+    }
+
+    /// The hermetic builtin engine: deterministic synthetic model +
+    /// eval set on the native backend. Never fails, needs no artifacts.
+    pub fn builtin() -> Self {
+        let params = ModelParams::synthetic(BUILTIN_SEED);
+        let eval = EvalSet::synthetic(&params, 32, BUILTIN_SEED ^ 0x5EED);
+        Self {
+            backend: Box::new(NativeBackend::new(params.clone())),
+            params,
+            eval,
+            batch: 16,
+            source: "builtin",
+        }
+    }
+
+    /// Artifacts when available, builtin otherwise — what the fig2
+    /// experiment and the examples use so they run hermetically.
+    ///
+    /// `HYCA_FORCE_BUILTIN=1` (set in the environment before launch)
+    /// skips the artifact probe entirely; in-process callers that need
+    /// the same pinning use `RunOpts::builtin_model` / `--builtin`
+    /// instead, which avoids mutating the process environment.
+    pub fn auto() -> Self {
+        let forced = std::env::var("HYCA_FORCE_BUILTIN")
+            .map(|v| !matches!(v.as_str(), "" | "0" | "false"))
+            .unwrap_or(false);
+        if forced {
+            return Self::builtin();
+        }
+        match Self::load() {
+            Ok(e) => e,
+            Err(err) => {
+                eprintln!(
+                    "[hyca] artifacts unavailable ({err:#}); \
+                     using the builtin synthetic model on the native backend"
+                );
+                Self::builtin()
+            }
+        }
+    }
+
+    /// The mask geometry for this engine's model and batch size,
+    /// derived from the loaded parameters — the one place the
+    /// `ModelGeometry` coupling is constructed (used by the fig2
+    /// experiment, the examples, the benches and the e2e tests).
+    pub fn geometry(&self) -> masks::ModelGeometry {
+        assert_eq!(
+            self.params.convs.len(),
+            3,
+            "mask geometry assumes the 3-conv export architecture"
+        );
+        let mut conv_shapes = [(0usize, 0usize); 3];
+        for (i, conv) in self.params.convs.iter().enumerate() {
+            let side = self.params.conv_out_side(i);
+            conv_shapes[i] = (side * side, conv.out_c);
+        }
+        masks::ModelGeometry {
+            batch: self.batch,
+            conv_shapes,
+            classes: self.params.fc.out_n,
+        }
+    }
+
+    /// Raw logits for one batch through the backend. The input-assembly
+    /// convention (image tensor followed by the mask pairs, see
+    /// [`Backend`]) lives here and only here.
+    pub fn logits(&self, images: &[Vec<i8>], masks: &LayerMasks) -> Result<I32Tensor> {
         anyhow::ensure!(images.len() == self.batch, "batch size mismatch");
         let (c, h, w) = self.eval.chw;
+        let classes = self.params.fc.out_n;
         let mut x = Vec::with_capacity(self.batch * c * h * w);
         for img in images {
             x.extend(img.iter().map(|&v| v as i32));
         }
         let mut inputs = vec![I32Tensor::new(vec![self.batch, c, h, w], x)];
         inputs.extend(masks.to_tensors());
-        let logits = self.model.execute_i32(&inputs)?;
-        anyhow::ensure!(logits.shape == vec![self.batch, 10], "bad logits shape");
-        Ok(argmax_rows(&logits.data, 10))
+        let logits = self.backend.execute_i32(&inputs)?;
+        anyhow::ensure!(
+            logits.shape == vec![self.batch, classes],
+            "bad logits shape {:?}",
+            logits.shape
+        );
+        Ok(logits)
+    }
+
+    /// Run one batch of images through the backend with the given
+    /// masks; returns argmax predictions.
+    pub fn predict_batch(&self, images: &[Vec<i8>], masks: &LayerMasks) -> Result<Vec<usize>> {
+        let logits = self.logits(images, masks)?;
+        Ok(argmax_rows(&logits.data, self.params.fc.out_n))
     }
 
     /// Accuracy of the model over the eval set under the given masks.
@@ -151,12 +314,21 @@ pub fn argmax_rows(data: &[i32], width: usize) -> Vec<usize> {
 }
 
 /// Bit-exact rust oracle of the exported forward pass (one image):
-/// conv×3 (+pool×2) + fc, with per-output stuck-at corruption applied
-/// through the same masks the HLO receives.
+/// quantized convolutions (2×2 average pool after every conv except the
+/// last) + fc, with per-output stuck-at corruption applied through the
+/// same masks the backends receive. This is the reference the backend
+/// implementations are checked against (`rust/tests/proptests.rs`,
+/// `rust/tests/runtime_e2e.rs`) — it deliberately applies masks inline
+/// rather than through `sim::corrupt_acc` so the two code paths stay
+/// independent.
 pub fn oracle_logits(params: &ModelParams, image: &[i8], masks: &LayerMasks) -> Vec<i32> {
     use crate::array::sim;
     let mut h = image.to_vec();
-    let mut shape = sim::Chw::new(1, 16, 16);
+    // input feature maps are square; derive the side from the image size
+    let c0 = params.convs[0].in_c;
+    let side = ((image.len() / c0) as f64).sqrt().round() as usize;
+    debug_assert_eq!(c0 * side * side, image.len(), "non-square input image");
+    let mut shape = sim::Chw::new(c0, side, side);
     for (i, conv) in params.convs.iter().enumerate() {
         let mut acc = sim::conv_acc(conv, &h, shape);
         let (oh, ow) = conv.out_hw(shape.h, shape.w);
@@ -172,7 +344,7 @@ pub fn oracle_logits(params: &ModelParams, image: &[i8], masks: &LayerMasks) -> 
         }
         h = sim::requant(&acc, conv.m, conv.shift, conv.relu);
         shape = sim::Chw::new(conv.out_c, oh, ow);
-        if i < 2 {
+        if i + 1 < params.convs.len() {
             let (p, s) = sim::avgpool2(&h, shape);
             h = p;
             shape = s;
@@ -194,5 +366,29 @@ mod tests {
     fn argmax_rows_basic() {
         let d = vec![1, 5, 3, 9, 2, 2];
         assert_eq!(argmax_rows(&d, 3), vec![1, 0]);
+    }
+
+    #[test]
+    fn builtin_engine_is_deterministic_and_perfect_when_healthy() {
+        let a = Engine::builtin();
+        let b = Engine::builtin();
+        assert_eq!(a.eval.images, b.eval.images);
+        assert_eq!(a.eval.labels, b.eval.labels);
+        assert_eq!(a.source, "builtin");
+        assert_eq!(a.backend.name(), "native");
+        let acc = a.accuracy(&LayerMasks::identity(&a.geometry())).unwrap();
+        assert_eq!(acc, 1.0, "labels are the clean argmax by construction");
+    }
+
+    #[test]
+    fn builtin_eval_set_matches_model_geometry() {
+        let e = Engine::builtin();
+        assert_eq!(e.eval.chw, (1, 16, 16));
+        assert_eq!(e.eval.images.len() % e.batch, 0);
+        assert_eq!(e.params.convs.len(), 3);
+        assert_eq!(e.params.fc.out_n, 10);
+        for l in &e.eval.labels {
+            assert!((0..10).contains(l));
+        }
     }
 }

@@ -5,6 +5,7 @@ use anyhow::{bail, Context, Result};
 use std::path::Path;
 
 use crate::array::sim::{ConvLayer, FcLayer};
+use crate::util::rng::Pcg32;
 
 /// Magic header of `eval_set.bin`.
 pub const EVAL_MAGIC: &[u8; 8] = b"HYCAEVAL";
@@ -107,6 +108,44 @@ impl ModelParams {
             _ => 4,
         }
     }
+
+    /// Deterministic synthetic parameters with the exact geometry of the
+    /// exported model (16×16×1 input → conv8 → pool → conv16 → pool →
+    /// conv16 → fc 256→10), for hermetic runs without artifacts
+    /// ([`crate::inference::Engine::builtin`]). Weights are small random
+    /// int8 values; the requant shifts are sized so activations use the
+    /// int8 range without saturating (DESIGN.md §2.2).
+    pub fn synthetic(seed: u64) -> Self {
+        let mut rng = Pcg32::new(seed, 0x9A7A);
+        let mut conv = |in_c: usize, out_c: usize, shift: u32| ConvLayer {
+            out_c,
+            in_c,
+            k: 3,
+            stride: 1,
+            pad: 1,
+            weights: (0..out_c * in_c * 9)
+                .map(|_| (rng.below(5) as i32 - 2) as i8)
+                .collect(),
+            bias: (0..out_c).map(|_| rng.below(33) as i32 - 16).collect(),
+            m: 1,
+            shift,
+            relu: true,
+        };
+        let convs = vec![conv(1, 8, 4), conv(8, 16, 3), conv(16, 16, 3)];
+        let fc = FcLayer {
+            out_n: 10,
+            in_n: 16 * 4 * 4,
+            weights: (0..10 * 16 * 4 * 4)
+                .map(|_| (rng.below(5) as i32 - 2) as i8)
+                .collect(),
+            bias: (0..10).map(|_| rng.below(129) as i32 - 64).collect(),
+        };
+        Self {
+            convs,
+            fc,
+            in_scale: 1.0 / 128.0,
+        }
+    }
 }
 
 #[cfg(test)]
@@ -146,5 +185,27 @@ b 9 10
     #[test]
     fn rejects_garbage() {
         assert!(ModelParams::parse("nonsense").is_err());
+    }
+
+    #[test]
+    fn synthetic_matches_export_geometry() {
+        let p = ModelParams::synthetic(7);
+        assert_eq!(p.convs.len(), 3);
+        assert_eq!(
+            p.convs.iter().map(|c| (c.in_c, c.out_c)).collect::<Vec<_>>(),
+            vec![(1, 8), (8, 16), (16, 16)]
+        );
+        for c in &p.convs {
+            assert_eq!(c.weights.len(), c.out_c * c.in_c * 9);
+            assert_eq!(c.bias.len(), c.out_c);
+            assert!(c.relu && c.shift >= 1);
+        }
+        assert_eq!(p.fc.in_n, 256);
+        assert_eq!(p.fc.out_n, 10);
+        // deterministic in the seed
+        let q = ModelParams::synthetic(7);
+        assert_eq!(p.convs[0].weights, q.convs[0].weights);
+        let r = ModelParams::synthetic(8);
+        assert_ne!(p.convs[0].weights, r.convs[0].weights);
     }
 }

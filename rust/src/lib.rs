@@ -16,8 +16,12 @@
 //!   output-stationary matmul kernel with stuck-at corruption, checked
 //!   against a pure-jnp oracle.
 //!
-//! At experiment time only the rust binary runs; compiled HLO artifacts
-//! are loaded through the PJRT C API ([`runtime`]).
+//! At experiment time only the rust binary runs. Inference executes on
+//! a pluggable [`runtime::Backend`]: the hermetic bit-exact
+//! [`runtime::native`] interpreter by default, or the compiled HLO
+//! artifacts through the PJRT C API under `--features pjrt`
+//! (DESIGN.md §3). The default build needs no artifacts, no network and
+//! no native libraries.
 //!
 //! Start at [`coordinator`] for the experiment registry, or run
 //! `cargo run --release -- list`.

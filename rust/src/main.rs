@@ -4,13 +4,14 @@
 //! repro list                      # experiments and what they reproduce
 //! repro exp <id> [flags]         # run one experiment (fig2..fig15, table1)
 //! repro all [flags]              # run every experiment
-//! repro info                     # artifact + runtime status
+//! repro info                     # artifact status + active backend
 //!
 //! flags: --configs N   Monte-Carlo configs per point (default 10000)
 //!        --seed S      master seed (default 0xC0FFEE)
 //!        --threads T   worker threads (default: all cores)
 //!        --out DIR     CSV output directory (default results/)
 //!        --fast        reduced sweep for quick iteration
+//!        --builtin     force the builtin synthetic model (ignore artifacts)
 //! ```
 
 use anyhow::{bail, Context, Result};
@@ -24,6 +25,7 @@ fn flag_specs() -> Vec<FlagSpec> {
         FlagSpec { name: "threads", takes_value: true, help: "worker threads" },
         FlagSpec { name: "out", takes_value: true, help: "CSV output directory" },
         FlagSpec { name: "fast", takes_value: false, help: "reduced sweep for iteration" },
+        FlagSpec { name: "builtin", takes_value: false, help: "force the builtin synthetic model (ignore artifacts)" },
     ]
 }
 
@@ -35,6 +37,7 @@ fn opts_from(args: &Args) -> Result<RunOpts> {
         threads: args.get_parse("threads", d.threads)?,
         out_dir: args.get("out").unwrap_or("results").into(),
         fast: args.has("fast"),
+        builtin_model: args.has("builtin"),
     })
 }
 
@@ -46,6 +49,7 @@ fn cmd_list() {
 }
 
 fn cmd_info() -> Result<()> {
+    println!("built-in backend kind: {}", hyca::runtime::default_backend_kind());
     match hyca::runtime::artifacts_dir() {
         Ok(dir) => {
             println!("artifacts: {}", dir.display());
@@ -63,10 +67,16 @@ fn cmd_info() -> Result<()> {
                 println!("\nmanifest:\n{m}");
             }
         }
-        Err(e) => println!("artifacts: {e}"),
+        Err(e) => println!("artifacts: {e} (fig2 falls back to the builtin model)"),
     }
-    let rt = hyca::runtime::Runtime::cpu()?;
-    println!("PJRT platform: {}", rt.platform());
+    let engine = hyca::inference::Engine::auto();
+    println!(
+        "active backend: {} (model source: {}, {} eval images, batch {})",
+        engine.backend.name(),
+        engine.source,
+        engine.eval.images.len(),
+        engine.batch
+    );
     Ok(())
 }
 

@@ -1,32 +1,38 @@
-//! PJRT runtime: load AOT-compiled HLO text artifacts and execute them
-//! from the rust hot path (no Python anywhere near here).
+//! Pluggable inference backends.
 //!
-//! Wraps the `xla` crate (docs.rs/xla 0.1.6 → xla_extension 0.5.1 CPU):
-//! `PjRtClient::cpu()` → `HloModuleProto::from_text_file` →
-//! `client.compile` → `execute`. Interchange is HLO **text** because
-//! jax ≥ 0.5 emits protos with 64-bit instruction ids that this XLA
-//! rejects; the text parser reassigns ids (see /opt/xla-example).
+//! The forward pass of the quantized CNN can execute on one of two
+//! interchangeable engines behind the [`Backend`] trait:
 //!
-//! The exported computations return a 1-tuple (lowered with
-//! `return_tuple=True`), hence the `to_tuple1` unwrap on results.
+//! * [`native`] (default) — a pure-rust, dependency-free interpreter
+//!   built on the bit-exact `array::sim` primitives. Hermetic: needs no
+//!   artifacts, no native libraries, no network. This is what CI and
+//!   the golden/property tests run.
+//! * [`pjrt`] (cargo feature `pjrt`, off by default) — loads the
+//!   AOT-compiled HLO text artifacts (python/compile, build-time) and
+//!   executes them through the PJRT C API via the `xla` crate, which
+//!   requires the external `libxla_extension` library.
+//!
+//! Both backends implement the same tensor-level contract (the exported
+//! HLO signature): inputs are `[x, and1, or1, and2, or2, and3, or3,
+//! and_fc, or_fc]` int32 tensors, the output is the `(batch, classes)`
+//! logits tensor. The two paths must agree bit-for-bit — enforced by
+//! `rust/tests/proptests.rs` (native vs the `array::sim` oracle) and,
+//! when the `pjrt` feature and artifacts are available, by
+//! `rust/tests/runtime_e2e.rs` (HLO vs oracle). DESIGN.md §3 documents
+//! the backend architecture.
 
-use anyhow::{Context, Result};
-use std::path::Path;
+pub mod native;
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
 
-/// A PJRT CPU client plus the executables loaded onto it.
-pub struct Runtime {
-    client: xla::PjRtClient,
-}
+pub use native::NativeBackend;
 
-/// One compiled HLO module ready to execute.
-pub struct LoadedModule {
-    exe: xla::PjRtLoadedExecutable,
-    pub name: String,
-}
+use anyhow::Result;
 
-/// An int32 tensor exchanged with the runtime (all exported model
-/// inputs/outputs are s32 — the crate has no i8 literal support, so
-/// the graphs take s32 and convert internally).
+/// An int32 tensor exchanged with a backend (all exported model
+/// inputs/outputs are s32 — the HLO interchange has no i8 literal
+/// support, so the graphs take s32 and convert internally; the native
+/// backend mirrors that contract).
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct I32Tensor {
     pub shape: Vec<usize>,
@@ -47,60 +53,30 @@ impl I32Tensor {
             data: vec![v; n],
         }
     }
-
-    fn to_literal(&self) -> Result<xla::Literal> {
-        let lit = xla::Literal::vec1(&self.data);
-        let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
-        Ok(lit.reshape(&dims)?)
-    }
 }
 
-impl Runtime {
-    /// Create the PJRT CPU client.
-    pub fn cpu() -> Result<Self> {
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        Ok(Self { client })
-    }
+/// An engine that can execute the exported quantized forward pass.
+///
+/// The input/output convention is fixed by the exported HLO (see
+/// `python/compile/model.py::mask_shapes` and the module doc above);
+/// backends must agree bit-for-bit on it.
+pub trait Backend {
+    /// Short label for reports and `repro info` ("native", "pjrt:cpu").
+    fn name(&self) -> String;
 
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    /// Load and compile an HLO text artifact.
-    pub fn load_hlo(&self, path: impl AsRef<Path>) -> Result<LoadedModule> {
-        let path = path.as_ref();
-        let proto =
-            xla::HloModuleProto::from_text_file(path.to_str().context("non-utf8 path")?)
-                .with_context(|| format!("parsing HLO text {}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .with_context(|| format!("compiling {}", path.display()))?;
-        Ok(LoadedModule {
-            exe,
-            name: path
-                .file_stem()
-                .map(|s| s.to_string_lossy().into_owned())
-                .unwrap_or_default(),
-        })
-    }
+    /// Execute one batch: `inputs[0]` is the `(batch, c, h, w)` image
+    /// tensor, followed by the per-layer (and, or) stuck-at mask pairs;
+    /// returns the `(batch, classes)` logits tensor.
+    fn execute_i32(&self, inputs: &[I32Tensor]) -> Result<I32Tensor>;
 }
 
-impl LoadedModule {
-    /// Execute with int32 tensor inputs; returns the first element of
-    /// the output tuple as an [`I32Tensor`].
-    pub fn execute_i32(&self, inputs: &[I32Tensor]) -> Result<I32Tensor> {
-        let literals: Vec<xla::Literal> = inputs
-            .iter()
-            .map(|t| t.to_literal())
-            .collect::<Result<_>>()?;
-        let result = self.exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
-        let out = result.to_tuple1().context("unwrapping 1-tuple result")?;
-        let shape = out.array_shape()?;
-        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
-        let data = out.to_vec::<i32>().context("reading s32 output")?;
-        Ok(I32Tensor::new(dims, data))
+/// The backend kind the default build wires up (`repro info` reports
+/// this; the `pjrt` feature flips it when artifacts are present).
+pub fn default_backend_kind() -> &'static str {
+    if cfg!(feature = "pjrt") {
+        "pjrt (native fallback)"
+    } else {
+        "native"
     }
 }
 
@@ -142,6 +118,13 @@ mod tests {
         I32Tensor::new(vec![2, 3], vec![0; 5]);
     }
 
-    // PJRT-dependent tests live in rust/tests/runtime_e2e.rs — they
-    // need the artifacts built by `make artifacts`.
+    #[test]
+    fn backend_kind_matches_feature() {
+        let kind = default_backend_kind();
+        if cfg!(feature = "pjrt") {
+            assert!(kind.contains("pjrt"));
+        } else {
+            assert_eq!(kind, "native");
+        }
+    }
 }

@@ -1,0 +1,275 @@
+//! Native backend: a pure-rust interpreter of the exported quantized
+//! forward pass, built directly on the bit-exact [`crate::array::sim`]
+//! primitives (`conv_acc` / `add_bias` / `corrupt_acc` / `requant` /
+//! `avgpool2` / `fc_acc`).
+//!
+//! Hermetic by construction: no artifacts, no native libraries, no
+//! Python. The model architecture is the DESIGN.md §2 stack — a chain
+//! of quantized convolutions with a 2×2 average pool after every conv
+//! except the last, followed by one fully-connected layer whose raw
+//! int32 accumulators are the logits.
+//!
+//! The numerics contract (int8 operands, int32 accumulation, bias
+//! preload, `(acc & and) | or` corruption before requant) is pinned in
+//! `array::sim` and cross-checked against the independent
+//! `inference::oracle_logits` implementation by the property test in
+//! `rust/tests/proptests.rs` — two code paths, one bit-exact answer.
+
+use anyhow::{ensure, Result};
+
+use super::{Backend, I32Tensor};
+use crate::array::sim::{self, Chw};
+use crate::faults::stuckat::StuckMask;
+use crate::inference::params::ModelParams;
+
+/// The dependency-free inference backend.
+pub struct NativeBackend {
+    params: ModelParams,
+}
+
+impl NativeBackend {
+    pub fn new(params: ModelParams) -> Self {
+        Self { params }
+    }
+
+    /// The parameters this backend executes.
+    pub fn params(&self) -> &ModelParams {
+        &self.params
+    }
+
+    /// Convert the export-layout `(sp, oc)` mask tensors into one
+    /// per-layer `StuckMask` vector in accumulator `(oc, sp)` order.
+    /// Masks are identical for every batch row, so this runs **once per
+    /// batch** (the transposition would otherwise sit in the serving
+    /// hot path once per image).
+    fn transpose_conv_masks(
+        &self,
+        in_shape: Chw,
+        conv_masks: &[(&I32Tensor, &I32Tensor)],
+    ) -> Result<Vec<Vec<StuckMask>>> {
+        let mut shape = in_shape;
+        let mut out = Vec::with_capacity(self.params.convs.len());
+        for (i, conv) in self.params.convs.iter().enumerate() {
+            let (oh, ow) = conv.out_hw(shape.h, shape.w);
+            let m = oh * ow;
+            let (and_t, or_t) = conv_masks[i];
+            ensure!(
+                and_t.shape == vec![m, conv.out_c] && or_t.shape == vec![m, conv.out_c],
+                "conv {i} mask shape {:?}/{:?}, expected [{m}, {}]",
+                and_t.shape,
+                or_t.shape,
+                conv.out_c
+            );
+            // masks are stored (sp, oc); acc is (oc, sp)
+            out.push(
+                (0..conv.out_c * m)
+                    .map(|idx| {
+                        let (oc, sp) = (idx / m, idx % m);
+                        let j = sp * conv.out_c + oc;
+                        StuckMask {
+                            and_mask: and_t.data[j] as u32,
+                            or_mask: or_t.data[j] as u32,
+                        }
+                    })
+                    .collect(),
+            );
+            shape = Chw::new(conv.out_c, oh, ow);
+            if i + 1 < self.params.convs.len() {
+                shape = Chw::new(shape.c, shape.h / 2, shape.w / 2);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Forward pass for one image. `conv_masks[i]` is layer `i`'s
+    /// pre-transposed stuck-mask vector; `fc_masks` = (and, or) tensors
+    /// of `(batch, classes)` with `row` selecting this image's row.
+    fn forward_one(
+        &self,
+        image: &[i8],
+        in_shape: Chw,
+        conv_masks: &[Vec<StuckMask>],
+        fc_masks: (&I32Tensor, &I32Tensor),
+        row: usize,
+    ) -> Vec<i32> {
+        let mut h = image.to_vec();
+        let mut shape = in_shape;
+        for (i, conv) in self.params.convs.iter().enumerate() {
+            let mut acc = sim::conv_acc(conv, &h, shape);
+            let (oh, ow) = conv.out_hw(shape.h, shape.w);
+            sim::add_bias(&mut acc, &conv.bias, oh * ow);
+            sim::corrupt_acc(&mut acc, &conv_masks[i]);
+            h = sim::requant(&acc, conv.m, conv.shift, conv.relu);
+            shape = Chw::new(conv.out_c, oh, ow);
+            if i + 1 < self.params.convs.len() {
+                let (p, s) = sim::avgpool2(&h, shape);
+                h = p;
+                shape = s;
+            }
+        }
+        let mut logits = sim::fc_acc(&self.params.fc, &h);
+        let classes = self.params.fc.out_n;
+        let (and_t, or_t) = fc_masks;
+        for (n, v) in logits.iter_mut().enumerate() {
+            let j = row * classes + n;
+            let mask = StuckMask {
+                and_mask: and_t.data[j] as u32,
+                or_mask: or_t.data[j] as u32,
+            };
+            *v = mask.apply(*v);
+        }
+        logits
+    }
+}
+
+impl Backend for NativeBackend {
+    fn name(&self) -> String {
+        "native".to_string()
+    }
+
+    fn execute_i32(&self, inputs: &[I32Tensor]) -> Result<I32Tensor> {
+        let n_convs = self.params.convs.len();
+        ensure!(
+            inputs.len() == 1 + 2 * (n_convs + 1),
+            "expected {} input tensors (x + mask pairs), got {}",
+            1 + 2 * (n_convs + 1),
+            inputs.len()
+        );
+        let x = &inputs[0];
+        ensure!(x.shape.len() == 4, "image tensor must be (batch, c, h, w)");
+        let (batch, c, h, w) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+        ensure!(
+            c == self.params.convs[0].in_c,
+            "input channels {c} != model input channels {}",
+            self.params.convs[0].in_c
+        );
+        let conv_masks: Vec<(&I32Tensor, &I32Tensor)> = (0..n_convs)
+            .map(|i| (&inputs[1 + 2 * i], &inputs[2 + 2 * i]))
+            .collect();
+        let fc_and = &inputs[1 + 2 * n_convs];
+        let fc_or = &inputs[2 + 2 * n_convs];
+        let classes = self.params.fc.out_n;
+        ensure!(
+            fc_and.shape == vec![batch, classes] && fc_or.shape == vec![batch, classes],
+            "fc mask shape {:?}/{:?}, expected [{batch}, {classes}]",
+            fc_and.shape,
+            fc_or.shape
+        );
+        let img_len = c * h * w;
+        let in_shape = Chw::new(c, h, w);
+        let layer_masks = self.transpose_conv_masks(in_shape, &conv_masks)?;
+        let mut out = Vec::with_capacity(batch * classes);
+        for b in 0..batch {
+            let image: Vec<i8> = x.data[b * img_len..(b + 1) * img_len]
+                .iter()
+                .map(|&v| v as i8)
+                .collect();
+            out.extend(self.forward_one(&image, in_shape, &layer_masks, (fc_and, fc_or), b));
+        }
+        Ok(I32Tensor::new(vec![batch, classes], out))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::inference::masks::{LayerMasks, ModelGeometry};
+    use crate::inference::oracle_logits;
+    use crate::util::rng::Pcg32;
+
+    fn tiny_engine_inputs(batch: usize) -> (ModelParams, Vec<Vec<i8>>, LayerMasks) {
+        let params = ModelParams::synthetic(0xBEEF);
+        let mut rng = Pcg32::new(7, 0);
+        let images: Vec<Vec<i8>> = (0..batch)
+            .map(|_| (0..256).map(|_| (rng.below(256) as i32 - 128) as i8).collect())
+            .collect();
+        let g = ModelGeometry {
+            batch,
+            ..ModelGeometry::default()
+        };
+        (params, images, LayerMasks::identity(&g))
+    }
+
+    fn run(
+        params: &ModelParams,
+        images: &[Vec<i8>],
+        masks: &LayerMasks,
+    ) -> I32Tensor {
+        let backend = NativeBackend::new(params.clone());
+        let mut x = Vec::new();
+        for img in images {
+            x.extend(img.iter().map(|&v| v as i32));
+        }
+        let mut inputs = vec![I32Tensor::new(vec![images.len(), 1, 16, 16], x)];
+        inputs.extend(masks.to_tensors());
+        backend.execute_i32(&inputs).unwrap()
+    }
+
+    #[test]
+    fn healthy_native_matches_oracle() {
+        let (params, images, masks) = tiny_engine_inputs(3);
+        let logits = run(&params, &images, &masks);
+        assert_eq!(logits.shape, vec![3, 10]);
+        for (b, img) in images.iter().enumerate() {
+            let want = oracle_logits(&params, img, &masks);
+            assert_eq!(&logits.data[b * 10..(b + 1) * 10], &want[..], "row {b}");
+        }
+    }
+
+    #[test]
+    fn corrupted_native_matches_oracle() {
+        let (params, images, mut masks) = tiny_engine_inputs(2);
+        // corrupt a couple of conv outputs and one fc output, all rows
+        masks.conv[0].set(
+            5,
+            1,
+            crate::faults::stuckat::StuckMask {
+                and_mask: !(1 << 27),
+                or_mask: 1 << 9,
+            },
+        );
+        masks.conv[2].set(
+            3,
+            7,
+            crate::faults::stuckat::StuckMask {
+                and_mask: 0,
+                or_mask: 0,
+            },
+        );
+        for b in 0..2 {
+            masks.fc.set(
+                b,
+                4,
+                crate::faults::stuckat::StuckMask {
+                    and_mask: u32::MAX,
+                    or_mask: 1 << 20,
+                },
+            );
+        }
+        let logits = run(&params, &images, &masks);
+        for (b, img) in images.iter().enumerate() {
+            let want = oracle_logits(&params, img, &masks);
+            assert_eq!(&logits.data[b * 10..(b + 1) * 10], &want[..], "row {b}");
+        }
+    }
+
+    #[test]
+    fn wrong_input_count_rejected() {
+        let (params, images, masks) = tiny_engine_inputs(1);
+        let backend = NativeBackend::new(params);
+        let mut x = Vec::new();
+        for img in &images {
+            x.extend(img.iter().map(|&v| v as i32));
+        }
+        let mut inputs = vec![I32Tensor::new(vec![1, 1, 16, 16], x)];
+        inputs.extend(masks.to_tensors());
+        inputs.pop();
+        assert!(backend.execute_i32(&inputs).is_err());
+    }
+
+    #[test]
+    fn name_is_native() {
+        let params = ModelParams::synthetic(1);
+        assert_eq!(NativeBackend::new(params).name(), "native");
+    }
+}

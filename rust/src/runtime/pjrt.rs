@@ -1,0 +1,112 @@
+//! PJRT backend (cargo feature `pjrt`): load AOT-compiled HLO text
+//! artifacts and execute them from the rust hot path (no Python
+//! anywhere near here).
+//!
+//! Wraps the `xla` crate (docs.rs/xla 0.1.6 → xla_extension 0.5.1 CPU):
+//! `PjRtClient::cpu()` → `HloModuleProto::from_text_file` →
+//! `client.compile` → `execute`. Interchange is HLO **text** because
+//! jax ≥ 0.5 emits protos with 64-bit instruction ids that this XLA
+//! rejects; the text parser reassigns ids.
+//!
+//! The exported computations return a 1-tuple (lowered with
+//! `return_tuple=True`), hence the `to_tuple1` unwrap on results.
+//!
+//! This module is compiled only under `--features pjrt` (it needs the
+//! external `libxla_extension` native library); the default build uses
+//! [`super::native`] instead. When both the feature and the artifacts
+//! are available, `rust/tests/runtime_e2e.rs` checks this path against
+//! the rust oracle bit-for-bit.
+
+use anyhow::{Context, Result};
+use std::path::Path;
+
+use super::{Backend, I32Tensor};
+
+/// A PJRT CPU client plus the executables loaded onto it.
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+/// One compiled HLO module ready to execute.
+pub struct LoadedModule {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+}
+
+fn to_literal(t: &I32Tensor) -> Result<xla::Literal> {
+    let lit = xla::Literal::vec1(&t.data);
+    let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
+    Ok(lit.reshape(&dims)?)
+}
+
+impl Runtime {
+    /// Create the PJRT CPU client.
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Self { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load and compile an HLO text artifact.
+    pub fn load_hlo(&self, path: impl AsRef<Path>) -> Result<LoadedModule> {
+        let path = path.as_ref();
+        let proto =
+            xla::HloModuleProto::from_text_file(path.to_str().context("non-utf8 path")?)
+                .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        Ok(LoadedModule {
+            exe,
+            name: path
+                .file_stem()
+                .map(|s| s.to_string_lossy().into_owned())
+                .unwrap_or_default(),
+        })
+    }
+}
+
+impl LoadedModule {
+    /// Execute with int32 tensor inputs; returns the first element of
+    /// the output tuple as an [`I32Tensor`].
+    pub fn execute_i32(&self, inputs: &[I32Tensor]) -> Result<I32Tensor> {
+        let literals: Vec<xla::Literal> =
+            inputs.iter().map(to_literal).collect::<Result<_>>()?;
+        let result = self.exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        let out = result.to_tuple1().context("unwrapping 1-tuple result")?;
+        let shape = out.array_shape()?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        let data = out.to_vec::<i32>().context("reading s32 output")?;
+        Ok(I32Tensor::new(dims, data))
+    }
+}
+
+/// The PJRT-executed model as a pluggable [`Backend`].
+pub struct PjrtBackend {
+    runtime: Runtime,
+    module: LoadedModule,
+}
+
+impl PjrtBackend {
+    /// Create a CPU client and compile the HLO artifact at `path`.
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let runtime = Runtime::cpu()?;
+        let module = runtime.load_hlo(path)?;
+        Ok(Self { runtime, module })
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn name(&self) -> String {
+        format!("pjrt:{}", self.runtime.platform())
+    }
+
+    fn execute_i32(&self, inputs: &[I32Tensor]) -> Result<I32Tensor> {
+        self.module.execute_i32(inputs)
+    }
+}

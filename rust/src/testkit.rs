@@ -5,8 +5,6 @@
 //! and reports the failing seed so the case can be replayed exactly.
 //!
 //! ```ignore
-//! // (doctests cannot run in this image: they do not inherit the
-//! // rpath rustflags that locate libxla_extension's libstdc++)
 //! use hyca::testkit::{check, Gen};
 //! check("sum is commutative", 256, |g: &mut Gen| {
 //!     let a = g.u32(1000);
@@ -45,9 +43,11 @@ impl Gen {
         lo + self.u32((hi - lo) as u32) as usize
     }
 
-    /// Uniform f64 in [lo, hi).
+    /// Uniform f64 in [lo, lo + (hi − lo)·size) — like [`Gen::u32`],
+    /// the shrink size contracts the range toward `lo`, where the
+    /// interesting failures usually live.
     pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
-        lo + self.rng.f64() * (hi - lo)
+        lo + self.rng.f64() * (hi - lo) * self.size
     }
 
     /// Bernoulli.
@@ -200,6 +200,30 @@ mod tests {
             let c = *g.choose(&[1, 2, 3]);
             assert!([1, 2, 3].contains(&c));
         });
+    }
+
+    #[test]
+    fn f64_in_respects_shrink_size() {
+        // at full size the range is covered; at a shrunk size every draw
+        // contracts toward `lo`, mirroring the u32 generator's semantics
+        let mut full = Gen::new(11, 0, 1.0);
+        let mut seen_upper_half = false;
+        for _ in 0..256 {
+            let v = full.f64_in(10.0, 20.0);
+            assert!((10.0..20.0).contains(&v), "{v}");
+            if v >= 15.0 {
+                seen_upper_half = true;
+            }
+        }
+        assert!(seen_upper_half, "full-size generator never left the low half");
+        let mut shrunk = Gen::new(11, 0, 0.125);
+        for _ in 0..256 {
+            let v = shrunk.f64_in(10.0, 20.0);
+            assert!(
+                (10.0..=11.25).contains(&v),
+                "shrunk draw {v} escaped the contracted range [10, 11.25]"
+            );
+        }
     }
 
     #[test]

@@ -19,6 +19,8 @@ fn fast_opts() -> RunOpts {
         configs: 400,
         fast: true,
         out_dir: std::env::temp_dir().join("hyca_it_results"),
+        // hermetic regardless of local artifact state
+        builtin_model: true,
         ..RunOpts::default()
     }
 }
@@ -173,15 +175,12 @@ fn dppu_structure_scalability_pattern() {
 }
 
 /// Every registered experiment runs to completion on a fast sweep and
-/// produces at least one non-empty table (fig2 is skipped unless the
-/// artifacts are built — it needs PJRT).
+/// produces at least one non-empty table. fig2 included: it runs on the
+/// builtin model through the native backend when no artifacts exist.
 #[test]
 fn all_simulation_experiments_run() {
     let opts = fast_opts();
     for e in registry() {
-        if e.id() == "fig2" {
-            continue;
-        }
         let tables = e.run(&opts).unwrap_or_else(|err| panic!("{}: {err}", e.id()));
         assert!(!tables.is_empty(), "{}", e.id());
         for t in &tables {

@@ -5,15 +5,20 @@
 //! repair-scheme dominance, left-first optimality, capacity formulas,
 //! schedule safety and mapping consistency.
 
+use hyca::array::sim::{ConvLayer, FcLayer};
 use hyca::array::{mapping, Dims};
 use hyca::faults::montecarlo::FaultModel;
+use hyca::faults::stuckat::sample_stuck_mask;
 use hyca::faults::{random, FaultConfig};
 use hyca::hyca::dppu::DppuConfig;
 use hyca::hyca::schedule::{build_schedule, simulate_window_drain};
+use hyca::inference::masks::{LayerMasks, MaskPair};
+use hyca::inference::{oracle_logits, ModelParams};
 use hyca::redundancy::{
     cr::ColumnRedundancy, dr::DiagonalRedundancy, hyca::HycaScheme, rr::RowRedundancy,
     RepairCtx, RepairOutcome, Scheme,
 };
+use hyca::runtime::{Backend, I32Tensor, NativeBackend};
 use hyca::testkit::{check, Gen};
 use hyca::util::rng::Pcg32;
 
@@ -312,6 +317,110 @@ fn prop_mapping_partition() {
             }
         }
         assert_eq!(covered, map, "per-PE lists must equal the corruption map");
+    });
+}
+
+fn random_conv(g: &mut Gen, in_c: usize, out_c: usize) -> ConvLayer {
+    let k = *g.choose(&[1usize, 3]);
+    ConvLayer {
+        out_c,
+        in_c,
+        k,
+        stride: 1,
+        pad: k / 2, // keeps the spatial size, so the pool halvings line up
+        weights: (0..out_c * in_c * k * k)
+            .map(|_| (g.rng().below(7) as i32 - 3) as i8)
+            .collect(),
+        bias: (0..out_c).map(|_| g.rng().below(65) as i32 - 32).collect(),
+        m: g.usize_in(1, 3) as i32,
+        shift: g.usize_in(2, 8) as u32,
+        relu: g.bool(0.7),
+    }
+}
+
+#[test]
+fn prop_native_backend_matches_sim_oracle() {
+    // The paper's bit-exactness contract (rust/src/array/sim.rs header):
+    // for random small ConvLayer/FcLayer shapes and random StuckMask
+    // sets, the native backend's logits equal `oracle_logits`
+    // bit-for-bit. The two implementations are deliberately independent
+    // (the backend goes through sim::corrupt_acc, the oracle masks
+    // inline), so this pins both against each other.
+    check("native backend == sim oracle", 48, |g| {
+        let c0 = g.usize_in(1, 2);
+        let c1 = g.usize_in(1, 4);
+        let c2 = g.usize_in(1, 4);
+        let c3 = g.usize_in(1, 4);
+        let classes = g.usize_in(2, 6);
+        let params = ModelParams {
+            convs: vec![
+                random_conv(g, c0, c1),
+                random_conv(g, c1, c2),
+                random_conv(g, c2, c3),
+            ],
+            fc: FcLayer {
+                out_n: classes,
+                in_n: c3 * 4,
+                weights: (0..classes * c3 * 4)
+                    .map(|_| (g.rng().below(7) as i32 - 3) as i8)
+                    .collect(),
+                bias: (0..classes).map(|_| g.rng().below(65) as i32 - 32).collect(),
+            },
+            in_scale: 1.0,
+        };
+        let batch = g.usize_in(1, 3);
+        // spatial sizes after each conv on the 8×8 input (2×2 pool after
+        // every conv but the last): 64, 16, 4 output features per channel
+        let spatial = [64usize, 16, 4];
+        let ocs = [c1, c2, c3];
+        let mut masks = LayerMasks {
+            conv: [
+                MaskPair::identity(spatial[0], c1),
+                MaskPair::identity(spatial[1], c2),
+                MaskPair::identity(spatial[2], c3),
+            ],
+            fc: MaskPair::identity(batch, classes),
+        };
+        // random stuck-mask sets over conv output features...
+        for _ in 0..g.usize_in(0, 6) {
+            let layer = g.usize_in(0, 2);
+            let sp = g.usize_in(0, spatial[layer] - 1);
+            let oc = g.usize_in(0, ocs[layer] - 1);
+            let m = sample_stuck_mask(g.rng(), 1e-3, 144);
+            masks.conv[layer].set(sp, oc, m);
+        }
+        // ...and fc outputs (identical across batch rows: same silicon)
+        for _ in 0..g.usize_in(0, 2) {
+            let n = g.usize_in(0, classes - 1);
+            let m = sample_stuck_mask(g.rng(), 1e-3, 144);
+            for b in 0..batch {
+                masks.fc.set(b, n, m);
+            }
+        }
+        let images: Vec<Vec<i8>> = (0..batch)
+            .map(|_| {
+                (0..c0 * 64)
+                    .map(|_| (g.rng().below(256) as i32 - 128) as i8)
+                    .collect()
+            })
+            .collect();
+        let backend = NativeBackend::new(params.clone());
+        let mut x = Vec::new();
+        for img in &images {
+            x.extend(img.iter().map(|&v| v as i32));
+        }
+        let mut inputs = vec![I32Tensor::new(vec![batch, c0, 8, 8], x)];
+        inputs.extend(masks.to_tensors());
+        let logits = backend.execute_i32(&inputs).unwrap();
+        assert_eq!(logits.shape, vec![batch, classes]);
+        for (b, img) in images.iter().enumerate() {
+            let want = oracle_logits(&params, img, &masks);
+            assert_eq!(
+                &logits.data[b * classes..(b + 1) * classes],
+                &want[..],
+                "batch row {b}"
+            );
+        }
     });
 }
 
