@@ -1,0 +1,48 @@
+//! Bench for the serving subsystem: wall-clock throughput of the real
+//! worker pool replaying a simulated timeline, across executor widths
+//! and batch caps. (The *simulated* metrics are deterministic and live
+//! in BENCH_serve.json via `repro serve`; this harness measures what
+//! the host machine actually sustains.)
+use std::sync::Arc;
+
+use hyca::benchkit::Bench;
+use hyca::coordinator::exp_serve::grid_cell;
+use hyca::inference::Engine;
+use hyca::serve::{pool, simulate_timeline, ServeConfig};
+
+/// Exactly the grid-cell workload BENCH_serve.json reports (smoke
+/// sizing), with the requested executor width.
+fn cfg(lanes: usize, max_batch: usize) -> ServeConfig {
+    grid_cell(0xC0FFEE, lanes, max_batch, true, 1)
+}
+
+fn main() {
+    let engine = Arc::new(Engine::builtin());
+    let mut b = Bench::new("serve");
+
+    // timeline simulation alone (pure, no inference)
+    let sim_cfg = cfg(4, 8);
+    let sim_req = sim_cfg.total_requests as f64;
+    b.bench_units("simulate_timeline/grid_cell", Some(sim_req), || {
+        std::hint::black_box(simulate_timeline(&engine, &sim_cfg));
+    });
+
+    // pool execution: images/second at various executor widths
+    for (threads, max_batch) in [(1usize, 1usize), (1, 8), (2, 8), (4, 8), (4, 32)] {
+        let c = cfg(4, max_batch);
+        let timeline = simulate_timeline(&engine, &c);
+        let jobs = timeline.jobs;
+        let served: usize = jobs.iter().map(|j| j.image_idxs.len()).sum();
+        b.bench_units(
+            format!("pool_execute/t{threads}_b{max_batch}"),
+            Some(served as f64),
+            || {
+                std::hint::black_box(
+                    pool::execute(&engine, &jobs, threads, 8).unwrap(),
+                );
+            },
+        );
+    }
+
+    b.report();
+}

@@ -1,0 +1,290 @@
+//! `serve` — the serving-subsystem experiment (`repro serve`): a
+//! throughput/latency grid over simulated worker lanes × dynamic batch
+//! sizes, plus the online scan-and-repair scenario with mid-run fault
+//! arrivals.
+//!
+//! Always runs on the **builtin** engine: the exact-recovery contract
+//! (accuracy returns to exactly 1.0 after remap) only holds for the
+//! synthetic eval set whose labels are the clean argmax, and the
+//! machine-readable perf baseline (`BENCH_serve.json`) must never
+//! depend on local artifact state.
+//!
+//! Determinism contract (asserted by `rust/tests/serve.rs`): the JSON
+//! and every table are byte-identical for a given master seed at any
+//! `--workers` / `--threads` value — the executor width only selects
+//! how many real threads crunch the math; all metrics live in
+//! simulated cycles. EXPERIMENTS.md documents the regen command.
+
+use std::sync::Arc;
+
+use super::{Experiment, RunOpts};
+use crate::array::Dims;
+use crate::inference::Engine;
+use crate::serve::metrics::ServeReport;
+use crate::serve::scan_agent::EventKind;
+use crate::serve::{self, FaultPlan, ServeConfig};
+use crate::util::table::{f, Table};
+use anyhow::Result;
+
+pub struct ServeExp;
+
+/// Full grid: simulated worker lanes × dynamic batch cap.
+pub const GRID_LANES: [usize; 4] = [1, 2, 4, 8];
+pub const GRID_BATCH: [usize; 3] = [1, 8, 32];
+/// Reduced grid for `--smoke` / `--fast` (CI).
+pub const SMOKE_LANES: [usize; 2] = [1, 4];
+pub const SMOKE_BATCH: [usize; 2] = [1, 8];
+
+fn grid(smoke: bool) -> Vec<(usize, usize)> {
+    let (lanes, batches): (&[usize], &[usize]) = if smoke {
+        (&SMOKE_LANES, &SMOKE_BATCH)
+    } else {
+        (&GRID_LANES, &GRID_BATCH)
+    };
+    let mut cells = Vec::new();
+    for &l in lanes {
+        for &b in batches {
+            cells.push((l, b));
+        }
+    }
+    cells
+}
+
+/// One fault-free grid cell. Clients scale with capacity so every
+/// lane stays saturated and the comparison isolates batching/lanes.
+/// Public so `benches/serve_throughput.rs` measures exactly the
+/// workload BENCH_serve.json reports.
+pub fn grid_cell(
+    seed: u64,
+    lanes: usize,
+    max_batch: usize,
+    smoke: bool,
+    threads: usize,
+) -> ServeConfig {
+    let clients = (lanes * max_batch * 2).max(4);
+    ServeConfig {
+        seed,
+        dims: Dims::new(8, 8), // same model:array ratio as fig2
+        lanes,
+        max_batch,
+        max_wait_cycles: 8_000,
+        clients,
+        think_cycles: 500,
+        total_requests: if smoke { 64 } else { 192 },
+        queue_cap: clients,
+        executor_threads: threads,
+        windows: 4,
+        faults: None,
+    }
+}
+
+/// The mid-run fault scenario: dip → scan detection → live remap →
+/// exact recovery.
+pub fn scenario_config(seed: u64, smoke: bool, threads: usize) -> ServeConfig {
+    ServeConfig {
+        seed,
+        dims: Dims::new(8, 8),
+        lanes: 2,
+        max_batch: 8,
+        max_wait_cycles: 8_000,
+        clients: 16,
+        think_cycles: 500,
+        total_requests: if smoke { 96 } else { 384 },
+        queue_cap: 16,
+        executor_threads: threads,
+        windows: 10,
+        faults: Some(FaultPlan {
+            mean_interarrival_cycles: if smoke { 20_000.0 } else { 60_000.0 },
+            horizon_cycles: if smoke { 60_000 } else { 200_000 },
+            scan_period_cycles: if smoke { 4_000 } else { 16_000 },
+            group_width: 8,
+            fpt_capacity: 8,
+            max_arrivals: 6,
+        }),
+    }
+}
+
+fn run_grid(
+    engine: &Arc<Engine>,
+    opts: &RunOpts,
+    smoke: bool,
+) -> Result<Vec<(usize, usize, ServeReport)>> {
+    let mut out = Vec::new();
+    for (lanes, max_batch) in grid(smoke) {
+        let cfg = grid_cell(opts.seed, lanes, max_batch, smoke, opts.threads);
+        let report = serve::run(engine, &cfg)?;
+        out.push((lanes, max_batch, report));
+    }
+    Ok(out)
+}
+
+fn grid_table(results: &[(usize, usize, ServeReport)]) -> Table {
+    let mut t = Table::new(
+        "serve grid — throughput and latency in simulated cycles \
+         [model: builtin, backend: native]",
+        &[
+            "workers",
+            "max_batch",
+            "requests",
+            "batches",
+            "mean_batch",
+            "imgs_per_Mcycle",
+            "p50_cycles",
+            "p99_cycles",
+            "accuracy",
+        ],
+    );
+    for (lanes, max_batch, r) in results {
+        t.push_row(vec![
+            lanes.to_string(),
+            max_batch.to_string(),
+            r.total_requests.to_string(),
+            r.batches.to_string(),
+            f(r.mean_batch_size, 2),
+            f(r.throughput_imgs_per_mcycle, 2),
+            r.p50_cycles().to_string(),
+            r.p99_cycles().to_string(),
+            f(r.accuracy, 4),
+        ]);
+    }
+    t
+}
+
+/// Render the machine-readable perf baseline. Wall-clock fields are
+/// deliberately absent: everything is simulated cycles and therefore
+/// reproducible byte-for-byte from the seed.
+fn grid_json(seed: u64, smoke: bool, results: &[(usize, usize, ServeReport)]) -> String {
+    let mut s = String::new();
+    s.push_str("{\n");
+    s.push_str("  \"schema\": \"hyca-serve-bench-v1\",\n");
+    s.push_str(&format!("  \"seed\": {seed},\n"));
+    s.push_str(&format!("  \"smoke\": {smoke},\n"));
+    s.push_str("  \"grid\": [\n");
+    for (i, (lanes, max_batch, r)) in results.iter().enumerate() {
+        let sep = if i + 1 == results.len() { "" } else { "," };
+        s.push_str(&format!(
+            "    {{\"workers\": {lanes}, \"max_batch\": {max_batch}, \
+             \"requests\": {}, \"batches\": {}, \
+             \"throughput_imgs_per_mcycle\": {:.6}, \
+             \"p50_cycles\": {}, \"p99_cycles\": {}}}{sep}\n",
+            r.total_requests,
+            r.batches,
+            r.throughput_imgs_per_mcycle,
+            r.p50_cycles(),
+            r.p99_cycles(),
+        ));
+    }
+    s.push_str("  ]\n}\n");
+    s
+}
+
+fn scenario_table(report: &ServeReport) -> Table {
+    let mut t = Table::new(
+        "serve under mid-run faults — accuracy timeline \
+         (windows in simulated cycles)",
+        &["window", "start", "end", "requests", "accuracy", "events"],
+    );
+    let last_index = report.windows.len().saturating_sub(1);
+    for w in &report.windows {
+        // scans keep running after traffic ends, so a late detection can
+        // land past the final window — fold it into the last row rather
+        // than silently dropping it (the summary table counts it too)
+        let evs: Vec<String> = report
+            .events
+            .iter()
+            .filter(|e| {
+                e.cycle >= w.start_cycle && (e.cycle < w.end_cycle || w.index == last_index)
+            })
+            .map(|e| match e.kind {
+                EventKind::FaultArrival(c) => format!("fault@({},{})", c.row, c.col),
+                EventKind::ScanDetection(c) => format!("remap@({},{})", c.row, c.col),
+            })
+            .collect();
+        t.push_row(vec![
+            w.index.to_string(),
+            w.start_cycle.to_string(),
+            w.end_cycle.to_string(),
+            w.requests.to_string(),
+            match w.accuracy() {
+                Some(a) => f(a, 4),
+                None => "-".to_string(),
+            },
+            if evs.is_empty() { "-".to_string() } else { evs.join(" ") },
+        ]);
+    }
+    t
+}
+
+fn scenario_summary(report: &ServeReport) -> Table {
+    let arrivals = report
+        .events
+        .iter()
+        .filter(|e| matches!(e.kind, EventKind::FaultArrival(_)))
+        .count();
+    let detections = report
+        .events
+        .iter()
+        .filter(|e| matches!(e.kind, EventKind::ScanDetection(_)))
+        .count();
+    let recovered = report.unrepaired == 0 && report.final_window_accuracy() == Some(1.0);
+    let mut t = Table::new(
+        "serve scenario summary",
+        &["metric", "value"],
+    );
+    t.push_row(vec!["fault_arrivals".into(), arrivals.to_string()]);
+    t.push_row(vec!["scan_detections".into(), detections.to_string()]);
+    t.push_row(vec!["unrepaired".into(), report.unrepaired.to_string()]);
+    t.push_row(vec!["overall_accuracy".into(), f(report.accuracy, 4)]);
+    t.push_row(vec![
+        "final_window_accuracy".into(),
+        match report.final_window_accuracy() {
+            Some(a) => f(a, 4),
+            None => "-".to_string(),
+        },
+    ]);
+    t.push_row(vec!["recovered_exactly".into(), recovered.to_string()]);
+    t
+}
+
+/// Grid + scenario; returns the report tables and the JSON baseline.
+pub fn run_full(opts: &RunOpts, smoke: bool) -> Result<(Vec<Table>, String)> {
+    let engine = Arc::new(Engine::builtin());
+    let grid_results = run_grid(&engine, opts, smoke)?;
+    let json = grid_json(opts.seed, smoke, &grid_results);
+    let scenario = serve::run(&engine, &scenario_config(opts.seed, smoke, opts.threads))?;
+    let tables = vec![
+        grid_table(&grid_results),
+        scenario_table(&scenario),
+        scenario_summary(&scenario),
+    ];
+    Ok((tables, json))
+}
+
+/// The JSON baseline alone (what `BENCH_serve.json` holds and the
+/// golden test compares across `--workers` values).
+pub fn bench_json(opts: &RunOpts, smoke: bool) -> Result<String> {
+    let engine = Arc::new(Engine::builtin());
+    let grid_results = run_grid(&engine, opts, smoke)?;
+    Ok(grid_json(opts.seed, smoke, &grid_results))
+}
+
+/// The fault scenario alone (used by `rust/tests/serve.rs`).
+pub fn scenario_report(opts: &RunOpts, smoke: bool) -> Result<ServeReport> {
+    let engine = Arc::new(Engine::builtin());
+    serve::run(&engine, &scenario_config(opts.seed, smoke, opts.threads))
+}
+
+impl Experiment for ServeExp {
+    fn id(&self) -> &'static str {
+        "serve"
+    }
+
+    fn title(&self) -> &'static str {
+        "Serving: lanes×batch throughput grid + online scan-and-repair under mid-run faults"
+    }
+
+    fn run(&self, opts: &RunOpts) -> Result<Vec<Table>> {
+        let (tables, _json) = run_full(opts, opts.fast)?;
+        Ok(tables)
+    }
+}

@@ -1,0 +1,173 @@
+//! Mid-run fault arrival — the serving threat model (cf. *Analyzing
+//! and Mitigating the Impact of Permanent Faults on a Systolic Array
+//! Based Neural Network Accelerator*, arXiv:1802.04657): permanent
+//! faults do not only exist at configuration time, they *arrive* while
+//! the accelerator is serving traffic (wear-out, latch-up, ageing).
+//!
+//! The process is a homogeneous Poisson process **in simulated cycle
+//! time**: inter-arrival gaps are exponential with the configured mean,
+//! sampled from a seeded [`Pcg32`] stream so a serving run replays
+//! bit-identically from its master seed (DESIGN.md §4). Each arrival
+//! picks a uniformly random still-healthy PE.
+//!
+//! The functional effect of an arrived fault is a stuck-at-1 pattern
+//! over the accumulator's mid/high bits (8..24). Rationale: operand /
+//! intermediate-register faults are the dominant class (48 of the 64
+//! register bits, see [`super::stuckat`]) and their accumulated effect
+//! is large-magnitude corruption; a stuck-at-0 pattern on bits that
+//! idle low would be invisible to both the workload and the runtime
+//! scanner, turning the arrival into an unobservable no-op — useless
+//! for evaluating detection latency, which is what the serving
+//! experiment measures.
+
+use super::stuckat::StuckMask;
+use super::Coord;
+use crate::array::Dims;
+use crate::util::rng::Pcg32;
+
+/// One fault arriving mid-run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ArrivalEvent {
+    /// Simulated cycle at which the PE becomes faulty.
+    pub cycle: u64,
+    /// The PE that fails.
+    pub coord: Coord,
+    /// Functional effect on the PE's accumulated outputs.
+    pub mask: StuckMask,
+}
+
+/// PRNG stream selector for arrival sampling (one fixed stream per
+/// process; the master seed provides the entropy).
+const ARRIVAL_STREAM: u64 = 0xA77;
+
+/// Stuck-at-1 pattern over accumulator bits 8..24 (see module doc) —
+/// always corrupting, always observable.
+fn arrival_mask(rng: &mut Pcg32) -> StuckMask {
+    let or_mask = loop {
+        let p = rng.next_u32() & 0x00FF_FF00;
+        if p != 0 {
+            break p;
+        }
+    };
+    StuckMask {
+        and_mask: u32::MAX,
+        or_mask,
+    }
+}
+
+/// Sample the arrivals within `[0, horizon_cycles)`.
+///
+/// Deterministic in `(seed, dims, mean_interarrival_cycles,
+/// horizon_cycles)`. Arrived PEs are distinct; the process stops early
+/// if every PE has failed or `max_events` is reached.
+pub fn sample_arrivals(
+    seed: u64,
+    dims: Dims,
+    mean_interarrival_cycles: f64,
+    horizon_cycles: u64,
+    max_events: usize,
+) -> Vec<ArrivalEvent> {
+    assert!(
+        mean_interarrival_cycles > 0.0,
+        "mean inter-arrival must be positive"
+    );
+    let mut rng = Pcg32::new(seed, ARRIVAL_STREAM);
+    let mut events: Vec<ArrivalEvent> = Vec::new();
+    let mut t = 0.0f64;
+    while events.len() < max_events.min(dims.len()) {
+        // exponential gap: -mean · ln(1 − u), u ∈ [0, 1)
+        let u = rng.f64();
+        t += -mean_interarrival_cycles * (1.0 - u).ln();
+        let cycle = t.ceil() as u64;
+        if cycle >= horizon_cycles {
+            break;
+        }
+        // uniformly random still-healthy PE
+        let coord = loop {
+            let r = rng.below(dims.rows as u32) as usize;
+            let c = rng.below(dims.cols as u32) as usize;
+            let cand = Coord::new(r, c);
+            if !events.iter().any(|e| e.coord == cand) {
+                break cand;
+            }
+        };
+        events.push(ArrivalEvent {
+            cycle,
+            coord,
+            mask: arrival_mask(&mut rng),
+        });
+    }
+    events
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arrivals_are_deterministic() {
+        let dims = Dims::new(8, 8);
+        let a = sample_arrivals(42, dims, 10_000.0, 100_000, 64);
+        let b = sample_arrivals(42, dims, 10_000.0, 100_000, 64);
+        let c = sample_arrivals(43, dims, 10_000.0, 100_000, 64);
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn arrivals_ordered_distinct_and_in_bounds() {
+        let dims = Dims::new(8, 8);
+        let events = sample_arrivals(7, dims, 2_000.0, 200_000, 64);
+        assert!(!events.is_empty());
+        let mut last = 0u64;
+        let mut seen = std::collections::HashSet::new();
+        for e in &events {
+            assert!(e.cycle >= last, "cycles must be non-decreasing");
+            last = e.cycle;
+            assert!(e.cycle < 200_000);
+            assert!((e.coord.row as usize) < 8 && (e.coord.col as usize) < 8);
+            assert!(seen.insert(e.coord), "duplicate PE {:?}", e.coord);
+        }
+    }
+
+    #[test]
+    fn arrival_rate_tracks_mean() {
+        // across many seeds the realised count approximates
+        // horizon / mean.
+        let dims = Dims::new(32, 32);
+        let (mean, horizon) = (5_000.0, 100_000u64);
+        let total: usize = (0..200u64)
+            .map(|s| sample_arrivals(s, dims, mean, horizon, 1024).len())
+            .sum();
+        let got = total as f64 / 200.0;
+        let expect = horizon as f64 / mean; // 20
+        assert!(
+            (got - expect).abs() < expect * 0.15,
+            "mean count {got} vs {expect}"
+        );
+    }
+
+    #[test]
+    fn arrival_masks_are_observable_stuck_at_one() {
+        let dims = Dims::new(8, 8);
+        for e in sample_arrivals(11, dims, 1_000.0, 64_000, 64) {
+            assert_eq!(e.mask.and_mask, u32::MAX);
+            assert_ne!(e.mask.or_mask & 0x00FF_FF00, 0);
+            assert_eq!(e.mask.or_mask & !0x00FF_FF00, 0);
+            assert!(e.mask.is_corrupting());
+            // a zero accumulator is visibly corrupted (magnitude ≥ 2^8)
+            assert!(e.mask.apply(0) >= 1 << 8);
+        }
+    }
+
+    #[test]
+    fn zero_horizon_has_no_arrivals() {
+        assert!(sample_arrivals(1, Dims::new(4, 4), 10.0, 0, 16).is_empty());
+    }
+
+    #[test]
+    fn max_events_caps_the_process() {
+        let events = sample_arrivals(3, Dims::new(16, 16), 10.0, 1_000_000, 5);
+        assert_eq!(events.len(), 5);
+    }
+}

@@ -17,7 +17,13 @@
 //! [`stuckat`] refines a faulty PE into concrete stuck bits so the
 //! functional pipeline (L2 model via PJRT) can corrupt output features
 //! the way real silicon would.
+//!
+//! [`arrival`] extends the static configuration picture to *runtime*:
+//! a seeded Poisson-in-cycle-time process injects new permanent faults
+//! while the serving subsystem (`crate::serve`) is under traffic — the
+//! threat model the online scan-and-repair loop is evaluated against.
 
+pub mod arrival;
 pub mod ber;
 pub mod clustered;
 pub mod montecarlo;

@@ -10,7 +10,6 @@
 //! Identity = `(and = -1 (0xFFFF_FFFF), or = 0)`.
 
 use crate::array::mapping;
-#[cfg(test)]
 use crate::array::Dims;
 use crate::faults::stuckat::{sample_stuck_mask, StuckMask};
 use crate::faults::FaultConfig;
@@ -110,8 +109,6 @@ impl LayerMasks {
         ber: f64,
         seed: u64,
     ) -> Self {
-        let mut out = Self::identity(g);
-        let dims = faults.dims;
         // one stuck pattern per faulty PE, stable across layers
         let pe_masks: Vec<(usize, usize, StuckMask)> = faults
             .faulty()
@@ -127,7 +124,25 @@ impl LayerMasks {
                 )
             })
             .collect();
-        for (r, c, m) in &pe_masks {
+        Self::from_pe_masks(g, faults.dims, &pe_masks, repaired)
+    }
+
+    /// As [`from_faults`], but with the per-PE stuck patterns supplied
+    /// by the caller instead of sampled — the serving subsystem's fault
+    /// timeline owns each arrived fault's pattern for the whole run, so
+    /// the pattern must not depend on how many faults exist at a given
+    /// instant (which `from_faults`'s index-keyed sampling would make
+    /// it).
+    ///
+    /// [`from_faults`]: LayerMasks::from_faults
+    pub fn from_pe_masks(
+        g: &ModelGeometry,
+        dims: Dims,
+        pe_masks: &[(usize, usize, StuckMask)],
+        repaired: &dyn Fn(usize, usize) -> bool,
+    ) -> Self {
+        let mut out = Self::identity(g);
+        for (r, c, m) in pe_masks {
             if repaired(*r, *c) {
                 continue;
             }
@@ -157,6 +172,39 @@ impl LayerMasks {
             }
         }
         out
+    }
+
+    /// The same mask set resized to a different batch dimension: conv
+    /// masks are batch-independent; the fc mask's row 0 is broadcast to
+    /// `rows` rows (every row is the same silicon, so all construction
+    /// paths above write identical rows — asserted in debug builds).
+    /// Used by the dynamic batcher for variable-size batches.
+    pub fn with_fc_rows(&self, rows: usize) -> Self {
+        assert!(rows > 0, "fc mask needs at least one row");
+        assert!(self.fc.rows > 0, "source fc mask has no rows");
+        debug_assert!(
+            (1..self.fc.rows).all(|r| {
+                (0..self.fc.cols).all(|c| self.fc.at(r, c) == self.fc.at(0, c))
+            }),
+            "fc mask rows are not uniform"
+        );
+        let row_and = &self.fc.and_mask[..self.fc.cols];
+        let row_or = &self.fc.or_mask[..self.fc.cols];
+        let mut and_mask = Vec::with_capacity(rows * self.fc.cols);
+        let mut or_mask = Vec::with_capacity(rows * self.fc.cols);
+        for _ in 0..rows {
+            and_mask.extend_from_slice(row_and);
+            or_mask.extend_from_slice(row_or);
+        }
+        Self {
+            conv: self.conv.clone(),
+            fc: MaskPair {
+                rows,
+                cols: self.fc.cols,
+                and_mask,
+                or_mask,
+            },
+        }
     }
 
     /// Flatten into runtime input tensors, in the exported order
@@ -245,6 +293,47 @@ mod tests {
         // with both repaired → identity
         let full = LayerMasks::from_faults(&g, &faults, &|_, _| true, 1e-4, 7);
         assert_eq!(full, LayerMasks::identity(&g));
+    }
+
+    #[test]
+    fn from_pe_masks_agrees_with_from_faults() {
+        let g = geometry();
+        let dims = Dims::PAPER;
+        let faults = FaultConfig::new(dims, vec![Coord::new(3, 5), Coord::new(7, 0)]);
+        let (ber, seed) = (1e-4, 9u64);
+        let via_faults = LayerMasks::from_faults(&g, &faults, &|r, _| r == 7, ber, seed);
+        let pe_masks: Vec<(usize, usize, crate::faults::stuckat::StuckMask)> = faults
+            .faulty()
+            .iter()
+            .enumerate()
+            .map(|(i, c)| {
+                let mut rng = Pcg32::split(seed, i as u64);
+                (c.row as usize, c.col as usize, sample_stuck_mask(&mut rng, ber, 144))
+            })
+            .collect();
+        let via_pe = LayerMasks::from_pe_masks(&g, dims, &pe_masks, &|r, _| r == 7);
+        assert_eq!(via_faults, via_pe);
+    }
+
+    #[test]
+    fn with_fc_rows_broadcasts_row_zero() {
+        let g = geometry();
+        let dims = Dims::PAPER;
+        let faults = FaultConfig::new(dims, vec![Coord::new(4, 0)]);
+        let m = LayerMasks::from_faults(&g, &faults, &|_, _| false, 1e-4, 7);
+        let wide = m.with_fc_rows(3);
+        assert_eq!(wide.fc.rows, 3);
+        assert_eq!(wide.conv, m.conv);
+        for b in 0..3 {
+            for n in 0..g.classes {
+                assert_eq!(wide.fc.at(b, n), m.fc.at(0, n), "b={b} n={n}");
+            }
+        }
+        // growing works too (serve builds masks at max_batch and
+        // shrinks, but the contract is symmetric)
+        let grown = wide.with_fc_rows(20);
+        assert_eq!(grown.fc.rows, 20);
+        assert_eq!(grown.fc.at(19, 4), m.fc.at(0, 4));
     }
 
     #[test]

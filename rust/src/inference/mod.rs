@@ -136,6 +136,11 @@ impl EvalSet {
 
 /// The full inference engine: a pluggable backend + model parameters +
 /// eval data. `repro info` reports `backend.name()` and `source`.
+///
+/// `Engine` is `Send + Sync` ([`Backend`] requires it and every other
+/// field is plain owned data), so the serving subsystem can share one
+/// engine across its worker pool behind an `Arc` — pinned by the
+/// `engine_is_send_and_sync` test below.
 pub struct Engine {
     pub backend: Box<dyn Backend>,
     pub params: ModelParams,
@@ -257,19 +262,31 @@ impl Engine {
     /// Raw logits for one batch through the backend. The input-assembly
     /// convention (image tensor followed by the mask pairs, see
     /// [`Backend`]) lives here and only here.
+    ///
+    /// The batch size is whatever `images.len()` is — the dynamic
+    /// batcher of `crate::serve` coalesces variable-size batches — but
+    /// it must agree with the mask geometry: `masks.fc` carries one row
+    /// per batch element (use [`LayerMasks::with_fc_rows`] to resize).
     pub fn logits(&self, images: &[Vec<i8>], masks: &LayerMasks) -> Result<I32Tensor> {
-        anyhow::ensure!(images.len() == self.batch, "batch size mismatch");
+        let batch = images.len();
+        anyhow::ensure!(batch > 0, "empty batch");
+        anyhow::ensure!(
+            masks.fc.rows == batch,
+            "mask geometry is for batch {}, got {} images",
+            masks.fc.rows,
+            batch
+        );
         let (c, h, w) = self.eval.chw;
         let classes = self.params.fc.out_n;
-        let mut x = Vec::with_capacity(self.batch * c * h * w);
+        let mut x = Vec::with_capacity(batch * c * h * w);
         for img in images {
             x.extend(img.iter().map(|&v| v as i32));
         }
-        let mut inputs = vec![I32Tensor::new(vec![self.batch, c, h, w], x)];
+        let mut inputs = vec![I32Tensor::new(vec![batch, c, h, w], x)];
         inputs.extend(masks.to_tensors());
         let logits = self.backend.execute_i32(&inputs)?;
         anyhow::ensure!(
-            logits.shape == vec![self.batch, classes],
+            logits.shape == vec![batch, classes],
             "bad logits shape {:?}",
             logits.shape
         );
@@ -378,6 +395,36 @@ mod tests {
         assert_eq!(a.backend.name(), "native");
         let acc = a.accuracy(&LayerMasks::identity(&a.geometry())).unwrap();
         assert_eq!(acc, 1.0, "labels are the clean argmax by construction");
+    }
+
+    #[test]
+    fn engine_is_send_and_sync() {
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<Engine>();
+    }
+
+    #[test]
+    fn variable_batch_sizes_match_full_batch() {
+        // the dynamic batcher submits batches of any size ≤ max_batch;
+        // predictions must not depend on how images are grouped.
+        let e = Engine::builtin();
+        let g = e.geometry();
+        let full = LayerMasks::identity(&g);
+        let images = &e.eval.images[..e.batch];
+        let want = e.predict_batch(images, &full).unwrap();
+        // one by one
+        for (i, img) in images.iter().enumerate() {
+            let m1 = full.with_fc_rows(1);
+            let p = e.predict_batch(std::slice::from_ref(img), &m1).unwrap();
+            assert_eq!(p[0], want[i], "image {i}");
+        }
+        // odd split
+        let m5 = full.with_fc_rows(5);
+        let p = e.predict_batch(&images[..5], &m5).unwrap();
+        assert_eq!(&p[..], &want[..5]);
+        // mask-row mismatch is rejected
+        assert!(e.predict_batch(&images[..5], &full).is_err());
+        assert!(e.predict_batch(&[], &full).is_err());
     }
 
     #[test]

@@ -23,6 +23,11 @@
 //! (DESIGN.md §3). The default build needs no artifacts, no network and
 //! no native libraries.
 //!
+//! Beyond the paper's artefacts, [`serve`] runs the engine as a
+//! long-lived fault-tolerant service — dynamic batching, a
+//! multi-threaded worker pool, and online scan-and-repair under live
+//! traffic (`repro serve`, DESIGN.md §5).
+//!
 //! Start at [`coordinator`] for the experiment registry, or run
 //! `cargo run --release -- list`.
 
@@ -36,5 +41,6 @@ pub mod inference;
 pub mod perfmodel;
 pub mod redundancy;
 pub mod runtime;
+pub mod serve;
 pub mod testkit;
 pub mod util;

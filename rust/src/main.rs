@@ -2,8 +2,10 @@
 //!
 //! ```text
 //! repro list                      # experiments and what they reproduce
-//! repro exp <id> [flags]         # run one experiment (fig2..fig15, table1)
+//! repro exp <id> [flags]         # run one experiment (fig2..fig15, table1, serve)
 //! repro all [flags]              # run every experiment
+//! repro serve [flags]            # serving benchmark grid + fault scenario;
+//!                                #   writes BENCH_serve.json (run from repo root)
 //! repro info                     # artifact status + active backend
 //!
 //! flags: --configs N   Monte-Carlo configs per point (default 10000)
@@ -12,6 +14,11 @@
 //!        --out DIR     CSV output directory (default results/)
 //!        --fast        reduced sweep for quick iteration
 //!        --builtin     force the builtin synthetic model (ignore artifacts)
+//!
+//! serve-only flags:
+//!        --workers N   executor thread-pool width (metrics are byte-identical
+//!                      at any value — the determinism golden test asserts it)
+//!        --smoke       reduced serving grid for CI
 //! ```
 
 use anyhow::{bail, Context, Result};
@@ -46,6 +53,45 @@ fn cmd_list() {
     for e in coordinator::registry() {
         println!("  {:<8} {}", e.id(), e.title());
     }
+}
+
+fn serve_flag_specs() -> Vec<FlagSpec> {
+    let mut specs = flag_specs();
+    specs.push(FlagSpec {
+        name: "workers",
+        takes_value: true,
+        help: "executor thread-pool width (metrics identical at any value)",
+    });
+    specs.push(FlagSpec {
+        name: "smoke",
+        takes_value: false,
+        help: "reduced serving grid for CI",
+    });
+    specs
+}
+
+fn cmd_serve(rest: &[String]) -> Result<()> {
+    let args = Args::parse(rest, &serve_flag_specs())?;
+    let mut opts = opts_from(&args)?;
+    opts.threads = args.get_parse("workers", opts.threads)?;
+    let smoke = args.has("smoke") || opts.fast;
+    eprintln!(
+        "[repro] serve — grid {} + fault scenario (seed={:#x}, executor workers={})",
+        if smoke { "smoke" } else { "full" },
+        opts.seed,
+        opts.threads
+    );
+    let t0 = std::time::Instant::now();
+    let (tables, json) = coordinator::exp_serve::run_full(&opts, smoke)?;
+    report::emit(&opts.out_dir, "serve", &tables)?;
+    // The machine-readable perf baseline lands in the current directory
+    // — run from the repo root so trajectories accumulate in one place.
+    std::fs::write("BENCH_serve.json", &json).context("writing BENCH_serve.json")?;
+    eprintln!(
+        "[repro] serve done in {:.1}s — baseline written to BENCH_serve.json",
+        t0.elapsed().as_secs_f64()
+    );
+    Ok(())
 }
 
 fn cmd_info() -> Result<()> {
@@ -108,10 +154,16 @@ fn main() -> Result<()> {
     let Some(cmd) = argv.first().map(|s| s.as_str()) else {
         println!(
             "{}",
-            usage(
-                "repro <list|exp|all|info>",
-                "HyCA reproduction CLI",
-                &flag_specs()
+            format!(
+                "{}\nserve-only flags (rejected by other commands):\n  \
+                 --workers <value>  executor thread-pool width (metrics \
+                 identical at any value)\n  --smoke            reduced \
+                 serving grid for CI\n",
+                usage(
+                    "repro <list|exp|all|serve|info>",
+                    "HyCA reproduction CLI",
+                    &flag_specs()
+                )
             )
         );
         return Ok(());
@@ -120,6 +172,7 @@ fn main() -> Result<()> {
     match cmd {
         "list" => cmd_list(),
         "info" => cmd_info()?,
+        "serve" => cmd_serve(rest)?,
         "exp" => {
             let args = Args::parse(rest, &flag_specs())?;
             let Some(id) = args.positionals.first() else {

@@ -60,7 +60,13 @@ impl I32Tensor {
 /// The input/output convention is fixed by the exported HLO (see
 /// `python/compile/model.py::mask_shapes` and the module doc above);
 /// backends must agree bit-for-bit on it.
-pub trait Backend {
+///
+/// `Send + Sync` is part of the contract: the serving subsystem
+/// (`crate::serve`) shares one engine across a `std::thread` worker
+/// pool, so `execute_i32` must be callable concurrently through a
+/// shared reference. The native backend is stateless per call; the
+/// PJRT backend serialises access to its foreign handles internally.
+pub trait Backend: Send + Sync {
     /// Short label for reports and `repro info` ("native", "pjrt:cpu").
     fn name(&self) -> String;
 

@@ -23,6 +23,13 @@ use crate::faults::stuckat::StuckMask;
 use crate::inference::params::ModelParams;
 
 /// The dependency-free inference backend.
+///
+/// Thread safety: the backend holds only the immutable model
+/// parameters and keeps no per-call state (mask transposition happens
+/// on the caller's stack), so `execute_i32` can run concurrently from
+/// any number of serving workers through a shared reference — the
+/// `Send + Sync` half of the [`Backend`] contract comes for free and
+/// is pinned by a unit test below.
 pub struct NativeBackend {
     params: ModelParams,
 }
@@ -271,5 +278,46 @@ mod tests {
     fn name_is_native() {
         let params = ModelParams::synthetic(1);
         assert_eq!(NativeBackend::new(params).name(), "native");
+    }
+
+    #[test]
+    fn native_backend_is_send_and_sync() {
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<NativeBackend>();
+    }
+
+    #[test]
+    fn concurrent_execution_matches_single_threaded() {
+        // the serve worker pool's core assumption: a shared backend
+        // produces identical logits from any thread, concurrently.
+        let (params, images, masks) = tiny_engine_inputs(2);
+        let backend = NativeBackend::new(params);
+        let reference = {
+            let mut x = Vec::new();
+            for img in &images {
+                x.extend(img.iter().map(|&v| v as i32));
+            }
+            let mut inputs = vec![I32Tensor::new(vec![2, 1, 16, 16], x)];
+            inputs.extend(masks.to_tensors());
+            backend.execute_i32(&inputs).unwrap()
+        };
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                let backend = &backend;
+                let images = &images;
+                let masks = &masks;
+                let reference = &reference;
+                s.spawn(move || {
+                    let mut x = Vec::new();
+                    for img in images {
+                        x.extend(img.iter().map(|&v| v as i32));
+                    }
+                    let mut inputs = vec![I32Tensor::new(vec![2, 1, 16, 16], x)];
+                    inputs.extend(masks.to_tensors());
+                    let got = backend.execute_i32(&inputs).unwrap();
+                    assert_eq!(&got, reference);
+                });
+            }
+        });
     }
 }

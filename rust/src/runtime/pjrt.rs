@@ -87,26 +87,41 @@ impl LoadedModule {
 }
 
 /// The PJRT-executed model as a pluggable [`Backend`].
+///
+/// The [`Backend`] trait requires `Send + Sync` (the serving subsystem
+/// shares one engine across a worker pool). The `xla` wrapper types
+/// hold raw pointers into `libxla_extension` and are not marked
+/// thread-safe, so every access to them is funnelled through a single
+/// `Mutex` — concurrent `execute_i32` calls serialise on the lock.
 pub struct PjrtBackend {
-    runtime: Runtime,
-    module: LoadedModule,
+    inner: std::sync::Mutex<(Runtime, LoadedModule)>,
 }
+
+// SAFETY: the client/executable handles are only ever touched while
+// holding `inner`'s lock, so they are confined to one thread at a time;
+// PJRT itself has no thread-affinity requirement for CPU clients.
+unsafe impl Send for PjrtBackend {}
+unsafe impl Sync for PjrtBackend {}
 
 impl PjrtBackend {
     /// Create a CPU client and compile the HLO artifact at `path`.
     pub fn load(path: impl AsRef<Path>) -> Result<Self> {
         let runtime = Runtime::cpu()?;
         let module = runtime.load_hlo(path)?;
-        Ok(Self { runtime, module })
+        Ok(Self {
+            inner: std::sync::Mutex::new((runtime, module)),
+        })
     }
 }
 
 impl Backend for PjrtBackend {
     fn name(&self) -> String {
-        format!("pjrt:{}", self.runtime.platform())
+        let inner = self.inner.lock().unwrap();
+        format!("pjrt:{}", inner.0.platform())
     }
 
     fn execute_i32(&self, inputs: &[I32Tensor]) -> Result<I32Tensor> {
-        self.module.execute_i32(inputs)
+        let inner = self.inner.lock().unwrap();
+        inner.1.execute_i32(inputs)
     }
 }

@@ -1,0 +1,138 @@
+//! Dynamic batcher: coalesce queued single-image requests into
+//! variable-size batches for `Engine::predict_batch`.
+//!
+//! Classic size-or-deadline policy, expressed entirely in **simulated
+//! cycles** (never wall clock — the determinism contract of DESIGN.md
+//! §4 extends to serving): a batch is released as soon as
+//! `max_batch` requests are pending, or once the oldest pending request
+//! has waited `max_wait` cycles. Requests leave in FIFO order, so the
+//! batch composition is a pure function of the arrival history.
+
+use std::collections::VecDeque;
+
+/// The size-or-deadline batcher over items of type `T`.
+#[derive(Debug, Clone)]
+pub struct Batcher<T> {
+    max_batch: usize,
+    max_wait: u64,
+    pending: VecDeque<(u64, T)>,
+}
+
+impl<T> Batcher<T> {
+    /// `max_batch ≥ 1` requests per batch; `max_wait` cycles of
+    /// tolerated queueing delay for the oldest request.
+    pub fn new(max_batch: usize, max_wait: u64) -> Self {
+        assert!(max_batch >= 1, "max_batch must be at least 1");
+        Self {
+            max_batch,
+            max_wait,
+            pending: VecDeque::new(),
+        }
+    }
+
+    pub fn max_batch(&self) -> usize {
+        self.max_batch
+    }
+
+    /// Enqueue a request observed at `cycle` (non-decreasing across
+    /// calls — the event loop guarantees it).
+    pub fn push(&mut self, cycle: u64, item: T) {
+        debug_assert!(
+            self.pending.back().map(|(c, _)| *c <= cycle).unwrap_or(true),
+            "batcher pushes must be in cycle order"
+        );
+        self.pending.push_back((cycle, item));
+    }
+
+    pub fn len(&self) -> usize {
+        self.pending.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.pending.is_empty()
+    }
+
+    /// The earliest cycle at which a batch could be released given the
+    /// current pending set (`None` when empty): immediately when the
+    /// size trigger holds, otherwise the oldest request's deadline.
+    pub fn ready_at(&self) -> Option<u64> {
+        let (oldest, _) = self.pending.front()?;
+        if self.pending.len() >= self.max_batch {
+            Some(*oldest)
+        } else {
+            Some(oldest + self.max_wait)
+        }
+    }
+
+    /// Release a batch at `cycle` if a trigger condition holds: size
+    /// (`pending ≥ max_batch`) or deadline (oldest waited `max_wait`).
+    /// Returns up to `max_batch` requests in FIFO order with their
+    /// enqueue cycles.
+    pub fn take(&mut self, cycle: u64) -> Option<Vec<(u64, T)>> {
+        let (oldest, _) = self.pending.front()?;
+        let size_trigger = self.pending.len() >= self.max_batch;
+        let deadline_trigger = oldest + self.max_wait <= cycle;
+        if !size_trigger && !deadline_trigger {
+            return None;
+        }
+        let n = self.pending.len().min(self.max_batch);
+        Some(self.pending.drain(..n).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn size_trigger_releases_full_batch() {
+        let mut b = Batcher::new(3, 1_000);
+        b.push(10, 'a');
+        b.push(11, 'b');
+        assert!(b.take(11).is_none(), "below size, before deadline");
+        b.push(12, 'c');
+        let batch = b.take(12).unwrap();
+        assert_eq!(batch.iter().map(|(_, x)| *x).collect::<Vec<_>>(), vec!['a', 'b', 'c']);
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn deadline_trigger_releases_partial_batch() {
+        let mut b = Batcher::new(8, 100);
+        b.push(0, 1u32);
+        b.push(50, 2u32);
+        assert!(b.take(99).is_none());
+        let batch = b.take(100).unwrap();
+        assert_eq!(batch, vec![(0, 1), (50, 2)]);
+    }
+
+    #[test]
+    fn overfull_queue_drains_in_fifo_chunks() {
+        let mut b = Batcher::new(2, 10);
+        for i in 0..5u32 {
+            b.push(i as u64, i);
+        }
+        assert_eq!(b.take(4).unwrap(), vec![(0, 0), (1, 1)]);
+        assert_eq!(b.take(4).unwrap(), vec![(2, 2), (3, 3)]);
+        // one left: below size, waits for its deadline
+        assert!(b.take(5).is_none());
+        assert_eq!(b.take(14).unwrap(), vec![(4, 4)]);
+    }
+
+    #[test]
+    fn ready_at_reports_the_release_cycle() {
+        let mut b = Batcher::<u8>::new(2, 100);
+        assert_eq!(b.ready_at(), None);
+        b.push(7, 0);
+        assert_eq!(b.ready_at(), Some(107), "deadline of the oldest");
+        b.push(9, 1);
+        assert_eq!(b.ready_at(), Some(7), "size trigger holds already");
+    }
+
+    #[test]
+    fn batch_of_one_with_zero_wait_is_passthrough() {
+        let mut b = Batcher::new(1, 0);
+        b.push(3, 'x');
+        assert_eq!(b.take(3).unwrap(), vec![(3, 'x')]);
+    }
+}

@@ -1,0 +1,134 @@
+//! Deterministic closed-loop load generator.
+//!
+//! `clients` independent logical clients each keep exactly one request
+//! in flight: a client issues a request, waits for its completion, then
+//! thinks for a seeded 0..=`think_max` cycles and issues the next one.
+//! Closed-loop load keeps the pending set bounded by the client count
+//! (so the bounded request queue never rejects) and makes the offered
+//! load adapt to service capacity — the standard serving-benchmark
+//! shape.
+//!
+//! Every draw comes from a **per-client** [`Pcg32`] stream split off
+//! the master seed, so the request sequence of client `i` is
+//! independent of when other clients' events interleave — the key to
+//! the timeline being a pure function of the configuration.
+
+use crate::util::rng::Pcg32;
+
+/// PRNG stream salt for client streams.
+const CLIENT_STREAM_SALT: u64 = 0x10AD;
+
+/// The closed-loop generator.
+pub struct LoadGen {
+    per_client: Vec<Pcg32>,
+    think_max: u64,
+    eval_n: usize,
+    issued: usize,
+    total: usize,
+}
+
+impl LoadGen {
+    /// `eval_n` = number of images in the eval set requests draw from;
+    /// `total` = number of requests the run serves overall.
+    pub fn new(seed: u64, clients: usize, eval_n: usize, think_max: u64, total: usize) -> Self {
+        assert!(clients >= 1, "need at least one client");
+        assert!(eval_n >= 1, "need at least one image");
+        Self {
+            per_client: (0..clients)
+                .map(|c| Pcg32::split(seed ^ CLIENT_STREAM_SALT, c as u64))
+                .collect(),
+            think_max,
+            eval_n,
+            issued: 0,
+            total,
+        }
+    }
+
+    pub fn clients(&self) -> usize {
+        self.per_client.len()
+    }
+
+    /// Requests issued so far.
+    pub fn issued(&self) -> usize {
+        self.issued
+    }
+
+    /// Draw the next request's image index for `client`, or `None` once
+    /// the run's request budget is exhausted (the client retires).
+    pub fn next_image(&mut self, client: usize) -> Option<usize> {
+        if self.issued >= self.total {
+            return None;
+        }
+        self.issued += 1;
+        Some(self.per_client[client].below_usize(self.eval_n))
+    }
+
+    /// The client's think time before its next request (0..=think_max).
+    pub fn think(&mut self, client: usize) -> u64 {
+        if self.think_max == 0 {
+            return 0;
+        }
+        self.per_client[client].below(self.think_max as u32 + 1) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_per_client_streams() {
+        let mut a = LoadGen::new(9, 3, 32, 50, 100);
+        let mut b = LoadGen::new(9, 3, 32, 50, 100);
+        for c in 0..3 {
+            for _ in 0..5 {
+                assert_eq!(a.next_image(c), b.next_image(c));
+                assert_eq!(a.think(c), b.think(c));
+            }
+        }
+        // the stream of client 0 does not depend on interleaving with
+        // other clients' draws
+        let mut c0_only = LoadGen::new(9, 3, 32, 50, 100);
+        let first = c0_only.next_image(0);
+        let mut interleaved = LoadGen::new(9, 3, 32, 50, 100);
+        interleaved.next_image(2);
+        interleaved.think(1);
+        assert_eq!(interleaved.next_image(0), first);
+    }
+
+    #[test]
+    fn issues_exactly_total_requests() {
+        let mut lg = LoadGen::new(1, 4, 8, 0, 10);
+        let mut n = 0;
+        'outer: loop {
+            for c in 0..4 {
+                if lg.next_image(c).is_none() {
+                    break 'outer;
+                }
+                n += 1;
+            }
+        }
+        assert_eq!(n, 10);
+        assert_eq!(lg.issued(), 10);
+        assert_eq!(lg.next_image(0), None);
+    }
+
+    #[test]
+    fn draws_respect_bounds() {
+        let mut lg = LoadGen::new(5, 2, 32, 7, 1000);
+        for i in 0..1000 {
+            let c = i % 2;
+            let img = lg.next_image(c).unwrap();
+            assert!(img < 32);
+            assert!(lg.think(c) <= 7);
+        }
+    }
+
+    #[test]
+    fn zero_think_is_zero() {
+        let mut lg = LoadGen::new(5, 1, 4, 0, 10);
+        for _ in 0..10 {
+            assert_eq!(lg.think(0), 0);
+        }
+    }
+}

@@ -1,0 +1,235 @@
+//! Serving metrics: latency percentiles (simulated cycles, via the
+//! shared [`LogHistogram`]), throughput per Mcycle, and
+//! accuracy-over-time windows — the observables the `serve` experiment
+//! reports and the golden tests pin.
+//!
+//! Everything in a [`ServeReport`] is derived from the simulated
+//! timeline plus the (thread-count-invariant) predictions, so the
+//! report is a pure function of the master seed — `digest()` renders
+//! it to one string for byte-level invariance assertions.
+
+use std::fmt::Write as _;
+
+use super::scan_agent::{EventKind, TimelineEvent};
+use super::{ServeConfig, Timeline};
+use crate::inference::Engine;
+use crate::util::stats::LogHistogram;
+
+/// Accuracy over one time window of the run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct WindowStat {
+    pub index: usize,
+    pub start_cycle: u64,
+    pub end_cycle: u64,
+    /// Requests completed inside the window.
+    pub requests: usize,
+    pub correct: usize,
+}
+
+impl WindowStat {
+    /// Accuracy of the window; `None` when no request completed in it.
+    pub fn accuracy(&self) -> Option<f64> {
+        if self.requests == 0 {
+            None
+        } else {
+            Some(self.correct as f64 / self.requests as f64)
+        }
+    }
+}
+
+/// The full result of one serving run.
+#[derive(Debug, Clone)]
+pub struct ServeReport {
+    pub lanes: usize,
+    pub max_batch: usize,
+    pub total_requests: usize,
+    pub batches: usize,
+    pub mean_batch_size: f64,
+    pub total_cycles: u64,
+    pub throughput_imgs_per_mcycle: f64,
+    pub latency_cycles: LogHistogram,
+    pub windows: Vec<WindowStat>,
+    pub events: Vec<TimelineEvent>,
+    /// Faults never detected+remapped by the end of the run.
+    pub unrepaired: usize,
+    pub max_pending: usize,
+    /// Prediction per request id.
+    pub predictions: Vec<usize>,
+    /// Correctness per request id (prediction == eval label).
+    pub correct: Vec<bool>,
+    /// Whole-run accuracy.
+    pub accuracy: f64,
+}
+
+impl ServeReport {
+    pub fn p50_cycles(&self) -> u64 {
+        self.latency_cycles.quantile(0.50)
+    }
+
+    pub fn p99_cycles(&self) -> u64 {
+        self.latency_cycles.quantile(0.99)
+    }
+
+    /// Accuracy of the last window that completed any request.
+    pub fn final_window_accuracy(&self) -> Option<f64> {
+        self.windows.iter().rev().find_map(|w| w.accuracy())
+    }
+
+    /// Deterministic rendering of every metric and per-request outcome
+    /// — two runs are equivalent iff their digests are byte-identical
+    /// (the executor-width invariance assertions compare this).
+    pub fn digest(&self) -> String {
+        let mut s = String::new();
+        let _ = writeln!(
+            s,
+            "lanes={} max_batch={} requests={} batches={} mean_batch={:.4}",
+            self.lanes, self.max_batch, self.total_requests, self.batches, self.mean_batch_size
+        );
+        let _ = writeln!(
+            s,
+            "total_cycles={} throughput={:.6} p50={} p99={} max_pending={} unrepaired={}",
+            self.total_cycles,
+            self.throughput_imgs_per_mcycle,
+            self.p50_cycles(),
+            self.p99_cycles(),
+            self.max_pending,
+            self.unrepaired
+        );
+        let _ = writeln!(s, "accuracy={:.6}", self.accuracy);
+        for w in &self.windows {
+            let acc = match w.accuracy() {
+                Some(a) => format!("{a:.6}"),
+                None => "-".to_string(),
+            };
+            let _ = writeln!(
+                s,
+                "window {} [{}, {}) n={} acc={}",
+                w.index, w.start_cycle, w.end_cycle, w.requests, acc
+            );
+        }
+        for e in &self.events {
+            let kind = match e.kind {
+                EventKind::FaultArrival(c) => format!("arrive({},{})", c.row, c.col),
+                EventKind::ScanDetection(c) => format!("detect({},{})", c.row, c.col),
+            };
+            let _ = writeln!(s, "event {} {}", e.cycle, kind);
+        }
+        for (i, (&p, &ok)) in self.predictions.iter().zip(&self.correct).enumerate() {
+            let _ = writeln!(s, "req {i} pred={p} ok={ok}");
+        }
+        s
+    }
+}
+
+/// Combine the simulated timeline with the pool's predictions.
+pub fn assemble(
+    engine: &Engine,
+    cfg: &ServeConfig,
+    timeline: Timeline,
+    preds: Vec<Vec<usize>>,
+) -> ServeReport {
+    assert_eq!(preds.len(), timeline.jobs.len(), "one result per job");
+    let n = timeline.requests.len();
+    let mut latency = LogHistogram::new();
+    let mut predictions = Vec::with_capacity(n);
+    let mut correct = Vec::with_capacity(n);
+    let window_count = cfg.windows.max(1);
+    let window_len = timeline.total_cycles.div_ceil(window_count as u64).max(1);
+    let mut windows: Vec<WindowStat> = (0..window_count)
+        .map(|i| WindowStat {
+            index: i,
+            start_cycle: i as u64 * window_len,
+            end_cycle: (i as u64 + 1) * window_len,
+            requests: 0,
+            correct: 0,
+        })
+        .collect();
+    for r in &timeline.requests {
+        let pred = preds[r.batch_id][r.slot];
+        let ok = pred as i32 == engine.eval.labels[r.image_idx];
+        predictions.push(pred);
+        correct.push(ok);
+        latency.record(r.complete_cycle - r.enqueue_cycle);
+        let w = ((r.complete_cycle / window_len) as usize).min(window_count - 1);
+        windows[w].requests += 1;
+        windows[w].correct += usize::from(ok);
+    }
+    let n_correct = correct.iter().filter(|&&c| c).count();
+    let batches = timeline.jobs.len();
+    ServeReport {
+        lanes: cfg.lanes,
+        max_batch: cfg.max_batch,
+        total_requests: n,
+        batches,
+        mean_batch_size: if batches == 0 { 0.0 } else { n as f64 / batches as f64 },
+        total_cycles: timeline.total_cycles,
+        throughput_imgs_per_mcycle: n as f64 * 1e6 / timeline.total_cycles.max(1) as f64,
+        latency_cycles: latency,
+        windows,
+        events: timeline.events,
+        unrepaired: timeline.unrepaired,
+        max_pending: timeline.max_pending,
+        predictions,
+        correct,
+        accuracy: n_correct as f64 / n.max(1) as f64,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::array::Dims;
+    use crate::serve::{run, ServeConfig};
+    use std::sync::Arc;
+
+    fn cfg() -> ServeConfig {
+        ServeConfig {
+            seed: 19,
+            dims: Dims::new(8, 8),
+            lanes: 2,
+            max_batch: 4,
+            max_wait_cycles: 4_000,
+            clients: 8,
+            think_cycles: 250,
+            total_requests: 24,
+            queue_cap: 8,
+            executor_threads: 3,
+            windows: 6,
+            faults: None,
+        }
+    }
+
+    #[test]
+    fn fault_free_run_is_perfectly_accurate() {
+        let engine = Arc::new(crate::inference::Engine::builtin());
+        let report = run(&engine, &cfg()).unwrap();
+        assert_eq!(report.total_requests, 24);
+        assert_eq!(report.accuracy, 1.0, "builtin labels are the clean argmax");
+        assert_eq!(report.latency_cycles.count(), 24);
+        assert!(report.p50_cycles() <= report.p99_cycles());
+        assert!(report.throughput_imgs_per_mcycle > 0.0);
+        let windowed: usize = report.windows.iter().map(|w| w.requests).sum();
+        assert_eq!(windowed, 24, "every request lands in exactly one window");
+        assert_eq!(report.final_window_accuracy(), Some(1.0));
+        assert!(report.events.is_empty());
+        assert_eq!(report.unrepaired, 0);
+    }
+
+    #[test]
+    fn digest_is_stable_across_executor_widths() {
+        let engine = Arc::new(crate::inference::Engine::builtin());
+        let a = run(&engine, &cfg()).unwrap();
+        let mut wide = cfg();
+        wide.executor_threads = 7;
+        let b = run(&engine, &wide).unwrap();
+        assert_eq!(a.digest(), b.digest());
+    }
+
+    #[test]
+    fn window_accuracy_handles_empty_windows() {
+        let w = WindowStat { index: 0, start_cycle: 0, end_cycle: 10, requests: 0, correct: 0 };
+        assert_eq!(w.accuracy(), None);
+        let w2 = WindowStat { index: 1, start_cycle: 10, end_cycle: 20, requests: 4, correct: 3 };
+        assert_eq!(w2.accuracy(), Some(0.75));
+    }
+}

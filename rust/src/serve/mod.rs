@@ -1,0 +1,488 @@
+//! `serve` — a fault-tolerant inference serving subsystem: dynamic
+//! batching, a multi-threaded worker pool over a shared
+//! [`Arc<Engine>`], and online scan-and-repair under live traffic
+//! (DESIGN.md §5).
+//!
+//! The subsystem separates **time** from **compute**:
+//!
+//! * *Simulated time* — [`simulate_timeline`] runs a deterministic
+//!   discrete-event simulation in array cycles: a closed-loop load
+//!   generator ([`loadgen`]) feeds a size-or-deadline dynamic batcher
+//!   ([`batcher`]); released batches occupy one of `lanes` simulated
+//!   service lanes for [`CostModel::batch_cycles`] cycles; a background
+//!   scan agent ([`scan_agent`]) interleaves HyCA detection scans with
+//!   the traffic and remaps newly-arrived faults (see
+//!   [`crate::faults::arrival`]) live. Everything here is a pure
+//!   function of the
+//!   [`ServeConfig`] — no wall clock, no platform randomness (the CI
+//!   determinism lint enforces it for this directory).
+//! * *Real compute* — [`pool::execute`] replays the timeline's batch
+//!   jobs through a bounded MPMC queue ([`queue`]) into a
+//!   `std::thread` worker pool sharing one engine; each job is pure,
+//!   so predictions are byte-identical at any `executor_threads`
+//!   (property-tested in `rust/tests/proptests.rs`).
+//!
+//! Metrics ([`metrics`]) — latency percentiles in cycles via
+//! [`crate::util::stats::LogHistogram`], throughput per Mcycle, and
+//! accuracy-over-time windows — therefore never depend on the machine
+//! executing the run, only on the seed: the property behind the
+//! `BENCH_serve.json` golden test.
+
+pub mod batcher;
+pub mod loadgen;
+pub mod metrics;
+pub mod pool;
+pub mod queue;
+pub mod scan_agent;
+
+use std::cmp::Reverse;
+use std::collections::{BTreeSet, BinaryHeap};
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::array::Dims;
+use crate::faults::arrival;
+use crate::inference::masks::LayerMasks;
+use crate::inference::params::ModelParams;
+use crate::inference::Engine;
+use batcher::Batcher;
+use loadgen::LoadGen;
+use scan_agent::{build_timeline, FaultTimeline, ScanAgentConfig, TimelineEvent};
+
+/// Mid-run fault injection plan (the scenario of `repro serve`).
+#[derive(Debug, Clone, Copy)]
+pub struct FaultPlan {
+    /// Mean cycles between fault arrivals (Poisson in cycle time).
+    pub mean_interarrival_cycles: f64,
+    /// Arrivals only happen in `[0, horizon)` so the run's tail
+    /// demonstrates recovery.
+    pub horizon_cycles: u64,
+    /// Scan cadence of the background scan agent.
+    pub scan_period_cycles: u64,
+    /// Reserved scanner group width (paper default 8).
+    pub group_width: usize,
+    /// FPT capacity = how many PEs the DPPU can take over.
+    pub fpt_capacity: usize,
+    /// Cap on the arrival process.
+    pub max_arrivals: usize,
+}
+
+/// Configuration of one serving run. Metrics are a pure function of
+/// everything here except `executor_threads`, which only selects how
+/// many real threads crunch the math.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Master seed for load, faults and scan data.
+    pub seed: u64,
+    /// The simulated computing array the model is mapped onto.
+    pub dims: Dims,
+    /// Simulated service lanes (arrays executing concurrently).
+    pub lanes: usize,
+    /// Dynamic batcher: maximum coalesced batch size.
+    pub max_batch: usize,
+    /// Dynamic batcher: deadline for the oldest pending request.
+    pub max_wait_cycles: u64,
+    /// Closed-loop clients (bounds the pending set).
+    pub clients: usize,
+    /// Per-request think time upper bound (0 = saturating load).
+    pub think_cycles: u64,
+    /// Requests served by the run.
+    pub total_requests: usize,
+    /// Bound of the request queue (must admit every client).
+    pub queue_cap: usize,
+    /// Real worker threads executing the inference jobs.
+    pub executor_threads: usize,
+    /// Accuracy-over-time windows in the report.
+    pub windows: usize,
+    /// Optional mid-run fault injection.
+    pub faults: Option<FaultPlan>,
+}
+
+/// Closed-form cycle cost of serving one batch on the simulated array,
+/// derived from the same output-stationary runtime model as
+/// `perfmodel::layers` (cross-checked by a unit test): per-fold
+/// pipeline fills are paid once per batch (operands of back-to-back
+/// images stream through a warm array), the steady-state compute
+/// scales per image — which is exactly why batching pays.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CostModel {
+    /// Steady-state cycles per image (fold iterations, no fills).
+    pub steady_per_image: u64,
+    /// Pipeline fill/drain cycles paid once per dispatched batch.
+    pub fill_per_batch: u64,
+}
+
+impl CostModel {
+    /// Build from the engine's parsed model on the given array.
+    pub fn of(params: &ModelParams, dims: Dims) -> Self {
+        let (rows, cols) = (dims.rows as u64, dims.cols as u64);
+        assert!(rows > 0 && cols > 0, "dead array");
+        let mut steady = 0u64;
+        let mut fill = 0u64;
+        for (i, conv) in params.convs.iter().enumerate() {
+            let side = params.conv_out_side(i) as u64;
+            let folds = (side * side).div_ceil(rows) * (conv.out_c as u64).div_ceil(cols);
+            let t_iter = (conv.k * conv.k * conv.in_c) as u64;
+            steady += folds * t_iter;
+            fill += folds * (2 * rows + cols - 2);
+        }
+        let fc_folds = (params.fc.out_n as u64).div_ceil(rows);
+        steady += fc_folds * params.fc.in_n as u64;
+        fill += fc_folds * (2 * rows - 1);
+        Self {
+            steady_per_image: steady,
+            fill_per_batch: fill,
+        }
+    }
+
+    /// Cycles to serve one isolated image.
+    pub fn per_image_cycles(&self) -> u64 {
+        self.fill_per_batch + self.steady_per_image
+    }
+
+    /// Cycles one lane is busy serving a batch of `b` images.
+    pub fn batch_cycles(&self, b: usize) -> u64 {
+        assert!(b >= 1, "empty batch has no cost");
+        self.fill_per_batch + b as u64 * self.steady_per_image
+    }
+}
+
+/// One coalesced batch as dispatched to a lane — also the unit of work
+/// the real worker pool executes.
+#[derive(Debug, Clone)]
+pub struct BatchJob {
+    pub id: usize,
+    /// Eval-set image index per batch slot.
+    pub image_idxs: Vec<usize>,
+    /// Masks active at dispatch (fc rows == batch size).
+    pub masks: Arc<LayerMasks>,
+    pub start_cycle: u64,
+    pub end_cycle: u64,
+    pub lane: usize,
+}
+
+/// Per-request audit record.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RequestRecord {
+    pub id: usize,
+    pub client: usize,
+    pub image_idx: usize,
+    pub enqueue_cycle: u64,
+    pub start_cycle: u64,
+    pub complete_cycle: u64,
+    pub batch_id: usize,
+    /// Position within the batch (indexes the job's predictions).
+    pub slot: usize,
+}
+
+/// The fully-resolved simulated timeline of one run.
+pub struct Timeline {
+    pub jobs: Vec<BatchJob>,
+    /// Records in request-id (= issue) order.
+    pub requests: Vec<RequestRecord>,
+    pub total_cycles: u64,
+    pub events: Vec<TimelineEvent>,
+    pub unrepaired: usize,
+    /// High-water mark of the pending request queue.
+    pub max_pending: usize,
+}
+
+// Event kinds of the discrete-event loop; the (cycle, kind, key)
+// triple is the deterministic processing order.
+const EV_CLIENT_READY: u8 = 0;
+const EV_LANE_FREE: u8 = 1;
+const EV_BATCH_DEADLINE: u8 = 2;
+
+/// Run the deterministic discrete-event simulation in cycle time.
+/// Pure: depends only on `engine`'s model/eval data and `cfg` (not on
+/// `cfg.executor_threads`).
+pub fn simulate_timeline(engine: &Engine, cfg: &ServeConfig) -> Timeline {
+    assert!(cfg.lanes >= 1, "need at least one lane");
+    assert!(cfg.total_requests >= 1, "need at least one request");
+    assert!(
+        cfg.queue_cap >= cfg.clients,
+        "closed-loop pending set (≤ clients) must fit the bounded queue"
+    );
+    let cost = CostModel::of(&engine.params, cfg.dims);
+    let mut geometry = engine.geometry();
+    geometry.batch = cfg.max_batch;
+    let faults = match &cfg.faults {
+        None => FaultTimeline::healthy(&geometry),
+        Some(plan) => {
+            let arrivals = arrival::sample_arrivals(
+                cfg.seed,
+                cfg.dims,
+                plan.mean_interarrival_cycles,
+                plan.horizon_cycles,
+                plan.max_arrivals,
+            );
+            let agent = ScanAgentConfig {
+                dims: cfg.dims,
+                scan_period_cycles: plan.scan_period_cycles,
+                group_width: plan.group_width,
+                fpt_capacity: plan.fpt_capacity,
+                max_scans: 4096,
+            };
+            build_timeline(cfg.seed, &geometry, &agent, &arrivals)
+        }
+    };
+
+    let mut gen = LoadGen::new(
+        cfg.seed,
+        cfg.clients,
+        engine.eval.images.len(),
+        cfg.think_cycles,
+        cfg.total_requests,
+    );
+    let mut pending: Batcher<usize> = Batcher::new(cfg.max_batch, cfg.max_wait_cycles);
+    let mut heap: BinaryHeap<Reverse<(u64, u8, u64)>> = BinaryHeap::new();
+    for c in 0..cfg.clients {
+        let at = gen.think(c);
+        heap.push(Reverse((at, EV_CLIENT_READY, c as u64)));
+    }
+    let mut free_lanes: BTreeSet<usize> = (0..cfg.lanes).collect();
+    let mut jobs: Vec<BatchJob> = Vec::new();
+    let mut requests: Vec<RequestRecord> = Vec::new();
+    let mut max_pending = 0usize;
+
+    while let Some(Reverse((t, kind, key))) = heap.pop() {
+        match kind {
+            EV_CLIENT_READY => {
+                let client = key as usize;
+                if let Some(image_idx) = gen.next_image(client) {
+                    let id = requests.len();
+                    requests.push(RequestRecord {
+                        id,
+                        client,
+                        image_idx,
+                        enqueue_cycle: t,
+                        start_cycle: 0,
+                        complete_cycle: 0,
+                        batch_id: 0,
+                        slot: 0,
+                    });
+                    pending.push(t, id);
+                    max_pending = max_pending.max(pending.len());
+                    assert!(
+                        pending.len() <= cfg.queue_cap,
+                        "bounded request queue overflowed"
+                    );
+                    heap.push(Reverse((
+                        t + cfg.max_wait_cycles,
+                        EV_BATCH_DEADLINE,
+                        id as u64,
+                    )));
+                }
+            }
+            EV_LANE_FREE => {
+                free_lanes.insert(key as usize);
+            }
+            _ => {} // deadline: dispatch attempt below
+        }
+        // dispatch whatever is releasable at `t` onto free lanes
+        while !free_lanes.is_empty() {
+            let Some(batch) = pending.take(t) else { break };
+            let lane = *free_lanes.iter().next().unwrap();
+            free_lanes.remove(&lane);
+            let b = batch.len();
+            let start = t;
+            let end = t + cost.batch_cycles(b);
+            let epoch_masks = faults.masks_at(start);
+            let masks = if b == cfg.max_batch {
+                Arc::clone(epoch_masks)
+            } else {
+                Arc::new(epoch_masks.with_fc_rows(b))
+            };
+            let batch_id = jobs.len();
+            let mut image_idxs = Vec::with_capacity(b);
+            for (slot, (_, rid)) in batch.iter().enumerate() {
+                let client = {
+                    let r = &mut requests[*rid];
+                    r.start_cycle = start;
+                    r.complete_cycle = end;
+                    r.batch_id = batch_id;
+                    r.slot = slot;
+                    image_idxs.push(r.image_idx);
+                    r.client
+                };
+                let think = gen.think(client);
+                heap.push(Reverse((end + think, EV_CLIENT_READY, client as u64)));
+            }
+            jobs.push(BatchJob {
+                id: batch_id,
+                image_idxs,
+                masks,
+                start_cycle: start,
+                end_cycle: end,
+                lane,
+            });
+            heap.push(Reverse((end, EV_LANE_FREE, lane as u64)));
+        }
+    }
+
+    assert_eq!(
+        requests.len(),
+        cfg.total_requests,
+        "closed loop must issue every budgeted request"
+    );
+    debug_assert!(
+        requests.iter().all(|r| r.complete_cycle > r.enqueue_cycle),
+        "every request must complete"
+    );
+    // The makespan is the last *completion* — phantom tail events
+    // (stale batch deadlines, think-time wake-ups of retired clients)
+    // must not stretch the measured serving time.
+    let total_cycles = jobs.iter().map(|j| j.end_cycle).max().unwrap_or(0);
+    Timeline {
+        jobs,
+        requests,
+        total_cycles,
+        events: faults.events.clone(),
+        unrepaired: faults.unrepaired,
+        max_pending,
+    }
+}
+
+/// End to end: simulate the timeline, execute the batches on the real
+/// worker pool, assemble the report.
+pub fn run(engine: &Arc<Engine>, cfg: &ServeConfig) -> Result<metrics::ServeReport> {
+    let timeline = simulate_timeline(engine, cfg);
+    let predictions = pool::execute(engine, &timeline.jobs, cfg.executor_threads, cfg.queue_cap)?;
+    Ok(metrics::assemble(engine, cfg, timeline, predictions))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_cfg() -> ServeConfig {
+        ServeConfig {
+            seed: 11,
+            dims: Dims::new(8, 8),
+            lanes: 2,
+            max_batch: 4,
+            max_wait_cycles: 5_000,
+            clients: 8,
+            think_cycles: 0,
+            total_requests: 20,
+            queue_cap: 8,
+            executor_threads: 2,
+            windows: 4,
+            faults: None,
+        }
+    }
+
+    #[test]
+    fn cost_model_matches_perfmodel_runtime() {
+        use crate::perfmodel::layers::{Layer, Network};
+        let params = ModelParams::synthetic(0xBEEF);
+        let dims = Dims::new(8, 8);
+        let cost = CostModel::of(&params, dims);
+        let mut layers = Vec::new();
+        for (i, conv) in params.convs.iter().enumerate() {
+            let side = params.conv_out_side(i);
+            layers.push(Layer::Conv {
+                in_c: conv.in_c,
+                out_c: conv.out_c,
+                k: conv.k,
+                oh: side,
+                ow: side,
+            });
+        }
+        layers.push(Layer::Fc {
+            in_n: params.fc.in_n,
+            out_n: params.fc.out_n,
+        });
+        let net = Network { name: "serve", layers };
+        assert_eq!(cost.per_image_cycles(), net.cycles(dims).unwrap());
+        // batching amortises fills but never the steady compute
+        assert_eq!(
+            cost.batch_cycles(8),
+            cost.fill_per_batch + 8 * cost.steady_per_image
+        );
+        assert!(cost.batch_cycles(8) < 8 * cost.per_image_cycles());
+    }
+
+    #[test]
+    fn timeline_serves_every_request_without_lane_overlap() {
+        let engine = Engine::builtin();
+        let cfg = small_cfg();
+        let t = simulate_timeline(&engine, &cfg);
+        assert_eq!(t.requests.len(), 20);
+        assert!(t.max_pending <= cfg.queue_cap);
+        for r in &t.requests {
+            assert!(r.enqueue_cycle <= r.start_cycle);
+            assert!(r.start_cycle < r.complete_cycle);
+            let job = &t.jobs[r.batch_id];
+            assert_eq!(job.image_idxs[r.slot], r.image_idx);
+            assert_eq!((job.start_cycle, job.end_cycle), (r.start_cycle, r.complete_cycle));
+        }
+        // jobs on one lane never overlap in time
+        for lane in 0..cfg.lanes {
+            let mut lane_jobs: Vec<&BatchJob> =
+                t.jobs.iter().filter(|j| j.lane == lane).collect();
+            lane_jobs.sort_by_key(|j| j.start_cycle);
+            for w in lane_jobs.windows(2) {
+                assert!(w[0].end_cycle <= w[1].start_cycle, "lane {lane} overlap");
+            }
+        }
+        // batch sizes respect the cap and cover all requests
+        let served: usize = t.jobs.iter().map(|j| j.image_idxs.len()).sum();
+        assert_eq!(served, 20);
+        assert!(t.jobs.iter().all(|j| j.image_idxs.len() <= cfg.max_batch));
+    }
+
+    #[test]
+    fn timeline_is_deterministic_and_ignores_executor_threads() {
+        let engine = Engine::builtin();
+        let cfg = small_cfg();
+        let mut other = small_cfg();
+        other.executor_threads = 7;
+        let a = simulate_timeline(&engine, &cfg);
+        let b = simulate_timeline(&engine, &other);
+        assert_eq!(a.requests, b.requests);
+        assert_eq!(a.total_cycles, b.total_cycles);
+        assert_eq!(a.jobs.len(), b.jobs.len());
+    }
+
+    #[test]
+    fn more_lanes_never_slow_the_run_down() {
+        let engine = Engine::builtin();
+        let mut one = small_cfg();
+        one.lanes = 1;
+        let mut four = small_cfg();
+        four.lanes = 4;
+        four.clients = 16;
+        four.queue_cap = 16;
+        let t1 = simulate_timeline(&engine, &one);
+        let t4 = simulate_timeline(&engine, &four);
+        assert!(
+            t4.total_cycles <= t1.total_cycles,
+            "4 lanes {} vs 1 lane {}",
+            t4.total_cycles,
+            t1.total_cycles
+        );
+    }
+
+    #[test]
+    fn bigger_batches_raise_throughput_under_saturation() {
+        // keep the lanes saturated (clients = lanes × max_batch × 2) so
+        // the comparison isolates the fill amortisation of batching
+        let engine = Engine::builtin();
+        let mut small = small_cfg();
+        small.max_batch = 1;
+        small.total_requests = 40;
+        let mut big = small_cfg();
+        big.max_batch = 4;
+        big.total_requests = 40;
+        let ts = simulate_timeline(&engine, &small);
+        let tb = simulate_timeline(&engine, &big);
+        assert!(
+            tb.total_cycles < ts.total_cycles,
+            "batch 4 {} vs batch 1 {}",
+            tb.total_cycles,
+            ts.total_cycles
+        );
+    }
+}

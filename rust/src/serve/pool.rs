@@ -1,0 +1,143 @@
+//! The real worker pool: replay the simulated timeline's batch jobs
+//! through the shared engine on `executor_threads` OS threads.
+//!
+//! Jobs flow producer → [`BoundedQueue`] → workers; every worker holds
+//! a clone of the same [`Arc<Engine>`] (the `Backend: Send + Sync`
+//! contract). Each job is a pure function of its images and masks, and
+//! results land in per-job slots keyed by job id — so the final
+//! prediction vector is byte-identical at any thread count and any
+//! scheduling interleaving, which is exactly the invariance the serve
+//! property tests pin.
+
+use std::sync::{Arc, Mutex};
+
+use anyhow::{Context, Result};
+
+use super::queue::BoundedQueue;
+use super::BatchJob;
+use crate::inference::Engine;
+
+/// Execute every job; returns per-job prediction vectors (one
+/// prediction per batch slot), in job-id order.
+pub fn execute(
+    engine: &Arc<Engine>,
+    jobs: &[BatchJob],
+    executor_threads: usize,
+    queue_cap: usize,
+) -> Result<Vec<Vec<usize>>> {
+    if jobs.is_empty() {
+        return Ok(Vec::new());
+    }
+    let threads = executor_threads.max(1);
+    let queue: BoundedQueue<(usize, &BatchJob)> = BoundedQueue::new(queue_cap.max(1));
+    let results: Vec<Mutex<Option<Vec<usize>>>> =
+        jobs.iter().map(|_| Mutex::new(None)).collect();
+    let failure: Mutex<Option<anyhow::Error>> = Mutex::new(None);
+
+    std::thread::scope(|scope| {
+        let queue_ref = &queue;
+        let results_ref = &results;
+        let failure_ref = &failure;
+        for _ in 0..threads {
+            let worker_engine = Arc::clone(engine);
+            scope.spawn(move || {
+                while let Some((idx, job)) = queue_ref.pop() {
+                    if failure_ref.lock().unwrap().is_some() {
+                        continue; // drain the queue, nothing more to do
+                    }
+                    let images: Vec<Vec<i8>> = job
+                        .image_idxs
+                        .iter()
+                        .map(|&i| worker_engine.eval.images[i].clone())
+                        .collect();
+                    match worker_engine.predict_batch(&images, &job.masks) {
+                        Ok(preds) => {
+                            *results_ref[idx].lock().unwrap() = Some(preds);
+                        }
+                        Err(e) => {
+                            let mut f = failure_ref.lock().unwrap();
+                            if f.is_none() {
+                                *f = Some(e.context(format!("serving batch job {idx}")));
+                            }
+                        }
+                    }
+                }
+            });
+        }
+        for (idx, job) in jobs.iter().enumerate() {
+            if queue_ref.push((idx, job)).is_err() {
+                break; // queue closed early — cannot happen today
+            }
+        }
+        queue_ref.close();
+    });
+
+    if let Some(e) = failure.into_inner().unwrap() {
+        return Err(e);
+    }
+    results
+        .into_iter()
+        .enumerate()
+        .map(|(idx, slot)| {
+            slot.into_inner()
+                .unwrap()
+                .with_context(|| format!("batch job {idx} was never executed"))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::array::Dims;
+    use crate::serve::{simulate_timeline, ServeConfig};
+
+    fn engine() -> Arc<Engine> {
+        Arc::new(Engine::builtin())
+    }
+
+    fn cfg() -> ServeConfig {
+        ServeConfig {
+            seed: 3,
+            dims: Dims::new(8, 8),
+            lanes: 2,
+            max_batch: 4,
+            max_wait_cycles: 5_000,
+            clients: 6,
+            think_cycles: 100,
+            total_requests: 18,
+            queue_cap: 6,
+            executor_threads: 2,
+            windows: 4,
+            faults: None,
+        }
+    }
+
+    #[test]
+    fn pool_results_match_direct_execution_at_any_width() {
+        let engine = engine();
+        let timeline = simulate_timeline(&engine, &cfg());
+        let direct: Vec<Vec<usize>> = timeline
+            .jobs
+            .iter()
+            .map(|job| {
+                let images: Vec<Vec<i8>> = job
+                    .image_idxs
+                    .iter()
+                    .map(|&i| engine.eval.images[i].clone())
+                    .collect();
+                engine.predict_batch(&images, &job.masks).unwrap()
+            })
+            .collect();
+        for threads in [1usize, 2, 5] {
+            let pooled = execute(&engine, &timeline.jobs, threads, 4).unwrap();
+            assert_eq!(pooled, direct, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn empty_job_list_is_fine() {
+        let engine = engine();
+        assert!(execute(&engine, &[], 3, 4).unwrap().is_empty());
+    }
+}

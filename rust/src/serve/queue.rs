@@ -1,0 +1,194 @@
+//! Bounded MPMC queue — the seam between the deterministic simulated
+//! timeline (producer) and the real `std::thread` worker pool
+//! (consumers) in [`super::pool`].
+//!
+//! Plain `Mutex<VecDeque> + Condvar` with close semantics: `push`
+//! blocks while the queue is at capacity (backpressure on the
+//! producer), `pop` blocks while it is empty, and `close` wakes
+//! everyone so consumers drain the remaining items and exit. Multiple
+//! producers and consumers are fine; determinism of the serving results
+//! does not depend on pop order because every job is pure and keyed by
+//! its index ([`super::pool::execute`]).
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+
+struct Inner<T> {
+    buf: VecDeque<T>,
+    closed: bool,
+    max_depth: usize,
+}
+
+/// A bounded multi-producer multi-consumer queue.
+pub struct BoundedQueue<T> {
+    cap: usize,
+    inner: Mutex<Inner<T>>,
+    not_empty: Condvar,
+    not_full: Condvar,
+}
+
+impl<T> BoundedQueue<T> {
+    /// New queue holding at most `cap` items (`cap ≥ 1`).
+    pub fn new(cap: usize) -> Self {
+        assert!(cap >= 1, "queue capacity must be at least 1");
+        Self {
+            cap,
+            inner: Mutex::new(Inner {
+                buf: VecDeque::with_capacity(cap),
+                closed: false,
+                max_depth: 0,
+            }),
+            not_empty: Condvar::new(),
+            not_full: Condvar::new(),
+        }
+    }
+
+    /// Enqueue, blocking while full. Returns `Err(item)` if the queue
+    /// was closed (the item is handed back).
+    pub fn push(&self, item: T) -> Result<(), T> {
+        let mut g = self.inner.lock().unwrap();
+        while g.buf.len() >= self.cap && !g.closed {
+            g = self.not_full.wait(g).unwrap();
+        }
+        if g.closed {
+            return Err(item);
+        }
+        g.buf.push_back(item);
+        g.max_depth = g.max_depth.max(g.buf.len());
+        drop(g);
+        self.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Dequeue, blocking while empty and open. `None` once the queue
+    /// is closed *and* drained.
+    pub fn pop(&self) -> Option<T> {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if let Some(item) = g.buf.pop_front() {
+                drop(g);
+                self.not_full.notify_one();
+                return Some(item);
+            }
+            if g.closed {
+                return None;
+            }
+            g = self.not_empty.wait(g).unwrap();
+        }
+    }
+
+    /// Close the queue: producers get `Err`, consumers drain and then
+    /// see `None`.
+    pub fn close(&self) {
+        let mut g = self.inner.lock().unwrap();
+        g.closed = true;
+        drop(g);
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+
+    /// High-water mark of the queue depth (≤ capacity by construction).
+    pub fn max_depth(&self) -> usize {
+        self.inner.lock().unwrap().max_depth
+    }
+
+    /// The configured capacity bound.
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fifo_within_single_thread() {
+        let q = BoundedQueue::new(4);
+        q.push(1).unwrap();
+        q.push(2).unwrap();
+        q.close();
+        assert_eq!(q.pop(), Some(1));
+        assert_eq!(q.pop(), Some(2));
+        assert_eq!(q.pop(), None);
+        assert!(q.push(3).is_err());
+    }
+
+    #[test]
+    fn transfers_everything_under_backpressure() {
+        // capacity 2 ≪ item count forces the producer to block.
+        let q = BoundedQueue::new(2);
+        let n = 500usize;
+        let total: usize = std::thread::scope(|s| {
+            let qp = &q;
+            let consumers: Vec<_> = (0..3)
+                .map(|_| {
+                    s.spawn(move || {
+                        let mut sum = 0usize;
+                        while let Some(v) = qp.pop() {
+                            sum += v;
+                        }
+                        sum
+                    })
+                })
+                .collect();
+            for i in 1..=n {
+                qp.push(i).unwrap();
+            }
+            qp.close();
+            consumers.into_iter().map(|h| h.join().unwrap()).sum()
+        });
+        assert_eq!(total, n * (n + 1) / 2);
+        assert!(q.max_depth() <= 2, "bound violated: {}", q.max_depth());
+    }
+
+    #[test]
+    fn multiple_producers_are_fine() {
+        let q = BoundedQueue::new(3);
+        let total: usize = std::thread::scope(|s| {
+            let qp = &q;
+            let producers: Vec<_> = (0..2)
+                .map(|p| {
+                    s.spawn(move || {
+                        for i in 0..100usize {
+                            qp.push(p * 1000 + i).unwrap();
+                        }
+                    })
+                })
+                .collect();
+            let consumer = s.spawn(move || {
+                let mut sum = 0usize;
+                while let Some(v) = qp.pop() {
+                    sum += v;
+                }
+                sum
+            });
+            for h in producers {
+                h.join().unwrap();
+            }
+            qp.close();
+            consumer.join().unwrap()
+        });
+        let expect: usize = (0..100).sum::<usize>() + (0..100).map(|i| 1000 + i).sum::<usize>();
+        assert_eq!(total, expect);
+    }
+
+    #[test]
+    fn close_unblocks_waiting_consumer() {
+        let q = BoundedQueue::<u32>::new(1);
+        std::thread::scope(|s| {
+            let qp = &q;
+            let h = s.spawn(move || qp.pop());
+            // give the consumer a chance to park, then close
+            std::thread::yield_now();
+            qp.close();
+            assert_eq!(h.join().unwrap(), None);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "at least 1")]
+    fn zero_capacity_rejected() {
+        BoundedQueue::<u8>::new(0);
+    }
+}

@@ -1,0 +1,350 @@
+//! Background scan agent: interleaves HyCA detection scans
+//! ([`crate::hyca::detect::simulate_scan`]) with serving traffic and
+//! turns detections into live remaps.
+//!
+//! The agent time-shares the reserved DPPU scanner group with repair
+//! work, so scans start every `scan_period_cycles` (≥ one scan length,
+//! `Row·Col + Col` cycles). Each scan checks the PEs against the fault
+//! set *as of its start cycle*: a fault arriving mid-scan is picked up
+//! by the next scan — detection latency is at most two scan periods
+//! plus the in-scan position, more only when the stuck value coincides
+//! with the live data and the fault escapes a window (the §IV-D escape
+//! case, re-rolled every scan with fresh traffic).
+//!
+//! A detection inserts the PE into the [`FaultPeTable`] and triggers an
+//! immediate HyCA remap: from that cycle on, the DPPU recomputes the
+//! PE's outputs, so the serving masks return to identity for that PE —
+//! *without draining the request queue*. The whole history is
+//! precomputed as an epoch list (cycle → active [`LayerMasks`]), which
+//! is what makes the serving timeline a pure function of the seed while
+//! still modelling detection, repair and traffic interacting in time.
+
+use std::sync::Arc;
+
+use crate::array::Dims;
+use crate::faults::arrival::ArrivalEvent;
+use crate::faults::stuckat::StuckMask;
+use crate::faults::{Coord, FaultConfig};
+use crate::hyca::detect::{scan_cycles, simulate_scan};
+use crate::hyca::fpt::FaultPeTable;
+use crate::inference::masks::{LayerMasks, ModelGeometry};
+use crate::util::rng::Pcg32;
+
+/// PRNG stream salt for per-scan traffic data.
+const SCAN_STREAM_SALT: u64 = 0x5CAB;
+
+/// Scan agent configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct ScanAgentConfig {
+    /// The simulated computing array.
+    pub dims: Dims,
+    /// Cycles between scan starts (≥ `scan_cycles(dims)`).
+    pub scan_period_cycles: u64,
+    /// Width of the reserved scanner group (paper default: 8).
+    pub group_width: usize,
+    /// FPT capacity = DPPU repair capacity in PEs.
+    pub fpt_capacity: usize,
+    /// Upper bound on scans simulated (escape-loop safety net).
+    pub max_scans: usize,
+}
+
+/// What happened on the fault timeline.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EventKind {
+    /// A new permanent fault arrived at this PE.
+    FaultArrival(Coord),
+    /// The scan flagged this PE; it enters the FPT and the DPPU takes
+    /// over its outputs (live remap).
+    ScanDetection(Coord),
+}
+
+/// One timeline event in simulated cycles.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TimelineEvent {
+    pub cycle: u64,
+    pub kind: EventKind,
+}
+
+/// One mask regime: `masks` is active from `start` until the next
+/// epoch begins.
+#[derive(Debug, Clone)]
+pub struct Epoch {
+    pub start: u64,
+    pub masks: Arc<LayerMasks>,
+    /// Any arrived fault currently unrepaired?
+    pub degraded: bool,
+}
+
+/// The precomputed fault/detection/repair history of one serving run.
+#[derive(Debug, Clone)]
+pub struct FaultTimeline {
+    /// Mask regimes, ascending `start`, `epochs[0].start == 0`.
+    pub epochs: Vec<Epoch>,
+    /// Arrivals and detections, ascending cycle.
+    pub events: Vec<TimelineEvent>,
+    /// Faults that were never detected+remapped (escaped `max_scans`
+    /// windows, or the FPT was full).
+    pub unrepaired: usize,
+}
+
+impl FaultTimeline {
+    /// A fault-free timeline: one identity epoch.
+    pub fn healthy(g: &ModelGeometry) -> Self {
+        Self {
+            epochs: vec![Epoch {
+                start: 0,
+                masks: Arc::new(LayerMasks::identity(g)),
+                degraded: false,
+            }],
+            events: Vec::new(),
+            unrepaired: 0,
+        }
+    }
+
+    /// The masks active at `cycle` (the last epoch starting ≤ cycle).
+    pub fn masks_at(&self, cycle: u64) -> &Arc<LayerMasks> {
+        let i = self.epochs.partition_point(|e| e.start <= cycle);
+        &self.epochs[i - 1].masks
+    }
+
+    /// Is the array degraded (unrepaired fault active) at `cycle`?
+    pub fn degraded_at(&self, cycle: u64) -> bool {
+        let i = self.epochs.partition_point(|e| e.start <= cycle);
+        self.epochs[i - 1].degraded
+    }
+}
+
+/// Precompute the full timeline for a set of arrivals: run periodic
+/// scans, collect detections, and materialise the mask epochs.
+/// Deterministic in `(seed, g, cfg, arrivals)`.
+pub fn build_timeline(
+    seed: u64,
+    g: &ModelGeometry,
+    cfg: &ScanAgentConfig,
+    arrivals: &[ArrivalEvent],
+) -> FaultTimeline {
+    if arrivals.is_empty() {
+        return FaultTimeline::healthy(g);
+    }
+    let scan_len = scan_cycles(cfg.dims) as u64;
+    assert!(
+        cfg.scan_period_cycles >= scan_len,
+        "scan period {} shorter than one scan ({scan_len} cycles)",
+        cfg.scan_period_cycles
+    );
+    let last_arrival = arrivals.iter().map(|a| a.cycle).max().unwrap();
+
+    // --- run the periodic scans ----------------------------------
+    let mut fpt = FaultPeTable::new(cfg.fpt_capacity, cfg.dims);
+    let mut detections: Vec<(u64, Coord)> = Vec::new();
+    for k in 0..cfg.max_scans {
+        let scan_start = k as u64 * cfg.scan_period_cycles;
+        // snapshot of physically faulty PEs at scan start, in the
+        // (col, row) order FaultConfig keeps so the mask list aligns
+        let mut snapshot: Vec<(Coord, StuckMask)> = arrivals
+            .iter()
+            .filter(|a| a.cycle <= scan_start)
+            .map(|a| (a.coord, a.mask))
+            .collect();
+        snapshot.sort_by_key(|(c, _)| (c.col, c.row));
+        if !snapshot.is_empty() {
+            let coords: Vec<Coord> = snapshot.iter().map(|(c, _)| *c).collect();
+            let masks: Vec<StuckMask> = snapshot.iter().map(|(_, m)| *m).collect();
+            let fault_cfg = FaultConfig::new(cfg.dims, coords);
+            let mut rng = Pcg32::split(seed ^ SCAN_STREAM_SALT, k as u64);
+            let report = simulate_scan(&fault_cfg, &masks, cfg.group_width, &mut rng);
+            for (coord, &cy) in report.detected.iter().zip(&report.detect_cycle) {
+                if !fpt.contains(*coord) && fpt.insert(*coord) {
+                    detections.push((scan_start + cy as u64, *coord));
+                }
+            }
+        }
+        // done once every arrival is remapped — or once no further
+        // remap is possible (full FPT) and no later arrival is coming
+        if scan_start >= last_arrival
+            && (detections.len() == arrivals.len() || fpt.is_full())
+        {
+            break;
+        }
+    }
+    let unrepaired = arrivals.len() - detections.len();
+
+    // --- merge into one ordered event stream ----------------------
+    let mut events: Vec<TimelineEvent> = arrivals
+        .iter()
+        .map(|a| TimelineEvent {
+            cycle: a.cycle,
+            kind: EventKind::FaultArrival(a.coord),
+        })
+        .chain(detections.iter().map(|(cy, c)| TimelineEvent {
+            cycle: *cy,
+            kind: EventKind::ScanDetection(*c),
+        }))
+        .collect();
+    events.sort_by_key(|e| {
+        let (order, c) = match e.kind {
+            EventKind::FaultArrival(c) => (0u8, c),
+            EventKind::ScanDetection(c) => (1u8, c),
+        };
+        (e.cycle, order, c.col, c.row)
+    });
+
+    // --- materialise the mask epochs ------------------------------
+    let mut epochs = vec![Epoch {
+        start: 0,
+        masks: Arc::new(LayerMasks::identity(g)),
+        degraded: false,
+    }];
+    let mut active: Vec<(usize, usize, StuckMask)> = Vec::new();
+    let mut repaired: std::collections::HashSet<Coord> = std::collections::HashSet::new();
+    for ev in &events {
+        match ev.kind {
+            EventKind::FaultArrival(c) => {
+                let mask = arrivals
+                    .iter()
+                    .find(|a| a.coord == c)
+                    .expect("arrival event without arrival")
+                    .mask;
+                active.push((c.row as usize, c.col as usize, mask));
+            }
+            EventKind::ScanDetection(c) => {
+                repaired.insert(c);
+            }
+        }
+        let masks = LayerMasks::from_pe_masks(g, cfg.dims, &active, &|r, c| {
+            repaired.contains(&Coord::new(r, c))
+        });
+        let degraded = active
+            .iter()
+            .any(|(r, c, _)| !repaired.contains(&Coord::new(*r, *c)));
+        epochs.push(Epoch {
+            start: ev.cycle,
+            masks: Arc::new(masks),
+            degraded,
+        });
+    }
+    FaultTimeline {
+        epochs,
+        events,
+        unrepaired,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn geometry() -> ModelGeometry {
+        ModelGeometry::default()
+    }
+
+    fn agent_cfg() -> ScanAgentConfig {
+        ScanAgentConfig {
+            dims: Dims::new(8, 8),
+            scan_period_cycles: 1_000,
+            group_width: 8,
+            fpt_capacity: 8,
+            max_scans: 256,
+        }
+    }
+
+    /// A maximally observable arrival mask: every 8..24 bit stuck at 1
+    /// — the scan mismatches unless the live value already has all 16
+    /// bits set (~2⁻¹⁶ per window).
+    fn loud_mask() -> StuckMask {
+        StuckMask {
+            and_mask: u32::MAX,
+            or_mask: 0x00FF_FF00,
+        }
+    }
+
+    #[test]
+    fn no_arrivals_is_one_identity_epoch() {
+        let g = geometry();
+        let t = build_timeline(1, &g, &agent_cfg(), &[]);
+        assert_eq!(t.epochs.len(), 1);
+        assert!(t.events.is_empty());
+        assert_eq!(t.unrepaired, 0);
+        assert!(!t.degraded_at(0));
+        assert_eq!(**t.masks_at(12345), LayerMasks::identity(&g));
+    }
+
+    #[test]
+    fn arrival_is_detected_and_remapped() {
+        let g = geometry();
+        let cfg = agent_cfg();
+        let arrival = ArrivalEvent {
+            cycle: 100,
+            coord: Coord::new(3, 5),
+            mask: loud_mask(),
+        };
+        let t = build_timeline(7, &g, &cfg, &[arrival]);
+        // event order: arrival, then detection strictly later
+        assert_eq!(t.events.len(), 2, "{:?}", t.events);
+        assert_eq!(t.events[0].kind, EventKind::FaultArrival(Coord::new(3, 5)));
+        assert!(matches!(t.events[1].kind, EventKind::ScanDetection(_)));
+        assert!(t.events[1].cycle > t.events[0].cycle);
+        assert_eq!(t.unrepaired, 0);
+        // epochs: identity → degraded → repaired identity
+        assert_eq!(t.epochs.len(), 3);
+        assert!(!t.degraded_at(arrival.cycle - 1));
+        assert!(t.degraded_at(arrival.cycle));
+        assert!(!t.degraded_at(t.events[1].cycle));
+        assert_eq!(**t.masks_at(0), LayerMasks::identity(&g));
+        assert_ne!(**t.masks_at(arrival.cycle), LayerMasks::identity(&g));
+        // after remap the DPPU owns the PE: masks are identity again
+        assert_eq!(**t.masks_at(t.events[1].cycle), LayerMasks::identity(&g));
+    }
+
+    #[test]
+    fn detection_latency_is_bounded_by_scan_cadence() {
+        let g = geometry();
+        let cfg = agent_cfg();
+        let arrival = ArrivalEvent {
+            cycle: 1_500, // mid period: first covering scan starts at 2000
+            coord: Coord::new(0, 0),
+            mask: loud_mask(),
+        };
+        let t = build_timeline(21, &g, &cfg, &[arrival]);
+        let det = t
+            .events
+            .iter()
+            .find(|e| matches!(e.kind, EventKind::ScanDetection(_)))
+            .expect("loud fault must be detected");
+        assert!(det.cycle >= 2_000, "scan snapshots at period boundaries");
+        // generous bound: a few escape re-rolls at most
+        assert!(det.cycle < 2_000 + 8 * cfg.scan_period_cycles);
+    }
+
+    #[test]
+    fn fpt_capacity_limits_repair() {
+        let g = geometry();
+        let mut cfg = agent_cfg();
+        cfg.fpt_capacity = 1;
+        let arrivals = [
+            ArrivalEvent { cycle: 10, coord: Coord::new(1, 1), mask: loud_mask() },
+            ArrivalEvent { cycle: 20, coord: Coord::new(2, 2), mask: loud_mask() },
+        ];
+        let t = build_timeline(3, &g, &cfg, &arrivals);
+        assert_eq!(t.unrepaired, 1, "one fault must not fit the FPT");
+        let last = t.epochs.last().unwrap();
+        assert!(last.degraded, "over-capacity fault keeps the array degraded");
+    }
+
+    #[test]
+    fn timeline_is_deterministic() {
+        let g = geometry();
+        let cfg = agent_cfg();
+        let arrivals = crate::faults::arrival::sample_arrivals(99, cfg.dims, 700.0, 5_000, 8);
+        assert!(!arrivals.is_empty());
+        let a = build_timeline(5, &g, &cfg, &arrivals);
+        let b = build_timeline(5, &g, &cfg, &arrivals);
+        assert_eq!(a.events, b.events);
+        assert_eq!(a.epochs.len(), b.epochs.len());
+        for (x, y) in a.epochs.iter().zip(&b.epochs) {
+            assert_eq!(x.start, y.start);
+            assert_eq!(*x.masks, *y.masks);
+            assert_eq!(x.degraded, y.degraded);
+        }
+    }
+}

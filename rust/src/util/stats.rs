@@ -1,5 +1,10 @@
 //! Small descriptive-statistics helpers shared by the Monte-Carlo
-//! experiment driver and the benchmark harness.
+//! experiment driver, the benchmark harness and the serving subsystem.
+//!
+//! [`LogHistogram`] is the streaming quantile structure used by
+//! `serve::metrics` for latency percentiles (p50/p99 in simulated
+//! cycles) and by the coordinator's serve report — fixed log buckets,
+//! integer arithmetic only, no dependencies, deterministic.
 
 /// Summary statistics over a sample of f64 values.
 #[derive(Debug, Clone, PartialEq)]
@@ -90,6 +95,132 @@ pub fn wilson_interval(successes: usize, trials: usize) -> (f64, f64) {
     ((centre - half).max(0.0), (centre + half).min(1.0))
 }
 
+/// A streaming histogram over `u64` values with fixed logarithmic
+/// buckets: 8 linear sub-buckets per power of two (≤ 12.5% relative
+/// quantile error), values 0..8 exact. Constant memory (496 buckets
+/// covers the whole `u64` range), O(1) `record`, deterministic — the
+/// serving subsystem's latency sketch.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LogHistogram {
+    counts: Vec<u64>,
+    total: u64,
+    sum: u128,
+    min: u64,
+    max: u64,
+}
+
+/// Sub-buckets per octave = 2^SUB_BITS.
+const SUB_BITS: u32 = 3;
+/// Bucket count covering all of u64: 8 linear + 61 octaves × 8.
+const N_BUCKETS: usize = 8 + 61 * 8;
+
+/// Bucket index of a value (monotone non-decreasing in `v`).
+fn bucket_of(v: u64) -> usize {
+    if v < 8 {
+        return v as usize;
+    }
+    let exp = 63 - v.leading_zeros(); // floor(log2 v), >= 3
+    let sub = ((v >> (exp - SUB_BITS)) & 7) as usize;
+    ((exp - 2) as usize) * 8 + sub
+}
+
+/// Smallest value mapping to bucket `i` (inverse of [`bucket_of`]).
+fn bucket_lower_bound(i: usize) -> u64 {
+    if i < 8 {
+        return i as u64;
+    }
+    let exp = (i / 8 + 2) as u32;
+    let sub = (i % 8) as u64;
+    (1u64 << exp) + (sub << (exp - SUB_BITS))
+}
+
+impl Default for LogHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LogHistogram {
+    pub fn new() -> Self {
+        Self {
+            counts: vec![0; N_BUCKETS],
+            total: 0,
+            sum: 0,
+            min: u64::MAX,
+            max: 0,
+        }
+    }
+
+    /// Record one value.
+    pub fn record(&mut self, v: u64) {
+        self.counts[bucket_of(v)] += 1;
+        self.total += 1;
+        self.sum += v as u128;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    /// Number of recorded values.
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.total == 0
+    }
+
+    /// Exact mean of the recorded values (0 when empty).
+    pub fn mean(&self) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        self.sum as f64 / self.total as f64
+    }
+
+    /// Exact minimum / maximum recorded value (0 when empty).
+    pub fn min(&self) -> u64 {
+        if self.total == 0 {
+            0
+        } else {
+            self.min
+        }
+    }
+
+    pub fn max(&self) -> u64 {
+        self.max
+    }
+
+    /// Value at quantile `q` in [0, 1]: the lower bound of the first
+    /// bucket whose cumulative count reaches `ceil(q·total)`, clamped
+    /// to the exact recorded [min, max]. 0 when empty.
+    pub fn quantile(&self, q: f64) -> u64 {
+        if self.total == 0 {
+            return 0;
+        }
+        let q = q.clamp(0.0, 1.0);
+        let target = ((q * self.total as f64).ceil() as u64).clamp(1, self.total);
+        let mut cum = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            cum += c;
+            if cum >= target {
+                return bucket_lower_bound(i).clamp(self.min, self.max);
+            }
+        }
+        self.max
+    }
+
+    /// Merge another histogram into this one (same fixed bucketing).
+    pub fn merge(&mut self, other: &LogHistogram) {
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.total += other.total;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -135,5 +266,93 @@ mod tests {
         let small = Summary::of(&vec![1.0, 2.0, 3.0, 2.0]);
         let big = Summary::of(&vec![1.0, 2.0, 3.0, 2.0].repeat(100));
         assert!(big.ci95_half_width() < small.ci95_half_width());
+    }
+
+    #[test]
+    fn histogram_buckets_are_monotone_and_invertible() {
+        let probes = [
+            0u64, 1, 2, 7, 8, 9, 15, 16, 17, 31, 32, 100, 1000, 4095, 4096,
+            1 << 20, (1 << 20) + 12345, u64::MAX / 2, u64::MAX,
+        ];
+        let mut last = 0usize;
+        for &v in &probes {
+            let b = bucket_of(v);
+            assert!(b >= last, "bucket_of not monotone at {v}");
+            last = b;
+            assert!(b < N_BUCKETS);
+            // the bucket's lower bound maps back to the same bucket and
+            // never exceeds the value
+            assert!(bucket_lower_bound(b) <= v, "lb > v at {v}");
+            assert_eq!(bucket_of(bucket_lower_bound(b)), b, "not inverse at {v}");
+        }
+        // contiguity: every bucket's lower bound is below the next one's
+        for i in 0..N_BUCKETS - 1 {
+            assert!(bucket_lower_bound(i) < bucket_lower_bound(i + 1), "bucket {i}");
+        }
+    }
+
+    #[test]
+    fn histogram_small_values_are_exact() {
+        let mut h = LogHistogram::new();
+        for v in [0u64, 1, 2, 3, 4, 5, 6, 7] {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 8);
+        assert_eq!(h.quantile(0.0), 0);
+        assert_eq!(h.quantile(1.0), 7);
+        assert_eq!(h.quantile(0.5), 3); // ceil(0.5·8)=4th value
+        assert_eq!(h.min(), 0);
+        assert_eq!(h.max(), 7);
+        assert!((h.mean() - 3.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn histogram_quantile_error_is_bounded() {
+        // relative error of any quantile is bounded by one sub-bucket
+        // (12.5%) — check against the exact percentile on a sample.
+        let xs: Vec<u64> = (0..5000u64).map(|i| 17 + i * i % 100_000).collect();
+        let mut h = LogHistogram::new();
+        for &v in &xs {
+            h.record(v);
+        }
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        for q in [0.1, 0.5, 0.9, 0.99] {
+            let exact = sorted[(((q * xs.len() as f64).ceil() as usize).max(1)) - 1] as f64;
+            let got = h.quantile(q) as f64;
+            assert!(
+                got <= exact && got >= exact / 1.13 - 1.0,
+                "q={q}: got {got}, exact {exact}"
+            );
+        }
+    }
+
+    #[test]
+    fn histogram_empty_and_single() {
+        let mut h = LogHistogram::new();
+        assert!(h.is_empty());
+        assert_eq!(h.quantile(0.5), 0);
+        assert_eq!(h.mean(), 0.0);
+        h.record(42);
+        assert_eq!(h.quantile(0.0), 42);
+        assert_eq!(h.quantile(0.5), 42);
+        assert_eq!(h.quantile(1.0), 42);
+    }
+
+    #[test]
+    fn histogram_merge_equals_combined() {
+        let mut a = LogHistogram::new();
+        let mut b = LogHistogram::new();
+        let mut c = LogHistogram::new();
+        for v in 0..200u64 {
+            if v % 2 == 0 {
+                a.record(v * 3);
+            } else {
+                b.record(v * 3);
+            }
+            c.record(v * 3);
+        }
+        a.merge(&b);
+        assert_eq!(a, c);
     }
 }

@@ -194,5 +194,6 @@ fn all_simulation_experiments_run() {
 #[test]
 fn cli_registry_contract() {
     assert!(find("table1").is_some());
-    assert_eq!(registry().len(), 10);
+    assert!(find("serve").is_some());
+    assert_eq!(registry().len(), 11);
 }

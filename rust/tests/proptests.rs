@@ -445,3 +445,59 @@ fn prop_montecarlo_thread_invariance() {
         assert_eq!(run(1), run(7));
     });
 }
+
+#[test]
+fn prop_serve_batched_equals_sequential_and_is_worker_invariant() {
+    // The serving bit-exactness contract: for random request streams,
+    // (a) the dynamically-batched pipeline predicts exactly what a
+    // sequential `Engine::predict_batch` produces on the same images,
+    // and (b) the whole report — predictions AND metrics — is
+    // invariant to the executor thread count (the serve extension of
+    // the thread-invariance assertion above).
+    check("serve == sequential, worker invariant", 8, |g| {
+        // built inside the property: `Box<dyn Backend>` is not
+        // `RefUnwindSafe`, so the engine cannot be captured across the
+        // harness's catch_unwind boundary (construction is cheap).
+        let engine = std::sync::Arc::new(hyca::inference::Engine::builtin());
+        let max_batch = g.usize_in(1, 5);
+        let lanes = g.usize_in(1, 3);
+        let clients = g.usize_in(1, 6).max(lanes);
+        let cfg = hyca::serve::ServeConfig {
+            seed: g.usize_in(0, 1 << 20) as u64,
+            dims: Dims::new(8, 8),
+            lanes,
+            max_batch,
+            max_wait_cycles: g.usize_in(0, 10_000) as u64,
+            clients,
+            think_cycles: g.usize_in(0, 2_000) as u64,
+            total_requests: g.usize_in(4, 24),
+            queue_cap: clients,
+            executor_threads: 1,
+            windows: g.usize_in(1, 6),
+            faults: None,
+        };
+        let narrow = hyca::serve::run(&engine, &cfg).unwrap();
+        // (a) batched == sequential on the same images, same masks
+        let geometry = engine.geometry();
+        let identity = hyca::inference::LayerMasks::identity(&geometry).with_fc_rows(1);
+        let records = {
+            let t = hyca::serve::simulate_timeline(&engine, &cfg);
+            t.requests
+        };
+        assert_eq!(records.len(), narrow.predictions.len());
+        for r in &records {
+            let img = engine.eval.images[r.image_idx].clone();
+            let seq = engine.predict_batch(&[img], &identity).unwrap()[0];
+            assert_eq!(
+                narrow.predictions[r.id], seq,
+                "request {} diverged from sequential inference",
+                r.id
+            );
+        }
+        // (b) executor width changes nothing
+        let mut wide_cfg = cfg.clone();
+        wide_cfg.executor_threads = g.usize_in(2, 6);
+        let wide = hyca::serve::run(&engine, &wide_cfg).unwrap();
+        assert_eq!(narrow.digest(), wide.digest());
+    });
+}
