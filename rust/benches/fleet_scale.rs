@@ -1,0 +1,55 @@
+//! Bench for the fleet subsystem: wall-clock cost of the cluster
+//! discrete-event simulation and of replaying a multi-chip timeline on
+//! the real worker pool, across cluster sizes and routing policies.
+//! (The *simulated* metrics are deterministic and live in
+//! BENCH_fleet.json via `repro fleet`; this harness measures what the
+//! host machine actually sustains.)
+use std::sync::Arc;
+
+use hyca::benchkit::Bench;
+use hyca::coordinator::exp_fleet::fleet_cell;
+use hyca::fleet::{simulate_fleet, RoutingPolicy};
+use hyca::inference::Engine;
+use hyca::serve::{pool, BatchJob};
+
+fn main() {
+    let engine = Arc::new(Engine::builtin());
+    let mut b = Bench::new("fleet");
+
+    // cluster timeline simulation alone (pure, no inference) at
+    // increasing cluster sizes
+    for chips in [1usize, 4, 8] {
+        let cfg = fleet_cell(0xC0FFEE, chips, RoutingPolicy::HealthWeighted, true, 1);
+        let req = cfg.total_requests as f64;
+        b.bench_units(format!("simulate_fleet/chips{chips}"), Some(req), || {
+            std::hint::black_box(simulate_fleet(&engine, &cfg));
+        });
+    }
+
+    // routing policy overhead at a fixed cluster size
+    for policy in RoutingPolicy::all() {
+        let cfg = fleet_cell(0xC0FFEE, 4, policy, true, 1);
+        let req = cfg.total_requests as f64;
+        b.bench_units(format!("simulate_fleet/{policy}"), Some(req), || {
+            std::hint::black_box(simulate_fleet(&engine, &cfg));
+        });
+    }
+
+    // pool execution of a multi-chip timeline: images/second at
+    // various executor widths
+    let cfg = fleet_cell(0xC0FFEE, 4, RoutingPolicy::RoundRobin, true, 1);
+    let timeline = simulate_fleet(&engine, &cfg);
+    let jobs: Vec<&BatchJob> = timeline.jobs.iter().map(|j| &j.job).collect();
+    let served: usize = jobs.iter().map(|j| j.image_idxs.len()).sum();
+    for threads in [1usize, 2, 4] {
+        b.bench_units(
+            format!("pool_execute/chips4_t{threads}"),
+            Some(served as f64),
+            || {
+                std::hint::black_box(pool::execute(&engine, &jobs, threads, 8).unwrap());
+            },
+        );
+    }
+
+    b.report();
+}

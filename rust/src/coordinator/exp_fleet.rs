@@ -1,0 +1,381 @@
+//! `fleet` — the multi-chip sharded-serving experiment (`repro
+//! fleet`): a scaling grid over cluster size × routing policy, plus
+//! the drain/re-admit scenario — a chip crosses the live-fault
+//! threshold, is drained out of the serving set, repaired by its scan
+//! agent, re-admitted, and the fleet recovers to exactly 1.0 accuracy
+//! with zero dropped requests.
+//!
+//! Always runs on the **builtin** engine (same rationale as
+//! `exp_serve`): exact recovery is a bit-exactness contract of the
+//! synthetic argmax labels, and the machine-readable baseline
+//! (`BENCH_fleet.json`, schema `hyca-fleet-bench-v1`) must never
+//! depend on local artifact state.
+//!
+//! Determinism contract (asserted by `rust/tests/fleet.rs`): the JSON
+//! and every table are byte-identical for a given master seed at any
+//! `--workers` value — the same cycle-time contract as serve, now
+//! cluster-wide.
+
+use std::sync::Arc;
+
+use super::{Experiment, RunOpts};
+use crate::array::Dims;
+use crate::fleet::metrics::FleetReport;
+use crate::fleet::{self, ChipSpec, FleetConfig, FleetEventKind, RoutingPolicy, NEVER_DRAIN};
+use crate::inference::Engine;
+use crate::serve::FaultPlan;
+use crate::util::table::{f, Table};
+use anyhow::Result;
+
+pub struct FleetExp;
+
+/// Full grid: cluster sizes × every routing policy.
+pub const GRID_CHIPS: [usize; 4] = [1, 2, 4, 8];
+/// Reduced grid for `--smoke` / `--fast` (CI).
+pub const SMOKE_CHIPS: [usize; 2] = [1, 4];
+
+fn grid(smoke: bool, chips_override: Option<usize>) -> Vec<(usize, RoutingPolicy)> {
+    let sizes: Vec<usize> = match chips_override {
+        Some(n) => vec![n],
+        None => {
+            if smoke {
+                SMOKE_CHIPS.to_vec()
+            } else {
+                GRID_CHIPS.to_vec()
+            }
+        }
+    };
+    let mut cells = Vec::new();
+    for &n in &sizes {
+        for policy in RoutingPolicy::all() {
+            cells.push((n, policy));
+        }
+    }
+    cells
+}
+
+/// One fault-free grid cell: `n_chips` homogeneous 8×8 chips with two
+/// lanes each; clients scale with cluster capacity so every chip stays
+/// saturated and the comparison isolates routing + scale. Public so
+/// `benches/fleet_scale.rs` measures exactly the workload
+/// `BENCH_fleet.json` reports.
+pub fn fleet_cell(
+    seed: u64,
+    n_chips: usize,
+    policy: RoutingPolicy,
+    smoke: bool,
+    threads: usize,
+) -> FleetConfig {
+    let clients = (n_chips * 2 * 8).max(8);
+    FleetConfig {
+        seed,
+        chips: vec![
+            ChipSpec {
+                dims: Dims::new(8, 8),
+                lanes: 2,
+            };
+            n_chips
+        ],
+        policy,
+        max_batch: 8,
+        max_wait_cycles: 8_000,
+        clients,
+        think_cycles: 500,
+        total_requests: if smoke { 32 * n_chips } else { 96 * n_chips },
+        queue_cap: clients,
+        executor_threads: threads,
+        windows: 4,
+        faults: None,
+        drain_threshold: NEVER_DRAIN,
+    }
+}
+
+/// The drain/re-admit scenario: three chips under independent
+/// fault-arrival streams with a live-fault drain threshold of 2, so a
+/// chip accumulating two unremapped faults leaves the serving set,
+/// gets repaired by its scan agent, and rejoins — while the
+/// health-aware router re-shards its traffic and the fleet keeps
+/// serving every request.
+pub fn scenario_config(seed: u64, smoke: bool, threads: usize) -> FleetConfig {
+    FleetConfig {
+        seed,
+        chips: vec![
+            ChipSpec {
+                dims: Dims::new(8, 8),
+                lanes: 2,
+            };
+            3
+        ],
+        policy: RoutingPolicy::HealthWeighted,
+        max_batch: 8,
+        max_wait_cycles: 8_000,
+        clients: 24,
+        think_cycles: 500,
+        total_requests: if smoke { 192 } else { 432 },
+        queue_cap: 24,
+        executor_threads: threads,
+        windows: 10,
+        faults: Some(FaultPlan {
+            // arrivals concentrate early (short horizon) so the run's
+            // tail demonstrates re-admission and exact recovery
+            mean_interarrival_cycles: if smoke { 6_000.0 } else { 20_000.0 },
+            horizon_cycles: if smoke { 40_000 } else { 160_000 },
+            scan_period_cycles: if smoke { 4_000 } else { 16_000 },
+            group_width: 8,
+            fpt_capacity: 8,
+            max_arrivals: 6,
+        }),
+        drain_threshold: 2,
+    }
+}
+
+fn run_grid(
+    engine: &Arc<Engine>,
+    opts: &RunOpts,
+    smoke: bool,
+    chips_override: Option<usize>,
+) -> Result<Vec<(usize, RoutingPolicy, FleetReport)>> {
+    let mut out = Vec::new();
+    for (n_chips, policy) in grid(smoke, chips_override) {
+        let cfg = fleet_cell(opts.seed, n_chips, policy, smoke, opts.threads);
+        let report = fleet::run(engine, &cfg)?;
+        out.push((n_chips, policy, report));
+    }
+    Ok(out)
+}
+
+fn grid_table(results: &[(usize, RoutingPolicy, FleetReport)]) -> Table {
+    let mut t = Table::new(
+        "fleet grid — cluster size × routing policy, metrics in \
+         simulated cycles [model: builtin, backend: native]",
+        &[
+            "chips",
+            "policy",
+            "requests",
+            "batches",
+            "mean_batch",
+            "imgs_per_Mcycle",
+            "p50_cycles",
+            "p99_cycles",
+            "accuracy",
+        ],
+    );
+    for (n_chips, policy, r) in results {
+        t.push_row(vec![
+            n_chips.to_string(),
+            policy.to_string(),
+            r.total_requests.to_string(),
+            r.batches.to_string(),
+            f(r.mean_batch_size, 2),
+            f(r.throughput_imgs_per_mcycle, 2),
+            r.p50_cycles().to_string(),
+            r.p99_cycles().to_string(),
+            f(r.accuracy, 4),
+        ]);
+    }
+    t
+}
+
+/// Render the machine-readable perf baseline. Simulated cycles only —
+/// no wall-clock fields, reproducible byte-for-byte from the seed at
+/// any `--workers` value.
+fn grid_json(
+    seed: u64,
+    smoke: bool,
+    results: &[(usize, RoutingPolicy, FleetReport)],
+) -> String {
+    let mut s = String::new();
+    s.push_str("{\n");
+    s.push_str("  \"schema\": \"hyca-fleet-bench-v1\",\n");
+    s.push_str(&format!("  \"seed\": {seed},\n"));
+    s.push_str(&format!("  \"smoke\": {smoke},\n"));
+    s.push_str("  \"grid\": [\n");
+    for (i, (n_chips, policy, r)) in results.iter().enumerate() {
+        let sep = if i + 1 == results.len() { "" } else { "," };
+        s.push_str(&format!(
+            "    {{\"chips\": {n_chips}, \"policy\": \"{policy}\", \
+             \"requests\": {}, \"batches\": {}, \
+             \"throughput_imgs_per_mcycle\": {:.6}, \
+             \"p50_cycles\": {}, \"p99_cycles\": {}, \
+             \"accuracy\": {:.6}}}{sep}\n",
+            r.total_requests,
+            r.batches,
+            r.throughput_imgs_per_mcycle,
+            r.p50_cycles(),
+            r.p99_cycles(),
+            r.accuracy,
+        ));
+    }
+    s.push_str("  ]\n}\n");
+    s
+}
+
+fn scenario_timeline_table(report: &FleetReport) -> Table {
+    let mut t = Table::new(
+        "fleet under mid-run faults — goodput/accuracy/availability \
+         timeline (windows in simulated cycles)",
+        &["window", "start", "end", "goodput", "accuracy", "availability", "events"],
+    );
+    let last_index = report.windows.len().saturating_sub(1);
+    for w in &report.windows {
+        // scans and lifecycle transitions keep running after traffic
+        // ends; fold late events into the last row rather than dropping
+        // them (same convention as the serve table)
+        let evs: Vec<String> = report
+            .events
+            .iter()
+            .filter(|e| {
+                e.cycle >= w.start_cycle && (e.cycle < w.end_cycle || w.index == last_index)
+            })
+            .map(|e| match e.kind {
+                FleetEventKind::FaultArrival(c) => {
+                    format!("chip{}:fault@({},{})", e.chip, c.row, c.col)
+                }
+                FleetEventKind::ScanDetection(c) => {
+                    format!("chip{}:remap@({},{})", e.chip, c.row, c.col)
+                }
+                FleetEventKind::Drained => format!("chip{}:DRAIN", e.chip),
+                FleetEventKind::Readmitted => format!("chip{}:READMIT", e.chip),
+            })
+            .collect();
+        t.push_row(vec![
+            w.index.to_string(),
+            w.start_cycle.to_string(),
+            w.end_cycle.to_string(),
+            w.requests.to_string(),
+            match w.accuracy() {
+                Some(a) => f(a, 4),
+                None => "-".to_string(),
+            },
+            f(w.availability, 4),
+            if evs.is_empty() { "-".to_string() } else { evs.join(" ") },
+        ]);
+    }
+    t
+}
+
+fn scenario_chip_table(report: &FleetReport) -> Table {
+    let mut t = Table::new(
+        "fleet scenario — per-chip breakdown",
+        &[
+            "chip",
+            "array",
+            "lanes",
+            "requests",
+            "accuracy",
+            "p99_cycles",
+            "drains",
+            "drained_kcycles",
+            "unrepaired",
+        ],
+    );
+    for c in &report.per_chip {
+        t.push_row(vec![
+            c.chip.to_string(),
+            c.dims.to_string(),
+            c.lanes.to_string(),
+            c.requests.to_string(),
+            match c.accuracy() {
+                Some(a) => f(a, 4),
+                None => "-".to_string(),
+            },
+            c.latency_cycles.quantile(0.99).to_string(),
+            c.drains.to_string(),
+            (c.drained_cycles / 1000).to_string(),
+            c.unrepaired.to_string(),
+        ]);
+    }
+    t
+}
+
+fn scenario_summary(report: &FleetReport, budget: usize) -> Table {
+    let arrivals = report
+        .events
+        .iter()
+        .filter(|e| matches!(e.kind, FleetEventKind::FaultArrival(_)))
+        .count();
+    let detections = report
+        .events
+        .iter()
+        .filter(|e| matches!(e.kind, FleetEventKind::ScanDetection(_)))
+        .count();
+    let readmits = report
+        .events
+        .iter()
+        .filter(|e| e.kind == FleetEventKind::Readmitted)
+        .count();
+    let recovered = report.unrepaired == 0 && report.final_window_accuracy() == Some(1.0);
+    let mut t = Table::new("fleet scenario summary", &["metric", "value"]);
+    t.push_row(vec!["chips".into(), report.chips.to_string()]);
+    t.push_row(vec!["policy".into(), report.policy.to_string()]);
+    t.push_row(vec!["fault_arrivals".into(), arrivals.to_string()]);
+    t.push_row(vec!["scan_detections".into(), detections.to_string()]);
+    t.push_row(vec!["drain_episodes".into(), report.drains().to_string()]);
+    t.push_row(vec!["readmissions".into(), readmits.to_string()]);
+    t.push_row(vec!["unrepaired".into(), report.unrepaired.to_string()]);
+    t.push_row(vec![
+        "requests_served".into(),
+        format!("{} / {}", report.total_requests, budget),
+    ]);
+    t.push_row(vec!["availability".into(), f(report.availability(), 4)]);
+    t.push_row(vec!["overall_accuracy".into(), f(report.accuracy, 4)]);
+    t.push_row(vec![
+        "final_window_accuracy".into(),
+        match report.final_window_accuracy() {
+            Some(a) => f(a, 4),
+            None => "-".to_string(),
+        },
+    ]);
+    t.push_row(vec!["recovered_exactly".into(), recovered.to_string()]);
+    t
+}
+
+/// Grid + scenario; returns the report tables and the JSON baseline.
+/// `chips_override` restricts the grid to one cluster size (`--chips`).
+pub fn run_full(
+    opts: &RunOpts,
+    smoke: bool,
+    chips_override: Option<usize>,
+) -> Result<(Vec<Table>, String)> {
+    let engine = Arc::new(Engine::builtin());
+    let grid_results = run_grid(&engine, opts, smoke, chips_override)?;
+    let json = grid_json(opts.seed, smoke, &grid_results);
+    let scenario_cfg = scenario_config(opts.seed, smoke, opts.threads);
+    let scenario = fleet::run(&engine, &scenario_cfg)?;
+    let tables = vec![
+        grid_table(&grid_results),
+        scenario_timeline_table(&scenario),
+        scenario_chip_table(&scenario),
+        scenario_summary(&scenario, scenario_cfg.total_requests),
+    ];
+    Ok((tables, json))
+}
+
+/// The JSON baseline alone (what `BENCH_fleet.json` holds and the
+/// golden test compares across `--workers` values).
+pub fn bench_json(opts: &RunOpts, smoke: bool) -> Result<String> {
+    let engine = Arc::new(Engine::builtin());
+    let grid_results = run_grid(&engine, opts, smoke, None)?;
+    Ok(grid_json(opts.seed, smoke, &grid_results))
+}
+
+/// The drain scenario alone (used by `rust/tests/fleet.rs`).
+pub fn scenario_report(opts: &RunOpts, smoke: bool) -> Result<FleetReport> {
+    let engine = Arc::new(Engine::builtin());
+    fleet::run(&engine, &scenario_config(opts.seed, smoke, opts.threads))
+}
+
+impl Experiment for FleetExp {
+    fn id(&self) -> &'static str {
+        "fleet"
+    }
+
+    fn title(&self) -> &'static str {
+        "Fleet: multi-chip sharded serving — routing-policy grid + drain/re-admit under faults"
+    }
+
+    fn run(&self, opts: &RunOpts) -> Result<Vec<Table>> {
+        let (tables, _json) = run_full(opts, opts.fast, None)?;
+        Ok(tables)
+    }
+}

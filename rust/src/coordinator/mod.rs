@@ -15,6 +15,7 @@ pub mod exp_fig12;
 pub mod exp_fig13;
 pub mod exp_fig14;
 pub mod exp_fig15;
+pub mod exp_fleet;
 pub mod exp_serve;
 pub mod exp_table1;
 pub mod report;
@@ -101,6 +102,7 @@ pub fn registry() -> Vec<Box<dyn Experiment>> {
         Box::new(exp_fig15::Fig15),
         Box::new(exp_table1::Table1),
         Box::new(exp_serve::ServeExp),
+        Box::new(exp_fleet::FleetExp),
     ]
 }
 
@@ -120,7 +122,7 @@ mod tests {
         assert_eq!(ids.len(), set.len());
         for want in [
             "fig2", "fig3", "fig9", "fig10", "fig11", "fig12", "fig13", "fig14", "fig15",
-            "table1", "serve",
+            "table1", "serve", "fleet",
         ] {
             assert!(ids.contains(&want), "missing {want}");
         }

@@ -36,9 +36,14 @@ pub struct ArrivalEvent {
     pub mask: StuckMask,
 }
 
-/// PRNG stream selector for arrival sampling (one fixed stream per
-/// process; the master seed provides the entropy).
-const ARRIVAL_STREAM: u64 = 0xA77;
+/// PRNG stream selector for arrival sampling. One serving array uses
+/// this slot directly ([`sample_arrivals`]); a multi-chip fleet gives
+/// chip `k` the slot `ARRIVAL_STREAM + k` via
+/// [`sample_arrivals_in_stream`] so every chip owns an independent
+/// Poisson process (chip 0 keeps this default slot — the degeneracy
+/// contract of `crate::fleet` that makes a 1-chip fleet replay `serve`
+/// bit-identically).
+pub const ARRIVAL_STREAM: u64 = 0xA77;
 
 /// Stuck-at-1 pattern over accumulator bits 8..24 (see module doc) —
 /// always corrupting, always observable.
@@ -67,11 +72,33 @@ pub fn sample_arrivals(
     horizon_cycles: u64,
     max_events: usize,
 ) -> Vec<ArrivalEvent> {
+    sample_arrivals_in_stream(
+        seed,
+        ARRIVAL_STREAM,
+        dims,
+        mean_interarrival_cycles,
+        horizon_cycles,
+        max_events,
+    )
+}
+
+/// As [`sample_arrivals`], but drawing from an explicit PRNG stream
+/// slot — the per-subsystem slot a fleet chip owns. Distinct slots
+/// under one master seed yield independent arrival processes
+/// (`Pcg32`'s `inc` parameter selects the sequence).
+pub fn sample_arrivals_in_stream(
+    seed: u64,
+    stream: u64,
+    dims: Dims,
+    mean_interarrival_cycles: f64,
+    horizon_cycles: u64,
+    max_events: usize,
+) -> Vec<ArrivalEvent> {
     assert!(
         mean_interarrival_cycles > 0.0,
         "mean inter-arrival must be positive"
     );
-    let mut rng = Pcg32::new(seed, ARRIVAL_STREAM);
+    let mut rng = Pcg32::new(seed, stream);
     let mut events: Vec<ArrivalEvent> = Vec::new();
     let mut t = 0.0f64;
     while events.len() < max_events.min(dims.len()) {
@@ -158,6 +185,21 @@ mod tests {
             // a zero accumulator is visibly corrupted (magnitude ≥ 2^8)
             assert!(e.mask.apply(0) >= 1 << 8);
         }
+    }
+
+    #[test]
+    fn stream_slots_select_independent_processes() {
+        let dims = Dims::new(8, 8);
+        let default = sample_arrivals(42, dims, 5_000.0, 100_000, 64);
+        // the default entry point is the default slot
+        let slot0 = sample_arrivals_in_stream(42, ARRIVAL_STREAM, dims, 5_000.0, 100_000, 64);
+        assert_eq!(default, slot0);
+        // a different slot under the same master seed is a different,
+        // deterministic process
+        let slot1 = sample_arrivals_in_stream(42, ARRIVAL_STREAM + 1, dims, 5_000.0, 100_000, 64);
+        assert_ne!(default, slot1);
+        let again = sample_arrivals_in_stream(42, ARRIVAL_STREAM + 1, dims, 5_000.0, 100_000, 64);
+        assert_eq!(slot1, again);
     }
 
     #[test]

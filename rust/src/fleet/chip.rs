@@ -1,0 +1,257 @@
+//! One chip of the fleet: a full serve-style unit — its own 2-D array
+//! geometry, cost model, fault-arrival stream, scan agent and dynamic
+//! batcher — plus the counters the router reads (DESIGN.md §6).
+//!
+//! Each chip's fault process derives from a **per-chip seed**: chip 0
+//! keeps the cluster master seed itself, so a 1-chip fleet replays
+//! `serve`'s fault timeline bit-identically (the degeneracy contract
+//! the property tests pin); chips 1.. get independent
+//! SplitMix64-expanded sub-seeds *and* distinct arrival stream slots
+//! ([`crate::faults::arrival::ARRIVAL_STREAM`]` + chip`), so no two
+//! chips ever share a fault trajectory.
+
+use std::collections::BTreeSet;
+
+use crate::array::Dims;
+use crate::faults::arrival::{self, ARRIVAL_STREAM};
+use crate::inference::masks::ModelGeometry;
+use crate::inference::params::ModelParams;
+use crate::serve::batcher::Batcher;
+use crate::serve::scan_agent::{build_timeline, FaultTimeline, ScanAgentConfig};
+use crate::serve::{CostModel, FaultPlan};
+use crate::util::rng::SplitMix64;
+
+use super::lifecycle::{Lifecycle, NEVER_DRAIN};
+
+/// Static description of one chip (arrays may be heterogeneous).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ChipSpec {
+    /// The chip's simulated computing array.
+    pub dims: Dims,
+    /// Simulated service lanes on this chip.
+    pub lanes: usize,
+}
+
+/// Salt for the per-chip seed expansion (chips 1..).
+const CHIP_SEED_SALT: u64 = 0x9E6D_F1E7_0C65_31A5;
+
+/// Derive chip `chip`'s master seed from the cluster seed. Chip 0
+/// keeps the cluster seed (degeneracy contract: a 1-chip fleet is
+/// exactly one `serve` instance); later chips get independent expanded
+/// sub-seeds.
+pub fn chip_seed(cluster_seed: u64, chip: usize) -> u64 {
+    if chip == 0 {
+        cluster_seed
+    } else {
+        SplitMix64::new(cluster_seed ^ (chip as u64).wrapping_mul(CHIP_SEED_SALT)).next_u64()
+    }
+}
+
+/// The simulation state of one chip inside the fleet event loop.
+#[derive(Debug)]
+pub struct ChipSim {
+    pub spec: ChipSpec,
+    /// Closed-form batch cost on this chip's array.
+    pub cost: CostModel,
+    /// Precomputed fault/detection/repair history (mask epochs).
+    pub faults: FaultTimeline,
+    /// Precomputed drain / re-admit history.
+    pub lifecycle: Lifecycle,
+    /// This chip's pending-request batcher.
+    pub batcher: Batcher<usize>,
+    /// Idle lane ids.
+    pub free_lanes: BTreeSet<usize>,
+    /// Requests dispatched to a lane and not yet completed (JSQ input).
+    pub in_flight: usize,
+    /// Requests routed here so far (health-weighted deficit input).
+    pub assigned: u64,
+    /// Request count of the batch occupying each lane (`None` = idle).
+    active: Vec<Option<usize>>,
+}
+
+impl ChipSim {
+    /// Build chip `chip` of a fleet: its fault timeline comes from its
+    /// own seed/stream slot, its lifecycle from `drain_threshold`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn build(
+        params: &ModelParams,
+        geometry: &ModelGeometry,
+        spec: ChipSpec,
+        chip: usize,
+        cluster_seed: u64,
+        faults: Option<&FaultPlan>,
+        drain_threshold: usize,
+        max_batch: usize,
+        max_wait_cycles: u64,
+    ) -> Self {
+        assert!(spec.lanes >= 1, "chip {chip} needs at least one lane");
+        let seed = chip_seed(cluster_seed, chip);
+        let timeline = match faults {
+            None => FaultTimeline::healthy(geometry),
+            Some(plan) => {
+                let arrivals = arrival::sample_arrivals_in_stream(
+                    seed,
+                    ARRIVAL_STREAM + chip as u64,
+                    spec.dims,
+                    plan.mean_interarrival_cycles,
+                    plan.horizon_cycles,
+                    plan.max_arrivals,
+                );
+                let agent = ScanAgentConfig {
+                    dims: spec.dims,
+                    scan_period_cycles: plan.scan_period_cycles,
+                    group_width: plan.group_width,
+                    fpt_capacity: plan.fpt_capacity,
+                    max_scans: 4096,
+                };
+                build_timeline(seed, geometry, &agent, &arrivals)
+            }
+        };
+        let lifecycle = Lifecycle::new(&timeline.events, drain_threshold);
+        Self {
+            spec,
+            cost: CostModel::of(params, spec.dims),
+            faults: timeline,
+            lifecycle,
+            batcher: Batcher::new(max_batch, max_wait_cycles),
+            free_lanes: (0..spec.lanes).collect(),
+            in_flight: 0,
+            assigned: 0,
+            active: vec![None; spec.lanes],
+        }
+    }
+
+    /// A fault-free chip with default batcher settings (unit tests and
+    /// router experiments).
+    pub fn healthy(params: &ModelParams, geometry: &ModelGeometry, spec: ChipSpec) -> Self {
+        Self {
+            spec,
+            cost: CostModel::of(params, spec.dims),
+            faults: FaultTimeline::healthy(geometry),
+            lifecycle: Lifecycle::new(&[], NEVER_DRAIN),
+            batcher: Batcher::new(8, 1_000),
+            free_lanes: (0..spec.lanes).collect(),
+            in_flight: 0,
+            assigned: 0,
+            active: vec![None; spec.lanes],
+        }
+    }
+
+    /// Queued + in-flight requests — the JSQ routing signal.
+    pub fn depth(&self) -> usize {
+        self.batcher.len() + self.in_flight
+    }
+
+    /// Is this chip accepting dispatches at `cycle`?
+    pub fn healthy_at(&self, cycle: u64) -> bool {
+        self.lifecycle.healthy_at(cycle)
+    }
+
+    /// Effective routing weight at `cycle`: nominal throughput in
+    /// images per Mcycle (the perfmodel's output-stationary runtime),
+    /// decayed by the live fault count — degraded chips shed traffic
+    /// before they drain, and recover their share on remap.
+    pub fn effective_weight(&self, cycle: u64) -> f64 {
+        let nominal = 1e6 / self.cost.per_image_cycles() as f64;
+        nominal / (1.0 + self.lifecycle.live_at(cycle) as f64)
+    }
+
+    /// Occupy `lane` with a batch of `n` requests.
+    pub fn occupy_lane(&mut self, lane: usize, n: usize) {
+        debug_assert!(self.active[lane].is_none(), "lane {lane} already busy");
+        self.active[lane] = Some(n);
+        self.in_flight += n;
+    }
+
+    /// A lane finished its batch: free it and drop its in-flight count.
+    pub fn complete_lane(&mut self, lane: usize) {
+        let n = self.active[lane].take().expect("completing an idle lane");
+        self.in_flight -= n;
+        self.free_lanes.insert(lane);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chip_zero_keeps_the_cluster_seed() {
+        assert_eq!(chip_seed(0xC0FFEE, 0), 0xC0FFEE);
+        assert_eq!(chip_seed(7, 0), 7);
+        // later chips differ from the master and from each other
+        let seeds: Vec<u64> = (0..8).map(|k| chip_seed(0xC0FFEE, k)).collect();
+        let set: std::collections::HashSet<_> = seeds.iter().collect();
+        assert_eq!(set.len(), seeds.len(), "chip seeds collide: {seeds:?}");
+        // and are deterministic
+        assert_eq!(chip_seed(0xC0FFEE, 3), chip_seed(0xC0FFEE, 3));
+    }
+
+    #[test]
+    fn chips_have_independent_fault_timelines() {
+        let params = ModelParams::synthetic(0xBEEF);
+        let g = ModelGeometry::default();
+        let plan = FaultPlan {
+            mean_interarrival_cycles: 5_000.0,
+            horizon_cycles: 60_000,
+            scan_period_cycles: 4_000,
+            group_width: 8,
+            fpt_capacity: 8,
+            max_arrivals: 6,
+        };
+        let spec = ChipSpec { dims: Dims::new(8, 8), lanes: 2 };
+        let build = |chip: usize| {
+            ChipSim::build(&params, &g, spec, chip, 11, Some(&plan), NEVER_DRAIN, 8, 8_000)
+        };
+        let a = build(0);
+        let b = build(1);
+        let a2 = build(0);
+        assert_eq!(a.faults.events, a2.faults.events, "per-chip determinism");
+        assert_ne!(
+            a.faults.events, b.faults.events,
+            "chips must not share a fault trajectory"
+        );
+    }
+
+    #[test]
+    fn chip_zero_fault_timeline_matches_serve() {
+        // the degeneracy contract at the chip level: chip 0's arrivals
+        // are exactly serve's (same seed, default stream slot)
+        let seed = 0x5EED;
+        let dims = Dims::new(8, 8);
+        let serve_arrivals = arrival::sample_arrivals(seed, dims, 5_000.0, 60_000, 6);
+        let chip_arrivals = arrival::sample_arrivals_in_stream(
+            chip_seed(seed, 0),
+            ARRIVAL_STREAM,
+            dims,
+            5_000.0,
+            60_000,
+            6,
+        );
+        assert_eq!(serve_arrivals, chip_arrivals);
+    }
+
+    #[test]
+    fn lane_occupancy_tracks_in_flight() {
+        let params = ModelParams::synthetic(0xBEEF);
+        let g = ModelGeometry::default();
+        let mut c = ChipSim::healthy(&params, &g, ChipSpec { dims: Dims::new(8, 8), lanes: 2 });
+        assert_eq!(c.depth(), 0);
+        c.free_lanes.remove(&0);
+        c.occupy_lane(0, 5);
+        assert_eq!(c.in_flight, 5);
+        assert_eq!(c.depth(), 5);
+        c.complete_lane(0);
+        assert_eq!(c.in_flight, 0);
+        assert!(c.free_lanes.contains(&0));
+    }
+
+    #[test]
+    fn bigger_arrays_weigh_more() {
+        let params = ModelParams::synthetic(0xBEEF);
+        let g = ModelGeometry::default();
+        let small = ChipSim::healthy(&params, &g, ChipSpec { dims: Dims::new(8, 8), lanes: 2 });
+        let big = ChipSim::healthy(&params, &g, ChipSpec { dims: Dims::new(16, 16), lanes: 2 });
+        assert!(big.effective_weight(0) > small.effective_weight(0));
+    }
+}

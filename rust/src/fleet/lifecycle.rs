@@ -1,0 +1,223 @@
+//! Chip lifecycle: the drain / re-admit state machine over a chip's
+//! precomputed fault timeline (DESIGN.md §6).
+//!
+//! A chip's **live fault count** is the number of arrived faults not
+//! yet detected-and-remapped by its scan agent. The count is a step
+//! function of simulated time, fully determined by the chip's
+//! [`TimelineEvent`] stream (arrival ⇒ +1, detection ⇒ −1), so the
+//! drain intervals — maximal spans where the count sits at or above
+//! the configured threshold — are precomputable exactly like the mask
+//! epochs are. While drained a chip dispatches no new batches
+//! (in-flight batches complete), the router re-shards its traffic, and
+//! its scan agent keeps running; the chip is re-admitted the moment a
+//! detection brings the live count back under the threshold.
+//!
+//! The health signal is the simulator's ground truth standing in for
+//! hardware health telemetry (the scan agent's detection reports /
+//! BIST): a real cluster manager would act on the same arrivals one
+//! scan period later at most.
+
+use crate::serve::scan_agent::{EventKind, TimelineEvent};
+
+/// Sentinel threshold that disables draining entirely.
+pub const NEVER_DRAIN: usize = usize::MAX;
+
+/// The precomputed health history of one chip.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Lifecycle {
+    /// `(cycle, live)` steps, ascending cycle (duplicates allowed —
+    /// the *last* entry at a cycle is the value from that cycle on).
+    steps: Vec<(u64, usize)>,
+    /// Maximal `[start, end)` spans with `live >= threshold`,
+    /// ascending and disjoint; `end == u64::MAX` means the chip never
+    /// recovers within the simulated horizon.
+    drained: Vec<(u64, u64)>,
+    threshold: usize,
+}
+
+impl Lifecycle {
+    /// Build from a chip's fault timeline events (ascending cycle,
+    /// arrivals ordered before same-cycle detections — the order
+    /// `build_timeline` emits).
+    pub fn new(events: &[TimelineEvent], threshold: usize) -> Self {
+        assert!(threshold >= 1, "a zero drain threshold would never admit the chip");
+        let mut steps = vec![(0u64, 0usize)];
+        let mut live = 0usize;
+        for e in events {
+            match e.kind {
+                EventKind::FaultArrival(_) => live += 1,
+                EventKind::ScanDetection(_) => {
+                    live = live
+                        .checked_sub(1)
+                        .expect("detection without a matching arrival");
+                }
+            }
+            debug_assert!(
+                steps.last().unwrap().0 <= e.cycle,
+                "timeline events must be cycle-ordered"
+            );
+            steps.push((e.cycle, live));
+        }
+        let mut drained = Vec::new();
+        let mut open: Option<u64> = None;
+        for &(cycle, live) in &steps {
+            match (open, live >= threshold) {
+                (None, true) => open = Some(cycle),
+                (Some(start), false) => {
+                    if start < cycle {
+                        drained.push((start, cycle));
+                    }
+                    open = None;
+                }
+                _ => {}
+            }
+        }
+        if let Some(start) = open {
+            drained.push((start, u64::MAX));
+        }
+        Self {
+            steps,
+            drained,
+            threshold,
+        }
+    }
+
+    /// A chip that never drains and never degrades.
+    pub fn always_healthy() -> Self {
+        Self::new(&[], NEVER_DRAIN)
+    }
+
+    pub fn threshold(&self) -> usize {
+        self.threshold
+    }
+
+    /// Live (arrived, unremapped) fault count at `cycle`.
+    pub fn live_at(&self, cycle: u64) -> usize {
+        let i = self.steps.partition_point(|s| s.0 <= cycle);
+        self.steps[i - 1].1
+    }
+
+    /// Is the chip accepting dispatches at `cycle`?
+    pub fn healthy_at(&self, cycle: u64) -> bool {
+        let i = self.drained.partition_point(|d| d.0 <= cycle);
+        i == 0 || cycle >= self.drained[i - 1].1
+    }
+
+    /// The drain intervals, for re-admit wake-ups and reporting.
+    pub fn drained_intervals(&self) -> &[(u64, u64)] {
+        &self.drained
+    }
+
+    /// Number of drain episodes.
+    pub fn drains(&self) -> usize {
+        self.drained.len()
+    }
+
+    /// Cycles of `[from, to)` the chip spends drained.
+    pub fn drained_overlap(&self, from: u64, to: u64) -> u64 {
+        self.drained
+            .iter()
+            .map(|&(s, e)| e.min(to).saturating_sub(s.max(from)))
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::faults::Coord;
+
+    fn arrive(cycle: u64, r: usize, c: usize) -> TimelineEvent {
+        TimelineEvent {
+            cycle,
+            kind: EventKind::FaultArrival(Coord::new(r, c)),
+        }
+    }
+
+    fn detect(cycle: u64, r: usize, c: usize) -> TimelineEvent {
+        TimelineEvent {
+            cycle,
+            kind: EventKind::ScanDetection(Coord::new(r, c)),
+        }
+    }
+
+    #[test]
+    fn healthy_chip_never_drains() {
+        let l = Lifecycle::always_healthy();
+        assert!(l.healthy_at(0));
+        assert!(l.healthy_at(u64::MAX - 1));
+        assert_eq!(l.live_at(12345), 0);
+        assert_eq!(l.drains(), 0);
+        assert_eq!(l.drained_overlap(0, 1_000_000), 0);
+    }
+
+    #[test]
+    fn live_count_follows_arrivals_and_detections() {
+        let ev = [arrive(100, 0, 0), arrive(200, 1, 1), detect(300, 0, 0), detect(400, 1, 1)];
+        let l = Lifecycle::new(&ev, NEVER_DRAIN);
+        assert_eq!(l.live_at(99), 0);
+        assert_eq!(l.live_at(100), 1);
+        assert_eq!(l.live_at(250), 2);
+        assert_eq!(l.live_at(300), 1);
+        assert_eq!(l.live_at(400), 0);
+        assert!(l.healthy_at(250), "NEVER_DRAIN keeps the chip admitted");
+    }
+
+    #[test]
+    fn drain_interval_opens_at_threshold_and_closes_on_repair() {
+        let ev = [arrive(100, 0, 0), arrive(200, 1, 1), detect(300, 0, 0), detect(400, 1, 1)];
+        let l = Lifecycle::new(&ev, 2);
+        assert_eq!(l.drained_intervals(), &[(200, 300)]);
+        assert!(l.healthy_at(199));
+        assert!(!l.healthy_at(200), "drain starts the cycle the count crosses");
+        assert!(!l.healthy_at(299));
+        assert!(l.healthy_at(300), "re-admitted the cycle the repair lands");
+        assert_eq!(l.drains(), 1);
+        assert_eq!(l.drained_overlap(0, 1_000), 100);
+        assert_eq!(l.drained_overlap(250, 1_000), 50);
+        assert_eq!(l.drained_overlap(300, 1_000), 0);
+    }
+
+    #[test]
+    fn unrepaired_fault_drains_forever() {
+        let ev = [arrive(50, 0, 0)];
+        let l = Lifecycle::new(&ev, 1);
+        assert_eq!(l.drained_intervals(), &[(50, u64::MAX)]);
+        assert!(l.healthy_at(49));
+        assert!(!l.healthy_at(50));
+        assert!(!l.healthy_at(u64::MAX - 1));
+        assert_eq!(l.drained_overlap(0, 100), 50);
+    }
+
+    #[test]
+    fn repeated_episodes_stay_disjoint() {
+        let ev = [
+            arrive(10, 0, 0),
+            detect(20, 0, 0),
+            arrive(30, 1, 1),
+            detect(45, 1, 1),
+        ];
+        let l = Lifecycle::new(&ev, 1);
+        assert_eq!(l.drained_intervals(), &[(10, 20), (30, 45)]);
+        assert_eq!(l.drains(), 2);
+        assert!(l.healthy_at(25));
+        assert_eq!(l.drained_overlap(0, 100), 10 + 15);
+    }
+
+    #[test]
+    fn same_cycle_arrival_and_detection_is_a_zero_length_episode() {
+        // an arrival whose detection lands the very same cycle must not
+        // produce a [c, c) interval
+        let ev = [arrive(70, 0, 0), detect(70, 0, 0)];
+        let l = Lifecycle::new(&ev, 1);
+        assert!(l.drained_intervals().is_empty());
+        assert!(l.healthy_at(70));
+        assert_eq!(l.live_at(70), 0, "the last step at a cycle wins");
+    }
+
+    #[test]
+    #[should_panic(expected = "zero drain threshold")]
+    fn zero_threshold_rejected() {
+        Lifecycle::new(&[], 0);
+    }
+}

@@ -1,0 +1,417 @@
+//! Fleet metrics: cluster-level latency percentiles (per-chip
+//! [`LogHistogram`]s merged bucket-exactly into one cluster sketch),
+//! throughput, accuracy/goodput windows with an availability timeline,
+//! and per-chip breakdowns — the observables `repro fleet` reports and
+//! the golden tests pin.
+//!
+//! Everything in a [`FleetReport`] derives from the simulated timeline
+//! plus the (thread-count-invariant) predictions, so the report is a
+//! pure function of the cluster master seed; `digest()` renders it to
+//! one string for byte-level invariance assertions, exactly like
+//! `serve::metrics`.
+
+use std::fmt::Write as _;
+
+use super::{FleetConfig, FleetEvent, FleetEventKind, FleetTimeline, RoutingPolicy};
+use crate::array::Dims;
+use crate::inference::Engine;
+use crate::util::stats::LogHistogram;
+
+/// Goodput/accuracy/availability over one time window of the run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FleetWindowStat {
+    pub index: usize,
+    pub start_cycle: u64,
+    pub end_cycle: u64,
+    /// Requests completed inside the window (the goodput signal —
+    /// every completed request is a correct-or-not answer delivered).
+    pub requests: usize,
+    pub correct: usize,
+    /// Mean healthy-time fraction across chips within the window.
+    pub availability: f64,
+}
+
+impl FleetWindowStat {
+    /// Accuracy of the window; `None` when no request completed in it.
+    pub fn accuracy(&self) -> Option<f64> {
+        if self.requests == 0 {
+            None
+        } else {
+            Some(self.correct as f64 / self.requests as f64)
+        }
+    }
+}
+
+/// Per-chip breakdown of one fleet run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ChipStat {
+    pub chip: usize,
+    pub dims: Dims,
+    pub lanes: usize,
+    /// Requests this chip completed.
+    pub requests: usize,
+    pub correct: usize,
+    pub batches: usize,
+    pub latency_cycles: LogHistogram,
+    pub unrepaired: usize,
+    /// Drain episodes over the chip's whole fault history.
+    pub drains: usize,
+    /// Cycles of `[0, total_cycles)` spent drained.
+    pub drained_cycles: u64,
+}
+
+impl ChipStat {
+    pub fn accuracy(&self) -> Option<f64> {
+        if self.requests == 0 {
+            None
+        } else {
+            Some(self.correct as f64 / self.requests as f64)
+        }
+    }
+}
+
+/// The full result of one fleet run.
+#[derive(Debug, Clone)]
+pub struct FleetReport {
+    pub chips: usize,
+    pub policy: RoutingPolicy,
+    pub total_requests: usize,
+    pub batches: usize,
+    pub mean_batch_size: f64,
+    pub total_cycles: u64,
+    pub throughput_imgs_per_mcycle: f64,
+    /// Cluster latency sketch: the bucket-exact merge of every chip's
+    /// histogram (`LogHistogram::merge`).
+    pub latency_cycles: LogHistogram,
+    pub windows: Vec<FleetWindowStat>,
+    pub per_chip: Vec<ChipStat>,
+    pub events: Vec<FleetEvent>,
+    /// Faults never detected+remapped, summed over chips.
+    pub unrepaired: usize,
+    pub max_pending: usize,
+    /// Prediction per request id.
+    pub predictions: Vec<usize>,
+    /// Correctness per request id.
+    pub correct: Vec<bool>,
+    /// Whole-run accuracy.
+    pub accuracy: f64,
+}
+
+impl FleetReport {
+    pub fn p50_cycles(&self) -> u64 {
+        self.latency_cycles.quantile(0.50)
+    }
+
+    pub fn p99_cycles(&self) -> u64 {
+        self.latency_cycles.quantile(0.99)
+    }
+
+    /// Accuracy of the last window that completed any request.
+    pub fn final_window_accuracy(&self) -> Option<f64> {
+        self.windows.iter().rev().find_map(|w| w.accuracy())
+    }
+
+    /// Mean availability over the run: fraction of chip-time spent
+    /// admitted (1.0 = no chip ever drained).
+    pub fn availability(&self) -> f64 {
+        if self.total_cycles == 0 || self.per_chip.is_empty() {
+            return 1.0;
+        }
+        let span = self.total_cycles as f64 * self.per_chip.len() as f64;
+        let drained: f64 = self.per_chip.iter().map(|c| c.drained_cycles as f64).sum();
+        1.0 - drained / span
+    }
+
+    /// Total drain episodes across the fleet.
+    pub fn drains(&self) -> usize {
+        self.per_chip.iter().map(|c| c.drains).sum()
+    }
+
+    /// Deterministic rendering of every metric, per-chip stat and
+    /// per-request outcome — two runs are equivalent iff their digests
+    /// are byte-identical (the executor-width invariance assertions
+    /// compare this).
+    pub fn digest(&self) -> String {
+        let mut s = String::new();
+        let _ = writeln!(
+            s,
+            "chips={} policy={} requests={} batches={} mean_batch={:.4}",
+            self.chips, self.policy, self.total_requests, self.batches, self.mean_batch_size
+        );
+        let _ = writeln!(
+            s,
+            "total_cycles={} throughput={:.6} p50={} p99={} max_pending={} \
+             unrepaired={} availability={:.6} drains={}",
+            self.total_cycles,
+            self.throughput_imgs_per_mcycle,
+            self.p50_cycles(),
+            self.p99_cycles(),
+            self.max_pending,
+            self.unrepaired,
+            self.availability(),
+            self.drains()
+        );
+        let _ = writeln!(s, "accuracy={:.6}", self.accuracy);
+        for c in &self.per_chip {
+            let acc = match c.accuracy() {
+                Some(a) => format!("{a:.6}"),
+                None => "-".to_string(),
+            };
+            let _ = writeln!(
+                s,
+                "chip {} dims={} lanes={} n={} batches={} acc={acc} p50={} p99={} \
+                 unrepaired={} drains={} drained_cycles={}",
+                c.chip,
+                c.dims,
+                c.lanes,
+                c.requests,
+                c.batches,
+                c.latency_cycles.quantile(0.50),
+                c.latency_cycles.quantile(0.99),
+                c.unrepaired,
+                c.drains,
+                c.drained_cycles
+            );
+        }
+        for w in &self.windows {
+            let acc = match w.accuracy() {
+                Some(a) => format!("{a:.6}"),
+                None => "-".to_string(),
+            };
+            let _ = writeln!(
+                s,
+                "window {} [{}, {}) n={} acc={} avail={:.6}",
+                w.index, w.start_cycle, w.end_cycle, w.requests, acc, w.availability
+            );
+        }
+        for e in &self.events {
+            let kind = match e.kind {
+                FleetEventKind::FaultArrival(c) => format!("arrive({},{})", c.row, c.col),
+                FleetEventKind::ScanDetection(c) => format!("detect({},{})", c.row, c.col),
+                FleetEventKind::Drained => "drained".to_string(),
+                FleetEventKind::Readmitted => "readmitted".to_string(),
+            };
+            let _ = writeln!(s, "event {} chip{} {}", e.cycle, e.chip, kind);
+        }
+        for (i, (&p, &ok)) in self.predictions.iter().zip(&self.correct).enumerate() {
+            let _ = writeln!(s, "req {i} pred={p} ok={ok}");
+        }
+        s
+    }
+}
+
+/// Combine the simulated fleet timeline with the pool's predictions.
+pub fn assemble(
+    engine: &Engine,
+    cfg: &FleetConfig,
+    timeline: FleetTimeline,
+    preds: Vec<Vec<usize>>,
+) -> FleetReport {
+    assert_eq!(preds.len(), timeline.jobs.len(), "one result per job");
+    let n = timeline.requests.len();
+    let n_chips = timeline.chip_state.len();
+    let mut per_chip_hist: Vec<LogHistogram> = vec![LogHistogram::new(); n_chips];
+    let mut per_chip_requests = vec![0usize; n_chips];
+    let mut per_chip_correct = vec![0usize; n_chips];
+    let mut per_chip_batches = vec![0usize; n_chips];
+    for j in &timeline.jobs {
+        per_chip_batches[j.chip] += 1;
+    }
+    let mut predictions = Vec::with_capacity(n);
+    let mut correct = Vec::with_capacity(n);
+    let window_count = cfg.windows.max(1);
+    let window_len = timeline.total_cycles.div_ceil(window_count as u64).max(1);
+    let mut windows: Vec<FleetWindowStat> = (0..window_count)
+        .map(|i| {
+            let start_cycle = i as u64 * window_len;
+            let end_cycle = (i as u64 + 1) * window_len;
+            // availability only counts simulated time: the padded tail
+            // of the last window (and drain intervals running past the
+            // end of traffic) must not deflate it — consistent with
+            // `FleetReport::availability()`, which clips the same way
+            let clipped_end = end_cycle.min(timeline.total_cycles);
+            let clipped_span = clipped_end.saturating_sub(start_cycle);
+            let availability = if clipped_span == 0 {
+                1.0
+            } else {
+                let drained: u64 = timeline
+                    .chip_state
+                    .iter()
+                    .map(|c| c.lifecycle.drained_overlap(start_cycle, clipped_end))
+                    .sum();
+                1.0 - drained as f64 / (clipped_span as f64 * n_chips as f64)
+            };
+            FleetWindowStat {
+                index: i,
+                start_cycle,
+                end_cycle,
+                requests: 0,
+                correct: 0,
+                availability,
+            }
+        })
+        .collect();
+    for r in &timeline.requests {
+        let chip = timeline.jobs[r.batch_id].chip;
+        let pred = preds[r.batch_id][r.slot];
+        let ok = pred as i32 == engine.eval.labels[r.image_idx];
+        predictions.push(pred);
+        correct.push(ok);
+        let latency = r.complete_cycle - r.enqueue_cycle;
+        per_chip_hist[chip].record(latency);
+        per_chip_requests[chip] += 1;
+        per_chip_correct[chip] += usize::from(ok);
+        let w = ((r.complete_cycle / window_len) as usize).min(window_count - 1);
+        windows[w].requests += 1;
+        windows[w].correct += usize::from(ok);
+    }
+    // cluster sketch = bucket-exact merge of the per-chip sketches
+    let mut cluster = LogHistogram::new();
+    for h in &per_chip_hist {
+        cluster.merge(h);
+    }
+    debug_assert_eq!(cluster.count() as usize, n, "merge must preserve counts");
+    let per_chip: Vec<ChipStat> = timeline
+        .chip_state
+        .iter()
+        .enumerate()
+        .map(|(k, c)| ChipStat {
+            chip: k,
+            dims: c.spec.dims,
+            lanes: c.spec.lanes,
+            requests: per_chip_requests[k],
+            correct: per_chip_correct[k],
+            batches: per_chip_batches[k],
+            latency_cycles: per_chip_hist[k].clone(),
+            unrepaired: c.faults.unrepaired,
+            drains: c.lifecycle.drains(),
+            drained_cycles: c.lifecycle.drained_overlap(0, timeline.total_cycles),
+        })
+        .collect();
+    let n_correct = correct.iter().filter(|&&c| c).count();
+    let batches = timeline.jobs.len();
+    FleetReport {
+        chips: n_chips,
+        policy: cfg.policy,
+        total_requests: n,
+        batches,
+        mean_batch_size: if batches == 0 { 0.0 } else { n as f64 / batches as f64 },
+        total_cycles: timeline.total_cycles,
+        throughput_imgs_per_mcycle: n as f64 * 1e6 / timeline.total_cycles.max(1) as f64,
+        latency_cycles: cluster,
+        windows,
+        per_chip,
+        events: timeline.events,
+        unrepaired: timeline.unrepaired,
+        max_pending: timeline.max_pending,
+        predictions,
+        correct,
+        accuracy: n_correct as f64 / n.max(1) as f64,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::array::Dims;
+    use crate::fleet::{run, ChipSpec, FleetConfig, NEVER_DRAIN};
+    use std::sync::Arc;
+
+    fn cfg(chips: usize, policy: RoutingPolicy) -> FleetConfig {
+        FleetConfig {
+            seed: 19,
+            chips: vec![
+                ChipSpec {
+                    dims: Dims::new(8, 8),
+                    lanes: 2,
+                };
+                chips
+            ],
+            policy,
+            max_batch: 4,
+            max_wait_cycles: 4_000,
+            clients: 4 * chips,
+            think_cycles: 250,
+            total_requests: 12 * chips,
+            queue_cap: 4 * chips,
+            executor_threads: 3,
+            windows: 6,
+            faults: None,
+            drain_threshold: NEVER_DRAIN,
+        }
+    }
+
+    #[test]
+    fn fault_free_fleet_is_perfectly_accurate_and_fully_available() {
+        let engine = Arc::new(crate::inference::Engine::builtin());
+        let report = run(&engine, &cfg(3, RoutingPolicy::RoundRobin)).unwrap();
+        assert_eq!(report.chips, 3);
+        assert_eq!(report.total_requests, 36);
+        assert_eq!(report.accuracy, 1.0, "builtin labels are the clean argmax");
+        assert_eq!(report.availability(), 1.0);
+        assert_eq!(report.drains(), 0);
+        assert_eq!(report.unrepaired, 0);
+        assert!(report.events.is_empty());
+        // the cluster histogram is the exact merge of the chip ones
+        assert_eq!(report.latency_cycles.count(), 36);
+        let per_chip_total: u64 = report.per_chip.iter().map(|c| c.latency_cycles.count()).sum();
+        assert_eq!(per_chip_total, 36);
+        let per_chip_requests: usize = report.per_chip.iter().map(|c| c.requests).sum();
+        assert_eq!(per_chip_requests, 36);
+        let windowed: usize = report.windows.iter().map(|w| w.requests).sum();
+        assert_eq!(windowed, 36, "every request lands in exactly one window");
+        assert!(report.windows.iter().all(|w| w.availability == 1.0));
+        assert_eq!(report.final_window_accuracy(), Some(1.0));
+        assert!(report.p50_cycles() <= report.p99_cycles());
+        assert!(report.throughput_imgs_per_mcycle > 0.0);
+    }
+
+    #[test]
+    fn cluster_quantiles_match_recording_all_latencies_directly() {
+        let engine = Arc::new(crate::inference::Engine::builtin());
+        let c = cfg(2, RoutingPolicy::JoinShortestQueue);
+        let timeline = crate::fleet::simulate_fleet(&engine, &c);
+        let mut direct = LogHistogram::new();
+        for r in &timeline.requests {
+            direct.record(r.complete_cycle - r.enqueue_cycle);
+        }
+        let report = run(&engine, &c).unwrap();
+        assert_eq!(report.latency_cycles, direct, "merge == direct recording");
+    }
+
+    #[test]
+    fn digest_is_stable_across_executor_widths() {
+        let engine = Arc::new(crate::inference::Engine::builtin());
+        let a = run(&engine, &cfg(2, RoutingPolicy::HealthWeighted)).unwrap();
+        let mut wide = cfg(2, RoutingPolicy::HealthWeighted);
+        wide.executor_threads = 7;
+        let b = run(&engine, &wide).unwrap();
+        assert_eq!(a.digest(), b.digest());
+    }
+
+    #[test]
+    fn window_and_chip_accuracy_handle_empty_sets() {
+        let w = FleetWindowStat {
+            index: 0,
+            start_cycle: 0,
+            end_cycle: 10,
+            requests: 0,
+            correct: 0,
+            availability: 1.0,
+        };
+        assert_eq!(w.accuracy(), None);
+        let c = ChipStat {
+            chip: 0,
+            dims: Dims::new(8, 8),
+            lanes: 2,
+            requests: 0,
+            correct: 0,
+            batches: 0,
+            latency_cycles: LogHistogram::new(),
+            unrepaired: 0,
+            drains: 0,
+            drained_cycles: 0,
+        };
+        assert_eq!(c.accuracy(), None);
+    }
+}

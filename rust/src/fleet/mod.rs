@@ -1,0 +1,702 @@
+//! `fleet` — multi-chip sharded serving: a cycle-deterministic cluster
+//! of independently-failing serve-style chips behind a health-aware
+//! router, with fault-domain isolation via drain / re-admit
+//! (DESIGN.md §6, `repro fleet`).
+//!
+//! The paper's scalability argument (Fig. 14) is intra-chip: HyCA's
+//! DPPU keeps repairing as one array grows. This module takes the next
+//! level up (the hierarchical view of arXiv:2204.01942): reliability
+//! across *chips*. Every chip is a full [`crate::serve`] unit — its
+//! own 2-D array size ([`ChipSpec`]), its own seeded Poisson
+//! fault-arrival stream (per-chip PRNG slot, [`chip::chip_seed`]), its
+//! own scan agent and mask epochs — and the cluster **router**
+//! ([`router`]) load-balances requests across chips with pluggable
+//! policies (round-robin, join-shortest-queue, health-aware weighted).
+//!
+//! **Fault-domain isolation:** a chip whose live (arrived, unremapped)
+//! fault count crosses `drain_threshold` is *drained*
+//! ([`lifecycle`]): it dispatches no new batches, its in-flight
+//! batches complete, its pending queue is re-sharded to healthy chips,
+//! and its scan agent keeps running; the moment scan-and-repair brings
+//! the count back under the threshold the chip is *re-admitted* and
+//! the router restores its traffic share. If every chip is drained at
+//! once the fleet chooses degraded continuity over outage: all chips
+//! keep serving (and routing falls back to the full set) so no request
+//! is ever dropped.
+//!
+//! **Degeneracy contract** (property-tested): a 1-chip fleet under
+//! round-robin routing with draining disabled replays
+//! [`crate::serve::simulate_timeline`] *exactly* — same request
+//! records, same batch timeline, same predictions — because chip 0
+//! keeps the cluster seed, the event encoding collapses to serve's,
+//! and the dispatch loop degenerates to serve's single-batcher loop.
+//! The same cycle-time determinism contract carries over: every metric
+//! in `BENCH_fleet.json` is a pure function of the master seed,
+//! byte-identical at any `--workers` value.
+
+pub mod chip;
+pub mod lifecycle;
+pub mod metrics;
+pub mod router;
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::faults::Coord;
+use crate::inference::Engine;
+use crate::serve::scan_agent::EventKind;
+use crate::serve::{pool, BatchJob, FaultPlan, RequestRecord};
+
+pub use chip::{chip_seed, ChipSim, ChipSpec};
+pub use lifecycle::NEVER_DRAIN;
+pub use router::{Router, RoutingPolicy};
+
+/// Configuration of one fleet run. As with `serve`, every metric is a
+/// pure function of everything here except `executor_threads`.
+#[derive(Debug, Clone)]
+pub struct FleetConfig {
+    /// Cluster master seed (chip `k` derives its own via
+    /// [`chip_seed`]).
+    pub seed: u64,
+    /// The chips; arrays may be heterogeneous.
+    pub chips: Vec<ChipSpec>,
+    /// Request routing policy.
+    pub policy: RoutingPolicy,
+    /// Dynamic batcher cap (per chip).
+    pub max_batch: usize,
+    /// Dynamic batcher deadline (per chip).
+    pub max_wait_cycles: u64,
+    /// Closed-loop clients across the whole fleet.
+    pub clients: usize,
+    /// Per-request think time upper bound (0 = saturating load).
+    pub think_cycles: u64,
+    /// Requests served by the run.
+    pub total_requests: usize,
+    /// Bound on the fleet-wide pending set (must admit every client).
+    pub queue_cap: usize,
+    /// Real worker threads executing the inference jobs.
+    pub executor_threads: usize,
+    /// Accuracy/goodput windows in the report.
+    pub windows: usize,
+    /// Optional mid-run fault injection (per chip, independent
+    /// streams).
+    pub faults: Option<FaultPlan>,
+    /// Live-fault count at which a chip is drained
+    /// ([`NEVER_DRAIN`] disables the lifecycle).
+    pub drain_threshold: usize,
+}
+
+impl FleetConfig {
+    /// The 1-chip fleet that degenerates to exactly one `serve` run:
+    /// same seed, array, lanes, batcher, load and fault plan;
+    /// round-robin routing; draining disabled.
+    pub fn degenerate(cfg: &crate::serve::ServeConfig) -> Self {
+        Self {
+            seed: cfg.seed,
+            chips: vec![ChipSpec {
+                dims: cfg.dims,
+                lanes: cfg.lanes,
+            }],
+            policy: RoutingPolicy::RoundRobin,
+            max_batch: cfg.max_batch,
+            max_wait_cycles: cfg.max_wait_cycles,
+            clients: cfg.clients,
+            think_cycles: cfg.think_cycles,
+            total_requests: cfg.total_requests,
+            queue_cap: cfg.queue_cap,
+            executor_threads: cfg.executor_threads,
+            windows: cfg.windows,
+            faults: cfg.faults,
+            drain_threshold: NEVER_DRAIN,
+        }
+    }
+}
+
+/// One dispatched batch: a serve [`BatchJob`] plus the chip it ran on.
+#[derive(Debug, Clone)]
+pub struct FleetBatchJob {
+    pub chip: usize,
+    pub job: BatchJob,
+}
+
+/// What happened on the cluster timeline (per-chip fault events plus
+/// lifecycle transitions).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FleetEventKind {
+    FaultArrival(Coord),
+    ScanDetection(Coord),
+    Drained,
+    Readmitted,
+}
+
+impl FleetEventKind {
+    fn sort_key(&self) -> (u8, u16, u16) {
+        match *self {
+            FleetEventKind::FaultArrival(c) => (0, c.col, c.row),
+            FleetEventKind::ScanDetection(c) => (1, c.col, c.row),
+            FleetEventKind::Drained => (2, 0, 0),
+            FleetEventKind::Readmitted => (3, 0, 0),
+        }
+    }
+}
+
+/// One cluster event in simulated cycles.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FleetEvent {
+    pub cycle: u64,
+    pub chip: usize,
+    pub kind: FleetEventKind,
+}
+
+/// The fully-resolved simulated timeline of one fleet run.
+pub struct FleetTimeline {
+    pub jobs: Vec<FleetBatchJob>,
+    /// Records in request-id (= issue) order; `batch_id` indexes
+    /// `jobs`, whose `chip` field names the serving chip.
+    pub requests: Vec<RequestRecord>,
+    pub total_cycles: u64,
+    /// Merged per-chip fault events + lifecycle transitions, ascending.
+    pub events: Vec<FleetEvent>,
+    /// Faults never detected+remapped, summed over chips.
+    pub unrepaired: usize,
+    /// High-water mark of the fleet-wide pending set.
+    pub max_pending: usize,
+    /// Final per-chip state (lifecycle + fault history, for metrics).
+    pub chip_state: Vec<ChipSim>,
+}
+
+// Event kinds; the (cycle, kind, key) triple is the deterministic
+// processing order. The first three collapse to serve's encoding for a
+// 1-chip fleet (chip 0's lane keys are bare lane ids).
+const EV_CLIENT_READY: u8 = 0;
+const EV_LANE_FREE: u8 = 1;
+const EV_BATCH_DEADLINE: u8 = 2;
+const EV_CHIP_DRAIN: u8 = 3;
+const EV_CHIP_READMIT: u8 = 4;
+
+fn lane_key(chip: usize, lane: usize) -> u64 {
+    ((chip as u64) << 32) | lane as u64
+}
+
+/// The chips the router may target at `t`: the healthy set when any
+/// chip is healthy, the whole fleet otherwise (degraded continuity).
+/// The set only changes at lifecycle boundaries, so callers compute it
+/// once per event and route any number of requests against it.
+fn admissible(chips: &[ChipSim], t: u64) -> Vec<usize> {
+    let healthy: Vec<usize> = (0..chips.len())
+        .filter(|&k| chips[k].healthy_at(t))
+        .collect();
+    if healthy.is_empty() {
+        (0..chips.len()).collect()
+    } else {
+        healthy
+    }
+}
+
+/// Route one request among `candidates` at `t`; increments the
+/// winner's `assigned` counter.
+fn route(router: &mut Router, chips: &mut [ChipSim], candidates: &[usize], t: u64) -> usize {
+    let target = router.pick(candidates, chips, t);
+    chips[target].assigned += 1;
+    target
+}
+
+/// Re-shard the pending queue of every currently-drained chip through
+/// the router (called on drain starts and on re-admissions, when the
+/// healthy set changes). Re-pushed requests keep their identity and
+/// original enqueue cycle in the records; their batcher deadline
+/// restarts at `t`.
+fn reshard(
+    router: &mut Router,
+    chips: &mut [ChipSim],
+    heap: &mut BinaryHeap<Reverse<(u64, u8, u64)>>,
+    t: u64,
+    max_wait_cycles: u64,
+) {
+    if !chips.iter().any(|c| c.healthy_at(t)) {
+        return; // nowhere better to go — degraded continuity serves in place
+    }
+    let candidates = admissible(chips, t);
+    for k in 0..chips.len() {
+        if chips[k].healthy_at(t) || chips[k].batcher.is_empty() {
+            continue;
+        }
+        let moved = chips[k].batcher.drain_all();
+        for (_, rid) in moved {
+            // the request leaves this chip's assignment ledger so the
+            // deficit-weighted policy restores its fair share once it
+            // re-admits (otherwise phantom assignments starve it)
+            chips[k].assigned -= 1;
+            let target = route(router, chips, &candidates, t);
+            chips[target].batcher.push(t, rid);
+            heap.push(Reverse((t + max_wait_cycles, EV_BATCH_DEADLINE, rid as u64)));
+        }
+    }
+}
+
+/// Run the deterministic discrete-event simulation of the whole fleet
+/// in cycle time. Pure: depends only on `engine`'s model/eval data and
+/// `cfg` (not on `cfg.executor_threads`).
+pub fn simulate_fleet(engine: &Engine, cfg: &FleetConfig) -> FleetTimeline {
+    assert!(!cfg.chips.is_empty(), "need at least one chip");
+    assert!(cfg.total_requests >= 1, "need at least one request");
+    assert!(
+        cfg.queue_cap >= cfg.clients,
+        "closed-loop pending set (≤ clients) must fit the fleet queue bound"
+    );
+    let mut geometry = engine.geometry();
+    geometry.batch = cfg.max_batch;
+    let mut chips: Vec<ChipSim> = cfg
+        .chips
+        .iter()
+        .enumerate()
+        .map(|(k, spec)| {
+            ChipSim::build(
+                &engine.params,
+                &geometry,
+                *spec,
+                k,
+                cfg.seed,
+                cfg.faults.as_ref(),
+                cfg.drain_threshold,
+                cfg.max_batch,
+                cfg.max_wait_cycles,
+            )
+        })
+        .collect();
+
+    let mut gen = crate::serve::loadgen::LoadGen::new(
+        cfg.seed,
+        cfg.clients,
+        engine.eval.images.len(),
+        cfg.think_cycles,
+        cfg.total_requests,
+    );
+    let mut router = Router::new(cfg.policy);
+    let mut heap: BinaryHeap<Reverse<(u64, u8, u64)>> = BinaryHeap::new();
+    for c in 0..cfg.clients {
+        let at = gen.think(c);
+        heap.push(Reverse((at, EV_CLIENT_READY, c as u64)));
+    }
+    // lifecycle wake-ups: re-shard at drain starts, dispatch+re-shard
+    // at re-admissions
+    for (k, chip) in chips.iter().enumerate() {
+        for &(start, end) in chip.lifecycle.drained_intervals() {
+            heap.push(Reverse((start, EV_CHIP_DRAIN, k as u64)));
+            if end != u64::MAX {
+                heap.push(Reverse((end, EV_CHIP_READMIT, k as u64)));
+            }
+        }
+    }
+
+    let mut jobs: Vec<FleetBatchJob> = Vec::new();
+    let mut requests: Vec<RequestRecord> = Vec::new();
+    let mut pending_total = 0usize;
+    let mut max_pending = 0usize;
+
+    while let Some(Reverse((t, kind, key))) = heap.pop() {
+        match kind {
+            EV_CLIENT_READY => {
+                let client = key as usize;
+                if let Some(image_idx) = gen.next_image(client) {
+                    let id = requests.len();
+                    requests.push(RequestRecord {
+                        id,
+                        client,
+                        image_idx,
+                        enqueue_cycle: t,
+                        start_cycle: 0,
+                        complete_cycle: 0,
+                        batch_id: 0,
+                        slot: 0,
+                    });
+                    let candidates = admissible(&chips, t);
+                    let target = route(&mut router, &mut chips, &candidates, t);
+                    chips[target].batcher.push(t, id);
+                    pending_total += 1;
+                    max_pending = max_pending.max(pending_total);
+                    assert!(
+                        pending_total <= cfg.queue_cap,
+                        "fleet-wide pending set overflowed its bound"
+                    );
+                    heap.push(Reverse((
+                        t + cfg.max_wait_cycles,
+                        EV_BATCH_DEADLINE,
+                        id as u64,
+                    )));
+                }
+            }
+            EV_LANE_FREE => {
+                let (chip, lane) = ((key >> 32) as usize, (key & 0xFFFF_FFFF) as usize);
+                chips[chip].complete_lane(lane);
+            }
+            EV_CHIP_DRAIN | EV_CHIP_READMIT => {
+                reshard(&mut router, &mut chips, &mut heap, t, cfg.max_wait_cycles);
+            }
+            _ => {} // deadline: dispatch attempt below
+        }
+        // dispatch whatever is releasable at `t` on every admitted chip
+        // (all chips, when none is healthy — degraded continuity)
+        let any_healthy = chips.iter().any(|c| c.healthy_at(t));
+        for k in 0..chips.len() {
+            if any_healthy && !chips[k].healthy_at(t) {
+                continue;
+            }
+            while !chips[k].free_lanes.is_empty() {
+                let Some(batch) = chips[k].batcher.take(t) else { break };
+                let lane = *chips[k].free_lanes.iter().next().unwrap();
+                chips[k].free_lanes.remove(&lane);
+                let b = batch.len();
+                let start = t;
+                let end = start + chips[k].cost.batch_cycles(b);
+                let epoch_masks = chips[k].faults.masks_at(start);
+                let masks = if b == cfg.max_batch {
+                    Arc::clone(epoch_masks)
+                } else {
+                    Arc::new(epoch_masks.with_fc_rows(b))
+                };
+                let job_id = jobs.len();
+                let mut image_idxs = Vec::with_capacity(b);
+                for (slot, (_, rid)) in batch.iter().enumerate() {
+                    let client = {
+                        let r = &mut requests[*rid];
+                        r.start_cycle = start;
+                        r.complete_cycle = end;
+                        r.batch_id = job_id;
+                        r.slot = slot;
+                        image_idxs.push(r.image_idx);
+                        r.client
+                    };
+                    let think = gen.think(client);
+                    heap.push(Reverse((end + think, EV_CLIENT_READY, client as u64)));
+                }
+                pending_total -= b;
+                chips[k].occupy_lane(lane, b);
+                jobs.push(FleetBatchJob {
+                    chip: k,
+                    job: BatchJob {
+                        id: job_id,
+                        image_idxs,
+                        masks,
+                        start_cycle: start,
+                        end_cycle: end,
+                        lane,
+                    },
+                });
+                heap.push(Reverse((end, EV_LANE_FREE, lane_key(k, lane))));
+            }
+        }
+    }
+
+    assert_eq!(
+        requests.len(),
+        cfg.total_requests,
+        "closed loop must issue every budgeted request"
+    );
+    assert!(
+        requests.iter().all(|r| r.complete_cycle > r.enqueue_cycle),
+        "fleet stalled: requests left unserved (every chip drained with \
+         unrepairable faults?) — degraded continuity should prevent this"
+    );
+    let total_cycles = jobs.iter().map(|j| j.job.end_cycle).max().unwrap_or(0);
+
+    // merge per-chip fault events and lifecycle transitions
+    let mut events: Vec<FleetEvent> = Vec::new();
+    for (k, chip) in chips.iter().enumerate() {
+        for e in &chip.faults.events {
+            let kind = match e.kind {
+                EventKind::FaultArrival(c) => FleetEventKind::FaultArrival(c),
+                EventKind::ScanDetection(c) => FleetEventKind::ScanDetection(c),
+            };
+            events.push(FleetEvent { cycle: e.cycle, chip: k, kind });
+        }
+        for &(start, end) in chip.lifecycle.drained_intervals() {
+            events.push(FleetEvent {
+                cycle: start,
+                chip: k,
+                kind: FleetEventKind::Drained,
+            });
+            if end != u64::MAX {
+                events.push(FleetEvent {
+                    cycle: end,
+                    chip: k,
+                    kind: FleetEventKind::Readmitted,
+                });
+            }
+        }
+    }
+    events.sort_by_key(|e| (e.cycle, e.chip, e.kind.sort_key()));
+    let unrepaired = chips.iter().map(|c| c.faults.unrepaired).sum();
+
+    FleetTimeline {
+        jobs,
+        requests,
+        total_cycles,
+        events,
+        unrepaired,
+        max_pending,
+        chip_state: chips,
+    }
+}
+
+/// End to end: simulate the fleet timeline, execute every chip's
+/// batches on the shared worker pool, assemble the cluster report.
+pub fn run(engine: &Arc<Engine>, cfg: &FleetConfig) -> Result<metrics::FleetReport> {
+    let timeline = simulate_fleet(engine, cfg);
+    let job_refs: Vec<&BatchJob> = timeline.jobs.iter().map(|j| &j.job).collect();
+    let predictions = pool::execute(engine, &job_refs, cfg.executor_threads, cfg.queue_cap)?;
+    Ok(metrics::assemble(engine, cfg, timeline, predictions))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::array::Dims;
+    use crate::serve::{simulate_timeline, ServeConfig};
+
+    fn serve_cfg() -> ServeConfig {
+        ServeConfig {
+            seed: 11,
+            dims: Dims::new(8, 8),
+            lanes: 2,
+            max_batch: 4,
+            max_wait_cycles: 5_000,
+            clients: 8,
+            think_cycles: 250,
+            total_requests: 24,
+            queue_cap: 8,
+            executor_threads: 2,
+            windows: 4,
+            faults: None,
+        }
+    }
+
+    fn fleet_cfg(n_chips: usize, policy: RoutingPolicy) -> FleetConfig {
+        FleetConfig {
+            seed: 17,
+            chips: vec![
+                ChipSpec {
+                    dims: Dims::new(8, 8),
+                    lanes: 2,
+                };
+                n_chips
+            ],
+            policy,
+            max_batch: 4,
+            max_wait_cycles: 5_000,
+            clients: 4 * n_chips,
+            think_cycles: 250,
+            total_requests: 16 * n_chips,
+            queue_cap: 4 * n_chips,
+            executor_threads: 2,
+            windows: 4,
+            faults: None,
+            drain_threshold: NEVER_DRAIN,
+        }
+    }
+
+    #[test]
+    fn one_chip_fleet_degenerates_to_serve_exactly() {
+        let engine = Engine::builtin();
+        let scfg = serve_cfg();
+        let serve_t = simulate_timeline(&engine, &scfg);
+        let fleet_t = simulate_fleet(&engine, &FleetConfig::degenerate(&scfg));
+        assert_eq!(fleet_t.requests, serve_t.requests);
+        assert_eq!(fleet_t.total_cycles, serve_t.total_cycles);
+        assert_eq!(fleet_t.jobs.len(), serve_t.jobs.len());
+        for (f, s) in fleet_t.jobs.iter().zip(&serve_t.jobs) {
+            assert_eq!(f.chip, 0);
+            assert_eq!(f.job.id, s.id);
+            assert_eq!(f.job.image_idxs, s.image_idxs);
+            assert_eq!(f.job.start_cycle, s.start_cycle);
+            assert_eq!(f.job.end_cycle, s.end_cycle);
+            assert_eq!(f.job.lane, s.lane);
+            assert_eq!(*f.job.masks, *s.masks);
+        }
+        assert_eq!(fleet_t.max_pending, serve_t.max_pending);
+        assert_eq!(fleet_t.unrepaired, serve_t.unrepaired);
+    }
+
+    #[test]
+    fn one_chip_degeneracy_holds_under_faults_too() {
+        let engine = Engine::builtin();
+        let mut scfg = serve_cfg();
+        scfg.seed = 3;
+        scfg.total_requests = 48;
+        scfg.faults = Some(FaultPlan {
+            mean_interarrival_cycles: 20_000.0,
+            horizon_cycles: 60_000,
+            scan_period_cycles: 4_000,
+            group_width: 8,
+            fpt_capacity: 8,
+            max_arrivals: 6,
+        });
+        let serve_t = simulate_timeline(&engine, &scfg);
+        let fleet_t = simulate_fleet(&engine, &FleetConfig::degenerate(&scfg));
+        assert_eq!(fleet_t.requests, serve_t.requests);
+        assert_eq!(fleet_t.total_cycles, serve_t.total_cycles);
+        for (f, s) in fleet_t.jobs.iter().zip(&serve_t.jobs) {
+            assert_eq!(*f.job.masks, *s.masks, "mask epochs must match");
+        }
+        // chip fault events are serve's events
+        let fleet_faults: Vec<(u64, FleetEventKind)> =
+            fleet_t.events.iter().map(|e| (e.cycle, e.kind)).collect();
+        let serve_faults: Vec<(u64, FleetEventKind)> = serve_t
+            .events
+            .iter()
+            .map(|e| {
+                let kind = match e.kind {
+                    EventKind::FaultArrival(c) => FleetEventKind::FaultArrival(c),
+                    EventKind::ScanDetection(c) => FleetEventKind::ScanDetection(c),
+                };
+                (e.cycle, kind)
+            })
+            .collect();
+        assert_eq!(fleet_faults, serve_faults);
+    }
+
+    #[test]
+    fn fleet_serves_every_request_without_lane_overlap() {
+        let engine = Engine::builtin();
+        for policy in RoutingPolicy::all() {
+            let cfg = fleet_cfg(3, policy);
+            let t = simulate_fleet(&engine, &cfg);
+            assert_eq!(t.requests.len(), cfg.total_requests, "{policy}");
+            assert!(t.max_pending <= cfg.queue_cap);
+            for r in &t.requests {
+                let fj = &t.jobs[r.batch_id];
+                assert_eq!(fj.job.image_idxs[r.slot], r.image_idx);
+                assert_eq!(
+                    (fj.job.start_cycle, fj.job.end_cycle),
+                    (r.start_cycle, r.complete_cycle)
+                );
+            }
+            // jobs on one (chip, lane) never overlap in time
+            for k in 0..cfg.chips.len() {
+                for lane in 0..cfg.chips[k].lanes {
+                    let mut lane_jobs: Vec<&FleetBatchJob> = t
+                        .jobs
+                        .iter()
+                        .filter(|j| j.chip == k && j.job.lane == lane)
+                        .collect();
+                    lane_jobs.sort_by_key(|j| j.job.start_cycle);
+                    for w in lane_jobs.windows(2) {
+                        assert!(
+                            w[0].job.end_cycle <= w[1].job.start_cycle,
+                            "{policy}: chip {k} lane {lane} overlap"
+                        );
+                    }
+                }
+            }
+            let served: usize = t.jobs.iter().map(|j| j.job.image_idxs.len()).sum();
+            assert_eq!(served, cfg.total_requests);
+        }
+    }
+
+    #[test]
+    fn every_policy_uses_every_chip_under_saturation() {
+        let engine = Engine::builtin();
+        for policy in RoutingPolicy::all() {
+            let cfg = fleet_cfg(4, policy);
+            let t = simulate_fleet(&engine, &cfg);
+            let mut used = vec![false; 4];
+            for j in &t.jobs {
+                used[j.chip] = true;
+            }
+            assert!(used.iter().all(|&u| u), "{policy}: idle chip — {used:?}");
+        }
+    }
+
+    #[test]
+    fn fleet_timeline_is_deterministic_and_ignores_executor_threads() {
+        let engine = Engine::builtin();
+        let cfg = fleet_cfg(2, RoutingPolicy::HealthWeighted);
+        let mut other = fleet_cfg(2, RoutingPolicy::HealthWeighted);
+        other.executor_threads = 7;
+        let a = simulate_fleet(&engine, &cfg);
+        let b = simulate_fleet(&engine, &other);
+        assert_eq!(a.requests, b.requests);
+        assert_eq!(a.total_cycles, b.total_cycles);
+        assert_eq!(a.events, b.events);
+    }
+
+    #[test]
+    fn more_chips_never_slow_the_run_down() {
+        let engine = Engine::builtin();
+        let mut one = fleet_cfg(1, RoutingPolicy::RoundRobin);
+        one.total_requests = 32;
+        let mut four = fleet_cfg(4, RoutingPolicy::RoundRobin);
+        four.total_requests = 32;
+        let t1 = simulate_fleet(&engine, &one);
+        let t4 = simulate_fleet(&engine, &four);
+        assert!(
+            t4.total_cycles <= t1.total_cycles,
+            "4 chips {} vs 1 chip {}",
+            t4.total_cycles,
+            t1.total_cycles
+        );
+    }
+
+    #[test]
+    fn heterogeneous_arrays_are_supported_and_fast_chips_work_more() {
+        let engine = Engine::builtin();
+        let mut cfg = fleet_cfg(2, RoutingPolicy::HealthWeighted);
+        cfg.chips = vec![
+            ChipSpec { dims: Dims::new(8, 8), lanes: 2 },
+            ChipSpec { dims: Dims::new(16, 16), lanes: 2 },
+        ];
+        cfg.total_requests = 48;
+        cfg.clients = 12;
+        cfg.queue_cap = 12;
+        let t = simulate_fleet(&engine, &cfg);
+        let mut per_chip = [0usize; 2];
+        for j in &t.jobs {
+            per_chip[j.chip] += j.job.image_idxs.len();
+        }
+        assert_eq!(per_chip[0] + per_chip[1], 48);
+        assert!(
+            per_chip[1] > per_chip[0],
+            "the faster 16x16 chip should absorb more traffic: {per_chip:?}"
+        );
+    }
+
+    #[test]
+    fn drained_chips_dispatch_nothing_while_others_are_healthy() {
+        let engine = Engine::builtin();
+        let mut cfg = fleet_cfg(3, RoutingPolicy::HealthWeighted);
+        cfg.seed = 5;
+        cfg.total_requests = 96;
+        cfg.faults = Some(FaultPlan {
+            mean_interarrival_cycles: 5_000.0,
+            horizon_cycles: 50_000,
+            scan_period_cycles: 4_000,
+            group_width: 8,
+            fpt_capacity: 8,
+            max_arrivals: 6,
+        });
+        cfg.drain_threshold = 1;
+        let t = simulate_fleet(&engine, &cfg);
+        assert_eq!(t.requests.len(), 96, "zero dropped requests");
+        // a job may start on a drained chip only if no chip was healthy
+        for j in &t.jobs {
+            let start = j.job.start_cycle;
+            if !t.chip_state[j.chip].healthy_at(start) {
+                assert!(
+                    t.chip_state.iter().all(|c| !c.healthy_at(start)),
+                    "chip {} dispatched at {} while drained although a \
+                     healthy chip existed",
+                    j.chip,
+                    start
+                );
+            }
+        }
+        // with threshold 1 and real arrivals, somebody drained
+        assert!(
+            t.events.iter().any(|e| e.kind == FleetEventKind::Drained),
+            "expected at least one drain episode"
+        );
+    }
+}

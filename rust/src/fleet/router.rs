@@ -1,0 +1,224 @@
+//! Cluster router: pick the chip that serves each incoming request
+//! (DESIGN.md §6).
+//!
+//! Three pluggable policies, all deterministic (no RNG — routing is a
+//! pure function of the request sequence and the chips' observable
+//! state, so the fleet timeline stays a pure function of the seed):
+//!
+//! * **round-robin** — cycle through the candidate chips in order; the
+//!   baseline every sharded serving stack starts from.
+//! * **join-shortest-queue** — send the request to the candidate with
+//!   the fewest queued + in-flight requests (ties to the lowest chip
+//!   id); the classic latency-optimal heuristic under heterogeneous
+//!   load.
+//! * **health-aware weighted** — deficit-style weighted fair pick: the
+//!   candidate minimising `assigned / weight` wins, where a chip's
+//!   weight is its effective throughput `1e6 / per_image_cycles`
+//!   (images per Mcycle, straight from the [`CostModel`] /
+//!   `perfmodel` output-stationary runtime) divided by
+//!   `1 + live_faults` — so the weight decays as faults accumulate
+//!   and recovers on remap, shifting traffic away from degraded chips
+//!   *before* they cross the drain threshold.
+//!
+//! [`CostModel`]: crate::serve::CostModel
+
+use super::chip::ChipSim;
+
+/// The routing policy of a fleet run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RoutingPolicy {
+    RoundRobin,
+    JoinShortestQueue,
+    HealthWeighted,
+}
+
+impl RoutingPolicy {
+    /// Stable identifier used in tables, JSON and CLI output.
+    pub fn id(&self) -> &'static str {
+        match self {
+            RoutingPolicy::RoundRobin => "round_robin",
+            RoutingPolicy::JoinShortestQueue => "jsq",
+            RoutingPolicy::HealthWeighted => "health_weighted",
+        }
+    }
+
+    /// Every policy, in presentation order.
+    pub fn all() -> [RoutingPolicy; 3] {
+        [
+            RoutingPolicy::RoundRobin,
+            RoutingPolicy::JoinShortestQueue,
+            RoutingPolicy::HealthWeighted,
+        ]
+    }
+}
+
+impl std::fmt::Display for RoutingPolicy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.id())
+    }
+}
+
+/// Router state (the round-robin cursor is the only mutable state; the
+/// other policies read the chips' counters).
+#[derive(Debug)]
+pub struct Router {
+    policy: RoutingPolicy,
+    cursor: u64,
+}
+
+impl Router {
+    pub fn new(policy: RoutingPolicy) -> Self {
+        Self { policy, cursor: 0 }
+    }
+
+    pub fn policy(&self) -> RoutingPolicy {
+        self.policy
+    }
+
+    /// Pick the chip for one request at `now`. `candidates` is the
+    /// non-empty, ascending list of admissible chip ids (the healthy
+    /// set, or every chip when none is healthy — degraded continuity).
+    pub fn pick(&mut self, candidates: &[usize], chips: &[ChipSim], now: u64) -> usize {
+        assert!(!candidates.is_empty(), "router needs at least one candidate");
+        match self.policy {
+            RoutingPolicy::RoundRobin => {
+                let k = candidates[(self.cursor % candidates.len() as u64) as usize];
+                self.cursor += 1;
+                k
+            }
+            RoutingPolicy::JoinShortestQueue => {
+                // min (queued + in-flight), ties to the lowest id
+                let mut best = candidates[0];
+                let mut best_depth = chips[best].depth();
+                for &k in &candidates[1..] {
+                    let d = chips[k].depth();
+                    if d < best_depth {
+                        best = k;
+                        best_depth = d;
+                    }
+                }
+                best
+            }
+            RoutingPolicy::HealthWeighted => {
+                // deficit-weighted fair: min assigned / weight(now),
+                // ties to the lowest id (strict `<` over ascending ids)
+                let mut best = candidates[0];
+                let mut best_cost = deficit_cost(&chips[best], now);
+                for &k in &candidates[1..] {
+                    let c = deficit_cost(&chips[k], now);
+                    if c < best_cost {
+                        best = k;
+                        best_cost = c;
+                    }
+                }
+                best
+            }
+        }
+    }
+}
+
+/// Deficit of a chip under the health-aware policy: requests already
+/// assigned per unit of current effective weight (lower = hungrier).
+fn deficit_cost(chip: &ChipSim, now: u64) -> f64 {
+    (chip.assigned as f64 + 1.0) / chip.effective_weight(now)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::array::Dims;
+    use crate::fleet::chip::ChipSim;
+    use crate::fleet::ChipSpec;
+    use crate::inference::masks::ModelGeometry;
+    use crate::inference::ModelParams;
+
+    fn chips(dims_list: &[Dims]) -> Vec<ChipSim> {
+        let params = ModelParams::synthetic(0xBEEF);
+        let g = ModelGeometry::default();
+        dims_list
+            .iter()
+            .map(|&dims| ChipSim::healthy(&params, &g, ChipSpec { dims, lanes: 2 }))
+            .collect()
+    }
+
+    #[test]
+    fn round_robin_cycles_the_candidates() {
+        let cs = chips(&[Dims::new(8, 8); 3]);
+        let mut r = Router::new(RoutingPolicy::RoundRobin);
+        let picks: Vec<usize> = (0..6).map(|_| r.pick(&[0, 1, 2], &cs, 0)).collect();
+        assert_eq!(picks, vec![0, 1, 2, 0, 1, 2]);
+        // candidate set shrinks (chip 1 drained): the cursor keeps
+        // advancing over the remaining set
+        let picks: Vec<usize> = (0..4).map(|_| r.pick(&[0, 2], &cs, 0)).collect();
+        assert_eq!(picks, vec![0, 2, 0, 2]);
+    }
+
+    #[test]
+    fn jsq_prefers_the_shortest_queue_with_low_id_ties() {
+        let mut cs = chips(&[Dims::new(8, 8); 3]);
+        let mut r = Router::new(RoutingPolicy::JoinShortestQueue);
+        // all empty → lowest id
+        assert_eq!(r.pick(&[0, 1, 2], &cs, 0), 0);
+        cs[0].assigned = 2;
+        cs[0].batcher.push(0, 10);
+        cs[0].batcher.push(0, 11);
+        cs[1].in_flight = 1;
+        // depths: 2, 1, 0 → chip 2
+        assert_eq!(r.pick(&[0, 1, 2], &cs, 0), 2);
+        // restricted candidates: chip 1 beats chip 0
+        assert_eq!(r.pick(&[0, 1], &cs, 0), 1);
+    }
+
+    #[test]
+    fn health_weighted_prefers_fast_and_healthy_chips() {
+        // chip 1 is a bigger array → cheaper per image → higher weight
+        let cs = chips(&[Dims::new(8, 8), Dims::new(16, 16)]);
+        assert!(cs[1].effective_weight(0) > cs[0].effective_weight(0));
+        let mut r = Router::new(RoutingPolicy::HealthWeighted);
+        // with equal deficits the heavier chip wins more often: over 12
+        // picks the weight ratio shows up in the assignment counts
+        let mut cs = cs;
+        let mut counts = [0usize; 2];
+        for _ in 0..12 {
+            let k = r.pick(&[0, 1], &cs, 0);
+            counts[k] += 1;
+            cs[k].assigned += 1;
+        }
+        assert_eq!(counts.iter().sum::<usize>(), 12);
+        assert!(
+            counts[1] > counts[0],
+            "faster chip must absorb more traffic: {counts:?}"
+        );
+    }
+
+    #[test]
+    fn health_weighted_decays_with_live_faults() {
+        use crate::fleet::lifecycle::Lifecycle;
+        use crate::serve::scan_agent::{EventKind, TimelineEvent};
+        let mut cs = chips(&[Dims::new(8, 8), Dims::new(8, 8)]);
+        // chip 0 carries two live faults from cycle 100 on
+        cs[0].lifecycle = Lifecycle::new(
+            &[
+                TimelineEvent {
+                    cycle: 100,
+                    kind: EventKind::FaultArrival(crate::faults::Coord::new(0, 0)),
+                },
+                TimelineEvent {
+                    cycle: 100,
+                    kind: EventKind::FaultArrival(crate::faults::Coord::new(1, 1)),
+                },
+            ],
+            crate::fleet::lifecycle::NEVER_DRAIN,
+        );
+        let w_before = cs[0].effective_weight(0);
+        let w_after = cs[0].effective_weight(100);
+        assert!((w_before / w_after - 3.0).abs() < 1e-9, "1 + live = 3");
+        // identical chips, equal deficits: the faulty one is avoided
+        let mut r = Router::new(RoutingPolicy::HealthWeighted);
+        cs[0].assigned = 5;
+        cs[1].assigned = 5;
+        assert_eq!(r.pick(&[0, 1], &cs, 200), 1);
+        // before the faults arrived the tie breaks to the lower id
+        assert_eq!(r.pick(&[0, 1], &cs, 0), 0);
+    }
+}

@@ -26,7 +26,10 @@
 //! Beyond the paper's artefacts, [`serve`] runs the engine as a
 //! long-lived fault-tolerant service — dynamic batching, a
 //! multi-threaded worker pool, and online scan-and-repair under live
-//! traffic (`repro serve`, DESIGN.md §5).
+//! traffic (`repro serve`, DESIGN.md §5) — and [`fleet`] scales that
+//! to a multi-chip cluster: sharded serving across independently
+//! failing chips behind a health-aware router with drain/re-admit
+//! fault-domain isolation (`repro fleet`, DESIGN.md §6).
 //!
 //! Start at [`coordinator`] for the experiment registry, or run
 //! `cargo run --release -- list`.
@@ -36,6 +39,7 @@ pub mod array;
 pub mod benchkit;
 pub mod coordinator;
 pub mod faults;
+pub mod fleet;
 pub mod hyca;
 pub mod inference;
 pub mod perfmodel;

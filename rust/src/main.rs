@@ -2,10 +2,12 @@
 //!
 //! ```text
 //! repro list                      # experiments and what they reproduce
-//! repro exp <id> [flags]         # run one experiment (fig2..fig15, table1, serve)
+//! repro exp <id> [flags]         # run one experiment (fig2..fig15, table1, serve, fleet)
 //! repro all [flags]              # run every experiment
 //! repro serve [flags]            # serving benchmark grid + fault scenario;
 //!                                #   writes BENCH_serve.json (run from repo root)
+//! repro fleet [flags]            # multi-chip fleet grid + drain scenario;
+//!                                #   writes BENCH_fleet.json (run from repo root)
 //! repro info                     # artifact status + active backend
 //!
 //! flags: --configs N   Monte-Carlo configs per point (default 10000)
@@ -15,10 +17,13 @@
 //!        --fast        reduced sweep for quick iteration
 //!        --builtin     force the builtin synthetic model (ignore artifacts)
 //!
-//! serve-only flags:
+//! serve/fleet-only flags:
 //!        --workers N   executor thread-pool width (metrics are byte-identical
-//!                      at any value — the determinism golden test asserts it)
-//!        --smoke       reduced serving grid for CI
+//!                      at any value — the determinism golden tests assert it)
+//!        --smoke       reduced grid for CI
+//! fleet-only flags:
+//!        --chips N     restrict the fleet grid to one cluster size
+//!                      (default sweep: {1, 2, 4, 8} chips × routing policy)
 //! ```
 
 use anyhow::{bail, Context, Result};
@@ -68,6 +73,62 @@ fn serve_flag_specs() -> Vec<FlagSpec> {
         help: "reduced serving grid for CI",
     });
     specs
+}
+
+fn fleet_flag_specs() -> Vec<FlagSpec> {
+    let mut specs = serve_flag_specs();
+    specs.push(FlagSpec {
+        name: "chips",
+        takes_value: true,
+        help: "restrict the fleet grid to one cluster size",
+    });
+    specs
+}
+
+fn cmd_fleet(rest: &[String]) -> Result<()> {
+    let args = Args::parse(rest, &fleet_flag_specs())?;
+    let mut opts = opts_from(&args)?;
+    opts.threads = args.get_parse("workers", opts.threads)?;
+    let smoke = args.has("smoke") || opts.fast;
+    let chips: Option<usize> = match args.get("chips") {
+        Some(_) => Some(args.get_parse("chips", 0usize)?),
+        None => None,
+    };
+    if let Some(n) = chips {
+        anyhow::ensure!(n >= 1, "--chips must be at least 1");
+    }
+    eprintln!(
+        "[repro] fleet — grid {} + drain scenario (seed={:#x}, executor workers={}{})",
+        if smoke { "smoke" } else { "full" },
+        opts.seed,
+        opts.threads,
+        match chips {
+            Some(n) => format!(", chips={n}"),
+            None => String::new(),
+        }
+    );
+    let t0 = std::time::Instant::now();
+    let (tables, json) = coordinator::exp_fleet::run_full(&opts, smoke, chips)?;
+    report::emit(&opts.out_dir, "fleet", &tables)?;
+    if chips.is_none() {
+        // The machine-readable perf baseline lands in the current
+        // directory — run from the repo root so trajectories accumulate
+        // in one place. A --chips-restricted grid is NOT the baseline
+        // (it would silently clobber the full sweep), so it is only
+        // printed as tables.
+        std::fs::write("BENCH_fleet.json", &json).context("writing BENCH_fleet.json")?;
+        eprintln!(
+            "[repro] fleet done in {:.1}s — baseline written to BENCH_fleet.json",
+            t0.elapsed().as_secs_f64()
+        );
+    } else {
+        eprintln!(
+            "[repro] fleet done in {:.1}s — --chips restricts the grid, \
+             BENCH_fleet.json left untouched (rerun without --chips to regenerate)",
+            t0.elapsed().as_secs_f64()
+        );
+    }
+    Ok(())
 }
 
 fn cmd_serve(rest: &[String]) -> Result<()> {
@@ -155,12 +216,13 @@ fn main() -> Result<()> {
         println!(
             "{}",
             format!(
-                "{}\nserve-only flags (rejected by other commands):\n  \
+                "{}\nserve/fleet-only flags (rejected by other commands):\n  \
                  --workers <value>  executor thread-pool width (metrics \
                  identical at any value)\n  --smoke            reduced \
-                 serving grid for CI\n",
+                 grid for CI\n  --chips <value>    fleet only: restrict \
+                 the grid to one cluster size\n",
                 usage(
-                    "repro <list|exp|all|serve|info>",
+                    "repro <list|exp|all|serve|fleet|info>",
                     "HyCA reproduction CLI",
                     &flag_specs()
                 )
@@ -173,6 +235,7 @@ fn main() -> Result<()> {
         "list" => cmd_list(),
         "info" => cmd_info()?,
         "serve" => cmd_serve(rest)?,
+        "fleet" => cmd_fleet(rest)?,
         "exp" => {
             let args = Args::parse(rest, &flag_specs())?;
             let Some(id) = args.positionals.first() else {

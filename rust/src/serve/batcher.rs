@@ -64,6 +64,14 @@ impl<T> Batcher<T> {
         }
     }
 
+    /// Remove every pending request regardless of trigger state, in
+    /// FIFO order with original enqueue cycles — the fleet empties a
+    /// chip's queue for re-sharding when the chip is drained out of
+    /// service.
+    pub fn drain_all(&mut self) -> Vec<(u64, T)> {
+        self.pending.drain(..).collect()
+    }
+
     /// Release a batch at `cycle` if a trigger condition holds: size
     /// (`pending ≥ max_batch`) or deadline (oldest waited `max_wait`).
     /// Returns up to `max_batch` requests in FIFO order with their
@@ -127,6 +135,20 @@ mod tests {
         assert_eq!(b.ready_at(), Some(107), "deadline of the oldest");
         b.push(9, 1);
         assert_eq!(b.ready_at(), Some(7), "size trigger holds already");
+    }
+
+    #[test]
+    fn drain_all_empties_in_fifo_order() {
+        let mut b = Batcher::new(4, 1_000);
+        b.push(5, 'a');
+        b.push(9, 'b');
+        b.push(9, 'c');
+        assert_eq!(b.drain_all(), vec![(5, 'a'), (9, 'b'), (9, 'c')]);
+        assert!(b.is_empty());
+        assert_eq!(b.drain_all(), vec![]);
+        // the batcher keeps working after a drain
+        b.push(20, 'd');
+        assert_eq!(b.ready_at(), Some(1_020));
     }
 
     #[test]

@@ -9,6 +9,7 @@
 //! scheduling interleaving, which is exactly the invariance the serve
 //! property tests pin.
 
+use std::borrow::Borrow;
 use std::sync::{Arc, Mutex};
 
 use anyhow::{Context, Result};
@@ -19,12 +20,20 @@ use crate::inference::Engine;
 
 /// Execute every job; returns per-job prediction vectors (one
 /// prediction per batch slot), in job-id order.
-pub fn execute(
+///
+/// Generic over borrowed jobs so multi-chip callers (`crate::fleet`)
+/// can execute `&[&BatchJob]` views into their own job structures on
+/// the same pool without cloning — one pool serves any number of
+/// simulated chips because every job carries its own masks.
+pub fn execute<J>(
     engine: &Arc<Engine>,
-    jobs: &[BatchJob],
+    jobs: &[J],
     executor_threads: usize,
     queue_cap: usize,
-) -> Result<Vec<Vec<usize>>> {
+) -> Result<Vec<Vec<usize>>>
+where
+    J: Borrow<BatchJob> + Sync,
+{
     if jobs.is_empty() {
         return Ok(Vec::new());
     }
@@ -65,7 +74,7 @@ pub fn execute(
             });
         }
         for (idx, job) in jobs.iter().enumerate() {
-            if queue_ref.push((idx, job)).is_err() {
+            if queue_ref.push((idx, job.borrow())).is_err() {
                 break; // queue closed early — cannot happen today
             }
         }
@@ -138,6 +147,18 @@ mod tests {
     #[test]
     fn empty_job_list_is_fine() {
         let engine = engine();
-        assert!(execute(&engine, &[], 3, 4).unwrap().is_empty());
+        assert!(execute::<BatchJob>(&engine, &[], 3, 4).unwrap().is_empty());
+    }
+
+    #[test]
+    fn borrowed_job_views_execute_identically() {
+        // the fleet passes &[&BatchJob] views into its own job records;
+        // results must match executing the owned slice
+        let engine = engine();
+        let timeline = simulate_timeline(&engine, &cfg());
+        let owned = execute(&engine, &timeline.jobs, 2, 4).unwrap();
+        let refs: Vec<&BatchJob> = timeline.jobs.iter().collect();
+        let borrowed = execute(&engine, &refs, 3, 4).unwrap();
+        assert_eq!(owned, borrowed);
     }
 }

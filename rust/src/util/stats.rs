@@ -209,7 +209,12 @@ impl LogHistogram {
         self.max
     }
 
-    /// Merge another histogram into this one (same fixed bucketing).
+    /// Merge another histogram into this one: exact bucket-wise count
+    /// sum plus exact total/sum/min/max propagation (both sides share
+    /// the fixed bucketing, so merging N per-chip histograms and
+    /// recording all N streams into one histogram are byte-identical —
+    /// the property `crate::fleet::metrics` relies on for cluster-level
+    /// p50/p99).
     pub fn merge(&mut self, other: &LogHistogram) {
         for (a, b) in self.counts.iter_mut().zip(&other.counts) {
             *a += b;
@@ -354,5 +359,35 @@ mod tests {
         }
         a.merge(&b);
         assert_eq!(a, c);
+    }
+
+    #[test]
+    fn histogram_merge_edge_cases() {
+        // empty ⊕ empty = empty; x ⊕ empty = x; empty ⊕ x = x
+        let mut e = LogHistogram::new();
+        e.merge(&LogHistogram::new());
+        assert!(e.is_empty());
+        let mut x = LogHistogram::new();
+        x.record(100);
+        x.record(7);
+        let snapshot = x.clone();
+        x.merge(&LogHistogram::new());
+        assert_eq!(x, snapshot);
+        let mut y = LogHistogram::new();
+        y.merge(&snapshot);
+        assert_eq!(y, snapshot);
+        // min/max/mean are exact across the merge
+        let mut z = LogHistogram::new();
+        z.record(1_000_000);
+        y.merge(&z);
+        assert_eq!(y.min(), 7);
+        assert_eq!(y.max(), 1_000_000);
+        assert_eq!(y.count(), 3);
+        assert!((y.mean() - (7.0 + 100.0 + 1_000_000.0) / 3.0).abs() < 1e-9);
+        // quantiles come from the merged counts (top quantile lands in
+        // the max value's bucket: within one sub-bucket below the max)
+        assert_eq!(y.quantile(0.0), 7);
+        let top = y.quantile(1.0);
+        assert!(top <= y.max() && top >= y.max() - (y.max() >> 3), "top {top}");
     }
 }

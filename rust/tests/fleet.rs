@@ -1,0 +1,230 @@
+//! Fleet-subsystem acceptance tests.
+//!
+//! 1. **Golden determinism**: the `BENCH_fleet.json` metrics are a
+//!    pure function of the master seed — byte-identical at any
+//!    `--workers` (executor thread) value and across repeated runs.
+//! 2. **Degeneracy**: a 1-chip fleet under round-robin routing
+//!    reproduces `serve` exactly — per-request predictions and the
+//!    full cycle timeline (see also the property test in
+//!    `rust/tests/proptests.rs`, which sweeps random configurations).
+//! 3. **Drain scenario**: a chip crossing the live-fault threshold is
+//!    drained out of the serving set, repaired by its scan agent,
+//!    re-admitted — and the fleet serves every request with accuracy
+//!    returning to exactly 1.0. Which seed shows the full story
+//!    depends on where the faults land, so the test scans a handful of
+//!    seeds for observability (never for the outcome) exactly like the
+//!    serve scenario test.
+
+use hyca::coordinator::{exp_fleet, exp_serve, RunOpts};
+use hyca::fleet::{self, FleetConfig, FleetEventKind, RoutingPolicy};
+use hyca::inference::Engine;
+use hyca::serve;
+use std::sync::Arc;
+
+fn opts(seed: u64, threads: usize) -> RunOpts {
+    RunOpts {
+        seed,
+        threads,
+        out_dir: std::env::temp_dir().join("hyca_fleet_results"),
+        builtin_model: true,
+        ..RunOpts::default()
+    }
+}
+
+#[test]
+fn bench_json_is_byte_identical_at_any_executor_width() {
+    let narrow = exp_fleet::bench_json(&opts(0xC0FFEE, 1), true).unwrap();
+    let wide = exp_fleet::bench_json(&opts(0xC0FFEE, 4), true).unwrap();
+    assert_eq!(
+        narrow, wide,
+        "executor width leaked into the fleet metrics"
+    );
+    // repeat run: byte-identical again
+    let again = exp_fleet::bench_json(&opts(0xC0FFEE, 1), true).unwrap();
+    assert_eq!(narrow, again);
+    // and the seed actually matters
+    let other = exp_fleet::bench_json(&opts(0xBEEF, 1), true).unwrap();
+    assert_ne!(narrow, other);
+}
+
+#[test]
+fn bench_json_has_the_documented_schema() {
+    let json = exp_fleet::bench_json(&opts(0xC0FFEE, 2), true).unwrap();
+    for key in [
+        "\"schema\": \"hyca-fleet-bench-v1\"",
+        "\"grid\": [",
+        "\"chips\": 1",
+        "\"chips\": 4",
+        "\"policy\": \"round_robin\"",
+        "\"policy\": \"jsq\"",
+        "\"policy\": \"health_weighted\"",
+        "\"throughput_imgs_per_mcycle\":",
+        "\"p50_cycles\":",
+        "\"p99_cycles\":",
+        "\"accuracy\":",
+    ] {
+        assert!(json.contains(key), "missing {key} in:\n{json}");
+    }
+    // no wall-clock fields, ever
+    for forbidden in ["seconds", "wall", "ns_per"] {
+        assert!(!json.contains(forbidden), "wall-clock field {forbidden:?}");
+    }
+}
+
+#[test]
+fn one_chip_fleet_matches_serve_predictions_and_timeline() {
+    // the degeneracy acceptance criterion, end to end on the exact
+    // serve scenario configuration (mid-run faults included)
+    let engine = Arc::new(Engine::builtin());
+    let serve_cfg = exp_serve::scenario_config(0xC0FFEE, true, 2);
+    let serve_report = serve::run(&engine, &serve_cfg).unwrap();
+    let fleet_report = fleet::run(&engine, &FleetConfig::degenerate(&serve_cfg)).unwrap();
+    assert_eq!(fleet_report.predictions, serve_report.predictions);
+    assert_eq!(fleet_report.correct, serve_report.correct);
+    assert_eq!(fleet_report.accuracy, serve_report.accuracy);
+    assert_eq!(fleet_report.total_cycles, serve_report.total_cycles);
+    assert_eq!(fleet_report.batches, serve_report.batches);
+    assert_eq!(fleet_report.max_pending, serve_report.max_pending);
+    assert_eq!(fleet_report.unrepaired, serve_report.unrepaired);
+    assert_eq!(
+        fleet_report.latency_cycles, serve_report.latency_cycles,
+        "the 1-chip cluster histogram is serve's histogram"
+    );
+    // window accounting agrees (same cycle timeline, same windowing)
+    assert_eq!(fleet_report.windows.len(), serve_report.windows.len());
+    for (fw, sw) in fleet_report.windows.iter().zip(&serve_report.windows) {
+        assert_eq!((fw.start_cycle, fw.end_cycle), (sw.start_cycle, sw.end_cycle));
+        assert_eq!((fw.requests, fw.correct), (sw.requests, sw.correct));
+    }
+}
+
+#[test]
+fn scenario_report_is_invariant_to_executor_width() {
+    let a = exp_fleet::scenario_report(&opts(0xC0FFEE, 1), true).unwrap();
+    let b = exp_fleet::scenario_report(&opts(0xC0FFEE, 5), true).unwrap();
+    assert_eq!(a.digest(), b.digest());
+}
+
+#[test]
+fn drain_scenario_drains_repairs_readmits_and_recovers_exactly() {
+    // Find a seed whose fault draw tells the whole story: a chip
+    // crosses the threshold (drain + later re-admission), at least one
+    // prediction visibly flips, every fault is repaired, and the last
+    // detection lands early enough that recovery is temporally possible
+    // within the run. Given such a seed, exact recovery and zero drops
+    // are *structural* properties the assertions verify — the search
+    // only selects observability, never the outcome.
+    let mut hit = None;
+    for seed in 0..48u64 {
+        let report = exp_fleet::scenario_report(&opts(seed, 2), true).unwrap();
+        let drained = report
+            .events
+            .iter()
+            .any(|e| e.kind == FleetEventKind::Drained);
+        let readmitted = report
+            .events
+            .iter()
+            .any(|e| e.kind == FleetEventKind::Readmitted);
+        let dipped = report
+            .windows
+            .iter()
+            .any(|w| w.accuracy().map(|a| a < 1.0).unwrap_or(false));
+        let window_len = report.windows[0].end_cycle - report.windows[0].start_cycle;
+        let timely = report
+            .events
+            .iter()
+            .filter(|e| matches!(e.kind, FleetEventKind::ScanDetection(_)))
+            .map(|e| e.cycle)
+            .max()
+            .map(|last| last + 3 * window_len <= report.total_cycles)
+            .unwrap_or(false);
+        if drained && readmitted && dipped && report.unrepaired == 0 && timely {
+            hit = Some((seed, report));
+            break;
+        }
+    }
+    let (seed, report) = hit.expect(
+        "no seed in 0..48 produced a drained+readmitted chip with a visible, \
+         timely-repaired dip — scenario broken",
+    );
+
+    // zero dropped requests: the closed loop served its whole budget
+    assert_eq!(report.total_requests, report.predictions.len());
+    assert_eq!(report.latency_cycles.count() as usize, report.total_requests);
+    let per_chip: usize = report.per_chip.iter().map(|c| c.requests).sum();
+    assert_eq!(per_chip, report.total_requests, "seed {seed}: requests lost");
+
+    // lifecycle story, in order: some chip's drain precedes its
+    // re-admission, and a detection lands in between (repair while out
+    // of service)
+    let drain = report
+        .events
+        .iter()
+        .find(|e| e.kind == FleetEventKind::Drained)
+        .unwrap();
+    let readmit = report
+        .events
+        .iter()
+        .find(|e| e.chip == drain.chip && e.kind == FleetEventKind::Readmitted)
+        .expect("the drained chip must be re-admitted");
+    assert!(drain.cycle < readmit.cycle);
+    assert!(
+        report.events.iter().any(|e| e.chip == drain.chip
+            && matches!(e.kind, FleetEventKind::ScanDetection(_))
+            && e.cycle > drain.cycle
+            && e.cycle <= readmit.cycle),
+        "seed {seed}: re-admission must follow a scan repair"
+    );
+    // the drained chip shows up in the availability accounting
+    assert!(report.availability() < 1.0, "seed {seed}");
+    assert!(report.per_chip[drain.chip].drains >= 1);
+
+    // every fault repaired, and accuracy returns to exactly 1.0
+    assert_eq!(report.unrepaired, 0, "seed {seed}");
+    assert_eq!(
+        report.final_window_accuracy(),
+        Some(1.0),
+        "seed {seed}: fleet accuracy did not recover to exactly 1.0"
+    );
+    // the disturbance is real but bounded
+    assert!(report.accuracy < 1.0);
+    assert!(report.accuracy > 0.25, "seed {seed}: dip, not outage");
+}
+
+#[test]
+fn fleet_experiment_tables_render() {
+    let (tables, json) = exp_fleet::run_full(&opts(0xC0FFEE, 2), true, None).unwrap();
+    assert_eq!(tables.len(), 4);
+    let grid = tables[0].to_markdown();
+    assert!(grid.contains("imgs_per_Mcycle") && grid.contains("policy"));
+    let timeline = tables[1].to_markdown();
+    assert!(timeline.contains("availability") && timeline.contains("goodput"));
+    let chips = tables[2].to_markdown();
+    assert!(chips.contains("drained_kcycles"));
+    let summary = tables[3].to_markdown();
+    assert!(summary.contains("recovered_exactly") && summary.contains("drain_episodes"));
+    assert!(json.starts_with("{\n"));
+}
+
+#[test]
+fn chips_override_restricts_the_grid() {
+    let (tables, json) = exp_fleet::run_full(&opts(0xC0FFEE, 2), true, Some(2)).unwrap();
+    let grid = tables[0].to_markdown();
+    assert!(json.contains("\"chips\": 2"));
+    assert!(!json.contains("\"chips\": 1") && !json.contains("\"chips\": 4"));
+    assert!(grid.contains("round_robin") && grid.contains("health_weighted"));
+}
+
+#[test]
+fn routing_policies_agree_on_totals_but_not_necessarily_on_latency() {
+    // same cluster, same load, three policies: every request served
+    // under each, perfect accuracy when fault-free
+    let engine = Arc::new(Engine::builtin());
+    for policy in RoutingPolicy::all() {
+        let cfg = exp_fleet::fleet_cell(7, 4, policy, true, 2);
+        let report = fleet::run(&engine, &cfg).unwrap();
+        assert_eq!(report.total_requests, cfg.total_requests, "{policy}");
+        assert_eq!(report.accuracy, 1.0, "{policy}");
+        assert_eq!(report.availability(), 1.0, "{policy}");
+    }
+}

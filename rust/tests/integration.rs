@@ -195,5 +195,6 @@ fn all_simulation_experiments_run() {
 fn cli_registry_contract() {
     assert!(find("table1").is_some());
     assert!(find("serve").is_some());
-    assert_eq!(registry().len(), 11);
+    assert!(find("fleet").is_some());
+    assert_eq!(registry().len(), 12);
 }

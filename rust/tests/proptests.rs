@@ -501,3 +501,63 @@ fn prop_serve_batched_equals_sequential_and_is_worker_invariant() {
         assert_eq!(narrow.digest(), wide.digest());
     });
 }
+
+#[test]
+fn prop_one_chip_fleet_degenerates_to_serve() {
+    // The fleet degeneracy contract: for random serving configurations
+    // — load shape, batcher settings, lanes, and optional mid-run
+    // fault plans — a 1-chip fleet under round-robin routing with
+    // draining disabled reproduces `serve` exactly: same request
+    // records (cycle timeline) and same per-request predictions.
+    check("1-chip fleet == serve", 8, |g| {
+        let engine = std::sync::Arc::new(hyca::inference::Engine::builtin());
+        let max_batch = g.usize_in(1, 5);
+        let lanes = g.usize_in(1, 3);
+        let clients = g.usize_in(1, 6).max(lanes);
+        let faults = if g.bool(0.5) {
+            Some(hyca::serve::FaultPlan {
+                mean_interarrival_cycles: g.usize_in(2_000, 30_000) as f64,
+                horizon_cycles: g.usize_in(0, 60_000) as u64,
+                scan_period_cycles: g.usize_in(1_000, 8_000) as u64,
+                group_width: 8,
+                fpt_capacity: g.usize_in(1, 8),
+                max_arrivals: g.usize_in(0, 6),
+            })
+        } else {
+            None
+        };
+        let cfg = hyca::serve::ServeConfig {
+            seed: g.usize_in(0, 1 << 20) as u64,
+            dims: Dims::new(8, 8),
+            lanes,
+            max_batch,
+            max_wait_cycles: g.usize_in(0, 10_000) as u64,
+            clients,
+            think_cycles: g.usize_in(0, 2_000) as u64,
+            total_requests: g.usize_in(4, 24),
+            queue_cap: clients,
+            executor_threads: 2,
+            windows: g.usize_in(1, 6),
+            faults,
+        };
+        let serve_t = hyca::serve::simulate_timeline(&engine, &cfg);
+        let fleet_t =
+            hyca::fleet::simulate_fleet(&engine, &hyca::fleet::FleetConfig::degenerate(&cfg));
+        assert_eq!(fleet_t.requests, serve_t.requests, "cycle timelines diverged");
+        assert_eq!(fleet_t.total_cycles, serve_t.total_cycles);
+        assert_eq!(fleet_t.jobs.len(), serve_t.jobs.len());
+        for (f, s) in fleet_t.jobs.iter().zip(&serve_t.jobs) {
+            assert_eq!(f.chip, 0);
+            assert_eq!(f.job.image_idxs, s.image_idxs);
+            assert_eq!((f.job.start_cycle, f.job.end_cycle), (s.start_cycle, s.end_cycle));
+            assert_eq!(f.job.lane, s.lane);
+            assert_eq!(*f.job.masks, *s.masks, "mask epochs diverged");
+        }
+        // end to end: identical predictions
+        let serve_report = hyca::serve::run(&engine, &cfg).unwrap();
+        let fleet_report = hyca::fleet::run(&engine, &hyca::fleet::FleetConfig::degenerate(&cfg))
+            .unwrap();
+        assert_eq!(fleet_report.predictions, serve_report.predictions);
+        assert_eq!(fleet_report.accuracy, serve_report.accuracy);
+    });
+}
