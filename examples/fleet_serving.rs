@@ -38,12 +38,13 @@ fn main() -> anyhow::Result<()> {
     let cfg = exp_fleet::scenario_config(seed, false, workers);
     println!("== fleet configuration ==");
     println!(
-        "chips {} (each {} with {} lanes) | policy {} | drain threshold {} live faults",
+        "chips {} (each {} with {} lanes) | policy {} | drain at {} live faults (re-admit below {})",
         cfg.chips.len(),
         cfg.chips[0].dims,
         cfg.chips[0].lanes,
         cfg.policy,
-        cfg.drain_threshold
+        cfg.lifecycle.drain_enter,
+        cfg.lifecycle.drain_exit
     );
     println!(
         "clients {} | max_batch {} | requests {} | executor: {workers} worker threads",
@@ -86,7 +87,7 @@ fn main() -> anyhow::Result<()> {
             ),
             FleetEventKind::Drained => println!(
                 "  cycle {:>8}  chip {}: DRAINED (live faults ≥ {}) — traffic re-sharded",
-                e.cycle, e.chip, cfg.drain_threshold
+                e.cycle, e.chip, cfg.lifecycle.drain_enter
             ),
             FleetEventKind::Readmitted => println!(
                 "  cycle {:>8}  chip {}: RE-ADMITTED — router restores its share",

@@ -1,14 +1,25 @@
 //! `fleet` — the multi-chip sharded-serving experiment (`repro
-//! fleet`): a scaling grid over cluster size × routing policy, plus
-//! the drain/re-admit scenario — a chip crosses the live-fault
-//! threshold, is drained out of the serving set, repaired by its scan
-//! agent, re-admitted, and the fleet recovers to exactly 1.0 accuracy
-//! with zero dropped requests.
+//! fleet`): a scaling grid over cluster size × routing policy, a
+//! mixed-fleet grid over heterogeneous array sizes with a
+//! routing-quality metric, plus the drain/re-admit scenario — a chip
+//! crosses the live-fault threshold, is drained out of the serving
+//! set, repaired by its scan agent, re-admitted, and the fleet
+//! recovers to exactly 1.0 accuracy with zero dropped requests.
+//!
+//! This driver is *thin*: it owns no experiment configuration. The
+//! scaling grid is the `fleet_default` scenario preset, the
+//! heterogeneous grid is `mixed_fleet`, and the drain scenario is
+//! `degraded_continuity` (`crate::scenario::presets`); everything
+//! lowers into [`FleetConfig`]s through `scenario::lower`, so `repro
+//! fleet` and `repro scenario fleet_default` are the same computation
+//! — the compatibility bar `rust/tests/scenario.rs` pins byte-exactly
+//! (the `grid` section of `BENCH_fleet.json` is unchanged from schema
+//! v1; v2 adds the `mixed_fleet` section).
 //!
 //! Always runs on the **builtin** engine (same rationale as
 //! `exp_serve`): exact recovery is a bit-exactness contract of the
 //! synthetic argmax labels, and the machine-readable baseline
-//! (`BENCH_fleet.json`, schema `hyca-fleet-bench-v1`) must never
+//! (`BENCH_fleet.json`, schema `hyca-fleet-bench-v2`) must never
 //! depend on local artifact state.
 //!
 //! Determinism contract (asserted by `rust/tests/fleet.rs`): the JSON
@@ -19,44 +30,31 @@
 use std::sync::Arc;
 
 use super::{Experiment, RunOpts};
-use crate::array::Dims;
 use crate::fleet::metrics::FleetReport;
-use crate::fleet::{self, ChipSpec, FleetConfig, FleetEventKind, RoutingPolicy, NEVER_DRAIN};
+use crate::fleet::{self, FleetConfig, FleetEventKind, RoutingPolicy};
 use crate::inference::Engine;
-use crate::serve::FaultPlan;
+use crate::scenario::{self, topology_label, Cell, ScenarioSpec};
 use crate::util::table::{f, Table};
 use anyhow::Result;
 
 pub struct FleetExp;
 
-/// Full grid: cluster sizes × every routing policy.
-pub const GRID_CHIPS: [usize; 4] = [1, 2, 4, 8];
-/// Reduced grid for `--smoke` / `--fast` (CI).
-pub const SMOKE_CHIPS: [usize; 2] = [1, 4];
-
-fn grid(smoke: bool, chips_override: Option<usize>) -> Vec<(usize, RoutingPolicy)> {
-    let sizes: Vec<usize> = match chips_override {
-        Some(n) => vec![n],
-        None => {
-            if smoke {
-                SMOKE_CHIPS.to_vec()
-            } else {
-                GRID_CHIPS.to_vec()
-            }
-        }
-    };
-    let mut cells = Vec::new();
-    for &n in &sizes {
-        for policy in RoutingPolicy::all() {
-            cells.push((n, policy));
-        }
-    }
-    cells
+fn fleet_default() -> ScenarioSpec {
+    scenario::preset("fleet_default").expect("fleet_default preset is registered")
 }
 
-/// One fault-free grid cell: `n_chips` homogeneous 8×8 chips with two
-/// lanes each; clients scale with cluster capacity so every chip stays
-/// saturated and the comparison isolates routing + scale. Public so
+fn mixed_fleet() -> ScenarioSpec {
+    scenario::preset("mixed_fleet").expect("mixed_fleet preset is registered")
+}
+
+fn degraded_continuity() -> ScenarioSpec {
+    scenario::preset("degraded_continuity").expect("degraded_continuity preset is registered")
+}
+
+/// One fault-free grid cell, lowered from the `fleet_default` preset:
+/// `n_chips` homogeneous 8×8 chips with two lanes each; clients scale
+/// with cluster capacity so every chip stays saturated and the
+/// comparison isolates routing + scale. Public so
 /// `benches/fleet_scale.rs` measures exactly the workload
 /// `BENCH_fleet.json` reports.
 pub fn fleet_cell(
@@ -66,67 +64,20 @@ pub fn fleet_cell(
     smoke: bool,
     threads: usize,
 ) -> FleetConfig {
-    let clients = (n_chips * 2 * 8).max(8);
-    FleetConfig {
-        seed,
-        chips: vec![
-            ChipSpec {
-                dims: Dims::new(8, 8),
-                lanes: 2,
-            };
-            n_chips
-        ],
-        policy,
-        max_batch: 8,
-        max_wait_cycles: 8_000,
-        clients,
-        think_cycles: 500,
-        total_requests: if smoke { 32 * n_chips } else { 96 * n_chips },
-        queue_cap: clients,
-        executor_threads: threads,
-        windows: 4,
-        faults: None,
-        drain_threshold: NEVER_DRAIN,
-    }
+    let spec = fleet_default();
+    let cell = Cell::base(&spec).with_chips(n_chips).with_policy(policy);
+    scenario::lower_fleet(&spec, &cell, smoke, seed, threads)
 }
 
-/// The drain/re-admit scenario: three chips under independent
-/// fault-arrival streams with a live-fault drain threshold of 2, so a
-/// chip accumulating two unremapped faults leaves the serving set,
-/// gets repaired by its scan agent, and rejoins — while the
-/// health-aware router re-shards its traffic and the fleet keeps
-/// serving every request.
+/// The drain/re-admit scenario, lowered from the `degraded_continuity`
+/// preset: three chips under independent fault-arrival streams with a
+/// live-fault drain threshold of 2, so a chip accumulating two
+/// unremapped faults leaves the serving set, gets repaired by its scan
+/// agent, and rejoins — while the health-aware router re-shards its
+/// traffic and the fleet keeps serving every request.
 pub fn scenario_config(seed: u64, smoke: bool, threads: usize) -> FleetConfig {
-    FleetConfig {
-        seed,
-        chips: vec![
-            ChipSpec {
-                dims: Dims::new(8, 8),
-                lanes: 2,
-            };
-            3
-        ],
-        policy: RoutingPolicy::HealthWeighted,
-        max_batch: 8,
-        max_wait_cycles: 8_000,
-        clients: 24,
-        think_cycles: 500,
-        total_requests: if smoke { 192 } else { 432 },
-        queue_cap: 24,
-        executor_threads: threads,
-        windows: 10,
-        faults: Some(FaultPlan {
-            // arrivals concentrate early (short horizon) so the run's
-            // tail demonstrates re-admission and exact recovery
-            mean_interarrival_cycles: if smoke { 6_000.0 } else { 20_000.0 },
-            horizon_cycles: if smoke { 40_000 } else { 160_000 },
-            scan_period_cycles: if smoke { 4_000 } else { 16_000 },
-            group_width: 8,
-            fpt_capacity: 8,
-            max_arrivals: 6,
-        }),
-        drain_threshold: 2,
-    }
+    let spec = degraded_continuity();
+    scenario::lower_fleet(&spec, &Cell::base(&spec), smoke, seed, threads)
 }
 
 fn run_grid(
@@ -135,16 +86,46 @@ fn run_grid(
     smoke: bool,
     chips_override: Option<usize>,
 ) -> Result<Vec<(usize, RoutingPolicy, FleetReport)>> {
+    let spec = fleet_default();
+    let cells: Vec<Cell> = match chips_override {
+        // --chips restricts the grid to one cluster size (policies
+        // still sweep)
+        Some(n) => RoutingPolicy::all()
+            .into_iter()
+            .map(|p| Cell::base(&spec).with_chips(n).with_policy(p))
+            .collect(),
+        None => spec.cells(smoke),
+    };
     let mut out = Vec::new();
-    for (n_chips, policy) in grid(smoke, chips_override) {
-        let cfg = fleet_cell(opts.seed, n_chips, policy, smoke, opts.threads);
+    for cell in cells {
+        let n_chips = cell.chips.len();
+        let cfg = scenario::lower_fleet(&spec, &cell, smoke, opts.seed, opts.threads);
         let report = fleet::run(engine, &cfg)?;
-        out.push((n_chips, policy, report));
+        out.push((n_chips, cfg.policy, report));
     }
     Ok(out)
 }
 
-fn grid_table(results: &[(usize, RoutingPolicy, FleetReport)]) -> Table {
+/// The heterogeneous-dims grid (`mixed_fleet` preset): topology
+/// variants × routing policy, each labeled with its compact topology
+/// string.
+fn run_mixed(
+    engine: &Arc<Engine>,
+    opts: &RunOpts,
+    smoke: bool,
+) -> Result<Vec<(String, RoutingPolicy, FleetReport)>> {
+    let spec = mixed_fleet();
+    let mut out = Vec::new();
+    for cell in spec.cells(smoke) {
+        let label = topology_label(&cell.chips);
+        let cfg = scenario::lower_fleet(&spec, &cell, smoke, opts.seed, opts.threads);
+        let report = fleet::run(engine, &cfg)?;
+        out.push((label, cfg.policy, report));
+    }
+    Ok(out)
+}
+
+pub(crate) fn grid_table(results: &[(usize, RoutingPolicy, FleetReport)]) -> Table {
     let mut t = Table::new(
         "fleet grid — cluster size × routing policy, metrics in \
          simulated cycles [model: builtin, backend: native]",
@@ -176,41 +157,113 @@ fn grid_table(results: &[(usize, RoutingPolicy, FleetReport)]) -> Table {
     t
 }
 
+fn mixed_table(results: &[(String, RoutingPolicy, FleetReport)]) -> Table {
+    let mut t = Table::new(
+        "mixed fleet — heterogeneous array sizes × routing policy; \
+         load_imbalance = TV distance from the weight-optimal split \
+         (0 = optimal)",
+        &[
+            "topology",
+            "policy",
+            "requests",
+            "imgs_per_Mcycle",
+            "p50_cycles",
+            "p99_cycles",
+            "accuracy",
+            "load_imbalance",
+        ],
+    );
+    for (label, policy, r) in results {
+        t.push_row(vec![
+            label.clone(),
+            policy.to_string(),
+            r.total_requests.to_string(),
+            f(r.throughput_imgs_per_mcycle, 2),
+            r.p50_cycles().to_string(),
+            r.p99_cycles().to_string(),
+            f(r.accuracy, 4),
+            f(r.load_imbalance(), 4),
+        ]);
+    }
+    t
+}
+
+/// One machine-readable grid row — the byte-stable fleet bench row
+/// format shared by `BENCH_fleet.json` and scenario bench files
+/// (unchanged from schema v1).
+pub(crate) fn json_row(
+    n_chips: usize,
+    policy: RoutingPolicy,
+    r: &FleetReport,
+    sep: &str,
+) -> String {
+    format!(
+        "    {{\"chips\": {n_chips}, \"policy\": \"{policy}\", \
+         \"requests\": {}, \"batches\": {}, \
+         \"throughput_imgs_per_mcycle\": {:.6}, \
+         \"p50_cycles\": {}, \"p99_cycles\": {}, \
+         \"accuracy\": {:.6}}}{sep}\n",
+        r.total_requests,
+        r.batches,
+        r.throughput_imgs_per_mcycle,
+        r.p50_cycles(),
+        r.p99_cycles(),
+        r.accuracy,
+    )
+}
+
+/// One mixed-fleet row: topology label + the routing-quality column.
+fn mixed_json_row(label: &str, policy: RoutingPolicy, r: &FleetReport, sep: &str) -> String {
+    format!(
+        "    {{\"topology\": \"{label}\", \"policy\": \"{policy}\", \
+         \"requests\": {}, \"throughput_imgs_per_mcycle\": {:.6}, \
+         \"p50_cycles\": {}, \"p99_cycles\": {}, \
+         \"accuracy\": {:.6}, \"load_imbalance\": {:.6}}}{sep}\n",
+        r.total_requests,
+        r.throughput_imgs_per_mcycle,
+        r.p50_cycles(),
+        r.p99_cycles(),
+        r.accuracy,
+        r.load_imbalance(),
+    )
+}
+
 /// Render the machine-readable perf baseline. Simulated cycles only —
 /// no wall-clock fields, reproducible byte-for-byte from the seed at
-/// any `--workers` value.
+/// any `--workers` value. The `grid` section is byte-identical to
+/// schema v1; `mixed_fleet` (when present) is the v2 addition.
 fn grid_json(
     seed: u64,
     smoke: bool,
     results: &[(usize, RoutingPolicy, FleetReport)],
+    mixed: Option<&[(String, RoutingPolicy, FleetReport)]>,
 ) -> String {
     let mut s = String::new();
     s.push_str("{\n");
-    s.push_str("  \"schema\": \"hyca-fleet-bench-v1\",\n");
+    s.push_str("  \"schema\": \"hyca-fleet-bench-v2\",\n");
     s.push_str(&format!("  \"seed\": {seed},\n"));
     s.push_str(&format!("  \"smoke\": {smoke},\n"));
     s.push_str("  \"grid\": [\n");
     for (i, (n_chips, policy, r)) in results.iter().enumerate() {
         let sep = if i + 1 == results.len() { "" } else { "," };
-        s.push_str(&format!(
-            "    {{\"chips\": {n_chips}, \"policy\": \"{policy}\", \
-             \"requests\": {}, \"batches\": {}, \
-             \"throughput_imgs_per_mcycle\": {:.6}, \
-             \"p50_cycles\": {}, \"p99_cycles\": {}, \
-             \"accuracy\": {:.6}}}{sep}\n",
-            r.total_requests,
-            r.batches,
-            r.throughput_imgs_per_mcycle,
-            r.p50_cycles(),
-            r.p99_cycles(),
-            r.accuracy,
-        ));
+        s.push_str(&json_row(*n_chips, *policy, r, sep));
     }
-    s.push_str("  ]\n}\n");
+    match mixed {
+        None => s.push_str("  ]\n}\n"),
+        Some(rows) => {
+            s.push_str("  ],\n");
+            s.push_str("  \"mixed_fleet\": [\n");
+            for (i, (label, policy, r)) in rows.iter().enumerate() {
+                let sep = if i + 1 == rows.len() { "" } else { "," };
+                s.push_str(&mixed_json_row(label, *policy, r, sep));
+            }
+            s.push_str("  ]\n}\n");
+        }
+    }
     s
 }
 
-fn scenario_timeline_table(report: &FleetReport) -> Table {
+pub(crate) fn scenario_timeline_table(report: &FleetReport) -> Table {
     let mut t = Table::new(
         "fleet under mid-run faults — goodput/accuracy/availability \
          timeline (windows in simulated cycles)",
@@ -254,7 +307,7 @@ fn scenario_timeline_table(report: &FleetReport) -> Table {
     t
 }
 
-fn scenario_chip_table(report: &FleetReport) -> Table {
+pub(crate) fn scenario_chip_table(report: &FleetReport) -> Table {
     let mut t = Table::new(
         "fleet scenario — per-chip breakdown",
         &[
@@ -288,7 +341,7 @@ fn scenario_chip_table(report: &FleetReport) -> Table {
     t
 }
 
-fn scenario_summary(report: &FleetReport, budget: usize) -> Table {
+pub(crate) fn scenario_summary(report: &FleetReport, budget: usize) -> Table {
     let arrivals = report
         .events
         .iter()
@@ -330,8 +383,10 @@ fn scenario_summary(report: &FleetReport, budget: usize) -> Table {
     t
 }
 
-/// Grid + scenario; returns the report tables and the JSON baseline.
-/// `chips_override` restricts the grid to one cluster size (`--chips`).
+/// Scaling grid + mixed-fleet grid + scenario; returns the report
+/// tables and the JSON baseline. `chips_override` restricts the
+/// scaling grid to one cluster size (`--chips`) and skips the
+/// mixed-fleet section (a restricted run is not the baseline).
 pub fn run_full(
     opts: &RunOpts,
     smoke: bool,
@@ -339,15 +394,20 @@ pub fn run_full(
 ) -> Result<(Vec<Table>, String)> {
     let engine = Arc::new(Engine::builtin());
     let grid_results = run_grid(&engine, opts, smoke, chips_override)?;
-    let json = grid_json(opts.seed, smoke, &grid_results);
+    let mixed_results = match chips_override {
+        None => Some(run_mixed(&engine, opts, smoke)?),
+        Some(_) => None,
+    };
+    let json = grid_json(opts.seed, smoke, &grid_results, mixed_results.as_deref());
     let scenario_cfg = scenario_config(opts.seed, smoke, opts.threads);
     let scenario = fleet::run(&engine, &scenario_cfg)?;
-    let tables = vec![
-        grid_table(&grid_results),
-        scenario_timeline_table(&scenario),
-        scenario_chip_table(&scenario),
-        scenario_summary(&scenario, scenario_cfg.total_requests),
-    ];
+    let mut tables = vec![grid_table(&grid_results)];
+    if let Some(mixed) = &mixed_results {
+        tables.push(mixed_table(mixed));
+    }
+    tables.push(scenario_timeline_table(&scenario));
+    tables.push(scenario_chip_table(&scenario));
+    tables.push(scenario_summary(&scenario, scenario_cfg.total_requests));
     Ok((tables, json))
 }
 
@@ -356,7 +416,8 @@ pub fn run_full(
 pub fn bench_json(opts: &RunOpts, smoke: bool) -> Result<String> {
     let engine = Arc::new(Engine::builtin());
     let grid_results = run_grid(&engine, opts, smoke, None)?;
-    Ok(grid_json(opts.seed, smoke, &grid_results))
+    let mixed_results = run_mixed(&engine, opts, smoke)?;
+    Ok(grid_json(opts.seed, smoke, &grid_results, Some(&mixed_results)))
 }
 
 /// The drain scenario alone (used by `rust/tests/fleet.rs`).
@@ -371,7 +432,7 @@ impl Experiment for FleetExp {
     }
 
     fn title(&self) -> &'static str {
-        "Fleet: multi-chip sharded serving — routing-policy grid + drain/re-admit under faults"
+        "Fleet: multi-chip sharded serving — routing grids (incl. mixed arrays) + drain/re-admit"
     }
 
     fn run(&self, opts: &RunOpts) -> Result<Vec<Table>> {

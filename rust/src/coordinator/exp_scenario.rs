@@ -1,0 +1,313 @@
+//! `repro scenario <preset|path.scn>` — run *any* declarative
+//! [`ScenarioSpec`] end to end: expand its sweep into cells, lower
+//! each cell through `scenario::lower`, execute on the serve or fleet
+//! pipeline, and render tables plus a machine-readable
+//! `BENCH_scenario_<name>.json` stamped with the spec's canonical
+//! hash.
+//!
+//! Row-format compatibility: serve-driver grids render with
+//! `exp_serve`'s row format and fleet grids swept only over
+//! `chips`/`router` with `exp_fleet`'s — so the `steady_state` /
+//! `fleet_default` presets emit grid sections byte-identical to
+//! `BENCH_serve.json` / `BENCH_fleet.json`'s. Grids over other axes
+//! (topology, fault intensity, ...) use an extended row carrying the
+//! axis labels and the fleet-quality columns (availability,
+//! load_imbalance).
+//!
+//! Single-cell specs with fault injection (e.g. `burst`,
+//! `degraded_continuity`) additionally render the timeline /
+//! breakdown / summary tables of the matching legacy driver.
+
+use std::sync::Arc;
+
+use super::{exp_fleet, exp_serve};
+use crate::fleet::{self, metrics::FleetReport};
+use crate::inference::Engine;
+use crate::scenario::{self, Cell, Driver, ScenarioSpec, SweepAxis};
+use crate::serve::{self, metrics::ServeReport};
+use crate::util::table::{f, Table};
+use anyhow::Result;
+
+/// The reports of one scenario run, cell by cell.
+pub enum ScenarioRun {
+    Serve(Vec<(Cell, ServeReport)>),
+    Fleet(Vec<(Cell, FleetReport)>),
+}
+
+/// Execute every cell of the spec's grid on the builtin engine.
+pub fn run_cells(
+    spec: &ScenarioSpec,
+    seed: u64,
+    threads: usize,
+    smoke: bool,
+) -> Result<ScenarioRun> {
+    let engine = Arc::new(Engine::builtin());
+    Ok(match spec.driver {
+        Driver::Serve => {
+            let mut out = Vec::new();
+            for cell in spec.cells(smoke) {
+                let cfg = scenario::lower_serve(spec, &cell, smoke, seed, threads)?;
+                out.push((cell, serve::run(&engine, &cfg)?));
+            }
+            ScenarioRun::Serve(out)
+        }
+        Driver::Fleet => {
+            let mut out = Vec::new();
+            for cell in spec.cells(smoke) {
+                let cfg = scenario::lower_fleet(spec, &cell, smoke, seed, threads);
+                out.push((cell, fleet::run(&engine, &cfg)?));
+            }
+            ScenarioRun::Fleet(out)
+        }
+    })
+}
+
+/// May the fleet grid reuse the legacy `chips`/`policy` row format?
+fn legacy_fleet_shape(spec: &ScenarioSpec) -> bool {
+    spec.sweep
+        .iter()
+        .all(|a| matches!(a, SweepAxis::Chips(_) | SweepAxis::Router(_)))
+}
+
+fn generic_fleet_table(spec: &ScenarioSpec, results: &[(Cell, FleetReport)]) -> Table {
+    let axis_keys: Vec<&'static str> = spec.sweep.iter().map(|a| a.key()).collect();
+    // `chips`/`policy` identify the cell when they are not already
+    // sweep axes of their own
+    let add_chips = !axis_keys.contains(&"chips");
+    let add_policy = !axis_keys.contains(&"router");
+    let mut columns: Vec<&str> = axis_keys.clone();
+    if add_chips {
+        columns.push("chips");
+    }
+    if add_policy {
+        columns.push("policy");
+    }
+    columns.extend_from_slice(&[
+        "requests",
+        "imgs_per_Mcycle",
+        "p50_cycles",
+        "p99_cycles",
+        "accuracy",
+        "availability",
+        "drains",
+        "load_imbalance",
+    ]);
+    let mut t = Table::new(
+        format!("scenario {} — fleet grid in simulated cycles", spec.name),
+        &columns,
+    );
+    for (cell, r) in results {
+        let mut row: Vec<String> = axis_keys
+            .iter()
+            .map(|k| {
+                cell.labels
+                    .iter()
+                    .find(|(lk, _)| lk == k)
+                    .map(|(_, v)| v.clone())
+                    .unwrap_or_else(|| "-".to_string())
+            })
+            .collect();
+        if add_chips {
+            row.push(cell.chips.len().to_string());
+        }
+        if add_policy {
+            row.push(cell.policy.to_string());
+        }
+        row.extend(vec![
+            r.total_requests.to_string(),
+            f(r.throughput_imgs_per_mcycle, 2),
+            r.p50_cycles().to_string(),
+            r.p99_cycles().to_string(),
+            f(r.accuracy, 4),
+            f(r.availability(), 4),
+            r.drains().to_string(),
+            f(r.load_imbalance(), 4),
+        ]);
+        t.push_row(row);
+    }
+    t
+}
+
+/// Extended JSON row for non-legacy fleet grids: axis labels first
+/// (numeric axes unquoted), then the metric columns.
+fn generic_fleet_json_row(cell: &Cell, r: &FleetReport, sep: &str) -> String {
+    let mut fields: Vec<String> = Vec::new();
+    for (key, value) in &cell.labels {
+        match *key {
+            "topology" | "router" => fields.push(format!("\"{key}\": \"{value}\"")),
+            _ => fields.push(format!("\"{key}\": {value}")),
+        }
+    }
+    if !cell.labels.iter().any(|(k, _)| *k == "chips") {
+        fields.push(format!("\"chips\": {}", cell.chips.len()));
+    }
+    if !cell.labels.iter().any(|(k, _)| *k == "router") {
+        fields.push(format!("\"policy\": \"{}\"", cell.policy));
+    }
+    fields.push(format!("\"requests\": {}", r.total_requests));
+    fields.push(format!(
+        "\"throughput_imgs_per_mcycle\": {:.6}",
+        r.throughput_imgs_per_mcycle
+    ));
+    fields.push(format!("\"p50_cycles\": {}", r.p50_cycles()));
+    fields.push(format!("\"p99_cycles\": {}", r.p99_cycles()));
+    fields.push(format!("\"accuracy\": {:.6}", r.accuracy));
+    fields.push(format!("\"availability\": {:.6}", r.availability()));
+    fields.push(format!("\"load_imbalance\": {:.6}", r.load_imbalance()));
+    format!("    {{{}}}{sep}\n", fields.join(", "))
+}
+
+/// Assemble the scenario bench JSON: envelope (schema, scenario name,
+/// canonical spec hash, seed, mode) around the grid rows.
+fn bench_json(spec: &ScenarioSpec, seed: u64, smoke: bool, run: &ScenarioRun) -> String {
+    let mut s = String::new();
+    s.push_str("{\n");
+    s.push_str("  \"schema\": \"hyca-scenario-bench-v1\",\n");
+    s.push_str(&format!("  \"scenario\": \"{}\",\n", spec.name));
+    s.push_str(&format!("  \"spec_hash\": \"{}\",\n", spec.spec_hash()));
+    s.push_str(&format!("  \"seed\": {seed},\n"));
+    s.push_str(&format!("  \"smoke\": {smoke},\n"));
+    s.push_str("  \"grid\": [\n");
+    match run {
+        ScenarioRun::Serve(results) => {
+            for (i, (cell, r)) in results.iter().enumerate() {
+                let sep = if i + 1 == results.len() { "" } else { "," };
+                s.push_str(&exp_serve::json_row(
+                    cell.chips[0].lanes,
+                    cell.max_batch,
+                    r,
+                    sep,
+                ));
+            }
+        }
+        ScenarioRun::Fleet(results) => {
+            let legacy = legacy_fleet_shape(spec);
+            for (i, (cell, r)) in results.iter().enumerate() {
+                let sep = if i + 1 == results.len() { "" } else { "," };
+                if legacy {
+                    s.push_str(&exp_fleet::json_row(cell.chips.len(), cell.policy, r, sep));
+                } else {
+                    s.push_str(&generic_fleet_json_row(cell, r, sep));
+                }
+            }
+        }
+    }
+    s.push_str("  ]\n}\n");
+    s
+}
+
+/// Run a spec end to end: tables + bench JSON.
+pub fn run_spec(
+    spec: &ScenarioSpec,
+    seed: u64,
+    threads: usize,
+    smoke: bool,
+) -> Result<(Vec<Table>, String)> {
+    let run = run_cells(spec, seed, threads, smoke)?;
+    let json = bench_json(spec, seed, smoke, &run);
+    let single_faulty_cell = spec.faults.is_some() && spec.cells(smoke).len() == 1;
+    let mut tables = Vec::new();
+    match &run {
+        ScenarioRun::Serve(results) => {
+            let rows: Vec<(usize, usize, ServeReport)> = results
+                .iter()
+                .map(|(c, r)| (c.chips[0].lanes, c.max_batch, r.clone()))
+                .collect();
+            tables.push(exp_serve::grid_table(&rows));
+            if single_faulty_cell {
+                let report = &results[0].1;
+                tables.push(exp_serve::scenario_table(report));
+                tables.push(exp_serve::scenario_summary(report));
+            }
+        }
+        ScenarioRun::Fleet(results) => {
+            if legacy_fleet_shape(spec) {
+                let rows: Vec<(usize, fleet::RoutingPolicy, FleetReport)> = results
+                    .iter()
+                    .map(|(c, r)| (c.chips.len(), c.policy, r.clone()))
+                    .collect();
+                tables.push(exp_fleet::grid_table(&rows));
+            } else {
+                tables.push(generic_fleet_table(spec, results));
+            }
+            if single_faulty_cell {
+                let report = &results[0].1;
+                tables.push(exp_fleet::scenario_timeline_table(report));
+                tables.push(exp_fleet::scenario_chip_table(report));
+                tables.push(exp_fleet::scenario_summary(report, report.total_requests));
+            }
+        }
+    }
+    Ok((tables, json))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scenario::presets;
+
+    #[test]
+    fn steady_state_grid_section_matches_the_serve_baseline() {
+        let opts = crate::coordinator::RunOpts {
+            seed: 0xC0FFEE,
+            threads: 2,
+            builtin_model: true,
+            ..Default::default()
+        };
+        let serve_json = exp_serve::bench_json(&opts, true).unwrap();
+        let spec = presets::preset("steady_state").unwrap();
+        let (_tables, scn_json) = run_spec(&spec, 0xC0FFEE, 2, true).unwrap();
+        let section = |s: &str| {
+            let start = s.find("\"grid\": [").expect("grid section");
+            let end = s[start..].find("\n  ]").expect("section end") + start;
+            s[start..end].to_string()
+        };
+        assert_eq!(
+            section(&serve_json),
+            section(&scn_json),
+            "scenario steady_state must replay the serve grid byte-identically"
+        );
+    }
+
+    #[test]
+    fn fleet_default_grid_section_matches_the_fleet_baseline() {
+        let opts = crate::coordinator::RunOpts {
+            seed: 0xC0FFEE,
+            threads: 2,
+            builtin_model: true,
+            ..Default::default()
+        };
+        let fleet_json = exp_fleet::bench_json(&opts, true).unwrap();
+        let spec = presets::preset("fleet_default").unwrap();
+        let (_tables, scn_json) = run_spec(&spec, 0xC0FFEE, 2, true).unwrap();
+        let section = |s: &str| {
+            let start = s.find("\"grid\": [").expect("grid section");
+            let end = s[start..].find("\n  ]").expect("section end") + start;
+            s[start..end].to_string()
+        };
+        assert_eq!(section(&fleet_json), section(&scn_json));
+    }
+
+    #[test]
+    fn scenario_json_carries_the_spec_hash_and_name() {
+        let spec = presets::preset("burst").unwrap();
+        let (tables, json) = run_spec(&spec, 3, 1, true).unwrap();
+        assert!(json.contains("\"schema\": \"hyca-scenario-bench-v1\""));
+        assert!(json.contains("\"scenario\": \"burst\""));
+        assert!(json.contains(&format!("\"spec_hash\": \"{}\"", spec.spec_hash())));
+        // a single faulty cell renders the timeline + summary tables
+        assert_eq!(tables.len(), 3);
+        assert!(tables[2].to_markdown().contains("recovered_exactly"));
+    }
+
+    #[test]
+    fn uneven_faults_uses_the_extended_row_format() {
+        let spec = presets::preset("uneven_faults").unwrap();
+        let (tables, json) = run_spec(&spec, 0xC0FFEE, 2, true).unwrap();
+        assert!(json.contains("\"fault_mean\": 8000"));
+        assert!(json.contains("\"load_imbalance\":"));
+        assert!(json.contains("\"availability\":"));
+        let grid = tables[0].to_markdown();
+        assert!(grid.contains("fault_mean") && grid.contains("availability"));
+    }
+}

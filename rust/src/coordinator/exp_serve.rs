@@ -3,6 +3,13 @@
 //! sizes, plus the online scan-and-repair scenario with mid-run fault
 //! arrivals.
 //!
+//! This driver is *thin*: it owns no experiment configuration. The
+//! grid is the `steady_state` scenario preset and the fault scenario
+//! is the `burst` preset (`crate::scenario::presets`); both lower
+//! into [`ServeConfig`]s through `scenario::lower`, so `repro serve`
+//! and `repro scenario steady_state` are the same computation — the
+//! compatibility bar `rust/tests/scenario.rs` pins byte-exactly.
+//!
 //! Always runs on the **builtin** engine: the exact-recovery contract
 //! (accuracy returns to exactly 1.0 after remap) only holds for the
 //! synthetic eval set whose labels are the clean argmax, and the
@@ -18,42 +25,29 @@
 use std::sync::Arc;
 
 use super::{Experiment, RunOpts};
-use crate::array::Dims;
 use crate::inference::Engine;
+use crate::scenario::{self, Cell, ScenarioSpec};
 use crate::serve::metrics::ServeReport;
 use crate::serve::scan_agent::EventKind;
-use crate::serve::{self, FaultPlan, ServeConfig};
+use crate::serve::{self, ServeConfig};
 use crate::util::table::{f, Table};
 use anyhow::Result;
 
 pub struct ServeExp;
 
-/// Full grid: simulated worker lanes × dynamic batch cap.
-pub const GRID_LANES: [usize; 4] = [1, 2, 4, 8];
-pub const GRID_BATCH: [usize; 3] = [1, 8, 32];
-/// Reduced grid for `--smoke` / `--fast` (CI).
-pub const SMOKE_LANES: [usize; 2] = [1, 4];
-pub const SMOKE_BATCH: [usize; 2] = [1, 8];
-
-fn grid(smoke: bool) -> Vec<(usize, usize)> {
-    let (lanes, batches): (&[usize], &[usize]) = if smoke {
-        (&SMOKE_LANES, &SMOKE_BATCH)
-    } else {
-        (&GRID_LANES, &GRID_BATCH)
-    };
-    let mut cells = Vec::new();
-    for &l in lanes {
-        for &b in batches {
-            cells.push((l, b));
-        }
-    }
-    cells
+fn steady_state() -> ScenarioSpec {
+    scenario::preset("steady_state").expect("steady_state preset is registered")
 }
 
-/// One fault-free grid cell. Clients scale with capacity so every
-/// lane stays saturated and the comparison isolates batching/lanes.
-/// Public so `benches/serve_throughput.rs` measures exactly the
-/// workload BENCH_serve.json reports.
+fn burst() -> ScenarioSpec {
+    scenario::preset("burst").expect("burst preset is registered")
+}
+
+/// One fault-free grid cell, lowered from the `steady_state` preset
+/// (clients scale with capacity so every lane stays saturated and the
+/// comparison isolates batching/lanes). Public so
+/// `benches/serve_throughput.rs` measures exactly the workload
+/// `BENCH_serve.json` reports.
 pub fn grid_cell(
     seed: u64,
     lanes: usize,
@@ -61,47 +55,18 @@ pub fn grid_cell(
     smoke: bool,
     threads: usize,
 ) -> ServeConfig {
-    let clients = (lanes * max_batch * 2).max(4);
-    ServeConfig {
-        seed,
-        dims: Dims::new(8, 8), // same model:array ratio as fig2
-        lanes,
-        max_batch,
-        max_wait_cycles: 8_000,
-        clients,
-        think_cycles: 500,
-        total_requests: if smoke { 64 } else { 192 },
-        queue_cap: clients,
-        executor_threads: threads,
-        windows: 4,
-        faults: None,
-    }
+    let spec = steady_state();
+    let cell = Cell::base(&spec).with_lanes(lanes).with_max_batch(max_batch);
+    scenario::lower_serve(&spec, &cell, smoke, seed, threads)
+        .expect("steady_state cells are serve-shaped")
 }
 
-/// The mid-run fault scenario: dip → scan detection → live remap →
-/// exact recovery.
+/// The mid-run fault scenario (dip → scan detection → live remap →
+/// exact recovery), lowered from the `burst` preset.
 pub fn scenario_config(seed: u64, smoke: bool, threads: usize) -> ServeConfig {
-    ServeConfig {
-        seed,
-        dims: Dims::new(8, 8),
-        lanes: 2,
-        max_batch: 8,
-        max_wait_cycles: 8_000,
-        clients: 16,
-        think_cycles: 500,
-        total_requests: if smoke { 96 } else { 384 },
-        queue_cap: 16,
-        executor_threads: threads,
-        windows: 10,
-        faults: Some(FaultPlan {
-            mean_interarrival_cycles: if smoke { 20_000.0 } else { 60_000.0 },
-            horizon_cycles: if smoke { 60_000 } else { 200_000 },
-            scan_period_cycles: if smoke { 4_000 } else { 16_000 },
-            group_width: 8,
-            fpt_capacity: 8,
-            max_arrivals: 6,
-        }),
-    }
+    let spec = burst();
+    scenario::lower_serve(&spec, &Cell::base(&spec), smoke, seed, threads)
+        .expect("burst is serve-shaped")
 }
 
 fn run_grid(
@@ -109,16 +74,18 @@ fn run_grid(
     opts: &RunOpts,
     smoke: bool,
 ) -> Result<Vec<(usize, usize, ServeReport)>> {
+    let spec = steady_state();
     let mut out = Vec::new();
-    for (lanes, max_batch) in grid(smoke) {
-        let cfg = grid_cell(opts.seed, lanes, max_batch, smoke, opts.threads);
+    for cell in spec.cells(smoke) {
+        let cfg = scenario::lower_serve(&spec, &cell, smoke, opts.seed, opts.threads)?;
+        let (lanes, max_batch) = (cfg.lanes, cfg.max_batch);
         let report = serve::run(engine, &cfg)?;
         out.push((lanes, max_batch, report));
     }
     Ok(out)
 }
 
-fn grid_table(results: &[(usize, usize, ServeReport)]) -> Table {
+pub(crate) fn grid_table(results: &[(usize, usize, ServeReport)]) -> Table {
     let mut t = Table::new(
         "serve grid — throughput and latency in simulated cycles \
          [model: builtin, backend: native]",
@@ -150,6 +117,22 @@ fn grid_table(results: &[(usize, usize, ServeReport)]) -> Table {
     t
 }
 
+/// One machine-readable grid row — the byte-stable serve bench row
+/// format shared by `BENCH_serve.json` and scenario bench files.
+pub(crate) fn json_row(lanes: usize, max_batch: usize, r: &ServeReport, sep: &str) -> String {
+    format!(
+        "    {{\"workers\": {lanes}, \"max_batch\": {max_batch}, \
+         \"requests\": {}, \"batches\": {}, \
+         \"throughput_imgs_per_mcycle\": {:.6}, \
+         \"p50_cycles\": {}, \"p99_cycles\": {}}}{sep}\n",
+        r.total_requests,
+        r.batches,
+        r.throughput_imgs_per_mcycle,
+        r.p50_cycles(),
+        r.p99_cycles(),
+    )
+}
+
 /// Render the machine-readable perf baseline. Wall-clock fields are
 /// deliberately absent: everything is simulated cycles and therefore
 /// reproducible byte-for-byte from the seed.
@@ -162,23 +145,13 @@ fn grid_json(seed: u64, smoke: bool, results: &[(usize, usize, ServeReport)]) ->
     s.push_str("  \"grid\": [\n");
     for (i, (lanes, max_batch, r)) in results.iter().enumerate() {
         let sep = if i + 1 == results.len() { "" } else { "," };
-        s.push_str(&format!(
-            "    {{\"workers\": {lanes}, \"max_batch\": {max_batch}, \
-             \"requests\": {}, \"batches\": {}, \
-             \"throughput_imgs_per_mcycle\": {:.6}, \
-             \"p50_cycles\": {}, \"p99_cycles\": {}}}{sep}\n",
-            r.total_requests,
-            r.batches,
-            r.throughput_imgs_per_mcycle,
-            r.p50_cycles(),
-            r.p99_cycles(),
-        ));
+        s.push_str(&json_row(*lanes, *max_batch, r, sep));
     }
     s.push_str("  ]\n}\n");
     s
 }
 
-fn scenario_table(report: &ServeReport) -> Table {
+pub(crate) fn scenario_table(report: &ServeReport) -> Table {
     let mut t = Table::new(
         "serve under mid-run faults — accuracy timeline \
          (windows in simulated cycles)",
@@ -215,7 +188,7 @@ fn scenario_table(report: &ServeReport) -> Table {
     t
 }
 
-fn scenario_summary(report: &ServeReport) -> Table {
+pub(crate) fn scenario_summary(report: &ServeReport) -> Table {
     let arrivals = report
         .events
         .iter()

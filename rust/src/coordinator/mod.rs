@@ -16,6 +16,7 @@ pub mod exp_fig13;
 pub mod exp_fig14;
 pub mod exp_fig15;
 pub mod exp_fleet;
+pub mod exp_scenario;
 pub mod exp_serve;
 pub mod exp_table1;
 pub mod report;

@@ -21,7 +21,7 @@ use crate::serve::scan_agent::{build_timeline, FaultTimeline, ScanAgentConfig};
 use crate::serve::{CostModel, FaultPlan};
 use crate::util::rng::SplitMix64;
 
-use super::lifecycle::{Lifecycle, NEVER_DRAIN};
+use super::lifecycle::{Lifecycle, LifecyclePolicy};
 
 /// Static description of one chip (arrays may be heterogeneous).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -71,7 +71,8 @@ pub struct ChipSim {
 
 impl ChipSim {
     /// Build chip `chip` of a fleet: its fault timeline comes from its
-    /// own seed/stream slot, its lifecycle from `drain_threshold`.
+    /// own seed/stream slot, its lifecycle from the drain/re-admit
+    /// hysteresis policy.
     #[allow(clippy::too_many_arguments)]
     pub fn build(
         params: &ModelParams,
@@ -80,7 +81,7 @@ impl ChipSim {
         chip: usize,
         cluster_seed: u64,
         faults: Option<&FaultPlan>,
-        drain_threshold: usize,
+        lifecycle: LifecyclePolicy,
         max_batch: usize,
         max_wait_cycles: u64,
     ) -> Self {
@@ -107,7 +108,7 @@ impl ChipSim {
                 build_timeline(seed, geometry, &agent, &arrivals)
             }
         };
-        let lifecycle = Lifecycle::new(&timeline.events, drain_threshold);
+        let lifecycle = Lifecycle::with_policy(&timeline.events, lifecycle);
         Self {
             spec,
             cost: CostModel::of(params, spec.dims),
@@ -128,7 +129,7 @@ impl ChipSim {
             spec,
             cost: CostModel::of(params, spec.dims),
             faults: FaultTimeline::healthy(geometry),
-            lifecycle: Lifecycle::new(&[], NEVER_DRAIN),
+            lifecycle: Lifecycle::always_healthy(),
             batcher: Batcher::new(8, 1_000),
             free_lanes: (0..spec.lanes).collect(),
             in_flight: 0,
@@ -201,7 +202,17 @@ mod tests {
         };
         let spec = ChipSpec { dims: Dims::new(8, 8), lanes: 2 };
         let build = |chip: usize| {
-            ChipSim::build(&params, &g, spec, chip, 11, Some(&plan), NEVER_DRAIN, 8, 8_000)
+            ChipSim::build(
+                &params,
+                &g,
+                spec,
+                chip,
+                11,
+                Some(&plan),
+                LifecyclePolicy::NEVER,
+                8,
+                8_000,
+            )
         };
         let a = build(0);
         let b = build(1);

@@ -1,16 +1,29 @@
 //! Chip lifecycle: the drain / re-admit state machine over a chip's
-//! precomputed fault timeline (DESIGN.md §6).
+//! precomputed fault timeline (DESIGN.md §6), with hysteresis.
 //!
 //! A chip's **live fault count** is the number of arrived faults not
 //! yet detected-and-remapped by its scan agent. The count is a step
 //! function of simulated time, fully determined by the chip's
 //! [`TimelineEvent`] stream (arrival ⇒ +1, detection ⇒ −1), so the
-//! drain intervals — maximal spans where the count sits at or above
-//! the configured threshold — are precomputable exactly like the mask
-//! epochs are. While drained a chip dispatches no new batches
-//! (in-flight batches complete), the router re-shards its traffic, and
-//! its scan agent keeps running; the chip is re-admitted the moment a
-//! detection brings the live count back under the threshold.
+//! drain intervals are precomputable exactly like the mask epochs are.
+//!
+//! The drain rule is a [`LifecyclePolicy`] with hysteresis:
+//!
+//! * **enter** — the chip is drained the moment its live count
+//!   reaches `drain_enter`;
+//! * **exit** — a drained chip is re-admitted only once the live
+//!   count falls *below* `drain_exit` (`exit ≤ enter`; `exit ==
+//!   enter` is the legacy single-threshold behavior);
+//! * **dwell** — re-admission additionally waits until at least
+//!   `min_dwell_cycles` have passed since the drain started.
+//!
+//! Split thresholds plus a minimum dwell prevent *flapping*: with a
+//! single threshold a chip whose live count oscillates at the boundary
+//! (fault arrives, scan repairs, next fault arrives...) would bounce
+//! in and out of the serving set, re-sharding its queue every time.
+//! While drained a chip dispatches no new batches (in-flight batches
+//! complete), the router re-shards its traffic, and its scan agent
+//! keeps running.
 //!
 //! The health signal is the simulator's ground truth standing in for
 //! hardware health telemetry (the scan agent's detection reports /
@@ -22,25 +35,69 @@ use crate::serve::scan_agent::{EventKind, TimelineEvent};
 /// Sentinel threshold that disables draining entirely.
 pub const NEVER_DRAIN: usize = usize::MAX;
 
+/// The drain / re-admit rule of a chip (see module docs). Scenario
+/// specs carry this verbatim (`drain_enter` / `drain_exit` /
+/// `min_dwell_cycles` in the `[policy]` section).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LifecyclePolicy {
+    /// Live-fault count at which a chip is drained
+    /// ([`NEVER_DRAIN`] disables the lifecycle).
+    pub drain_enter: usize,
+    /// Live-fault count below which a drained chip may re-admit
+    /// (must be `1 ..= drain_enter`).
+    pub drain_exit: usize,
+    /// Minimum cycles a drain episode lasts, measured from its start.
+    pub min_dwell_cycles: u64,
+}
+
+impl LifecyclePolicy {
+    /// Draining disabled (the fault-free / grid default).
+    pub const NEVER: Self =
+        Self { drain_enter: NEVER_DRAIN, drain_exit: NEVER_DRAIN, min_dwell_cycles: 0 };
+
+    /// The legacy single-threshold rule: enter = exit, no dwell.
+    pub const fn single(threshold: usize) -> Self {
+        Self { drain_enter: threshold, drain_exit: threshold, min_dwell_cycles: 0 }
+    }
+
+    /// Is draining enabled at all?
+    pub fn enabled(&self) -> bool {
+        self.drain_enter != NEVER_DRAIN
+    }
+}
+
 /// The precomputed health history of one chip.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Lifecycle {
     /// `(cycle, live)` steps, ascending cycle (duplicates allowed —
     /// the *last* entry at a cycle is the value from that cycle on).
     steps: Vec<(u64, usize)>,
-    /// Maximal `[start, end)` spans with `live >= threshold`,
-    /// ascending and disjoint; `end == u64::MAX` means the chip never
-    /// recovers within the simulated horizon.
+    /// Maximal `[start, end)` drained spans, ascending and disjoint;
+    /// `end == u64::MAX` means the chip never recovers within the
+    /// simulated horizon.
     drained: Vec<(u64, u64)>,
-    threshold: usize,
+    policy: LifecyclePolicy,
 }
 
 impl Lifecycle {
     /// Build from a chip's fault timeline events (ascending cycle,
     /// arrivals ordered before same-cycle detections — the order
-    /// `build_timeline` emits).
+    /// `build_timeline` emits) under the legacy single-threshold rule.
     pub fn new(events: &[TimelineEvent], threshold: usize) -> Self {
         assert!(threshold >= 1, "a zero drain threshold would never admit the chip");
+        Self::with_policy(events, LifecyclePolicy::single(threshold))
+    }
+
+    /// Build under a full hysteresis policy.
+    pub fn with_policy(events: &[TimelineEvent], policy: LifecyclePolicy) -> Self {
+        assert!(
+            policy.drain_enter >= 1,
+            "a zero drain_enter would never admit the chip"
+        );
+        assert!(
+            policy.drain_exit >= 1 && policy.drain_exit <= policy.drain_enter,
+            "hysteresis requires 1 <= drain_exit <= drain_enter"
+        );
         let mut steps = vec![(0u64, 0usize)];
         let mut live = 0usize;
         for e in events {
@@ -58,37 +115,55 @@ impl Lifecycle {
             );
             steps.push((e.cycle, live));
         }
-        let mut drained = Vec::new();
+        // collapse same-cycle runs to their final value: the live count
+        // is right-continuous, and intermediate values at a cycle must
+        // not open or close episodes
+        let mut collapsed: Vec<(u64, usize)> = Vec::with_capacity(steps.len());
+        for &(c, l) in &steps {
+            match collapsed.last_mut() {
+                Some(last) if last.0 == c => last.1 = l,
+                _ => collapsed.push((c, l)),
+            }
+        }
+        // walk the piecewise-constant intervals with the hysteresis
+        // state machine; a re-admission may land mid-interval when the
+        // dwell clock outlasts the repair
+        let mut drained: Vec<(u64, u64)> = Vec::new();
         let mut open: Option<u64> = None;
-        for &(cycle, live) in &steps {
-            match (open, live >= threshold) {
-                (None, true) => open = Some(cycle),
-                (Some(start), false) => {
-                    if start < cycle {
-                        drained.push((start, cycle));
+        for (i, &(c, l)) in collapsed.iter().enumerate() {
+            let next_c = collapsed.get(i + 1).map(|s| s.0).unwrap_or(u64::MAX);
+            match open {
+                None => {
+                    if l >= policy.drain_enter {
+                        open = Some(c);
                     }
-                    open = None;
                 }
-                _ => {}
+                Some(start) => {
+                    if l < policy.drain_exit {
+                        let t = c.max(start.saturating_add(policy.min_dwell_cycles));
+                        if t < next_c {
+                            drained.push((start, t));
+                            open = None;
+                            // l < exit <= enter: no immediate re-entry
+                            // within this interval
+                        }
+                    }
+                }
             }
         }
         if let Some(start) = open {
             drained.push((start, u64::MAX));
         }
-        Self {
-            steps,
-            drained,
-            threshold,
-        }
+        Self { steps, drained, policy }
     }
 
     /// A chip that never drains and never degrades.
     pub fn always_healthy() -> Self {
-        Self::new(&[], NEVER_DRAIN)
+        Self::with_policy(&[], LifecyclePolicy::NEVER)
     }
 
-    pub fn threshold(&self) -> usize {
-        self.threshold
+    pub fn policy(&self) -> LifecyclePolicy {
+        self.policy
     }
 
     /// Live (arrived, unremapped) fault count at `cycle`.
@@ -149,6 +224,7 @@ mod tests {
         assert_eq!(l.live_at(12345), 0);
         assert_eq!(l.drains(), 0);
         assert_eq!(l.drained_overlap(0, 1_000_000), 0);
+        assert!(!l.policy().enabled());
     }
 
     #[test]
@@ -219,5 +295,102 @@ mod tests {
     #[should_panic(expected = "zero drain threshold")]
     fn zero_threshold_rejected() {
         Lifecycle::new(&[], 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "drain_exit <= drain_enter")]
+    fn exit_above_enter_rejected() {
+        Lifecycle::with_policy(
+            &[],
+            LifecyclePolicy { drain_enter: 1, drain_exit: 2, min_dwell_cycles: 0 },
+        );
+    }
+
+    #[test]
+    fn split_thresholds_delay_readmission() {
+        // live: 0 →(100) 1 →(200) 2 →(300) 1 →(400) 0
+        let ev = [arrive(100, 0, 0), arrive(200, 1, 1), detect(300, 0, 0), detect(400, 1, 1)];
+        // enter 2, exit 1: the repair at 300 (live 1) is NOT enough —
+        // re-admission waits for live < 1, i.e. the repair at 400
+        let l = Lifecycle::with_policy(
+            &ev,
+            LifecyclePolicy { drain_enter: 2, drain_exit: 1, min_dwell_cycles: 0 },
+        );
+        assert_eq!(l.drained_intervals(), &[(200, 400)]);
+        assert!(!l.healthy_at(350), "live 1 is not below exit 1");
+        assert!(l.healthy_at(400));
+        // with exit == enter (legacy) the same events re-admit at 300
+        let single = Lifecycle::new(&ev, 2);
+        assert_eq!(single.drained_intervals(), &[(200, 300)]);
+    }
+
+    #[test]
+    fn hysteresis_suppresses_flapping() {
+        // live count oscillates 0→1→0→1→0 at a threshold of 1: the
+        // single-threshold rule flaps twice; exit 1 + enter 2 never
+        // drains at all
+        let ev = [
+            arrive(10, 0, 0),
+            detect(20, 0, 0),
+            arrive(30, 1, 1),
+            detect(40, 1, 1),
+        ];
+        assert_eq!(Lifecycle::new(&ev, 1).drains(), 2);
+        let hyst = Lifecycle::with_policy(
+            &ev,
+            LifecyclePolicy { drain_enter: 2, drain_exit: 1, min_dwell_cycles: 0 },
+        );
+        assert_eq!(hyst.drains(), 0, "the count never reaches enter=2");
+    }
+
+    #[test]
+    fn min_dwell_extends_short_episodes() {
+        // drained at 100, repaired at 150 — but a 200-cycle dwell keeps
+        // the chip out until 300
+        let ev = [arrive(100, 0, 0), detect(150, 0, 0)];
+        let l = Lifecycle::with_policy(
+            &ev,
+            LifecyclePolicy { drain_enter: 1, drain_exit: 1, min_dwell_cycles: 200 },
+        );
+        assert_eq!(l.drained_intervals(), &[(100, 300)]);
+        assert!(!l.healthy_at(299));
+        assert!(l.healthy_at(300));
+        // zero dwell reproduces the legacy exit point
+        assert_eq!(Lifecycle::new(&ev, 1).drained_intervals(), &[(100, 150)]);
+    }
+
+    #[test]
+    fn dwell_does_not_readmit_into_a_relapse() {
+        // repaired at 150 but a new fault lands at 250, before the
+        // 200-cycle dwell expires at 300: the episode must not close at
+        // 300 (live is 1 ≥ exit there) — it runs until the second
+        // repair at 400
+        let ev = [
+            arrive(100, 0, 0),
+            detect(150, 0, 0),
+            arrive(250, 1, 1),
+            detect(400, 1, 1),
+        ];
+        let l = Lifecycle::with_policy(
+            &ev,
+            LifecyclePolicy { drain_enter: 1, drain_exit: 1, min_dwell_cycles: 200 },
+        );
+        assert_eq!(l.drained_intervals(), &[(100, 400)]);
+    }
+
+    #[test]
+    fn dwell_respects_episode_boundaries() {
+        // two well-separated episodes each get their own dwell clock
+        let ev = [
+            arrive(100, 0, 0),
+            detect(110, 0, 0),
+            arrive(1_000, 1, 1),
+            detect(1_010, 1, 1),
+        ];
+        let l = Lifecycle::with_policy(
+            &ev,
+            LifecyclePolicy { drain_enter: 1, drain_exit: 1, min_dwell_cycles: 50 },
+        );
+        assert_eq!(l.drained_intervals(), &[(100, 150), (1_000, 1_050)]);
     }
 }

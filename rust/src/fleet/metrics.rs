@@ -58,6 +58,10 @@ pub struct ChipStat {
     pub drains: usize,
     /// Cycles of `[0, total_cycles)` spent drained.
     pub drained_cycles: u64,
+    /// Nominal fault-free throughput of this chip in images per
+    /// Mcycle (the perfmodel's output-stationary runtime) — the
+    /// weight-optimal routing share derives from these.
+    pub nominal_imgs_per_mcycle: f64,
 }
 
 impl ChipStat {
@@ -127,6 +131,31 @@ impl FleetReport {
         self.per_chip.iter().map(|c| c.drains).sum()
     }
 
+    /// Routing quality: total-variation distance between the realized
+    /// per-chip request shares and the *weight-optimal* split (each
+    /// chip serving in proportion to its nominal throughput).
+    /// `0.0` = the router matched the optimal split exactly; `1.0` =
+    /// all traffic went to chips that should have served none. The
+    /// ROADMAP mixed-fleet metric: on heterogeneous arrays a
+    /// throughput-blind policy (round-robin) shows a large imbalance,
+    /// the health-weighted policy a small one.
+    pub fn load_imbalance(&self) -> f64 {
+        let n: usize = self.per_chip.iter().map(|c| c.requests).sum();
+        let w: f64 = self.per_chip.iter().map(|c| c.nominal_imgs_per_mcycle).sum();
+        if n == 0 || w <= 0.0 {
+            return 0.0;
+        }
+        0.5 * self
+            .per_chip
+            .iter()
+            .map(|c| {
+                let realized = c.requests as f64 / n as f64;
+                let optimal = c.nominal_imgs_per_mcycle / w;
+                (realized - optimal).abs()
+            })
+            .sum::<f64>()
+    }
+
     /// Deterministic rendering of every metric, per-chip stat and
     /// per-request outcome — two runs are equivalent iff their digests
     /// are byte-identical (the executor-width invariance assertions
@@ -151,6 +180,7 @@ impl FleetReport {
             self.availability(),
             self.drains()
         );
+        let _ = writeln!(s, "load_imbalance={:.6}", self.load_imbalance());
         let _ = writeln!(s, "accuracy={:.6}", self.accuracy);
         for c in &self.per_chip {
             let acc = match c.accuracy() {
@@ -286,6 +316,7 @@ pub fn assemble(
             unrepaired: c.faults.unrepaired,
             drains: c.lifecycle.drains(),
             drained_cycles: c.lifecycle.drained_overlap(0, timeline.total_cycles),
+            nominal_imgs_per_mcycle: 1e6 / c.cost.per_image_cycles() as f64,
         })
         .collect();
     let n_correct = correct.iter().filter(|&&c| c).count();
@@ -314,7 +345,7 @@ pub fn assemble(
 mod tests {
     use super::*;
     use crate::array::Dims;
-    use crate::fleet::{run, ChipSpec, FleetConfig, NEVER_DRAIN};
+    use crate::fleet::{run, ChipSpec, FleetConfig, LifecyclePolicy};
     use std::sync::Arc;
 
     fn cfg(chips: usize, policy: RoutingPolicy) -> FleetConfig {
@@ -337,7 +368,7 @@ mod tests {
             executor_threads: 3,
             windows: 6,
             faults: None,
-            drain_threshold: NEVER_DRAIN,
+            lifecycle: LifecyclePolicy::NEVER,
         }
     }
 
@@ -390,6 +421,50 @@ mod tests {
     }
 
     #[test]
+    fn load_imbalance_is_zero_for_perfectly_weighted_splits() {
+        // homogeneous fleet, perfectly even split → imbalance 0
+        let engine = Arc::new(crate::inference::Engine::builtin());
+        let report = run(&engine, &cfg(2, RoutingPolicy::RoundRobin)).unwrap();
+        let even = report.per_chip.iter().all(|c| c.requests == report.total_requests / 2);
+        if even {
+            assert!(report.load_imbalance().abs() < 1e-12);
+        } else {
+            assert!(report.load_imbalance() > 0.0);
+        }
+        // the metric is bounded by construction
+        assert!(report.load_imbalance() <= 1.0);
+    }
+
+    #[test]
+    fn load_imbalance_penalizes_throughput_blind_splits() {
+        // a chip with 3× the nominal throughput should serve 3/4 of
+        // the traffic; an even split is off by |1/2 − 3/4| = 1/4
+        let stat = |requests: usize, nominal: f64| ChipStat {
+            chip: 0,
+            dims: Dims::new(8, 8),
+            lanes: 2,
+            requests,
+            correct: requests,
+            batches: 1,
+            latency_cycles: LogHistogram::new(),
+            unrepaired: 0,
+            drains: 0,
+            drained_cycles: 0,
+            nominal_imgs_per_mcycle: nominal,
+        };
+        let mut report = run(
+            &Arc::new(crate::inference::Engine::builtin()),
+            &cfg(2, RoutingPolicy::RoundRobin),
+        )
+        .unwrap();
+        report.per_chip = vec![stat(50, 1.0), stat(50, 3.0)];
+        assert!((report.load_imbalance() - 0.25).abs() < 1e-12);
+        // weight-optimal split → 0
+        report.per_chip = vec![stat(25, 1.0), stat(75, 3.0)];
+        assert!(report.load_imbalance().abs() < 1e-12);
+    }
+
+    #[test]
     fn window_and_chip_accuracy_handle_empty_sets() {
         let w = FleetWindowStat {
             index: 0,
@@ -411,6 +486,7 @@ mod tests {
             unrepaired: 0,
             drains: 0,
             drained_cycles: 0,
+            nominal_imgs_per_mcycle: 1.0,
         };
         assert_eq!(c.accuracy(), None);
     }

@@ -14,12 +14,13 @@
 //! policies (round-robin, join-shortest-queue, health-aware weighted).
 //!
 //! **Fault-domain isolation:** a chip whose live (arrived, unremapped)
-//! fault count crosses `drain_threshold` is *drained*
-//! ([`lifecycle`]): it dispatches no new batches, its in-flight
-//! batches complete, its pending queue is re-sharded to healthy chips,
-//! and its scan agent keeps running; the moment scan-and-repair brings
-//! the count back under the threshold the chip is *re-admitted* and
-//! the router restores its traffic share. If every chip is drained at
+//! fault count crosses the [`LifecyclePolicy`]'s `drain_enter`
+//! threshold is *drained* ([`lifecycle`]): it dispatches no new
+//! batches, its in-flight batches complete, its pending queue is
+//! re-sharded to healthy chips, and its scan agent keeps running; once
+//! scan-and-repair brings the count below `drain_exit` *and* the
+//! minimum dwell has elapsed the chip is *re-admitted* and the router
+//! restores its traffic share. If every chip is drained at
 //! once the fleet chooses degraded continuity over outage: all chips
 //! keep serving (and routing falls back to the full set) so no request
 //! is ever dropped.
@@ -51,12 +52,12 @@ use crate::serve::scan_agent::EventKind;
 use crate::serve::{pool, BatchJob, FaultPlan, RequestRecord};
 
 pub use chip::{chip_seed, ChipSim, ChipSpec};
-pub use lifecycle::NEVER_DRAIN;
+pub use lifecycle::{LifecyclePolicy, NEVER_DRAIN};
 pub use router::{Router, RoutingPolicy};
 
 /// Configuration of one fleet run. As with `serve`, every metric is a
 /// pure function of everything here except `executor_threads`.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct FleetConfig {
     /// Cluster master seed (chip `k` derives its own via
     /// [`chip_seed`]).
@@ -84,9 +85,10 @@ pub struct FleetConfig {
     /// Optional mid-run fault injection (per chip, independent
     /// streams).
     pub faults: Option<FaultPlan>,
-    /// Live-fault count at which a chip is drained
-    /// ([`NEVER_DRAIN`] disables the lifecycle).
-    pub drain_threshold: usize,
+    /// Drain/re-admit hysteresis ([`LifecyclePolicy::NEVER`] disables
+    /// the lifecycle; [`LifecyclePolicy::single`] is the legacy
+    /// shared-threshold rule).
+    pub lifecycle: LifecyclePolicy,
 }
 
 impl FleetConfig {
@@ -110,7 +112,7 @@ impl FleetConfig {
             executor_threads: cfg.executor_threads,
             windows: cfg.windows,
             faults: cfg.faults,
-            drain_threshold: NEVER_DRAIN,
+            lifecycle: LifecyclePolicy::NEVER,
         }
     }
 }
@@ -261,7 +263,7 @@ pub fn simulate_fleet(engine: &Engine, cfg: &FleetConfig) -> FleetTimeline {
                 k,
                 cfg.seed,
                 cfg.faults.as_ref(),
-                cfg.drain_threshold,
+                cfg.lifecycle,
                 cfg.max_batch,
                 cfg.max_wait_cycles,
             )
@@ -494,7 +496,7 @@ mod tests {
             executor_threads: 2,
             windows: 4,
             faults: None,
-            drain_threshold: NEVER_DRAIN,
+            lifecycle: LifecyclePolicy::NEVER,
         }
     }
 
@@ -677,7 +679,7 @@ mod tests {
             fpt_capacity: 8,
             max_arrivals: 6,
         });
-        cfg.drain_threshold = 1;
+        cfg.lifecycle = LifecyclePolicy::single(1);
         let t = simulate_fleet(&engine, &cfg);
         assert_eq!(t.requests.len(), 96, "zero dropped requests");
         // a job may start on a drained chip only if no chip was healthy

@@ -29,7 +29,11 @@
 //! traffic (`repro serve`, DESIGN.md §5) — and [`fleet`] scales that
 //! to a multi-chip cluster: sharded serving across independently
 //! failing chips behind a health-aware router with drain/re-admit
-//! fault-domain isolation (`repro fleet`, DESIGN.md §6).
+//! fault-domain isolation (`repro fleet`, DESIGN.md §6). Every
+//! serve/fleet experiment is configured through [`scenario`] — a
+//! declarative, validated spec API with a canonical `.scn` text
+//! format, preset registry and data-driven sweep grids
+//! (`repro scenario`, DESIGN.md §7).
 //!
 //! Start at [`coordinator`] for the experiment registry, or run
 //! `cargo run --release -- list`.
@@ -45,6 +49,7 @@ pub mod inference;
 pub mod perfmodel;
 pub mod redundancy;
 pub mod runtime;
+pub mod scenario;
 pub mod serve;
 pub mod testkit;
 pub mod util;

@@ -8,6 +8,11 @@
 //!                                #   writes BENCH_serve.json (run from repo root)
 //! repro fleet [flags]            # multi-chip fleet grid + drain scenario;
 //!                                #   writes BENCH_fleet.json (run from repo root)
+//! repro scenario <name|path|all> [flags]
+//!                                # run a declarative scenario spec: a preset
+//!                                #   name (`repro scenario list` enumerates),
+//!                                #   a .scn file path, or `all` presets;
+//!                                #   writes BENCH_scenario_<name>.json
 //! repro info                     # artifact status + active backend
 //!
 //! flags: --configs N   Monte-Carlo configs per point (default 10000)
@@ -131,6 +136,72 @@ fn cmd_fleet(rest: &[String]) -> Result<()> {
     Ok(())
 }
 
+fn cmd_scenario(rest: &[String]) -> Result<()> {
+    let args = Args::parse(rest, &serve_flag_specs())?;
+    let mut opts = opts_from(&args)?;
+    opts.threads = args.get_parse("workers", opts.threads)?;
+    let smoke = args.has("smoke") || opts.fast;
+    let Some(target) = args.positionals.first().map(|s| s.as_str()) else {
+        bail!(
+            "usage: repro scenario <preset|path.scn|all|list> [flags] — presets: {}",
+            hyca::scenario::presets::names().join(", ")
+        );
+    };
+    if target == "list" {
+        println!("registered scenario presets (canonical specs in scenarios/*.scn):\n");
+        for name in hyca::scenario::presets::names() {
+            let spec = hyca::scenario::preset(name).unwrap();
+            println!(
+                "  {:<20} {} driver, {} cells full / {} smoke, hash {}",
+                name,
+                spec.driver.id(),
+                spec.cells(false).len(),
+                spec.cells(true).len(),
+                spec.spec_hash()
+            );
+        }
+        return Ok(());
+    }
+    let specs: Vec<hyca::scenario::ScenarioSpec> = if target == "all" {
+        hyca::scenario::presets::all()
+    } else if let Some(spec) = hyca::scenario::preset(target) {
+        vec![spec]
+    } else {
+        let text = std::fs::read_to_string(target)
+            .with_context(|| format!("no preset or readable .scn file named {target:?}"))?;
+        vec![hyca::scenario::ScenarioSpec::parse(&text)?]
+    };
+    for spec in specs {
+        // the spec's own seed applies unless --seed was given explicitly
+        let seed = match args.get("seed") {
+            Some(_) => opts.seed,
+            None => spec.seed,
+        };
+        eprintln!(
+            "[repro] scenario {} — {} grid ({} cells, driver {}, seed={seed:#x}, \
+             executor workers={}, spec {})",
+            spec.name,
+            if smoke { "smoke" } else { "full" },
+            spec.cells(smoke).len(),
+            spec.driver.id(),
+            opts.threads,
+            spec.spec_hash()
+        );
+        let t0 = std::time::Instant::now();
+        let (tables, json) =
+            coordinator::exp_scenario::run_spec(&spec, seed, opts.threads, smoke)?;
+        report::emit(&opts.out_dir, &format!("scenario_{}", spec.name), &tables)?;
+        let bench = format!("BENCH_scenario_{}.json", spec.name);
+        std::fs::write(&bench, &json).with_context(|| format!("writing {bench}"))?;
+        eprintln!(
+            "[repro] scenario {} done in {:.1}s — baseline written to {bench}",
+            spec.name,
+            t0.elapsed().as_secs_f64()
+        );
+    }
+    Ok(())
+}
+
 fn cmd_serve(rest: &[String]) -> Result<()> {
     let args = Args::parse(rest, &serve_flag_specs())?;
     let mut opts = opts_from(&args)?;
@@ -222,7 +293,7 @@ fn main() -> Result<()> {
                  grid for CI\n  --chips <value>    fleet only: restrict \
                  the grid to one cluster size\n",
                 usage(
-                    "repro <list|exp|all|serve|fleet|info>",
+                    "repro <list|exp|all|serve|fleet|scenario|info>",
                     "HyCA reproduction CLI",
                     &flag_specs()
                 )
@@ -236,6 +307,7 @@ fn main() -> Result<()> {
         "info" => cmd_info()?,
         "serve" => cmd_serve(rest)?,
         "fleet" => cmd_fleet(rest)?,
+        "scenario" => cmd_scenario(rest)?,
         "exp" => {
             let args = Args::parse(rest, &flag_specs())?;
             let Some(id) = args.positionals.first() else {

@@ -1,0 +1,299 @@
+//! Fluent, validating construction of [`ScenarioSpec`]s. Every setter
+//! consumes and returns the builder; [`ScenarioBuilder::build`] runs
+//! [`ScenarioSpec::validate`] and returns typed [`ScenarioError`]s —
+//! a preset or test can never hand out an invalid spec.
+//!
+//! ```
+//! use hyca::scenario::ScenarioBuilder;
+//! let spec = ScenarioBuilder::new("demo")
+//!     .chip(8, 8, 2)
+//!     .clients_fixed(16)
+//!     .requests(64, 32)
+//!     .build()
+//!     .unwrap();
+//! assert_eq!(spec.name, "demo");
+//! ```
+
+use crate::array::Dims;
+use crate::fleet::lifecycle::LifecyclePolicy;
+use crate::fleet::RoutingPolicy;
+
+use super::{
+    ChipDef, ClientLoad, Driver, FaultEnv, Knob, Redundancy, RequestBudget, ScenarioError,
+    ScenarioSpec, SweepAxis, Workload,
+};
+
+/// Builder over [`ScenarioSpec`] with the registry's shared defaults:
+/// fleet driver, seed `0xC0FFEE`, saturating clients (1 per lane-slot,
+/// min 8), think 500, batch cap 8, deadline 8000 cycles, 96 requests,
+/// 4 windows, no faults, paper redundancy (group 8, FPT 8, scan
+/// 16000), round-robin routing, lifecycle disabled, no sweep.
+#[derive(Debug, Clone)]
+pub struct ScenarioBuilder {
+    spec: ScenarioSpec,
+}
+
+impl ScenarioBuilder {
+    pub fn new(name: &str) -> Self {
+        Self {
+            spec: ScenarioSpec {
+                name: name.to_string(),
+                driver: Driver::Fleet,
+                seed: 0xC0FFEE,
+                topology: Vec::new(),
+                workload: Workload {
+                    clients: ClientLoad::Saturate { per_lane_slot: 1, min: 8 },
+                    think_cycles: 500,
+                    max_batch: 8,
+                    max_wait_cycles: 8_000,
+                    requests: RequestBudget { per_chip: false, count: Knob::flat(96) },
+                    windows: 4,
+                },
+                faults: None,
+                redundancy: Redundancy {
+                    group_width: 8,
+                    fpt_capacity: 8,
+                    scan_period_cycles: Knob::flat(16_000),
+                },
+                router: RoutingPolicy::RoundRobin,
+                lifecycle: LifecyclePolicy::NEVER,
+                sweep: Vec::new(),
+            },
+        }
+    }
+
+    pub fn driver(mut self, driver: Driver) -> Self {
+        self.spec.driver = driver;
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.spec.seed = seed;
+        self
+    }
+
+    /// Append one chip to the topology.
+    pub fn chip(mut self, rows: usize, cols: usize, lanes: usize) -> Self {
+        self.spec.topology.push(ChipDef { dims: Dims::new(rows, cols), lanes });
+        self
+    }
+
+    /// Append `n` identical chips.
+    pub fn chips(mut self, n: usize, rows: usize, cols: usize, lanes: usize) -> Self {
+        for _ in 0..n {
+            self = self.chip(rows, cols, lanes);
+        }
+        self
+    }
+
+    pub fn clients_fixed(mut self, n: usize) -> Self {
+        self.spec.workload.clients = ClientLoad::Fixed(n);
+        self
+    }
+
+    /// Capacity-saturating clients: `total_lanes × max_batch ×
+    /// per_lane_slot`, floored at `min`.
+    pub fn clients_saturate(mut self, per_lane_slot: usize, min: usize) -> Self {
+        self.spec.workload.clients = ClientLoad::Saturate { per_lane_slot, min };
+        self
+    }
+
+    pub fn think_cycles(mut self, cycles: u64) -> Self {
+        self.spec.workload.think_cycles = cycles;
+        self
+    }
+
+    pub fn max_batch(mut self, b: usize) -> Self {
+        self.spec.workload.max_batch = b;
+        self
+    }
+
+    pub fn max_wait_cycles(mut self, cycles: u64) -> Self {
+        self.spec.workload.max_wait_cycles = cycles;
+        self
+    }
+
+    /// Fixed request budget (`full`, reduced to `smoke` under
+    /// `--smoke`).
+    pub fn requests(mut self, full: usize, smoke: usize) -> Self {
+        self.spec.workload.requests =
+            RequestBudget { per_chip: false, count: Knob::split(full, smoke) };
+        self
+    }
+
+    /// Per-chip request budget: multiplied by the resolved cluster
+    /// size of each cell.
+    pub fn requests_per_chip(mut self, full: usize, smoke: usize) -> Self {
+        self.spec.workload.requests =
+            RequestBudget { per_chip: true, count: Knob::split(full, smoke) };
+        self
+    }
+
+    pub fn windows(mut self, n: usize) -> Self {
+        self.spec.workload.windows = n;
+        self
+    }
+
+    /// Enable mid-run fault arrivals (full/smoke mean and horizon).
+    pub fn fault_arrivals(
+        mut self,
+        mean_full: f64,
+        mean_smoke: f64,
+        horizon_full: u64,
+        horizon_smoke: u64,
+        max_arrivals: usize,
+    ) -> Self {
+        self.spec.faults = Some(FaultEnv {
+            mean_interarrival_cycles: Knob::split(mean_full, mean_smoke),
+            horizon_cycles: Knob::split(horizon_full, horizon_smoke),
+            max_arrivals,
+        });
+        self
+    }
+
+    pub fn scan_period(mut self, full: u64, smoke: u64) -> Self {
+        self.spec.redundancy.scan_period_cycles = Knob::split(full, smoke);
+        self
+    }
+
+    pub fn group_width(mut self, w: usize) -> Self {
+        self.spec.redundancy.group_width = w;
+        self
+    }
+
+    pub fn fpt_capacity(mut self, c: usize) -> Self {
+        self.spec.redundancy.fpt_capacity = c;
+        self
+    }
+
+    pub fn router(mut self, policy: RoutingPolicy) -> Self {
+        self.spec.router = policy;
+        self
+    }
+
+    /// The legacy single-threshold lifecycle (enter = exit, no dwell).
+    pub fn drain_single(mut self, threshold: usize) -> Self {
+        self.spec.lifecycle = LifecyclePolicy::single(threshold);
+        self
+    }
+
+    /// Full hysteresis: drain at `enter` live faults, re-admit once
+    /// the count falls below `exit` *and* `min_dwell_cycles` have
+    /// passed since the drain started.
+    pub fn hysteresis(mut self, enter: usize, exit: usize, min_dwell_cycles: u64) -> Self {
+        self.spec.lifecycle =
+            LifecyclePolicy { drain_enter: enter, drain_exit: exit, min_dwell_cycles };
+        self
+    }
+
+    /// Append one sweep axis (first appended = outermost).
+    pub fn sweep(mut self, axis: SweepAxis) -> Self {
+        self.spec.sweep.push(axis);
+        self
+    }
+
+    /// Validate and return the spec.
+    pub fn build(self) -> Result<ScenarioSpec, ScenarioError> {
+        self.spec.validate()?;
+        Ok(self.spec)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_defaults_produce_a_valid_fleet_spec() {
+        let spec = ScenarioBuilder::new("x").chip(8, 8, 2).build().unwrap();
+        assert_eq!(spec.driver, Driver::Fleet);
+        assert_eq!(spec.seed, 0xC0FFEE);
+        assert_eq!(spec.lifecycle, LifecyclePolicy::NEVER);
+        assert!(spec.faults.is_none());
+        assert!(spec.sweep.is_empty());
+    }
+
+    #[test]
+    fn build_rejects_bad_dims_empty_sweep_and_bad_hysteresis() {
+        // bad dims
+        assert_eq!(
+            ScenarioBuilder::new("x").chip(0, 8, 2).build(),
+            Err(ScenarioError::BadDims { chip: 0, rows: 0, cols: 8 })
+        );
+        // empty sweep axis
+        assert_eq!(
+            ScenarioBuilder::new("x")
+                .chip(8, 8, 2)
+                .sweep(SweepAxis::Lanes(Knob::flat(vec![])))
+                .build(),
+            Err(ScenarioError::EmptySweep { axis: "lanes" })
+        );
+        // exit above enter
+        assert_eq!(
+            ScenarioBuilder::new("x").chip(8, 8, 2).hysteresis(2, 3, 0).build(),
+            Err(ScenarioError::ExitAboveEnter { enter: 2, exit: 3 })
+        );
+    }
+
+    #[test]
+    fn build_rejects_serve_driver_shape_violations() {
+        assert_eq!(
+            ScenarioBuilder::new("x").driver(Driver::Serve).chip(8, 8, 2).chip(8, 8, 2).build(),
+            Err(ScenarioError::ServeDriverShape { chips: 2 })
+        );
+        assert_eq!(
+            ScenarioBuilder::new("x")
+                .driver(Driver::Serve)
+                .chip(8, 8, 2)
+                .sweep(SweepAxis::Chips(Knob::flat(vec![1, 2])))
+                .build(),
+            Err(ScenarioError::ServeDriverAxis { axis: "chips" })
+        );
+    }
+
+    #[test]
+    fn build_rejects_topology_axis_combined_with_chips_or_lanes() {
+        // a topology variant replaces the whole chip list, so pairing
+        // it with chips/lanes axes would silently overwrite them
+        for other in [
+            SweepAxis::Chips(Knob::flat(vec![1, 2])),
+            SweepAxis::Lanes(Knob::flat(vec![1, 2])),
+        ] {
+            let topo = SweepAxis::Topology(Knob::flat(vec![vec![Dims::new(8, 8)]]));
+            let err = ScenarioBuilder::new("x")
+                .chip(8, 8, 2)
+                .sweep(other.clone())
+                .sweep(topo.clone())
+                .build()
+                .unwrap_err();
+            assert!(matches!(err, ScenarioError::ConflictingAxes { .. }), "{err}");
+            // order-independent
+            let err = ScenarioBuilder::new("x")
+                .chip(8, 8, 2)
+                .sweep(topo)
+                .sweep(other)
+                .build()
+                .unwrap_err();
+            assert!(matches!(err, ScenarioError::ConflictingAxes { .. }), "{err}");
+        }
+    }
+
+    #[test]
+    fn build_rejects_duplicate_axes_and_orphan_fault_axis() {
+        assert_eq!(
+            ScenarioBuilder::new("x")
+                .chip(8, 8, 2)
+                .sweep(SweepAxis::Chips(Knob::flat(vec![1])))
+                .sweep(SweepAxis::Chips(Knob::flat(vec![2])))
+                .build(),
+            Err(ScenarioError::DuplicateAxis { axis: "chips" })
+        );
+        assert_eq!(
+            ScenarioBuilder::new("x")
+                .chip(8, 8, 2)
+                .sweep(SweepAxis::FaultMean(Knob::flat(vec![1000.0])))
+                .build(),
+            Err(ScenarioError::FaultAxisWithoutFaults)
+        );
+    }
+}

@@ -1,0 +1,552 @@
+//! The dependency-free canonical text format of a [`ScenarioSpec`]
+//! (`scenarios/*.scn`). Round-trip stable: `parse(to_canonical_string(s))
+//! == s` for every valid spec, and `to_canonical_string(parse(t))` is
+//! a fixpoint — so a spec file can be hashed ([`ScenarioSpec::spec_hash`])
+//! into bench schemas and diffed meaningfully.
+//!
+//! Grammar (line-based; `#` starts a comment, blank lines ignored):
+//!
+//! ```text
+//! scenario "<name>"                  # [a-z0-9_-]+
+//!
+//! [meta]
+//! driver = serve | fleet
+//! seed = <u64>                       # decimal or 0x-hex
+//!
+//! [topology]                         # one line per chip, in order
+//! chip = <rows>x<cols> lanes=<n>
+//!
+//! [workload]
+//! clients = fixed <n> | saturate <per_lane_slot> min <min>
+//! think_cycles = <u64>
+//! max_batch = <n>
+//! max_wait_cycles = <u64>
+//! requests = <n> [smoke <n>] [per_chip]
+//! windows = <n>
+//!
+//! [faults]                           # optional section = no injection
+//! mean_interarrival_cycles = <f64> [smoke <f64>]
+//! horizon_cycles = <u64> [smoke <u64>]
+//! max_arrivals = <n>
+//!
+//! [redundancy]
+//! group_width = <n>
+//! fpt_capacity = <n>
+//! scan_period_cycles = <u64> [smoke <u64>]
+//!
+//! [policy]
+//! router = round_robin | jsq | health_weighted
+//! drain_enter = never | <n>
+//! drain_exit = <n>                   # only when enter != never; default = enter
+//! min_dwell_cycles = <u64>           # only when enter != never; default = 0
+//!
+//! [sweep]                            # optional; line order = axis order,
+//! lanes = <n>,... [smoke <n>,...]    #   first axis outermost
+//! max_batch = <n>,... [smoke ...]
+//! chips = <n>,... [smoke ...]
+//! router = <policy>,...
+//! topology = <variant> ; ... [smoke <variant> ; ...]
+//!                                    # variant: 3*8x8 or 8x8+16x16+32x32
+//!                                    #   (lanes copied from chip 0)
+//! fault_mean = <f64>,... [smoke ...]
+//! ```
+
+use crate::array::Dims;
+use crate::fleet::lifecycle::{LifecyclePolicy, NEVER_DRAIN};
+use crate::fleet::RoutingPolicy;
+
+use super::builder::ScenarioBuilder;
+use super::{
+    ChipDef, ClientLoad, Driver, FaultEnv, Knob, ScenarioError, ScenarioSpec, SweepAxis,
+};
+
+fn knob_str<T: std::fmt::Display + PartialEq>(k: &Knob<T>) -> String {
+    if k.is_split() {
+        format!("{} smoke {}", k.full, k.smoke)
+    } else {
+        format!("{}", k.full)
+    }
+}
+
+fn list_str<T: std::fmt::Display>(xs: &[T]) -> String {
+    xs.iter().map(|x| x.to_string()).collect::<Vec<_>>().join(",")
+}
+
+fn knob_list_str<T: std::fmt::Display + PartialEq>(k: &Knob<Vec<T>>) -> String {
+    if k.is_split() {
+        format!("{} smoke {}", list_str(&k.full), list_str(&k.smoke))
+    } else {
+        list_str(&k.full)
+    }
+}
+
+fn topo_variants_str(vs: &[Vec<Dims>]) -> String {
+    vs.iter()
+        .map(|v| {
+            super::sweep::topology_label(
+                &v.iter().map(|&dims| ChipDef { dims, lanes: 1 }).collect::<Vec<_>>(),
+            )
+        })
+        .collect::<Vec<_>>()
+        .join(" ; ")
+}
+
+/// Render the canonical text form (every field explicit, fixed order).
+pub fn to_canonical_string(spec: &ScenarioSpec) -> String {
+    let mut s = String::new();
+    s.push_str("# hyca scenario spec v1 — grammar in DESIGN.md §7\n");
+    s.push_str(&format!("scenario \"{}\"\n", spec.name));
+    s.push_str("\n[meta]\n");
+    s.push_str(&format!("driver = {}\n", spec.driver.id()));
+    s.push_str(&format!("seed = {}\n", spec.seed));
+    s.push_str("\n[topology]\n");
+    for c in &spec.topology {
+        s.push_str(&format!("chip = {} lanes={}\n", c.dims, c.lanes));
+    }
+    s.push_str("\n[workload]\n");
+    let w = &spec.workload;
+    match w.clients {
+        ClientLoad::Fixed(n) => s.push_str(&format!("clients = fixed {n}\n")),
+        ClientLoad::Saturate { per_lane_slot, min } => {
+            s.push_str(&format!("clients = saturate {per_lane_slot} min {min}\n"))
+        }
+    }
+    s.push_str(&format!("think_cycles = {}\n", w.think_cycles));
+    s.push_str(&format!("max_batch = {}\n", w.max_batch));
+    s.push_str(&format!("max_wait_cycles = {}\n", w.max_wait_cycles));
+    let per_chip = if w.requests.per_chip { " per_chip" } else { "" };
+    s.push_str(&format!("requests = {}{per_chip}\n", knob_str(&w.requests.count)));
+    s.push_str(&format!("windows = {}\n", w.windows));
+    if let Some(env) = &spec.faults {
+        s.push_str("\n[faults]\n");
+        s.push_str(&format!(
+            "mean_interarrival_cycles = {}\n",
+            knob_str(&env.mean_interarrival_cycles)
+        ));
+        s.push_str(&format!("horizon_cycles = {}\n", knob_str(&env.horizon_cycles)));
+        s.push_str(&format!("max_arrivals = {}\n", env.max_arrivals));
+    }
+    s.push_str("\n[redundancy]\n");
+    s.push_str(&format!("group_width = {}\n", spec.redundancy.group_width));
+    s.push_str(&format!("fpt_capacity = {}\n", spec.redundancy.fpt_capacity));
+    s.push_str(&format!(
+        "scan_period_cycles = {}\n",
+        knob_str(&spec.redundancy.scan_period_cycles)
+    ));
+    s.push_str("\n[policy]\n");
+    s.push_str(&format!("router = {}\n", spec.router));
+    if spec.lifecycle.drain_enter == NEVER_DRAIN {
+        s.push_str("drain_enter = never\n");
+    } else {
+        s.push_str(&format!("drain_enter = {}\n", spec.lifecycle.drain_enter));
+        s.push_str(&format!("drain_exit = {}\n", spec.lifecycle.drain_exit));
+        s.push_str(&format!("min_dwell_cycles = {}\n", spec.lifecycle.min_dwell_cycles));
+    }
+    if !spec.sweep.is_empty() {
+        s.push_str("\n[sweep]\n");
+        for axis in &spec.sweep {
+            let value = match axis {
+                SweepAxis::Lanes(k) => knob_list_str(k),
+                SweepAxis::MaxBatch(k) => knob_list_str(k),
+                SweepAxis::Chips(k) => knob_list_str(k),
+                SweepAxis::Router(ps) => list_str(ps),
+                SweepAxis::Topology(k) => {
+                    if k.is_split() {
+                        format!(
+                            "{} smoke {}",
+                            topo_variants_str(&k.full),
+                            topo_variants_str(&k.smoke)
+                        )
+                    } else {
+                        topo_variants_str(&k.full)
+                    }
+                }
+                SweepAxis::FaultMean(k) => knob_list_str(k),
+            };
+            s.push_str(&format!("{} = {}\n", axis.key(), value));
+        }
+    }
+    s
+}
+
+fn perr(line: usize, msg: impl Into<String>) -> ScenarioError {
+    ScenarioError::Parse { line, msg: msg.into() }
+}
+
+fn parse_u64(v: &str, line: usize) -> Result<u64, ScenarioError> {
+    let r = match v.strip_prefix("0x").or_else(|| v.strip_prefix("0X")) {
+        Some(hex) => u64::from_str_radix(hex, 16),
+        None => v.parse::<u64>(),
+    };
+    r.map_err(|_| perr(line, format!("cannot parse {v:?} as an integer")))
+}
+
+fn parse_usize(v: &str, line: usize) -> Result<usize, ScenarioError> {
+    Ok(parse_u64(v, line)? as usize)
+}
+
+fn parse_f64(v: &str, line: usize) -> Result<f64, ScenarioError> {
+    v.parse::<f64>().map_err(|_| perr(line, format!("cannot parse {v:?} as a number")))
+}
+
+fn parse_dims(v: &str, line: usize) -> Result<Dims, ScenarioError> {
+    let (r, c) = v
+        .split_once('x')
+        .ok_or_else(|| perr(line, format!("expected <rows>x<cols>, got {v:?}")))?;
+    Ok(Dims::new(parse_usize(r.trim(), line)?, parse_usize(c.trim(), line)?))
+}
+
+fn parse_router(v: &str, line: usize) -> Result<RoutingPolicy, ScenarioError> {
+    RoutingPolicy::all()
+        .into_iter()
+        .find(|p| p.id() == v)
+        .ok_or_else(|| perr(line, format!("unknown router policy {v:?}")))
+}
+
+/// Split `"<full> smoke <smoke>"`; absent keyword means no override.
+fn split_smoke(v: &str) -> (&str, Option<&str>) {
+    match v.split_once(" smoke ") {
+        Some((f, s)) => (f.trim(), Some(s.trim())),
+        None => (v.trim(), None),
+    }
+}
+
+fn parse_knob<T: Clone, F: Fn(&str, usize) -> Result<T, ScenarioError>>(
+    v: &str,
+    line: usize,
+    f: F,
+) -> Result<Knob<T>, ScenarioError> {
+    let (full, smoke) = split_smoke(v);
+    let full = f(full, line)?;
+    Ok(match smoke {
+        Some(sv) => Knob::split(full, f(sv, line)?),
+        None => Knob::flat(full),
+    })
+}
+
+fn parse_list<T, F: Fn(&str, usize) -> Result<T, ScenarioError>>(
+    v: &str,
+    line: usize,
+    f: &F,
+) -> Result<Vec<T>, ScenarioError> {
+    if v.trim().is_empty() {
+        return Ok(Vec::new());
+    }
+    v.split(',').map(|x| f(x.trim(), line)).collect()
+}
+
+/// One topology variant: `+`-joined groups of `RxC` or `n*RxC`.
+fn parse_topo_variant(v: &str, line: usize) -> Result<Vec<Dims>, ScenarioError> {
+    let mut out = Vec::new();
+    for part in v.split('+') {
+        let part = part.trim();
+        let (n, dims) = match part.split_once('*') {
+            Some((n, d)) => (parse_usize(n.trim(), line)?, parse_dims(d.trim(), line)?),
+            None => (1, parse_dims(part, line)?),
+        };
+        for _ in 0..n {
+            out.push(dims);
+        }
+    }
+    Ok(out)
+}
+
+fn parse_topo_variants(v: &str, line: usize) -> Result<Vec<Vec<Dims>>, ScenarioError> {
+    v.split(';').map(|x| parse_topo_variant(x.trim(), line)).collect()
+}
+
+/// Parse the canonical text format. Missing keys take the
+/// [`ScenarioBuilder`] defaults (a present `[faults]` section defaults
+/// to mean 20000, horizon 160000, max_arrivals 6); the assembled spec
+/// is validated before being returned.
+pub fn parse(text: &str) -> Result<ScenarioSpec, ScenarioError> {
+    // start from builder defaults so hand-written files may omit keys
+    let mut spec = ScenarioBuilder::new("placeholder")
+        .chip(8, 8, 1)
+        .build()
+        .expect("builder defaults are valid");
+    spec.topology.clear();
+    spec.name.clear();
+
+    let mut saw_name = false;
+    let mut section: Option<&str> = None;
+    let mut faults: Option<FaultEnv> = None;
+    let mut drain_enter: Option<Option<usize>> = None; // Some(None) = never
+    let mut drain_exit: Option<usize> = None;
+    let mut min_dwell: Option<u64> = None;
+
+    for (i, raw) in text.lines().enumerate() {
+        let line = i + 1;
+        let l = raw.split('#').next().unwrap_or("").trim();
+        if l.is_empty() {
+            continue;
+        }
+        if !saw_name {
+            let rest = l
+                .strip_prefix("scenario")
+                .ok_or_else(|| perr(line, "expected `scenario \"<name>\"` first"))?
+                .trim();
+            let name = rest
+                .strip_prefix('"')
+                .and_then(|r| r.strip_suffix('"'))
+                .ok_or_else(|| perr(line, "scenario name must be double-quoted"))?;
+            spec.name = name.to_string();
+            saw_name = true;
+            continue;
+        }
+        if let Some(sec) = l.strip_prefix('[').and_then(|r| r.strip_suffix(']')) {
+            const SECTIONS: [&str; 7] =
+                ["meta", "topology", "workload", "faults", "redundancy", "policy", "sweep"];
+            if !SECTIONS.contains(&sec) {
+                return Err(perr(line, format!("unknown section [{sec}]")));
+            }
+            if sec == "faults" && faults.is_none() {
+                faults = Some(FaultEnv {
+                    mean_interarrival_cycles: Knob::flat(20_000.0),
+                    horizon_cycles: Knob::flat(160_000),
+                    max_arrivals: 6,
+                });
+            }
+            section = Some(sec);
+            continue;
+        }
+        let (key, value) = l
+            .split_once('=')
+            .map(|(k, v)| (k.trim(), v.trim()))
+            .ok_or_else(|| perr(line, format!("expected `key = value`, got {l:?}")))?;
+        let Some(sec) = section else {
+            return Err(perr(line, "key before any [section]"));
+        };
+        match (sec, key) {
+            ("meta", "driver") => {
+                spec.driver = match value {
+                    "serve" => Driver::Serve,
+                    "fleet" => Driver::Fleet,
+                    other => return Err(perr(line, format!("unknown driver {other:?}"))),
+                };
+            }
+            ("meta", "seed") => spec.seed = parse_u64(value, line)?,
+            ("topology", "chip") => {
+                let mut toks = value.split_whitespace();
+                let dims =
+                    parse_dims(toks.next().ok_or_else(|| perr(line, "empty chip"))?, line)?;
+                let mut lanes = 1usize;
+                for t in toks {
+                    match t.split_once('=') {
+                        Some(("lanes", v)) => lanes = parse_usize(v, line)?,
+                        _ => return Err(perr(line, format!("unknown chip attribute {t:?}"))),
+                    }
+                }
+                spec.topology.push(ChipDef { dims, lanes });
+            }
+            ("workload", "clients") => {
+                let toks: Vec<&str> = value.split_whitespace().collect();
+                spec.workload.clients = match toks.as_slice() {
+                    ["fixed", n] => ClientLoad::Fixed(parse_usize(n, line)?),
+                    ["saturate", s, "min", m] => ClientLoad::Saturate {
+                        per_lane_slot: parse_usize(s, line)?,
+                        min: parse_usize(m, line)?,
+                    },
+                    _ => {
+                        return Err(perr(
+                            line,
+                            "clients = fixed <n> | saturate <slot> min <min>",
+                        ))
+                    }
+                };
+            }
+            ("workload", "think_cycles") => {
+                spec.workload.think_cycles = parse_u64(value, line)?
+            }
+            ("workload", "max_batch") => spec.workload.max_batch = parse_usize(value, line)?,
+            ("workload", "max_wait_cycles") => {
+                spec.workload.max_wait_cycles = parse_u64(value, line)?
+            }
+            ("workload", "requests") => {
+                let (body, per_chip) = match value.strip_suffix("per_chip") {
+                    Some(rest) => (rest.trim(), true),
+                    None => (value, false),
+                };
+                spec.workload.requests.per_chip = per_chip;
+                spec.workload.requests.count = parse_knob(body, line, parse_usize)?;
+            }
+            ("workload", "windows") => spec.workload.windows = parse_usize(value, line)?,
+            ("faults", "mean_interarrival_cycles") => {
+                faults.as_mut().unwrap().mean_interarrival_cycles =
+                    parse_knob(value, line, parse_f64)?;
+            }
+            ("faults", "horizon_cycles") => {
+                faults.as_mut().unwrap().horizon_cycles = parse_knob(value, line, parse_u64)?;
+            }
+            ("faults", "max_arrivals") => {
+                faults.as_mut().unwrap().max_arrivals = parse_usize(value, line)?;
+            }
+            ("redundancy", "group_width") => {
+                spec.redundancy.group_width = parse_usize(value, line)?
+            }
+            ("redundancy", "fpt_capacity") => {
+                spec.redundancy.fpt_capacity = parse_usize(value, line)?
+            }
+            ("redundancy", "scan_period_cycles") => {
+                spec.redundancy.scan_period_cycles = parse_knob(value, line, parse_u64)?;
+            }
+            ("policy", "router") => spec.router = parse_router(value, line)?,
+            ("policy", "drain_enter") => {
+                drain_enter = Some(if value == "never" {
+                    None
+                } else {
+                    Some(parse_usize(value, line)?)
+                });
+            }
+            ("policy", "drain_exit") => drain_exit = Some(parse_usize(value, line)?),
+            ("policy", "min_dwell_cycles") => min_dwell = Some(parse_u64(value, line)?),
+            ("sweep", key) => {
+                let axis = match key {
+                    "lanes" => SweepAxis::Lanes(parse_knob(value, line, |v, l| {
+                        parse_list(v, l, &parse_usize)
+                    })?),
+                    "max_batch" => SweepAxis::MaxBatch(parse_knob(value, line, |v, l| {
+                        parse_list(v, l, &parse_usize)
+                    })?),
+                    "chips" => SweepAxis::Chips(parse_knob(value, line, |v, l| {
+                        parse_list(v, l, &parse_usize)
+                    })?),
+                    "router" => SweepAxis::Router(parse_list(value, line, &parse_router)?),
+                    "topology" => {
+                        SweepAxis::Topology(parse_knob(value, line, parse_topo_variants)?)
+                    }
+                    "fault_mean" => SweepAxis::FaultMean(parse_knob(value, line, |v, l| {
+                        parse_list(v, l, &parse_f64)
+                    })?),
+                    other => return Err(perr(line, format!("unknown sweep axis {other:?}"))),
+                };
+                spec.sweep.push(axis);
+            }
+            (sec, key) => {
+                return Err(perr(line, format!("unknown key {key:?} in section [{sec}]")))
+            }
+        }
+    }
+    if !saw_name {
+        return Err(perr(0, "empty spec: expected `scenario \"<name>\"`"));
+    }
+    spec.faults = faults;
+    spec.lifecycle = match drain_enter {
+        None | Some(None) => LifecyclePolicy {
+            drain_enter: NEVER_DRAIN,
+            // keep stray exit/dwell so validation reports the conflict
+            drain_exit: drain_exit.unwrap_or(NEVER_DRAIN),
+            min_dwell_cycles: min_dwell.unwrap_or(0),
+        },
+        Some(Some(enter)) => LifecyclePolicy {
+            drain_enter: enter,
+            drain_exit: drain_exit.unwrap_or(enter),
+            min_dwell_cycles: min_dwell.unwrap_or(0),
+        },
+    };
+    spec.validate()?;
+    Ok(spec)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scenario::presets;
+
+    #[test]
+    fn every_preset_round_trips_through_the_canonical_format() {
+        for name in presets::names() {
+            let spec = presets::preset(name).unwrap();
+            let text = spec.to_canonical_string();
+            let back = ScenarioSpec::parse(&text)
+                .unwrap_or_else(|e| panic!("{name}: canonical text failed to parse: {e}\n{text}"));
+            assert_eq!(back, spec, "{name}: round trip changed the spec");
+            assert_eq!(back.to_canonical_string(), text, "{name}: canonical not a fixpoint");
+        }
+    }
+
+    #[test]
+    fn parse_tolerates_comments_blank_lines_and_hex_seed() {
+        let text = r#"
+# a comment
+scenario "mini"   # trailing comment
+
+[meta]
+driver = fleet
+seed = 0xBEEF
+
+[topology]
+chip = 8x8 lanes=2
+chip = 16x16 lanes=1
+"#;
+        let spec = ScenarioSpec::parse(text).unwrap();
+        assert_eq!(spec.name, "mini");
+        assert_eq!(spec.seed, 0xBEEF);
+        assert_eq!(spec.topology.len(), 2);
+        assert_eq!(spec.topology[1].dims, Dims::new(16, 16));
+        assert_eq!(spec.topology[1].lanes, 1);
+    }
+
+    #[test]
+    fn parse_reports_typed_errors_with_line_numbers() {
+        // no name line
+        assert!(matches!(
+            ScenarioSpec::parse("[meta]\nseed = 1\n"),
+            Err(ScenarioError::Parse { line: 1, .. })
+        ));
+        // unknown section
+        let e = ScenarioSpec::parse("scenario \"x\"\n[nope]\n").unwrap_err();
+        assert!(matches!(e, ScenarioError::Parse { line: 2, .. }), "{e}");
+        // unknown key
+        let e =
+            ScenarioSpec::parse("scenario \"x\"\n[meta]\nfrobnicate = 1\n").unwrap_err();
+        assert!(matches!(e, ScenarioError::Parse { line: 3, .. }), "{e}");
+        // bad number
+        let e = ScenarioSpec::parse("scenario \"x\"\n[meta]\nseed = banana\n").unwrap_err();
+        assert!(matches!(e, ScenarioError::Parse { line: 3, .. }), "{e}");
+        // structural validation still runs (no topology)
+        let e = ScenarioSpec::parse("scenario \"x\"\n[meta]\nseed = 1\n").unwrap_err();
+        assert_eq!(e, ScenarioError::EmptyTopology);
+    }
+
+    #[test]
+    fn hysteresis_defaults_and_never_are_parsed() {
+        let base = "scenario \"x\"\n[topology]\nchip = 8x8 lanes=2\n[policy]\n";
+        // single threshold: exit defaults to enter, dwell to 0
+        let s = ScenarioSpec::parse(&format!("{base}drain_enter = 2\n")).unwrap();
+        assert_eq!(s.lifecycle, LifecyclePolicy::single(2));
+        // full hysteresis
+        let s = ScenarioSpec::parse(&format!(
+            "{base}drain_enter = 3\ndrain_exit = 1\nmin_dwell_cycles = 500\n"
+        ))
+        .unwrap();
+        assert_eq!(
+            s.lifecycle,
+            LifecyclePolicy { drain_enter: 3, drain_exit: 1, min_dwell_cycles: 500 }
+        );
+        // never (the default) rejects stray hysteresis keys
+        let e = ScenarioSpec::parse(&format!("{base}drain_exit = 1\n")).unwrap_err();
+        assert_eq!(e, ScenarioError::DisabledLifecycleConfigured);
+        // exit above enter is a typed validation error
+        let e = ScenarioSpec::parse(&format!("{base}drain_enter = 1\ndrain_exit = 2\n"))
+            .unwrap_err();
+        assert_eq!(e, ScenarioError::ExitAboveEnter { enter: 1, exit: 2 });
+    }
+
+    #[test]
+    fn topology_sweep_variants_parse_both_syntaxes() {
+        let text = "scenario \"x\"\n[topology]\nchip = 8x8 lanes=2\n\
+                    [sweep]\ntopology = 3*8x8 ; 8x8+16x16+32x32\n";
+        let spec = ScenarioSpec::parse(text).unwrap();
+        match &spec.sweep[0] {
+            SweepAxis::Topology(k) => {
+                assert_eq!(k.full[0], vec![Dims::new(8, 8); 3]);
+                assert_eq!(
+                    k.full[1],
+                    vec![Dims::new(8, 8), Dims::new(16, 16), Dims::new(32, 32)]
+                );
+            }
+            other => panic!("wrong axis: {other:?}"),
+        }
+    }
+}

@@ -1,0 +1,180 @@
+//! Lowering: turn a validated [`ScenarioSpec`] + resolved [`Cell`]
+//! into the executable [`ServeConfig`] / [`FleetConfig`]. This is the
+//! *only* place experiment configuration is materialized — the
+//! coordinator drivers (`exp_serve`, `exp_fleet`, `exp_scenario`) own
+//! no config constructors of their own.
+//!
+//! The lowering rules are the compatibility contract with the
+//! pre-scenario drivers (pinned by `rust/tests/scenario.rs`):
+//!
+//! * `clients`: fixed, or `total_lanes × max_batch × per_lane_slot`
+//!   floored at `min` (the saturation rule both legacy grids used);
+//! * `queue_cap = clients` (the closed loop bounds the pending set);
+//! * `total_requests`: the mode's budget, × chip count when
+//!   `per_chip`;
+//! * fault plan: arrival process from the spec's [`FaultEnv`]
+//!   (mean optionally overridden by a `fault_mean` sweep cell), scan
+//!   cadence and scheme knobs from [`super::Redundancy`].
+
+use crate::serve::{FaultPlan, ServeConfig};
+use crate::fleet::FleetConfig;
+
+use super::{Cell, ClientLoad, ScenarioError, ScenarioSpec};
+
+/// Client population of one cell (the saturation rule scales with the
+/// cell's resolved capacity).
+pub fn clients(spec: &ScenarioSpec, cell: &Cell) -> usize {
+    match spec.workload.clients {
+        ClientLoad::Fixed(n) => n,
+        ClientLoad::Saturate { per_lane_slot, min } => {
+            (cell.total_lanes() * cell.max_batch * per_lane_slot).max(min)
+        }
+    }
+}
+
+/// Request budget of one cell in the given mode.
+pub fn total_requests(spec: &ScenarioSpec, cell: &Cell, smoke: bool) -> usize {
+    let base = *spec.workload.requests.count.at(smoke);
+    if spec.workload.requests.per_chip {
+        base * cell.chips.len()
+    } else {
+        base
+    }
+}
+
+/// The fault-injection plan of one cell (`None` = fault-free).
+pub fn fault_plan(spec: &ScenarioSpec, cell: &Cell, smoke: bool) -> Option<FaultPlan> {
+    spec.faults.as_ref().map(|env| FaultPlan {
+        mean_interarrival_cycles: cell
+            .fault_mean
+            .unwrap_or(*env.mean_interarrival_cycles.at(smoke)),
+        horizon_cycles: *env.horizon_cycles.at(smoke),
+        scan_period_cycles: *spec.redundancy.scan_period_cycles.at(smoke),
+        group_width: spec.redundancy.group_width,
+        fpt_capacity: spec.redundancy.fpt_capacity,
+        max_arrivals: env.max_arrivals,
+    })
+}
+
+/// Lower one cell into a single-chip [`ServeConfig`]. Errors if the
+/// cell is not serve-shaped (exactly one chip) — statically guaranteed
+/// for validated specs with `driver = serve`.
+pub fn lower_serve(
+    spec: &ScenarioSpec,
+    cell: &Cell,
+    smoke: bool,
+    seed: u64,
+    executor_threads: usize,
+) -> Result<ServeConfig, ScenarioError> {
+    if cell.chips.len() != 1 {
+        return Err(ScenarioError::ServeDriverShape { chips: cell.chips.len() });
+    }
+    let chip = cell.chips[0];
+    let clients = clients(spec, cell);
+    Ok(ServeConfig {
+        seed,
+        dims: chip.dims,
+        lanes: chip.lanes,
+        max_batch: cell.max_batch,
+        max_wait_cycles: spec.workload.max_wait_cycles,
+        clients,
+        think_cycles: spec.workload.think_cycles,
+        total_requests: total_requests(spec, cell, smoke),
+        queue_cap: clients,
+        executor_threads,
+        windows: spec.workload.windows,
+        faults: fault_plan(spec, cell, smoke),
+    })
+}
+
+/// Lower one cell into a [`FleetConfig`].
+pub fn lower_fleet(
+    spec: &ScenarioSpec,
+    cell: &Cell,
+    smoke: bool,
+    seed: u64,
+    executor_threads: usize,
+) -> FleetConfig {
+    let clients = clients(spec, cell);
+    FleetConfig {
+        seed,
+        chips: cell.chips.iter().map(|c| crate::fleet::ChipSpec { dims: c.dims, lanes: c.lanes }).collect(),
+        policy: cell.policy,
+        max_batch: cell.max_batch,
+        max_wait_cycles: spec.workload.max_wait_cycles,
+        clients,
+        think_cycles: spec.workload.think_cycles,
+        total_requests: total_requests(spec, cell, smoke),
+        queue_cap: clients,
+        executor_threads,
+        windows: spec.workload.windows,
+        faults: fault_plan(spec, cell, smoke),
+        lifecycle: spec.lifecycle,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::array::Dims;
+    use crate::fleet::lifecycle::LifecyclePolicy;
+    use crate::scenario::presets;
+
+    #[test]
+    fn saturating_clients_scale_with_the_cell() {
+        let spec = presets::preset("fleet_default").unwrap();
+        let cell = Cell::base(&spec).with_chips(4);
+        // 4 chips × 2 lanes × batch 8 × 1 slot = 64 clients
+        assert_eq!(clients(&spec, &cell), 64);
+        let cell1 = Cell::base(&spec).with_chips(1);
+        assert_eq!(clients(&spec, &cell1), 16);
+    }
+
+    #[test]
+    fn per_chip_budget_scales_and_fixed_does_not() {
+        let spec = presets::preset("fleet_default").unwrap();
+        let c4 = Cell::base(&spec).with_chips(4);
+        assert_eq!(total_requests(&spec, &c4, false), 96 * 4);
+        assert_eq!(total_requests(&spec, &c4, true), 32 * 4);
+        let burst = presets::preset("burst").unwrap();
+        let cell = Cell::base(&burst);
+        assert_eq!(total_requests(&burst, &cell, false), 384);
+        assert_eq!(total_requests(&burst, &cell, true), 96);
+    }
+
+    #[test]
+    fn fault_mean_cell_override_reaches_the_plan() {
+        let spec = presets::preset("uneven_faults").unwrap();
+        let mut cell = Cell::base(&spec);
+        cell.fault_mean = Some(1234.0);
+        let plan = fault_plan(&spec, &cell, false).unwrap();
+        assert_eq!(plan.mean_interarrival_cycles, 1234.0);
+        // without the override the env mean applies
+        let plan = fault_plan(&spec, &Cell::base(&spec), false).unwrap();
+        let env = spec.faults.as_ref().unwrap();
+        assert_eq!(plan.mean_interarrival_cycles, env.mean_interarrival_cycles.full);
+    }
+
+    #[test]
+    fn lower_serve_rejects_multi_chip_cells() {
+        let spec = presets::preset("steady_state").unwrap();
+        let cell = Cell::base(&spec).with_chips(2);
+        assert_eq!(
+            lower_serve(&spec, &cell, false, 1, 1).unwrap_err(),
+            crate::scenario::ScenarioError::ServeDriverShape { chips: 2 }
+        );
+    }
+
+    #[test]
+    fn hysteresis_fields_lower_into_the_fleet_config() {
+        let spec = presets::preset("uneven_faults").unwrap();
+        let cfg = lower_fleet(&spec, &Cell::base(&spec), false, 7, 2);
+        assert_eq!(
+            cfg.lifecycle,
+            LifecyclePolicy { drain_enter: 2, drain_exit: 1, min_dwell_cycles: 8_000 }
+        );
+        assert_eq!(cfg.seed, 7);
+        assert_eq!(cfg.executor_threads, 2);
+        assert_eq!(cfg.chips[0].dims, Dims::new(8, 8));
+    }
+}

@@ -1,0 +1,422 @@
+//! `scenario` — one declarative, validated spec API for every
+//! serve/fleet experiment (DESIGN.md §7, `repro scenario`).
+//!
+//! HyCA's core claim (arXiv 2106.04772) is that flexible DPPU
+//! recomputing keeps accuracy intact *regardless of fault
+//! distribution* — which can only be demonstrated if workload, fault
+//! environment, and architecture are sweepable as **independent axes**
+//! (the framing of the hierarchical fault-tolerance survey,
+//! arXiv 2204.01942). Before this module, the serve/fleet experiment
+//! drivers hard-coded their grids; heterogeneous array mixes and
+//! uneven-fault stress grids were unexpressible.
+//!
+//! A [`ScenarioSpec`] is the single source of truth for one
+//! experiment family:
+//!
+//! * **workload** ([`Workload`]) — closed-loop client population
+//!   (fixed or capacity-saturating), think time, dynamic-batcher
+//!   settings, request budget, report windows;
+//! * **fault environment** ([`FaultEnv`]) — the Poisson-in-cycle-time
+//!   arrival process (mean, horizon, cap);
+//! * **topology** ([`ChipDef`]) — per-chip array dims (heterogeneous
+//!   allowed) and service lanes;
+//! * **redundancy** ([`Redundancy`]) — scan cadence, scanner group
+//!   width, FPT capacity (the HyCA scheme knobs);
+//! * **router + lifecycle policy** — routing policy plus the
+//!   drain/re-admit hysteresis
+//!   ([`crate::fleet::lifecycle::LifecyclePolicy`]);
+//! * **sweep axes** ([`SweepAxis`]) — grids are *data*: the cartesian
+//!   product of declared axes (first axis outermost), not nested
+//!   loops in driver code.
+//!
+//! Specs are built via the fluent [`ScenarioBuilder`] (validation
+//! returns typed [`ScenarioError`]s), serialized to a
+//! dependency-free canonical text format
+//! ([`ScenarioSpec::parse`] / [`ScenarioSpec::to_canonical_string`],
+//! round-trip stable so specs can live in `scenarios/*.scn` files and
+//! be hashed into bench schemas via [`ScenarioSpec::spec_hash`]), and
+//! looked up from the preset registry ([`presets`]). Lowering into
+//! the executable [`crate::serve::ServeConfig`] /
+//! [`crate::fleet::FleetConfig`] lives in [`lower`].
+//!
+//! **Compatibility bar** (pinned by `rust/tests/scenario.rs`): the
+//! `steady_state` and `fleet_default` presets lower to *exactly* the
+//! configurations the pre-scenario `repro serve` / `repro fleet`
+//! drivers hard-coded, so `BENCH_serve.json` and the `BENCH_fleet`
+//! grid section replay byte-identically.
+
+pub mod builder;
+pub mod format;
+pub mod lower;
+pub mod presets;
+pub mod sweep;
+
+pub use builder::ScenarioBuilder;
+pub use lower::{lower_fleet, lower_serve};
+pub use presets::preset;
+pub use sweep::{topology_label, Cell, SweepAxis};
+
+use crate::array::Dims;
+use crate::fleet::lifecycle::{LifecyclePolicy, NEVER_DRAIN};
+use crate::fleet::RoutingPolicy;
+
+/// A spec value with an optional reduced variant for `--smoke` runs.
+/// When no smoke override is declared the full value is used for both.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Knob<T> {
+    pub full: T,
+    pub smoke: T,
+}
+
+impl<T: Clone> Knob<T> {
+    /// Same value in full and smoke runs.
+    pub fn flat(v: T) -> Self {
+        Self { full: v.clone(), smoke: v }
+    }
+
+    /// Distinct full / smoke values.
+    pub fn split(full: T, smoke: T) -> Self {
+        Self { full, smoke }
+    }
+
+    /// The value for the given mode.
+    pub fn at(&self, smoke: bool) -> &T {
+        if smoke {
+            &self.smoke
+        } else {
+            &self.full
+        }
+    }
+
+    /// Is the smoke variant distinct from the full value?
+    pub fn is_split(&self) -> bool
+    where
+        T: PartialEq,
+    {
+        self.full != self.smoke
+    }
+}
+
+/// Which execution pipeline a scenario lowers into.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Driver {
+    /// Single-chip [`crate::serve`] pipeline (lanes×batch semantics).
+    Serve,
+    /// Multi-chip [`crate::fleet`] pipeline (router + lifecycle).
+    Fleet,
+}
+
+impl Driver {
+    pub fn id(&self) -> &'static str {
+        match self {
+            Driver::Serve => "serve",
+            Driver::Fleet => "fleet",
+        }
+    }
+}
+
+/// One chip of the scenario topology.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ChipDef {
+    /// The chip's simulated computing array (heterogeneous allowed).
+    pub dims: Dims,
+    /// Simulated service lanes on this chip.
+    pub lanes: usize,
+}
+
+/// The closed-loop client population.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ClientLoad {
+    /// Exactly `n` clients regardless of topology.
+    Fixed(usize),
+    /// Scale with capacity: `total_lanes × max_batch × per_lane_slot`
+    /// clients, floored at `min` — keeps every lane saturated as the
+    /// sweep grows the cluster, so grid cells stay comparable.
+    Saturate { per_lane_slot: usize, min: usize },
+}
+
+/// Request budget of one run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RequestBudget {
+    /// Multiply the count by the resolved chip count (scaling grids).
+    pub per_chip: bool,
+    pub count: Knob<usize>,
+}
+
+/// Workload + arrival process of the serving loop.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Workload {
+    pub clients: ClientLoad,
+    /// Per-request think time upper bound (0 = saturating load).
+    pub think_cycles: u64,
+    /// Dynamic batcher: maximum coalesced batch size.
+    pub max_batch: usize,
+    /// Dynamic batcher: deadline for the oldest pending request.
+    pub max_wait_cycles: u64,
+    pub requests: RequestBudget,
+    /// Accuracy/goodput windows in the report.
+    pub windows: usize,
+}
+
+/// The mid-run fault environment (per-chip independent streams).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultEnv {
+    /// Mean cycles between fault arrivals (Poisson in cycle time).
+    pub mean_interarrival_cycles: Knob<f64>,
+    /// Arrivals only happen in `[0, horizon)`.
+    pub horizon_cycles: Knob<u64>,
+    /// Cap on the arrival process.
+    pub max_arrivals: usize,
+}
+
+/// The HyCA protection-scheme knobs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Redundancy {
+    /// Reserved scanner group width (paper default 8).
+    pub group_width: usize,
+    /// FPT capacity = how many PEs the DPPU can take over.
+    pub fpt_capacity: usize,
+    /// Scan cadence of the background scan agent.
+    pub scan_period_cycles: Knob<u64>,
+}
+
+/// The complete, validated description of one experiment family.
+/// Construct via [`ScenarioBuilder`] or [`ScenarioSpec::parse`]; both
+/// run [`ScenarioSpec::validate`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScenarioSpec {
+    /// Identifier (`[a-z0-9_-]+`): names the preset / `.scn` file and
+    /// the emitted `BENCH_scenario_<name>.json`.
+    pub name: String,
+    pub driver: Driver,
+    /// Default master seed (`repro scenario --seed` overrides).
+    pub seed: u64,
+    pub topology: Vec<ChipDef>,
+    pub workload: Workload,
+    pub faults: Option<FaultEnv>,
+    pub redundancy: Redundancy,
+    pub router: RoutingPolicy,
+    pub lifecycle: LifecyclePolicy,
+    /// Grid axes, first axis outermost.
+    pub sweep: Vec<SweepAxis>,
+}
+
+/// Typed validation / parse errors of the scenario layer.
+#[derive(Debug, Clone, PartialEq, Eq, thiserror::Error)]
+pub enum ScenarioError {
+    #[error("scenario name {0:?} is not [a-z0-9_-]+")]
+    BadName(String),
+    #[error("scenario needs at least one chip in [topology]")]
+    EmptyTopology,
+    #[error("chip {chip}: array {rows}x{cols} has a zero dimension")]
+    BadDims { chip: usize, rows: usize, cols: usize },
+    #[error("chip {chip}: needs at least one lane")]
+    ZeroLanes { chip: usize },
+    #[error("max_batch must be at least 1")]
+    ZeroBatch,
+    #[error("request budget must be at least 1 in both full and smoke modes")]
+    ZeroRequests,
+    #[error("client load resolves to zero clients (fixed >= 1; saturate needs per_lane_slot >= 1 and min >= 1)")]
+    ZeroClients,
+    #[error("windows must be at least 1")]
+    ZeroWindows,
+    #[error("fault mean_interarrival_cycles must be positive and finite")]
+    BadInterarrival,
+    #[error("drain_enter must be at least 1 (use `never` to disable draining)")]
+    ZeroDrainEnter,
+    #[error("drain_exit must be at least 1")]
+    ZeroDrainExit,
+    #[error("drain_exit {exit} exceeds drain_enter {enter} — hysteresis must release at or below the entry threshold")]
+    ExitAboveEnter { enter: usize, exit: usize },
+    #[error("lifecycle is disabled (drain_enter = never) but drain_exit/min_dwell_cycles are set")]
+    DisabledLifecycleConfigured,
+    #[error("sweep axis {axis:?} has no values")]
+    EmptySweep { axis: &'static str },
+    #[error("sweep axis {axis:?} appears more than once")]
+    DuplicateAxis { axis: &'static str },
+    #[error("sweep axes {a:?} and {b:?} conflict — a topology variant replaces the whole chip list, so chips/lanes axes would be silently overwritten")]
+    ConflictingAxes { a: &'static str, b: &'static str },
+    #[error("sweep axis fault_mean requires a [faults] section")]
+    FaultAxisWithoutFaults,
+    #[error("serve driver requires exactly one chip (got {chips})")]
+    ServeDriverShape { chips: usize },
+    #[error("serve driver cannot sweep axis {axis:?} (single-chip pipeline)")]
+    ServeDriverAxis { axis: &'static str },
+    #[error("line {line}: {msg}")]
+    Parse { line: usize, msg: String },
+}
+
+impl ScenarioSpec {
+    /// Check every structural invariant; builder and parser both call
+    /// this, so an in-hand `ScenarioSpec` is always valid.
+    pub fn validate(&self) -> Result<(), ScenarioError> {
+        if self.name.is_empty()
+            || !self
+                .name
+                .chars()
+                .all(|c| c.is_ascii_lowercase() || c.is_ascii_digit() || c == '_' || c == '-')
+        {
+            return Err(ScenarioError::BadName(self.name.clone()));
+        }
+        if self.topology.is_empty() {
+            return Err(ScenarioError::EmptyTopology);
+        }
+        for (chip, c) in self.topology.iter().enumerate() {
+            if c.dims.rows == 0 || c.dims.cols == 0 {
+                return Err(ScenarioError::BadDims {
+                    chip,
+                    rows: c.dims.rows,
+                    cols: c.dims.cols,
+                });
+            }
+            if c.lanes == 0 {
+                return Err(ScenarioError::ZeroLanes { chip });
+            }
+        }
+        if self.workload.max_batch == 0 {
+            return Err(ScenarioError::ZeroBatch);
+        }
+        if self.workload.requests.count.full == 0 || self.workload.requests.count.smoke == 0 {
+            return Err(ScenarioError::ZeroRequests);
+        }
+        match self.workload.clients {
+            ClientLoad::Fixed(n) if n == 0 => return Err(ScenarioError::ZeroClients),
+            ClientLoad::Saturate { per_lane_slot, min } if per_lane_slot == 0 || min == 0 => {
+                return Err(ScenarioError::ZeroClients)
+            }
+            _ => {}
+        }
+        if self.workload.windows == 0 {
+            return Err(ScenarioError::ZeroWindows);
+        }
+        if let Some(env) = &self.faults {
+            for m in [env.mean_interarrival_cycles.full, env.mean_interarrival_cycles.smoke] {
+                if !(m.is_finite() && m > 0.0) {
+                    return Err(ScenarioError::BadInterarrival);
+                }
+            }
+        }
+        let lc = &self.lifecycle;
+        if lc.drain_enter == NEVER_DRAIN {
+            if lc.drain_exit != NEVER_DRAIN || lc.min_dwell_cycles != 0 {
+                return Err(ScenarioError::DisabledLifecycleConfigured);
+            }
+        } else {
+            if lc.drain_enter == 0 {
+                return Err(ScenarioError::ZeroDrainEnter);
+            }
+            if lc.drain_exit == 0 {
+                return Err(ScenarioError::ZeroDrainExit);
+            }
+            if lc.drain_exit > lc.drain_enter {
+                return Err(ScenarioError::ExitAboveEnter {
+                    enter: lc.drain_enter,
+                    exit: lc.drain_exit,
+                });
+            }
+        }
+        let mut seen: Vec<&'static str> = Vec::new();
+        for axis in &self.sweep {
+            let key = axis.key();
+            if seen.contains(&key) {
+                return Err(ScenarioError::DuplicateAxis { axis: key });
+            }
+            // a topology variant replaces the whole chip list (lanes
+            // included), so combining it with chips/lanes axes would
+            // silently overwrite their effect and leave stale labels
+            for (a, b) in [("topology", "chips"), ("topology", "lanes")] {
+                if (key == a && seen.contains(&b)) || (key == b && seen.contains(&a)) {
+                    return Err(ScenarioError::ConflictingAxes { a, b });
+                }
+            }
+            seen.push(key);
+            axis.validate()?;
+            if matches!(axis, SweepAxis::FaultMean(_)) && self.faults.is_none() {
+                return Err(ScenarioError::FaultAxisWithoutFaults);
+            }
+            if self.driver == Driver::Serve
+                && !matches!(axis, SweepAxis::Lanes(_) | SweepAxis::MaxBatch(_))
+            {
+                return Err(ScenarioError::ServeDriverAxis { axis: key });
+            }
+        }
+        if self.driver == Driver::Serve && self.topology.len() != 1 {
+            return Err(ScenarioError::ServeDriverShape { chips: self.topology.len() });
+        }
+        Ok(())
+    }
+
+    /// Canonical text rendering — see [`format`] for the grammar.
+    pub fn to_canonical_string(&self) -> String {
+        format::to_canonical_string(self)
+    }
+
+    /// Parse the canonical text format (validates before returning).
+    pub fn parse(text: &str) -> Result<Self, ScenarioError> {
+        format::parse(text)
+    }
+
+    /// FNV-1a 64-bit hash of the canonical string — the stable spec
+    /// fingerprint embedded in bench schemas so a metrics file names
+    /// the exact scenario that produced it.
+    pub fn spec_hash(&self) -> String {
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        for b in self.to_canonical_string().bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+        format!("{h:016x}")
+    }
+
+    /// Resolve the sweep grid for the given mode — the cartesian
+    /// product of the axes (first axis outermost); a sweepless spec
+    /// yields its single base cell.
+    pub fn cells(&self, smoke: bool) -> Vec<Cell> {
+        sweep::cells(self, smoke)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn knob_modes_and_splitness() {
+        let flat = Knob::flat(7u64);
+        assert_eq!(*flat.at(false), 7);
+        assert_eq!(*flat.at(true), 7);
+        assert!(!flat.is_split());
+        let split = Knob::split(192usize, 64);
+        assert_eq!(*split.at(false), 192);
+        assert_eq!(*split.at(true), 64);
+        assert!(split.is_split());
+    }
+
+    #[test]
+    fn spec_hash_is_stable_and_name_sensitive() {
+        let a = presets::preset("steady_state").unwrap();
+        let b = presets::preset("steady_state").unwrap();
+        assert_eq!(a.spec_hash(), b.spec_hash());
+        let c = presets::preset("burst").unwrap();
+        assert_ne!(a.spec_hash(), c.spec_hash());
+        assert_eq!(a.spec_hash().len(), 16);
+    }
+
+    #[test]
+    fn validation_catches_bad_names() {
+        let mut spec = presets::preset("burst").unwrap();
+        spec.name = "Bad Name!".into();
+        assert_eq!(spec.validate(), Err(ScenarioError::BadName("Bad Name!".into())));
+        spec.name = String::new();
+        assert!(matches!(spec.validate(), Err(ScenarioError::BadName(_))));
+    }
+
+    #[test]
+    fn every_preset_validates() {
+        for name in presets::names() {
+            let spec = presets::preset(name).unwrap();
+            assert_eq!(spec.validate(), Ok(()), "{name}");
+            assert_eq!(spec.name, *name);
+        }
+    }
+}

@@ -1,0 +1,185 @@
+//! The preset registry: the named scenarios `repro scenario` ships
+//! with. Each preset is built through the validating builder, and the
+//! matching `scenarios/<name>.scn` file holds its canonical text form
+//! (pinned equal by `rust/tests/scenario.rs`).
+//!
+//! Compatibility presets (the legacy drivers lower from these):
+//!
+//! * `steady_state` — the PR 2 serve grid: fault-free lanes×batch
+//!   throughput sweep on one 8×8 chip (`BENCH_serve.json`);
+//! * `burst` — the PR 2 serve fault scenario: mid-run Poisson
+//!   arrivals, dip → scan detection → live remap → exact recovery;
+//! * `fleet_default` — the PR 3 fleet grid: cluster-size × routing-
+//!   policy sweep of homogeneous 8×8 chips (`BENCH_fleet.json`);
+//! * `degraded_continuity` — the PR 3 drain/re-admit scenario: three
+//!   chips, live-fault threshold 2, zero dropped requests.
+//!
+//! New scenarios unlocked by the spec API:
+//!
+//! * `mixed_fleet` — heterogeneous array sizes (8×8/16×16/32×32) ×
+//!   routing policy, the ROADMAP mixed-fleet grid feeding the
+//!   load-imbalance routing-quality metric;
+//! * `uneven_faults` — fault-intensity × router stress grid over a
+//!   3-chip fleet with hysteresis lifecycle (enter 2 / exit 1 /
+//!   8000-cycle dwell).
+
+use crate::array::Dims;
+use crate::fleet::RoutingPolicy;
+
+use super::{Driver, Knob, ScenarioBuilder, ScenarioSpec, SweepAxis};
+
+/// Names of every registered preset, in presentation order.
+pub fn names() -> &'static [&'static str] {
+    &[
+        "steady_state",
+        "burst",
+        "fleet_default",
+        "degraded_continuity",
+        "mixed_fleet",
+        "uneven_faults",
+    ]
+}
+
+/// Look a preset up by name.
+pub fn preset(name: &str) -> Option<ScenarioSpec> {
+    let spec = match name {
+        "steady_state" => steady_state(),
+        "burst" => burst(),
+        "fleet_default" => fleet_default(),
+        "degraded_continuity" => degraded_continuity(),
+        "mixed_fleet" => mixed_fleet(),
+        "uneven_faults" => uneven_faults(),
+        _ => return None,
+    };
+    Some(spec.expect("preset specs validate by construction"))
+}
+
+/// Every registered preset.
+pub fn all() -> Vec<ScenarioSpec> {
+    names().iter().map(|n| preset(n).unwrap()).collect()
+}
+
+type Built = Result<ScenarioSpec, super::ScenarioError>;
+
+fn steady_state() -> Built {
+    ScenarioBuilder::new("steady_state")
+        .driver(Driver::Serve)
+        .chip(8, 8, 1) // lanes pinned per cell by the sweep
+        .clients_saturate(2, 4)
+        .requests(192, 64)
+        .windows(4)
+        .sweep(SweepAxis::Lanes(Knob::split(vec![1, 2, 4, 8], vec![1, 4])))
+        .sweep(SweepAxis::MaxBatch(Knob::split(vec![1, 8, 32], vec![1, 8])))
+        .build()
+}
+
+fn burst() -> Built {
+    ScenarioBuilder::new("burst")
+        .driver(Driver::Serve)
+        .chip(8, 8, 2)
+        .clients_fixed(16)
+        .requests(384, 96)
+        .windows(10)
+        .fault_arrivals(60_000.0, 20_000.0, 200_000, 60_000, 6)
+        .scan_period(16_000, 4_000)
+        .build()
+}
+
+fn fleet_default() -> Built {
+    ScenarioBuilder::new("fleet_default")
+        .chip(8, 8, 2)
+        .clients_saturate(1, 8)
+        .requests_per_chip(96, 32)
+        .windows(4)
+        .sweep(SweepAxis::Chips(Knob::split(vec![1, 2, 4, 8], vec![1, 4])))
+        .sweep(SweepAxis::Router(RoutingPolicy::all().to_vec()))
+        .build()
+}
+
+fn degraded_continuity() -> Built {
+    ScenarioBuilder::new("degraded_continuity")
+        .chips(3, 8, 8, 2)
+        .router(RoutingPolicy::HealthWeighted)
+        .clients_fixed(24)
+        .requests(432, 192)
+        .windows(10)
+        // arrivals concentrate early (short horizon) so the run's tail
+        // demonstrates re-admission and exact recovery
+        .fault_arrivals(20_000.0, 6_000.0, 160_000, 40_000, 6)
+        .scan_period(16_000, 4_000)
+        .drain_single(2)
+        .build()
+}
+
+fn mixed_fleet() -> Built {
+    let hom = |d: usize| vec![Dims::new(d, d); 3];
+    let mixed = vec![Dims::new(8, 8), Dims::new(16, 16), Dims::new(32, 32)];
+    ScenarioBuilder::new("mixed_fleet")
+        .chip(8, 8, 2) // lanes template for topology variants
+        .clients_saturate(1, 8)
+        .requests_per_chip(96, 32)
+        .windows(4)
+        .sweep(SweepAxis::Topology(Knob::split(
+            vec![hom(8), mixed.clone(), hom(16), hom(32)],
+            vec![hom(8), mixed],
+        )))
+        .sweep(SweepAxis::Router(RoutingPolicy::all().to_vec()))
+        .build()
+}
+
+fn uneven_faults() -> Built {
+    ScenarioBuilder::new("uneven_faults")
+        .chips(3, 8, 8, 2)
+        .clients_fixed(24)
+        .requests(288, 96)
+        .windows(6)
+        .fault_arrivals(40_000.0, 8_000.0, 160_000, 40_000, 6)
+        .scan_period(16_000, 4_000)
+        .hysteresis(2, 1, 8_000)
+        .sweep(SweepAxis::FaultMean(Knob::split(
+            vec![40_000.0, 20_000.0, 8_000.0],
+            vec![8_000.0],
+        )))
+        .sweep(SweepAxis::Router(vec![
+            RoutingPolicy::RoundRobin,
+            RoutingPolicy::HealthWeighted,
+        ]))
+        .build()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_is_complete_and_lookup_works() {
+        assert_eq!(all().len(), names().len());
+        for name in names() {
+            assert!(preset(name).is_some(), "{name}");
+        }
+        assert!(preset("nope").is_none());
+    }
+
+    #[test]
+    fn compatibility_presets_use_the_right_drivers() {
+        assert_eq!(preset("steady_state").unwrap().driver, Driver::Serve);
+        assert_eq!(preset("burst").unwrap().driver, Driver::Serve);
+        assert_eq!(preset("fleet_default").unwrap().driver, Driver::Fleet);
+        assert_eq!(preset("degraded_continuity").unwrap().driver, Driver::Fleet);
+        assert_eq!(preset("mixed_fleet").unwrap().driver, Driver::Fleet);
+        assert_eq!(preset("uneven_faults").unwrap().driver, Driver::Fleet);
+    }
+
+    #[test]
+    fn grid_sizes_match_the_legacy_sweeps() {
+        assert_eq!(preset("steady_state").unwrap().cells(false).len(), 12);
+        assert_eq!(preset("steady_state").unwrap().cells(true).len(), 4);
+        assert_eq!(preset("fleet_default").unwrap().cells(false).len(), 12);
+        assert_eq!(preset("fleet_default").unwrap().cells(true).len(), 6);
+        assert_eq!(preset("burst").unwrap().cells(false).len(), 1);
+        assert_eq!(preset("mixed_fleet").unwrap().cells(false).len(), 12);
+        assert_eq!(preset("mixed_fleet").unwrap().cells(true).len(), 6);
+        assert_eq!(preset("uneven_faults").unwrap().cells(false).len(), 6);
+        assert_eq!(preset("uneven_faults").unwrap().cells(true).len(), 2);
+    }
+}

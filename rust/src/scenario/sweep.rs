@@ -1,0 +1,356 @@
+//! Sweep axes: grids as data. A [`SweepAxis`] names one spec field and
+//! the values it takes; [`cells`] expands the cartesian product (first
+//! axis outermost, matching the row order of the legacy hand-rolled
+//! loops) into resolved [`Cell`]s that [`super::lower`] turns into
+//! executable configs.
+
+use crate::array::Dims;
+use crate::fleet::RoutingPolicy;
+
+use super::{ChipDef, Knob, ScenarioError, ScenarioSpec};
+
+/// One sweepable spec field and its values (optionally reduced under
+/// `--smoke`).
+#[derive(Debug, Clone, PartialEq)]
+pub enum SweepAxis {
+    /// Service lanes, applied to every chip of the cell topology.
+    Lanes(Knob<Vec<usize>>),
+    /// Dynamic-batcher cap.
+    MaxBatch(Knob<Vec<usize>>),
+    /// Cluster size: replicate chip 0 of the current topology n times.
+    Chips(Knob<Vec<usize>>),
+    /// Routing policy (same list in full and smoke runs).
+    Router(Vec<RoutingPolicy>),
+    /// Whole-topology variants (array dims per chip; lanes are copied
+    /// from the base topology's chip 0).
+    Topology(Knob<Vec<Vec<Dims>>>),
+    /// Fault-arrival intensity: overrides the fault environment's
+    /// mean interarrival cycles.
+    FaultMean(Knob<Vec<f64>>),
+}
+
+impl SweepAxis {
+    /// Stable key naming the axis in canonical text, errors, tables
+    /// and JSON rows.
+    pub fn key(&self) -> &'static str {
+        match self {
+            SweepAxis::Lanes(_) => "lanes",
+            SweepAxis::MaxBatch(_) => "max_batch",
+            SweepAxis::Chips(_) => "chips",
+            SweepAxis::Router(_) => "router",
+            SweepAxis::Topology(_) => "topology",
+            SweepAxis::FaultMean(_) => "fault_mean",
+        }
+    }
+
+    /// Number of values in the given mode.
+    pub fn len(&self, smoke: bool) -> usize {
+        match self {
+            SweepAxis::Lanes(k) => k.at(smoke).len(),
+            SweepAxis::MaxBatch(k) => k.at(smoke).len(),
+            SweepAxis::Chips(k) => k.at(smoke).len(),
+            SweepAxis::Router(p) => p.len(),
+            SweepAxis::Topology(k) => k.at(smoke).len(),
+            SweepAxis::FaultMean(k) => k.at(smoke).len(),
+        }
+    }
+
+    /// Structural validation (non-empty in both modes, sane values).
+    pub fn validate(&self) -> Result<(), ScenarioError> {
+        let empty = match self {
+            SweepAxis::Lanes(k) => k.full.is_empty() || k.smoke.is_empty(),
+            SweepAxis::MaxBatch(k) => k.full.is_empty() || k.smoke.is_empty(),
+            SweepAxis::Chips(k) => k.full.is_empty() || k.smoke.is_empty(),
+            SweepAxis::Router(p) => p.is_empty(),
+            SweepAxis::Topology(k) => {
+                k.full.is_empty()
+                    || k.smoke.is_empty()
+                    || k.full.iter().chain(k.smoke.iter()).any(|t| t.is_empty())
+            }
+            SweepAxis::FaultMean(k) => k.full.is_empty() || k.smoke.is_empty(),
+        };
+        if empty {
+            return Err(ScenarioError::EmptySweep { axis: self.key() });
+        }
+        match self {
+            SweepAxis::Lanes(k) => {
+                if k.full.iter().chain(k.smoke.iter()).any(|&v| v == 0) {
+                    return Err(ScenarioError::ZeroLanes { chip: 0 });
+                }
+            }
+            SweepAxis::MaxBatch(k) => {
+                if k.full.iter().chain(k.smoke.iter()).any(|&v| v == 0) {
+                    return Err(ScenarioError::ZeroBatch);
+                }
+            }
+            SweepAxis::Chips(k) => {
+                if k.full.iter().chain(k.smoke.iter()).any(|&v| v == 0) {
+                    return Err(ScenarioError::EmptyTopology);
+                }
+            }
+            SweepAxis::Topology(k) => {
+                for t in k.full.iter().chain(k.smoke.iter()) {
+                    for (chip, d) in t.iter().enumerate() {
+                        if d.rows == 0 || d.cols == 0 {
+                            return Err(ScenarioError::BadDims {
+                                chip,
+                                rows: d.rows,
+                                cols: d.cols,
+                            });
+                        }
+                    }
+                }
+            }
+            SweepAxis::FaultMean(k) => {
+                if k.full
+                    .iter()
+                    .chain(k.smoke.iter())
+                    .any(|&v| !(v.is_finite() && v > 0.0))
+                {
+                    return Err(ScenarioError::BadInterarrival);
+                }
+            }
+            SweepAxis::Router(_) => {}
+        }
+        Ok(())
+    }
+}
+
+/// One resolved grid cell: the spec with every swept field pinned to a
+/// concrete value.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Cell {
+    /// Resolved topology (after chips/topology/lanes axes).
+    pub chips: Vec<ChipDef>,
+    pub max_batch: usize,
+    pub policy: RoutingPolicy,
+    /// Fault-intensity override from a `fault_mean` axis.
+    pub fault_mean: Option<f64>,
+    /// `(axis key, value label)` in axis order — the cell's identity
+    /// in tables and JSON rows.
+    pub labels: Vec<(&'static str, String)>,
+}
+
+impl Cell {
+    /// The sweepless cell: the spec's base values.
+    pub fn base(spec: &ScenarioSpec) -> Self {
+        Self {
+            chips: spec.topology.clone(),
+            max_batch: spec.workload.max_batch,
+            policy: spec.router,
+            fault_mean: None,
+            labels: Vec::new(),
+        }
+    }
+
+    /// Set every chip's lane count (what a `lanes` axis does).
+    pub fn with_lanes(mut self, lanes: usize) -> Self {
+        for c in &mut self.chips {
+            c.lanes = lanes;
+        }
+        self
+    }
+
+    pub fn with_max_batch(mut self, max_batch: usize) -> Self {
+        self.max_batch = max_batch;
+        self
+    }
+
+    /// Replicate chip 0 to an `n`-chip cluster (what a `chips` axis
+    /// does).
+    pub fn with_chips(mut self, n: usize) -> Self {
+        let proto = self.chips[0];
+        self.chips = vec![proto; n];
+        self
+    }
+
+    pub fn with_policy(mut self, policy: RoutingPolicy) -> Self {
+        self.policy = policy;
+        self
+    }
+
+    /// Total service lanes across the cell's chips.
+    pub fn total_lanes(&self) -> usize {
+        self.chips.iter().map(|c| c.lanes).sum()
+    }
+}
+
+/// Compact label of a topology: equal-dims runs compress to `n*RxC`,
+/// heterogeneous mixes join with `+` (`8x8+16x16+32x32`).
+pub fn topology_label(chips: &[ChipDef]) -> String {
+    let mut parts: Vec<String> = Vec::new();
+    let mut i = 0;
+    while i < chips.len() {
+        let d = chips[i].dims;
+        let mut n = 1;
+        while i + n < chips.len() && chips[i + n].dims == d {
+            n += 1;
+        }
+        if n == 1 {
+            parts.push(d.to_string());
+        } else {
+            parts.push(format!("{n}*{d}"));
+        }
+        i += n;
+    }
+    parts.join("+")
+}
+
+fn apply(axis: &SweepAxis, idx: usize, smoke: bool, base_lanes: usize, cell: Cell) -> Cell {
+    match axis {
+        SweepAxis::Lanes(k) => {
+            let v = k.at(smoke)[idx];
+            let mut cell = cell.with_lanes(v);
+            cell.labels.push(("lanes", v.to_string()));
+            cell
+        }
+        SweepAxis::MaxBatch(k) => {
+            let v = k.at(smoke)[idx];
+            let mut cell = cell.with_max_batch(v);
+            cell.labels.push(("max_batch", v.to_string()));
+            cell
+        }
+        SweepAxis::Chips(k) => {
+            let v = k.at(smoke)[idx];
+            let mut cell = cell.with_chips(v);
+            cell.labels.push(("chips", v.to_string()));
+            cell
+        }
+        SweepAxis::Router(p) => {
+            let v = p[idx];
+            let mut cell = cell.with_policy(v);
+            cell.labels.push(("router", v.to_string()));
+            cell
+        }
+        SweepAxis::Topology(k) => {
+            let mut cell = cell;
+            cell.chips = k.at(smoke)[idx]
+                .iter()
+                .map(|&dims| ChipDef { dims, lanes: base_lanes })
+                .collect();
+            cell.labels.push(("topology", topology_label(&cell.chips)));
+            cell
+        }
+        SweepAxis::FaultMean(k) => {
+            let v = k.at(smoke)[idx];
+            let mut cell = cell;
+            cell.fault_mean = Some(v);
+            cell.labels.push(("fault_mean", format!("{v}")));
+            cell
+        }
+    }
+}
+
+/// Expand the spec's sweep into cells: cartesian product in axis
+/// order, first axis outermost (row-major, matching the legacy
+/// drivers' nested-loop order).
+pub fn cells(spec: &ScenarioSpec, smoke: bool) -> Vec<Cell> {
+    if spec.sweep.is_empty() {
+        return vec![Cell::base(spec)];
+    }
+    let base_lanes = spec.topology[0].lanes;
+    let lens: Vec<usize> = spec.sweep.iter().map(|a| a.len(smoke)).collect();
+    let total: usize = lens.iter().product();
+    let mut out = Vec::with_capacity(total);
+    let mut odometer = vec![0usize; lens.len()];
+    for _ in 0..total {
+        let mut cell = Cell::base(spec);
+        for (axis, &idx) in spec.sweep.iter().zip(&odometer) {
+            cell = apply(axis, idx, smoke, base_lanes, cell);
+        }
+        out.push(cell);
+        // advance, last axis fastest (first axis outermost)
+        for pos in (0..odometer.len()).rev() {
+            odometer[pos] += 1;
+            if odometer[pos] < lens[pos] {
+                break;
+            }
+            odometer[pos] = 0;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scenario::presets;
+
+    #[test]
+    fn topology_labels_compress_runs() {
+        let chip = |r, c| ChipDef { dims: Dims::new(r, c), lanes: 2 };
+        assert_eq!(topology_label(&[chip(8, 8)]), "8x8");
+        assert_eq!(topology_label(&[chip(8, 8), chip(8, 8), chip(8, 8)]), "3*8x8");
+        assert_eq!(
+            topology_label(&[chip(8, 8), chip(16, 16), chip(32, 32)]),
+            "8x8+16x16+32x32"
+        );
+        assert_eq!(
+            topology_label(&[chip(8, 8), chip(8, 8), chip(16, 16)]),
+            "2*8x8+16x16"
+        );
+    }
+
+    #[test]
+    fn steady_state_cells_match_the_legacy_loop_order() {
+        let spec = presets::preset("steady_state").unwrap();
+        let full: Vec<(usize, usize)> = spec
+            .cells(false)
+            .iter()
+            .map(|c| (c.chips[0].lanes, c.max_batch))
+            .collect();
+        let mut want = Vec::new();
+        for l in [1usize, 2, 4, 8] {
+            for b in [1usize, 8, 32] {
+                want.push((l, b));
+            }
+        }
+        assert_eq!(full, want, "lanes outermost, batch innermost");
+        let smoke: Vec<(usize, usize)> = spec
+            .cells(true)
+            .iter()
+            .map(|c| (c.chips[0].lanes, c.max_batch))
+            .collect();
+        assert_eq!(smoke, vec![(1, 1), (1, 8), (4, 1), (4, 8)]);
+    }
+
+    #[test]
+    fn fleet_default_cells_sweep_chips_then_policy() {
+        let spec = presets::preset("fleet_default").unwrap();
+        let cells = spec.cells(true);
+        let got: Vec<(usize, RoutingPolicy)> =
+            cells.iter().map(|c| (c.chips.len(), c.policy)).collect();
+        let mut want = Vec::new();
+        for n in [1usize, 4] {
+            for p in RoutingPolicy::all() {
+                want.push((n, p));
+            }
+        }
+        assert_eq!(got, want);
+        // every cell labels its swept axes in order
+        assert_eq!(cells[0].labels[0].0, "chips");
+        assert_eq!(cells[0].labels[1].0, "router");
+    }
+
+    #[test]
+    fn sweepless_spec_yields_its_base_cell() {
+        let spec = presets::preset("burst").unwrap();
+        let cells = spec.cells(false);
+        assert_eq!(cells.len(), 1);
+        assert_eq!(cells[0], Cell::base(&spec));
+        assert!(cells[0].labels.is_empty());
+    }
+
+    #[test]
+    fn topology_axis_replaces_chips_and_keeps_base_lanes() {
+        let spec = presets::preset("mixed_fleet").unwrap();
+        let cells = spec.cells(false);
+        for c in &cells {
+            assert!(c.chips.iter().all(|chip| chip.lanes == spec.topology[0].lanes));
+        }
+        // the mixed variant appears with its heterogeneous label
+        assert!(cells
+            .iter()
+            .any(|c| c.labels.iter().any(|(k, v)| *k == "topology" && v == "8x8+16x16+32x32")));
+    }
+}

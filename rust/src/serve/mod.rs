@@ -51,7 +51,7 @@ use loadgen::LoadGen;
 use scan_agent::{build_timeline, FaultTimeline, ScanAgentConfig, TimelineEvent};
 
 /// Mid-run fault injection plan (the scenario of `repro serve`).
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub struct FaultPlan {
     /// Mean cycles between fault arrivals (Poisson in cycle time).
     pub mean_interarrival_cycles: f64,
@@ -71,7 +71,7 @@ pub struct FaultPlan {
 /// Configuration of one serving run. Metrics are a pure function of
 /// everything here except `executor_threads`, which only selects how
 /// many real threads crunch the math.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct ServeConfig {
     /// Master seed for load, faults and scan data.
     pub seed: u64,

@@ -51,7 +51,7 @@ fn bench_json_is_byte_identical_at_any_executor_width() {
 fn bench_json_has_the_documented_schema() {
     let json = exp_fleet::bench_json(&opts(0xC0FFEE, 2), true).unwrap();
     for key in [
-        "\"schema\": \"hyca-fleet-bench-v1\"",
+        "\"schema\": \"hyca-fleet-bench-v2\"",
         "\"grid\": [",
         "\"chips\": 1",
         "\"chips\": 4",
@@ -62,6 +62,9 @@ fn bench_json_has_the_documented_schema() {
         "\"p50_cycles\":",
         "\"p99_cycles\":",
         "\"accuracy\":",
+        "\"mixed_fleet\": [",
+        "\"topology\": \"3*8x8\"",
+        "\"load_imbalance\":",
     ] {
         assert!(json.contains(key), "missing {key} in:\n{json}");
     }
@@ -194,14 +197,17 @@ fn drain_scenario_drains_repairs_readmits_and_recovers_exactly() {
 #[test]
 fn fleet_experiment_tables_render() {
     let (tables, json) = exp_fleet::run_full(&opts(0xC0FFEE, 2), true, None).unwrap();
-    assert_eq!(tables.len(), 4);
+    assert_eq!(tables.len(), 5);
     let grid = tables[0].to_markdown();
     assert!(grid.contains("imgs_per_Mcycle") && grid.contains("policy"));
-    let timeline = tables[1].to_markdown();
+    let mixed = tables[1].to_markdown();
+    assert!(mixed.contains("load_imbalance") && mixed.contains("topology"));
+    assert!(mixed.contains("8x8+16x16+32x32"));
+    let timeline = tables[2].to_markdown();
     assert!(timeline.contains("availability") && timeline.contains("goodput"));
-    let chips = tables[2].to_markdown();
+    let chips = tables[3].to_markdown();
     assert!(chips.contains("drained_kcycles"));
-    let summary = tables[3].to_markdown();
+    let summary = tables[4].to_markdown();
     assert!(summary.contains("recovered_exactly") && summary.contains("drain_episodes"));
     assert!(json.starts_with("{\n"));
 }

@@ -503,6 +503,110 @@ fn prop_serve_batched_equals_sequential_and_is_worker_invariant() {
 }
 
 #[test]
+fn prop_scenario_spec_round_trips_through_canonical_text() {
+    // The scenario-format contract (DESIGN.md §7): for every valid
+    // spec, parse(to_canonical_string(s)) == s and the canonical
+    // rendering is a fixpoint — so `.scn` files and spec hashes are
+    // stable identities.
+    use hyca::fleet::RoutingPolicy;
+    use hyca::scenario::{Driver, Knob, ScenarioBuilder, ScenarioSpec, SweepAxis};
+    check("scenario canonical round-trip", 150, |g| {
+        let serve = g.bool(0.4);
+        let name: String = (0..g.usize_in(3, 12))
+            .map(|_| {
+                const CHARS: &[u8] = b"abcdefghijklmnopqrstuvwxyz0123456789_-";
+                CHARS[g.usize_in(0, CHARS.len() - 1)] as char
+            })
+            .collect();
+        let mut b = ScenarioBuilder::new(&name)
+            .driver(if serve { Driver::Serve } else { Driver::Fleet })
+            .seed(g.usize_in(0, 1 << 30) as u64)
+            .think_cycles(g.usize_in(0, 2_000) as u64)
+            .max_batch(g.usize_in(1, 16))
+            .max_wait_cycles(g.usize_in(1, 10_000) as u64)
+            .windows(g.usize_in(1, 10));
+        let n_chips = if serve { 1 } else { g.usize_in(1, 4) };
+        for _ in 0..n_chips {
+            let d = *g.choose(&[8usize, 16, 32]);
+            b = b.chip(d, d, g.usize_in(1, 4));
+        }
+        b = if g.bool(0.5) {
+            b.clients_fixed(g.usize_in(1, 32))
+        } else {
+            b.clients_saturate(g.usize_in(1, 3), g.usize_in(1, 8))
+        };
+        let full = g.usize_in(1, 512);
+        let smoke = g.usize_in(1, full);
+        b = if !serve && g.bool(0.5) {
+            b.requests_per_chip(full, smoke)
+        } else {
+            b.requests(full, smoke)
+        };
+        let with_faults = g.bool(0.6);
+        if with_faults {
+            b = b
+                .fault_arrivals(
+                    g.usize_in(1_000, 100_000) as f64,
+                    g.usize_in(1_000, 100_000) as f64,
+                    g.usize_in(0, 200_000) as u64,
+                    g.usize_in(0, 200_000) as u64,
+                    g.usize_in(0, 8),
+                )
+                .scan_period(
+                    g.usize_in(1_000, 20_000) as u64,
+                    g.usize_in(1_000, 20_000) as u64,
+                );
+        }
+        if !serve && g.bool(0.5) {
+            let enter = g.usize_in(1, 4);
+            let exit = g.usize_in(1, enter);
+            b = b.hysteresis(enter, exit, g.usize_in(0, 10_000) as u64);
+        }
+        if serve {
+            if g.bool(0.6) {
+                b = b.sweep(SweepAxis::Lanes(Knob::split(
+                    vec![1, g.usize_in(2, 8)],
+                    vec![1],
+                )));
+            }
+            if g.bool(0.6) {
+                b = b.sweep(SweepAxis::MaxBatch(Knob::flat(vec![1, g.usize_in(2, 32)])));
+            }
+        } else {
+            // chips and topology axes are mutually exclusive
+            // (ScenarioError::ConflictingAxes), so pick at most one
+            let swept_chips = g.bool(0.5);
+            if swept_chips {
+                b = b.sweep(SweepAxis::Chips(Knob::split(
+                    vec![1, g.usize_in(2, 8)],
+                    vec![g.usize_in(1, 4)],
+                )));
+            } else if g.bool(0.4) {
+                b = b.sweep(SweepAxis::Topology(Knob::flat(vec![
+                    vec![Dims::new(8, 8); g.usize_in(1, 3)],
+                    vec![Dims::new(8, 8), Dims::new(16, 16)],
+                ])));
+            }
+            if g.bool(0.5) {
+                b = b.sweep(SweepAxis::Router(RoutingPolicy::all().to_vec()));
+            }
+            if with_faults && g.bool(0.3) {
+                b = b.sweep(SweepAxis::FaultMean(Knob::flat(vec![
+                    g.usize_in(1_000, 50_000) as f64,
+                ])));
+            }
+        }
+        let spec = b.build().expect("generated spec must validate");
+        let text = spec.to_canonical_string();
+        let back = ScenarioSpec::parse(&text)
+            .unwrap_or_else(|e| panic!("canonical text failed to parse: {e}\n{text}"));
+        assert_eq!(back, spec, "round trip changed the spec:\n{text}");
+        assert_eq!(back.to_canonical_string(), text, "canonical must be a fixpoint");
+        assert_eq!(back.spec_hash(), spec.spec_hash());
+    });
+}
+
+#[test]
 fn prop_one_chip_fleet_degenerates_to_serve() {
     // The fleet degeneracy contract: for random serving configurations
     // — load shape, batcher settings, lanes, and optional mid-run

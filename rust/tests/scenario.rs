@@ -1,0 +1,361 @@
+//! Scenario-API acceptance tests.
+//!
+//! 1. **Compatibility pinning**: the `steady_state` / `burst` /
+//!    `fleet_default` / `degraded_continuity` presets lower to
+//!    *exactly* the `ServeConfig`s / `FleetConfig`s the pre-scenario
+//!    drivers (PR 2 / PR 3) hard-coded — frozen here as literals, so
+//!    the configs (and therefore every bench byte) cannot drift.
+//! 2. **Canonical format**: the committed `scenarios/*.scn` files
+//!    parse to the registered presets; presets round-trip through the
+//!    canonical text (the property test in `proptests.rs` sweeps
+//!    random specs).
+//! 3. **Typed validation**: bad dims, empty sweeps and inverted
+//!    hysteresis thresholds are rejected with the documented errors.
+//! 4. **Mixed fleet**: `BENCH_fleet.json` (schema v2) carries the
+//!    heterogeneous-dims grid with the load-imbalance routing-quality
+//!    column, and the health-weighted policy beats round-robin on it.
+
+use hyca::array::Dims;
+use hyca::coordinator::{exp_fleet, exp_scenario, RunOpts};
+use hyca::fleet::{ChipSpec, FleetConfig, LifecyclePolicy, RoutingPolicy};
+use hyca::scenario::{
+    presets, Cell, Knob, ScenarioBuilder, ScenarioError, ScenarioSpec, SweepAxis,
+};
+use hyca::serve::{FaultPlan, ServeConfig};
+
+const SEED: u64 = 0xC0FFEE;
+
+/// The PR 2 serve grid cell, verbatim (exp_serve.rs @ 7ce6eef).
+fn legacy_serve_grid_cell(
+    seed: u64,
+    lanes: usize,
+    max_batch: usize,
+    smoke: bool,
+    threads: usize,
+) -> ServeConfig {
+    let clients = (lanes * max_batch * 2).max(4);
+    ServeConfig {
+        seed,
+        dims: Dims::new(8, 8),
+        lanes,
+        max_batch,
+        max_wait_cycles: 8_000,
+        clients,
+        think_cycles: 500,
+        total_requests: if smoke { 64 } else { 192 },
+        queue_cap: clients,
+        executor_threads: threads,
+        windows: 4,
+        faults: None,
+    }
+}
+
+/// The PR 2 serve fault scenario, verbatim.
+fn legacy_serve_scenario(seed: u64, smoke: bool, threads: usize) -> ServeConfig {
+    ServeConfig {
+        seed,
+        dims: Dims::new(8, 8),
+        lanes: 2,
+        max_batch: 8,
+        max_wait_cycles: 8_000,
+        clients: 16,
+        think_cycles: 500,
+        total_requests: if smoke { 96 } else { 384 },
+        queue_cap: 16,
+        executor_threads: threads,
+        windows: 10,
+        faults: Some(FaultPlan {
+            mean_interarrival_cycles: if smoke { 20_000.0 } else { 60_000.0 },
+            horizon_cycles: if smoke { 60_000 } else { 200_000 },
+            scan_period_cycles: if smoke { 4_000 } else { 16_000 },
+            group_width: 8,
+            fpt_capacity: 8,
+            max_arrivals: 6,
+        }),
+    }
+}
+
+/// The PR 3 fleet grid cell, verbatim (exp_fleet.rs @ f983b9f); the
+/// `drain_threshold: NEVER_DRAIN` field became
+/// `lifecycle: LifecyclePolicy::NEVER`.
+fn legacy_fleet_cell(
+    seed: u64,
+    n_chips: usize,
+    policy: RoutingPolicy,
+    smoke: bool,
+    threads: usize,
+) -> FleetConfig {
+    let clients = (n_chips * 2 * 8).max(8);
+    FleetConfig {
+        seed,
+        chips: vec![ChipSpec { dims: Dims::new(8, 8), lanes: 2 }; n_chips],
+        policy,
+        max_batch: 8,
+        max_wait_cycles: 8_000,
+        clients,
+        think_cycles: 500,
+        total_requests: if smoke { 32 * n_chips } else { 96 * n_chips },
+        queue_cap: clients,
+        executor_threads: threads,
+        windows: 4,
+        faults: None,
+        lifecycle: LifecyclePolicy::NEVER,
+    }
+}
+
+/// The PR 3 drain/re-admit scenario, verbatim (`drain_threshold: 2`
+/// became the equivalent single-threshold policy).
+fn legacy_fleet_scenario(seed: u64, smoke: bool, threads: usize) -> FleetConfig {
+    FleetConfig {
+        seed,
+        chips: vec![ChipSpec { dims: Dims::new(8, 8), lanes: 2 }; 3],
+        policy: RoutingPolicy::HealthWeighted,
+        max_batch: 8,
+        max_wait_cycles: 8_000,
+        clients: 24,
+        think_cycles: 500,
+        total_requests: if smoke { 192 } else { 432 },
+        queue_cap: 24,
+        executor_threads: threads,
+        windows: 10,
+        faults: Some(FaultPlan {
+            mean_interarrival_cycles: if smoke { 6_000.0 } else { 20_000.0 },
+            horizon_cycles: if smoke { 40_000 } else { 160_000 },
+            scan_period_cycles: if smoke { 4_000 } else { 16_000 },
+            group_width: 8,
+            fpt_capacity: 8,
+            max_arrivals: 6,
+        }),
+        lifecycle: LifecyclePolicy::single(2),
+    }
+}
+
+#[test]
+fn steady_state_lowers_to_the_pr2_grid_configs() {
+    let spec = presets::preset("steady_state").unwrap();
+    for (smoke, lanes_sweep, batch_sweep) in [
+        (false, vec![1usize, 2, 4, 8], vec![1usize, 8, 32]),
+        (true, vec![1, 4], vec![1, 8]),
+    ] {
+        let cells = spec.cells(smoke);
+        let mut want = Vec::new();
+        for &l in &lanes_sweep {
+            for &b in &batch_sweep {
+                want.push(legacy_serve_grid_cell(SEED, l, b, smoke, 3));
+            }
+        }
+        let got: Vec<ServeConfig> = cells
+            .iter()
+            .map(|c| hyca::scenario::lower_serve(&spec, c, smoke, SEED, 3).unwrap())
+            .collect();
+        assert_eq!(got, want, "smoke={smoke}: the grid drifted from PR 2");
+    }
+}
+
+#[test]
+fn burst_lowers_to_the_pr2_fault_scenario_config() {
+    let spec = presets::preset("burst").unwrap();
+    for smoke in [false, true] {
+        let got =
+            hyca::scenario::lower_serve(&spec, &Cell::base(&spec), smoke, SEED, 2).unwrap();
+        assert_eq!(got, legacy_serve_scenario(SEED, smoke, 2), "smoke={smoke}");
+    }
+}
+
+#[test]
+fn fleet_default_lowers_to_the_pr3_grid_configs() {
+    let spec = presets::preset("fleet_default").unwrap();
+    for (smoke, chip_sweep) in [(false, vec![1usize, 2, 4, 8]), (true, vec![1, 4])] {
+        let mut want = Vec::new();
+        for &n in &chip_sweep {
+            for policy in RoutingPolicy::all() {
+                want.push(legacy_fleet_cell(SEED, n, policy, smoke, 3));
+            }
+        }
+        let got: Vec<FleetConfig> = spec
+            .cells(smoke)
+            .iter()
+            .map(|c| hyca::scenario::lower_fleet(&spec, c, smoke, SEED, 3))
+            .collect();
+        assert_eq!(got, want, "smoke={smoke}: the grid drifted from PR 3");
+    }
+}
+
+#[test]
+fn degraded_continuity_lowers_to_the_pr3_drain_scenario_config() {
+    let spec = presets::preset("degraded_continuity").unwrap();
+    for smoke in [false, true] {
+        let got = hyca::scenario::lower_fleet(&spec, &Cell::base(&spec), smoke, SEED, 2);
+        assert_eq!(got, legacy_fleet_scenario(SEED, smoke, 2), "smoke={smoke}");
+    }
+}
+
+#[test]
+fn scn_files_parse_to_the_registered_presets() {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../scenarios");
+    for name in presets::names() {
+        let path = dir.join(format!("{name}.scn"));
+        let text = std::fs::read_to_string(&path)
+            .unwrap_or_else(|e| panic!("{}: {e}", path.display()));
+        let spec = ScenarioSpec::parse(&text)
+            .unwrap_or_else(|e| panic!("{}: {e}", path.display()));
+        assert_eq!(
+            spec,
+            presets::preset(name).unwrap(),
+            "{name}.scn drifted from the registered preset — regenerate with \
+             to_canonical_string()"
+        );
+    }
+}
+
+#[test]
+fn presets_round_trip_and_hash_stably() {
+    for name in presets::names() {
+        let spec = presets::preset(name).unwrap();
+        let text = spec.to_canonical_string();
+        let back = ScenarioSpec::parse(&text).unwrap();
+        assert_eq!(back, spec, "{name}");
+        assert_eq!(back.spec_hash(), spec.spec_hash(), "{name}");
+    }
+}
+
+#[test]
+fn validation_rejects_bad_dims_empty_sweep_and_inverted_hysteresis() {
+    assert_eq!(
+        ScenarioBuilder::new("bad").chip(8, 0, 2).build(),
+        Err(ScenarioError::BadDims { chip: 0, rows: 8, cols: 0 })
+    );
+    assert_eq!(
+        ScenarioBuilder::new("bad")
+            .chip(8, 8, 2)
+            .sweep(SweepAxis::Router(vec![]))
+            .build(),
+        Err(ScenarioError::EmptySweep { axis: "router" })
+    );
+    assert_eq!(
+        ScenarioBuilder::new("bad").chip(8, 8, 2).hysteresis(1, 2, 0).build(),
+        Err(ScenarioError::ExitAboveEnter { enter: 1, exit: 2 })
+    );
+    assert_eq!(
+        ScenarioBuilder::new("bad").chip(8, 8, 2).requests(0, 4).build(),
+        Err(ScenarioError::ZeroRequests)
+    );
+    // the same errors surface through the text format
+    let text = "scenario \"bad\"\n[topology]\nchip = 8x8 lanes=2\n\
+                [policy]\ndrain_enter = 1\ndrain_exit = 2\n";
+    assert_eq!(
+        ScenarioSpec::parse(text).unwrap_err(),
+        ScenarioError::ExitAboveEnter { enter: 1, exit: 2 }
+    );
+}
+
+#[test]
+fn bench_fleet_v2_carries_the_mixed_fleet_section() {
+    let opts = RunOpts {
+        seed: SEED,
+        threads: 2,
+        out_dir: std::env::temp_dir().join("hyca_scenario_results"),
+        builtin_model: true,
+        ..RunOpts::default()
+    };
+    let json = exp_fleet::bench_json(&opts, true).unwrap();
+    assert!(json.contains("\"schema\": \"hyca-fleet-bench-v2\""));
+    assert!(json.contains("\"mixed_fleet\": ["));
+    assert!(json.contains("\"topology\": \"3*8x8\""));
+    assert!(json.contains("\"topology\": \"8x8+16x16+32x32\""));
+    assert!(json.contains("\"load_imbalance\":"));
+    // no wall-clock fields, ever
+    for forbidden in ["seconds", "wall", "ns_per"] {
+        assert!(!json.contains(forbidden), "wall-clock field {forbidden:?}");
+    }
+}
+
+#[test]
+fn health_weighted_routing_beats_round_robin_on_the_mixed_topology() {
+    let spec = presets::preset("mixed_fleet").unwrap();
+    let run = exp_scenario::run_cells(&spec, SEED, 2, true).unwrap();
+    let exp_scenario::ScenarioRun::Fleet(results) = run else {
+        panic!("mixed_fleet is a fleet scenario")
+    };
+    let imbalance = |policy: RoutingPolicy| -> f64 {
+        results
+            .iter()
+            .find(|(c, _)| {
+                c.policy == policy
+                    && c.labels.iter().any(|(k, v)| *k == "topology" && v == "8x8+16x16+32x32")
+            })
+            .map(|(_, r)| r.load_imbalance())
+            .expect("mixed topology cell present in smoke grid")
+    };
+    let rr = imbalance(RoutingPolicy::RoundRobin);
+    let hw = imbalance(RoutingPolicy::HealthWeighted);
+    assert!(
+        hw < rr,
+        "health-weighted must track the weight-optimal split better than \
+         round-robin on heterogeneous arrays (hw={hw:.4}, rr={rr:.4})"
+    );
+    // round-robin's even split is visibly off the optimal on a fleet
+    // whose largest chip dwarfs the smallest
+    assert!(rr > 0.1, "rr={rr:.4}");
+}
+
+#[test]
+fn uneven_faults_stress_grid_serves_every_request_under_hysteresis() {
+    let spec = presets::preset("uneven_faults").unwrap();
+    assert_eq!(
+        spec.lifecycle,
+        LifecyclePolicy { drain_enter: 2, drain_exit: 1, min_dwell_cycles: 8_000 }
+    );
+    let run = exp_scenario::run_cells(&spec, SEED, 2, true).unwrap();
+    let exp_scenario::ScenarioRun::Fleet(results) = run else {
+        panic!("uneven_faults is a fleet scenario")
+    };
+    assert_eq!(results.len(), 2, "smoke grid: 1 fault_mean × 2 policies");
+    for (cell, report) in &results {
+        // degraded continuity: the closed loop always serves its budget
+        assert_eq!(
+            report.total_requests,
+            hyca::scenario::lower::total_requests(&spec, cell, true),
+            "requests dropped under fault stress"
+        );
+        assert!(report.availability() <= 1.0);
+    }
+}
+
+#[test]
+fn spec_files_and_registry_agree_on_the_cli_surface() {
+    // `repro scenario list` and CI's `scenario all --smoke` both walk
+    // presets::names(); pin the registry contents so a rename is a
+    // conscious, documented change
+    assert_eq!(
+        presets::names(),
+        &[
+            "steady_state",
+            "burst",
+            "fleet_default",
+            "degraded_continuity",
+            "mixed_fleet",
+            "uneven_faults",
+        ]
+    );
+    // parse errors carry line numbers for CLI diagnostics
+    let err = ScenarioSpec::parse("scenario \"x\"\n???\n").unwrap_err();
+    assert!(matches!(err, ScenarioError::Parse { line: 2, .. }), "{err}");
+}
+
+#[test]
+fn knob_smoke_variants_reach_the_lowered_configs() {
+    let spec = presets::preset("burst").unwrap();
+    let full = hyca::scenario::lower_serve(&spec, &Cell::base(&spec), false, SEED, 1).unwrap();
+    let smoke = hyca::scenario::lower_serve(&spec, &Cell::base(&spec), true, SEED, 1).unwrap();
+    assert_eq!(full.total_requests, 384);
+    assert_eq!(smoke.total_requests, 96);
+    assert_eq!(full.faults.unwrap().mean_interarrival_cycles, 60_000.0);
+    assert_eq!(smoke.faults.unwrap().mean_interarrival_cycles, 20_000.0);
+    assert_eq!(full.faults.unwrap().scan_period_cycles, 16_000);
+    assert_eq!(smoke.faults.unwrap().scan_period_cycles, 4_000);
+    // smoke knobs are declared, not computed: the Knob type carries both
+    let env = spec.faults.as_ref().unwrap();
+    assert!(env.mean_interarrival_cycles.is_split());
+    assert_eq!(*Knob::flat(7usize).at(true), 7);
+}
