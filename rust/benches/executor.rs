@@ -1,0 +1,68 @@
+//! Executor bench: shared-queue vs work-stealing (steal on/off) at
+//! 1/2/4/8 threads on a fleet_default-shaped job mix — the micro-level
+//! companion of `repro perf` (which sweeps chip counts and persists
+//! BENCH_perf.json; this harness gives benchkit-quality per-topology
+//! deltas against the previous run's baseline).
+use std::sync::Arc;
+
+use hyca::benchkit::Bench;
+use hyca::coordinator::exp_fleet::fleet_cell;
+use hyca::fleet::{simulate_fleet, RoutingPolicy};
+use hyca::inference::Engine;
+use hyca::serve::executor::{self, ExecMode};
+use hyca::serve::BatchJob;
+
+fn main() {
+    let engine = Arc::new(Engine::builtin());
+    let mut b = Bench::new("executor");
+
+    // the fleet_default-shaped mix: 8 chips, round-robin, smoke sizing
+    // (exactly what BENCH_fleet.json's biggest grid row replays)
+    let cfg = fleet_cell(0xC0FFEE, 8, RoutingPolicy::RoundRobin, true, 1);
+    let timeline = simulate_fleet(&engine, &cfg);
+    let jobs: Vec<&BatchJob> = timeline.jobs.iter().map(|j| &j.job).collect();
+    let affinity: Vec<usize> = timeline.jobs.iter().map(|j| j.chip).collect();
+    let served: usize = jobs.iter().map(|j| j.image_idxs.len()).sum();
+
+    for threads in [1usize, 2, 4, 8] {
+        b.bench_units(
+            format!("shared/t{threads}"),
+            Some(served as f64),
+            || {
+                std::hint::black_box(
+                    executor::execute(
+                        &engine,
+                        &jobs,
+                        None,
+                        threads,
+                        ExecMode::SharedQueue,
+                        cfg.queue_cap,
+                    )
+                    .unwrap(),
+                );
+            },
+        );
+        for steal in [false, true] {
+            let mode = ExecMode::WorkSteal { steal };
+            b.bench_units(
+                format!("{}/t{threads}", mode.label()),
+                Some(served as f64),
+                || {
+                    std::hint::black_box(
+                        executor::execute(
+                            &engine,
+                            &jobs,
+                            Some(&affinity),
+                            threads,
+                            mode,
+                            cfg.queue_cap,
+                        )
+                        .unwrap(),
+                    );
+                },
+            );
+        }
+    }
+
+    b.report();
+}

@@ -10,7 +10,8 @@ use hyca::benchkit::Bench;
 use hyca::coordinator::exp_fleet::fleet_cell;
 use hyca::fleet::{simulate_fleet, RoutingPolicy};
 use hyca::inference::Engine;
-use hyca::serve::{pool, BatchJob};
+use hyca::serve::executor::{self, ExecMode};
+use hyca::serve::BatchJob;
 
 fn main() {
     let engine = Arc::new(Engine::builtin());
@@ -35,18 +36,40 @@ fn main() {
         });
     }
 
-    // pool execution of a multi-chip timeline: images/second at
-    // various executor widths
+    // executing a multi-chip timeline on the work-stealing executor
+    // with per-chip affinity (what fleet::run does): images/second at
+    // various widths, with the legacy shared queue as the reference
     let cfg = fleet_cell(0xC0FFEE, 4, RoutingPolicy::RoundRobin, true, 1);
     let timeline = simulate_fleet(&engine, &cfg);
     let jobs: Vec<&BatchJob> = timeline.jobs.iter().map(|j| &j.job).collect();
+    let affinity: Vec<usize> = timeline.jobs.iter().map(|j| j.chip).collect();
     let served: usize = jobs.iter().map(|j| j.image_idxs.len()).sum();
     for threads in [1usize, 2, 4] {
         b.bench_units(
-            format!("pool_execute/chips4_t{threads}"),
+            format!("executor_steal/chips4_t{threads}"),
             Some(served as f64),
             || {
-                std::hint::black_box(pool::execute(&engine, &jobs, threads, 8).unwrap());
+                std::hint::black_box(
+                    executor::execute(
+                        &engine,
+                        &jobs,
+                        Some(&affinity),
+                        threads,
+                        ExecMode::WorkSteal { steal: true },
+                        8,
+                    )
+                    .unwrap(),
+                );
+            },
+        );
+        b.bench_units(
+            format!("executor_shared/chips4_t{threads}"),
+            Some(served as f64),
+            || {
+                std::hint::black_box(
+                    executor::execute(&engine, &jobs, None, threads, ExecMode::SharedQueue, 8)
+                        .unwrap(),
+                );
             },
         );
     }

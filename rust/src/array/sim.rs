@@ -84,6 +84,15 @@ pub struct FcLayer {
 /// Raw int32 accumulator of a conv layer: output shape `(out_c, oh, ow)`
 /// flattened oc-major — the exact values the PEs accumulate.
 pub fn conv_acc(layer: &ConvLayer, x: &[i8], in_shape: Chw) -> Vec<i32> {
+    let mut acc = Vec::new();
+    conv_acc_into(layer, x, in_shape, &mut acc);
+    acc
+}
+
+/// As [`conv_acc`], writing into a caller-owned buffer (cleared and
+/// resized here) so the serving hot path can reuse one accumulator
+/// allocation across thousands of forward passes.
+pub fn conv_acc_into(layer: &ConvLayer, x: &[i8], in_shape: Chw, acc: &mut Vec<i32>) {
     assert_eq!(in_shape.c, layer.in_c, "channel mismatch");
     assert_eq!(x.len(), in_shape.len(), "input length mismatch");
     assert_eq!(
@@ -91,7 +100,8 @@ pub fn conv_acc(layer: &ConvLayer, x: &[i8], in_shape: Chw) -> Vec<i32> {
         layer.out_c * layer.in_c * layer.k * layer.k
     );
     let (oh, ow) = layer.out_hw(in_shape.h, in_shape.w);
-    let mut acc = vec![0i32; layer.out_c * oh * ow];
+    acc.clear();
+    acc.resize(layer.out_c * oh * ow, 0);
     let (h, w, k) = (in_shape.h, in_shape.w, layer.k);
     for oc in 0..layer.out_c {
         for oy in 0..oh {
@@ -120,7 +130,6 @@ pub fn conv_acc(layer: &ConvLayer, x: &[i8], in_shape: Chw) -> Vec<i32> {
             }
         }
     }
-    acc
 }
 
 /// Apply per-output stuck-at corruption to a raw accumulator tensor.
@@ -145,16 +154,22 @@ pub fn add_bias(acc: &mut [i32], bias: &[i32], ch_stride: usize) {
 /// Requantise a (biased, possibly corrupted) accumulator tensor to
 /// int8: fixed-point multiply, round-half-up shift, clamp.
 pub fn requant(acc: &[i32], m: i32, shift: u32, relu: bool) -> Vec<i8> {
+    let mut y = Vec::new();
+    requant_into(acc, m, shift, relu, &mut y);
+    y
+}
+
+/// As [`requant`], writing into a caller-owned buffer (cleared here).
+pub fn requant_into(acc: &[i32], m: i32, shift: u32, relu: bool, y: &mut Vec<i8>) {
     assert!(shift >= 1 && shift < 63);
     let half = 1i64 << (shift - 1);
-    acc.iter()
-        .map(|&a| {
-            let v = a as i64 * m as i64;
-            let q = (v + half) >> shift;
-            let lo = if relu { 0 } else { -128 };
-            q.clamp(lo, 127) as i8
-        })
-        .collect()
+    let lo = if relu { 0 } else { -128 };
+    y.clear();
+    y.extend(acc.iter().map(|&a| {
+        let v = a as i64 * m as i64;
+        let q = (v + half) >> shift;
+        q.clamp(lo, 127) as i8
+    }));
 }
 
 /// Raw int32 accumulator of an FC layer, bias preloaded.
@@ -175,10 +190,19 @@ pub fn fc_acc(layer: &FcLayer, x: &[i8]) -> Vec<i32> {
 /// 2×2 average pool on int8 (exact: round-half-up of the 4-sum), used by
 /// the tiny CNN between conv stages. Mirrors `model.py::avgpool2`.
 pub fn avgpool2(x: &[i8], shape: Chw) -> (Vec<i8>, Chw) {
+    let mut y = Vec::new();
+    let out = avgpool2_into(x, shape, &mut y);
+    (y, out)
+}
+
+/// As [`avgpool2`], writing into a caller-owned buffer (cleared and
+/// resized here); returns the pooled shape.
+pub fn avgpool2_into(x: &[i8], shape: Chw, y: &mut Vec<i8>) -> Chw {
     assert_eq!(shape.h % 2, 0);
     assert_eq!(shape.w % 2, 0);
     let out = Chw::new(shape.c, shape.h / 2, shape.w / 2);
-    let mut y = vec![0i8; out.len()];
+    y.clear();
+    y.resize(out.len(), 0);
     for c in 0..shape.c {
         for oy in 0..out.h {
             for ox in 0..out.w {
@@ -194,7 +218,7 @@ pub fn avgpool2(x: &[i8], shape: Chw) -> (Vec<i8>, Chw) {
             }
         }
     }
-    (y, out)
+    out
 }
 
 #[cfg(test)]
@@ -315,6 +339,32 @@ mod tests {
             };
         let y = fc_acc(&l, &[1, 1, 1]);
         assert_eq!(y, vec![1 + 2 + 3 + 10, -1 + 1 - 10]);
+    }
+
+    #[test]
+    fn into_variants_match_allocating_versions_and_reuse_buffers() {
+        // the scratch-arena contract: *_into clears, resizes and fills
+        // exactly what the allocating versions return, even when the
+        // buffer arrives dirty or over-sized from a previous layer.
+        let l = identity_layer(2);
+        let x = vec![1i8, 2, 3, 4, 5, 6, 7, 8];
+        let shape = Chw::new(2, 2, 2);
+        let want_acc = conv_acc(&l, &x, shape);
+        let mut acc = vec![99i32; 64]; // dirty + bigger than needed
+        conv_acc_into(&l, &x, shape, &mut acc);
+        assert_eq!(acc, want_acc);
+
+        let want_q = requant(&acc, 3, 2, false);
+        let mut q = vec![7i8; 3];
+        requant_into(&acc, 3, 2, false, &mut q);
+        assert_eq!(q, want_q);
+
+        let pool_in = vec![1i8, 2, 3, 4, -1, -2, -3, -4];
+        let pshape = Chw::new(2, 2, 2);
+        let (want_y, want_shape) = avgpool2(&pool_in, pshape);
+        let mut y = vec![55i8; 19];
+        let got_shape = avgpool2_into(&pool_in, pshape, &mut y);
+        assert_eq!((y, got_shape), (want_y, want_shape));
     }
 
     #[test]

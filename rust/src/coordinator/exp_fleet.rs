@@ -309,7 +309,9 @@ pub(crate) fn scenario_timeline_table(report: &FleetReport) -> Table {
 
 pub(crate) fn scenario_chip_table(report: &FleetReport) -> Table {
     let mut t = Table::new(
-        "fleet scenario — per-chip breakdown",
+        "fleet scenario — per-chip breakdown (executor_steals is \
+         wall-clock observability: nondeterministic, never part of the \
+         byte-compared bench JSON)",
         &[
             "chip",
             "array",
@@ -320,6 +322,7 @@ pub(crate) fn scenario_chip_table(report: &FleetReport) -> Table {
             "drains",
             "drained_kcycles",
             "unrepaired",
+            "executor_steals",
         ],
     );
     for c in &report.per_chip {
@@ -336,6 +339,7 @@ pub(crate) fn scenario_chip_table(report: &FleetReport) -> Table {
             c.drains.to_string(),
             (c.drained_cycles / 1000).to_string(),
             c.unrepaired.to_string(),
+            c.executor_steals.to_string(),
         ]);
     }
     t

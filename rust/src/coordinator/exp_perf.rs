@@ -1,0 +1,306 @@
+//! `perf` — the wall-clock executor benchmark (`repro perf`): the
+//! first experiment whose headline is a *measured* number, not a
+//! simulated one (DESIGN.md §8).
+//!
+//! The grid times the three executor topologies — the legacy
+//! `SharedQueue`, the statically-partitioned `WorkSteal{steal:false}`,
+//! and the full work-stealing `WorkSteal{steal:true}` — over
+//! `{1,2,4,8}` threads × `{1,4,16}` chips on fleet_default-shaped job
+//! mixes (the exact workload `BENCH_fleet.json` reports, lowered
+//! through `exp_fleet::fleet_cell`), and writes `BENCH_perf.json`
+//! (schema `hyca-perf-bench-v1`).
+//!
+//! **Determinism split, explicit in the schema:** the `deterministic`
+//! section (job/image counts, simulated cycles) is a pure function of
+//! the seed and byte-identical everywhere — the same contract as every
+//! other bench file. The `timing` section is wall-clock and therefore
+//! **nondeterministic by nature** (machine, load, scheduler); it is
+//! marked `"nondeterministic": true` and no determinism lint or golden
+//! test ever compares it. Every timed cell re-asserts the invariance
+//! contract at runtime: its predictions must equal the 1-thread
+//! shared-queue reference bit-for-bit, or the run errors out.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use super::{exp_fleet, Experiment, RunOpts};
+use crate::fleet::{self, RoutingPolicy};
+use crate::inference::Engine;
+use crate::serve::executor::{self, ExecMode};
+use crate::serve::BatchJob;
+use crate::util::table::{f, Table};
+
+pub struct PerfExp;
+
+/// Executor thread sweep (the `--workers` axis, measured for real).
+pub const THREAD_SWEEP: [usize; 4] = [1, 2, 4, 8];
+
+/// Cluster sizes: past-the-core-count is the point (the ROADMAP's
+/// scaling-cliff question needs chips > threads).
+pub fn chip_sweep(smoke: bool) -> Vec<usize> {
+    if smoke {
+        vec![1, 4]
+    } else {
+        vec![1, 4, 16]
+    }
+}
+
+/// The executor topologies under measurement, baseline first.
+pub fn mode_sweep() -> [ExecMode; 3] {
+    [
+        ExecMode::SharedQueue,
+        ExecMode::WorkSteal { steal: false },
+        ExecMode::WorkSteal { steal: true },
+    ]
+}
+
+/// Deterministic description of one workload (pure function of the
+/// seed — the byte-stable half of the bench file).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct DetRow {
+    pub chips: usize,
+    pub jobs: usize,
+    pub images: usize,
+    pub total_cycles: u64,
+}
+
+/// One timed cell (wall-clock — nondeterministic by nature).
+#[derive(Debug, Clone)]
+pub struct TimingRow {
+    pub chips: usize,
+    pub threads: usize,
+    pub executor: &'static str,
+    /// Best-of-reps wall time of one full executor pass.
+    pub wall_ms: f64,
+    pub jobs_per_sec: f64,
+    pub imgs_per_sec: f64,
+    /// Steals of the last rep (0 for shared/steal_off).
+    pub steals: u64,
+}
+
+/// The full perf run: the deterministic workload descriptions plus the
+/// timing grid.
+pub struct PerfRun {
+    pub det: Vec<DetRow>,
+    pub timing: Vec<TimingRow>,
+}
+
+/// Simulate each chip count's workload once, then time every
+/// (threads × mode) cell `reps` times keeping the best wall time.
+/// Every cell's predictions are asserted equal to the 1-thread
+/// shared-queue reference — the bit-exactness contract, enforced at
+/// measurement time.
+pub fn run_perf(opts: &RunOpts, smoke: bool, reps: usize) -> Result<PerfRun> {
+    let reps = reps.max(1);
+    let engine = Arc::new(Engine::builtin());
+    let mut det = Vec::new();
+    let mut timing = Vec::new();
+    for chips in chip_sweep(smoke) {
+        let cfg = exp_fleet::fleet_cell(opts.seed, chips, RoutingPolicy::RoundRobin, smoke, 1);
+        let timeline = fleet::simulate_fleet(&engine, &cfg);
+        let jobs: Vec<&BatchJob> = timeline.jobs.iter().map(|j| &j.job).collect();
+        let affinity: Vec<usize> = timeline.jobs.iter().map(|j| j.chip).collect();
+        let images: usize = jobs.iter().map(|j| j.image_idxs.len()).sum();
+        det.push(DetRow {
+            chips,
+            jobs: jobs.len(),
+            images,
+            total_cycles: timeline.total_cycles,
+        });
+        let reference = executor::execute(
+            &engine,
+            &jobs,
+            None,
+            1,
+            ExecMode::SharedQueue,
+            cfg.queue_cap,
+        )?
+        .predictions;
+        for threads in THREAD_SWEEP {
+            for mode in mode_sweep() {
+                // the shared queue ignores affinity; the stealing modes
+                // home each chip's jobs on chip % threads
+                let aff = match mode {
+                    ExecMode::SharedQueue => None,
+                    ExecMode::WorkSteal { .. } => Some(affinity.as_slice()),
+                };
+                let mut best_nanos = u128::MAX;
+                let mut steals = 0u64;
+                for _ in 0..reps {
+                    let rep =
+                        executor::execute(&engine, &jobs, aff, threads, mode, cfg.queue_cap)?;
+                    anyhow::ensure!(
+                        rep.predictions == reference,
+                        "executor {} at {} threads diverged from the 1-thread \
+                         shared-queue reference on the {chips}-chip workload — \
+                         the bit-exactness contract is broken",
+                        mode.label(),
+                        threads
+                    );
+                    // wall_ms and steals must describe the SAME rep (the
+                    // best one), or the row's steal column misattributes
+                    // another rep's scheduling to the reported time
+                    if rep.stats.wall_nanos < best_nanos {
+                        best_nanos = rep.stats.wall_nanos;
+                        steals = rep.stats.steals;
+                    }
+                }
+                let secs = best_nanos as f64 / 1e9;
+                timing.push(TimingRow {
+                    chips,
+                    threads,
+                    executor: mode.label(),
+                    wall_ms: best_nanos as f64 / 1e6,
+                    jobs_per_sec: jobs.len() as f64 / secs.max(1e-12),
+                    imgs_per_sec: images as f64 / secs.max(1e-12),
+                    steals,
+                });
+            }
+        }
+    }
+    Ok(PerfRun { det, timing })
+}
+
+/// The deterministic `grid` section alone — what a byte-comparison
+/// across `--workers` values (or repeated runs) may look at.
+pub fn det_json(seed: u64, smoke: bool, det: &[DetRow]) -> String {
+    let mut s = String::new();
+    s.push_str("  \"deterministic\": {\n");
+    s.push_str(&format!("    \"seed\": {seed},\n"));
+    s.push_str(&format!("    \"smoke\": {smoke},\n"));
+    s.push_str(
+        "    \"note\": \"simulated-cycle workload descriptions — pure \
+         function of the seed, byte-identical at any thread count\",\n",
+    );
+    s.push_str("    \"grid\": [\n");
+    for (i, d) in det.iter().enumerate() {
+        let sep = if i + 1 == det.len() { "" } else { "," };
+        s.push_str(&format!(
+            "      {{\"chips\": {}, \"jobs\": {}, \"images\": {}, \
+             \"total_cycles\": {}}}{sep}\n",
+            d.chips, d.jobs, d.images, d.total_cycles
+        ));
+    }
+    s.push_str("    ]\n  }");
+    s
+}
+
+fn timing_json(timing: &[TimingRow]) -> String {
+    let mut s = String::new();
+    s.push_str("  \"timing\": {\n");
+    s.push_str("    \"nondeterministic\": true,\n");
+    s.push_str(
+        "    \"note\": \"wall-clock measurements — machine/load/scheduler \
+         dependent; never byte-compared, never part of a determinism \
+         contract\",\n",
+    );
+    s.push_str("    \"rows\": [\n");
+    for (i, t) in timing.iter().enumerate() {
+        let sep = if i + 1 == timing.len() { "" } else { "," };
+        s.push_str(&format!(
+            "      {{\"chips\": {}, \"threads\": {}, \"executor\": \"{}\", \
+             \"wall_ms\": {:.3}, \"jobs_per_sec\": {:.1}, \
+             \"imgs_per_sec\": {:.1}, \"steals\": {}}}{sep}\n",
+            t.chips, t.threads, t.executor, t.wall_ms, t.jobs_per_sec, t.imgs_per_sec, t.steals
+        ));
+    }
+    s.push_str("    ]\n  }");
+    s
+}
+
+/// Render `BENCH_perf.json`.
+pub fn perf_json(seed: u64, smoke: bool, run: &PerfRun) -> String {
+    let mut s = String::new();
+    s.push_str("{\n");
+    s.push_str("  \"schema\": \"hyca-perf-bench-v1\",\n");
+    s.push_str(&det_json(seed, smoke, &run.det));
+    s.push_str(",\n");
+    s.push_str(&timing_json(&run.timing));
+    s.push_str("\n}\n");
+    s
+}
+
+fn perf_table(run: &PerfRun) -> Table {
+    let mut t = Table::new(
+        "executor wall-clock grid — shared queue vs work stealing \
+         (best-of-reps; NONDETERMINISTIC wall time, predictions \
+         asserted bit-identical to the 1-thread reference)",
+        &[
+            "chips",
+            "threads",
+            "executor",
+            "wall_ms",
+            "jobs_per_sec",
+            "imgs_per_sec",
+            "steals",
+            "speedup_vs_shared",
+        ],
+    );
+    for row in &run.timing {
+        let shared_ms = run
+            .timing
+            .iter()
+            .find(|r| r.chips == row.chips && r.threads == row.threads && r.executor == "shared")
+            .map(|r| r.wall_ms)
+            .unwrap_or(row.wall_ms);
+        t.push_row(vec![
+            row.chips.to_string(),
+            row.threads.to_string(),
+            row.executor.to_string(),
+            f(row.wall_ms, 3),
+            f(row.jobs_per_sec, 1),
+            f(row.imgs_per_sec, 1),
+            row.steals.to_string(),
+            format!("{}x", f(shared_ms / row.wall_ms.max(1e-12), 2)),
+        ]);
+    }
+    t
+}
+
+fn workload_table(run: &PerfRun) -> Table {
+    let mut t = Table::new(
+        "perf workloads — fleet_default-shaped job mixes (deterministic: \
+         pure function of the seed)",
+        &["chips", "jobs", "images", "total_cycles"],
+    );
+    for d in &run.det {
+        t.push_row(vec![
+            d.chips.to_string(),
+            d.jobs.to_string(),
+            d.images.to_string(),
+            d.total_cycles.to_string(),
+        ]);
+    }
+    t
+}
+
+/// Full run: tables + the `BENCH_perf.json` payload.
+pub fn run_full(opts: &RunOpts, smoke: bool) -> Result<(Vec<Table>, String)> {
+    let reps = if smoke { 2 } else { 3 };
+    let run = run_perf(opts, smoke, reps)?;
+    let json = perf_json(opts.seed, smoke, &run);
+    Ok((vec![workload_table(&run), perf_table(&run)], json))
+}
+
+impl Experiment for PerfExp {
+    fn id(&self) -> &'static str {
+        "perf"
+    }
+
+    fn title(&self) -> &'static str {
+        "Perf: wall-clock executor grid — shared queue vs work stealing, threads × chips"
+    }
+
+    fn run(&self, opts: &RunOpts) -> Result<Vec<Table>> {
+        let t0 = Instant::now();
+        let (tables, _json) = run_full(opts, opts.fast)?;
+        eprintln!(
+            "[repro] perf grid measured in {:.1}s (timing is wall-clock; \
+             run `repro perf` from the repo root to persist BENCH_perf.json)",
+            t0.elapsed().as_secs_f64()
+        );
+        Ok(tables)
+    }
+}

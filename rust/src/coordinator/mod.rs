@@ -16,6 +16,7 @@ pub mod exp_fig13;
 pub mod exp_fig14;
 pub mod exp_fig15;
 pub mod exp_fleet;
+pub mod exp_perf;
 pub mod exp_scenario;
 pub mod exp_serve;
 pub mod exp_table1;
@@ -104,6 +105,7 @@ pub fn registry() -> Vec<Box<dyn Experiment>> {
         Box::new(exp_table1::Table1),
         Box::new(exp_serve::ServeExp),
         Box::new(exp_fleet::FleetExp),
+        Box::new(exp_perf::PerfExp),
     ]
 }
 
@@ -123,7 +125,7 @@ mod tests {
         assert_eq!(ids.len(), set.len());
         for want in [
             "fig2", "fig3", "fig9", "fig10", "fig11", "fig12", "fig13", "fig14", "fig15",
-            "table1", "serve", "fleet",
+            "table1", "serve", "fleet", "perf",
         ] {
             assert!(ids.contains(&want), "missing {want}");
         }

@@ -62,6 +62,13 @@ pub struct ChipStat {
     /// Mcycle (the perfmodel's output-stationary runtime) — the
     /// weight-optimal routing share derives from these.
     pub nominal_imgs_per_mcycle: f64,
+    /// Jobs of this chip executed by a *thief* worker (the
+    /// work-stealing executor's affinity miss count; 0 under the
+    /// legacy shared-queue path, where no job has a home).
+    /// **Nondeterministic** — depends on OS scheduling — so it is
+    /// deliberately excluded from `digest()` and every bench-JSON row;
+    /// scenario runs surface it in the per-chip report table only.
+    pub executor_steals: u64,
 }
 
 impl ChipStat {
@@ -99,6 +106,10 @@ pub struct FleetReport {
     pub correct: Vec<bool>,
     /// Whole-run accuracy.
     pub accuracy: f64,
+    /// Total executor steals across chips (see
+    /// [`ChipStat::executor_steals`]); nondeterministic, excluded from
+    /// `digest()` and every bench-JSON section.
+    pub executor_steals: u64,
 }
 
 impl FleetReport {
@@ -159,7 +170,8 @@ impl FleetReport {
     /// Deterministic rendering of every metric, per-chip stat and
     /// per-request outcome — two runs are equivalent iff their digests
     /// are byte-identical (the executor-width invariance assertions
-    /// compare this).
+    /// compare this). `executor_steals` is deliberately absent: steal
+    /// counts depend on OS scheduling and would break the contract.
     pub fn digest(&self) -> String {
         let mut s = String::new();
         let _ = writeln!(
@@ -230,12 +242,15 @@ impl FleetReport {
     }
 }
 
-/// Combine the simulated fleet timeline with the pool's predictions.
+/// Combine the simulated fleet timeline with the executor's
+/// predictions. `per_chip_steals` is the executor's per-chip
+/// stolen-job count (`None` = legacy path, reported as zeros).
 pub fn assemble(
     engine: &Engine,
     cfg: &FleetConfig,
     timeline: FleetTimeline,
     preds: Vec<Vec<usize>>,
+    per_chip_steals: Option<Vec<u64>>,
 ) -> FleetReport {
     assert_eq!(preds.len(), timeline.jobs.len(), "one result per job");
     let n = timeline.requests.len();
@@ -301,6 +316,9 @@ pub fn assemble(
         cluster.merge(h);
     }
     debug_assert_eq!(cluster.count() as usize, n, "merge must preserve counts");
+    if let Some(steals) = &per_chip_steals {
+        assert_eq!(steals.len(), n_chips, "one steal counter per chip");
+    }
     let per_chip: Vec<ChipStat> = timeline
         .chip_state
         .iter()
@@ -317,8 +335,10 @@ pub fn assemble(
             drains: c.lifecycle.drains(),
             drained_cycles: c.lifecycle.drained_overlap(0, timeline.total_cycles),
             nominal_imgs_per_mcycle: 1e6 / c.cost.per_image_cycles() as f64,
+            executor_steals: per_chip_steals.as_ref().map_or(0, |s| s[k]),
         })
         .collect();
+    let executor_steals = per_chip.iter().map(|c| c.executor_steals).sum();
     let n_correct = correct.iter().filter(|&&c| c).count();
     let batches = timeline.jobs.len();
     FleetReport {
@@ -338,6 +358,7 @@ pub fn assemble(
         predictions,
         correct,
         accuracy: n_correct as f64 / n.max(1) as f64,
+        executor_steals,
     }
 }
 
@@ -451,6 +472,7 @@ mod tests {
             drains: 0,
             drained_cycles: 0,
             nominal_imgs_per_mcycle: nominal,
+            executor_steals: 0,
         };
         let mut report = run(
             &Arc::new(crate::inference::Engine::builtin()),
@@ -487,7 +509,34 @@ mod tests {
             drains: 0,
             drained_cycles: 0,
             nominal_imgs_per_mcycle: 1.0,
+            executor_steals: 0,
         };
         assert_eq!(c.accuracy(), None);
+    }
+
+    #[test]
+    fn executor_steals_are_consistent_and_never_reach_the_digest() {
+        let engine = Arc::new(crate::inference::Engine::builtin());
+        let report = run(&engine, &cfg(3, RoutingPolicy::RoundRobin)).unwrap();
+        let per_chip: u64 = report.per_chip.iter().map(|c| c.executor_steals).sum();
+        assert_eq!(report.executor_steals, per_chip, "total = sum of chips");
+        // nondeterministic data must not leak into the byte-compared
+        // rendering — the digest never mentions steals
+        assert!(!report.digest().contains("steal"));
+        // the legacy path reports zeros
+        let c = cfg(2, RoutingPolicy::RoundRobin);
+        let timeline = crate::fleet::simulate_fleet(&engine, &c);
+        let preds: Vec<Vec<usize>> = timeline
+            .jobs
+            .iter()
+            .map(|j| {
+                engine
+                    .predict_batch_by_index(&j.job.image_idxs, &j.job.masks)
+                    .unwrap()
+            })
+            .collect();
+        let legacy = assemble(&engine, &c, timeline, preds, None);
+        assert_eq!(legacy.executor_steals, 0);
+        assert!(legacy.per_chip.iter().all(|ch| ch.executor_steals == 0));
     }
 }

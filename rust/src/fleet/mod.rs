@@ -48,8 +48,9 @@ use anyhow::Result;
 
 use crate::faults::Coord;
 use crate::inference::Engine;
+use crate::serve::executor::{self, ExecMode};
 use crate::serve::scan_agent::EventKind;
-use crate::serve::{pool, BatchJob, FaultPlan, RequestRecord};
+use crate::serve::{BatchJob, FaultPlan, RequestRecord};
 
 pub use chip::{chip_seed, ChipSim, ChipSpec};
 pub use lifecycle::{LifecyclePolicy, NEVER_DRAIN};
@@ -445,12 +446,35 @@ pub fn simulate_fleet(engine: &Engine, cfg: &FleetConfig) -> FleetTimeline {
 }
 
 /// End to end: simulate the fleet timeline, execute every chip's
-/// batches on the shared worker pool, assemble the cluster report.
+/// batches on the work-stealing executor with **per-chip affinity**
+/// (chip `k`'s jobs home on worker `k % threads`, so each chip's mask
+/// epochs stay cache-warm on one worker and dry workers steal across
+/// chips), assemble the cluster report. The per-chip steal counts land
+/// in `ChipStat::executor_steals` — observability only, excluded from
+/// every byte-compared metric.
 pub fn run(engine: &Arc<Engine>, cfg: &FleetConfig) -> Result<metrics::FleetReport> {
     let timeline = simulate_fleet(engine, cfg);
     let job_refs: Vec<&BatchJob> = timeline.jobs.iter().map(|j| &j.job).collect();
-    let predictions = pool::execute(engine, &job_refs, cfg.executor_threads, cfg.queue_cap)?;
-    Ok(metrics::assemble(engine, cfg, timeline, predictions))
+    let affinity: Vec<usize> = timeline.jobs.iter().map(|j| j.chip).collect();
+    let report = executor::execute(
+        engine,
+        &job_refs,
+        Some(&affinity),
+        cfg.executor_threads,
+        ExecMode::WorkSteal { steal: true },
+        cfg.queue_cap,
+    )?;
+    let mut per_chip_steals = vec![0u64; cfg.chips.len()];
+    for (job, &stolen) in timeline.jobs.iter().zip(&report.stats.stolen_jobs) {
+        per_chip_steals[job.chip] += u64::from(stolen);
+    }
+    Ok(metrics::assemble(
+        engine,
+        cfg,
+        timeline,
+        report.predictions,
+        Some(per_chip_steals),
+    ))
 }
 
 #[cfg(test)]

@@ -270,6 +270,51 @@ impl Engine {
     pub fn logits(&self, images: &[Vec<i8>], masks: &LayerMasks) -> Result<I32Tensor> {
         let batch = images.len();
         anyhow::ensure!(batch > 0, "empty batch");
+        let (c, h, w) = self.eval.chw;
+        let mut x = Vec::with_capacity(batch * c * h * w);
+        for img in images {
+            x.extend(img.iter().map(|&v| v as i32));
+        }
+        self.logits_from_input(batch, x, masks)
+    }
+
+    /// Raw logits for a batch named by eval-set image indices — the
+    /// zero-copy serving entry point: the input tensor is assembled by
+    /// borrowing `self.eval.images` directly, so the executor workers
+    /// never clone an image `Vec<i8>` per job (the PR-2 hot-path cost
+    /// this replaces).
+    pub fn logits_by_index(&self, image_idxs: &[usize], masks: &LayerMasks) -> Result<I32Tensor> {
+        let batch = image_idxs.len();
+        anyhow::ensure!(batch > 0, "empty batch");
+        let (c, h, w) = self.eval.chw;
+        let mut x = Vec::with_capacity(batch * c * h * w);
+        for &i in image_idxs {
+            let img = self
+                .eval
+                .images
+                .get(i)
+                .with_context(|| {
+                    format!(
+                        "image index {i} out of range ({} eval images)",
+                        self.eval.images.len()
+                    )
+                })?;
+            x.extend(img.iter().map(|&v| v as i32));
+        }
+        self.logits_from_input(batch, x, masks)
+    }
+
+    /// Shared tail of [`logits`] / [`logits_by_index`]: mask-geometry
+    /// check, input assembly convention, backend dispatch, shape check.
+    ///
+    /// [`logits`]: Engine::logits
+    /// [`logits_by_index`]: Engine::logits_by_index
+    fn logits_from_input(
+        &self,
+        batch: usize,
+        x: Vec<i32>,
+        masks: &LayerMasks,
+    ) -> Result<I32Tensor> {
         anyhow::ensure!(
             masks.fc.rows == batch,
             "mask geometry is for batch {}, got {} images",
@@ -278,10 +323,6 @@ impl Engine {
         );
         let (c, h, w) = self.eval.chw;
         let classes = self.params.fc.out_n;
-        let mut x = Vec::with_capacity(batch * c * h * w);
-        for img in images {
-            x.extend(img.iter().map(|&v| v as i32));
-        }
         let mut inputs = vec![I32Tensor::new(vec![batch, c, h, w], x)];
         inputs.extend(masks.to_tensors());
         let logits = self.backend.execute_i32(&inputs)?;
@@ -297,6 +338,20 @@ impl Engine {
     /// masks; returns argmax predictions.
     pub fn predict_batch(&self, images: &[Vec<i8>], masks: &LayerMasks) -> Result<Vec<usize>> {
         let logits = self.logits(images, masks)?;
+        Ok(argmax_rows(&logits.data, self.params.fc.out_n))
+    }
+
+    /// As [`predict_batch`], but over eval-set image indices (see
+    /// [`logits_by_index`]) — what the executor workers call.
+    ///
+    /// [`predict_batch`]: Engine::predict_batch
+    /// [`logits_by_index`]: Engine::logits_by_index
+    pub fn predict_batch_by_index(
+        &self,
+        image_idxs: &[usize],
+        masks: &LayerMasks,
+    ) -> Result<Vec<usize>> {
+        let logits = self.logits_by_index(image_idxs, masks)?;
         Ok(argmax_rows(&logits.data, self.params.fc.out_n))
     }
 
@@ -425,6 +480,30 @@ mod tests {
         // mask-row mismatch is rejected
         assert!(e.predict_batch(&images[..5], &full).is_err());
         assert!(e.predict_batch(&[], &full).is_err());
+    }
+
+    #[test]
+    fn by_index_prediction_matches_cloned_images_exactly() {
+        // the zero-copy hot path is a pure re-plumbing: borrowing
+        // eval.images by index must be bit-identical to cloning each
+        // image into an owned batch (any slicing, any order, repeats).
+        let e = Engine::builtin();
+        let full = LayerMasks::identity(&e.geometry());
+        let idxs = [3usize, 0, 7, 3, 11];
+        let m = full.with_fc_rows(idxs.len());
+        let cloned: Vec<Vec<i8>> = idxs.iter().map(|&i| e.eval.images[i].clone()).collect();
+        let via_clone = e.predict_batch(&cloned, &m).unwrap();
+        let via_index = e.predict_batch_by_index(&idxs, &m).unwrap();
+        assert_eq!(via_index, via_clone);
+        let l_clone = e.logits(&cloned, &m).unwrap();
+        let l_index = e.logits_by_index(&idxs, &m).unwrap();
+        assert_eq!(l_index, l_clone, "logits must be bit-identical");
+        // out-of-range indices are rejected, not a panic
+        let m1 = full.with_fc_rows(1);
+        assert!(e.predict_batch_by_index(&[e.eval.images.len()], &m1).is_err());
+        // empty batches and mask-row mismatches keep erroring
+        assert!(e.predict_batch_by_index(&[], &m1).is_err());
+        assert!(e.predict_batch_by_index(&[0, 1], &m1).is_err());
     }
 
     #[test]

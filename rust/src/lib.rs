@@ -33,7 +33,10 @@
 //! serve/fleet experiment is configured through [`scenario`] — a
 //! declarative, validated spec API with a canonical `.scn` text
 //! format, preset registry and data-driven sweep grids
-//! (`repro scenario`, DESIGN.md §7).
+//! (`repro scenario`, DESIGN.md §7). The real-compute hot path is the
+//! work-stealing executor ([`serve::executor`]: per-worker deques,
+//! per-chip affinity, zero-copy image access, transposed-mask
+//! caching), measured wall-clock by `repro perf` (DESIGN.md §8).
 //!
 //! Start at [`coordinator`] for the experiment registry, or run
 //! `cargo run --release -- list`.

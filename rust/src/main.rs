@@ -13,6 +13,10 @@
 //!                                #   name (`repro scenario list` enumerates),
 //!                                #   a .scn file path, or `all` presets;
 //!                                #   writes BENCH_scenario_<name>.json
+//! repro perf [flags]             # wall-clock executor grid (shared queue vs
+//!                                #   work stealing, threads × chips);
+//!                                #   writes BENCH_perf.json (run from repo
+//!                                #   root; timing is nondeterministic)
 //! repro info                     # artifact status + active backend
 //!
 //! flags: --configs N   Monte-Carlo configs per point (default 10000)
@@ -133,6 +137,39 @@ fn cmd_fleet(rest: &[String]) -> Result<()> {
             t0.elapsed().as_secs_f64()
         );
     }
+    Ok(())
+}
+
+fn perf_flag_specs() -> Vec<FlagSpec> {
+    let mut specs = flag_specs();
+    specs.push(FlagSpec {
+        name: "smoke",
+        takes_value: false,
+        help: "reduced perf grid for CI ({1,4} chips, 2 reps)",
+    });
+    specs
+}
+
+fn cmd_perf(rest: &[String]) -> Result<()> {
+    let args = Args::parse(rest, &perf_flag_specs())?;
+    let opts = opts_from(&args)?;
+    let smoke = args.has("smoke") || opts.fast;
+    eprintln!(
+        "[repro] perf — executor wall-clock grid {} (seed={:#x}; timing is \
+         nondeterministic, simulated sections stay byte-stable)",
+        if smoke { "smoke" } else { "full" },
+        opts.seed
+    );
+    let t0 = std::time::Instant::now();
+    let (tables, json) = coordinator::exp_perf::run_full(&opts, smoke)?;
+    report::emit(&opts.out_dir, "perf", &tables)?;
+    // Like the other bench baselines, the file lands in the current
+    // directory — run from the repo root.
+    std::fs::write("BENCH_perf.json", &json).context("writing BENCH_perf.json")?;
+    eprintln!(
+        "[repro] perf done in {:.1}s — measurements written to BENCH_perf.json",
+        t0.elapsed().as_secs_f64()
+    );
     Ok(())
 }
 
@@ -293,7 +330,7 @@ fn main() -> Result<()> {
                  grid for CI\n  --chips <value>    fleet only: restrict \
                  the grid to one cluster size\n",
                 usage(
-                    "repro <list|exp|all|serve|fleet|scenario|info>",
+                    "repro <list|exp|all|serve|fleet|scenario|perf|info>",
                     "HyCA reproduction CLI",
                     &flag_specs()
                 )
@@ -308,6 +345,7 @@ fn main() -> Result<()> {
         "serve" => cmd_serve(rest)?,
         "fleet" => cmd_fleet(rest)?,
         "scenario" => cmd_scenario(rest)?,
+        "perf" => cmd_perf(rest)?,
         "exp" => {
             let args = Args::parse(rest, &flag_specs())?;
             let Some(id) = args.positionals.first() else {

@@ -1,0 +1,504 @@
+//! Work-stealing executor — the wall-clock engine room of the serving
+//! stack (DESIGN.md §8).
+//!
+//! PR 2's pool replayed every job through **one** shared
+//! [`BoundedQueue`]: correct, but a scaling cliff — every pop crosses
+//! the same mutex, and a fleet's per-chip mask epochs ping-pong between
+//! whichever workers happen to grab them. This module replaces that hot
+//! path with **per-worker deques + Chase-Lev-style stealing**:
+//!
+//! * every job has a *home worker* (`affinity[job] % threads`; the
+//!   fleet passes chip ids, so one chip's jobs stay on one worker and
+//!   its mask epochs stay cache-warm — including the native backend's
+//!   transposed-mask cache lookups, which then hit in a tight loop);
+//! * the owner drains its deque from the **front** (job-id order =
+//!   epoch order), thieves steal from the **back** (the work least
+//!   likely to share an epoch with what the owner touches next) — the
+//!   two ends of a Chase-Lev deque, here guarded by one short
+//!   uncontended mutex per deque instead of a lock-free ring, because
+//!   jobs are coarse (a whole batch inference) and the deque is touched
+//!   once per job;
+//! * a worker that runs dry scans the other deques round-robin from its
+//!   right neighbour and steals one job at a time; with stealing off it
+//!   simply exits (the static-partition baseline `repro perf` measures
+//!   stealing against).
+//!
+//! **Why bit-exactness survives:** every job is a pure function of its
+//! image indices and masks, and every result lands in a slot keyed by
+//! job id — so the prediction vector is byte-identical at any thread
+//! count, any affinity map, any steal interleaving, and under the
+//! legacy shared queue. `rust/tests/proptests.rs` pins this across
+//! random modes; `repro perf` re-asserts it at runtime on every timed
+//! cell.
+//!
+//! This file is the **only** serve/fleet/scenario source allowed to
+//! touch `std::time::Instant` (the CI simulated-time lint exempts
+//! exactly this path): the executor times its own wall-clock span so
+//! `repro perf` can report jobs/sec without wrapping timing around the
+//! thread-scope from outside. Wall-clock numbers never flow into
+//! simulated-cycle metrics — [`ExecStats`] is consumed only by the perf
+//! harness and the (digest-excluded) steal counters.
+
+use std::borrow::Borrow;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use super::queue::BoundedQueue;
+use super::BatchJob;
+use crate::inference::Engine;
+
+/// How the executor distributes jobs over its worker threads.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExecMode {
+    /// The legacy PR-2 topology: one shared bounded MPMC queue every
+    /// worker pops from. Kept as the measured baseline of `repro perf`
+    /// and `benches/executor.rs`.
+    SharedQueue,
+    /// Per-worker deques with home affinity; `steal: true` lets dry
+    /// workers take from the back of other deques, `steal: false` is
+    /// the static partition (each worker serves exactly its home jobs).
+    WorkSteal { steal: bool },
+}
+
+impl ExecMode {
+    /// Stable label used in `BENCH_perf.json` rows and bench names.
+    pub fn label(&self) -> &'static str {
+        match self {
+            ExecMode::SharedQueue => "shared",
+            ExecMode::WorkSteal { steal: false } => "steal_off",
+            ExecMode::WorkSteal { steal: true } => "steal_on",
+        }
+    }
+}
+
+/// Wall-clock observability of one execution. **Nondeterministic** —
+/// steal counts and timing depend on OS scheduling; nothing here may
+/// flow into a digest, a simulated-cycle metric, or a byte-compared
+/// bench section (`FleetReport::digest` excludes it by design).
+#[derive(Debug, Clone)]
+pub struct ExecStats {
+    pub threads: usize,
+    pub mode: ExecMode,
+    /// Successful steals (jobs executed by a non-home worker). Always 0
+    /// under [`ExecMode::SharedQueue`] (no home to steal from).
+    pub steals: u64,
+    /// Per job id: was it executed by a thief? (All `false` under the
+    /// shared queue.) The fleet folds this into per-chip counters.
+    pub stolen_jobs: Vec<bool>,
+    /// Wall-clock span of the whole execution in nanoseconds.
+    pub wall_nanos: u128,
+}
+
+/// Predictions (per job, in job-id order) + execution stats.
+pub struct ExecReport {
+    pub predictions: Vec<Vec<usize>>,
+    pub stats: ExecStats,
+}
+
+/// Per-job result slot: `(predictions, executed-by-a-thief)`.
+type ResultSlot = Mutex<Option<(Vec<usize>, bool)>>;
+
+/// One worker's deque. Owner end = front (FIFO in job-id order, so a
+/// chip's mask epochs are visited in timeline order); thief end = back
+/// — the Chase-Lev discipline with a mutex standing in for the
+/// lock-free ring (jobs are batch-sized, the lock is touched once per
+/// job, and correctness must hold without a loom-style test harness).
+struct StealDeque<T> {
+    inner: Mutex<VecDeque<T>>,
+}
+
+impl<T> StealDeque<T> {
+    fn new() -> Self {
+        Self { inner: Mutex::new(VecDeque::new()) }
+    }
+
+    /// Enqueue at the owner's processing tail (jobs are loaded in id
+    /// order before the workers start).
+    fn push_back(&self, item: T) {
+        self.inner.lock().unwrap().push_back(item);
+    }
+
+    /// Owner end: next job in id order.
+    fn pop_front(&self) -> Option<T> {
+        self.inner.lock().unwrap().pop_front()
+    }
+
+    /// Thief end: the job farthest from the owner's current locality.
+    fn steal_back(&self) -> Option<T> {
+        self.inner.lock().unwrap().pop_back()
+    }
+}
+
+/// Execute every job; returns per-job prediction vectors in job-id
+/// order plus the (nondeterministic) execution stats.
+///
+/// * `affinity` — optional home-worker hint per job (the fleet passes
+///   chip ids; the value is taken modulo the thread count). `None`
+///   round-robins by job id, which is the serve-shaped default.
+/// * `queue_cap` — bound of the shared queue under
+///   [`ExecMode::SharedQueue`]; ignored by the work-stealing modes
+///   (jobs are pre-partitioned, nothing ever blocks).
+///
+/// Generic over borrowed jobs exactly like the PR-2 pool so multi-chip
+/// callers can execute `&[&BatchJob]` views without cloning.
+pub fn execute<J>(
+    engine: &Arc<Engine>,
+    jobs: &[J],
+    affinity: Option<&[usize]>,
+    threads: usize,
+    mode: ExecMode,
+    queue_cap: usize,
+) -> Result<ExecReport>
+where
+    J: Borrow<BatchJob> + Sync,
+{
+    let threads = threads.max(1);
+    if let Some(aff) = affinity {
+        assert_eq!(aff.len(), jobs.len(), "one affinity per job");
+    }
+    let t0 = Instant::now();
+    if jobs.is_empty() {
+        return Ok(ExecReport {
+            predictions: Vec::new(),
+            stats: ExecStats {
+                threads,
+                mode,
+                steals: 0,
+                stolen_jobs: Vec::new(),
+                wall_nanos: t0.elapsed().as_nanos(),
+            },
+        });
+    }
+
+    let results: Vec<ResultSlot> = jobs.iter().map(|_| Mutex::new(None)).collect();
+    let failed = AtomicBool::new(false);
+    let failure: Mutex<Option<anyhow::Error>> = Mutex::new(None);
+    let steal_count = AtomicU64::new(0);
+
+    let run_job = |idx: usize, job: &BatchJob, stolen: bool| {
+        if failed.load(Ordering::Acquire) {
+            return; // first failure wins; stop burning cycles
+        }
+        match engine.predict_batch_by_index(&job.image_idxs, &job.masks) {
+            Ok(preds) => {
+                *results[idx].lock().unwrap() = Some((preds, stolen));
+            }
+            Err(e) => {
+                failed.store(true, Ordering::Release);
+                let mut f = failure.lock().unwrap();
+                if f.is_none() {
+                    *f = Some(e.context(format!("serving batch job {idx}")));
+                }
+            }
+        }
+    };
+
+    match mode {
+        ExecMode::SharedQueue => {
+            let queue: BoundedQueue<(usize, &BatchJob)> = BoundedQueue::new(queue_cap.max(1));
+            std::thread::scope(|scope| {
+                let queue_ref = &queue;
+                let run_job = &run_job;
+                for _ in 0..threads {
+                    scope.spawn(move || {
+                        while let Some((idx, job)) = queue_ref.pop() {
+                            run_job(idx, job, false);
+                        }
+                    });
+                }
+                for (idx, job) in jobs.iter().enumerate() {
+                    if queue_ref.push((idx, job.borrow())).is_err() {
+                        break; // queue closed early — cannot happen today
+                    }
+                }
+                queue_ref.close();
+            });
+        }
+        ExecMode::WorkSteal { steal } => {
+            let deques: Vec<StealDeque<(usize, &BatchJob)>> =
+                (0..threads).map(|_| StealDeque::new()).collect();
+            for (idx, job) in jobs.iter().enumerate() {
+                let home = affinity.map_or(idx, |a| a[idx]) % threads;
+                deques[home].push_back((idx, job.borrow()));
+            }
+            std::thread::scope(|scope| {
+                let deques = &deques;
+                let run_job = &run_job;
+                let steal_count = &steal_count;
+                for w in 0..threads {
+                    scope.spawn(move || loop {
+                        // own work first (front = job-id order, keeps
+                        // this home's mask epochs warm)
+                        if let Some((idx, job)) = deques[w].pop_front() {
+                            run_job(idx, job, false);
+                            continue;
+                        }
+                        if !steal {
+                            break; // static partition: home drained, done
+                        }
+                        // dry: scan the other deques from the right
+                        // neighbour, steal one job from the back
+                        let mut found = None;
+                        for off in 1..threads {
+                            if let Some(item) = deques[(w + off) % threads].steal_back() {
+                                found = Some(item);
+                                break;
+                            }
+                        }
+                        match found {
+                            Some((idx, job)) => {
+                                steal_count.fetch_add(1, Ordering::Relaxed);
+                                run_job(idx, job, true);
+                            }
+                            // every deque empty: all jobs are claimed
+                            // (none is ever re-queued), so nothing is
+                            // left for this worker — exit
+                            None => break,
+                        }
+                    });
+                }
+            });
+        }
+    }
+
+    if let Some(e) = failure.into_inner().unwrap() {
+        return Err(e);
+    }
+    let mut predictions = Vec::with_capacity(jobs.len());
+    let mut stolen_jobs = Vec::with_capacity(jobs.len());
+    for (idx, slot) in results.into_iter().enumerate() {
+        let (preds, stolen) = slot
+            .into_inner()
+            .unwrap()
+            .with_context(|| format!("batch job {idx} was never executed"))?;
+        predictions.push(preds);
+        stolen_jobs.push(stolen);
+    }
+    let steals = steal_count.into_inner();
+    debug_assert_eq!(
+        steals,
+        stolen_jobs.iter().filter(|&&s| s).count() as u64,
+        "steal counter must agree with the per-job flags"
+    );
+    Ok(ExecReport {
+        predictions,
+        stats: ExecStats {
+            threads,
+            mode,
+            steals,
+            stolen_jobs,
+            wall_nanos: t0.elapsed().as_nanos(),
+        },
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::array::Dims;
+    use crate::serve::{simulate_timeline, ServeConfig};
+
+    fn engine() -> Arc<Engine> {
+        Arc::new(Engine::builtin())
+    }
+
+    fn cfg() -> ServeConfig {
+        ServeConfig {
+            seed: 3,
+            dims: Dims::new(8, 8),
+            lanes: 2,
+            max_batch: 4,
+            max_wait_cycles: 5_000,
+            clients: 6,
+            think_cycles: 100,
+            total_requests: 18,
+            queue_cap: 6,
+            executor_threads: 2,
+            windows: 4,
+            faults: None,
+        }
+    }
+
+    fn all_modes() -> [ExecMode; 3] {
+        [
+            ExecMode::SharedQueue,
+            ExecMode::WorkSteal { steal: false },
+            ExecMode::WorkSteal { steal: true },
+        ]
+    }
+
+    #[test]
+    fn every_mode_and_width_produces_identical_predictions() {
+        let engine = engine();
+        let timeline = simulate_timeline(&engine, &cfg());
+        let reference = execute(&engine, &timeline.jobs, None, 1, ExecMode::SharedQueue, 4)
+            .unwrap()
+            .predictions;
+        let affinity: Vec<usize> = timeline.jobs.iter().map(|j| j.lane).collect();
+        for mode in all_modes() {
+            for threads in [1usize, 2, 3, 8] {
+                for aff in [None, Some(affinity.as_slice())] {
+                    let got = execute(&engine, &timeline.jobs, aff, threads, mode, 4).unwrap();
+                    assert_eq!(
+                        got.predictions, reference,
+                        "mode {:?} threads {threads} affinity {:?} diverged",
+                        mode,
+                        aff.is_some()
+                    );
+                    assert_eq!(got.stats.stolen_jobs.len(), timeline.jobs.len());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn shared_queue_never_reports_steals() {
+        let engine = engine();
+        let timeline = simulate_timeline(&engine, &cfg());
+        let report = execute(&engine, &timeline.jobs, None, 4, ExecMode::SharedQueue, 4).unwrap();
+        assert_eq!(report.stats.steals, 0);
+        assert!(report.stats.stolen_jobs.iter().all(|&s| !s));
+        assert_eq!(report.stats.mode.label(), "shared");
+    }
+
+    #[test]
+    fn steal_off_executes_everything_even_with_skewed_affinity() {
+        // all jobs homed on worker 0 of 4, no stealing: worker 0 must
+        // drain them alone, the rest exit immediately — no job lost, no
+        // hang (the static-partition termination edge case)
+        let engine = engine();
+        let timeline = simulate_timeline(&engine, &cfg());
+        let home_zero = vec![0usize; timeline.jobs.len()];
+        let got = execute(
+            &engine,
+            &timeline.jobs,
+            Some(&home_zero),
+            4,
+            ExecMode::WorkSteal { steal: false },
+            4,
+        )
+        .unwrap();
+        assert_eq!(got.predictions.len(), timeline.jobs.len());
+        assert_eq!(got.stats.steals, 0, "stealing is off");
+        let reference = execute(&engine, &timeline.jobs, None, 1, ExecMode::SharedQueue, 4)
+            .unwrap()
+            .predictions;
+        assert_eq!(got.predictions, reference);
+    }
+
+    #[test]
+    fn skewed_affinity_with_stealing_spreads_the_work() {
+        // same skew with stealing on: thieves must lift jobs off worker
+        // 0 (scheduling-dependent, so assert the accounting, not a
+        // specific count — with 7 thieves and a multi-job backlog at
+        // least the per-flag/counter agreement must hold)
+        let engine = engine();
+        let timeline = simulate_timeline(&engine, &cfg());
+        let home_zero = vec![0usize; timeline.jobs.len()];
+        let got = execute(
+            &engine,
+            &timeline.jobs,
+            Some(&home_zero),
+            8,
+            ExecMode::WorkSteal { steal: true },
+            4,
+        )
+        .unwrap();
+        assert_eq!(
+            got.stats.steals,
+            got.stats.stolen_jobs.iter().filter(|&&s| s).count() as u64
+        );
+        let reference = execute(&engine, &timeline.jobs, None, 1, ExecMode::SharedQueue, 4)
+            .unwrap()
+            .predictions;
+        assert_eq!(got.predictions, reference);
+    }
+
+    #[test]
+    fn empty_job_list_is_fine_in_every_mode() {
+        let engine = engine();
+        for mode in all_modes() {
+            let r = execute::<BatchJob>(&engine, &[], None, 3, mode, 4).unwrap();
+            assert!(r.predictions.is_empty());
+            assert_eq!(r.stats.steals, 0);
+        }
+    }
+
+    #[test]
+    fn deque_owner_and_thief_take_opposite_ends() {
+        let d: StealDeque<u32> = StealDeque::new();
+        d.push_back(1);
+        d.push_back(2);
+        d.push_back(3);
+        assert_eq!(d.pop_front(), Some(1), "owner end is the front");
+        assert_eq!(d.steal_back(), Some(3), "thief end is the back");
+        assert_eq!(d.pop_front(), Some(2));
+        // empty steal and empty pop are clean Nones
+        assert_eq!(d.steal_back(), None);
+        assert_eq!(d.pop_front(), None);
+    }
+
+    #[test]
+    fn deque_single_slot_race_hands_the_item_to_exactly_one_side() {
+        // one item, one owner popping, many thieves stealing, repeated:
+        // exactly one side wins each round, nothing is duplicated or
+        // lost (the single-slot race of the steal protocol)
+        for _ in 0..200 {
+            let d: StealDeque<u32> = StealDeque::new();
+            d.push_back(42);
+            let winners: usize = std::thread::scope(|s| {
+                let owner = s.spawn(|| usize::from(d.pop_front().is_some()));
+                let thieves: Vec<_> = (0..3)
+                    .map(|_| s.spawn(|| usize::from(d.steal_back().is_some())))
+                    .collect();
+                owner.join().unwrap()
+                    + thieves.into_iter().map(|t| t.join().unwrap()).sum::<usize>()
+            });
+            assert_eq!(winners, 1, "the single item must go to exactly one taker");
+        }
+    }
+
+    #[test]
+    fn self_steal_is_impossible_by_construction() {
+        // the steal scan starts at the right neighbour and wraps before
+        // reaching the scanner itself: with one thread there is nobody
+        // to steal from, so a dry single worker exits instead of
+        // spinning on its own deque
+        let engine = engine();
+        let timeline = simulate_timeline(&engine, &cfg());
+        let got = execute(
+            &engine,
+            &timeline.jobs,
+            None,
+            1,
+            ExecMode::WorkSteal { steal: true },
+            4,
+        )
+        .unwrap();
+        assert_eq!(got.stats.steals, 0, "a lone worker can never steal");
+        assert_eq!(got.predictions.len(), timeline.jobs.len());
+    }
+
+    #[test]
+    fn borrowed_job_views_execute_identically() {
+        let engine = engine();
+        let timeline = simulate_timeline(&engine, &cfg());
+        let owned = execute(
+            &engine,
+            &timeline.jobs,
+            None,
+            2,
+            ExecMode::WorkSteal { steal: true },
+            4,
+        )
+        .unwrap();
+        let refs: Vec<&BatchJob> = timeline.jobs.iter().collect();
+        let borrowed = execute(&engine, &refs, None, 3, ExecMode::WorkSteal { steal: true }, 4)
+            .unwrap();
+        assert_eq!(owned.predictions, borrowed.predictions);
+    }
+}

@@ -17,10 +17,14 @@
 //!   [`ServeConfig`] — no wall clock, no platform randomness (the CI
 //!   determinism lint enforces it for this directory).
 //! * *Real compute* — [`pool::execute`] replays the timeline's batch
-//!   jobs through a bounded MPMC queue ([`queue`]) into a
-//!   `std::thread` worker pool sharing one engine; each job is pure,
-//!   so predictions are byte-identical at any `executor_threads`
-//!   (property-tested in `rust/tests/proptests.rs`).
+//!   jobs through the work-stealing executor ([`executor`]): per-worker
+//!   deques with home affinity, Chase-Lev-style back-end stealing, and
+//!   the PR-2 shared [`queue::BoundedQueue`] retained as the measured
+//!   baseline (`repro perf`). Workers share one engine and borrow its
+//!   eval images by index (no per-job clones); each job is pure, so
+//!   predictions are byte-identical at any `executor_threads`, any
+//!   affinity map and any steal interleaving (property-tested in
+//!   `rust/tests/proptests.rs`).
 //!
 //! Metrics ([`metrics`]) — latency percentiles in cycles via
 //! [`crate::util::stats::LogHistogram`], throughput per Mcycle, and
@@ -29,6 +33,7 @@
 //! `BENCH_serve.json` golden test.
 
 pub mod batcher;
+pub mod executor;
 pub mod loadgen;
 pub mod metrics;
 pub mod pool;

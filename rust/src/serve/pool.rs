@@ -1,20 +1,25 @@
-//! The real worker pool: replay the simulated timeline's batch jobs
-//! through the shared engine on `executor_threads` OS threads.
+//! Compatibility wrapper over the work-stealing executor
+//! ([`super::executor`]).
 //!
-//! Jobs flow producer → [`BoundedQueue`] → workers; every worker holds
-//! a clone of the same [`Arc<Engine>`] (the `Backend: Send + Sync`
-//! contract). Each job is a pure function of its images and masks, and
-//! results land in per-job slots keyed by job id — so the final
-//! prediction vector is byte-identical at any thread count and any
-//! scheduling interleaving, which is exactly the invariance the serve
-//! property tests pin.
+//! PR 2's pool owned a shared [`super::queue::BoundedQueue`] and a
+//! worker loop that cloned every image per job; both jobs moved into
+//! `executor.rs` (the queue survives as the executor's measured
+//! `SharedQueue` baseline, the clone is gone — workers borrow
+//! `eval.images` through [`crate::inference::Engine::predict_batch_by_index`]).
+//! `execute` keeps the PR-2 signature so existing callers and tests
+//! compile unchanged: round-robin home affinity by job id, stealing on,
+//! stats discarded. Each job is a pure function of its image indices
+//! and masks, and results land in per-job slots keyed by job id — so
+//! the final prediction vector is byte-identical at any thread count
+//! and any scheduling interleaving, which is exactly the invariance the
+//! serve property tests pin.
 
 use std::borrow::Borrow;
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 
-use anyhow::{Context, Result};
+use anyhow::Result;
 
-use super::queue::BoundedQueue;
+use super::executor::{self, ExecMode};
 use super::BatchJob;
 use crate::inference::Engine;
 
@@ -25,6 +30,9 @@ use crate::inference::Engine;
 /// can execute `&[&BatchJob]` views into their own job structures on
 /// the same pool without cloning — one pool serves any number of
 /// simulated chips because every job carries its own masks.
+///
+/// `queue_cap` is accepted for signature compatibility; the
+/// work-stealing path pre-partitions jobs and never blocks on a bound.
 pub fn execute<J>(
     engine: &Arc<Engine>,
     jobs: &[J],
@@ -34,65 +42,15 @@ pub fn execute<J>(
 where
     J: Borrow<BatchJob> + Sync,
 {
-    if jobs.is_empty() {
-        return Ok(Vec::new());
-    }
-    let threads = executor_threads.max(1);
-    let queue: BoundedQueue<(usize, &BatchJob)> = BoundedQueue::new(queue_cap.max(1));
-    let results: Vec<Mutex<Option<Vec<usize>>>> =
-        jobs.iter().map(|_| Mutex::new(None)).collect();
-    let failure: Mutex<Option<anyhow::Error>> = Mutex::new(None);
-
-    std::thread::scope(|scope| {
-        let queue_ref = &queue;
-        let results_ref = &results;
-        let failure_ref = &failure;
-        for _ in 0..threads {
-            let worker_engine = Arc::clone(engine);
-            scope.spawn(move || {
-                while let Some((idx, job)) = queue_ref.pop() {
-                    if failure_ref.lock().unwrap().is_some() {
-                        continue; // drain the queue, nothing more to do
-                    }
-                    let images: Vec<Vec<i8>> = job
-                        .image_idxs
-                        .iter()
-                        .map(|&i| worker_engine.eval.images[i].clone())
-                        .collect();
-                    match worker_engine.predict_batch(&images, &job.masks) {
-                        Ok(preds) => {
-                            *results_ref[idx].lock().unwrap() = Some(preds);
-                        }
-                        Err(e) => {
-                            let mut f = failure_ref.lock().unwrap();
-                            if f.is_none() {
-                                *f = Some(e.context(format!("serving batch job {idx}")));
-                            }
-                        }
-                    }
-                }
-            });
-        }
-        for (idx, job) in jobs.iter().enumerate() {
-            if queue_ref.push((idx, job.borrow())).is_err() {
-                break; // queue closed early — cannot happen today
-            }
-        }
-        queue_ref.close();
-    });
-
-    if let Some(e) = failure.into_inner().unwrap() {
-        return Err(e);
-    }
-    results
-        .into_iter()
-        .enumerate()
-        .map(|(idx, slot)| {
-            slot.into_inner()
-                .unwrap()
-                .with_context(|| format!("batch job {idx} was never executed"))
-        })
-        .collect()
+    let report = executor::execute(
+        engine,
+        jobs,
+        None,
+        executor_threads,
+        ExecMode::WorkSteal { steal: true },
+        queue_cap,
+    )?;
+    Ok(report.predictions)
 }
 
 #[cfg(test)]
@@ -130,6 +88,28 @@ mod tests {
             .jobs
             .iter()
             .map(|job| {
+                engine
+                    .predict_batch_by_index(&job.image_idxs, &job.masks)
+                    .unwrap()
+            })
+            .collect();
+        for threads in [1usize, 2, 5] {
+            let pooled = execute(&engine, &timeline.jobs, threads, 4).unwrap();
+            assert_eq!(pooled, direct, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn pool_matches_cloned_image_execution() {
+        // the zero-copy pinning at the pool level: borrowing
+        // eval.images by index produces exactly what PR 2's
+        // clone-per-job worker loop produced
+        let engine = engine();
+        let timeline = simulate_timeline(&engine, &cfg());
+        let cloned: Vec<Vec<usize>> = timeline
+            .jobs
+            .iter()
+            .map(|job| {
                 let images: Vec<Vec<i8>> = job
                     .image_idxs
                     .iter()
@@ -138,10 +118,8 @@ mod tests {
                 engine.predict_batch(&images, &job.masks).unwrap()
             })
             .collect();
-        for threads in [1usize, 2, 5] {
-            let pooled = execute(&engine, &timeline.jobs, threads, 4).unwrap();
-            assert_eq!(pooled, direct, "threads={threads}");
-        }
+        let pooled = execute(&engine, &timeline.jobs, 3, 4).unwrap();
+        assert_eq!(pooled, cloned);
     }
 
     #[test]

@@ -1,6 +1,8 @@
-//! Bounded MPMC queue — the seam between the deterministic simulated
-//! timeline (producer) and the real `std::thread` worker pool
-//! (consumers) in [`super::pool`].
+//! Bounded MPMC queue — PR 2's seam between the deterministic
+//! simulated timeline (producer) and the real `std::thread` workers,
+//! retained as the work-stealing executor's measured `SharedQueue`
+//! baseline ([`super::executor::ExecMode::SharedQueue`], what `repro
+//! perf` compares stealing against).
 //!
 //! Plain `Mutex<VecDeque> + Condvar` with close semantics: `push`
 //! blocks while the queue is at capacity (backpressure on the
@@ -8,7 +10,7 @@
 //! everyone so consumers drain the remaining items and exit. Multiple
 //! producers and consumers are fine; determinism of the serving results
 //! does not depend on pop order because every job is pure and keyed by
-//! its index ([`super::pool::execute`]).
+//! its index ([`super::executor::execute`]).
 
 use std::collections::VecDeque;
 use std::sync::{Condvar, Mutex};

@@ -1,0 +1,98 @@
+//! Perf-harness acceptance tests.
+//!
+//! The wall-clock `timing` section of `BENCH_perf.json` is
+//! nondeterministic **by design** (and marked so in the schema), so
+//! these tests pin everything around it: the deterministic workload
+//! section replays byte-identically, the JSON is well-formed with the
+//! documented keys, and the timed grid's internal bit-exactness
+//! assertion (every cell == the 1-thread shared-queue reference)
+//! actually runs — `run_perf` returning `Ok` *is* that proof, because
+//! divergence is an error, not a statistic.
+
+use hyca::coordinator::{exp_perf, find, RunOpts};
+
+fn opts(seed: u64) -> RunOpts {
+    RunOpts {
+        seed,
+        threads: 2,
+        out_dir: std::env::temp_dir().join("hyca_perf_results"),
+        builtin_model: true,
+        ..RunOpts::default()
+    }
+}
+
+#[test]
+fn deterministic_section_is_byte_identical_across_runs() {
+    let a = exp_perf::run_perf(&opts(0xC0FFEE), true, 1).unwrap();
+    let b = exp_perf::run_perf(&opts(0xC0FFEE), true, 1).unwrap();
+    assert_eq!(a.det, b.det, "workload descriptions must replay exactly");
+    assert_eq!(
+        exp_perf::det_json(0xC0FFEE, true, &a.det),
+        exp_perf::det_json(0xC0FFEE, true, &b.det)
+    );
+    // and the seed actually matters
+    let c = exp_perf::run_perf(&opts(0xBEEF), true, 1).unwrap();
+    assert_ne!(a.det, c.det);
+}
+
+#[test]
+fn bench_json_has_the_documented_schema_and_marks_timing_nondeterministic() {
+    let run = exp_perf::run_perf(&opts(0xC0FFEE), true, 1).unwrap();
+    let json = exp_perf::perf_json(0xC0FFEE, true, &run);
+    for key in [
+        "\"schema\": \"hyca-perf-bench-v1\"",
+        "\"deterministic\": {",
+        "\"grid\": [",
+        "\"chips\": 1",
+        "\"chips\": 4",
+        "\"total_cycles\":",
+        "\"timing\": {",
+        "\"nondeterministic\": true",
+        "\"executor\": \"shared\"",
+        "\"executor\": \"steal_off\"",
+        "\"executor\": \"steal_on\"",
+        "\"wall_ms\":",
+        "\"jobs_per_sec\":",
+        "\"steals\":",
+    ] {
+        assert!(json.contains(key), "missing {key} in:\n{json}");
+    }
+    assert!(json.starts_with("{\n") && json.ends_with("}\n"));
+}
+
+#[test]
+fn timing_grid_covers_every_cell_and_shared_never_steals() {
+    let run = exp_perf::run_perf(&opts(0xC0FFEE), true, 1).unwrap();
+    let chips = exp_perf::chip_sweep(true);
+    assert_eq!(
+        run.timing.len(),
+        chips.len() * exp_perf::THREAD_SWEEP.len() * exp_perf::mode_sweep().len(),
+        "one timed row per (chips × threads × executor) cell"
+    );
+    for row in &run.timing {
+        assert!(row.wall_ms > 0.0, "{row:?}");
+        assert!(row.jobs_per_sec > 0.0, "{row:?}");
+        if row.executor != "steal_on" {
+            assert_eq!(row.steals, 0, "only steal_on may steal: {row:?}");
+        }
+        if row.threads == 1 {
+            assert_eq!(row.steals, 0, "a lone worker cannot steal: {row:?}");
+        }
+    }
+    // the deterministic section names every swept chip count
+    let det_chips: Vec<usize> = run.det.iter().map(|d| d.chips).collect();
+    assert_eq!(det_chips, chips);
+}
+
+#[test]
+fn perf_experiment_is_registered_and_renders_tables() {
+    let exp = find("perf").expect("perf must be in the registry");
+    let tables = exp
+        .run(&RunOpts { fast: true, ..opts(0xC0FFEE) })
+        .unwrap();
+    assert_eq!(tables.len(), 2);
+    let workloads = tables[0].to_markdown();
+    assert!(workloads.contains("total_cycles"));
+    let grid = tables[1].to_markdown();
+    assert!(grid.contains("speedup_vs_shared") && grid.contains("steal_on"));
+}

@@ -503,6 +503,80 @@ fn prop_serve_batched_equals_sequential_and_is_worker_invariant() {
 }
 
 #[test]
+fn prop_worksteal_executor_is_invariant_to_mode_width_and_affinity() {
+    // The work-stealing extension of the executor-invariance contract:
+    // for random fleet workloads, every executor topology — legacy
+    // shared queue, static partition (steal off), full work stealing —
+    // at random thread counts and random chip counts produces
+    // prediction vectors bit-identical to the 1-thread shared-queue
+    // reference.
+    use hyca::serve::executor::{self, ExecMode};
+    check("executor modes/widths/affinity agree", 6, |g| {
+        let engine = std::sync::Arc::new(hyca::inference::Engine::builtin());
+        let n_chips = g.usize_in(1, 5);
+        let clients = g.usize_in(1, 3) * n_chips;
+        let cfg = hyca::fleet::FleetConfig {
+            seed: g.usize_in(0, 1 << 20) as u64,
+            chips: vec![
+                hyca::fleet::ChipSpec {
+                    dims: Dims::new(8, 8),
+                    lanes: g.usize_in(1, 3),
+                };
+                n_chips
+            ],
+            policy: *g.choose(&hyca::fleet::RoutingPolicy::all()),
+            max_batch: g.usize_in(1, 5),
+            max_wait_cycles: g.usize_in(0, 10_000) as u64,
+            clients,
+            think_cycles: g.usize_in(0, 1_000) as u64,
+            total_requests: g.usize_in(4, 8 * n_chips.max(1)),
+            queue_cap: clients,
+            executor_threads: 1,
+            windows: 4,
+            faults: None,
+            lifecycle: hyca::fleet::LifecyclePolicy::NEVER,
+        };
+        let timeline = hyca::fleet::simulate_fleet(&engine, &cfg);
+        let jobs: Vec<&hyca::serve::BatchJob> = timeline.jobs.iter().map(|j| &j.job).collect();
+        let affinity: Vec<usize> = timeline.jobs.iter().map(|j| j.chip).collect();
+        let reference = executor::execute(
+            &engine,
+            &jobs,
+            None,
+            1,
+            ExecMode::SharedQueue,
+            cfg.queue_cap,
+        )
+        .unwrap()
+        .predictions;
+        for _ in 0..3 {
+            let threads = g.usize_in(1, 7);
+            let mode = *g.choose(&[
+                ExecMode::SharedQueue,
+                ExecMode::WorkSteal { steal: false },
+                ExecMode::WorkSteal { steal: true },
+            ]);
+            let aff = if g.bool(0.5) { Some(affinity.as_slice()) } else { None };
+            let got = executor::execute(&engine, &jobs, aff, threads, mode, cfg.queue_cap)
+                .unwrap();
+            assert_eq!(
+                got.predictions, reference,
+                "mode {mode:?} threads {threads} chips {n_chips} diverged"
+            );
+        }
+        // end to end: the fleet's affinity-driven run matches the
+        // legacy-path predictions too
+        let report = hyca::fleet::run(&engine, &cfg).unwrap();
+        let flat: Vec<usize> = timeline
+            .requests
+            .iter()
+            .map(|r| reference[r.batch_id][r.slot])
+            .collect();
+        assert_eq!(report.predictions, flat, "fleet::run diverged from reference");
+    });
+}
+
+#[test]
 fn prop_scenario_spec_round_trips_through_canonical_text() {
     // The scenario-format contract (DESIGN.md §7): for every valid
     // spec, parse(to_canonical_string(s)) == s and the canonical
