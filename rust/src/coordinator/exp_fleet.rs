@@ -289,6 +289,8 @@ pub(crate) fn scenario_timeline_table(report: &FleetReport) -> Table {
                 }
                 FleetEventKind::Drained => format!("chip{}:DRAIN", e.chip),
                 FleetEventKind::Readmitted => format!("chip{}:READMIT", e.chip),
+                FleetEventKind::ScaledUp => format!("chip{}:SCALE_UP", e.chip),
+                FleetEventKind::ScaledDown => format!("chip{}:SCALE_DOWN", e.chip),
             })
             .collect();
         t.push_row(vec![

@@ -1,0 +1,193 @@
+//! `traffic` — the open-loop traffic experiment (`repro traffic`):
+//! rate-driven arrivals against the fleet with SLO-aware admission
+//! control and queue-pressure chip autoscaling (DESIGN.md §9).
+//!
+//! Three scenario presets cover the control surface:
+//!
+//! * `open_steady` — one chip far below saturation: the degeneracy
+//!   anchor (zero shed, accuracy 1.0, closed-loop steady-state
+//!   behaviour recovered from open mode);
+//! * `flash_crowd` — a 15× arrival spike over a 4-chip fleet: the
+//!   admission controller sheds to protect the SLO while the
+//!   autoscaler grows 2→4 active chips and shrinks back;
+//! * `open_diurnal` — a sinusoidal day/night rate the autoscaler
+//!   tracks between 2 and 4 active chips.
+//!
+//! Like the other serving drivers this one is thin — every preset
+//! lowers through `scenario::lower_fleet`, runs on the **builtin**
+//! engine, and the machine-readable baseline (`BENCH_traffic.json`,
+//! schema `hyca-traffic-bench-v1`) is a pure function of the master
+//! seed: byte-identical at any `--workers` value (pinned by
+//! `rust/tests/traffic.rs`).
+
+use std::sync::Arc;
+
+use super::{Experiment, RunOpts};
+use crate::fleet::metrics::FleetReport;
+use crate::fleet::{self, FleetConfig};
+use crate::inference::Engine;
+use crate::scenario::{self, Cell, ScenarioSpec};
+use crate::util::table::{f, Table};
+use anyhow::Result;
+
+pub struct TrafficExp;
+
+/// The traffic presets, in presentation order.
+pub const PRESETS: [&str; 3] = ["open_steady", "flash_crowd", "open_diurnal"];
+
+fn traffic_spec(name: &str) -> ScenarioSpec {
+    let spec = scenario::preset(name).expect("traffic preset is registered");
+    assert!(spec.workload.mode.is_open(), "{name} must be open-loop");
+    spec
+}
+
+/// Lower one traffic preset into its runnable [`FleetConfig`] (public
+/// so the integration tests run exactly what the bench reports).
+pub fn traffic_config(name: &str, seed: u64, smoke: bool, threads: usize) -> FleetConfig {
+    let spec = traffic_spec(name);
+    scenario::lower_fleet(&spec, &Cell::base(&spec), smoke, seed, threads)
+}
+
+fn run_presets(opts: &RunOpts, smoke: bool) -> Result<Vec<(String, String, FleetReport)>> {
+    let engine = Arc::new(Engine::builtin());
+    let mut out = Vec::new();
+    for name in PRESETS {
+        let spec = traffic_spec(name);
+        let hash = spec.spec_hash();
+        let cfg = scenario::lower_fleet(&spec, &Cell::base(&spec), smoke, opts.seed, opts.threads);
+        let report = fleet::run(&engine, &cfg)?;
+        out.push((name.to_string(), hash, report));
+    }
+    Ok(out)
+}
+
+fn traffic_table(results: &[(String, String, FleetReport)]) -> Table {
+    let mut t = Table::new(
+        "open-loop traffic — offered vs admitted under admission \
+         control + autoscaling, metrics in simulated cycles \
+         [model: builtin, backend: native]",
+        &[
+            "scenario",
+            "chips",
+            "offered",
+            "admitted",
+            "shed_rate",
+            "goodput_per_Mcycle",
+            "p99_cycles",
+            "slo_attainment",
+            "accuracy",
+            "scale_steps",
+        ],
+    );
+    for (name, _, r) in results {
+        t.push_row(vec![
+            name.clone(),
+            r.chips.to_string(),
+            r.offered.to_string(),
+            r.total_requests.to_string(),
+            f(r.shed_rate(), 4),
+            f(r.goodput_imgs_per_mcycle(), 2),
+            r.p99_cycles().to_string(),
+            match r.slo_attainment {
+                Some(a) => f(a, 4),
+                None => "-".to_string(),
+            },
+            f(r.accuracy, 4),
+            (r.active_chips.len() - 1).to_string(),
+        ]);
+    }
+    t
+}
+
+fn trajectory_table(name: &str, r: &FleetReport) -> Table {
+    let mut t = Table::new(
+        format!("{name} — active-chip trajectory (autoscaler steps in simulated cycles)"),
+        &["cycle", "active_chips"],
+    );
+    for (cycle, n) in &r.active_chips {
+        t.push_row(vec![cycle.to_string(), n.to_string()]);
+    }
+    t
+}
+
+/// One machine-readable row of `BENCH_traffic.json`. The
+/// `active_chips` trajectory is inlined as `[[cycle, n], ...]` so the
+/// autoscaler's whole decision history is part of the byte-compared
+/// baseline.
+fn json_row(name: &str, hash: &str, r: &FleetReport, sep: &str) -> String {
+    let trajectory: Vec<String> = r
+        .active_chips
+        .iter()
+        .map(|(c, n)| format!("[{c}, {n}]"))
+        .collect();
+    format!(
+        "    {{\"scenario\": \"{name}\", \"spec_hash\": \"{hash}\", \
+         \"chips\": {}, \"offered\": {}, \"admitted\": {}, \"shed\": {}, \
+         \"shed_rate\": {:.6}, \"goodput_imgs_per_mcycle\": {:.6}, \
+         \"p50_cycles\": {}, \"p99_cycles\": {}, \
+         \"slo_target_cycles\": {}, \"slo_attainment\": {}, \
+         \"accuracy\": {:.6}, \"active_chips\": [{}]}}{sep}\n",
+        r.chips,
+        r.offered,
+        r.total_requests,
+        r.shed,
+        r.shed_rate(),
+        r.goodput_imgs_per_mcycle(),
+        r.p50_cycles(),
+        r.p99_cycles(),
+        r.slo_target_cycles.map_or("null".to_string(), |c| c.to_string()),
+        r.slo_attainment.map_or("null".to_string(), |a| format!("{a:.6}")),
+        r.accuracy,
+        trajectory.join(", "),
+    )
+}
+
+fn traffic_json(seed: u64, smoke: bool, results: &[(String, String, FleetReport)]) -> String {
+    let mut s = String::new();
+    s.push_str("{\n");
+    s.push_str("  \"schema\": \"hyca-traffic-bench-v1\",\n");
+    s.push_str(&format!("  \"seed\": {seed},\n"));
+    s.push_str(&format!("  \"smoke\": {smoke},\n"));
+    s.push_str("  \"scenarios\": [\n");
+    for (i, (name, hash, r)) in results.iter().enumerate() {
+        let sep = if i + 1 == results.len() { "" } else { "," };
+        s.push_str(&json_row(name, hash, r, sep));
+    }
+    s.push_str("  ]\n}\n");
+    s
+}
+
+/// Full run: report tables + the JSON baseline.
+pub fn run_full(opts: &RunOpts, smoke: bool) -> Result<(Vec<Table>, String)> {
+    let results = run_presets(opts, smoke)?;
+    let json = traffic_json(opts.seed, smoke, &results);
+    let mut tables = vec![traffic_table(&results)];
+    for (name, _, r) in &results {
+        if r.active_chips.len() > 1 {
+            tables.push(trajectory_table(name, r));
+        }
+    }
+    Ok((tables, json))
+}
+
+/// The JSON baseline alone (what `BENCH_traffic.json` holds and the
+/// golden test compares across `--workers` values).
+pub fn bench_json(opts: &RunOpts, smoke: bool) -> Result<String> {
+    let results = run_presets(opts, smoke)?;
+    Ok(traffic_json(opts.seed, smoke, &results))
+}
+
+impl Experiment for TrafficExp {
+    fn id(&self) -> &'static str {
+        "traffic"
+    }
+
+    fn title(&self) -> &'static str {
+        "Traffic: open-loop arrivals — SLO admission control + chip autoscaling"
+    }
+
+    fn run(&self, opts: &RunOpts) -> Result<Vec<Table>> {
+        let (tables, _json) = run_full(opts, opts.fast)?;
+        Ok(tables)
+    }
+}

@@ -20,6 +20,7 @@ pub mod exp_perf;
 pub mod exp_scenario;
 pub mod exp_serve;
 pub mod exp_table1;
+pub mod exp_traffic;
 pub mod report;
 
 use crate::util::table::Table;
@@ -105,6 +106,7 @@ pub fn registry() -> Vec<Box<dyn Experiment>> {
         Box::new(exp_table1::Table1),
         Box::new(exp_serve::ServeExp),
         Box::new(exp_fleet::FleetExp),
+        Box::new(exp_traffic::TrafficExp),
         Box::new(exp_perf::PerfExp),
     ]
 }
@@ -125,7 +127,7 @@ mod tests {
         assert_eq!(ids.len(), set.len());
         for want in [
             "fig2", "fig3", "fig9", "fig10", "fig11", "fig12", "fig13", "fig14", "fig15",
-            "table1", "serve", "fleet", "perf",
+            "table1", "serve", "fleet", "traffic", "perf",
         ] {
             assert!(ids.contains(&want), "missing {want}");
         }

@@ -32,6 +32,35 @@ pub mod stuckat;
 
 use crate::array::Dims;
 
+/// Spatial model of a fault-injection process: where new faults land
+/// on the array. `Random` draws i.i.d. uniform coordinates (the
+/// paper's random distribution model); `Clustered` draws
+/// centre–satellite groups (the paper's clustered model, [`clustered`])
+/// so faults attract each other spatially. Selected per scenario via
+/// the `[faults] spatial = random|clustered` knob.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Spatial {
+    #[default]
+    Random,
+    Clustered,
+}
+
+impl Spatial {
+    /// Stable text id (the `.scn` grammar token).
+    pub fn id(&self) -> &'static str {
+        match self {
+            Spatial::Random => "random",
+            Spatial::Clustered => "clustered",
+        }
+    }
+}
+
+impl std::fmt::Display for Spatial {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.id())
+    }
+}
+
 /// Coordinate of a PE in the 2-D computing array. `row` indexes the
 /// vertical dimension (input-feature rows stream across it), `col` the
 /// horizontal one (weights are forwarded column-to-column, left→right).

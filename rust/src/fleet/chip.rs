@@ -90,13 +90,14 @@ impl ChipSim {
         let timeline = match faults {
             None => FaultTimeline::healthy(geometry),
             Some(plan) => {
-                let arrivals = arrival::sample_arrivals_in_stream(
+                let arrivals = arrival::sample_arrivals_spatial(
                     seed,
                     ARRIVAL_STREAM + chip as u64,
                     spec.dims,
                     plan.mean_interarrival_cycles,
                     plan.horizon_cycles,
                     plan.max_arrivals,
+                    plan.spatial,
                 );
                 let agent = ScanAgentConfig {
                     dims: spec.dims,
@@ -199,6 +200,7 @@ mod tests {
             group_width: 8,
             fpt_capacity: 8,
             max_arrivals: 6,
+            spatial: crate::faults::Spatial::Random,
         };
         let spec = ChipSpec { dims: Dims::new(8, 8), lanes: 2 };
         let build = |chip: usize| {

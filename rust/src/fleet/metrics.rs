@@ -110,6 +110,19 @@ pub struct FleetReport {
     /// [`ChipStat::executor_steals`]); nondeterministic, excluded from
     /// `digest()` and every bench-JSON section.
     pub executor_steals: u64,
+    /// Arrivals offered to the fleet (closed loop: `total_requests`).
+    pub offered: usize,
+    /// Arrivals shed by admission control (closed loop: always 0).
+    pub shed: usize,
+    /// The admission controller's latency target, when one was armed.
+    pub slo_target_cycles: Option<u64>,
+    /// Fraction of *admitted* requests completing within the SLO
+    /// target (`None` without an admission target or with zero
+    /// admitted requests).
+    pub slo_attainment: Option<f64>,
+    /// Active-chip trajectory: `(cycle, active_count)` starting at
+    /// `(0, initial)` with one point per autoscale step.
+    pub active_chips: Vec<(u64, usize)>,
 }
 
 impl FleetReport {
@@ -140,6 +153,22 @@ impl FleetReport {
     /// Total drain episodes across the fleet.
     pub fn drains(&self) -> usize {
         self.per_chip.iter().map(|c| c.drains).sum()
+    }
+
+    /// Fraction of offered arrivals shed by admission control.
+    pub fn shed_rate(&self) -> f64 {
+        if self.offered == 0 {
+            0.0
+        } else {
+            self.shed as f64 / self.offered as f64
+        }
+    }
+
+    /// Goodput: completed (admitted, answered) requests per Mcycle —
+    /// in open-loop overload this diverges from the offered rate by
+    /// exactly the shed traffic.
+    pub fn goodput_imgs_per_mcycle(&self) -> f64 {
+        self.throughput_imgs_per_mcycle
     }
 
     /// Routing quality: total-variation distance between the realized
@@ -194,6 +223,25 @@ impl FleetReport {
         );
         let _ = writeln!(s, "load_imbalance={:.6}", self.load_imbalance());
         let _ = writeln!(s, "accuracy={:.6}", self.accuracy);
+        let _ = writeln!(
+            s,
+            "offered={} shed={} shed_rate={:.6}",
+            self.offered,
+            self.shed,
+            self.shed_rate()
+        );
+        let att = match self.slo_attainment {
+            Some(a) => format!("{a:.6}"),
+            None => "-".to_string(),
+        };
+        let tgt = match self.slo_target_cycles {
+            Some(c) => c.to_string(),
+            None => "-".to_string(),
+        };
+        let _ = writeln!(s, "slo target={tgt} attainment={att}");
+        for (cycle, n) in &self.active_chips {
+            let _ = writeln!(s, "active {cycle} {n}");
+        }
         for c in &self.per_chip {
             let acc = match c.accuracy() {
                 Some(a) => format!("{a:.6}"),
@@ -232,6 +280,8 @@ impl FleetReport {
                 FleetEventKind::ScanDetection(c) => format!("detect({},{})", c.row, c.col),
                 FleetEventKind::Drained => "drained".to_string(),
                 FleetEventKind::Readmitted => "readmitted".to_string(),
+                FleetEventKind::ScaledUp => "scale_up".to_string(),
+                FleetEventKind::ScaledDown => "scale_down".to_string(),
             };
             let _ = writeln!(s, "event {} chip{} {}", e.cycle, e.chip, kind);
         }
@@ -341,6 +391,30 @@ pub fn assemble(
     let executor_steals = per_chip.iter().map(|c| c.executor_steals).sum();
     let n_correct = correct.iter().filter(|&&c| c).count();
     let batches = timeline.jobs.len();
+    // SLO attainment over *admitted* requests, against the admission
+    // controller's target
+    let slo_target_cycles = cfg.admission.as_ref().map(|a| a.target_latency_cycles);
+    let slo_attainment = slo_target_cycles.and_then(|target| {
+        if n == 0 {
+            return None;
+        }
+        let within = timeline
+            .requests
+            .iter()
+            .filter(|r| r.complete_cycle - r.enqueue_cycle <= target)
+            .count();
+        Some(within as f64 / n as f64)
+    });
+    // active-chip trajectory from the autoscale events
+    let mut active_chips = vec![(0u64, timeline.initial_active)];
+    for e in &timeline.events {
+        let n_now = active_chips.last().unwrap().1;
+        match e.kind {
+            FleetEventKind::ScaledUp => active_chips.push((e.cycle, n_now + 1)),
+            FleetEventKind::ScaledDown => active_chips.push((e.cycle, n_now - 1)),
+            _ => {}
+        }
+    }
     FleetReport {
         chips: n_chips,
         policy: cfg.policy,
@@ -359,6 +433,11 @@ pub fn assemble(
         correct,
         accuracy: n_correct as f64 / n.max(1) as f64,
         executor_steals,
+        offered: timeline.offered,
+        shed: timeline.shed_cycles.len(),
+        slo_target_cycles,
+        slo_attainment,
+        active_chips,
     }
 }
 
@@ -390,6 +469,9 @@ mod tests {
             windows: 6,
             faults: None,
             lifecycle: LifecyclePolicy::NEVER,
+            open_loop: None,
+            admission: None,
+            autoscale: None,
         }
     }
 
@@ -515,7 +597,45 @@ mod tests {
     }
 
     #[test]
-    fn executor_steals_are_consistent_and_never_reach_the_digest() {
+    fn closed_loop_reports_neutral_traffic_fields() {
+        let engine = Arc::new(crate::inference::Engine::builtin());
+        let report = run(&engine, &cfg(2, RoutingPolicy::RoundRobin)).unwrap();
+        assert_eq!(report.offered, report.total_requests);
+        assert_eq!(report.shed, 0);
+        assert_eq!(report.shed_rate(), 0.0);
+        assert_eq!(report.slo_target_cycles, None);
+        assert_eq!(report.slo_attainment, None);
+        // no autoscaler: the trajectory is a single point at full size
+        assert_eq!(report.active_chips, vec![(0, 2)]);
+        assert!(report.digest().contains("offered=24 shed=0"));
+    }
+
+    #[test]
+    fn open_loop_traffic_fields_reach_the_report_and_digest() {
+        use crate::fleet::{AdmissionConfig, OpenLoopConfig};
+        use crate::serve::loadgen::RateCurve;
+        let engine = Arc::new(crate::inference::Engine::builtin());
+        let mut c = cfg(2, RoutingPolicy::JoinShortestQueue);
+        c.total_requests = 512;
+        c.queue_cap = 512;
+        c.open_loop = Some(OpenLoopConfig {
+            curve: RateCurve::Constant { per_kcycle: 5.0 },
+            horizon_cycles: 100_000,
+            max_arrivals: 512,
+        });
+        c.admission = Some(AdmissionConfig { target_latency_cycles: 40_000 });
+        let report = run(&engine, &c).unwrap();
+        assert_eq!(report.offered, report.total_requests + report.shed);
+        assert!(report.shed > 0, "overload must shed");
+        assert!(report.shed_rate() > 0.0 && report.shed_rate() < 1.0);
+        assert_eq!(report.slo_target_cycles, Some(40_000));
+        let att = report.slo_attainment.unwrap();
+        assert!((0.0..=1.0).contains(&att));
+        assert_eq!(report.accuracy, 1.0, "admitted traffic keeps the accuracy contract");
+        let digest = report.digest();
+        assert!(digest.contains("slo target=40000"));
+        assert!(digest.contains("shed_rate=0."));
+    }
         let engine = Arc::new(crate::inference::Engine::builtin());
         let report = run(&engine, &cfg(3, RoutingPolicy::RoundRobin)).unwrap();
         let per_chip: u64 = report.per_chip.iter().map(|c| c.executor_steals).sum();

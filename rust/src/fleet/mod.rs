@@ -34,6 +34,22 @@
 //! The same cycle-time determinism contract carries over: every metric
 //! in `BENCH_fleet.json` is a pure function of the master seed,
 //! byte-identical at any `--workers` value.
+//!
+//! **Open-loop traffic** (DESIGN.md §9, `repro traffic`): instead of a
+//! closed client population, an [`OpenLoopConfig`] drives arrivals from
+//! a rate curve in cycle time ([`crate::serve::loadgen::open_arrivals`])
+//! — the offered load no longer adapts to service capacity, so the
+//! fleet can be *overloaded*. Two controllers respond:
+//!
+//! * **admission** ([`AdmissionConfig`]): each arrival is admitted only
+//!   if some routable chip's conservative queueing-delay bound fits the
+//!   SLO target; otherwise it is *shed* (counted, never enqueued), so
+//!   admitted requests keep their latency and accuracy contract;
+//! * **autoscaling** ([`AutoscaleConfig`]): a periodic evaluation tick
+//!   compares per-active-chip backlog against up/down thresholds and
+//!   activates or deactivates chips inside `[min_chips, max_chips]`,
+//!   dwell-gated against flapping; a deactivated chip re-shards its
+//!   queue through the router exactly like a drained chip.
 
 pub mod chip;
 pub mod lifecycle;
@@ -49,12 +65,56 @@ use anyhow::Result;
 use crate::faults::Coord;
 use crate::inference::Engine;
 use crate::serve::executor::{self, ExecMode};
+use crate::serve::loadgen::{self, RateCurve};
 use crate::serve::scan_agent::EventKind;
 use crate::serve::{BatchJob, FaultPlan, RequestRecord};
 
 pub use chip::{chip_seed, ChipSim, ChipSpec};
 pub use lifecycle::{LifecyclePolicy, NEVER_DRAIN};
 pub use router::{Router, RoutingPolicy};
+
+/// Open-loop arrival plan: a rate curve drives arrivals in cycle time
+/// (non-homogeneous Poisson, thinning-sampled) instead of the closed
+/// client population. `cfg.clients`/`think_cycles` are ignored when
+/// this is set.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct OpenLoopConfig {
+    /// Offered-rate curve (requests per kilocycle over cycle time).
+    pub curve: RateCurve,
+    /// Arrivals stop at this cycle.
+    pub horizon_cycles: u64,
+    /// Hard cap on the arrival stream (the spec's request budget).
+    pub max_arrivals: usize,
+}
+
+/// SLO-aware admission control: an arrival is shed unless some
+/// routable chip's predicted queueing delay fits the target.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct AdmissionConfig {
+    /// End-to-end latency the controller protects, in cycles.
+    pub target_latency_cycles: u64,
+}
+
+/// Queue-pressure chip autoscaling with hysteresis: grow when the
+/// per-active-chip pressure exceeds `up_pending_per_chip`, shrink
+/// below `down_pending_per_chip`, never faster than one step per
+/// `dwell_cycles`. Pressure = queued requests **plus arrivals shed
+/// since the last tick** — under admission control the queues are
+/// capped at the shed boundary, so demand the fleet turned away is the
+/// only visible part of a real overload.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct AutoscaleConfig {
+    pub min_chips: usize,
+    pub max_chips: usize,
+    /// Scale up when pressure per active chip exceeds this.
+    pub up_pending_per_chip: usize,
+    /// Scale down when they fall below this (must be `< up`).
+    pub down_pending_per_chip: usize,
+    /// Minimum cycles between consecutive scaling steps (flap guard).
+    pub dwell_cycles: u64,
+    /// Evaluation-tick period in cycles.
+    pub eval_period_cycles: u64,
+}
 
 /// Configuration of one fleet run. As with `serve`, every metric is a
 /// pure function of everything here except `executor_threads`.
@@ -90,6 +150,13 @@ pub struct FleetConfig {
     /// the lifecycle; [`LifecyclePolicy::single`] is the legacy
     /// shared-threshold rule).
     pub lifecycle: LifecyclePolicy,
+    /// Rate-driven open-loop arrivals (`None` = closed loop).
+    pub open_loop: Option<OpenLoopConfig>,
+    /// SLO admission control; only consulted in open-loop mode (the
+    /// closed loop never sheds — every budgeted request must complete).
+    pub admission: Option<AdmissionConfig>,
+    /// Queue-pressure chip autoscaling (`None` = all chips active).
+    pub autoscale: Option<AutoscaleConfig>,
 }
 
 impl FleetConfig {
@@ -114,6 +181,9 @@ impl FleetConfig {
             windows: cfg.windows,
             faults: cfg.faults,
             lifecycle: LifecyclePolicy::NEVER,
+            open_loop: None,
+            admission: None,
+            autoscale: None,
         }
     }
 }
@@ -133,6 +203,10 @@ pub enum FleetEventKind {
     ScanDetection(Coord),
     Drained,
     Readmitted,
+    /// The autoscaler activated this chip.
+    ScaledUp,
+    /// The autoscaler deactivated this chip (queue re-sharded away).
+    ScaledDown,
 }
 
 impl FleetEventKind {
@@ -142,6 +216,8 @@ impl FleetEventKind {
             FleetEventKind::ScanDetection(c) => (1, c.col, c.row),
             FleetEventKind::Drained => (2, 0, 0),
             FleetEventKind::Readmitted => (3, 0, 0),
+            FleetEventKind::ScaledUp => (4, 0, 0),
+            FleetEventKind::ScaledDown => (5, 0, 0),
         }
     }
 }
@@ -169,6 +245,12 @@ pub struct FleetTimeline {
     pub max_pending: usize,
     /// Final per-chip state (lifecycle + fault history, for metrics).
     pub chip_state: Vec<ChipSim>,
+    /// Arrivals offered to the fleet (closed loop: `requests.len()`).
+    pub offered: usize,
+    /// Cycle of every shed arrival (open loop with admission only).
+    pub shed_cycles: Vec<u64>,
+    /// Chips active at cycle 0 (autoscale: `min_chips`; else all).
+    pub initial_active: usize,
 }
 
 // Event kinds; the (cycle, kind, key) triple is the deterministic
@@ -179,24 +261,41 @@ const EV_LANE_FREE: u8 = 1;
 const EV_BATCH_DEADLINE: u8 = 2;
 const EV_CHIP_DRAIN: u8 = 3;
 const EV_CHIP_READMIT: u8 = 4;
+const EV_SCALE_TICK: u8 = 5;
 
 fn lane_key(chip: usize, lane: usize) -> u64 {
     ((chip as u64) << 32) | lane as u64
 }
 
-/// The chips the router may target at `t`: the healthy set when any
-/// chip is healthy, the whole fleet otherwise (degraded continuity).
-/// The set only changes at lifecycle boundaries, so callers compute it
-/// once per event and route any number of requests against it.
-fn admissible(chips: &[ChipSim], t: u64) -> Vec<usize> {
-    let healthy: Vec<usize> = (0..chips.len())
-        .filter(|&k| chips[k].healthy_at(t))
+/// The chips the router may target at `t`: the active-and-healthy set
+/// when nonempty, then the active set, then the whole fleet (degraded
+/// continuity — with no autoscaler every chip is active, so this is
+/// exactly the old healthy-else-all rule). The set only changes at
+/// lifecycle/scaling boundaries, so callers compute it once per event
+/// and route any number of requests against it.
+fn admissible(chips: &[ChipSim], active: &[bool], t: u64) -> Vec<usize> {
+    let up: Vec<usize> = (0..chips.len())
+        .filter(|&k| active[k] && chips[k].healthy_at(t))
         .collect();
-    if healthy.is_empty() {
+    if !up.is_empty() {
+        return up;
+    }
+    let act: Vec<usize> = (0..chips.len()).filter(|&k| active[k]).collect();
+    if act.is_empty() {
         (0..chips.len()).collect()
     } else {
-        healthy
+        act
     }
+}
+
+/// Conservative queueing-delay bound for one more request on `chip`:
+/// it may sit out a full batcher deadline, then every batch ahead of
+/// it — plus its own — at the full-batch service time. Deliberately
+/// pessimistic (ignores idle lanes), so admitted traffic holds its SLO
+/// with slack at the cost of a slightly earlier shed onset.
+fn predicted_wait(chip: &ChipSim, max_batch: usize, max_wait_cycles: u64) -> u64 {
+    let batches_ahead = chip.depth().div_ceil(max_batch) as u64;
+    max_wait_cycles + (batches_ahead + 1) * chip.cost.batch_cycles(max_batch)
 }
 
 /// Route one request among `candidates` at `t`; increments the
@@ -207,24 +306,25 @@ fn route(router: &mut Router, chips: &mut [ChipSim], candidates: &[usize], t: u6
     target
 }
 
-/// Re-shard the pending queue of every currently-drained chip through
-/// the router (called on drain starts and on re-admissions, when the
-/// healthy set changes). Re-pushed requests keep their identity and
-/// original enqueue cycle in the records; their batcher deadline
-/// restarts at `t`.
+/// Re-shard the pending queue of every chip that is currently drained
+/// or deactivated through the router (called on drain starts,
+/// re-admissions and scale-downs, when the routable set changes).
+/// Re-pushed requests keep their identity and original enqueue cycle
+/// in the records; their batcher deadline restarts at `t`.
 fn reshard(
     router: &mut Router,
     chips: &mut [ChipSim],
+    active: &[bool],
     heap: &mut BinaryHeap<Reverse<(u64, u8, u64)>>,
     t: u64,
     max_wait_cycles: u64,
 ) {
-    if !chips.iter().any(|c| c.healthy_at(t)) {
+    if !(0..chips.len()).any(|k| active[k] && chips[k].healthy_at(t)) {
         return; // nowhere better to go — degraded continuity serves in place
     }
-    let candidates = admissible(chips, t);
+    let candidates = admissible(chips, active, t);
     for k in 0..chips.len() {
-        if chips[k].healthy_at(t) || chips[k].batcher.is_empty() {
+        if (active[k] && chips[k].healthy_at(t)) || chips[k].batcher.is_empty() {
             continue;
         }
         let moved = chips[k].batcher.drain_all();
@@ -246,10 +346,12 @@ fn reshard(
 pub fn simulate_fleet(engine: &Engine, cfg: &FleetConfig) -> FleetTimeline {
     assert!(!cfg.chips.is_empty(), "need at least one chip");
     assert!(cfg.total_requests >= 1, "need at least one request");
-    assert!(
-        cfg.queue_cap >= cfg.clients,
-        "closed-loop pending set (≤ clients) must fit the fleet queue bound"
-    );
+    if cfg.open_loop.is_none() {
+        assert!(
+            cfg.queue_cap >= cfg.clients,
+            "closed-loop pending set (≤ clients) must fit the fleet queue bound"
+        );
+    }
     let mut geometry = engine.geometry();
     geometry.batch = cfg.max_batch;
     let mut chips: Vec<ChipSim> = cfg
@@ -280,10 +382,48 @@ pub fn simulate_fleet(engine: &Engine, cfg: &FleetConfig) -> FleetTimeline {
     );
     let mut router = Router::new(cfg.policy);
     let mut heap: BinaryHeap<Reverse<(u64, u8, u64)>> = BinaryHeap::new();
-    for c in 0..cfg.clients {
-        let at = gen.think(c);
-        heap.push(Reverse((at, EV_CLIENT_READY, c as u64)));
+    // Open mode precomputes the whole arrival stream (a pure function
+    // of the master seed, independent of service state) and keys each
+    // EV_CLIENT_READY by arrival index; the closed loop keys by client.
+    let open_arrivals: Vec<loadgen::OpenArrival> = match &cfg.open_loop {
+        Some(o) => loadgen::open_arrivals(
+            cfg.seed,
+            loadgen::OPEN_ARRIVAL_STREAM,
+            &o.curve,
+            o.horizon_cycles,
+            engine.eval.images.len(),
+            o.max_arrivals,
+        ),
+        None => Vec::new(),
+    };
+    if cfg.open_loop.is_some() {
+        for (i, a) in open_arrivals.iter().enumerate() {
+            heap.push(Reverse((a.cycle, EV_CLIENT_READY, i as u64)));
+        }
+    } else {
+        for c in 0..cfg.clients {
+            let at = gen.think(c);
+            heap.push(Reverse((at, EV_CLIENT_READY, c as u64)));
+        }
     }
+    // Autoscale overlay: which chips the router may currently target.
+    // Without an autoscaler every chip is active and every path below
+    // reduces to the pre-autoscale behaviour (degeneracy contract).
+    let initial_active = match &cfg.autoscale {
+        Some(a) => a.min_chips.clamp(1, chips.len()),
+        None => chips.len(),
+    };
+    let mut active: Vec<bool> = (0..chips.len()).map(|k| k < initial_active).collect();
+    let mut last_scale: u64 = 0;
+    let mut scale_events: Vec<FleetEvent> = Vec::new();
+    if let Some(a) = &cfg.autoscale {
+        assert!(a.eval_period_cycles >= 1, "autoscale tick needs a period");
+        heap.push(Reverse((a.eval_period_cycles, EV_SCALE_TICK, 0)));
+    }
+    let mut offered = 0usize;
+    let mut shed_cycles: Vec<u64> = Vec::new();
+    // sheds already counted by a past scale tick (the tick-window marker)
+    let mut shed_seen_by_tick = 0usize;
     // lifecycle wake-ups: re-shard at drain starts, dispatch+re-shard
     // at re-admissions
     for (k, chip) in chips.iter().enumerate() {
@@ -302,6 +442,48 @@ pub fn simulate_fleet(engine: &Engine, cfg: &FleetConfig) -> FleetTimeline {
 
     while let Some(Reverse((t, kind, key))) = heap.pop() {
         match kind {
+            EV_CLIENT_READY if cfg.open_loop.is_some() => {
+                // one open arrival (key = arrival index): admit or shed
+                let arrival = open_arrivals[key as usize];
+                offered += 1;
+                let candidates = admissible(&chips, &active, t);
+                let shed = cfg.admission.as_ref().is_some_and(|adm| {
+                    let best = candidates
+                        .iter()
+                        .map(|&k| predicted_wait(&chips[k], cfg.max_batch, cfg.max_wait_cycles))
+                        .min()
+                        .expect("candidate set is never empty");
+                    best > adm.target_latency_cycles
+                });
+                if shed {
+                    shed_cycles.push(t);
+                } else {
+                    let id = requests.len();
+                    requests.push(RequestRecord {
+                        id,
+                        client: 0, // open arrivals have no client identity
+                        image_idx: arrival.image_idx,
+                        enqueue_cycle: t,
+                        start_cycle: 0,
+                        complete_cycle: 0,
+                        batch_id: 0,
+                        slot: 0,
+                    });
+                    let target = route(&mut router, &mut chips, &candidates, t);
+                    chips[target].batcher.push(t, id);
+                    pending_total += 1;
+                    max_pending = max_pending.max(pending_total);
+                    assert!(
+                        pending_total <= cfg.queue_cap,
+                        "fleet-wide pending set overflowed its bound"
+                    );
+                    heap.push(Reverse((
+                        t + cfg.max_wait_cycles,
+                        EV_BATCH_DEADLINE,
+                        id as u64,
+                    )));
+                }
+            }
             EV_CLIENT_READY => {
                 let client = key as usize;
                 if let Some(image_idx) = gen.next_image(client) {
@@ -316,7 +498,7 @@ pub fn simulate_fleet(engine: &Engine, cfg: &FleetConfig) -> FleetTimeline {
                         batch_id: 0,
                         slot: 0,
                     });
-                    let candidates = admissible(&chips, t);
+                    let candidates = admissible(&chips, &active, t);
                     let target = route(&mut router, &mut chips, &candidates, t);
                     chips[target].batcher.push(t, id);
                     pending_total += 1;
@@ -337,15 +519,80 @@ pub fn simulate_fleet(engine: &Engine, cfg: &FleetConfig) -> FleetTimeline {
                 chips[chip].complete_lane(lane);
             }
             EV_CHIP_DRAIN | EV_CHIP_READMIT => {
-                reshard(&mut router, &mut chips, &mut heap, t, cfg.max_wait_cycles);
+                reshard(&mut router, &mut chips, &active, &mut heap, t, cfg.max_wait_cycles);
+            }
+            EV_SCALE_TICK => {
+                let a = cfg.autoscale.as_ref().expect("tick only armed with a policy");
+                let n_active = active.iter().filter(|&&b| b).count();
+                let outstanding: usize = chips.iter().map(|c| c.depth()).sum();
+                // Queued depth alone is blind under admission control:
+                // the controller caps every queue just below the shed
+                // boundary, so a saturated fleet can look calm. Arrivals
+                // shed since the last tick are demand the queues could
+                // not hold — they count as pressure too.
+                let recent_shed = shed_cycles.len() - shed_seen_by_tick;
+                shed_seen_by_tick = shed_cycles.len();
+                let per = (outstanding + recent_shed) / n_active.max(1);
+                if t.saturating_sub(last_scale) >= a.dwell_cycles {
+                    if per > a.up_pending_per_chip && n_active < a.max_chips.min(chips.len()) {
+                        // activate the lowest-index spare chip
+                        if let Some(k) = (0..chips.len()).find(|&k| !active[k]) {
+                            active[k] = true;
+                            last_scale = t;
+                            scale_events.push(FleetEvent {
+                                cycle: t,
+                                chip: k,
+                                kind: FleetEventKind::ScaledUp,
+                            });
+                        }
+                    } else if per < a.down_pending_per_chip && n_active > a.min_chips.max(1) {
+                        // deactivate the highest-index active chip —
+                        // but only if the remaining active set can
+                        // absorb its queue right now
+                        if let Some(k) = (0..chips.len()).rev().find(|&k| active[k]) {
+                            let rest_serves = (0..chips.len())
+                                .any(|j| j != k && active[j] && chips[j].healthy_at(t));
+                            if rest_serves {
+                                active[k] = false;
+                                last_scale = t;
+                                scale_events.push(FleetEvent {
+                                    cycle: t,
+                                    chip: k,
+                                    kind: FleetEventKind::ScaledDown,
+                                });
+                                reshard(
+                                    &mut router,
+                                    &mut chips,
+                                    &active,
+                                    &mut heap,
+                                    t,
+                                    cfg.max_wait_cycles,
+                                );
+                            }
+                        }
+                    }
+                }
+                // keep ticking while traffic can still arrive or drain
+                let more_arrivals = if cfg.open_loop.is_some() {
+                    offered < open_arrivals.len()
+                } else {
+                    requests.len() < cfg.total_requests
+                };
+                if more_arrivals || outstanding > 0 {
+                    heap.push(Reverse((t + a.eval_period_cycles, EV_SCALE_TICK, 0)));
+                }
             }
             _ => {} // deadline: dispatch attempt below
         }
         // dispatch whatever is releasable at `t` on every admitted chip
-        // (all chips, when none is healthy — degraded continuity)
-        let any_healthy = chips.iter().any(|c| c.healthy_at(t));
+        // (mirrors `admissible`: active-and-healthy chips, else active,
+        // else everyone — degraded continuity)
+        let any_up = (0..chips.len()).any(|k| active[k] && chips[k].healthy_at(t));
         for k in 0..chips.len() {
-            if any_healthy && !chips[k].healthy_at(t) {
+            if any_up && !(active[k] && chips[k].healthy_at(t)) {
+                continue;
+            }
+            if !any_up && !active[k] {
                 continue;
             }
             while !chips[k].free_lanes.is_empty() {
@@ -373,8 +620,12 @@ pub fn simulate_fleet(engine: &Engine, cfg: &FleetConfig) -> FleetTimeline {
                         image_idxs.push(r.image_idx);
                         r.client
                     };
-                    let think = gen.think(client);
-                    heap.push(Reverse((end + think, EV_CLIENT_READY, client as u64)));
+                    // only the closed loop re-arms a client; open-loop
+                    // arrivals were all scheduled up front
+                    if cfg.open_loop.is_none() {
+                        let think = gen.think(client);
+                        heap.push(Reverse((end + think, EV_CLIENT_READY, client as u64)));
+                    }
                 }
                 pending_total -= b;
                 chips[k].occupy_lane(lane, b);
@@ -394,11 +645,23 @@ pub fn simulate_fleet(engine: &Engine, cfg: &FleetConfig) -> FleetTimeline {
         }
     }
 
-    assert_eq!(
-        requests.len(),
-        cfg.total_requests,
-        "closed loop must issue every budgeted request"
-    );
+    if cfg.open_loop.is_some() {
+        assert_eq!(
+            requests.len() + shed_cycles.len(),
+            offered,
+            "every offered arrival is either admitted or shed"
+        );
+        assert!(
+            requests.len() <= cfg.total_requests,
+            "open loop must respect the request budget"
+        );
+    } else {
+        assert_eq!(
+            requests.len(),
+            cfg.total_requests,
+            "closed loop must issue every budgeted request"
+        );
+    }
     assert!(
         requests.iter().all(|r| r.complete_cycle > r.enqueue_cycle),
         "fleet stalled: requests left unserved (every chip drained with \
@@ -431,8 +694,10 @@ pub fn simulate_fleet(engine: &Engine, cfg: &FleetConfig) -> FleetTimeline {
             }
         }
     }
+    events.extend(scale_events);
     events.sort_by_key(|e| (e.cycle, e.chip, e.kind.sort_key()));
     let unrepaired = chips.iter().map(|c| c.faults.unrepaired).sum();
+    let offered = if cfg.open_loop.is_some() { offered } else { requests.len() };
 
     FleetTimeline {
         jobs,
@@ -442,6 +707,9 @@ pub fn simulate_fleet(engine: &Engine, cfg: &FleetConfig) -> FleetTimeline {
         unrepaired,
         max_pending,
         chip_state: chips,
+        offered,
+        shed_cycles,
+        initial_active,
     }
 }
 
@@ -521,6 +789,9 @@ mod tests {
             windows: 4,
             faults: None,
             lifecycle: LifecyclePolicy::NEVER,
+            open_loop: None,
+            admission: None,
+            autoscale: None,
         }
     }
 
@@ -559,6 +830,7 @@ mod tests {
             group_width: 8,
             fpt_capacity: 8,
             max_arrivals: 6,
+            spatial: crate::faults::Spatial::Random,
         });
         let serve_t = simulate_timeline(&engine, &scfg);
         let fleet_t = simulate_fleet(&engine, &FleetConfig::degenerate(&scfg));
@@ -702,6 +974,7 @@ mod tests {
             group_width: 8,
             fpt_capacity: 8,
             max_arrivals: 6,
+            spatial: crate::faults::Spatial::Random,
         });
         cfg.lifecycle = LifecyclePolicy::single(1);
         let t = simulate_fleet(&engine, &cfg);
@@ -724,5 +997,193 @@ mod tests {
             t.events.iter().any(|e| e.kind == FleetEventKind::Drained),
             "expected at least one drain episode"
         );
+    }
+
+    /// An open-loop variant of `fleet_cfg`: the queue bound and budget
+    /// cover the whole arrival stream.
+    fn open_cfg(n_chips: usize, policy: RoutingPolicy, curve: RateCurve) -> FleetConfig {
+        let mut cfg = fleet_cfg(n_chips, policy);
+        cfg.total_requests = 512;
+        cfg.queue_cap = 512;
+        cfg.open_loop = Some(OpenLoopConfig {
+            curve,
+            horizon_cycles: 100_000,
+            max_arrivals: 512,
+        });
+        cfg
+    }
+
+    #[test]
+    fn open_loop_replays_the_arrival_stream_without_admission() {
+        let engine = Engine::builtin();
+        let cfg = open_cfg(
+            2,
+            RoutingPolicy::RoundRobin,
+            RateCurve::Constant { per_kcycle: 0.3 },
+        );
+        let t = simulate_fleet(&engine, &cfg);
+        // without admission nothing is shed: admitted == offered, and
+        // the request stream is exactly the loadgen arrival stream
+        assert!(t.shed_cycles.is_empty());
+        assert_eq!(t.offered, t.requests.len());
+        let arrivals = crate::serve::loadgen::open_arrivals(
+            cfg.seed,
+            crate::serve::loadgen::OPEN_ARRIVAL_STREAM,
+            &cfg.open_loop.unwrap().curve,
+            100_000,
+            engine.eval.images.len(),
+            512,
+        );
+        assert_eq!(t.offered, arrivals.len());
+        assert!(arrivals.len() > 10, "rate 0.3/kcycle over 100k cycles");
+        for (r, a) in t.requests.iter().zip(&arrivals) {
+            assert_eq!(r.enqueue_cycle, a.cycle);
+            assert_eq!(r.image_idx, a.image_idx);
+            assert_eq!(r.client, 0, "open arrivals carry no client identity");
+        }
+        // all chips are active without an autoscaler
+        assert_eq!(t.initial_active, 2);
+        // and the timeline is deterministic
+        let again = simulate_fleet(&engine, &cfg);
+        assert_eq!(t.requests, again.requests);
+        assert_eq!(t.total_cycles, again.total_cycles);
+    }
+
+    #[test]
+    fn admission_sheds_under_overload_and_admitted_requests_hold_the_bound() {
+        let engine = Engine::builtin();
+        // ≈5 req/kcycle offered vs ≈1.4/kcycle of 2-chip capacity:
+        // queues would grow without bound, so the controller must shed
+        let mut cfg = open_cfg(
+            2,
+            RoutingPolicy::JoinShortestQueue,
+            RateCurve::Constant { per_kcycle: 5.0 },
+        );
+        let target = 40_000;
+        cfg.admission = Some(AdmissionConfig { target_latency_cycles: target });
+        let t = simulate_fleet(&engine, &cfg);
+        assert!(!t.shed_cycles.is_empty(), "overload must shed");
+        assert!(!t.requests.is_empty(), "shedding must not starve admission");
+        assert_eq!(t.offered, t.requests.len() + t.shed_cycles.len());
+        assert!(t.shed_cycles.windows(2).all(|w| w[0] <= w[1]), "shed log is chronological");
+        // JSQ routes each admitted request to the chip the admission
+        // bound was computed from, so the conservative bound (plus one
+        // service round of slack for lane occupancy) holds for every
+        // admitted request
+        let service = crate::serve::CostModel::of(
+            &engine.params,
+            crate::array::Dims::new(8, 8),
+        )
+        .batch_cycles(cfg.max_batch);
+        for r in &t.requests {
+            assert!(
+                r.complete_cycle - r.enqueue_cycle <= target + 2 * service,
+                "request {} latency {} broke the admission bound",
+                r.id,
+                r.complete_cycle - r.enqueue_cycle
+            );
+        }
+    }
+
+    #[test]
+    fn closed_loop_ignores_admission_and_never_sheds() {
+        let engine = Engine::builtin();
+        let mut cfg = fleet_cfg(2, RoutingPolicy::RoundRobin);
+        cfg.admission = Some(AdmissionConfig { target_latency_cycles: 1 });
+        let t = simulate_fleet(&engine, &cfg);
+        assert_eq!(t.requests.len(), cfg.total_requests);
+        assert!(t.shed_cycles.is_empty());
+        assert_eq!(t.offered, cfg.total_requests);
+    }
+
+    #[test]
+    fn autoscaler_stays_in_bounds_and_respects_the_dwell() {
+        let engine = Engine::builtin();
+        // the spike offers 15 req/kcycle — an order of magnitude past
+        // what two 2-lane chips serve — so shed pressure at the scale
+        // ticks is far above the up-threshold; the post-spike base rate
+        // keeps arrivals (and therefore ticks) flowing long enough for
+        // the dwell to expire and the scale-down to land
+        let mut cfg = open_cfg(
+            4,
+            RoutingPolicy::JoinShortestQueue,
+            RateCurve::FlashCrowd {
+                base_per_kcycle: 0.5,
+                peak_mult: 30.0,
+                start_cycle: 20_000,
+                len_cycles: 12_000,
+            },
+        );
+        cfg.open_loop.as_mut().unwrap().horizon_cycles = 150_000;
+        cfg.admission = Some(AdmissionConfig { target_latency_cycles: 40_000 });
+        let auto = AutoscaleConfig {
+            min_chips: 2,
+            max_chips: 4,
+            up_pending_per_chip: 8,
+            down_pending_per_chip: 2,
+            dwell_cycles: 15_000,
+            eval_period_cycles: 3_000,
+        };
+        cfg.autoscale = Some(auto);
+        let t = simulate_fleet(&engine, &cfg);
+        assert_eq!(t.initial_active, 2, "starts at min_chips");
+        let scales: Vec<&FleetEvent> = t
+            .events
+            .iter()
+            .filter(|e| {
+                matches!(e.kind, FleetEventKind::ScaledUp | FleetEventKind::ScaledDown)
+            })
+            .collect();
+        assert!(
+            scales.iter().any(|e| e.kind == FleetEventKind::ScaledUp),
+            "the flash spike must trigger a scale-up"
+        );
+        assert!(
+            scales.iter().any(|e| e.kind == FleetEventKind::ScaledDown),
+            "the post-spike lull must trigger a scale-down"
+        );
+        // dwell: consecutive scaling steps are at least dwell apart
+        for w in scales.windows(2) {
+            assert!(
+                w[1].cycle - w[0].cycle >= auto.dwell_cycles,
+                "flap: scales at {} and {}",
+                w[0].cycle,
+                w[1].cycle
+            );
+        }
+        // the active-chip count never leaves [min, max]
+        let mut n = t.initial_active;
+        for e in &scales {
+            match e.kind {
+                FleetEventKind::ScaledUp => n += 1,
+                FleetEventKind::ScaledDown => n -= 1,
+                _ => unreachable!(),
+            }
+            assert!((auto.min_chips..=auto.max_chips).contains(&n));
+        }
+        // no dispatch ever lands on an inactive chip: replay activity
+        let mut active = vec![false; 4];
+        for (k, a) in active.iter_mut().enumerate() {
+            *a = k < t.initial_active;
+        }
+        let mut si = 0;
+        let mut jobs: Vec<&FleetBatchJob> = t.jobs.iter().collect();
+        jobs.sort_by_key(|j| j.job.start_cycle);
+        for j in jobs {
+            while si < scales.len() && scales[si].cycle < j.job.start_cycle {
+                active[scales[si].chip] = scales[si].kind == FleetEventKind::ScaledUp;
+                si += 1;
+            }
+            // a dispatch sharing the exact cycle of this chip's scale
+            // event may legitimately fall on either side of the tick
+            let boundary = scales
+                .iter()
+                .any(|e| e.cycle == j.job.start_cycle && e.chip == j.chip);
+            assert!(
+                active[j.chip] || boundary,
+                "chip {} dispatched at {} while deactivated",
+                j.chip, j.job.start_cycle
+            );
+        }
     }
 }

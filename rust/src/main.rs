@@ -13,6 +13,10 @@
 //!                                #   name (`repro scenario list` enumerates),
 //!                                #   a .scn file path, or `all` presets;
 //!                                #   writes BENCH_scenario_<name>.json
+//! repro traffic [flags]          # open-loop traffic presets: admission
+//!                                #   control + autoscaling under rate-driven
+//!                                #   arrivals; writes BENCH_traffic.json
+//!                                #   (run from repo root)
 //! repro perf [flags]             # wall-clock executor grid (shared queue vs
 //!                                #   work stealing, threads × chips);
 //!                                #   writes BENCH_perf.json (run from repo
@@ -137,6 +141,30 @@ fn cmd_fleet(rest: &[String]) -> Result<()> {
             t0.elapsed().as_secs_f64()
         );
     }
+    Ok(())
+}
+
+fn cmd_traffic(rest: &[String]) -> Result<()> {
+    let args = Args::parse(rest, &serve_flag_specs())?;
+    let mut opts = opts_from(&args)?;
+    opts.threads = args.get_parse("workers", opts.threads)?;
+    let smoke = args.has("smoke") || opts.fast;
+    eprintln!(
+        "[repro] traffic — open-loop presets {} (seed={:#x}, executor workers={})",
+        if smoke { "smoke" } else { "full" },
+        opts.seed,
+        opts.threads
+    );
+    let t0 = std::time::Instant::now();
+    let (tables, json) = coordinator::exp_traffic::run_full(&opts, smoke)?;
+    report::emit(&opts.out_dir, "traffic", &tables)?;
+    // Like the other bench baselines, the file lands in the current
+    // directory — run from the repo root.
+    std::fs::write("BENCH_traffic.json", &json).context("writing BENCH_traffic.json")?;
+    eprintln!(
+        "[repro] traffic done in {:.1}s — baseline written to BENCH_traffic.json",
+        t0.elapsed().as_secs_f64()
+    );
     Ok(())
 }
 
@@ -330,7 +358,7 @@ fn main() -> Result<()> {
                  grid for CI\n  --chips <value>    fleet only: restrict \
                  the grid to one cluster size\n",
                 usage(
-                    "repro <list|exp|all|serve|fleet|scenario|perf|info>",
+                    "repro <list|exp|all|serve|fleet|scenario|traffic|perf|info>",
                     "HyCA reproduction CLI",
                     &flag_specs()
                 )
@@ -345,6 +373,7 @@ fn main() -> Result<()> {
         "serve" => cmd_serve(rest)?,
         "fleet" => cmd_fleet(rest)?,
         "scenario" => cmd_scenario(rest)?,
+        "traffic" => cmd_traffic(rest)?,
         "perf" => cmd_perf(rest)?,
         "exp" => {
             let args = Args::parse(rest, &flag_specs())?;

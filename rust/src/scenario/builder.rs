@@ -15,12 +15,14 @@
 //! ```
 
 use crate::array::Dims;
+use crate::faults::Spatial;
 use crate::fleet::lifecycle::LifecyclePolicy;
 use crate::fleet::RoutingPolicy;
+use crate::serve::loadgen::RateCurve;
 
 use super::{
-    ChipDef, ClientLoad, Driver, FaultEnv, Knob, Redundancy, RequestBudget, ScenarioError,
-    ScenarioSpec, SweepAxis, Workload,
+    AutoscalePolicy, ChipDef, ClientLoad, Driver, FaultEnv, Knob, Redundancy, RequestBudget,
+    ScenarioError, ScenarioSpec, SloPolicy, SweepAxis, TrafficMode, Workload,
 };
 
 /// Builder over [`ScenarioSpec`] with the registry's shared defaults:
@@ -42,6 +44,7 @@ impl ScenarioBuilder {
                 seed: 0xC0FFEE,
                 topology: Vec::new(),
                 workload: Workload {
+                    mode: TrafficMode::Closed,
                     clients: ClientLoad::Saturate { per_lane_slot: 1, min: 8 },
                     think_cycles: 500,
                     max_batch: 8,
@@ -57,6 +60,7 @@ impl ScenarioBuilder {
                 },
                 router: RoutingPolicy::RoundRobin,
                 lifecycle: LifecyclePolicy::NEVER,
+                slo: None,
                 sweep: Vec::new(),
             },
         }
@@ -147,6 +151,81 @@ impl ScenarioBuilder {
             mean_interarrival_cycles: Knob::split(mean_full, mean_smoke),
             horizon_cycles: Knob::split(horizon_full, horizon_smoke),
             max_arrivals,
+            spatial: Spatial::Random,
+        });
+        self
+    }
+
+    /// Spatial model of the fault-injection process. Call after
+    /// [`ScenarioBuilder::fault_arrivals`] (panics otherwise — a
+    /// spatial model without an arrival process is meaningless).
+    pub fn spatial(mut self, spatial: Spatial) -> Self {
+        self.spec
+            .faults
+            .as_mut()
+            .expect("call fault_arrivals() before spatial()")
+            .spatial = spatial;
+        self
+    }
+
+    /// Switch the workload to open-loop rate-driven arrivals (fleet
+    /// driver only). `horizon_full`/`horizon_smoke` bound the arrival
+    /// window; the request budget becomes a cap on the stream.
+    pub fn open_mode(mut self, curve: RateCurve, horizon_full: u64, horizon_smoke: u64) -> Self {
+        self.spec.workload.mode = TrafficMode::Open {
+            curve,
+            horizon_cycles: Knob::split(horizon_full, horizon_smoke),
+        };
+        self
+    }
+
+    /// Set the SLO latency target (cycles) with admission control on.
+    /// Use [`ScenarioBuilder::admission`] to toggle shedding off while
+    /// keeping the target for attainment reporting.
+    pub fn slo(mut self, target_latency_cycles: u64) -> Self {
+        let auto = self.spec.slo.and_then(|s| s.autoscale);
+        self.spec.slo = Some(SloPolicy {
+            target_latency_cycles,
+            admission: true,
+            autoscale: auto,
+        });
+        self
+    }
+
+    /// Toggle admission-control shedding (panics without a prior
+    /// [`ScenarioBuilder::slo`] — there is no target to shed against).
+    pub fn admission(mut self, on: bool) -> Self {
+        self.spec
+            .slo
+            .as_mut()
+            .expect("call slo() before admission()")
+            .admission = on;
+        self
+    }
+
+    /// Attach an autoscaler to the SLO policy (panics without a prior
+    /// [`ScenarioBuilder::slo`]).
+    #[allow(clippy::too_many_arguments)]
+    pub fn autoscale(
+        mut self,
+        min_chips: usize,
+        max_chips: usize,
+        up_pending_per_chip: usize,
+        down_pending_per_chip: usize,
+        dwell_cycles: u64,
+        eval_period_cycles: u64,
+    ) -> Self {
+        self.spec
+            .slo
+            .as_mut()
+            .expect("call slo() before autoscale()")
+            .autoscale = Some(AutoscalePolicy {
+            min_chips,
+            max_chips,
+            up_pending_per_chip,
+            down_pending_per_chip,
+            dwell_cycles,
+            eval_period_cycles,
         });
         self
     }
@@ -276,6 +355,91 @@ mod tests {
                 .unwrap_err();
             assert!(matches!(err, ScenarioError::ConflictingAxes { .. }), "{err}");
         }
+    }
+
+    #[test]
+    fn build_rejects_open_mode_and_slo_misuse() {
+        let curve = RateCurve::Constant { per_kcycle: 1.0 };
+        // open mode needs the fleet driver
+        assert_eq!(
+            ScenarioBuilder::new("x")
+                .driver(Driver::Serve)
+                .chip(8, 8, 2)
+                .open_mode(curve, 10_000, 1_000)
+                .build(),
+            Err(ScenarioError::OpenModeRequiresFleet)
+        );
+        // zero peak rate
+        assert_eq!(
+            ScenarioBuilder::new("x")
+                .chip(8, 8, 2)
+                .open_mode(RateCurve::Constant { per_kcycle: 0.0 }, 10_000, 1_000)
+                .build(),
+            Err(ScenarioError::BadRate)
+        );
+        // zero smoke horizon
+        assert_eq!(
+            ScenarioBuilder::new("x").chip(8, 8, 2).open_mode(curve, 10_000, 0).build(),
+            Err(ScenarioError::ZeroOpenHorizon)
+        );
+        // [slo] on the serve driver
+        assert_eq!(
+            ScenarioBuilder::new("x").driver(Driver::Serve).chip(8, 8, 2).slo(60_000).build(),
+            Err(ScenarioError::SloRequiresFleet)
+        );
+        // rate_scale sweep without open mode
+        assert_eq!(
+            ScenarioBuilder::new("x")
+                .chip(8, 8, 2)
+                .sweep(SweepAxis::RateScale(Knob::flat(vec![1.0, 2.0])))
+                .build(),
+            Err(ScenarioError::RateScaleWithoutOpen)
+        );
+    }
+
+    #[test]
+    fn build_rejects_bad_autoscale_policies() {
+        let base = || ScenarioBuilder::new("x").chips(4, 8, 8, 2).slo(60_000);
+        // inverted bounds
+        assert_eq!(
+            base().autoscale(3, 2, 10, 4, 20_000, 4_000).build(),
+            Err(ScenarioError::AutoscaleBounds { min: 3, max: 2 })
+        );
+        // max beyond the topology
+        assert_eq!(
+            base().autoscale(2, 5, 10, 4, 20_000, 4_000).build(),
+            Err(ScenarioError::AutoscaleExceedsTopology { max: 5, chips: 4 })
+        );
+        // no dead band between thresholds
+        assert_eq!(
+            base().autoscale(2, 4, 10, 10, 20_000, 4_000).build(),
+            Err(ScenarioError::AutoscaleHysteresis { up: 10, down: 10 })
+        );
+        // zero eval period
+        assert_eq!(
+            base().autoscale(2, 4, 10, 4, 20_000, 0).build(),
+            Err(ScenarioError::ZeroAutoscalePeriod)
+        );
+        // a valid policy passes
+        assert!(base().autoscale(2, 4, 10, 4, 20_000, 4_000).build().is_ok());
+    }
+
+    #[test]
+    fn spatial_knob_rides_on_the_fault_env() {
+        let spec = ScenarioBuilder::new("x")
+            .chip(8, 8, 2)
+            .fault_arrivals(8_000.0, 4_000.0, 60_000, 20_000, 16)
+            .spatial(Spatial::Clustered)
+            .build()
+            .unwrap();
+        assert_eq!(spec.faults.unwrap().spatial, Spatial::Clustered);
+        // default is the paper's random model
+        let spec = ScenarioBuilder::new("x")
+            .chip(8, 8, 2)
+            .fault_arrivals(8_000.0, 4_000.0, 60_000, 20_000, 16)
+            .build()
+            .unwrap();
+        assert_eq!(spec.faults.unwrap().spatial, Spatial::Random);
     }
 
     #[test]

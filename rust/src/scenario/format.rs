@@ -17,6 +17,11 @@
 //! chip = <rows>x<cols> lanes=<n>
 //!
 //! [workload]
+//! mode = closed                      # default; omitted when closed
+//!      | open constant rate=<f64>           # arrivals per kilocycle
+//!      | open diurnal base=<f64> amp=<f64> period=<u64>
+//!      | open flash base=<f64> peak=<f64> start=<u64> len=<u64>
+//! open_horizon_cycles = <u64> [smoke <u64>] # open mode only
 //! clients = fixed <n> | saturate <per_lane_slot> min <min>
 //! think_cycles = <u64>
 //! max_batch = <n>
@@ -28,6 +33,12 @@
 //! mean_interarrival_cycles = <f64> [smoke <f64>]
 //! horizon_cycles = <u64> [smoke <u64>]
 //! max_arrivals = <n>
+//! spatial = random | clustered       # default random; omitted when random
+//!
+//! [slo]                              # optional section = no SLO policy
+//! target_latency_cycles = <u64>
+//! admission = on | off
+//! autoscale = <min>..<max> up=<n> down=<n> dwell=<u64> period=<u64>
 //!
 //! [redundancy]
 //! group_width = <n>
@@ -49,15 +60,24 @@
 //!                                    # variant: 3*8x8 or 8x8+16x16+32x32
 //!                                    #   (lanes copied from chip 0)
 //! fault_mean = <f64>,... [smoke ...]
+//! rate_scale = <f64>,... [smoke ...]  # open mode only
 //! ```
+//!
+//! New-in-v1.1 keys (`mode`, `spatial`, the `[slo]` section) are
+//! rendered **only when they differ from their defaults**, so the
+//! canonical strings — and therefore the spec hashes — of pre-existing
+//! specs are unchanged.
 
 use crate::array::Dims;
+use crate::faults::Spatial;
 use crate::fleet::lifecycle::{LifecyclePolicy, NEVER_DRAIN};
 use crate::fleet::RoutingPolicy;
+use crate::serve::loadgen::RateCurve;
 
 use super::builder::ScenarioBuilder;
 use super::{
-    ChipDef, ClientLoad, Driver, FaultEnv, Knob, ScenarioError, ScenarioSpec, SweepAxis,
+    AutoscalePolicy, ChipDef, ClientLoad, Driver, FaultEnv, Knob, ScenarioError, ScenarioSpec,
+    SloPolicy, SweepAxis, TrafficMode,
 };
 
 fn knob_str<T: std::fmt::Display + PartialEq>(k: &Knob<T>) -> String {
@@ -105,6 +125,22 @@ pub fn to_canonical_string(spec: &ScenarioSpec) -> String {
     }
     s.push_str("\n[workload]\n");
     let w = &spec.workload;
+    if let TrafficMode::Open { curve, horizon_cycles } = &w.mode {
+        let c = match curve {
+            RateCurve::Constant { per_kcycle } => format!("constant rate={per_kcycle}"),
+            RateCurve::Diurnal { base_per_kcycle, amplitude, period_cycles } => {
+                format!("diurnal base={base_per_kcycle} amp={amplitude} period={period_cycles}")
+            }
+            RateCurve::FlashCrowd { base_per_kcycle, peak_mult, start_cycle, len_cycles } => {
+                format!(
+                    "flash base={base_per_kcycle} peak={peak_mult} \
+                     start={start_cycle} len={len_cycles}"
+                )
+            }
+        };
+        s.push_str(&format!("mode = open {c}\n"));
+        s.push_str(&format!("open_horizon_cycles = {}\n", knob_str(horizon_cycles)));
+    }
     match w.clients {
         ClientLoad::Fixed(n) => s.push_str(&format!("clients = fixed {n}\n")),
         ClientLoad::Saturate { per_lane_slot, min } => {
@@ -125,6 +161,9 @@ pub fn to_canonical_string(spec: &ScenarioSpec) -> String {
         ));
         s.push_str(&format!("horizon_cycles = {}\n", knob_str(&env.horizon_cycles)));
         s.push_str(&format!("max_arrivals = {}\n", env.max_arrivals));
+        if env.spatial != Spatial::Random {
+            s.push_str(&format!("spatial = {}\n", env.spatial));
+        }
     }
     s.push_str("\n[redundancy]\n");
     s.push_str(&format!("group_width = {}\n", spec.redundancy.group_width));
@@ -141,6 +180,22 @@ pub fn to_canonical_string(spec: &ScenarioSpec) -> String {
         s.push_str(&format!("drain_enter = {}\n", spec.lifecycle.drain_enter));
         s.push_str(&format!("drain_exit = {}\n", spec.lifecycle.drain_exit));
         s.push_str(&format!("min_dwell_cycles = {}\n", spec.lifecycle.min_dwell_cycles));
+    }
+    if let Some(slo) = &spec.slo {
+        s.push_str("\n[slo]\n");
+        s.push_str(&format!("target_latency_cycles = {}\n", slo.target_latency_cycles));
+        s.push_str(&format!("admission = {}\n", if slo.admission { "on" } else { "off" }));
+        if let Some(a) = &slo.autoscale {
+            s.push_str(&format!(
+                "autoscale = {}..{} up={} down={} dwell={} period={}\n",
+                a.min_chips,
+                a.max_chips,
+                a.up_pending_per_chip,
+                a.down_pending_per_chip,
+                a.dwell_cycles,
+                a.eval_period_cycles
+            ));
+        }
     }
     if !spec.sweep.is_empty() {
         s.push_str("\n[sweep]\n");
@@ -162,6 +217,7 @@ pub fn to_canonical_string(spec: &ScenarioSpec) -> String {
                     }
                 }
                 SweepAxis::FaultMean(k) => knob_list_str(k),
+                SweepAxis::RateScale(k) => knob_list_str(k),
             };
             s.push_str(&format!("{} = {}\n", axis.key(), value));
         }
@@ -274,6 +330,12 @@ pub fn parse(text: &str) -> Result<ScenarioSpec, ScenarioError> {
     let mut drain_enter: Option<Option<usize>> = None; // Some(None) = never
     let mut drain_exit: Option<usize> = None;
     let mut min_dwell: Option<u64> = None;
+    let mut open_curve: Option<RateCurve> = None;
+    let mut open_horizon: Option<(usize, Knob<u64>)> = None;
+    let mut saw_slo = false;
+    let mut slo_target: Option<u64> = None;
+    let mut slo_admission = true;
+    let mut slo_autoscale: Option<AutoscalePolicy> = None;
 
     for (i, raw) in text.lines().enumerate() {
         let line = i + 1;
@@ -295,8 +357,8 @@ pub fn parse(text: &str) -> Result<ScenarioSpec, ScenarioError> {
             continue;
         }
         if let Some(sec) = l.strip_prefix('[').and_then(|r| r.strip_suffix(']')) {
-            const SECTIONS: [&str; 7] =
-                ["meta", "topology", "workload", "faults", "redundancy", "policy", "sweep"];
+            const SECTIONS: [&str; 8] =
+                ["meta", "topology", "workload", "faults", "redundancy", "policy", "slo", "sweep"];
             if !SECTIONS.contains(&sec) {
                 return Err(perr(line, format!("unknown section [{sec}]")));
             }
@@ -305,7 +367,11 @@ pub fn parse(text: &str) -> Result<ScenarioSpec, ScenarioError> {
                     mean_interarrival_cycles: Knob::flat(20_000.0),
                     horizon_cycles: Knob::flat(160_000),
                     max_arrivals: 6,
+                    spatial: Spatial::Random,
                 });
+            }
+            if sec == "slo" {
+                saw_slo = true;
             }
             section = Some(sec);
             continue;
@@ -338,6 +404,74 @@ pub fn parse(text: &str) -> Result<ScenarioSpec, ScenarioError> {
                     }
                 }
                 spec.topology.push(ChipDef { dims, lanes });
+            }
+            ("workload", "mode") => {
+                let toks: Vec<&str> = value.split_whitespace().collect();
+                open_curve = match toks.as_slice() {
+                    ["closed"] => None,
+                    ["open", shape, attrs @ ..] => {
+                        let mut kv = std::collections::BTreeMap::new();
+                        for a in attrs {
+                            match a.split_once('=') {
+                                Some((k, v)) => {
+                                    kv.insert(k, v);
+                                }
+                                None => {
+                                    return Err(perr(
+                                        line,
+                                        format!("expected key=value in mode, got {a:?}"),
+                                    ))
+                                }
+                            }
+                        }
+                        let expected: &[&str] = match *shape {
+                            "constant" => &["rate"],
+                            "diurnal" => &["base", "amp", "period"],
+                            "flash" => &["base", "peak", "start", "len"],
+                            other => {
+                                return Err(perr(line, format!("unknown rate curve {other:?}")))
+                            }
+                        };
+                        for k in kv.keys() {
+                            if !expected.contains(k) {
+                                return Err(perr(
+                                    line,
+                                    format!("unknown attribute {k:?} for {shape} curve"),
+                                ));
+                            }
+                        }
+                        let need = |k: &'static str| {
+                            kv.get(k).copied().ok_or_else(|| {
+                                perr(line, format!("open {shape} curve needs {k}=<value>"))
+                            })
+                        };
+                        Some(match *shape {
+                            "constant" => RateCurve::Constant {
+                                per_kcycle: parse_f64(need("rate")?, line)?,
+                            },
+                            "diurnal" => RateCurve::Diurnal {
+                                base_per_kcycle: parse_f64(need("base")?, line)?,
+                                amplitude: parse_f64(need("amp")?, line)?,
+                                period_cycles: parse_u64(need("period")?, line)?,
+                            },
+                            _ => RateCurve::FlashCrowd {
+                                base_per_kcycle: parse_f64(need("base")?, line)?,
+                                peak_mult: parse_f64(need("peak")?, line)?,
+                                start_cycle: parse_u64(need("start")?, line)?,
+                                len_cycles: parse_u64(need("len")?, line)?,
+                            },
+                        })
+                    }
+                    _ => {
+                        return Err(perr(
+                            line,
+                            "mode = closed | open <constant|diurnal|flash> key=value ...",
+                        ))
+                    }
+                };
+            }
+            ("workload", "open_horizon_cycles") => {
+                open_horizon = Some((line, parse_knob(value, line, parse_u64)?));
             }
             ("workload", "clients") => {
                 let toks: Vec<&str> = value.split_whitespace().collect();
@@ -381,6 +515,15 @@ pub fn parse(text: &str) -> Result<ScenarioSpec, ScenarioError> {
             ("faults", "max_arrivals") => {
                 faults.as_mut().unwrap().max_arrivals = parse_usize(value, line)?;
             }
+            ("faults", "spatial") => {
+                faults.as_mut().unwrap().spatial = match value {
+                    "random" => Spatial::Random,
+                    "clustered" => Spatial::Clustered,
+                    other => {
+                        return Err(perr(line, format!("unknown spatial model {other:?}")))
+                    }
+                };
+            }
             ("redundancy", "group_width") => {
                 spec.redundancy.group_width = parse_usize(value, line)?
             }
@@ -400,6 +543,45 @@ pub fn parse(text: &str) -> Result<ScenarioSpec, ScenarioError> {
             }
             ("policy", "drain_exit") => drain_exit = Some(parse_usize(value, line)?),
             ("policy", "min_dwell_cycles") => min_dwell = Some(parse_u64(value, line)?),
+            ("slo", "target_latency_cycles") => slo_target = Some(parse_u64(value, line)?),
+            ("slo", "admission") => {
+                slo_admission = match value {
+                    "on" => true,
+                    "off" => false,
+                    other => return Err(perr(line, format!("admission = on|off, got {other:?}"))),
+                };
+            }
+            ("slo", "autoscale") => {
+                let mut toks = value.split_whitespace();
+                let range = toks.next().ok_or_else(|| perr(line, "empty autoscale"))?;
+                let (min, max) = range
+                    .split_once("..")
+                    .ok_or_else(|| perr(line, "autoscale needs <min>..<max>"))?;
+                let (mut up, mut down, mut dwell, mut period) = (None, None, None, None);
+                for t in toks {
+                    match t.split_once('=') {
+                        Some(("up", v)) => up = Some(parse_usize(v, line)?),
+                        Some(("down", v)) => down = Some(parse_usize(v, line)?),
+                        Some(("dwell", v)) => dwell = Some(parse_u64(v, line)?),
+                        Some(("period", v)) => period = Some(parse_u64(v, line)?),
+                        _ => {
+                            return Err(perr(
+                                line,
+                                format!("unknown autoscale attribute {t:?}"),
+                            ))
+                        }
+                    }
+                }
+                let miss = |k: &str| perr(line, format!("autoscale needs {k}=<value>"));
+                slo_autoscale = Some(AutoscalePolicy {
+                    min_chips: parse_usize(min.trim(), line)?,
+                    max_chips: parse_usize(max.trim(), line)?,
+                    up_pending_per_chip: up.ok_or_else(|| miss("up"))?,
+                    down_pending_per_chip: down.ok_or_else(|| miss("down"))?,
+                    dwell_cycles: dwell.ok_or_else(|| miss("dwell"))?,
+                    eval_period_cycles: period.ok_or_else(|| miss("period"))?,
+                });
+            }
             ("sweep", key) => {
                 let axis = match key {
                     "lanes" => SweepAxis::Lanes(parse_knob(value, line, |v, l| {
@@ -418,6 +600,9 @@ pub fn parse(text: &str) -> Result<ScenarioSpec, ScenarioError> {
                     "fault_mean" => SweepAxis::FaultMean(parse_knob(value, line, |v, l| {
                         parse_list(v, l, &parse_f64)
                     })?),
+                    "rate_scale" => SweepAxis::RateScale(parse_knob(value, line, |v, l| {
+                        parse_list(v, l, &parse_f64)
+                    })?),
                     other => return Err(perr(line, format!("unknown sweep axis {other:?}"))),
                 };
                 spec.sweep.push(axis);
@@ -429,6 +614,22 @@ pub fn parse(text: &str) -> Result<ScenarioSpec, ScenarioError> {
     }
     if !saw_name {
         return Err(perr(0, "empty spec: expected `scenario \"<name>\"`"));
+    }
+    if let Some(curve) = open_curve {
+        spec.workload.mode = TrafficMode::Open {
+            curve,
+            horizon_cycles: open_horizon.map(|(_, k)| k).unwrap_or(Knob::flat(100_000)),
+        };
+    } else if let Some((hline, _)) = open_horizon {
+        return Err(perr(hline, "open_horizon_cycles requires mode = open"));
+    }
+    if saw_slo {
+        spec.slo = Some(SloPolicy {
+            target_latency_cycles: slo_target
+                .ok_or_else(|| perr(0, "[slo] needs target_latency_cycles"))?,
+            admission: slo_admission,
+            autoscale: slo_autoscale,
+        });
     }
     spec.faults = faults;
     spec.lifecycle = match drain_enter {
@@ -531,6 +732,87 @@ chip = 16x16 lanes=1
         let e = ScenarioSpec::parse(&format!("{base}drain_enter = 1\ndrain_exit = 2\n"))
             .unwrap_err();
         assert_eq!(e, ScenarioError::ExitAboveEnter { enter: 1, exit: 2 });
+    }
+
+    #[test]
+    fn open_mode_slo_and_spatial_round_trip() {
+        let text = "scenario \"traffic\"\n\
+                    [topology]\nchip = 8x8 lanes=2\nchip = 8x8 lanes=2\n\
+                    [workload]\n\
+                    mode = open flash base=1 peak=15 start=30000 len=30000\n\
+                    open_horizon_cycles = 240000 smoke 100000\n\
+                    [faults]\nspatial = clustered\n\
+                    [slo]\ntarget_latency_cycles = 60000\nadmission = on\n\
+                    autoscale = 1..2 up=10 down=4 dwell=20000 period=4000\n\
+                    [sweep]\nrate_scale = 0.5,1,2\n";
+        let spec = ScenarioSpec::parse(text).unwrap();
+        match spec.workload.mode {
+            TrafficMode::Open { curve, horizon_cycles } => {
+                assert_eq!(
+                    curve,
+                    RateCurve::FlashCrowd {
+                        base_per_kcycle: 1.0,
+                        peak_mult: 15.0,
+                        start_cycle: 30_000,
+                        len_cycles: 30_000,
+                    }
+                );
+                assert_eq!(horizon_cycles, Knob::split(240_000, 100_000));
+            }
+            other => panic!("wrong mode: {other:?}"),
+        }
+        assert_eq!(spec.faults.unwrap().spatial, Spatial::Clustered);
+        let slo = spec.slo.unwrap();
+        assert_eq!(slo.target_latency_cycles, 60_000);
+        assert!(slo.admission);
+        let a = slo.autoscale.unwrap();
+        assert_eq!((a.min_chips, a.max_chips), (1, 2));
+        assert_eq!((a.up_pending_per_chip, a.down_pending_per_chip), (10, 4));
+        assert_eq!((a.dwell_cycles, a.eval_period_cycles), (20_000, 4_000));
+        assert!(matches!(spec.sweep[0], SweepAxis::RateScale(_)));
+        // canonical round trip is a fixpoint for the new keys too
+        let canon = spec.to_canonical_string();
+        let back = ScenarioSpec::parse(&canon).unwrap();
+        assert_eq!(back, spec);
+        assert_eq!(back.to_canonical_string(), canon);
+    }
+
+    #[test]
+    fn default_mode_spatial_and_slo_are_not_rendered() {
+        // conditional rendering: a spec without the new features must
+        // canonicalize exactly as it did before they existed, so
+        // pre-existing spec hashes are stable
+        let spec = presets::preset("fleet_default").unwrap();
+        let canon = spec.to_canonical_string();
+        assert!(!canon.contains("mode ="), "{canon}");
+        assert!(!canon.contains("spatial"), "{canon}");
+        assert!(!canon.contains("[slo]"), "{canon}");
+    }
+
+    #[test]
+    fn open_mode_parse_errors_are_typed() {
+        let base = "scenario \"x\"\n[topology]\nchip = 8x8 lanes=2\n[workload]\n";
+        // horizon without open mode
+        let e = ScenarioSpec::parse(&format!("{base}open_horizon_cycles = 1000\n"))
+            .unwrap_err();
+        assert!(matches!(e, ScenarioError::Parse { line: 5, .. }), "{e}");
+        // unknown curve shape
+        let e = ScenarioSpec::parse(&format!("{base}mode = open sawtooth rate=1\n"))
+            .unwrap_err();
+        assert!(matches!(e, ScenarioError::Parse { line: 5, .. }), "{e}");
+        // missing curve attribute
+        let e = ScenarioSpec::parse(&format!("{base}mode = open constant\n")).unwrap_err();
+        assert!(matches!(e, ScenarioError::Parse { line: 5, .. }), "{e}");
+        // stray attribute
+        let e = ScenarioSpec::parse(&format!("{base}mode = open constant rate=1 hue=3\n"))
+            .unwrap_err();
+        assert!(matches!(e, ScenarioError::Parse { line: 5, .. }), "{e}");
+        // [slo] without a target
+        let e = ScenarioSpec::parse(
+            "scenario \"x\"\n[topology]\nchip = 8x8 lanes=2\n[slo]\nadmission = on\n",
+        )
+        .unwrap_err();
+        assert!(matches!(e, ScenarioError::Parse { .. }), "{e}");
     }
 
     #[test]

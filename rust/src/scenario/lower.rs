@@ -16,10 +16,10 @@
 //!   (mean optionally overridden by a `fault_mean` sweep cell), scan
 //!   cadence and scheme knobs from [`super::Redundancy`].
 
+use crate::fleet::{AdmissionConfig, AutoscaleConfig, FleetConfig, OpenLoopConfig};
 use crate::serve::{FaultPlan, ServeConfig};
-use crate::fleet::FleetConfig;
 
-use super::{Cell, ClientLoad, ScenarioError, ScenarioSpec};
+use super::{Cell, ClientLoad, ScenarioError, ScenarioSpec, TrafficMode};
 
 /// Client population of one cell (the saturation rule scales with the
 /// cell's resolved capacity).
@@ -53,7 +53,25 @@ pub fn fault_plan(spec: &ScenarioSpec, cell: &Cell, smoke: bool) -> Option<Fault
         group_width: spec.redundancy.group_width,
         fpt_capacity: spec.redundancy.fpt_capacity,
         max_arrivals: env.max_arrivals,
+        spatial: env.spatial,
     })
+}
+
+/// The open-loop arrival plan of one cell (`None` = closed loop). A
+/// `rate_scale` sweep cell multiplies the curve's base rate; the
+/// request budget caps the arrival stream.
+pub fn open_loop(spec: &ScenarioSpec, cell: &Cell, smoke: bool) -> Option<OpenLoopConfig> {
+    match &spec.workload.mode {
+        TrafficMode::Closed => None,
+        TrafficMode::Open { curve, horizon_cycles } => Some(OpenLoopConfig {
+            curve: match cell.rate_scale {
+                Some(s) => curve.scaled(s),
+                None => *curve,
+            },
+            horizon_cycles: *horizon_cycles.at(smoke),
+            max_arrivals: total_requests(spec, cell, smoke),
+        }),
+    }
 }
 
 /// Lower one cell into a single-chip [`ServeConfig`]. Errors if the
@@ -96,6 +114,7 @@ pub fn lower_fleet(
     executor_threads: usize,
 ) -> FleetConfig {
     let clients = clients(spec, cell);
+    let total = total_requests(spec, cell, smoke);
     FleetConfig {
         seed,
         chips: cell.chips.iter().map(|c| crate::fleet::ChipSpec { dims: c.dims, lanes: c.lanes }).collect(),
@@ -104,12 +123,29 @@ pub fn lower_fleet(
         max_wait_cycles: spec.workload.max_wait_cycles,
         clients,
         think_cycles: spec.workload.think_cycles,
-        total_requests: total_requests(spec, cell, smoke),
-        queue_cap: clients,
+        total_requests: total,
+        // the closed loop's pending set is bounded by the client
+        // population; an open arrival stream is not — in the worst case
+        // every admitted request queues at once
+        queue_cap: if spec.workload.mode.is_open() { total } else { clients },
         executor_threads,
         windows: spec.workload.windows,
         faults: fault_plan(spec, cell, smoke),
         lifecycle: spec.lifecycle,
+        open_loop: open_loop(spec, cell, smoke),
+        admission: spec.slo.as_ref().filter(|s| s.admission).map(|s| AdmissionConfig {
+            target_latency_cycles: s.target_latency_cycles,
+        }),
+        autoscale: spec.slo.as_ref().and_then(|s| s.autoscale).map(|a| AutoscaleConfig {
+            // a sweep cell may shrink the cluster below the spec
+            // topology the policy was validated against
+            min_chips: a.min_chips.min(cell.chips.len()),
+            max_chips: a.max_chips.min(cell.chips.len()),
+            up_pending_per_chip: a.up_pending_per_chip,
+            down_pending_per_chip: a.down_pending_per_chip,
+            dwell_cycles: a.dwell_cycles,
+            eval_period_cycles: a.eval_period_cycles,
+        }),
     }
 }
 
@@ -163,6 +199,70 @@ mod tests {
             lower_serve(&spec, &cell, false, 1, 1).unwrap_err(),
             crate::scenario::ScenarioError::ServeDriverShape { chips: 2 }
         );
+    }
+
+    #[test]
+    fn open_mode_slo_and_rate_scale_lower_into_the_fleet_config() {
+        use crate::serve::loadgen::RateCurve;
+        let spec = crate::scenario::ScenarioBuilder::new("t")
+            .chips(4, 8, 8, 2)
+            .open_mode(RateCurve::Constant { per_kcycle: 2.0 }, 200_000, 50_000)
+            .requests(1024, 256)
+            .slo(60_000)
+            .autoscale(2, 4, 10, 4, 20_000, 4_000)
+            .build()
+            .unwrap();
+        let cfg = lower_fleet(&spec, &Cell::base(&spec), false, 1, 1);
+        let open = cfg.open_loop.unwrap();
+        assert_eq!(open.curve, RateCurve::Constant { per_kcycle: 2.0 });
+        assert_eq!(open.horizon_cycles, 200_000);
+        assert_eq!(open.max_arrivals, 1024);
+        // open mode bounds the queue by the request budget, not clients
+        assert_eq!(cfg.queue_cap, 1024);
+        assert_eq!(cfg.admission.unwrap().target_latency_cycles, 60_000);
+        let auto = cfg.autoscale.unwrap();
+        assert_eq!((auto.min_chips, auto.max_chips), (2, 4));
+        // smoke picks the smoke horizon and budget
+        let cfg = lower_fleet(&spec, &Cell::base(&spec), true, 1, 1);
+        let open = cfg.open_loop.unwrap();
+        assert_eq!(open.horizon_cycles, 50_000);
+        assert_eq!(open.max_arrivals, 256);
+        // a rate_scale cell multiplies the curve
+        let mut cell = Cell::base(&spec);
+        cell.rate_scale = Some(3.0);
+        let cfg = lower_fleet(&spec, &cell, false, 1, 1);
+        assert_eq!(cfg.open_loop.unwrap().curve, RateCurve::Constant { per_kcycle: 6.0 });
+        // a chips cell shrinks the autoscale bounds to fit
+        let cell = Cell::base(&spec).with_chips(2);
+        let auto = lower_fleet(&spec, &cell, false, 1, 1).autoscale.unwrap();
+        assert_eq!((auto.min_chips, auto.max_chips), (2, 2));
+    }
+
+    #[test]
+    fn admission_off_keeps_the_target_out_of_the_config() {
+        let spec = crate::scenario::ScenarioBuilder::new("t")
+            .chips(2, 8, 8, 2)
+            .slo(60_000)
+            .admission(false)
+            .build()
+            .unwrap();
+        let cfg = lower_fleet(&spec, &Cell::base(&spec), false, 1, 1);
+        assert!(cfg.admission.is_none());
+        assert!(cfg.open_loop.is_none());
+        assert!(cfg.autoscale.is_none());
+    }
+
+    #[test]
+    fn spatial_model_lowers_into_the_fault_plan() {
+        use crate::faults::Spatial;
+        let spec = crate::scenario::ScenarioBuilder::new("t")
+            .chip(8, 8, 2)
+            .fault_arrivals(8_000.0, 4_000.0, 60_000, 20_000, 16)
+            .spatial(Spatial::Clustered)
+            .build()
+            .unwrap();
+        let plan = fault_plan(&spec, &Cell::base(&spec), false).unwrap();
+        assert_eq!(plan.spatial, Spatial::Clustered);
     }
 
     #[test]

@@ -57,8 +57,10 @@ pub use presets::preset;
 pub use sweep::{topology_label, Cell, SweepAxis};
 
 use crate::array::Dims;
+use crate::faults::Spatial;
 use crate::fleet::lifecycle::{LifecyclePolicy, NEVER_DRAIN};
 use crate::fleet::RoutingPolicy;
+use crate::serve::loadgen::RateCurve;
 
 /// A spec value with an optional reduced variant for `--smoke` runs.
 /// When no smoke override is declared the full value is used for both.
@@ -143,9 +145,38 @@ pub struct RequestBudget {
     pub count: Knob<usize>,
 }
 
+/// How requests enter the system.
+///
+/// * `Closed` — the PR-3 closed loop: `clients` callers with think
+///   time; in-flight load is capped at the client count, so the fleet
+///   can never be overloaded.
+/// * `Open` — rate-driven arrivals in cycle time that never back off
+///   (the tier the hierarchical fault-tolerance survey, arXiv
+///   2204.01942, argues a serving system must survive). The
+///   [`RateCurve`] is spec data; arrivals stop at `horizon_cycles`
+///   (the in-flight tail still completes). Open mode requires the
+///   fleet driver, where admission control and autoscaling live; the
+///   `clients`/`think_cycles` knobs are ignored.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum TrafficMode {
+    Closed,
+    Open {
+        curve: RateCurve,
+        horizon_cycles: Knob<u64>,
+    },
+}
+
+impl TrafficMode {
+    pub fn is_open(&self) -> bool {
+        matches!(self, TrafficMode::Open { .. })
+    }
+}
+
 /// Workload + arrival process of the serving loop.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Workload {
+    /// Closed-loop clients vs open-loop rate-driven arrivals.
+    pub mode: TrafficMode,
     pub clients: ClientLoad,
     /// Per-request think time upper bound (0 = saturating load).
     pub think_cycles: u64,
@@ -153,9 +184,43 @@ pub struct Workload {
     pub max_batch: usize,
     /// Dynamic batcher: deadline for the oldest pending request.
     pub max_wait_cycles: u64,
+    /// Closed mode: exact request budget. Open mode: a *cap* on the
+    /// arrival stream (the horizon normally ends traffic first).
     pub requests: RequestBudget,
     /// Accuracy/goodput windows in the report.
     pub windows: usize,
+}
+
+/// Autoscaler policy: spin chips up/down on sustained queue pressure,
+/// reusing the drain → re-shard → re-admit lifecycle with PR-4-style
+/// hysteresis (distinct up/down thresholds + a dwell) so transient
+/// spikes cannot flap the fleet.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct AutoscalePolicy {
+    /// Never scale below this many active chips.
+    pub min_chips: usize,
+    /// Never scale above this many active chips (≤ topology size).
+    pub max_chips: usize,
+    /// Scale up when outstanding admitted requests per active chip
+    /// exceed this.
+    pub up_pending_per_chip: usize,
+    /// Scale down when they fall below this (must be < up threshold).
+    pub down_pending_per_chip: usize,
+    /// Minimum cycles between scaling actions (flap guard).
+    pub dwell_cycles: u64,
+    /// Queue-pressure evaluation cadence.
+    pub eval_period_cycles: u64,
+}
+
+/// Per-spec service-level objective: the latency target the admission
+/// controller sheds against, plus the optional autoscaler.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SloPolicy {
+    /// End-to-end (enqueue → complete) latency target in cycles.
+    pub target_latency_cycles: u64,
+    /// Shed arrivals whose predicted queueing delay exceeds the target.
+    pub admission: bool,
+    pub autoscale: Option<AutoscalePolicy>,
 }
 
 /// The mid-run fault environment (per-chip independent streams).
@@ -167,6 +232,8 @@ pub struct FaultEnv {
     pub horizon_cycles: Knob<u64>,
     /// Cap on the arrival process.
     pub max_arrivals: usize,
+    /// Spatial model: uniform i.i.d. vs centre–satellite clusters.
+    pub spatial: Spatial,
 }
 
 /// The HyCA protection-scheme knobs.
@@ -197,6 +264,8 @@ pub struct ScenarioSpec {
     pub redundancy: Redundancy,
     pub router: RoutingPolicy,
     pub lifecycle: LifecyclePolicy,
+    /// SLO target + admission + autoscaling (fleet driver only).
+    pub slo: Option<SloPolicy>,
     /// Grid axes, first axis outermost.
     pub sweep: Vec<SweepAxis>,
 }
@@ -242,6 +311,26 @@ pub enum ScenarioError {
     ServeDriverShape { chips: usize },
     #[error("serve driver cannot sweep axis {axis:?} (single-chip pipeline)")]
     ServeDriverAxis { axis: &'static str },
+    #[error("open traffic mode requires the fleet driver (admission/autoscaling live in the router)")]
+    OpenModeRequiresFleet,
+    #[error("open-loop rate curve must have a positive, finite peak rate")]
+    BadRate,
+    #[error("open-loop horizon_cycles must be at least 1 in both full and smoke modes")]
+    ZeroOpenHorizon,
+    #[error("[slo] requires the fleet driver")]
+    SloRequiresFleet,
+    #[error("slo target_latency_cycles must be at least 1")]
+    ZeroSloTarget,
+    #[error("autoscale bounds {min}..{max} invalid (need 1 <= min <= max)")]
+    AutoscaleBounds { min: usize, max: usize },
+    #[error("autoscale max_chips {max} exceeds the {chips}-chip topology")]
+    AutoscaleExceedsTopology { max: usize, chips: usize },
+    #[error("autoscale down threshold {down} must be below the up threshold {up} — hysteresis needs a dead band")]
+    AutoscaleHysteresis { up: usize, down: usize },
+    #[error("autoscale eval period must be at least 1 cycle")]
+    ZeroAutoscalePeriod,
+    #[error("sweep axis rate_scale requires open traffic mode")]
+    RateScaleWithoutOpen,
     #[error("line {line}: {msg}")]
     Parse { line: usize, msg: String },
 }
@@ -289,6 +378,49 @@ impl ScenarioSpec {
         if self.workload.windows == 0 {
             return Err(ScenarioError::ZeroWindows);
         }
+        if let TrafficMode::Open { curve, horizon_cycles } = &self.workload.mode {
+            if self.driver != Driver::Fleet {
+                return Err(ScenarioError::OpenModeRequiresFleet);
+            }
+            let peak = curve.max_rate();
+            if !(peak.is_finite() && peak > 0.0) {
+                return Err(ScenarioError::BadRate);
+            }
+            if horizon_cycles.full == 0 || horizon_cycles.smoke == 0 {
+                return Err(ScenarioError::ZeroOpenHorizon);
+            }
+        }
+        if let Some(slo) = &self.slo {
+            if self.driver != Driver::Fleet {
+                return Err(ScenarioError::SloRequiresFleet);
+            }
+            if slo.target_latency_cycles == 0 {
+                return Err(ScenarioError::ZeroSloTarget);
+            }
+            if let Some(a) = &slo.autoscale {
+                if a.min_chips == 0 || a.min_chips > a.max_chips {
+                    return Err(ScenarioError::AutoscaleBounds {
+                        min: a.min_chips,
+                        max: a.max_chips,
+                    });
+                }
+                if a.max_chips > self.topology.len() {
+                    return Err(ScenarioError::AutoscaleExceedsTopology {
+                        max: a.max_chips,
+                        chips: self.topology.len(),
+                    });
+                }
+                if a.down_pending_per_chip >= a.up_pending_per_chip {
+                    return Err(ScenarioError::AutoscaleHysteresis {
+                        up: a.up_pending_per_chip,
+                        down: a.down_pending_per_chip,
+                    });
+                }
+                if a.eval_period_cycles == 0 {
+                    return Err(ScenarioError::ZeroAutoscalePeriod);
+                }
+            }
+        }
         if let Some(env) = &self.faults {
             for m in [env.mean_interarrival_cycles.full, env.mean_interarrival_cycles.smoke] {
                 if !(m.is_finite() && m > 0.0) {
@@ -333,6 +465,9 @@ impl ScenarioSpec {
             axis.validate()?;
             if matches!(axis, SweepAxis::FaultMean(_)) && self.faults.is_none() {
                 return Err(ScenarioError::FaultAxisWithoutFaults);
+            }
+            if matches!(axis, SweepAxis::RateScale(_)) && !self.workload.mode.is_open() {
+                return Err(ScenarioError::RateScaleWithoutOpen);
             }
             if self.driver == Driver::Serve
                 && !matches!(axis, SweepAxis::Lanes(_) | SweepAxis::MaxBatch(_))

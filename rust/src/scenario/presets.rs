@@ -22,9 +22,23 @@
 //! * `uneven_faults` — fault-intensity × router stress grid over a
 //!   3-chip fleet with hysteresis lifecycle (enter 2 / exit 1 /
 //!   8000-cycle dwell).
+//!
+//! Open-loop traffic presets (`repro traffic`, `BENCH_traffic.json`):
+//!
+//! * `open_steady` — one chip under a low constant arrival rate
+//!   (~27% of the chip's ≈0.75 imgs/kcycle capacity): the degeneracy
+//!   contract — zero shed, every request admitted, accuracy 1.0, i.e.
+//!   the closed-loop steady-state behaviour recovered from open mode;
+//! * `flash_crowd` — 4 chips, base load ~33% of capacity, then a 15×
+//!   flash spike (≈5× fleet capacity) for 30k cycles: the admission
+//!   controller sheds to protect the SLO and the autoscaler grows
+//!   2→4 chips and shrinks back after the spike drains;
+//! * `open_diurnal` — 4 chips under a sinusoidal day/night rate with
+//!   the autoscaler tracking the curve between 2 and 4 active chips.
 
 use crate::array::Dims;
 use crate::fleet::RoutingPolicy;
+use crate::serve::loadgen::RateCurve;
 
 use super::{Driver, Knob, ScenarioBuilder, ScenarioSpec, SweepAxis};
 
@@ -37,6 +51,9 @@ pub fn names() -> &'static [&'static str] {
         "degraded_continuity",
         "mixed_fleet",
         "uneven_faults",
+        "open_steady",
+        "flash_crowd",
+        "open_diurnal",
     ]
 }
 
@@ -49,6 +66,9 @@ pub fn preset(name: &str) -> Option<ScenarioSpec> {
         "degraded_continuity" => degraded_continuity(),
         "mixed_fleet" => mixed_fleet(),
         "uneven_faults" => uneven_faults(),
+        "open_steady" => open_steady(),
+        "flash_crowd" => flash_crowd(),
+        "open_diurnal" => open_diurnal(),
         _ => return None,
     };
     Some(spec.expect("preset specs validate by construction"))
@@ -147,6 +167,64 @@ fn uneven_faults() -> Built {
         .build()
 }
 
+// Rate calibration for the traffic presets: on an 8×8 array the
+// builtin synthetic model costs 2528 steady cycles/image + 1174 fill
+// cycles/batch, so a 2-lane chip running batch-8 inference sustains
+// ≈ 0.75 images per kilocycle. The preset rates below are chosen
+// relative to that: open_steady sits safely under one chip's capacity,
+// flash_crowd's spike is ≈5× the 4-chip fleet's.
+
+fn open_steady() -> Built {
+    ScenarioBuilder::new("open_steady")
+        .chip(8, 8, 2)
+        .open_mode(RateCurve::Constant { per_kcycle: 0.2 }, 600_000, 200_000)
+        .requests(512, 256) // cap only — the horizon ends traffic
+        .windows(4)
+        .slo(80_000)
+        .build()
+}
+
+fn flash_crowd() -> Built {
+    ScenarioBuilder::new("flash_crowd")
+        .chips(4, 8, 8, 2)
+        .router(RoutingPolicy::JoinShortestQueue)
+        .open_mode(
+            RateCurve::FlashCrowd {
+                base_per_kcycle: 1.0,
+                peak_mult: 15.0,
+                start_cycle: 30_000,
+                len_cycles: 30_000,
+            },
+            240_000,
+            100_000,
+        )
+        .requests(2048, 1024)
+        .windows(6)
+        .slo(60_000)
+        .autoscale(2, 4, 10, 4, 20_000, 4_000)
+        .build()
+}
+
+fn open_diurnal() -> Built {
+    ScenarioBuilder::new("open_diurnal")
+        .chips(4, 8, 8, 2)
+        .router(RoutingPolicy::JoinShortestQueue)
+        .open_mode(
+            RateCurve::Diurnal {
+                base_per_kcycle: 1.5,
+                amplitude: 0.6,
+                period_cycles: 120_000,
+            },
+            360_000,
+            120_000,
+        )
+        .requests(1024, 512)
+        .windows(6)
+        .slo(60_000)
+        .autoscale(2, 4, 10, 4, 20_000, 4_000)
+        .build()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -168,6 +246,32 @@ mod tests {
         assert_eq!(preset("degraded_continuity").unwrap().driver, Driver::Fleet);
         assert_eq!(preset("mixed_fleet").unwrap().driver, Driver::Fleet);
         assert_eq!(preset("uneven_faults").unwrap().driver, Driver::Fleet);
+        // open-loop traffic requires the fleet driver
+        assert_eq!(preset("open_steady").unwrap().driver, Driver::Fleet);
+        assert_eq!(preset("flash_crowd").unwrap().driver, Driver::Fleet);
+        assert_eq!(preset("open_diurnal").unwrap().driver, Driver::Fleet);
+    }
+
+    #[test]
+    fn traffic_presets_are_open_mode_single_cell_scenarios() {
+        for name in ["open_steady", "flash_crowd", "open_diurnal"] {
+            let spec = preset(name).unwrap();
+            assert!(spec.workload.mode.is_open(), "{name}");
+            assert!(spec.slo.is_some(), "{name}");
+            assert_eq!(spec.cells(false).len(), 1, "{name}");
+            assert_eq!(spec.cells(true).len(), 1, "{name}");
+        }
+        // the degeneracy preset is a single chip with no autoscaler
+        let steady = preset("open_steady").unwrap();
+        assert_eq!(steady.topology.len(), 1);
+        assert!(steady.slo.unwrap().autoscale.is_none());
+        // the stress presets autoscale a 4-chip fleet between 2 and 4
+        for name in ["flash_crowd", "open_diurnal"] {
+            let spec = preset(name).unwrap();
+            assert_eq!(spec.topology.len(), 4, "{name}");
+            let a = spec.slo.unwrap().autoscale.unwrap();
+            assert_eq!((a.min_chips, a.max_chips), (2, 4), "{name}");
+        }
     }
 
     #[test]

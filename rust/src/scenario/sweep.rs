@@ -27,6 +27,9 @@ pub enum SweepAxis {
     /// Fault-arrival intensity: overrides the fault environment's
     /// mean interarrival cycles.
     FaultMean(Knob<Vec<f64>>),
+    /// Open-loop traffic intensity: multiplies the base rate of the
+    /// workload's [`crate::serve::loadgen::RateCurve`].
+    RateScale(Knob<Vec<f64>>),
 }
 
 impl SweepAxis {
@@ -40,6 +43,7 @@ impl SweepAxis {
             SweepAxis::Router(_) => "router",
             SweepAxis::Topology(_) => "topology",
             SweepAxis::FaultMean(_) => "fault_mean",
+            SweepAxis::RateScale(_) => "rate_scale",
         }
     }
 
@@ -52,6 +56,7 @@ impl SweepAxis {
             SweepAxis::Router(p) => p.len(),
             SweepAxis::Topology(k) => k.at(smoke).len(),
             SweepAxis::FaultMean(k) => k.at(smoke).len(),
+            SweepAxis::RateScale(k) => k.at(smoke).len(),
         }
     }
 
@@ -68,6 +73,7 @@ impl SweepAxis {
                     || k.full.iter().chain(k.smoke.iter()).any(|t| t.is_empty())
             }
             SweepAxis::FaultMean(k) => k.full.is_empty() || k.smoke.is_empty(),
+            SweepAxis::RateScale(k) => k.full.is_empty() || k.smoke.is_empty(),
         };
         if empty {
             return Err(ScenarioError::EmptySweep { axis: self.key() });
@@ -110,6 +116,15 @@ impl SweepAxis {
                     return Err(ScenarioError::BadInterarrival);
                 }
             }
+            SweepAxis::RateScale(k) => {
+                if k.full
+                    .iter()
+                    .chain(k.smoke.iter())
+                    .any(|&v| !(v.is_finite() && v > 0.0))
+                {
+                    return Err(ScenarioError::BadRate);
+                }
+            }
             SweepAxis::Router(_) => {}
         }
         Ok(())
@@ -126,6 +141,8 @@ pub struct Cell {
     pub policy: RoutingPolicy,
     /// Fault-intensity override from a `fault_mean` axis.
     pub fault_mean: Option<f64>,
+    /// Rate multiplier from a `rate_scale` axis (open mode only).
+    pub rate_scale: Option<f64>,
     /// `(axis key, value label)` in axis order — the cell's identity
     /// in tables and JSON rows.
     pub labels: Vec<(&'static str, String)>,
@@ -139,6 +156,7 @@ impl Cell {
             max_batch: spec.workload.max_batch,
             policy: spec.router,
             fault_mean: None,
+            rate_scale: None,
             labels: Vec::new(),
         }
     }
@@ -236,6 +254,13 @@ fn apply(axis: &SweepAxis, idx: usize, smoke: bool, base_lanes: usize, cell: Cel
             let mut cell = cell;
             cell.fault_mean = Some(v);
             cell.labels.push(("fault_mean", format!("{v}")));
+            cell
+        }
+        SweepAxis::RateScale(k) => {
+            let v = k.at(smoke)[idx];
+            let mut cell = cell;
+            cell.rate_scale = Some(v);
+            cell.labels.push(("rate_scale", format!("{v}")));
             cell
         }
     }

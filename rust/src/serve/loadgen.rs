@@ -18,6 +18,138 @@ use crate::util::rng::Pcg32;
 /// PRNG stream salt for client streams.
 const CLIENT_STREAM_SALT: u64 = 0x10AD;
 
+/// PRNG stream slot for the open-loop arrival process. The whole
+/// arrival stream is one seeded sequence (there are no clients to
+/// split across), so `(master_seed, OPEN_ARRIVAL_STREAM)` fully
+/// determines every arrival cycle and image index — the open-loop
+/// analogue of the per-client stream-split contract above.
+pub const OPEN_ARRIVAL_STREAM: u64 = 0x0BE4;
+
+/// Arrival-rate curve of an open-loop workload, in requests per
+/// kilocycle of simulated time. Pure spec data: a curve is evaluated
+/// pointwise by [`RateCurve::rate_at`] and never carries hidden state,
+/// so two runs with equal curves offer identical traffic.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum RateCurve {
+    /// Constant arrival rate.
+    Constant { per_kcycle: f64 },
+    /// Day/night swing: `base · (1 + amplitude·sin(2πt/period))`,
+    /// clamped at 0. `amplitude` ∈ [0, 1] keeps the rate nonnegative.
+    Diurnal {
+        base_per_kcycle: f64,
+        amplitude: f64,
+        period_cycles: u64,
+    },
+    /// Constant `base` with a multiplicative spike of `peak_mult`
+    /// inside `[start, start + len)` — the flash-crowd shape.
+    FlashCrowd {
+        base_per_kcycle: f64,
+        peak_mult: f64,
+        start_cycle: u64,
+        len_cycles: u64,
+    },
+}
+
+impl RateCurve {
+    /// The curve's rate at cycle `t`, in requests per kilocycle.
+    pub fn rate_at(&self, t: u64) -> f64 {
+        match *self {
+            RateCurve::Constant { per_kcycle } => per_kcycle,
+            RateCurve::Diurnal { base_per_kcycle, amplitude, period_cycles } => {
+                let phase = (t % period_cycles.max(1)) as f64 / period_cycles.max(1) as f64;
+                (base_per_kcycle * (1.0 + amplitude * (2.0 * std::f64::consts::PI * phase).sin()))
+                    .max(0.0)
+            }
+            RateCurve::FlashCrowd { base_per_kcycle, peak_mult, start_cycle, len_cycles } => {
+                if t >= start_cycle && t < start_cycle.saturating_add(len_cycles) {
+                    base_per_kcycle * peak_mult
+                } else {
+                    base_per_kcycle
+                }
+            }
+        }
+    }
+
+    /// A tight upper bound on the rate over all of time — the thinning
+    /// envelope [`open_arrivals`] samples the homogeneous process at.
+    pub fn max_rate(&self) -> f64 {
+        match *self {
+            RateCurve::Constant { per_kcycle } => per_kcycle,
+            RateCurve::Diurnal { base_per_kcycle, amplitude, .. } => {
+                base_per_kcycle * (1.0 + amplitude.abs())
+            }
+            RateCurve::FlashCrowd { base_per_kcycle, peak_mult, .. } => {
+                base_per_kcycle * peak_mult.max(1.0)
+            }
+        }
+    }
+
+    /// The curve with every rate multiplied by `scale` (the
+    /// `rate_scale` sweep axis).
+    pub fn scaled(&self, scale: f64) -> RateCurve {
+        let mut c = *self;
+        match &mut c {
+            RateCurve::Constant { per_kcycle } => *per_kcycle *= scale,
+            RateCurve::Diurnal { base_per_kcycle, .. } => *base_per_kcycle *= scale,
+            RateCurve::FlashCrowd { base_per_kcycle, .. } => *base_per_kcycle *= scale,
+        }
+        c
+    }
+}
+
+/// One open-loop arrival: a request hitting the front door at `cycle`
+/// asking for eval image `image_idx`. Arrivals never back off — the
+/// property that lets an open-loop run actually overload the fleet.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct OpenArrival {
+    pub cycle: u64,
+    pub image_idx: usize,
+}
+
+/// Sample the full open-loop arrival stream over `[0, horizon)` by
+/// thinning: a homogeneous Poisson process at the curve's
+/// [`RateCurve::max_rate`] envelope, each candidate accepted with
+/// probability `rate_at(t) / max_rate` — the standard exact sampler
+/// for a non-homogeneous Poisson process. Deterministic in
+/// `(seed, stream, curve, horizon, eval_n)`; `max_arrivals` bounds the
+/// stream so a mis-specified rate cannot hang a run.
+pub fn open_arrivals(
+    seed: u64,
+    stream: u64,
+    curve: &RateCurve,
+    horizon_cycles: u64,
+    eval_n: usize,
+    max_arrivals: usize,
+) -> Vec<OpenArrival> {
+    assert!(eval_n >= 1, "need at least one image");
+    let lambda_max = curve.max_rate() / 1_000.0; // per cycle
+    assert!(
+        lambda_max > 0.0 && lambda_max.is_finite(),
+        "open-loop rate curve must have a positive finite peak rate"
+    );
+    let mean_gap = 1.0 / lambda_max;
+    let mut rng = Pcg32::new(seed, stream);
+    let mut out = Vec::new();
+    let mut t = 0.0f64;
+    while out.len() < max_arrivals {
+        let u = rng.f64();
+        t += -mean_gap * (1.0 - u).ln();
+        let cycle = t.ceil() as u64;
+        if cycle >= horizon_cycles {
+            break;
+        }
+        // thinning: accept with probability rate(t)/lambda_max
+        let accept = rng.f64() < curve.rate_at(cycle) / curve.max_rate();
+        if accept {
+            out.push(OpenArrival {
+                cycle,
+                image_idx: rng.below_usize(eval_n),
+            });
+        }
+    }
+    out
+}
+
 /// The closed-loop generator.
 pub struct LoadGen {
     per_client: Vec<Pcg32>,
@@ -130,5 +262,99 @@ mod tests {
         for _ in 0..10 {
             assert_eq!(lg.think(0), 0);
         }
+    }
+
+    #[test]
+    fn open_arrivals_are_deterministic_in_seed_and_stream() {
+        let curve = RateCurve::Constant { per_kcycle: 4.0 };
+        let a = open_arrivals(9, OPEN_ARRIVAL_STREAM, &curve, 200_000, 32, 4_096);
+        let b = open_arrivals(9, OPEN_ARRIVAL_STREAM, &curve, 200_000, 32, 4_096);
+        assert_eq!(a, b);
+        assert!(!a.is_empty());
+        // a different seed or stream slot is a different deterministic process
+        let other_seed = open_arrivals(10, OPEN_ARRIVAL_STREAM, &curve, 200_000, 32, 4_096);
+        assert_ne!(a, other_seed);
+        let other_stream = open_arrivals(9, OPEN_ARRIVAL_STREAM + 1, &curve, 200_000, 32, 4_096);
+        assert_ne!(a, other_stream);
+    }
+
+    #[test]
+    fn open_arrivals_are_ordered_bounded_and_capped() {
+        let curve = RateCurve::Constant { per_kcycle: 50.0 };
+        let evs = open_arrivals(3, OPEN_ARRIVAL_STREAM, &curve, 100_000, 8, 64);
+        assert_eq!(evs.len(), 64, "max_arrivals must cap the stream");
+        let mut last = 0;
+        for e in &evs {
+            assert!(e.cycle >= last, "arrival cycles must be non-decreasing");
+            last = e.cycle;
+            assert!(e.cycle < 100_000);
+            assert!(e.image_idx < 8);
+        }
+        assert!(open_arrivals(3, 0, &curve, 0, 8, 64).is_empty());
+    }
+
+    #[test]
+    fn constant_rate_tracks_the_mean() {
+        // across seeds the realised count approximates rate × horizon
+        let curve = RateCurve::Constant { per_kcycle: 2.0 };
+        let total: usize = (0..100u64)
+            .map(|s| open_arrivals(s, OPEN_ARRIVAL_STREAM, &curve, 100_000, 8, 4_096).len())
+            .sum();
+        let got = total as f64 / 100.0;
+        let expect = 200.0;
+        assert!((got - expect).abs() < expect * 0.1, "mean count {got} vs {expect}");
+    }
+
+    #[test]
+    fn flash_crowd_concentrates_arrivals_in_the_spike() {
+        let curve = RateCurve::FlashCrowd {
+            base_per_kcycle: 0.5,
+            peak_mult: 40.0,
+            start_cycle: 40_000,
+            len_cycles: 20_000,
+        };
+        let evs = open_arrivals(11, OPEN_ARRIVAL_STREAM, &curve, 100_000, 8, 8_192);
+        let in_spike = evs.iter().filter(|e| (40_000..60_000).contains(&e.cycle)).count();
+        assert!(
+            in_spike * 2 > evs.len(),
+            "spike holds 20/21 of the expected mass: {in_spike}/{}",
+            evs.len()
+        );
+        assert!(evs.iter().any(|e| e.cycle < 40_000 || e.cycle >= 60_000));
+    }
+
+    #[test]
+    fn diurnal_rate_swings_and_stays_nonnegative() {
+        let curve = RateCurve::Diurnal {
+            base_per_kcycle: 2.0,
+            amplitude: 1.0,
+            period_cycles: 100_000,
+        };
+        assert!((curve.rate_at(25_000) - 4.0).abs() < 1e-9, "peak at quarter period");
+        assert!(curve.rate_at(75_000).abs() < 1e-9, "trough at three quarters");
+        assert_eq!(curve.max_rate(), 4.0);
+        // thinning still produces a valid, deterministic stream
+        let evs = open_arrivals(5, OPEN_ARRIVAL_STREAM, &curve, 200_000, 8, 4_096);
+        assert!(!evs.is_empty());
+        let peak_half: usize = evs.iter().filter(|e| e.cycle % 100_000 < 50_000).count();
+        assert!(peak_half * 2 > evs.len(), "most arrivals in the high half");
+    }
+
+    #[test]
+    fn scaled_curves_scale_every_shape() {
+        let c = RateCurve::Constant { per_kcycle: 2.0 }.scaled(3.0);
+        assert_eq!(c.rate_at(0), 6.0);
+        let d = RateCurve::Diurnal { base_per_kcycle: 2.0, amplitude: 0.5, period_cycles: 100 }
+            .scaled(2.0);
+        assert_eq!(d.max_rate(), 6.0);
+        let f = RateCurve::FlashCrowd {
+            base_per_kcycle: 1.0,
+            peak_mult: 10.0,
+            start_cycle: 0,
+            len_cycles: 10,
+        }
+        .scaled(0.5);
+        assert_eq!(f.rate_at(5), 5.0);
+        assert_eq!(f.rate_at(20), 0.5);
     }
 }

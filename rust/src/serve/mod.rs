@@ -47,7 +47,7 @@ use std::sync::Arc;
 use anyhow::Result;
 
 use crate::array::Dims;
-use crate::faults::arrival;
+use crate::faults::{arrival, Spatial};
 use crate::inference::masks::LayerMasks;
 use crate::inference::params::ModelParams;
 use crate::inference::Engine;
@@ -71,6 +71,8 @@ pub struct FaultPlan {
     pub fpt_capacity: usize,
     /// Cap on the arrival process.
     pub max_arrivals: usize,
+    /// Spatial model of where arrivals land (random vs clustered).
+    pub spatial: Spatial,
 }
 
 /// Configuration of one serving run. Metrics are a pure function of
@@ -215,12 +217,14 @@ pub fn simulate_timeline(engine: &Engine, cfg: &ServeConfig) -> Timeline {
     let faults = match &cfg.faults {
         None => FaultTimeline::healthy(&geometry),
         Some(plan) => {
-            let arrivals = arrival::sample_arrivals(
+            let arrivals = arrival::sample_arrivals_spatial(
                 cfg.seed,
+                arrival::ARRIVAL_STREAM,
                 cfg.dims,
                 plan.mean_interarrival_cycles,
                 plan.horizon_cycles,
                 plan.max_arrivals,
+                plan.spatial,
             );
             let agent = ScanAgentConfig {
                 dims: cfg.dims,

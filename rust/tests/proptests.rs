@@ -535,6 +535,9 @@ fn prop_worksteal_executor_is_invariant_to_mode_width_and_affinity() {
             windows: 4,
             faults: None,
             lifecycle: hyca::fleet::LifecyclePolicy::NEVER,
+            open_loop: None,
+            admission: None,
+            autoscale: None,
         };
         let timeline = hyca::fleet::simulate_fleet(&engine, &cfg);
         let jobs: Vec<&hyca::serve::BatchJob> = timeline.jobs.iter().map(|j| &j.job).collect();
@@ -584,6 +587,7 @@ fn prop_scenario_spec_round_trips_through_canonical_text() {
     // stable identities.
     use hyca::fleet::RoutingPolicy;
     use hyca::scenario::{Driver, Knob, ScenarioBuilder, ScenarioSpec, SweepAxis};
+    use hyca::serve::loadgen::RateCurve;
     check("scenario canonical round-trip", 150, |g| {
         let serve = g.bool(0.4);
         let name: String = (0..g.usize_in(3, 12))
@@ -669,6 +673,52 @@ fn prop_scenario_spec_round_trips_through_canonical_text() {
                     g.usize_in(1_000, 50_000) as f64,
                 ])));
             }
+            if with_faults && g.bool(0.5) {
+                b = b.spatial(hyca::faults::Spatial::Clustered);
+            }
+            // PR 6 knobs: open-loop mode, SLO/admission, autoscaling —
+            // all must survive the canonical text like everything else
+            if g.bool(0.4) {
+                let curve = match g.usize_in(0, 2) {
+                    0 => RateCurve::Constant { per_kcycle: g.usize_in(1, 20) as f64 },
+                    1 => RateCurve::Diurnal {
+                        base_per_kcycle: g.usize_in(1, 10) as f64,
+                        amplitude: g.usize_in(0, 10) as f64 / 10.0,
+                        period_cycles: g.usize_in(1_000, 100_000) as u64,
+                    },
+                    _ => RateCurve::FlashCrowd {
+                        base_per_kcycle: g.usize_in(1, 10) as f64,
+                        peak_mult: g.usize_in(1, 20) as f64,
+                        start_cycle: g.usize_in(0, 50_000) as u64,
+                        len_cycles: g.usize_in(1_000, 50_000) as u64,
+                    },
+                };
+                let h_full = g.usize_in(10_000, 200_000) as u64;
+                b = b.open_mode(curve, h_full, g.usize_in(5_000, 10_000) as u64);
+                if g.bool(0.4) {
+                    b = b.sweep(SweepAxis::RateScale(Knob::flat(vec![
+                        1.0,
+                        g.usize_in(3, 9) as f64 / 2.0,
+                    ])));
+                }
+            }
+            if g.bool(0.5) {
+                b = b.slo(g.usize_in(1_000, 200_000) as u64).admission(g.bool(0.7));
+                if g.bool(0.5) {
+                    let min = g.usize_in(1, n_chips);
+                    let max = g.usize_in(min, n_chips);
+                    let down = g.usize_in(0, 4);
+                    let up = g.usize_in(down + 1, down + 8);
+                    b = b.autoscale(
+                        min,
+                        max,
+                        up,
+                        down,
+                        g.usize_in(0, 30_000) as u64,
+                        g.usize_in(1_000, 10_000) as u64,
+                    );
+                }
+            }
         }
         let spec = b.build().expect("generated spec must validate");
         let text = spec.to_canonical_string();
@@ -700,6 +750,11 @@ fn prop_one_chip_fleet_degenerates_to_serve() {
                 group_width: 8,
                 fpt_capacity: g.usize_in(1, 8),
                 max_arrivals: g.usize_in(0, 6),
+                spatial: if g.bool(0.5) {
+                    hyca::faults::Spatial::Clustered
+                } else {
+                    hyca::faults::Spatial::Random
+                },
             })
         } else {
             None

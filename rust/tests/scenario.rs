@@ -71,6 +71,7 @@ fn legacy_serve_scenario(seed: u64, smoke: bool, threads: usize) -> ServeConfig 
             group_width: 8,
             fpt_capacity: 8,
             max_arrivals: 6,
+            spatial: hyca::faults::Spatial::Random,
         }),
     }
 }
@@ -100,6 +101,9 @@ fn legacy_fleet_cell(
         windows: 4,
         faults: None,
         lifecycle: LifecyclePolicy::NEVER,
+        open_loop: None,
+        admission: None,
+        autoscale: None,
     }
 }
 
@@ -125,8 +129,12 @@ fn legacy_fleet_scenario(seed: u64, smoke: bool, threads: usize) -> FleetConfig 
             group_width: 8,
             fpt_capacity: 8,
             max_arrivals: 6,
+            spatial: hyca::faults::Spatial::Random,
         }),
         lifecycle: LifecyclePolicy::single(2),
+        open_loop: None,
+        admission: None,
+        autoscale: None,
     }
 }
 
@@ -336,6 +344,9 @@ fn spec_files_and_registry_agree_on_the_cli_surface() {
             "degraded_continuity",
             "mixed_fleet",
             "uneven_faults",
+            "open_steady",
+            "flash_crowd",
+            "open_diurnal",
         ]
     );
     // parse errors carry line numbers for CLI diagnostics

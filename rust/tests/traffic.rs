@@ -1,0 +1,169 @@
+//! Open-loop traffic acceptance tests (`repro traffic`, DESIGN.md §9).
+//!
+//! 1. **Golden determinism**: `BENCH_traffic.json` is a pure function
+//!    of the master seed — byte-identical at any `--workers` value and
+//!    across repeated runs.
+//! 2. **Degeneracy**: the `open_steady` preset (one chip far below
+//!    saturation) recovers the closed-loop contract — zero shed,
+//!    accuracy exactly 1.0 on everything offered.
+//! 3. **Admission golden**: `flash_crowd` overloads a 4-chip fleet
+//!    5× past capacity; the controller sheds, every *admitted* request
+//!    still completes with accuracy 1.0, and SLO attainment on the
+//!    admitted set stays high.
+//! 4. **Flap guard**: the autoscaler's scale steps respect the dwell
+//!    and never leave the `[min_chips, max_chips]` band.
+
+use hyca::coordinator::{exp_traffic, RunOpts};
+use hyca::fleet::{self, FleetEventKind};
+use hyca::inference::Engine;
+use std::sync::Arc;
+
+const SEED: u64 = 0xC0FFEE;
+
+fn opts(seed: u64, threads: usize) -> RunOpts {
+    RunOpts {
+        seed,
+        threads,
+        out_dir: std::env::temp_dir().join("hyca_traffic_results"),
+        builtin_model: true,
+        ..RunOpts::default()
+    }
+}
+
+#[test]
+fn bench_json_is_byte_identical_at_any_worker_count() {
+    let narrow = exp_traffic::bench_json(&opts(SEED, 1), true).unwrap();
+    let wide = exp_traffic::bench_json(&opts(SEED, 8), true).unwrap();
+    assert_eq!(narrow, wide, "worker count leaked into the traffic metrics");
+    let again = exp_traffic::bench_json(&opts(SEED, 1), true).unwrap();
+    assert_eq!(narrow, again);
+    // and the seed actually matters: a different arrival stream
+    let other = exp_traffic::bench_json(&opts(0xBEEF, 1), true).unwrap();
+    assert_ne!(narrow, other);
+}
+
+#[test]
+fn bench_json_has_the_documented_schema() {
+    let json = exp_traffic::bench_json(&opts(SEED, 2), true).unwrap();
+    for key in [
+        "\"schema\": \"hyca-traffic-bench-v1\"",
+        "\"scenarios\": [",
+        "\"scenario\": \"open_steady\"",
+        "\"scenario\": \"flash_crowd\"",
+        "\"scenario\": \"open_diurnal\"",
+        "\"offered\":",
+        "\"admitted\":",
+        "\"shed_rate\":",
+        "\"goodput_imgs_per_mcycle\":",
+        "\"slo_attainment\":",
+        "\"active_chips\": [[0, ",
+        "\"spec_hash\":",
+    ] {
+        assert!(json.contains(key), "missing {key} in:\n{json}");
+    }
+    // everything is simulated time — wall-clock fields are forbidden
+    for forbidden in ["seconds", "wall", "ns_per"] {
+        assert!(!json.contains(forbidden), "wall-clock field {forbidden:?}");
+    }
+}
+
+#[test]
+fn open_steady_degenerates_to_the_closed_loop_contract() {
+    // one chip at ~27% utilisation: the admission controller never
+    // fires and every offered request completes correctly — open mode
+    // at low rate is behaviourally the closed loop
+    let engine = Arc::new(Engine::builtin());
+    let cfg = exp_traffic::traffic_config("open_steady", SEED, true, 2);
+    assert_eq!(cfg.chips.len(), 1);
+    assert!(cfg.admission.is_some(), "open_steady carries its SLO");
+    let report = fleet::run(&engine, &cfg).unwrap();
+    assert!(report.offered > 0, "the horizon must produce arrivals");
+    assert_eq!(report.shed, 0, "under-load must never shed");
+    assert_eq!(report.total_requests, report.offered);
+    assert_eq!(report.accuracy, 1.0, "admitted work is never degraded");
+    assert_eq!(report.slo_attainment, Some(1.0), "under-load meets the SLO");
+    assert_eq!(report.active_chips, vec![(0, 1)], "no autoscaler, no steps");
+}
+
+#[test]
+fn flash_crowd_sheds_under_overload_without_degrading_admitted_work() {
+    let engine = Arc::new(Engine::builtin());
+    let cfg = exp_traffic::traffic_config("flash_crowd", SEED, true, 2);
+    let report = fleet::run(&engine, &cfg).unwrap();
+    // the spike is ~5× fleet capacity: shedding is load-bearing
+    assert!(report.shed > 0, "flash crowd must shed");
+    assert_eq!(report.total_requests + report.shed, report.offered);
+    assert!(report.total_requests > 0, "base load must be admitted");
+    assert!(report.shed_rate() > 0.0 && report.shed_rate() < 1.0);
+    // the whole point of admission control: what gets in, gets served
+    // correctly and (overwhelmingly) on time
+    assert_eq!(report.accuracy, 1.0, "admitted work is never degraded");
+    let att = report.slo_attainment.expect("SLO configured");
+    assert!(
+        att >= 0.8,
+        "admitted requests must overwhelmingly meet the 60k-cycle SLO \
+         (attainment {att:.4})"
+    );
+}
+
+#[test]
+fn autoscaler_tracks_the_spike_and_never_flaps() {
+    let engine = Arc::new(Engine::builtin());
+    let cfg = exp_traffic::traffic_config("flash_crowd", SEED, true, 2);
+    let auto = cfg.autoscale.expect("flash_crowd autoscales");
+    let report = fleet::run(&engine, &cfg).unwrap();
+    // trajectory starts at min_chips and grows under the spike
+    assert_eq!(report.active_chips[0], (0, auto.min_chips));
+    let scales: Vec<_> = report
+        .events
+        .iter()
+        .filter(|e| {
+            matches!(e.kind, FleetEventKind::ScaledUp | FleetEventKind::ScaledDown)
+        })
+        .collect();
+    assert!(
+        scales.iter().any(|e| e.kind == FleetEventKind::ScaledUp),
+        "the spike must trigger a scale-up"
+    );
+    // flap guard: consecutive decisions are at least a dwell apart
+    for pair in scales.windows(2) {
+        assert!(
+            pair[1].cycle - pair[0].cycle >= auto.dwell_cycles,
+            "scale events at {} and {} violate the {}-cycle dwell",
+            pair[0].cycle,
+            pair[1].cycle,
+            auto.dwell_cycles
+        );
+    }
+    // the trajectory never leaves the configured band
+    for &(_, n) in &report.active_chips {
+        assert!(
+            (auto.min_chips..=auto.max_chips).contains(&n),
+            "active count {n} outside [{}, {}]",
+            auto.min_chips,
+            auto.max_chips
+        );
+    }
+}
+
+#[test]
+fn open_arrival_streams_replay_and_scale_with_the_rate() {
+    use hyca::serve::loadgen::{open_arrivals, RateCurve, OPEN_ARRIVAL_STREAM};
+    let curve = RateCurve::Constant { per_kcycle: 2.0 };
+    let a = open_arrivals(SEED, OPEN_ARRIVAL_STREAM, &curve, 100_000, 64, 4_096);
+    let b = open_arrivals(SEED, OPEN_ARRIVAL_STREAM, &curve, 100_000, 64, 4_096);
+    assert_eq!(a, b, "arrival stream must replay from its seed");
+    assert!(!a.is_empty());
+    assert!(a.windows(2).all(|w| w[0].cycle <= w[1].cycle), "arrivals sorted");
+    assert!(a.iter().all(|x| x.cycle < 100_000 && x.image_idx < 64));
+    // doubling the rate roughly doubles the arrivals (Poisson means:
+    // 200 vs 400 — the 3σ bands don't overlap)
+    let double =
+        open_arrivals(SEED, OPEN_ARRIVAL_STREAM, &curve.scaled(2.0), 100_000, 64, 4_096);
+    assert!(
+        double.len() > a.len() + a.len() / 2,
+        "rate scaling is dead: {} vs {}",
+        double.len(),
+        a.len()
+    );
+}
