@@ -432,6 +432,21 @@ pub fn scenario_report(opts: &RunOpts, smoke: bool) -> Result<FleetReport> {
     fleet::run(&engine, &scenario_config(opts.seed, smoke, opts.threads))
 }
 
+/// Chrome-trace export of the `degraded_continuity` scenario — the
+/// `--trace` target of `repro fleet` (per-chip batch spans, drain/
+/// re-admit lifecycle spans, fault/scan/remap instants and re-shard
+/// markers, in simulated cycles; loadable at ui.perfetto.dev).
+pub fn trace_json(opts: &RunOpts, smoke: bool) -> Result<String> {
+    let engine = Arc::new(Engine::builtin());
+    let cfg = scenario_config(opts.seed, smoke, opts.threads);
+    let mut sink = crate::obs::MemorySink::default();
+    let _report = fleet::run_traced(&engine, &cfg, &mut sink)?;
+    Ok(crate::obs::trace_export::chrome_trace_json(
+        &sink.events,
+        "fleet/degraded_continuity",
+    ))
+}
+
 impl Experiment for FleetExp {
     fn id(&self) -> &'static str {
         "fleet"

@@ -241,6 +241,18 @@ pub fn bench_json(opts: &RunOpts, smoke: bool) -> Result<String> {
     Ok(grid_json(opts.seed, smoke, &grid_results))
 }
 
+/// Chrome-trace export of the `burst` fault scenario — the `--trace`
+/// target of `repro serve` (request spans, batch spans, fault/scan/
+/// remap instants on chip 0's fault track, in simulated cycles;
+/// loadable at ui.perfetto.dev).
+pub fn trace_json(opts: &RunOpts, smoke: bool) -> Result<String> {
+    let engine = Arc::new(Engine::builtin());
+    let cfg = scenario_config(opts.seed, smoke, opts.threads);
+    let mut sink = crate::obs::MemorySink::default();
+    let _report = serve::run_traced(&engine, &cfg, &mut sink)?;
+    Ok(crate::obs::trace_export::chrome_trace_json(&sink.events, "serve/burst"))
+}
+
 /// The fault scenario alone (used by `rust/tests/serve.rs`).
 pub fn scenario_report(opts: &RunOpts, smoke: bool) -> Result<ServeReport> {
     let engine = Arc::new(Engine::builtin());

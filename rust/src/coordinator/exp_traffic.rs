@@ -16,9 +16,15 @@
 //! Like the other serving drivers this one is thin — every preset
 //! lowers through `scenario::lower_fleet`, runs on the **builtin**
 //! engine, and the machine-readable baseline (`BENCH_traffic.json`,
-//! schema `hyca-traffic-bench-v1`) is a pure function of the master
+//! schema `hyca-traffic-bench-v2`) is a pure function of the master
 //! seed: byte-identical at any `--workers` value (pinned by
-//! `rust/tests/traffic.rs`).
+//! `rust/tests/traffic.rs`). Since PR 7 every preset runs traced
+//! (`fleet::run_traced` + [`crate::obs`]): the `scenarios` rows keep
+//! their v1 bytes while a `timeseries` section samples the windowed
+//! collector — so flash-crowd ramps are visible *between* the
+//! autoscale decisions the legacy `active_chips` trajectory records —
+//! and `--trace <path>` exports the flash_crowd run as a
+//! Perfetto-loadable Chrome trace.
 
 use std::sync::Arc;
 
@@ -26,6 +32,7 @@ use super::{Experiment, RunOpts};
 use crate::fleet::metrics::FleetReport;
 use crate::fleet::{self, FleetConfig};
 use crate::inference::Engine;
+use crate::obs::{timeseries, trace_export, MemorySink, TimeSeries};
 use crate::scenario::{self, Cell, ScenarioSpec};
 use crate::util::table::{f, Table};
 use anyhow::Result;
@@ -48,20 +55,37 @@ pub fn traffic_config(name: &str, seed: u64, smoke: bool, threads: usize) -> Fle
     scenario::lower_fleet(&spec, &Cell::base(&spec), smoke, seed, threads)
 }
 
-fn run_presets(opts: &RunOpts, smoke: bool) -> Result<Vec<(String, String, FleetReport)>> {
+/// One preset's results: the legacy report plus the windowed series
+/// collected from its deterministic trace stream.
+struct PresetRun {
+    name: String,
+    hash: String,
+    report: FleetReport,
+    series: TimeSeries,
+}
+
+fn run_presets(opts: &RunOpts, smoke: bool) -> Result<Vec<PresetRun>> {
     let engine = Arc::new(Engine::builtin());
     let mut out = Vec::new();
     for name in PRESETS {
         let spec = traffic_spec(name);
         let hash = spec.spec_hash();
         let cfg = scenario::lower_fleet(&spec, &Cell::base(&spec), smoke, opts.seed, opts.threads);
-        let report = fleet::run(&engine, &cfg)?;
-        out.push((name.to_string(), hash, report));
+        let mut sink = MemorySink::default();
+        let report = fleet::run_traced(&engine, &cfg, &mut sink)?;
+        let series = timeseries::collect(
+            &sink.events,
+            report.total_cycles,
+            timeseries::DEFAULT_WINDOWS,
+            report.chips,
+            report.active_chips[0].1,
+        );
+        out.push(PresetRun { name: name.to_string(), hash, report, series });
     }
     Ok(out)
 }
 
-fn traffic_table(results: &[(String, String, FleetReport)]) -> Table {
+fn traffic_table(results: &[PresetRun]) -> Table {
     let mut t = Table::new(
         "open-loop traffic — offered vs admitted under admission \
          control + autoscaling, metrics in simulated cycles \
@@ -79,9 +103,10 @@ fn traffic_table(results: &[(String, String, FleetReport)]) -> Table {
             "scale_steps",
         ],
     );
-    for (name, _, r) in results {
+    for run in results {
+        let r = &run.report;
         t.push_row(vec![
-            name.clone(),
+            run.name.clone(),
             r.chips.to_string(),
             r.offered.to_string(),
             r.total_requests.to_string(),
@@ -113,7 +138,8 @@ fn trajectory_table(name: &str, r: &FleetReport) -> Table {
 /// One machine-readable row of `BENCH_traffic.json`. The
 /// `active_chips` trajectory is inlined as `[[cycle, n], ...]` so the
 /// autoscaler's whole decision history is part of the byte-compared
-/// baseline.
+/// baseline. **Byte-frozen since v1** — the windowed view lives in the
+/// separate `timeseries` section.
 fn json_row(name: &str, hash: &str, r: &FleetReport, sep: &str) -> String {
     let trajectory: Vec<String> = r
         .active_chips
@@ -142,16 +168,26 @@ fn json_row(name: &str, hash: &str, r: &FleetReport, sep: &str) -> String {
     )
 }
 
-fn traffic_json(seed: u64, smoke: bool, results: &[(String, String, FleetReport)]) -> String {
+fn traffic_json(seed: u64, smoke: bool, results: &[PresetRun]) -> String {
     let mut s = String::new();
     s.push_str("{\n");
-    s.push_str("  \"schema\": \"hyca-traffic-bench-v1\",\n");
+    s.push_str("  \"schema\": \"hyca-traffic-bench-v2\",\n");
     s.push_str(&format!("  \"seed\": {seed},\n"));
     s.push_str(&format!("  \"smoke\": {smoke},\n"));
     s.push_str("  \"scenarios\": [\n");
-    for (i, (name, hash, r)) in results.iter().enumerate() {
+    for (i, run) in results.iter().enumerate() {
         let sep = if i + 1 == results.len() { "" } else { "," };
-        s.push_str(&json_row(name, hash, r, sep));
+        s.push_str(&json_row(&run.name, &run.hash, &run.report, sep));
+    }
+    s.push_str("  ],\n");
+    // per-window series from the deterministic trace stream (obs
+    // collector, DESIGN.md §10) — same determinism contract as the
+    // rows above: a pure function of the seed, byte-identical at any
+    // --workers value
+    s.push_str("  \"timeseries\": [\n");
+    for (i, run) in results.iter().enumerate() {
+        let sep = if i + 1 == results.len() { "" } else { "," };
+        s.push_str(&timeseries::render_json(&run.series, &run.name, sep));
     }
     s.push_str("  ]\n}\n");
     s
@@ -162,9 +198,9 @@ pub fn run_full(opts: &RunOpts, smoke: bool) -> Result<(Vec<Table>, String)> {
     let results = run_presets(opts, smoke)?;
     let json = traffic_json(opts.seed, smoke, &results);
     let mut tables = vec![traffic_table(&results)];
-    for (name, _, r) in &results {
-        if r.active_chips.len() > 1 {
-            tables.push(trajectory_table(name, r));
+    for run in &results {
+        if run.report.active_chips.len() > 1 {
+            tables.push(trajectory_table(&run.name, &run.report));
         }
     }
     Ok((tables, json))
@@ -175,6 +211,18 @@ pub fn run_full(opts: &RunOpts, smoke: bool) -> Result<(Vec<Table>, String)> {
 pub fn bench_json(opts: &RunOpts, smoke: bool) -> Result<String> {
     let results = run_presets(opts, smoke)?;
     Ok(traffic_json(opts.seed, smoke, &results))
+}
+
+/// Chrome-trace export of the `flash_crowd` preset — the `--trace`
+/// target of `repro traffic`. Shed instants, autoscale decisions,
+/// batch spans and chip-lifecycle spans, all in simulated cycles;
+/// loadable at ui.perfetto.dev.
+pub fn trace_json(opts: &RunOpts, smoke: bool) -> Result<String> {
+    let engine = Arc::new(Engine::builtin());
+    let cfg = traffic_config("flash_crowd", opts.seed, smoke, opts.threads);
+    let mut sink = MemorySink::default();
+    let _report = fleet::run_traced(&engine, &cfg, &mut sink)?;
+    Ok(trace_export::chrome_trace_json(&sink.events, "traffic/flash_crowd"))
 }
 
 impl Experiment for TrafficExp {

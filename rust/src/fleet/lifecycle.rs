@@ -195,6 +195,21 @@ impl Lifecycle {
             .map(|&(s, e)| e.min(to).saturating_sub(s.max(from)))
             .sum()
     }
+
+    /// Defense in depth for the fleet's flight recorder: the first
+    /// closed drain episode shorter than the policy's minimum dwell,
+    /// if any. [`Lifecycle::with_policy`] guarantees `None` by
+    /// construction (re-admits are deferred to `start + min_dwell`),
+    /// so `Some` means the precomputed health history is corrupt —
+    /// `simulate_fleet` dumps its recorder and panics on it. Episodes
+    /// that never recover (`end == u64::MAX`) are not violations, and
+    /// a disabled policy (`min_dwell_cycles == 0`) never trips.
+    pub fn dwell_violation(&self) -> Option<(u64, u64)> {
+        self.drained
+            .iter()
+            .copied()
+            .find(|&(s, e)| e != u64::MAX && e - s < self.policy.min_dwell_cycles)
+    }
 }
 
 #[cfg(test)]
@@ -392,5 +407,22 @@ mod tests {
             LifecyclePolicy { drain_enter: 1, drain_exit: 1, min_dwell_cycles: 50 },
         );
         assert_eq!(l.drained_intervals(), &[(100, 150), (1_000, 1_050)]);
+    }
+
+    #[test]
+    fn dwell_violation_is_none_by_construction() {
+        // every shape of history the builder can produce honors the
+        // dwell: short repairs are extended, never-recovered episodes
+        // are exempt, disabled policies never trip
+        let ev = [arrive(100, 0, 0), detect(150, 0, 0)];
+        let dwelled = Lifecycle::with_policy(
+            &ev,
+            LifecyclePolicy { drain_enter: 1, drain_exit: 1, min_dwell_cycles: 200 },
+        );
+        assert_eq!(dwelled.dwell_violation(), None);
+        let forever = Lifecycle::new(&[arrive(50, 0, 0)], 1);
+        assert_eq!(forever.dwell_violation(), None, "open episodes are exempt");
+        assert_eq!(Lifecycle::always_healthy().dwell_violation(), None);
+        assert_eq!(Lifecycle::new(&ev, 1).dwell_violation(), None, "zero dwell never trips");
     }
 }

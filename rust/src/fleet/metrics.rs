@@ -293,14 +293,18 @@ impl FleetReport {
 }
 
 /// Combine the simulated fleet timeline with the executor's
-/// predictions. `per_chip_steals` is the executor's per-chip
-/// stolen-job count (`None` = legacy path, reported as zeros).
+/// predictions. `counters` is the obs counter registry
+/// ([`crate::obs::Counters`]): `executor_steals/chip{k}` feeds
+/// `ChipStat::executor_steals` (untouched keys read as 0, so an empty
+/// registry reproduces the legacy zero reporting). Steal counts come
+/// from the wall-clock domain and stay excluded from
+/// [`FleetReport::digest`] and every byte-compared bench section.
 pub fn assemble(
     engine: &Engine,
     cfg: &FleetConfig,
     timeline: FleetTimeline,
     preds: Vec<Vec<usize>>,
-    per_chip_steals: Option<Vec<u64>>,
+    counters: &crate::obs::Counters,
 ) -> FleetReport {
     assert_eq!(preds.len(), timeline.jobs.len(), "one result per job");
     let n = timeline.requests.len();
@@ -366,9 +370,6 @@ pub fn assemble(
         cluster.merge(h);
     }
     debug_assert_eq!(cluster.count() as usize, n, "merge must preserve counts");
-    if let Some(steals) = &per_chip_steals {
-        assert_eq!(steals.len(), n_chips, "one steal counter per chip");
-    }
     let per_chip: Vec<ChipStat> = timeline
         .chip_state
         .iter()
@@ -385,7 +386,7 @@ pub fn assemble(
             drains: c.lifecycle.drains(),
             drained_cycles: c.lifecycle.drained_overlap(0, timeline.total_cycles),
             nominal_imgs_per_mcycle: 1e6 / c.cost.per_image_cycles() as f64,
-            executor_steals: per_chip_steals.as_ref().map_or(0, |s| s[k]),
+            executor_steals: counters.get(&crate::obs::steal_key(k)),
         })
         .collect();
     let executor_steals = per_chip.iter().map(|c| c.executor_steals).sum();
@@ -636,6 +637,9 @@ mod tests {
         assert!(digest.contains("slo target=40000"));
         assert!(digest.contains("shed_rate=0."));
     }
+
+    #[test]
+    fn executor_steals_flow_through_the_counter_registry_not_the_digest() {
         let engine = Arc::new(crate::inference::Engine::builtin());
         let report = run(&engine, &cfg(3, RoutingPolicy::RoundRobin)).unwrap();
         let per_chip: u64 = report.per_chip.iter().map(|c| c.executor_steals).sum();
@@ -643,7 +647,7 @@ mod tests {
         // nondeterministic data must not leak into the byte-compared
         // rendering — the digest never mentions steals
         assert!(!report.digest().contains("steal"));
-        // the legacy path reports zeros
+        // an empty registry reproduces the legacy zero reporting
         let c = cfg(2, RoutingPolicy::RoundRobin);
         let timeline = crate::fleet::simulate_fleet(&engine, &c);
         let preds: Vec<Vec<usize>> = timeline
@@ -655,8 +659,27 @@ mod tests {
                     .unwrap()
             })
             .collect();
-        let legacy = assemble(&engine, &c, timeline, preds, None);
+        let legacy = assemble(&engine, &c, timeline, preds, &crate::obs::Counters::new());
         assert_eq!(legacy.executor_steals, 0);
         assert!(legacy.per_chip.iter().all(|ch| ch.executor_steals == 0));
+        // a populated registry lands on the right chip, and only there
+        let timeline2 = crate::fleet::simulate_fleet(&engine, &c);
+        let preds2: Vec<Vec<usize>> = timeline2
+            .jobs
+            .iter()
+            .map(|j| {
+                engine
+                    .predict_batch_by_index(&j.job.image_idxs, &j.job.masks)
+                    .unwrap()
+            })
+            .collect();
+        let mut counters = crate::obs::Counters::new();
+        counters.add(&crate::obs::steal_key(1), 3);
+        let with = assemble(&engine, &c, timeline2, preds2, &counters);
+        assert_eq!(with.per_chip[0].executor_steals, 0);
+        assert_eq!(with.per_chip[1].executor_steals, 3);
+        assert_eq!(with.executor_steals, 3);
+        // same inputs, different registries: the digest is untouched
+        assert_eq!(with.digest(), legacy.digest());
     }
 }

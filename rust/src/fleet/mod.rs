@@ -64,6 +64,9 @@ use anyhow::Result;
 
 use crate::faults::Coord;
 use crate::inference::Engine;
+use crate::obs::{
+    recorder, steal_key, Counters, FlightRecorder, NullSink, Probe, TraceEvent, TraceSink,
+};
 use crate::serve::executor::{self, ExecMode};
 use crate::serve::loadgen::{self, RateCurve};
 use crate::serve::scan_agent::EventKind;
@@ -318,6 +321,7 @@ fn reshard(
     heap: &mut BinaryHeap<Reverse<(u64, u8, u64)>>,
     t: u64,
     max_wait_cycles: u64,
+    probe: &mut Probe,
 ) {
     if !(0..chips.len()).any(|k| active[k] && chips[k].healthy_at(t)) {
         return; // nowhere better to go — degraded continuity serves in place
@@ -335,6 +339,7 @@ fn reshard(
             chips[k].assigned -= 1;
             let target = route(router, chips, &candidates, t);
             chips[target].batcher.push(t, rid);
+            probe.emit(t, TraceEvent::RequestReshard { id: rid, from: k, to: target });
             heap.push(Reverse((t + max_wait_cycles, EV_BATCH_DEADLINE, rid as u64)));
         }
     }
@@ -344,6 +349,22 @@ fn reshard(
 /// in cycle time. Pure: depends only on `engine`'s model/eval data and
 /// `cfg` (not on `cfg.executor_threads`).
 pub fn simulate_fleet(engine: &Engine, cfg: &FleetConfig) -> FleetTimeline {
+    let mut rec = FlightRecorder::new(recorder::DEFAULT_CAPACITY);
+    simulate_fleet_traced(engine, cfg, &mut Probe { sink: &mut NullSink, rec: &mut rec })
+}
+
+/// [`simulate_fleet`] with telemetry: every discrete-event call site —
+/// admission, routing, batching, lane service, drain/re-admit,
+/// re-sharding, autoscale ticks — reports to `probe` (cycle-stamped,
+/// deterministic; see [`crate::obs`]). The returned timeline is
+/// identical to the untraced path; the probe's flight recorder is
+/// dumped to stderr when an invariant trips (queue deadlock watchdog,
+/// lifecycle dwell violation).
+pub fn simulate_fleet_traced(
+    engine: &Engine,
+    cfg: &FleetConfig,
+    probe: &mut Probe,
+) -> FleetTimeline {
     assert!(!cfg.chips.is_empty(), "need at least one chip");
     assert!(cfg.total_requests >= 1, "need at least one request");
     if cfg.open_loop.is_none() {
@@ -372,6 +393,23 @@ pub fn simulate_fleet(engine: &Engine, cfg: &FleetConfig) -> FleetTimeline {
             )
         })
         .collect();
+    for (k, chip) in chips.iter().enumerate() {
+        // dwell invariant: `Lifecycle::with_policy` defers re-admits to
+        // `start + min_dwell`, so a short closed episode means the
+        // precomputed health history is corrupt — dump and stop before
+        // the corrupt lifecycle drives routing decisions
+        if let Some((s, e)) = chip.lifecycle.dwell_violation() {
+            eprintln!(
+                "{}",
+                probe.rec.dump(&format!(
+                    "lifecycle dwell violation on chip {k}: episode [{s}, {e}) is shorter \
+                     than the minimum dwell"
+                ))
+            );
+            panic!("lifecycle dwell invariant violated on chip {k}");
+        }
+        crate::serve::emit_fault_history(probe, k, &chip.faults.events);
+    }
 
     let mut gen = crate::serve::loadgen::LoadGen::new(
         cfg.seed,
@@ -456,6 +494,7 @@ pub fn simulate_fleet(engine: &Engine, cfg: &FleetConfig) -> FleetTimeline {
                     best > adm.target_latency_cycles
                 });
                 if shed {
+                    probe.emit(t, TraceEvent::RequestShed { seq: shed_cycles.len() });
                     shed_cycles.push(t);
                 } else {
                     let id = requests.len();
@@ -471,6 +510,7 @@ pub fn simulate_fleet(engine: &Engine, cfg: &FleetConfig) -> FleetTimeline {
                     });
                     let target = route(&mut router, &mut chips, &candidates, t);
                     chips[target].batcher.push(t, id);
+                    probe.emit(t, TraceEvent::RequestEnqueue { id, chip: target });
                     pending_total += 1;
                     max_pending = max_pending.max(pending_total);
                     assert!(
@@ -501,6 +541,7 @@ pub fn simulate_fleet(engine: &Engine, cfg: &FleetConfig) -> FleetTimeline {
                     let candidates = admissible(&chips, &active, t);
                     let target = route(&mut router, &mut chips, &candidates, t);
                     chips[target].batcher.push(t, id);
+                    probe.emit(t, TraceEvent::RequestEnqueue { id, chip: target });
                     pending_total += 1;
                     max_pending = max_pending.max(pending_total);
                     assert!(
@@ -517,9 +558,15 @@ pub fn simulate_fleet(engine: &Engine, cfg: &FleetConfig) -> FleetTimeline {
             EV_LANE_FREE => {
                 let (chip, lane) = ((key >> 32) as usize, (key & 0xFFFF_FFFF) as usize);
                 chips[chip].complete_lane(lane);
+                probe.emit(t, TraceEvent::LaneFree { chip, lane });
             }
-            EV_CHIP_DRAIN | EV_CHIP_READMIT => {
-                reshard(&mut router, &mut chips, &active, &mut heap, t, cfg.max_wait_cycles);
+            EV_CHIP_DRAIN => {
+                probe.emit(t, TraceEvent::ChipDrain { chip: key as usize });
+                reshard(&mut router, &mut chips, &active, &mut heap, t, cfg.max_wait_cycles, probe);
+            }
+            EV_CHIP_READMIT => {
+                probe.emit(t, TraceEvent::ChipReadmit { chip: key as usize });
+                reshard(&mut router, &mut chips, &active, &mut heap, t, cfg.max_wait_cycles, probe);
             }
             EV_SCALE_TICK => {
                 let a = cfg.autoscale.as_ref().expect("tick only armed with a policy");
@@ -533,12 +580,14 @@ pub fn simulate_fleet(engine: &Engine, cfg: &FleetConfig) -> FleetTimeline {
                 let recent_shed = shed_cycles.len() - shed_seen_by_tick;
                 shed_seen_by_tick = shed_cycles.len();
                 let per = (outstanding + recent_shed) / n_active.max(1);
+                probe.emit(t, TraceEvent::AutoscaleTick { active: n_active, pressure: per });
                 if t.saturating_sub(last_scale) >= a.dwell_cycles {
                     if per > a.up_pending_per_chip && n_active < a.max_chips.min(chips.len()) {
                         // activate the lowest-index spare chip
                         if let Some(k) = (0..chips.len()).find(|&k| !active[k]) {
                             active[k] = true;
                             last_scale = t;
+                            probe.emit(t, TraceEvent::ScaleUp { chip: k });
                             scale_events.push(FleetEvent {
                                 cycle: t,
                                 chip: k,
@@ -555,6 +604,7 @@ pub fn simulate_fleet(engine: &Engine, cfg: &FleetConfig) -> FleetTimeline {
                             if rest_serves {
                                 active[k] = false;
                                 last_scale = t;
+                                probe.emit(t, TraceEvent::ScaleDown { chip: k });
                                 scale_events.push(FleetEvent {
                                     cycle: t,
                                     chip: k,
@@ -567,6 +617,7 @@ pub fn simulate_fleet(engine: &Engine, cfg: &FleetConfig) -> FleetTimeline {
                                     &mut heap,
                                     t,
                                     cfg.max_wait_cycles,
+                                    probe,
                                 );
                             }
                         }
@@ -609,6 +660,10 @@ pub fn simulate_fleet(engine: &Engine, cfg: &FleetConfig) -> FleetTimeline {
                     Arc::new(epoch_masks.with_fc_rows(b))
                 };
                 let job_id = jobs.len();
+                probe.emit(
+                    start,
+                    TraceEvent::BatchFormed { batch: job_id, chip: k, lane, size: b },
+                );
                 let mut image_idxs = Vec::with_capacity(b);
                 for (slot, (_, rid)) in batch.iter().enumerate() {
                     let client = {
@@ -620,6 +675,16 @@ pub fn simulate_fleet(engine: &Engine, cfg: &FleetConfig) -> FleetTimeline {
                         image_idxs.push(r.image_idx);
                         r.client
                     };
+                    probe.emit(
+                        start,
+                        TraceEvent::RequestDispatch { id: *rid, chip: k, batch: job_id },
+                    );
+                    // completion is fixed at dispatch by the cycle
+                    // model, so the complete event carries the batch end
+                    probe.emit(
+                        end,
+                        TraceEvent::RequestComplete { id: *rid, chip: k, batch: job_id },
+                    );
                     // only the closed loop re-arms a client; open-loop
                     // arrivals were all scheduled up front
                     if cfg.open_loop.is_none() {
@@ -662,11 +727,19 @@ pub fn simulate_fleet(engine: &Engine, cfg: &FleetConfig) -> FleetTimeline {
             "closed loop must issue every budgeted request"
         );
     }
-    assert!(
-        requests.iter().all(|r| r.complete_cycle > r.enqueue_cycle),
-        "fleet stalled: requests left unserved (every chip drained with \
-         unrepairable faults?) — degraded continuity should prevent this"
-    );
+    // queue deadlock watchdog: a request the loop never dispatched
+    // means the routing/lifecycle interplay wedged — dump the flight
+    // recorder so the last events before the wedge are visible
+    if requests.iter().any(|r| r.complete_cycle <= r.enqueue_cycle) {
+        eprintln!(
+            "{}",
+            probe.rec.dump("fleet deadlock watchdog: request(s) left unserved")
+        );
+        panic!(
+            "fleet stalled: requests left unserved (every chip drained with \
+             unrepairable faults?) — degraded continuity should prevent this"
+        );
+    }
     let total_cycles = jobs.iter().map(|j| j.job.end_cycle).max().unwrap_or(0);
 
     // merge per-chip fault events and lifecycle transitions
@@ -721,7 +794,22 @@ pub fn simulate_fleet(engine: &Engine, cfg: &FleetConfig) -> FleetTimeline {
 /// in `ChipStat::executor_steals` — observability only, excluded from
 /// every byte-compared metric.
 pub fn run(engine: &Arc<Engine>, cfg: &FleetConfig) -> Result<metrics::FleetReport> {
-    let timeline = simulate_fleet(engine, cfg);
+    run_traced(engine, cfg, &mut NullSink)
+}
+
+/// [`run`] with telemetry: the deterministic event stream flows to
+/// `sink` (see [`crate::obs`]); executor steals reach only the sink's
+/// nondeterministic channel and the [`Counters`] registry that feeds
+/// `ChipStat::executor_steals`. Tracing never changes the report —
+/// property-tested in `rust/tests/obs.rs`.
+pub fn run_traced(
+    engine: &Arc<Engine>,
+    cfg: &FleetConfig,
+    sink: &mut dyn TraceSink,
+) -> Result<metrics::FleetReport> {
+    let mut rec = FlightRecorder::new(recorder::DEFAULT_CAPACITY);
+    let timeline =
+        simulate_fleet_traced(engine, cfg, &mut Probe { sink: &mut *sink, rec: &mut rec });
     let job_refs: Vec<&BatchJob> = timeline.jobs.iter().map(|j| &j.job).collect();
     let affinity: Vec<usize> = timeline.jobs.iter().map(|j| j.chip).collect();
     let report = executor::execute(
@@ -732,17 +820,45 @@ pub fn run(engine: &Arc<Engine>, cfg: &FleetConfig) -> Result<metrics::FleetRepo
         ExecMode::WorkSteal { steal: true },
         cfg.queue_cap,
     )?;
-    let mut per_chip_steals = vec![0u64; cfg.chips.len()];
+    executor::report_steals(&report.stats, sink);
+    let mut counters = Counters::new();
     for (job, &stolen) in timeline.jobs.iter().zip(&report.stats.stolen_jobs) {
-        per_chip_steals[job.chip] += u64::from(stolen);
+        if stolen {
+            counters.add(&steal_key(job.chip), 1);
+        }
     }
-    Ok(metrics::assemble(
-        engine,
-        cfg,
-        timeline,
-        report.predictions,
-        Some(per_chip_steals),
-    ))
+    // accuracy-recovery watchdog (flight-recorder hook): when every
+    // fault was remapped, a batch dispatched after the last remap runs
+    // on fully-repaired masks and the DPPU recompute is exact, so each
+    // such request must predict its label. A violation dumps the
+    // recorder to stderr as debugging context; the report (where the
+    // miss shows up as accuracy < 1.0) is still assembled.
+    if timeline.unrepaired == 0 {
+        let last_remap = timeline
+            .events
+            .iter()
+            .filter(|e| matches!(e.kind, FleetEventKind::ScanDetection(_)))
+            .map(|e| e.cycle)
+            .max();
+        if let Some(last) = last_remap {
+            let bad = timeline.requests.iter().find(|r| {
+                r.start_cycle > last
+                    && report.predictions[r.batch_id][r.slot] as i32
+                        != engine.eval.labels[r.image_idx]
+            });
+            if let Some(r) = bad {
+                eprintln!(
+                    "{}",
+                    rec.dump(&format!(
+                        "accuracy watchdog: request {} (dispatched at cycle {}, after the \
+                         last remap at {}) mispredicted although every fault was remapped",
+                        r.id, r.start_cycle, last
+                    ))
+                );
+            }
+        }
+    }
+    Ok(metrics::assemble(engine, cfg, timeline, report.predictions, &counters))
 }
 
 #[cfg(test)]

@@ -49,6 +49,7 @@ pub mod faults;
 pub mod fleet;
 pub mod hyca;
 pub mod inference;
+pub mod obs;
 pub mod perfmodel;
 pub mod redundancy;
 pub mod runtime;

@@ -34,6 +34,10 @@
 //!        --workers N   executor thread-pool width (metrics are byte-identical
 //!                      at any value — the determinism golden tests assert it)
 //!        --smoke       reduced grid for CI
+//!        --trace PATH  also write a Chrome-trace JSON of the command's
+//!                      canonical scenario (serve: burst, fleet:
+//!                      degraded_continuity, traffic: flash_crowd) —
+//!                      Perfetto-loadable, keyed to simulated cycles
 //! fleet-only flags:
 //!        --chips N     restrict the fleet grid to one cluster size
 //!                      (default sweep: {1, 2, 4, 8} chips × routing policy)
@@ -85,7 +89,25 @@ fn serve_flag_specs() -> Vec<FlagSpec> {
         takes_value: false,
         help: "reduced serving grid for CI",
     });
+    specs.push(FlagSpec {
+        name: "trace",
+        takes_value: true,
+        help: "write a Chrome-trace JSON of the canonical scenario (Perfetto-loadable)",
+    });
     specs
+}
+
+/// Write the Chrome-trace export produced by a driver's `trace_json`
+/// and print the Perfetto hint. Shared by `serve`, `fleet` and
+/// `traffic`; the trace stream is keyed to simulated cycles, so the
+/// file is byte-identical at any `--workers` value.
+fn write_trace(path: &str, trace: &str, what: &str) -> Result<()> {
+    std::fs::write(path, trace).with_context(|| format!("writing trace file {path}"))?;
+    eprintln!(
+        "[repro] {what} trace written to {path} — load it at ui.perfetto.dev \
+         (1 trace us == 1 simulated cycle)"
+    );
+    Ok(())
 }
 
 fn fleet_flag_specs() -> Vec<FlagSpec> {
@@ -141,6 +163,10 @@ fn cmd_fleet(rest: &[String]) -> Result<()> {
             t0.elapsed().as_secs_f64()
         );
     }
+    if let Some(path) = args.get("trace") {
+        let trace = coordinator::exp_fleet::trace_json(&opts, smoke)?;
+        write_trace(path, &trace, "fleet degraded_continuity")?;
+    }
     Ok(())
 }
 
@@ -165,6 +191,10 @@ fn cmd_traffic(rest: &[String]) -> Result<()> {
         "[repro] traffic done in {:.1}s — baseline written to BENCH_traffic.json",
         t0.elapsed().as_secs_f64()
     );
+    if let Some(path) = args.get("trace") {
+        let trace = coordinator::exp_traffic::trace_json(&opts, smoke)?;
+        write_trace(path, &trace, "traffic flash_crowd")?;
+    }
     Ok(())
 }
 
@@ -206,6 +236,9 @@ fn cmd_scenario(rest: &[String]) -> Result<()> {
     let mut opts = opts_from(&args)?;
     opts.threads = args.get_parse("workers", opts.threads)?;
     let smoke = args.has("smoke") || opts.fast;
+    if args.get("trace").is_some() {
+        bail!("--trace is supported on `repro serve|fleet|traffic` only");
+    }
     let Some(target) = args.positionals.first().map(|s| s.as_str()) else {
         bail!(
             "usage: repro scenario <preset|path.scn|all|list> [flags] — presets: {}",
@@ -288,6 +321,10 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
         "[repro] serve done in {:.1}s — baseline written to BENCH_serve.json",
         t0.elapsed().as_secs_f64()
     );
+    if let Some(path) = args.get("trace") {
+        let trace = coordinator::exp_serve::trace_json(&opts, smoke)?;
+        write_trace(path, &trace, "serve burst")?;
+    }
     Ok(())
 }
 
@@ -355,8 +392,9 @@ fn main() -> Result<()> {
                 "{}\nserve/fleet-only flags (rejected by other commands):\n  \
                  --workers <value>  executor thread-pool width (metrics \
                  identical at any value)\n  --smoke            reduced \
-                 grid for CI\n  --chips <value>    fleet only: restrict \
-                 the grid to one cluster size\n",
+                 grid for CI\n  --trace <path>     write a Chrome-trace \
+                 JSON of the canonical scenario\n  --chips <value>    \
+                 fleet only: restrict the grid to one cluster size\n",
                 usage(
                     "repro <list|exp|all|serve|fleet|scenario|traffic|perf|info>",
                     "HyCA reproduction CLI",

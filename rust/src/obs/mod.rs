@@ -1,0 +1,346 @@
+//! `obs` — the deterministic telemetry layer over simulated cycle time
+//! (DESIGN.md §10).
+//!
+//! Every aggregate the serve/fleet/traffic engine reports today is an
+//! end-of-run number; the *dynamics* the paper argues about — fault
+//! arrival → scan detection → DPPU remap → accuracy recovery, drain /
+//! re-admit, admission shedding, autoscale ramps — happen between
+//! cycle 0 and the final digest. This module makes them observable
+//! without touching the determinism contract:
+//!
+//! * [`TraceEvent`] / [`TraceSink`] — a cycle-stamped structured event
+//!   bus. The simulators emit at their existing call sites
+//!   (`serve::simulate_timeline`, `fleet::simulate_fleet`, the
+//!   lifecycle wake-ups, the autoscale tick); everything on the bus is
+//!   keyed to **simulated cycles**, never the wall clock, so for a
+//!   given spec + seed the stream is byte-identical at any
+//!   `--workers` value.
+//! * [`recorder::FlightRecorder`] — a bounded ring buffer the
+//!   simulators feed unconditionally; when an invariant trips (queue
+//!   deadlock watchdog, dwell violation, accuracy not restored after
+//!   the last remap) the last K events are dumped to stderr as
+//!   context for the failure.
+//! * [`timeseries`] — a per-window collector deriving gauges/counters
+//!   (queue depth, in-flight, active chips, shed, live faulty PEs,
+//!   per-chip goodput) from the event stream; rendered as the
+//!   `timeseries` section of `BENCH_traffic.json`.
+//! * [`trace_export`] — a Chrome-trace-event JSON exporter
+//!   (Perfetto-loadable) behind `--trace <path>` on
+//!   `repro serve|fleet|traffic`.
+//!
+//! **The nondeterministic channel.** Executor steals are decided by OS
+//! scheduling, so they must never reach a byte-compared artifact. They
+//! travel through two quarantined paths only: [`TraceSink::emit_nondet`]
+//! (recorded separately by [`MemorySink`], never exported) and the
+//! [`Counters`] registry (read by `fleet::metrics::assemble` into
+//! `ChipStat::executor_steals`, which `digest()` deliberately omits).
+
+pub mod recorder;
+pub mod timeseries;
+pub mod trace_export;
+
+use std::collections::BTreeMap;
+
+pub use recorder::FlightRecorder;
+pub use timeseries::TimeSeries;
+
+/// One structured telemetry event. Cycle stamps live outside the enum
+/// (see [`TracedEvent`]) so call sites read naturally:
+/// `probe.emit(t, TraceEvent::RequestEnqueue { id, chip })`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TraceEvent {
+    /// A request entered a chip's pending batcher (serve: chip 0).
+    RequestEnqueue { id: usize, chip: usize },
+    /// An open-loop arrival was shed by admission control; `seq` is
+    /// its index in the chronological shed log.
+    RequestShed { seq: usize },
+    /// A drained/deactivated chip's queue moved one request to a
+    /// healthy chip (drain, re-admit and scale-down re-sharding).
+    RequestReshard { id: usize, from: usize, to: usize },
+    /// A request left the batcher inside a dispatched batch.
+    RequestDispatch { id: usize, chip: usize, batch: usize },
+    /// A request's batch finished service (stamped with the batch's
+    /// end cycle, which the cycle model fixes at dispatch).
+    RequestComplete { id: usize, chip: usize, batch: usize },
+    /// The batcher released a batch onto a free lane.
+    BatchFormed { batch: usize, chip: usize, lane: usize, size: usize },
+    /// A lane finished its batch and returned to the free set.
+    LaneFree { chip: usize, lane: usize },
+    /// A permanent fault landed on the chip's array.
+    FaultArrival { chip: usize, row: u16, col: u16 },
+    /// A detection scan that found something started (scans that find
+    /// nothing are not traced — they would dominate long runs).
+    ScanStart { chip: usize },
+    /// The scan agent detected a faulty PE.
+    ScanDetect { chip: usize, row: u16, col: u16 },
+    /// The DPPU took the faulty PE over (in this model detection and
+    /// remap land in the same cycle; an arrival with no matching remap
+    /// is an unrepaired fault).
+    RemapApplied { chip: usize, row: u16, col: u16 },
+    /// The chip crossed its live-fault drain threshold and left the
+    /// serving set.
+    ChipDrain { chip: usize },
+    /// The chip re-admitted after repair + dwell.
+    ChipReadmit { chip: usize },
+    /// An autoscaler evaluation tick (pressure = queued + shed since
+    /// the last tick, per active chip).
+    AutoscaleTick { active: usize, pressure: usize },
+    /// The autoscaler activated this chip.
+    ScaleUp { chip: usize },
+    /// The autoscaler deactivated this chip.
+    ScaleDown { chip: usize },
+    /// A worker executed a job homed on another worker's deque.
+    /// **Wall-clock domain**: only ever emitted through
+    /// [`TraceSink::emit_nondet`], never part of deterministic streams
+    /// (the stamp is 0 — steal timing has no simulated cycle).
+    ExecutorSteal { job: usize },
+}
+
+/// A cycle-stamped event as recorded by sinks and the flight recorder.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TracedEvent {
+    pub cycle: u64,
+    pub event: TraceEvent,
+}
+
+/// Short stable identifier of an event kind (the `name` field of the
+/// Chrome-trace export and the second token of [`render`]).
+pub fn event_name(event: &TraceEvent) -> &'static str {
+    match event {
+        TraceEvent::RequestEnqueue { .. } => "request_enqueue",
+        TraceEvent::RequestShed { .. } => "shed",
+        TraceEvent::RequestReshard { .. } => "request_reshard",
+        TraceEvent::RequestDispatch { .. } => "request_dispatch",
+        TraceEvent::RequestComplete { .. } => "request_complete",
+        TraceEvent::BatchFormed { .. } => "batch_formed",
+        TraceEvent::LaneFree { .. } => "lane_free",
+        TraceEvent::FaultArrival { .. } => "fault_arrival",
+        TraceEvent::ScanStart { .. } => "scan_start",
+        TraceEvent::ScanDetect { .. } => "scan_detect",
+        TraceEvent::RemapApplied { .. } => "remap_applied",
+        TraceEvent::ChipDrain { .. } => "chip_drain",
+        TraceEvent::ChipReadmit { .. } => "chip_readmit",
+        TraceEvent::AutoscaleTick { .. } => "autoscale_tick",
+        TraceEvent::ScaleUp { .. } => "scale_up",
+        TraceEvent::ScaleDown { .. } => "scale_down",
+        TraceEvent::ExecutorSteal { .. } => "executor_steal",
+    }
+}
+
+/// Canonical one-line rendering: `<cycle> <name> <fields>`. The golden
+/// trace-determinism tests compare rendered streams, and the flight
+/// recorder dumps in this format — two event streams are equivalent
+/// iff their renderings are byte-identical.
+pub fn render(cycle: u64, event: &TraceEvent) -> String {
+    let name = event_name(event);
+    match *event {
+        TraceEvent::RequestEnqueue { id, chip } => {
+            format!("{cycle} {name} id={id} chip={chip}")
+        }
+        TraceEvent::RequestShed { seq } => format!("{cycle} {name} seq={seq}"),
+        TraceEvent::RequestReshard { id, from, to } => {
+            format!("{cycle} {name} id={id} from={from} to={to}")
+        }
+        TraceEvent::RequestDispatch { id, chip, batch }
+        | TraceEvent::RequestComplete { id, chip, batch } => {
+            format!("{cycle} {name} id={id} chip={chip} batch={batch}")
+        }
+        TraceEvent::BatchFormed { batch, chip, lane, size } => {
+            format!("{cycle} {name} batch={batch} chip={chip} lane={lane} size={size}")
+        }
+        TraceEvent::LaneFree { chip, lane } => {
+            format!("{cycle} {name} chip={chip} lane={lane}")
+        }
+        TraceEvent::FaultArrival { chip, row, col }
+        | TraceEvent::ScanDetect { chip, row, col }
+        | TraceEvent::RemapApplied { chip, row, col } => {
+            format!("{cycle} {name} chip={chip} at=({row},{col})")
+        }
+        TraceEvent::ScanStart { chip }
+        | TraceEvent::ChipDrain { chip }
+        | TraceEvent::ChipReadmit { chip }
+        | TraceEvent::ScaleUp { chip }
+        | TraceEvent::ScaleDown { chip } => format!("{cycle} {name} chip={chip}"),
+        TraceEvent::AutoscaleTick { active, pressure } => {
+            format!("{cycle} {name} active={active} pressure={pressure}")
+        }
+        TraceEvent::ExecutorSteal { job } => format!("{cycle} {name} job={job}"),
+    }
+}
+
+/// Render a whole stream, one event per line (the golden-trace digest).
+pub fn render_stream(events: &[TracedEvent]) -> String {
+    let mut s = String::new();
+    for e in events {
+        s.push_str(&render(e.cycle, &e.event));
+        s.push('\n');
+    }
+    s
+}
+
+/// Where emitted events go. Implementations must not reorder: the
+/// emission order of the deterministic channel is part of the golden
+/// trace contract.
+pub trait TraceSink {
+    /// Is the sink recording? The simulators consult this so a
+    /// disabled sink costs one branch per event.
+    fn enabled(&self) -> bool;
+    /// One event from the deterministic simulated-cycle domain.
+    fn emit(&mut self, cycle: u64, event: TraceEvent);
+    /// One event from the nondeterministic wall-clock domain (executor
+    /// steals). Dropped by default: nondet data must never reach a
+    /// deterministic export by accident.
+    fn emit_nondet(&mut self, _cycle: u64, _event: TraceEvent) {}
+}
+
+/// Tracing disabled — the default path of `serve::run` / `fleet::run`.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct NullSink;
+
+impl TraceSink for NullSink {
+    fn enabled(&self) -> bool {
+        false
+    }
+
+    fn emit(&mut self, _cycle: u64, _event: TraceEvent) {}
+}
+
+/// In-memory capture. The deterministic stream lands in `events`; the
+/// wall-clock channel is quarantined in `nondet` (exporters and the
+/// timeseries collector read `events` only).
+#[derive(Debug, Default)]
+pub struct MemorySink {
+    pub events: Vec<TracedEvent>,
+    pub nondet: Vec<TracedEvent>,
+}
+
+impl TraceSink for MemorySink {
+    fn enabled(&self) -> bool {
+        true
+    }
+
+    fn emit(&mut self, cycle: u64, event: TraceEvent) {
+        self.events.push(TracedEvent { cycle, event });
+    }
+
+    fn emit_nondet(&mut self, cycle: u64, event: TraceEvent) {
+        self.nondet.push(TracedEvent { cycle, event });
+    }
+}
+
+/// What a simulator threads through its call sites: the caller's sink
+/// plus the always-on flight recorder, so every emission feeds both.
+pub struct Probe<'a> {
+    pub sink: &'a mut dyn TraceSink,
+    pub rec: &'a mut FlightRecorder,
+}
+
+impl Probe<'_> {
+    /// Record `event` in the flight recorder and, when tracing is
+    /// enabled, on the sink's deterministic channel.
+    pub fn emit(&mut self, cycle: u64, event: TraceEvent) {
+        self.rec.push(cycle, event);
+        if self.sink.enabled() {
+            self.sink.emit(cycle, event);
+        }
+    }
+}
+
+/// Deterministically-ordered counter registry — the home of
+/// observability tallies that must stay out of byte-compared
+/// artifacts. Keys are free-form strings (`executor_steals/chip3`);
+/// iteration order is the key order, so *rendering a registry* is
+/// deterministic even when the *values* (wall-clock domain) are not.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct Counters {
+    map: BTreeMap<String, u64>,
+}
+
+impl Counters {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Add `n` to `key` (missing keys start at 0).
+    pub fn add(&mut self, key: &str, n: u64) {
+        *self.map.entry(key.to_string()).or_insert(0) += n;
+    }
+
+    /// Current value of `key` (0 when never touched).
+    pub fn get(&self, key: &str) -> u64 {
+        self.map.get(key).copied().unwrap_or(0)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    /// Key-ordered iteration.
+    pub fn iter(&self) -> impl Iterator<Item = (&str, u64)> {
+        self.map.iter().map(|(k, &v)| (k.as_str(), v))
+    }
+}
+
+/// Registry key of chip `k`'s executor-steal tally (see
+/// `fleet::run_traced` / `fleet::metrics::assemble`).
+pub fn steal_key(chip: usize) -> String {
+    format!("executor_steals/chip{chip}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn render_is_stable_and_names_match() {
+        let e = TraceEvent::RequestEnqueue { id: 3, chip: 1 };
+        assert_eq!(render(42, &e), "42 request_enqueue id=3 chip=1");
+        assert_eq!(event_name(&e), "request_enqueue");
+        let f = TraceEvent::FaultArrival { chip: 0, row: 2, col: 5 };
+        assert_eq!(render(7, &f), "7 fault_arrival chip=0 at=(2,5)");
+        let t = TraceEvent::AutoscaleTick { active: 2, pressure: 9 };
+        assert_eq!(render(100, &t), "100 autoscale_tick active=2 pressure=9");
+    }
+
+    #[test]
+    fn render_stream_is_one_line_per_event() {
+        let evs = vec![
+            TracedEvent { cycle: 1, event: TraceEvent::ScanStart { chip: 0 } },
+            TracedEvent { cycle: 2, event: TraceEvent::ChipDrain { chip: 0 } },
+        ];
+        assert_eq!(render_stream(&evs), "1 scan_start chip=0\n2 chip_drain chip=0\n");
+    }
+
+    #[test]
+    fn memory_sink_quarantines_the_nondet_channel() {
+        let mut sink = MemorySink::default();
+        sink.emit(5, TraceEvent::LaneFree { chip: 0, lane: 1 });
+        sink.emit_nondet(0, TraceEvent::ExecutorSteal { job: 9 });
+        assert_eq!(sink.events.len(), 1);
+        assert_eq!(sink.nondet.len(), 1);
+        assert_eq!(sink.events[0].cycle, 5);
+    }
+
+    #[test]
+    fn null_sink_drops_everything_and_probe_still_records() {
+        let mut sink = NullSink;
+        let mut rec = FlightRecorder::new(4);
+        let mut probe = Probe { sink: &mut sink, rec: &mut rec };
+        probe.emit(1, TraceEvent::ScanStart { chip: 0 });
+        assert_eq!(rec.total(), 1, "the recorder is always on");
+    }
+
+    #[test]
+    fn counters_accumulate_and_iterate_in_key_order() {
+        let mut c = Counters::new();
+        assert!(c.is_empty());
+        c.add(&steal_key(1), 2);
+        c.add(&steal_key(0), 1);
+        c.add(&steal_key(1), 3);
+        assert_eq!(c.get(&steal_key(1)), 5);
+        assert_eq!(c.get(&steal_key(0)), 1);
+        assert_eq!(c.get("missing"), 0);
+        let keys: Vec<&str> = c.iter().map(|(k, _)| k).collect();
+        assert_eq!(keys, vec!["executor_steals/chip0", "executor_steals/chip1"]);
+    }
+}

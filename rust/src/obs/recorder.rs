@@ -1,0 +1,156 @@
+//! Bounded ring-buffer flight recorder (DESIGN.md §10).
+//!
+//! The simulators push every telemetry event here unconditionally —
+//! events are small `Copy` values, so the always-on cost is one store
+//! and an index bump — and when an invariant trips (queue deadlock
+//! watchdog, lifecycle dwell violation, accuracy not restored after
+//! the last remap) the last K events are rendered to stderr as the
+//! context that aggregates can't give: *what the engine was doing*
+//! right before the invariant broke.
+
+use crate::obs::{render, TracedEvent};
+use std::fmt::Write as _;
+
+/// Default capacity: the last 64 events are plenty to see a stuck
+/// lane, a drain storm or an admission flap, and small enough to dump
+/// readably in a CI log.
+pub const DEFAULT_CAPACITY: usize = 64;
+
+/// Fixed-capacity ring buffer over [`TracedEvent`]. Pushing past
+/// capacity overwrites the oldest entry.
+#[derive(Debug, Clone)]
+pub struct FlightRecorder {
+    buf: Vec<TracedEvent>,
+    /// Next write position once the buffer is full (== oldest entry).
+    head: usize,
+    total: u64,
+    cap: usize,
+}
+
+impl FlightRecorder {
+    pub fn new(cap: usize) -> Self {
+        assert!(cap >= 1, "flight recorder capacity must be at least 1");
+        Self { buf: Vec::with_capacity(cap), head: 0, total: 0, cap }
+    }
+
+    /// Record one event, evicting the oldest when full.
+    pub fn push(&mut self, cycle: u64, event: crate::obs::TraceEvent) {
+        let e = TracedEvent { cycle, event };
+        if self.buf.len() < self.cap {
+            self.buf.push(e);
+            self.head = self.buf.len() % self.cap;
+        } else {
+            self.buf[self.head] = e;
+            self.head = (self.head + 1) % self.cap;
+        }
+        self.total += 1;
+    }
+
+    /// Events currently held (≤ capacity).
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// Events ever pushed (including the evicted ones).
+    pub fn total(&self) -> u64 {
+        self.total
+    }
+
+    /// The retained window, oldest first.
+    pub fn events(&self) -> Vec<TracedEvent> {
+        if self.buf.len() < self.cap {
+            self.buf.clone()
+        } else {
+            let mut v = Vec::with_capacity(self.cap);
+            v.extend_from_slice(&self.buf[self.head..]);
+            v.extend_from_slice(&self.buf[..self.head]);
+            v
+        }
+    }
+
+    /// Render the retained window with a reason banner — the string an
+    /// invariant failure prints to stderr before panicking.
+    pub fn dump(&self, reason: &str) -> String {
+        let mut s = String::new();
+        let _ = writeln!(s, "=== flight recorder dump: {reason} ===");
+        let _ = writeln!(s, "({} events recorded, last {} retained)", self.total, self.len());
+        for e in self.events() {
+            let _ = writeln!(s, "  {}", render(e.cycle, &e.event));
+        }
+        s.push_str("=== end of flight recorder dump ===");
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::TraceEvent;
+
+    fn ev(i: usize) -> TraceEvent {
+        TraceEvent::RequestEnqueue { id: i, chip: 0 }
+    }
+
+    #[test]
+    fn fills_up_to_capacity_without_eviction() {
+        let mut r = FlightRecorder::new(8);
+        assert!(r.is_empty());
+        for i in 0..5 {
+            r.push(i as u64, ev(i));
+        }
+        assert_eq!(r.len(), 5);
+        assert_eq!(r.total(), 5);
+        let evs = r.events();
+        assert_eq!(evs[0].cycle, 0);
+        assert_eq!(evs[4].cycle, 4);
+    }
+
+    #[test]
+    fn wraps_and_keeps_the_newest_k_in_order() {
+        let mut r = FlightRecorder::new(8);
+        for i in 0..100 {
+            r.push(i as u64, ev(i));
+        }
+        assert_eq!(r.len(), 8, "capacity bounds retention");
+        assert_eq!(r.total(), 100, "the total keeps counting past eviction");
+        let evs = r.events();
+        let cycles: Vec<u64> = evs.iter().map(|e| e.cycle).collect();
+        assert_eq!(cycles, vec![92, 93, 94, 95, 96, 97, 98, 99], "oldest→newest window");
+    }
+
+    #[test]
+    fn wrap_boundary_is_exact_at_capacity() {
+        let mut r = FlightRecorder::new(4);
+        for i in 0..4 {
+            r.push(i as u64, ev(i));
+        }
+        // exactly full, nothing evicted yet
+        assert_eq!(r.events().iter().map(|e| e.cycle).collect::<Vec<_>>(), vec![0, 1, 2, 3]);
+        r.push(4, ev(4));
+        // one eviction: 0 gone, order preserved
+        assert_eq!(r.events().iter().map(|e| e.cycle).collect::<Vec<_>>(), vec![1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn dump_carries_the_reason_and_the_rendered_window() {
+        let mut r = FlightRecorder::new(2);
+        r.push(7, TraceEvent::ChipDrain { chip: 3 });
+        r.push(9, TraceEvent::ScanStart { chip: 3 });
+        let d = r.dump("dwell violation on chip 3");
+        assert!(d.contains("flight recorder dump: dwell violation on chip 3"));
+        assert!(d.contains("2 events recorded, last 2 retained"));
+        assert!(d.contains("  7 chip_drain chip=3"));
+        assert!(d.contains("  9 scan_start chip=3"));
+        assert!(d.ends_with("=== end of flight recorder dump ==="));
+    }
+
+    #[test]
+    #[should_panic(expected = "capacity must be at least 1")]
+    fn zero_capacity_is_rejected() {
+        let _ = FlightRecorder::new(0);
+    }
+}

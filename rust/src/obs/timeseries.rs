@@ -1,0 +1,280 @@
+//! Windowed time-series collector (DESIGN.md §10).
+//!
+//! Folds a deterministic trace stream into per-window counters and
+//! end-of-window gauges, keyed to simulated cycles. This is what makes
+//! dynamics visible *between* the points the legacy aggregates sample:
+//! the `active_chips` trajectory in `BENCH_traffic.json` only moves at
+//! autoscale decisions, while the windowed series here samples every
+//! `window_cycles`, so a flash-crowd ramp (shed spike → scale-up →
+//! queue drain) shows up window by window.
+//!
+//! Determinism: the input stream is already deterministic (simulated
+//! cycles only); the fold sorts a copy **stably** by cycle, so events
+//! sharing a cycle keep their emission order and the resulting series
+//! is byte-identical at any `--workers`.
+
+use crate::obs::{TraceEvent, TracedEvent};
+
+/// Windows per run in the bench rendering: enough resolution to see a
+/// ramp, few enough to stay readable in a JSON diff.
+pub const DEFAULT_WINDOWS: usize = 32;
+
+/// One window `[start_cycle, end_cycle)` of the run. Counters count
+/// events inside the window; gauges are the running value at the end
+/// of the window.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Window {
+    pub start_cycle: u64,
+    pub end_cycle: u64,
+    /// Requests admitted to a batcher in this window.
+    pub enqueued: u64,
+    /// Requests dispatched inside a batch in this window.
+    pub dispatched: u64,
+    /// Requests whose batch finished service in this window.
+    pub completed: u64,
+    /// Open-loop arrivals shed by admission control in this window.
+    pub shed: u64,
+    /// Requests moved between chips by drain/re-admit/scale-down.
+    pub resharded: u64,
+    /// Gauge: requests sitting in batchers at window end.
+    pub queue_depth: u64,
+    /// Gauge: requests dispatched but not yet complete at window end.
+    pub in_flight: u64,
+    /// Gauge: chips in the serving set at window end.
+    pub active_chips: usize,
+    /// Gauge: faults arrived but not yet remapped at window end.
+    pub live_faults: u64,
+    /// Per-chip goodput: requests completed per chip in this window.
+    pub per_chip_completed: Vec<u64>,
+}
+
+/// The full windowed series for one run.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TimeSeries {
+    /// Width of every window in simulated cycles.
+    pub window_cycles: u64,
+    pub windows: Vec<Window>,
+}
+
+/// Fold `events` into `n_windows` windows covering `[0, total_cycles)`.
+/// `initial_active` seeds the active-chips gauge (scale decisions move
+/// it); events past the nominal end (e.g. a final autoscale tick after
+/// the last completion) clamp into the last window so gauges always
+/// end at their final value.
+pub fn collect(
+    events: &[TracedEvent],
+    total_cycles: u64,
+    n_windows: usize,
+    n_chips: usize,
+    initial_active: usize,
+) -> TimeSeries {
+    let n_windows = n_windows.max(1);
+    let window_cycles = total_cycles.div_ceil(n_windows as u64).max(1);
+    let mut sorted: Vec<TracedEvent> = events.to_vec();
+    sorted.sort_by_key(|e| e.cycle);
+
+    // running gauges (signed defensively; the stream keeps them ≥ 0)
+    let mut queue_depth: i64 = 0;
+    let mut in_flight: i64 = 0;
+    let mut active: i64 = initial_active as i64;
+    let mut live_faults: i64 = 0;
+
+    let mut windows = Vec::with_capacity(n_windows);
+    let mut it = sorted.iter().peekable();
+    for i in 0..n_windows {
+        let start_cycle = i as u64 * window_cycles;
+        let end_cycle = start_cycle + window_cycles;
+        let last = i + 1 == n_windows;
+        let mut w = Window {
+            start_cycle,
+            end_cycle,
+            enqueued: 0,
+            dispatched: 0,
+            completed: 0,
+            shed: 0,
+            resharded: 0,
+            queue_depth: 0,
+            in_flight: 0,
+            active_chips: 0,
+            live_faults: 0,
+            per_chip_completed: vec![0; n_chips],
+        };
+        while let Some(e) = it.peek() {
+            if e.cycle >= end_cycle && !last {
+                break;
+            }
+            let e = it.next().expect("peeked");
+            match e.event {
+                TraceEvent::RequestEnqueue { .. } => {
+                    w.enqueued += 1;
+                    queue_depth += 1;
+                }
+                TraceEvent::RequestShed { .. } => w.shed += 1,
+                TraceEvent::RequestReshard { .. } => w.resharded += 1,
+                TraceEvent::RequestDispatch { .. } => {
+                    w.dispatched += 1;
+                    queue_depth -= 1;
+                    in_flight += 1;
+                }
+                TraceEvent::RequestComplete { chip, .. } => {
+                    w.completed += 1;
+                    in_flight -= 1;
+                    if chip < n_chips {
+                        w.per_chip_completed[chip] += 1;
+                    }
+                }
+                TraceEvent::FaultArrival { .. } => live_faults += 1,
+                TraceEvent::RemapApplied { .. } => live_faults -= 1,
+                TraceEvent::ScaleUp { .. } => active += 1,
+                TraceEvent::ScaleDown { .. } => active -= 1,
+                _ => {}
+            }
+        }
+        w.queue_depth = queue_depth.max(0) as u64;
+        w.in_flight = in_flight.max(0) as u64;
+        w.active_chips = active.max(0) as usize;
+        w.live_faults = live_faults.max(0) as u64;
+        windows.push(w);
+    }
+    TimeSeries { window_cycles, windows }
+}
+
+fn series<F: Fn(&Window) -> u64>(ts: &TimeSeries, f: F) -> String {
+    let vals: Vec<String> = ts.windows.iter().map(|w| f(w).to_string()).collect();
+    vals.join(", ")
+}
+
+/// Render one scenario's series as a JSON object for the `timeseries`
+/// section of `BENCH_traffic.json` (hand-rendered like every bench
+/// section; `sep` is the trailing `,` between array elements).
+pub fn render_json(ts: &TimeSeries, scenario: &str, sep: &str) -> String {
+    let n_chips = ts.windows.first().map_or(0, |w| w.per_chip_completed.len());
+    let per_chip: Vec<String> = (0..n_chips)
+        .map(|k| {
+            let vals: Vec<String> =
+                ts.windows.iter().map(|w| w.per_chip_completed[k].to_string()).collect();
+            format!("[{}]", vals.join(", "))
+        })
+        .collect();
+    format!(
+        "    {{\"scenario\": \"{scenario}\", \"window_cycles\": {}, \"windows\": {},\n     \
+         \"active_chips\": [{}],\n     \
+         \"queue_depth\": [{}],\n     \
+         \"in_flight\": [{}],\n     \
+         \"enqueued\": [{}],\n     \
+         \"completed\": [{}],\n     \
+         \"shed\": [{}],\n     \
+         \"live_faults\": [{}],\n     \
+         \"per_chip_completed\": [{}]}}{sep}\n",
+        ts.window_cycles,
+        ts.windows.len(),
+        series(ts, |w| w.active_chips as u64),
+        series(ts, |w| w.queue_depth),
+        series(ts, |w| w.in_flight),
+        series(ts, |w| w.enqueued),
+        series(ts, |w| w.completed),
+        series(ts, |w| w.shed),
+        series(ts, |w| w.live_faults),
+        per_chip.join(", "),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::TraceEvent as E;
+
+    fn at(cycle: u64, event: E) -> TracedEvent {
+        TracedEvent { cycle, event }
+    }
+
+    #[test]
+    fn gauges_and_counters_fold_window_by_window() {
+        // 2 windows over 20 cycles: enqueue+dispatch in w0, complete in
+        // w1; a fault arrives in w0 and is remapped in w1; one scale-up
+        // lands in w1.
+        let evs = vec![
+            at(1, E::RequestEnqueue { id: 0, chip: 0 }),
+            at(2, E::FaultArrival { chip: 0, row: 1, col: 1 }),
+            at(3, E::BatchFormed { batch: 0, chip: 0, lane: 0, size: 1 }),
+            at(3, E::RequestDispatch { id: 0, chip: 0, batch: 0 }),
+            at(12, E::RemapApplied { chip: 0, row: 1, col: 1 }),
+            at(13, E::RequestComplete { id: 0, chip: 0, batch: 0 }),
+            at(14, E::ScaleUp { chip: 1 }),
+        ];
+        let ts = collect(&evs, 20, 2, 2, 1);
+        assert_eq!(ts.window_cycles, 10);
+        assert_eq!(ts.windows.len(), 2);
+        let w0 = &ts.windows[0];
+        assert_eq!((w0.enqueued, w0.dispatched, w0.completed), (1, 1, 0));
+        assert_eq!(w0.queue_depth, 0, "dispatched within the window");
+        assert_eq!(w0.in_flight, 1, "dispatched but not complete at window end");
+        assert_eq!(w0.live_faults, 1, "arrived, not yet remapped");
+        assert_eq!(w0.active_chips, 1);
+        let w1 = &ts.windows[1];
+        assert_eq!(w1.completed, 1);
+        assert_eq!(w1.in_flight, 0);
+        assert_eq!(w1.live_faults, 0);
+        assert_eq!(w1.active_chips, 2, "the scale-up moved the gauge");
+        assert_eq!(w1.per_chip_completed, vec![1, 0]);
+    }
+
+    #[test]
+    fn events_past_the_horizon_clamp_into_the_last_window() {
+        let evs = vec![
+            at(5, E::ScaleUp { chip: 1 }),
+            at(1_000, E::ScaleDown { chip: 1 }), // after total_cycles
+        ];
+        let ts = collect(&evs, 100, 4, 2, 1);
+        assert_eq!(ts.windows.len(), 4);
+        assert_eq!(ts.windows[0].active_chips, 2);
+        assert_eq!(
+            ts.windows[3].active_chips,
+            1,
+            "the late decision still reaches the final gauge"
+        );
+    }
+
+    #[test]
+    fn collect_is_insensitive_to_input_order() {
+        // the stable sort restores cycle order, so a shuffled copy of
+        // the same stream folds identically
+        let a = vec![
+            at(1, E::RequestEnqueue { id: 0, chip: 0 }),
+            at(4, E::RequestDispatch { id: 0, chip: 0, batch: 0 }),
+            at(9, E::RequestComplete { id: 0, chip: 0, batch: 0 }),
+        ];
+        let b = vec![a[2], a[0], a[1]];
+        assert_eq!(collect(&a, 10, 2, 1, 1), collect(&b, 10, 2, 1, 1));
+    }
+
+    #[test]
+    fn render_json_is_valid_shape_and_lists_every_series() {
+        let evs = vec![at(0, E::RequestShed { seq: 0 })];
+        let ts = collect(&evs, 10, 2, 1, 1);
+        let j = render_json(&ts, "flash_crowd", ",");
+        assert!(j.contains("\"scenario\": \"flash_crowd\""));
+        assert!(j.contains("\"window_cycles\": 5"));
+        assert!(j.contains("\"windows\": 2"));
+        for key in [
+            "active_chips",
+            "queue_depth",
+            "in_flight",
+            "enqueued",
+            "completed",
+            "shed",
+            "live_faults",
+            "per_chip_completed",
+        ] {
+            assert!(j.contains(&format!("\"{key}\": [")), "missing series {key}");
+        }
+        assert!(j.contains("\"shed\": [1, 0]"));
+    }
+
+    #[test]
+    fn zero_windows_requested_degrades_to_one() {
+        let ts = collect(&[], 100, 0, 1, 1);
+        assert_eq!(ts.windows.len(), 1);
+        assert_eq!(ts.window_cycles, 100);
+    }
+}

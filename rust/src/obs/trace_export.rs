@@ -1,0 +1,349 @@
+//! Chrome-trace-event JSON exporter (DESIGN.md §10; the `--trace`
+//! flag on `repro serve|fleet|traffic`).
+//!
+//! Renders a deterministic trace stream in the Trace Event Format that
+//! Perfetto (ui.perfetto.dev) and `chrome://tracing` load directly:
+//!
+//! * **complete spans** (`ph: "X"`) — one per batch in service
+//!   (`BatchFormed` → `LaneFree` on the same (chip, lane)) and one per
+//!   drained episode (`ChipDrain` → `ChipReadmit`);
+//! * **async spans** (`ph: "b"` / `"e"`) — one per request from
+//!   enqueue to completion, id = request id;
+//! * **global/thread instants** (`ph: "i"`) — sheds, fault arrivals,
+//!   scan start/detect, remaps, re-shards, autoscale ticks and
+//!   scale decisions;
+//! * **metadata** (`ph: "M"`) — process/thread names: process 0 is the
+//!   fleet (router, admission, autoscaler), process k+1 is chip k with
+//!   one thread per lane plus a `faults` and a `lifecycle` track.
+//!
+//! Timestamps are **simulated cycles, not wall time**: 1 trace µs ==
+//! 1 cycle (so Perfetto's "ms" readout is kilocycles). The export is a
+//! pure function of the stream, hence byte-identical at any
+//! `--workers` — the nondeterministic executor channel never reaches
+//! this module (see `obs::TraceSink::emit_nondet`).
+
+use crate::obs::{TraceEvent, TracedEvent};
+use std::collections::BTreeMap;
+
+/// Synthetic thread ids for per-chip non-lane tracks.
+const TID_FAULTS: usize = 1000;
+const TID_LIFECYCLE: usize = 1001;
+
+fn pid_of_chip(chip: usize) -> usize {
+    chip + 1
+}
+
+/// One `ph:"X"` complete span.
+fn span(name: &str, cat: &str, pid: usize, tid: usize, ts: u64, dur: u64, args: &str) -> String {
+    format!(
+        "{{\"name\": \"{name}\", \"cat\": \"{cat}\", \"ph\": \"X\", \"ts\": {ts}, \
+         \"dur\": {dur}, \"pid\": {pid}, \"tid\": {tid}, \"args\": {{{args}}}}}"
+    )
+}
+
+/// One `ph:"i"` instant. `scope` is `g` (global) or `t` (thread).
+fn instant(name: &str, scope: char, pid: usize, tid: usize, ts: u64, args: &str) -> String {
+    format!(
+        "{{\"name\": \"{name}\", \"ph\": \"i\", \"s\": \"{scope}\", \"ts\": {ts}, \
+         \"pid\": {pid}, \"tid\": {tid}, \"args\": {{{args}}}}}"
+    )
+}
+
+/// One `ph:"b"`/`ph:"e"` async event.
+fn async_ev(ph: char, id: usize, pid: usize, ts: u64, args: &str) -> String {
+    format!(
+        "{{\"name\": \"request\", \"cat\": \"request\", \"ph\": \"{ph}\", \"id\": {id}, \
+         \"ts\": {ts}, \"pid\": {pid}, \"tid\": 0, \"args\": {{{args}}}}}"
+    )
+}
+
+/// One `ph:"M"` metadata record naming a process or thread.
+fn metadata(kind: &str, pid: usize, tid: Option<usize>, name: &str) -> String {
+    match tid {
+        Some(tid) => format!(
+            "{{\"name\": \"{kind}\", \"ph\": \"M\", \"pid\": {pid}, \"tid\": {tid}, \
+             \"args\": {{\"name\": \"{name}\"}}}}"
+        ),
+        None => format!(
+            "{{\"name\": \"{kind}\", \"ph\": \"M\", \"pid\": {pid}, \
+             \"args\": {{\"name\": \"{name}\"}}}}"
+        ),
+    }
+}
+
+/// Render `events` as a Chrome-trace JSON document. `label` tags the
+/// run (scenario name) in `otherData`.
+pub fn chrome_trace_json(events: &[TracedEvent], label: &str) -> String {
+    let mut sorted: Vec<TracedEvent> = events.to_vec();
+    sorted.sort_by_key(|e| e.cycle); // stable: ties keep emission order
+    let max_cycle = sorted.last().map_or(0, |e| e.cycle);
+
+    let mut out: Vec<String> = Vec::new();
+    // open-span bookkeeping, all deterministic containers
+    let mut open_batch: BTreeMap<(usize, usize), (usize, u64, usize)> = BTreeMap::new();
+    let mut open_req: BTreeMap<usize, (usize, u64)> = BTreeMap::new();
+    let mut open_drain: BTreeMap<usize, u64> = BTreeMap::new();
+    // (chip, max lane seen) for thread-name metadata
+    let mut chips: BTreeMap<usize, usize> = BTreeMap::new();
+
+    for e in &sorted {
+        let ts = e.cycle;
+        match e.event {
+            TraceEvent::RequestEnqueue { id, chip } => {
+                chips.entry(chip).or_insert(0);
+                open_req.entry(id).or_insert((chip, ts));
+            }
+            TraceEvent::RequestShed { seq } => {
+                out.push(instant("shed", 'g', 0, 0, ts, &format!("\"seq\": {seq}")));
+            }
+            TraceEvent::RequestReshard { id, from, to } => {
+                out.push(instant(
+                    "request_reshard",
+                    't',
+                    pid_of_chip(to),
+                    0,
+                    ts,
+                    &format!("\"id\": {id}, \"from\": {from}, \"to\": {to}"),
+                ));
+            }
+            TraceEvent::RequestDispatch { .. } => {}
+            TraceEvent::RequestComplete { id, chip, batch } => {
+                // close the async span opened at enqueue; a request
+                // never seen enqueued (defensive) opens at completion
+                let (pid_chip, t0) = open_req.remove(&id).unwrap_or((chip, ts));
+                let pid = pid_of_chip(pid_chip);
+                out.push(async_ev('b', id, pid, t0, &format!("\"batch\": {batch}")));
+                out.push(async_ev('e', id, pid, ts, ""));
+            }
+            TraceEvent::BatchFormed { batch, chip, lane, size } => {
+                let max_lane = chips.entry(chip).or_insert(0);
+                *max_lane = (*max_lane).max(lane);
+                open_batch.insert((chip, lane), (batch, ts, size));
+            }
+            TraceEvent::LaneFree { chip, lane } => {
+                if let Some((batch, t0, size)) = open_batch.remove(&(chip, lane)) {
+                    out.push(span(
+                        "batch",
+                        "batch",
+                        pid_of_chip(chip),
+                        lane,
+                        t0,
+                        ts - t0,
+                        &format!("\"batch\": {batch}, \"size\": {size}"),
+                    ));
+                }
+            }
+            TraceEvent::FaultArrival { chip, row, col } => {
+                chips.entry(chip).or_insert(0);
+                out.push(instant(
+                    "fault_arrival",
+                    't',
+                    pid_of_chip(chip),
+                    TID_FAULTS,
+                    ts,
+                    &format!("\"row\": {row}, \"col\": {col}"),
+                ));
+            }
+            TraceEvent::ScanStart { chip } => {
+                out.push(instant("scan_start", 't', pid_of_chip(chip), TID_FAULTS, ts, ""));
+            }
+            TraceEvent::ScanDetect { chip, row, col } => {
+                out.push(instant(
+                    "scan_detect",
+                    't',
+                    pid_of_chip(chip),
+                    TID_FAULTS,
+                    ts,
+                    &format!("\"row\": {row}, \"col\": {col}"),
+                ));
+            }
+            TraceEvent::RemapApplied { chip, row, col } => {
+                out.push(instant(
+                    "remap_applied",
+                    't',
+                    pid_of_chip(chip),
+                    TID_FAULTS,
+                    ts,
+                    &format!("\"row\": {row}, \"col\": {col}"),
+                ));
+            }
+            TraceEvent::ChipDrain { chip } => {
+                chips.entry(chip).or_insert(0);
+                open_drain.entry(chip).or_insert(ts);
+            }
+            TraceEvent::ChipReadmit { chip } => {
+                if let Some(t0) = open_drain.remove(&chip) {
+                    out.push(span(
+                        "drained",
+                        "lifecycle",
+                        pid_of_chip(chip),
+                        TID_LIFECYCLE,
+                        t0,
+                        ts - t0,
+                        "",
+                    ));
+                }
+            }
+            TraceEvent::AutoscaleTick { active, pressure } => {
+                out.push(instant(
+                    "autoscale_tick",
+                    'g',
+                    0,
+                    0,
+                    ts,
+                    &format!("\"active\": {active}, \"pressure\": {pressure}"),
+                ));
+            }
+            TraceEvent::ScaleUp { chip } => {
+                out.push(instant("scale_up", 'g', 0, 0, ts, &format!("\"chip\": {chip}")));
+            }
+            TraceEvent::ScaleDown { chip } => {
+                out.push(instant("scale_down", 'g', 0, 0, ts, &format!("\"chip\": {chip}")));
+            }
+            // wall-clock channel: never part of a deterministic stream,
+            // and never exported (see TraceSink::emit_nondet)
+            TraceEvent::ExecutorSteal { .. } => {}
+        }
+    }
+
+    // close anything still open at the end of the run
+    for ((chip, lane), (batch, t0, size)) in &open_batch {
+        out.push(span(
+            "batch",
+            "batch",
+            pid_of_chip(*chip),
+            *lane,
+            *t0,
+            max_cycle.saturating_sub(*t0),
+            &format!("\"batch\": {batch}, \"size\": {size}"),
+        ));
+    }
+    for (chip, t0) in &open_drain {
+        // a chip that never recovers stays drained to the horizon
+        out.push(span(
+            "drained",
+            "lifecycle",
+            pid_of_chip(*chip),
+            TID_LIFECYCLE,
+            *t0,
+            max_cycle.saturating_sub(*t0),
+            "",
+        ));
+    }
+
+    // process/thread naming so Perfetto shows chips, lanes and tracks
+    let mut meta: Vec<String> = vec![metadata("process_name", 0, None, "fleet")];
+    for (chip, max_lane) in &chips {
+        let pid = pid_of_chip(*chip);
+        meta.push(metadata("process_name", pid, None, &format!("chip{chip}")));
+        for lane in 0..=*max_lane {
+            meta.push(metadata("thread_name", pid, Some(lane), &format!("lane{lane}")));
+        }
+        meta.push(metadata("thread_name", pid, Some(TID_FAULTS), "faults"));
+        meta.push(metadata("thread_name", pid, Some(TID_LIFECYCLE), "lifecycle"));
+    }
+    meta.extend(out);
+
+    let body: Vec<String> = meta.iter().map(|e| format!("    {e}")).collect();
+    format!(
+        "{{\n  \"displayTimeUnit\": \"ms\",\n  \"otherData\": {{\"label\": \"{label}\", \
+         \"time_unit\": \"1 trace us == 1 simulated cycle\"}},\n  \"traceEvents\": [\n{}\n  ]\n}}\n",
+        body.join(",\n")
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::TraceEvent as E;
+
+    fn at(cycle: u64, event: E) -> TracedEvent {
+        TracedEvent { cycle, event }
+    }
+
+    #[test]
+    fn batches_requests_and_lifecycle_become_spans() {
+        let evs = vec![
+            at(0, E::RequestEnqueue { id: 7, chip: 0 }),
+            at(2, E::BatchFormed { batch: 0, chip: 0, lane: 1, size: 1 }),
+            at(2, E::RequestDispatch { id: 7, chip: 0, batch: 0 }),
+            at(9, E::RequestComplete { id: 7, chip: 0, batch: 0 }),
+            at(9, E::LaneFree { chip: 0, lane: 1 }),
+            at(10, E::ChipDrain { chip: 0 }),
+            at(20, E::ChipReadmit { chip: 0 }),
+        ];
+        let j = chrome_trace_json(&evs, "unit");
+        // batch span: starts at 2, lasts 7, on chip 0 (pid 1) lane 1
+        let batch_span = concat!(
+            "\"name\": \"batch\", \"cat\": \"batch\", \"ph\": \"X\", ",
+            "\"ts\": 2, \"dur\": 7, \"pid\": 1, \"tid\": 1"
+        );
+        assert!(j.contains(batch_span));
+        // request async pair spans enqueue→complete
+        assert!(j.contains("\"ph\": \"b\", \"id\": 7, \"ts\": 0"));
+        assert!(j.contains("\"ph\": \"e\", \"id\": 7, \"ts\": 9"));
+        // drained episode 10→20
+        let drained_span = concat!(
+            "\"name\": \"drained\", \"cat\": \"lifecycle\", \"ph\": \"X\", ",
+            "\"ts\": 10, \"dur\": 10"
+        );
+        assert!(j.contains(drained_span));
+        // naming metadata
+        assert!(j.contains("\"name\": \"chip0\""));
+        assert!(j.contains("\"name\": \"lane1\""));
+        assert!(j.contains("\"name\": \"fleet\""));
+    }
+
+    #[test]
+    fn instants_cover_shed_faults_and_autoscale() {
+        let evs = vec![
+            at(1, E::RequestShed { seq: 0 }),
+            at(2, E::FaultArrival { chip: 1, row: 3, col: 4 }),
+            at(3, E::ScanStart { chip: 1 }),
+            at(3, E::ScanDetect { chip: 1, row: 3, col: 4 }),
+            at(3, E::RemapApplied { chip: 1, row: 3, col: 4 }),
+            at(5, E::AutoscaleTick { active: 1, pressure: 10 }),
+            at(5, E::ScaleUp { chip: 2 }),
+        ];
+        let j = chrome_trace_json(&evs, "unit");
+        for name in [
+            "shed",
+            "fault_arrival",
+            "scan_start",
+            "scan_detect",
+            "remap_applied",
+            "autoscale_tick",
+            "scale_up",
+        ] {
+            let needle = format!("\"name\": \"{name}\", \"ph\": \"i\"");
+            assert!(j.contains(&needle), "missing {name}");
+        }
+        assert!(j.contains("\"active\": 1, \"pressure\": 10"));
+    }
+
+    #[test]
+    fn unclosed_spans_close_at_the_horizon_and_steals_never_export() {
+        let evs = vec![
+            at(0, E::ChipDrain { chip: 0 }),
+            at(0, E::ExecutorSteal { job: 3 }),
+            at(50, E::AutoscaleTick { active: 1, pressure: 0 }),
+        ];
+        let j = chrome_trace_json(&evs, "unit");
+        let drained_span = concat!(
+            "\"name\": \"drained\", \"cat\": \"lifecycle\", \"ph\": \"X\", ",
+            "\"ts\": 0, \"dur\": 50"
+        );
+        assert!(j.contains(drained_span));
+        assert!(!j.contains("executor_steal"));
+    }
+
+    #[test]
+    fn document_shape_is_chrome_trace() {
+        let j = chrome_trace_json(&[], "empty");
+        assert!(j.starts_with("{\n"));
+        assert!(j.contains("\"displayTimeUnit\": \"ms\""));
+        assert!(j.contains("\"traceEvents\": ["));
+        assert!(j.contains("\"label\": \"empty\""));
+        assert!(j.trim_end().ends_with('}'));
+    }
+}

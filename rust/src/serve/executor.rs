@@ -296,6 +296,19 @@ where
     })
 }
 
+/// Surface per-job steal outcomes onto a trace sink's
+/// **nondeterministic** channel ([`crate::obs::TraceSink::emit_nondet`]).
+/// Steals are decided by OS scheduling, so they carry no simulated
+/// cycle (stamped 0) and must never join a deterministic stream,
+/// digest or export — sinks quarantine or drop them.
+pub fn report_steals(stats: &ExecStats, sink: &mut dyn crate::obs::TraceSink) {
+    for (job, &stolen) in stats.stolen_jobs.iter().enumerate() {
+        if stolen {
+            sink.emit_nondet(0, crate::obs::TraceEvent::ExecutorSteal { job });
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -51,6 +51,7 @@ use crate::faults::{arrival, Spatial};
 use crate::inference::masks::LayerMasks;
 use crate::inference::params::ModelParams;
 use crate::inference::Engine;
+use crate::obs::{recorder, FlightRecorder, NullSink, Probe, TraceEvent, TraceSink};
 use batcher::Batcher;
 use loadgen::LoadGen;
 use scan_agent::{build_timeline, FaultTimeline, ScanAgentConfig, TimelineEvent};
@@ -201,10 +202,56 @@ const EV_CLIENT_READY: u8 = 0;
 const EV_LANE_FREE: u8 = 1;
 const EV_BATCH_DEADLINE: u8 = 2;
 
+/// Emit one chip's precomputed fault/scan/remap history onto the
+/// trace bus. The fault timelines are resolved upfront (DESIGN.md §5),
+/// so this is the telemetry point for the scan-agent call sites; a
+/// `ScanStart` is emitted once per distinct detection cycle (scans
+/// that find nothing are not traced — they would dominate long runs).
+pub(crate) fn emit_fault_history(
+    probe: &mut Probe,
+    chip: usize,
+    events: &[TimelineEvent],
+) {
+    let mut last_scan = u64::MAX;
+    for e in events {
+        match e.kind {
+            scan_agent::EventKind::FaultArrival(c) => {
+                probe.emit(e.cycle, TraceEvent::FaultArrival { chip, row: c.row, col: c.col });
+            }
+            scan_agent::EventKind::ScanDetection(c) => {
+                if last_scan != e.cycle {
+                    probe.emit(e.cycle, TraceEvent::ScanStart { chip });
+                    last_scan = e.cycle;
+                }
+                probe.emit(e.cycle, TraceEvent::ScanDetect { chip, row: c.row, col: c.col });
+                // in this model detection and DPPU takeover land in the
+                // same cycle: detected ⇒ remapped (capacity permitting;
+                // overflow shows up as `unrepaired`, with no detection
+                // event at all)
+                probe.emit(e.cycle, TraceEvent::RemapApplied { chip, row: c.row, col: c.col });
+            }
+        }
+    }
+}
+
 /// Run the deterministic discrete-event simulation in cycle time.
 /// Pure: depends only on `engine`'s model/eval data and `cfg` (not on
 /// `cfg.executor_threads`).
 pub fn simulate_timeline(engine: &Engine, cfg: &ServeConfig) -> Timeline {
+    let mut rec = FlightRecorder::new(recorder::DEFAULT_CAPACITY);
+    simulate_timeline_traced(engine, cfg, &mut Probe { sink: &mut NullSink, rec: &mut rec })
+}
+
+/// [`simulate_timeline`] with telemetry: every discrete-event call
+/// site reports to `probe` (cycle-stamped, deterministic — see
+/// [`crate::obs`]). The returned timeline is identical to the untraced
+/// path; the probe's flight recorder doubles as the context dump when
+/// the deadlock watchdog trips.
+pub fn simulate_timeline_traced(
+    engine: &Engine,
+    cfg: &ServeConfig,
+    probe: &mut Probe,
+) -> Timeline {
     assert!(cfg.lanes >= 1, "need at least one lane");
     assert!(cfg.total_requests >= 1, "need at least one request");
     assert!(
@@ -236,6 +283,7 @@ pub fn simulate_timeline(engine: &Engine, cfg: &ServeConfig) -> Timeline {
             build_timeline(cfg.seed, &geometry, &agent, &arrivals)
         }
     };
+    emit_fault_history(probe, 0, &faults.events);
 
     let mut gen = LoadGen::new(
         cfg.seed,
@@ -272,6 +320,7 @@ pub fn simulate_timeline(engine: &Engine, cfg: &ServeConfig) -> Timeline {
                         slot: 0,
                     });
                     pending.push(t, id);
+                    probe.emit(t, TraceEvent::RequestEnqueue { id, chip: 0 });
                     max_pending = max_pending.max(pending.len());
                     assert!(
                         pending.len() <= cfg.queue_cap,
@@ -286,6 +335,7 @@ pub fn simulate_timeline(engine: &Engine, cfg: &ServeConfig) -> Timeline {
             }
             EV_LANE_FREE => {
                 free_lanes.insert(key as usize);
+                probe.emit(t, TraceEvent::LaneFree { chip: 0, lane: key as usize });
             }
             _ => {} // deadline: dispatch attempt below
         }
@@ -304,6 +354,7 @@ pub fn simulate_timeline(engine: &Engine, cfg: &ServeConfig) -> Timeline {
                 Arc::new(epoch_masks.with_fc_rows(b))
             };
             let batch_id = jobs.len();
+            probe.emit(start, TraceEvent::BatchFormed { batch: batch_id, chip: 0, lane, size: b });
             let mut image_idxs = Vec::with_capacity(b);
             for (slot, (_, rid)) in batch.iter().enumerate() {
                 let client = {
@@ -315,6 +366,13 @@ pub fn simulate_timeline(engine: &Engine, cfg: &ServeConfig) -> Timeline {
                     image_idxs.push(r.image_idx);
                     r.client
                 };
+                probe.emit(
+                    start,
+                    TraceEvent::RequestDispatch { id: *rid, chip: 0, batch: batch_id },
+                );
+                // completion is fixed at dispatch by the cycle model, so
+                // the complete event is stamped with the batch end
+                probe.emit(end, TraceEvent::RequestComplete { id: *rid, chip: 0, batch: batch_id });
                 let think = gen.think(client);
                 heap.push(Reverse((end + think, EV_CLIENT_READY, client as u64)));
             }
@@ -335,10 +393,13 @@ pub fn simulate_timeline(engine: &Engine, cfg: &ServeConfig) -> Timeline {
         cfg.total_requests,
         "closed loop must issue every budgeted request"
     );
-    debug_assert!(
-        requests.iter().all(|r| r.complete_cycle > r.enqueue_cycle),
-        "every request must complete"
-    );
+    // queue deadlock watchdog: a request the loop never dispatched
+    // means the lane/batcher interplay wedged — dump the flight
+    // recorder so the last events before the wedge are visible
+    if requests.iter().any(|r| r.complete_cycle <= r.enqueue_cycle) {
+        eprintln!("{}", probe.rec.dump("serve deadlock watchdog: request(s) never completed"));
+        panic!("every request must complete");
+    }
     // The makespan is the last *completion* — phantom tail events
     // (stale batch deadlines, think-time wake-ups of retired clients)
     // must not stretch the measured serving time.
@@ -356,7 +417,20 @@ pub fn simulate_timeline(engine: &Engine, cfg: &ServeConfig) -> Timeline {
 /// End to end: simulate the timeline, execute the batches on the real
 /// worker pool, assemble the report.
 pub fn run(engine: &Arc<Engine>, cfg: &ServeConfig) -> Result<metrics::ServeReport> {
-    let timeline = simulate_timeline(engine, cfg);
+    run_traced(engine, cfg, &mut NullSink)
+}
+
+/// [`run`] with telemetry: the deterministic event stream flows to
+/// `sink` (see [`crate::obs`]). Tracing never changes the report —
+/// property-tested in `rust/tests/obs.rs`.
+pub fn run_traced(
+    engine: &Arc<Engine>,
+    cfg: &ServeConfig,
+    sink: &mut dyn TraceSink,
+) -> Result<metrics::ServeReport> {
+    let mut rec = FlightRecorder::new(recorder::DEFAULT_CAPACITY);
+    let timeline =
+        simulate_timeline_traced(engine, cfg, &mut Probe { sink: &mut *sink, rec: &mut rec });
     let predictions = pool::execute(engine, &timeline.jobs, cfg.executor_threads, cfg.queue_cap)?;
     Ok(metrics::assemble(engine, cfg, timeline, predictions))
 }

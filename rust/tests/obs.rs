@@ -1,0 +1,160 @@
+//! Telemetry acceptance tests (DESIGN.md §10).
+//!
+//! 1. **Golden stream determinism**: the rendered trace stream of the
+//!    canonical serve and traffic scenarios is byte-identical at any
+//!    `--workers` value and across repeated runs — everything is keyed
+//!    to simulated cycles, never wall clock.
+//! 2. **Observer inertness**: attaching a sink changes no metric and
+//!    no prediction (the proptest in `proptests.rs` fuzzes this; here
+//!    the canonical scenarios pin it).
+//! 3. **Chrome export**: the `--trace` JSON is structurally sound —
+//!    only `X`/`i`/`b`/`e`/`M` phases, and the flash-crowd trace
+//!    actually shows the shed and scale-up story.
+//! 4. **Nondet quarantine**: executor steals never appear in the
+//!    deterministic stream or the export — they live on the separate
+//!    nondet channel.
+
+use hyca::coordinator::{exp_serve, exp_traffic, RunOpts};
+use hyca::fleet;
+use hyca::inference::Engine;
+use hyca::obs::{render_stream, MemorySink};
+use hyca::serve;
+use std::sync::Arc;
+
+const SEED: u64 = 0xC0FFEE;
+
+fn opts(seed: u64, threads: usize) -> RunOpts {
+    RunOpts {
+        seed,
+        threads,
+        out_dir: std::env::temp_dir().join("hyca_obs_results"),
+        builtin_model: true,
+        ..RunOpts::default()
+    }
+}
+
+fn serve_stream(workers: usize) -> (String, f64) {
+    let engine = Arc::new(Engine::builtin());
+    let cfg = exp_serve::scenario_config(SEED, true, workers);
+    let mut sink = MemorySink::default();
+    let report = serve::run_traced(&engine, &cfg, &mut sink).unwrap();
+    (render_stream(&sink.events), report.accuracy)
+}
+
+fn traffic_stream(workers: usize) -> (String, Vec<hyca::obs::TracedEvent>) {
+    let engine = Arc::new(Engine::builtin());
+    let cfg = exp_traffic::traffic_config("flash_crowd", SEED, true, workers);
+    let mut sink = MemorySink::default();
+    fleet::run_traced(&engine, &cfg, &mut sink).unwrap();
+    (render_stream(&sink.events), sink.events)
+}
+
+#[test]
+fn serve_trace_stream_is_byte_identical_at_any_worker_count() {
+    let (narrow, acc1) = serve_stream(1);
+    let (wide, acc8) = serve_stream(8);
+    assert!(!narrow.is_empty(), "the burst scenario must emit events");
+    assert_eq!(narrow, wide, "worker count leaked into the serve trace");
+    assert_eq!(acc1, acc8);
+    let (again, _) = serve_stream(1);
+    assert_eq!(narrow, again, "the stream must replay from its seed");
+    // the burst scenario's story is in the stream: faults arrive, the
+    // scan detects them, remaps apply, requests flow
+    for needle in [
+        " request_enqueue ",
+        " batch_formed ",
+        " request_complete ",
+        " fault_arrival ",
+        " scan_detect ",
+        " remap_applied ",
+    ] {
+        assert!(narrow.contains(needle), "missing {needle:?} in stream");
+    }
+}
+
+#[test]
+fn traffic_trace_stream_is_byte_identical_at_any_worker_count() {
+    let (narrow, events) = traffic_stream(1);
+    let (wide, _) = traffic_stream(8);
+    assert_eq!(narrow, wide, "worker count leaked into the traffic trace");
+    assert!(!events.is_empty());
+    // flash crowd: admission control sheds and the autoscaler reacts
+    for needle in [" shed ", " autoscale_tick ", " scale_up "] {
+        assert!(narrow.contains(needle), "missing {needle:?} in stream");
+    }
+}
+
+#[test]
+fn tracing_leaves_the_canonical_reports_untouched() {
+    let engine = Arc::new(Engine::builtin());
+    // serve burst
+    let scfg = exp_serve::scenario_config(SEED, true, 2);
+    let plain = serve::run(&engine, &scfg).unwrap();
+    let mut sink = MemorySink::default();
+    let traced = serve::run_traced(&engine, &scfg, &mut sink).unwrap();
+    assert_eq!(traced.digest(), plain.digest());
+    assert_eq!(traced.predictions, plain.predictions);
+    // traffic flash_crowd
+    let tcfg = exp_traffic::traffic_config("flash_crowd", SEED, true, 2);
+    let fplain = fleet::run(&engine, &tcfg).unwrap();
+    let mut fsink = MemorySink::default();
+    let ftraced = fleet::run_traced(&engine, &tcfg, &mut fsink).unwrap();
+    assert_eq!(ftraced.digest(), fplain.digest());
+    assert_eq!(ftraced.predictions, fplain.predictions);
+}
+
+#[test]
+fn executor_steals_stay_on_the_nondet_channel() {
+    let engine = Arc::new(Engine::builtin());
+    let cfg = exp_traffic::traffic_config("flash_crowd", SEED, true, 4);
+    let mut sink = MemorySink::default();
+    fleet::run_traced(&engine, &cfg, &mut sink).unwrap();
+    // whatever the scheduler did, the deterministic stream is clean
+    assert!(
+        !render_stream(&sink.events).contains("executor_steal"),
+        "steals leaked into the deterministic stream"
+    );
+    for e in &sink.nondet {
+        assert!(
+            matches!(e.event, hyca::obs::TraceEvent::ExecutorSteal { .. }),
+            "only steals belong on the nondet channel"
+        );
+    }
+}
+
+#[test]
+fn chrome_export_is_structurally_sound_and_worker_invariant() {
+    let trace = exp_traffic::trace_json(&opts(SEED, 1), true).unwrap();
+    let wide = exp_traffic::trace_json(&opts(SEED, 8), true).unwrap();
+    assert_eq!(trace, wide, "worker count leaked into the Chrome export");
+    assert!(trace.contains("\"traceEvents\": ["));
+    assert!(trace.contains("1 trace us == 1 simulated cycle"));
+    // the flash-crowd story survives the export
+    for name in ["\"name\": \"shed\"", "\"name\": \"scale_up\"", "\"name\": \"batch\""] {
+        assert!(trace.contains(name), "missing {name} in export");
+    }
+    // only the documented phases appear
+    let mut phases = 0;
+    for part in trace.split("\"ph\": \"").skip(1) {
+        let ph = &part[..1];
+        assert!(
+            matches!(ph, "X" | "i" | "b" | "e" | "M"),
+            "unexpected trace phase {ph:?}"
+        );
+        phases += 1;
+    }
+    assert!(phases > 0, "the export must contain events");
+    // and steals never reach the export
+    assert!(!trace.contains("executor_steal"));
+}
+
+#[test]
+fn serve_and_fleet_exports_cover_their_scenarios() {
+    let serve_trace = exp_serve::trace_json(&opts(SEED, 2), true).unwrap();
+    assert!(serve_trace.contains("\"name\": \"fault_arrival\""));
+    assert!(serve_trace.contains("\"name\": \"remap_applied\""));
+    assert!(serve_trace.contains("serve/burst"));
+    let fleet_trace = hyca::coordinator::exp_fleet::trace_json(&opts(SEED, 2), true).unwrap();
+    assert!(fleet_trace.contains("\"name\": \"drained\""));
+    assert!(fleet_trace.contains("fleet/degraded_continuity"));
+}

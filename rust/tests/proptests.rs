@@ -731,6 +731,61 @@ fn prop_scenario_spec_round_trips_through_canonical_text() {
 }
 
 #[test]
+fn prop_tracing_is_inert_and_deterministic() {
+    // The telemetry contract (DESIGN.md §10): a trace sink is a pure
+    // observer — attaching one changes no prediction, no metric, no
+    // digest — and the deterministic stream it captures is a pure
+    // function of simulated cycles, byte-identical at any executor
+    // width.
+    check("tracing inert + worker-invariant stream", 6, |g| {
+        let engine = std::sync::Arc::new(hyca::inference::Engine::builtin());
+        let n_chips = g.usize_in(1, 4);
+        let clients = g.usize_in(1, 3) * n_chips;
+        let cfg = hyca::fleet::FleetConfig {
+            seed: g.usize_in(0, 1 << 20) as u64,
+            chips: vec![
+                hyca::fleet::ChipSpec {
+                    dims: Dims::new(8, 8),
+                    lanes: g.usize_in(1, 3),
+                };
+                n_chips
+            ],
+            policy: *g.choose(&hyca::fleet::RoutingPolicy::all()),
+            max_batch: g.usize_in(1, 5),
+            max_wait_cycles: g.usize_in(0, 10_000) as u64,
+            clients,
+            think_cycles: g.usize_in(0, 1_000) as u64,
+            total_requests: g.usize_in(4, 8 * n_chips),
+            queue_cap: clients,
+            executor_threads: 1,
+            windows: 4,
+            faults: None,
+            lifecycle: hyca::fleet::LifecyclePolicy::NEVER,
+            open_loop: None,
+            admission: None,
+            autoscale: None,
+        };
+        let plain = hyca::fleet::run(&engine, &cfg).unwrap();
+        let mut sink = hyca::obs::MemorySink::default();
+        let traced = hyca::fleet::run_traced(&engine, &cfg, &mut sink).unwrap();
+        assert_eq!(traced.digest(), plain.digest(), "tracing changed the metrics");
+        assert_eq!(traced.predictions, plain.predictions);
+        assert!(!sink.events.is_empty(), "a traced run must emit events");
+        // the deterministic stream is invariant to the executor width
+        let mut wide_cfg = cfg.clone();
+        wide_cfg.executor_threads = g.usize_in(2, 6);
+        let mut wide_sink = hyca::obs::MemorySink::default();
+        let wide = hyca::fleet::run_traced(&engine, &wide_cfg, &mut wide_sink).unwrap();
+        assert_eq!(wide.digest(), plain.digest());
+        assert_eq!(
+            hyca::obs::render_stream(&wide_sink.events),
+            hyca::obs::render_stream(&sink.events),
+            "executor width leaked into the trace stream"
+        );
+    });
+}
+
+#[test]
 fn prop_one_chip_fleet_degenerates_to_serve() {
     // The fleet degeneracy contract: for random serving configurations
     // — load shape, batcher settings, lanes, and optional mid-run

@@ -46,7 +46,7 @@ fn bench_json_is_byte_identical_at_any_worker_count() {
 fn bench_json_has_the_documented_schema() {
     let json = exp_traffic::bench_json(&opts(SEED, 2), true).unwrap();
     for key in [
-        "\"schema\": \"hyca-traffic-bench-v1\"",
+        "\"schema\": \"hyca-traffic-bench-v2\"",
         "\"scenarios\": [",
         "\"scenario\": \"open_steady\"",
         "\"scenario\": \"flash_crowd\"",
@@ -58,6 +58,16 @@ fn bench_json_has_the_documented_schema() {
         "\"slo_attainment\":",
         "\"active_chips\": [[0, ",
         "\"spec_hash\":",
+        // the PR 7 windowed section: per-window series collected from
+        // the deterministic trace stream, one entry per preset
+        "\"timeseries\": [",
+        "\"window_cycles\":",
+        "\"queue_depth\":",
+        "\"in_flight\":",
+        "\"enqueued\":",
+        "\"completed\":",
+        "\"live_faults\":",
+        "\"per_chip_completed\":",
     ] {
         assert!(json.contains(key), "missing {key} in:\n{json}");
     }
@@ -144,6 +154,43 @@ fn autoscaler_tracks_the_spike_and_never_flaps() {
             auto.max_chips
         );
     }
+}
+
+#[test]
+fn windowed_active_chips_expose_the_flash_crowd_ramp() {
+    // the satellite fix for the autoscale-tick sampling artefact: the
+    // legacy `active_chips` trajectory only records decision points,
+    // while the windowed series samples the gauge at every window edge
+    // — so the ramp is visible even between autoscale ticks, and the
+    // two views agree at the endpoints
+    use hyca::obs::{timeseries, MemorySink};
+    let engine = Arc::new(Engine::builtin());
+    let cfg = exp_traffic::traffic_config("flash_crowd", SEED, true, 2);
+    let mut sink = MemorySink::default();
+    let report = fleet::run_traced(&engine, &cfg, &mut sink).unwrap();
+    let series = timeseries::collect(
+        &sink.events,
+        report.total_cycles,
+        timeseries::DEFAULT_WINDOWS,
+        report.chips,
+        report.active_chips[0].1,
+    );
+    assert_eq!(series.windows.len(), timeseries::DEFAULT_WINDOWS);
+    let active: Vec<usize> = series.windows.iter().map(|w| w.active_chips).collect();
+    assert!(
+        active.iter().max() > active.iter().min(),
+        "the spike must move the windowed active-chip gauge: {active:?}"
+    );
+    assert_eq!(
+        *active.last().unwrap(),
+        report.active_chips.last().unwrap().1,
+        "the final window must agree with the legacy trajectory"
+    );
+    // conservation: the windowed counters partition the run's totals
+    let completed: u64 = series.windows.iter().map(|w| w.completed).sum();
+    assert_eq!(completed as usize, report.total_requests);
+    let shed: u64 = series.windows.iter().map(|w| w.shed).sum();
+    assert_eq!(shed as usize, report.shed);
 }
 
 #[test]
