@@ -1,0 +1,352 @@
+//! `audit` — latency attribution + fault forensics (`repro audit`,
+//! DESIGN.md §11).
+//!
+//! Runs four scenario presets traced with the streaming span ledger
+//! ([`crate::obs::attrib::SpanLedger`]) teed alongside a buffering
+//! sink for the windowed collector:
+//!
+//! * `degraded_continuity` — the drain/re-admit scenario: the preset
+//!   where fault episodes, re-sharding and fault-induced stall are
+//!   load-bearing;
+//! * `open_steady`, `flash_crowd`, `open_diurnal` — the open-loop
+//!   traffic presets, where head-of-line blocking and batch-formation
+//!   wait dominate.
+//!
+//! For every completed request the five attribution components sum
+//! **exactly** to its end-to-end cycles — asserted here on every run,
+//! property-tested in `rust/tests/audit.rs`. The machine-readable
+//! baseline (`BENCH_audit.json`, schema `hyca-audit-bench-v1`) is a
+//! pure function of the master seed, byte-identical at any
+//! `--workers` value; per-chip utilization is priced from the
+//! timeseries collector's busy-lane gauge (the integral the ledger
+//! cross-checks), so the audit and `BENCH_traffic.json` can never
+//! disagree about occupancy.
+
+use std::sync::Arc;
+
+use super::{Experiment, RunOpts};
+use crate::fleet::metrics::FleetReport;
+use crate::fleet::{self, FleetConfig};
+use crate::inference::Engine;
+use crate::obs::attrib::{AuditReport, SpanLedger};
+use crate::obs::{timeseries, MemorySink, TeeSink, TimeSeries};
+use crate::scenario::{self, Cell, ScenarioSpec};
+use crate::util::table::{f, Table};
+use anyhow::{ensure, Result};
+
+pub struct AuditExp;
+
+/// The audited presets, in presentation order: the fault-forensics
+/// scenario first, then the three open-loop traffic presets.
+pub const PRESETS: [&str; 4] =
+    ["degraded_continuity", "open_steady", "flash_crowd", "open_diurnal"];
+
+fn audit_spec(name: &str) -> ScenarioSpec {
+    scenario::preset(name).expect("audit preset is registered")
+}
+
+/// Lower one audited preset into its runnable [`FleetConfig`] (public
+/// so the integration tests run exactly what the bench reports).
+pub fn audit_config(name: &str, seed: u64, smoke: bool, threads: usize) -> FleetConfig {
+    let spec = audit_spec(name);
+    scenario::lower_fleet(&spec, &Cell::base(&spec), smoke, seed, threads)
+}
+
+/// One preset's results: the fleet report, the closed span ledger and
+/// the windowed series.
+pub struct PresetAudit {
+    pub name: String,
+    pub hash: String,
+    pub report: FleetReport,
+    pub audit: AuditReport,
+    pub series: TimeSeries,
+}
+
+/// Run one preset traced: the span ledger streams the emissions while
+/// a memory sink buffers them for the windowed collector.
+pub fn run_preset(
+    engine: &Arc<Engine>,
+    name: &str,
+    opts: &RunOpts,
+    smoke: bool,
+) -> Result<PresetAudit> {
+    let spec = audit_spec(name);
+    let hash = spec.spec_hash();
+    let cfg = audit_config(name, opts.seed, smoke, opts.threads);
+    let mut ledger = SpanLedger::new(&cfg.lane_counts());
+    let mut mem = MemorySink::default();
+    let report = {
+        let mut tee = TeeSink { a: &mut ledger, b: &mut mem };
+        fleet::run_traced(engine, &cfg, &mut tee)?
+    };
+    let audit = ledger.finish(report.total_cycles, &report.correct);
+    // the attribution contract, enforced on every run of every preset:
+    // components sum exactly to end-to-end cycles
+    for sp in &audit.spans {
+        ensure!(
+            sp.components_sum() == sp.end_to_end(),
+            "attribution leak on {name} request {}: components {} != e2e {}",
+            sp.id,
+            sp.components_sum(),
+            sp.end_to_end()
+        );
+    }
+    ensure!(
+        audit.spans.len() == report.total_requests,
+        "{name}: ledger closed {} spans for {} admitted requests",
+        audit.spans.len(),
+        report.total_requests
+    );
+    let series = timeseries::collect(
+        &mem.events,
+        report.total_cycles,
+        timeseries::DEFAULT_WINDOWS,
+        report.chips,
+        report.active_chips[0].1,
+    );
+    // the collector's busy-lane integral and the ledger's must agree
+    // (same stream, two independent folds)
+    for c in &audit.chips {
+        let windowed: u64 =
+            series.windows.iter().map(|w| w.per_chip_busy_lane_cycles[c.chip]).sum();
+        ensure!(
+            windowed == c.busy_lane_cycles,
+            "{name} chip {}: collector occupancy {windowed} != ledger {}",
+            c.chip,
+            c.busy_lane_cycles
+        );
+    }
+    Ok(PresetAudit { name: name.to_string(), hash, report, audit, series })
+}
+
+fn run_presets(opts: &RunOpts, smoke: bool, only: Option<&str>) -> Result<Vec<PresetAudit>> {
+    let engine = Arc::new(Engine::builtin());
+    let mut out = Vec::new();
+    for name in PRESETS {
+        if only.is_some_and(|o| o != name) {
+            continue;
+        }
+        out.push(run_preset(&engine, name, opts, smoke)?);
+    }
+    ensure!(!out.is_empty(), "unknown audit preset — choose from: {}", PRESETS.join(", "));
+    Ok(out)
+}
+
+fn attribution_table(results: &[PresetAudit]) -> Table {
+    let mut t = Table::new(
+        "latency attribution — where every admitted request's \
+         end-to-end cycles went (components sum exactly to e2e) \
+         [model: builtin, backend: native]",
+        &[
+            "scenario",
+            "requests",
+            "e2e_cycles",
+            "batch_wait",
+            "queue_wait",
+            "fault_stall",
+            "execution",
+            "stalled",
+            "resharded",
+        ],
+    );
+    for run in results {
+        let (e2e, _adm, batch, queue, fault, exec) = run.audit.totals();
+        let stalled = run.audit.spans.iter().filter(|s| s.fault_stall > 0).count();
+        let resharded = run.audit.spans.iter().filter(|s| s.reshards > 0).count();
+        t.push_row(vec![
+            run.name.clone(),
+            run.audit.spans.len().to_string(),
+            e2e.to_string(),
+            batch.to_string(),
+            queue.to_string(),
+            fault.to_string(),
+            exec.to_string(),
+            stalled.to_string(),
+            resharded.to_string(),
+        ]);
+    }
+    t
+}
+
+fn episode_table(results: &[PresetAudit]) -> Table {
+    let mut t = Table::new(
+        "fault forensics — per-episode cost (cycles in simulated time; \
+         an open episode never resolved inside the run)",
+        &[
+            "scenario",
+            "chip",
+            "start",
+            "end",
+            "faults",
+            "remaps",
+            "remap_lat_mean",
+            "stalled",
+            "cycles_lost",
+            "dip_accuracy",
+        ],
+    );
+    for run in results {
+        for e in &run.audit.episodes {
+            t.push_row(vec![
+                run.name.clone(),
+                e.chip.to_string(),
+                e.start_cycle.to_string(),
+                e.end_cycle.map_or("open".to_string(), |c| c.to_string()),
+                e.faults.to_string(),
+                e.remaps.to_string(),
+                e.mean_remap_latency().map_or("-".to_string(), |m| f(m, 1)),
+                e.requests_stalled.to_string(),
+                e.cycles_lost.to_string(),
+                e.dip_accuracy().map_or("-".to_string(), |a| f(a, 4)),
+            ]);
+        }
+    }
+    t
+}
+
+fn utilization_table(results: &[PresetAudit]) -> Table {
+    let mut t = Table::new(
+        "per-chip occupancy — utilization from the timeseries \
+         collector's busy-lane gauge; hol = all-lanes-busy \
+         (head-of-line-blocking) cycles",
+        &["scenario", "chip", "lanes", "served", "utilization", "hol_cycles", "drained_cycles"],
+    );
+    for run in results {
+        for c in &run.audit.chips {
+            t.push_row(vec![
+                run.name.clone(),
+                c.chip.to_string(),
+                c.lanes.to_string(),
+                c.served.to_string(),
+                f(c.utilization(run.audit.horizon), 4),
+                c.hol_cycles.to_string(),
+                c.drained_cycles.to_string(),
+            ]);
+        }
+    }
+    t
+}
+
+fn episode_json(run: &PresetAudit) -> String {
+    let rows: Vec<String> = run
+        .audit
+        .episodes
+        .iter()
+        .map(|e| {
+            format!(
+                "      {{\"chip\": {}, \"start_cycle\": {}, \"end_cycle\": {}, \
+                 \"faults\": {}, \"remaps\": {}, \"mean_remap_latency\": {}, \
+                 \"max_remap_latency\": {}, \"requests_stalled\": {}, \
+                 \"cycles_lost\": {}, \"dip_requests\": {}, \"dip_accuracy\": {}}}",
+                e.chip,
+                e.start_cycle,
+                e.end_cycle.map_or("null".to_string(), |c| c.to_string()),
+                e.faults,
+                e.remaps,
+                e.mean_remap_latency().map_or("null".to_string(), |m| format!("{m:.6}")),
+                e.remap_latency_max,
+                e.requests_stalled,
+                e.cycles_lost,
+                e.dip_requests,
+                e.dip_accuracy().map_or("null".to_string(), |a| format!("{a:.6}")),
+            )
+        })
+        .collect();
+    if rows.is_empty() {
+        "[]".to_string()
+    } else {
+        format!("[\n{}\n     ]", rows.join(",\n"))
+    }
+}
+
+fn chips_json(run: &PresetAudit) -> String {
+    let rows: Vec<String> = run
+        .audit
+        .chips
+        .iter()
+        .map(|c| {
+            format!(
+                "      {{\"chip\": {}, \"lanes\": {}, \"served\": {}, \
+                 \"busy_lane_cycles\": {}, \"utilization\": {:.6}, \
+                 \"hol_cycles\": {}, \"drained_cycles\": {}}}",
+                c.chip,
+                c.lanes,
+                c.served,
+                c.busy_lane_cycles,
+                c.utilization(run.audit.horizon),
+                c.hol_cycles,
+                c.drained_cycles,
+            )
+        })
+        .collect();
+    format!("[\n{}\n     ]", rows.join(",\n"))
+}
+
+fn audit_json(seed: u64, smoke: bool, results: &[PresetAudit]) -> String {
+    let mut s = String::new();
+    s.push_str("{\n");
+    s.push_str("  \"schema\": \"hyca-audit-bench-v1\",\n");
+    s.push_str(&format!("  \"seed\": {seed},\n"));
+    s.push_str(&format!("  \"smoke\": {smoke},\n"));
+    s.push_str("  \"presets\": [\n");
+    for (i, run) in results.iter().enumerate() {
+        let sep = if i + 1 == results.len() { "" } else { "," };
+        let (e2e, adm, batch, queue, fault, exec) = run.audit.totals();
+        let stalled = run.audit.spans.iter().filter(|s| s.fault_stall > 0).count();
+        let resharded = run.audit.spans.iter().filter(|s| s.reshards > 0).count();
+        s.push_str(&format!(
+            "    {{\"scenario\": \"{}\", \"spec_hash\": \"{}\", \"n_chips\": {}, \
+             \"requests\": {}, \"horizon_cycles\": {},\n     \
+             \"attribution\": {{\"end_to_end_cycles\": {e2e}, \
+             \"admission_wait_cycles\": {adm}, \"batch_wait_cycles\": {batch}, \
+             \"queue_wait_cycles\": {queue}, \"fault_stall_cycles\": {fault}, \
+             \"execution_cycles\": {exec}}},\n     \
+             \"stalled_requests\": {stalled}, \"resharded_requests\": {resharded},\n     \
+             \"episodes\": {},\n     \
+             \"chips\": {}}}{sep}\n",
+            run.name,
+            run.hash,
+            run.report.chips,
+            run.audit.spans.len(),
+            run.audit.horizon,
+            episode_json(run),
+            chips_json(run),
+        ));
+    }
+    s.push_str("  ]\n}\n");
+    s
+}
+
+/// Full run: report tables + the JSON baseline. `only` restricts to a
+/// single preset (`repro audit <preset>` — tables only, no baseline).
+pub fn run_full(opts: &RunOpts, smoke: bool, only: Option<&str>) -> Result<(Vec<Table>, String)> {
+    let results = run_presets(opts, smoke, only)?;
+    let json = audit_json(opts.seed, smoke, &results);
+    let mut tables = vec![attribution_table(&results), utilization_table(&results)];
+    if results.iter().any(|r| !r.audit.episodes.is_empty()) {
+        tables.insert(1, episode_table(&results));
+    }
+    Ok((tables, json))
+}
+
+/// The JSON baseline alone (what `BENCH_audit.json` holds and the
+/// golden test compares across `--workers` values).
+pub fn bench_json(opts: &RunOpts, smoke: bool) -> Result<String> {
+    let results = run_presets(opts, smoke, None)?;
+    Ok(audit_json(opts.seed, smoke, &results))
+}
+
+impl Experiment for AuditExp {
+    fn id(&self) -> &'static str {
+        "audit"
+    }
+
+    fn title(&self) -> &'static str {
+        "Audit: latency attribution + fault forensics over the trace bus"
+    }
+
+    fn run(&self, opts: &RunOpts) -> Result<Vec<Table>> {
+        let (tables, _json) = run_full(opts, opts.fast, None)?;
+        Ok(tables)
+    }
+}

@@ -16,7 +16,7 @@
 //! Like the other serving drivers this one is thin — every preset
 //! lowers through `scenario::lower_fleet`, runs on the **builtin**
 //! engine, and the machine-readable baseline (`BENCH_traffic.json`,
-//! schema `hyca-traffic-bench-v2`) is a pure function of the master
+//! schema `hyca-traffic-bench-v3`) is a pure function of the master
 //! seed: byte-identical at any `--workers` value (pinned by
 //! `rust/tests/traffic.rs`). Since PR 7 every preset runs traced
 //! (`fleet::run_traced` + [`crate::obs`]): the `scenarios` rows keep
@@ -24,7 +24,11 @@
 //! collector — so flash-crowd ramps are visible *between* the
 //! autoscale decisions the legacy `active_chips` trajectory records —
 //! and `--trace <path>` exports the flash_crowd run as a
-//! Perfetto-loadable Chrome trace.
+//! Perfetto-loadable Chrome trace. Schema v3 adds the per-chip
+//! `per_chip_busy_lane_cycles` occupancy series (lane·cycles per
+//! window) to the `timeseries` section — the collector gauge the
+//! `repro audit` utilization numbers are priced from — leaving the
+//! byte-frozen v1 `scenarios` rows untouched.
 
 use std::sync::Arc;
 
@@ -171,7 +175,7 @@ fn json_row(name: &str, hash: &str, r: &FleetReport, sep: &str) -> String {
 fn traffic_json(seed: u64, smoke: bool, results: &[PresetRun]) -> String {
     let mut s = String::new();
     s.push_str("{\n");
-    s.push_str("  \"schema\": \"hyca-traffic-bench-v2\",\n");
+    s.push_str("  \"schema\": \"hyca-traffic-bench-v3\",\n");
     s.push_str(&format!("  \"seed\": {seed},\n"));
     s.push_str(&format!("  \"smoke\": {smoke},\n"));
     s.push_str("  \"scenarios\": [\n");

@@ -15,6 +15,7 @@ pub mod exp_fig12;
 pub mod exp_fig13;
 pub mod exp_fig14;
 pub mod exp_fig15;
+pub mod exp_audit;
 pub mod exp_fleet;
 pub mod exp_perf;
 pub mod exp_scenario;
@@ -108,6 +109,7 @@ pub fn registry() -> Vec<Box<dyn Experiment>> {
         Box::new(exp_fleet::FleetExp),
         Box::new(exp_traffic::TrafficExp),
         Box::new(exp_perf::PerfExp),
+        Box::new(exp_audit::AuditExp),
     ]
 }
 
@@ -127,7 +129,7 @@ mod tests {
         assert_eq!(ids.len(), set.len());
         for want in [
             "fig2", "fig3", "fig9", "fig10", "fig11", "fig12", "fig13", "fig14", "fig15",
-            "table1", "serve", "fleet", "traffic", "perf",
+            "table1", "serve", "fleet", "traffic", "perf", "audit",
         ] {
             assert!(ids.contains(&want), "missing {want}");
         }

@@ -189,6 +189,13 @@ impl FleetConfig {
             autoscale: None,
         }
     }
+
+    /// Lanes per chip, in chip order — what the attribution ledger
+    /// ([`crate::obs::SpanLedger`]) needs to price the all-lanes-busy
+    /// (head-of-line) measure of each chip.
+    pub fn lane_counts(&self) -> Vec<usize> {
+        self.chips.iter().map(|c| c.lanes).collect()
+    }
 }
 
 /// One dispatched batch: a serve [`BatchJob`] plus the chip it ran on.

@@ -21,6 +21,15 @@
 //!                                #   work stealing, threads × chips);
 //!                                #   writes BENCH_perf.json (run from repo
 //!                                #   root; timing is nondeterministic)
+//! repro audit [preset] [flags]   # latency attribution + fault forensics
+//!                                #   over the trace bus; the full run writes
+//!                                #   BENCH_audit.json (run from repo root),
+//!                                #   a single preset prints tables only
+//! repro diff <old.json> <new.json>
+//!                                # compare two BENCH baselines under the
+//!                                #   schema's typed tolerance rules; exit 1
+//!                                #   on regression (missing key, drift
+//!                                #   outside tolerance), 0 otherwise
 //! repro info                     # artifact status + active backend
 //!
 //! flags: --configs N   Monte-Carlo configs per point (default 10000)
@@ -328,6 +337,66 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
     Ok(())
 }
 
+fn cmd_audit(rest: &[String]) -> Result<()> {
+    let args = Args::parse(rest, &serve_flag_specs())?;
+    let mut opts = opts_from(&args)?;
+    opts.threads = args.get_parse("workers", opts.threads)?;
+    let smoke = args.has("smoke") || opts.fast;
+    if args.get("trace").is_some() {
+        bail!("--trace is supported on `repro serve|fleet|traffic` only");
+    }
+    let only = args.positionals.first().map(|s| s.as_str());
+    eprintln!(
+        "[repro] audit — latency attribution {} (seed={:#x}, executor workers={}{})",
+        if smoke { "smoke" } else { "full" },
+        opts.seed,
+        opts.threads,
+        match only {
+            Some(p) => format!(", preset={p}"),
+            None => String::new(),
+        }
+    );
+    let t0 = std::time::Instant::now();
+    let (tables, json) = coordinator::exp_audit::run_full(&opts, smoke, only)?;
+    report::emit(&opts.out_dir, "audit", &tables)?;
+    if only.is_none() {
+        // Like the other bench baselines, the file lands in the current
+        // directory — run from the repo root. A single-preset run is NOT
+        // the baseline (it would silently clobber the full sweep), so it
+        // is only printed as tables.
+        std::fs::write("BENCH_audit.json", &json).context("writing BENCH_audit.json")?;
+        eprintln!(
+            "[repro] audit done in {:.1}s — ledger written to BENCH_audit.json",
+            t0.elapsed().as_secs_f64()
+        );
+    } else {
+        eprintln!(
+            "[repro] audit done in {:.1}s — single preset, BENCH_audit.json left \
+             untouched (rerun without a preset to regenerate)",
+            t0.elapsed().as_secs_f64()
+        );
+    }
+    Ok(())
+}
+
+fn cmd_diff(rest: &[String]) -> Result<()> {
+    let args = Args::parse(rest, &[])?;
+    let [old_path, new_path] = args.positionals.as_slice() else {
+        bail!("usage: repro diff <old.json> <new.json> — exit 1 on regression");
+    };
+    let old = std::fs::read_to_string(old_path)
+        .with_context(|| format!("reading baseline {old_path}"))?;
+    let new = std::fs::read_to_string(new_path)
+        .with_context(|| format!("reading candidate {new_path}"))?;
+    let report = hyca::obs::audit::diff_text(&old, &new)
+        .with_context(|| format!("comparing {old_path} against {new_path}"))?;
+    print!("{}", report.render());
+    if report.regressions() > 0 {
+        bail!("{} regression(s) between {old_path} and {new_path}", report.regressions());
+    }
+    Ok(())
+}
+
 fn cmd_info() -> Result<()> {
     println!("built-in backend kind: {}", hyca::runtime::default_backend_kind());
     match hyca::runtime::artifacts_dir() {
@@ -396,7 +465,7 @@ fn main() -> Result<()> {
                  JSON of the canonical scenario\n  --chips <value>    \
                  fleet only: restrict the grid to one cluster size\n",
                 usage(
-                    "repro <list|exp|all|serve|fleet|scenario|traffic|perf|info>",
+                    "repro <list|exp|all|serve|fleet|scenario|traffic|perf|audit|diff|info>",
                     "HyCA reproduction CLI",
                     &flag_specs()
                 )
@@ -413,6 +482,8 @@ fn main() -> Result<()> {
         "scenario" => cmd_scenario(rest)?,
         "traffic" => cmd_traffic(rest)?,
         "perf" => cmd_perf(rest)?,
+        "audit" => cmd_audit(rest)?,
+        "diff" => cmd_diff(rest)?,
         "exp" => {
             let args = Args::parse(rest, &flag_specs())?;
             let Some(id) = args.positionals.first() else {

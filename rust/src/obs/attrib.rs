@@ -1,0 +1,715 @@
+//! Latency attribution and fault forensics (DESIGN.md §11).
+//!
+//! [`SpanLedger`] is a **streaming** [`TraceSink`] consumer: it folds
+//! the deterministic trace stream of one serve/fleet/traffic run into
+//! a per-request span ledger *as the events are emitted* — no
+//! unbounded buffering — and decomposes every completed request's
+//! end-to-end latency into five components that **sum exactly** to the
+//! end-to-end cycle count:
+//!
+//! ```text
+//! end_to_end = admission_wait + batch_wait + queue_wait
+//!            + fault_stall   + execution
+//! ```
+//!
+//! * `admission_wait` — admit → enqueue. In the current cycle model
+//!   admission control decides at the arrival cycle and admitted
+//!   requests enter a batcher the same cycle, so this component is
+//!   structurally 0; it is kept so the schema survives a model where
+//!   admission queues.
+//! * `fault_stall` — the part of the batcher wait spent while the
+//!   holding chip was **drained** (fault-induced: drain/re-shard/remap
+//!   overlap). Measured per holding segment — a re-sharded request
+//!   accrues stall on the chip it was actually sitting on.
+//! * `queue_wait` — head-of-line blocking: wait spent while every lane
+//!   of the holding chip was busy (and the chip was not drained — the
+//!   drain takes precedence so the components stay disjoint).
+//! * `batch_wait` — the remainder of enqueue → dispatch: a free lane
+//!   existed but the dynamic batcher was still filling toward
+//!   `max_batch` / its deadline.
+//! * `execution` — dispatch → complete (the batch's service time).
+//!
+//! The decomposition works on interval *measures*: per chip the ledger
+//! keeps closed-form prefix integrals of "all lanes busy", "drained"
+//! and their intersection, and every holding segment `[s, e)` charges
+//! `drained`, `all-busy − both`, and the remainder. The three are
+//! disjoint sub-measures of the segment, which is what makes the sum
+//! exact — there is no rounding and no double counting.
+//!
+//! **Stream-order contract.** The simulators emit lane, lifecycle and
+//! request events in nondecreasing cycle order (the event heap), but
+//! the stream as a whole is *not* sorted: fault histories are emitted
+//! up front and `RequestComplete` is stamped with the batch end at
+//! dispatch time. The ledger only advances its chip integrals on the
+//! monotone event kinds; fault events feed episode bookkeeping (pure
+//! arithmetic on stamps) and completes only need `complete − dispatch`.
+//!
+//! [`SpanLedger::finish`] closes the ledger into an [`AuditReport`]:
+//! the spans, per-chip utilization/head-of-line summaries, and **fault
+//! episodes** — maximal windows per chip from the first fault arrival
+//! (while the chip was clean) to full recovery (live faults back to
+//! zero, extended to the re-admit cycle when the episode drained the
+//! chip), each costed in requests stalled, cycles lost, remap latency
+//! and the accuracy dip over completions inside the window.
+
+use std::collections::BTreeMap;
+
+use crate::obs::{TraceEvent, TraceSink};
+
+/// One completed request's latency decomposition. All fields are
+/// simulated cycles; the component invariant is
+/// [`RequestSpan::components_sum`] `==` [`RequestSpan::end_to_end`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RequestSpan {
+    pub id: usize,
+    /// Serving chip (where the request was dispatched).
+    pub chip: usize,
+    pub enqueue_cycle: u64,
+    pub dispatch_cycle: u64,
+    pub complete_cycle: u64,
+    /// Admit → enqueue (structurally 0 in the current cycle model).
+    pub admission_wait: u64,
+    /// Batcher fill/deadline wait (a lane was free, the chip healthy).
+    pub batch_wait: u64,
+    /// Head-of-line blocking: all lanes busy on the holding chip.
+    pub queue_wait: u64,
+    /// Wait spent on a drained chip (fault-induced stall).
+    pub fault_stall: u64,
+    /// Dispatch → complete.
+    pub execution: u64,
+    /// Times the request moved chips (drain/re-admit/scale-down).
+    pub reshards: u32,
+}
+
+impl RequestSpan {
+    pub fn end_to_end(&self) -> u64 {
+        self.complete_cycle - self.enqueue_cycle
+    }
+
+    pub fn components_sum(&self) -> u64 {
+        self.admission_wait + self.batch_wait + self.queue_wait + self.fault_stall + self.execution
+    }
+}
+
+/// One fault episode on one chip: first arrival on a clean chip →
+/// full recovery. `end` is `None` when the episode never resolved
+/// inside the run (an unrepaired fault, or a drain that never
+/// re-admitted).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FaultEpisode {
+    pub chip: usize,
+    pub start_cycle: u64,
+    pub end_cycle: Option<u64>,
+    /// Fault arrivals inside the episode window.
+    pub faults: usize,
+    /// DPPU remaps inside the episode window.
+    pub remaps: usize,
+    /// Sum of (remap − arrival) over remapped faults of this episode.
+    pub remap_latency_total: u64,
+    pub remap_latency_max: u64,
+    /// Requests that accrued fault stall against this episode's drains.
+    pub requests_stalled: usize,
+    /// Their stall cycles inside this episode's drain intervals.
+    pub cycles_lost: u64,
+    /// Completions on this chip inside the episode window.
+    pub dip_requests: usize,
+    /// How many of those predicted their label (needs `correct` at
+    /// [`SpanLedger::finish`]; 0 when unavailable).
+    pub dip_correct: usize,
+}
+
+impl FaultEpisode {
+    pub fn mean_remap_latency(&self) -> Option<f64> {
+        if self.remaps == 0 {
+            None
+        } else {
+            Some(self.remap_latency_total as f64 / self.remaps as f64)
+        }
+    }
+
+    /// Accuracy over completions inside the window (`None` when no
+    /// request completed during the episode).
+    pub fn dip_accuracy(&self) -> Option<f64> {
+        if self.dip_requests == 0 {
+            None
+        } else {
+            Some(self.dip_correct as f64 / self.dip_requests as f64)
+        }
+    }
+}
+
+/// Whole-run occupancy summary of one chip, from the same prefix
+/// integrals that priced the spans.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ChipSummary {
+    pub chip: usize,
+    pub lanes: usize,
+    /// ∫ busy-lane-count dt over the run (lane·cycles).
+    pub busy_lane_cycles: u64,
+    /// ∫ [all lanes busy] dt — the head-of-line-blocking measure.
+    pub hol_cycles: u64,
+    /// ∫ [drained] dt.
+    pub drained_cycles: u64,
+    /// Requests served (dispatched) by this chip.
+    pub served: usize,
+}
+
+impl ChipSummary {
+    /// Mean lane occupancy over `horizon` cycles, in `[0, 1]`.
+    pub fn utilization(&self, horizon: u64) -> f64 {
+        if horizon == 0 || self.lanes == 0 {
+            0.0
+        } else {
+            self.busy_lane_cycles as f64 / (self.lanes as u64 * horizon) as f64
+        }
+    }
+}
+
+/// The closed ledger of one run.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct AuditReport {
+    /// Completed requests in id order.
+    pub spans: Vec<RequestSpan>,
+    /// Episodes in (chip, start) order.
+    pub episodes: Vec<FaultEpisode>,
+    pub chips: Vec<ChipSummary>,
+    /// The horizon `finish` was called with (simulated cycles).
+    pub horizon: u64,
+}
+
+impl AuditReport {
+    /// Totals over all spans: (end_to_end, admission, batch, queue,
+    /// fault, execution). The exact-sum invariant lifts to the totals.
+    pub fn totals(&self) -> (u64, u64, u64, u64, u64, u64) {
+        let mut t = (0, 0, 0, 0, 0, 0);
+        for s in &self.spans {
+            t.0 += s.end_to_end();
+            t.1 += s.admission_wait;
+            t.2 += s.batch_wait;
+            t.3 += s.queue_wait;
+            t.4 += s.fault_stall;
+            t.5 += s.execution;
+        }
+        t
+    }
+}
+
+/// Canonical one-line-per-record rendering of the closed ledger — the
+/// byte-compare artifact of the worker-invariance tests (two runs are
+/// attribution-equivalent iff their renderings are byte-identical).
+pub fn render_ledger(r: &AuditReport) -> String {
+    let mut s = String::new();
+    for sp in &r.spans {
+        s.push_str(&format!(
+            "span id={} chip={} enq={} disp={} comp={} adm={} batch={} queue={} fault={} \
+             exec={} reshards={}\n",
+            sp.id,
+            sp.chip,
+            sp.enqueue_cycle,
+            sp.dispatch_cycle,
+            sp.complete_cycle,
+            sp.admission_wait,
+            sp.batch_wait,
+            sp.queue_wait,
+            sp.fault_stall,
+            sp.execution,
+            sp.reshards,
+        ));
+    }
+    for e in &r.episodes {
+        s.push_str(&format!(
+            "episode chip={} start={} end={} faults={} remaps={} stalled={} lost={} dip={}/{}\n",
+            e.chip,
+            e.start_cycle,
+            e.end_cycle.map_or("open".to_string(), |c| c.to_string()),
+            e.faults,
+            e.remaps,
+            e.requests_stalled,
+            e.cycles_lost,
+            e.dip_correct,
+            e.dip_requests,
+        ));
+    }
+    for c in &r.chips {
+        s.push_str(&format!(
+            "chip k={} lanes={} busy={} hol={} drained={} served={}\n",
+            c.chip, c.lanes, c.busy_lane_cycles, c.hol_cycles, c.drained_cycles, c.served,
+        ));
+    }
+    s
+}
+
+/// Per-chip occupancy/lifecycle state: closed-form prefix integrals so
+/// a segment's overlap with "all lanes busy", "drained" and their
+/// intersection is two O(1) queries, independent of how many requests
+/// are open.
+#[derive(Debug, Clone)]
+struct ChipTrack {
+    lanes: usize,
+    busy: usize,
+    /// Cycle of the last busy-count accrual.
+    last: u64,
+    /// ∫ busy dt up to `last`.
+    busy_cum: u64,
+    allbusy_since: Option<u64>,
+    allbusy_cum: u64,
+    drained_since: Option<u64>,
+    drained_cum: u64,
+    both_since: Option<u64>,
+    both_cum: u64,
+    /// Drain intervals seen on the stream (`end == u64::MAX` = open).
+    drains: Vec<(u64, u64)>,
+    served: usize,
+}
+
+impl ChipTrack {
+    fn new(lanes: usize) -> Self {
+        Self {
+            lanes,
+            busy: 0,
+            last: 0,
+            busy_cum: 0,
+            allbusy_since: None,
+            allbusy_cum: 0,
+            drained_since: None,
+            drained_cum: 0,
+            both_since: None,
+            both_cum: 0,
+            drains: Vec::new(),
+            served: 0,
+        }
+    }
+
+    fn allbusy_at(&self, t: u64) -> u64 {
+        self.allbusy_cum + self.allbusy_since.map_or(0, |s| t.saturating_sub(s))
+    }
+
+    fn drained_at(&self, t: u64) -> u64 {
+        self.drained_cum + self.drained_since.map_or(0, |s| t.saturating_sub(s))
+    }
+
+    fn both_at(&self, t: u64) -> u64 {
+        self.both_cum + self.both_since.map_or(0, |s| t.saturating_sub(s))
+    }
+
+    /// Re-derive the all-busy∧drained interval after either side
+    /// toggled at `t`.
+    fn sync_both(&mut self, t: u64) {
+        let now = self.allbusy_since.is_some() && self.drained_since.is_some();
+        match (self.both_since, now) {
+            (None, true) => self.both_since = Some(t),
+            (Some(s), false) => {
+                self.both_cum += t.saturating_sub(s);
+                self.both_since = None;
+            }
+            _ => {}
+        }
+    }
+
+    fn lane_busy(&mut self, t: u64) {
+        self.busy_cum += self.busy as u64 * t.saturating_sub(self.last);
+        self.last = self.last.max(t);
+        self.busy += 1;
+        if self.busy >= self.lanes && self.allbusy_since.is_none() {
+            self.allbusy_since = Some(t);
+            self.sync_both(t);
+        }
+    }
+
+    fn lane_free(&mut self, t: u64) {
+        self.busy_cum += self.busy as u64 * t.saturating_sub(self.last);
+        self.last = self.last.max(t);
+        self.busy = self.busy.saturating_sub(1);
+        if self.busy < self.lanes {
+            if let Some(s) = self.allbusy_since.take() {
+                self.allbusy_cum += t.saturating_sub(s);
+                self.sync_both(t);
+            }
+        }
+    }
+
+    fn drain(&mut self, t: u64) {
+        if self.drained_since.is_none() {
+            self.drained_since = Some(t);
+            self.drains.push((t, u64::MAX));
+            self.sync_both(t);
+        }
+    }
+
+    fn readmit(&mut self, t: u64) {
+        if let Some(s) = self.drained_since.take() {
+            self.drained_cum += t.saturating_sub(s);
+            if let Some(last) = self.drains.last_mut() {
+                last.1 = t;
+            }
+            self.sync_both(t);
+        }
+    }
+}
+
+/// Snapshot of a chip's three integrals at a segment boundary.
+#[derive(Debug, Clone, Copy)]
+struct Snap {
+    allbusy: u64,
+    drained: u64,
+    both: u64,
+}
+
+/// One in-flight request: its current holding segment plus the wait
+/// components accrued over closed segments.
+#[derive(Debug, Clone)]
+struct OpenReq {
+    enqueue: u64,
+    chip: usize,
+    seg_start: u64,
+    snap: Snap,
+    acc_allbusy: u64,
+    acc_drained: u64,
+    acc_both: u64,
+    reshards: u32,
+    /// Holding segments that accrued drain overlap (for the episode
+    /// join): (chip, seg_start, seg_end).
+    stall_segs: Vec<(usize, u64, u64)>,
+    /// Set at dispatch: (cycle, serving chip, batch_wait, queue_wait,
+    /// fault_stall).
+    dispatched: Option<(u64, usize, u64, u64, u64)>,
+}
+
+/// Raw per-chip fault bookkeeping, resolved into episodes at `finish`.
+#[derive(Debug, Clone, Default)]
+struct FaultLog {
+    /// (cycle, row, col, is_arrival) in emission (= cycle) order.
+    events: Vec<(u64, u16, u16, bool)>,
+}
+
+/// The streaming attribution collector. Attach it as the run's
+/// [`TraceSink`] (alone or behind a [`crate::obs::TeeSink`]); call
+/// [`SpanLedger::finish`] once the run returns. Memory is bounded by
+/// open requests + per-chip state + fault/drain logs — never the
+/// event count.
+#[derive(Debug)]
+pub struct SpanLedger {
+    chips: Vec<ChipTrack>,
+    open: BTreeMap<usize, OpenReq>,
+    spans: Vec<RequestSpan>,
+    faults: Vec<FaultLog>,
+    /// (request id, stall segments) of completed spans that accrued
+    /// fault stall — the episode join input.
+    stalls: Vec<(usize, Vec<(usize, u64, u64)>)>,
+}
+
+impl SpanLedger {
+    /// `lane_counts[k]` = lanes of chip `k` (from the run's config —
+    /// inferring it from the stream would misprice the all-busy
+    /// measure on a chip whose top lane never dispatched).
+    pub fn new(lane_counts: &[usize]) -> Self {
+        Self {
+            chips: lane_counts.iter().map(|&l| ChipTrack::new(l)).collect(),
+            open: BTreeMap::new(),
+            spans: Vec::new(),
+            faults: vec![FaultLog::default(); lane_counts.len()],
+            stalls: Vec::new(),
+        }
+    }
+
+    fn snap(&self, chip: usize, t: u64) -> Snap {
+        let c = &self.chips[chip];
+        Snap { allbusy: c.allbusy_at(t), drained: c.drained_at(t), both: c.both_at(t) }
+    }
+
+    /// Close the open segment of request `r` at `t`, charging its
+    /// overlap with the chip's all-busy/drained measures.
+    fn close_segment(chips: &[ChipTrack], r: &mut OpenReq, t: u64) {
+        let c = &chips[r.chip];
+        let allbusy = c.allbusy_at(t) - r.snap.allbusy;
+        let drained = c.drained_at(t) - r.snap.drained;
+        let both = c.both_at(t) - r.snap.both;
+        r.acc_allbusy += allbusy;
+        r.acc_drained += drained;
+        r.acc_both += both;
+        if drained > 0 {
+            r.stall_segs.push((r.chip, r.seg_start, t));
+        }
+    }
+
+    /// Fold one trace event (the [`TraceSink`] impl forwards here).
+    pub fn observe(&mut self, cycle: u64, event: TraceEvent) {
+        match event {
+            TraceEvent::RequestEnqueue { id, chip } => {
+                let snap = self.snap(chip, cycle);
+                self.open.insert(
+                    id,
+                    OpenReq {
+                        enqueue: cycle,
+                        chip,
+                        seg_start: cycle,
+                        snap,
+                        acc_allbusy: 0,
+                        acc_drained: 0,
+                        acc_both: 0,
+                        reshards: 0,
+                        stall_segs: Vec::new(),
+                        dispatched: None,
+                    },
+                );
+            }
+            TraceEvent::RequestReshard { id, from: _, to } => {
+                if let Some(mut r) = self.open.remove(&id) {
+                    Self::close_segment(&self.chips, &mut r, cycle);
+                    r.chip = to;
+                    r.seg_start = cycle;
+                    r.snap = self.snap(to, cycle);
+                    r.reshards += 1;
+                    self.open.insert(id, r);
+                }
+            }
+            TraceEvent::RequestDispatch { id, chip, .. } => {
+                if let Some(mut r) = self.open.remove(&id) {
+                    Self::close_segment(&self.chips, &mut r, cycle);
+                    let wait = cycle - r.enqueue;
+                    let fault_stall = r.acc_drained;
+                    let queue_wait = r.acc_allbusy - r.acc_both;
+                    // remainder: disjoint sub-measures can't exceed
+                    // the segment measure, so this never underflows
+                    let batch_wait = wait - fault_stall - queue_wait;
+                    r.dispatched = Some((cycle, chip, batch_wait, queue_wait, fault_stall));
+                    if chip < self.chips.len() {
+                        self.chips[chip].served += 1;
+                    }
+                    self.open.insert(id, r);
+                }
+            }
+            TraceEvent::RequestComplete { id, .. } => {
+                if let Some(r) = self.open.remove(&id) {
+                    if let Some((disp, chip, batch_wait, queue_wait, fault_stall)) = r.dispatched {
+                        self.spans.push(RequestSpan {
+                            id,
+                            chip,
+                            enqueue_cycle: r.enqueue,
+                            dispatch_cycle: disp,
+                            complete_cycle: cycle,
+                            admission_wait: 0,
+                            batch_wait,
+                            queue_wait,
+                            fault_stall,
+                            execution: cycle - disp,
+                            reshards: r.reshards,
+                        });
+                        // stall segments outlive the span for the
+                        // episode join at finish()
+                        if !r.stall_segs.is_empty() {
+                            self.stalls.push((id, r.stall_segs));
+                        }
+                    }
+                }
+            }
+            TraceEvent::BatchFormed { chip, .. } => {
+                if chip < self.chips.len() {
+                    self.chips[chip].lane_busy(cycle);
+                }
+            }
+            TraceEvent::LaneFree { chip, .. } => {
+                if chip < self.chips.len() {
+                    self.chips[chip].lane_free(cycle);
+                }
+            }
+            TraceEvent::ChipDrain { chip } => {
+                if chip < self.chips.len() {
+                    self.chips[chip].drain(cycle);
+                }
+            }
+            TraceEvent::ChipReadmit { chip } => {
+                if chip < self.chips.len() {
+                    self.chips[chip].readmit(cycle);
+                }
+            }
+            TraceEvent::FaultArrival { chip, row, col } => {
+                if chip < self.faults.len() {
+                    self.faults[chip].events.push((cycle, row, col, true));
+                }
+            }
+            TraceEvent::RemapApplied { chip, row, col } => {
+                if chip < self.faults.len() {
+                    self.faults[chip].events.push((cycle, row, col, false));
+                }
+            }
+            _ => {}
+        }
+    }
+
+    /// Close the ledger. `horizon` is the run's `total_cycles`;
+    /// `correct[id]` (may be empty) feeds the per-episode accuracy-dip
+    /// window.
+    pub fn finish(mut self, horizon: u64, correct: &[bool]) -> AuditReport {
+        self.spans.sort_by_key(|s| s.id);
+        let stalls: Vec<(usize, Vec<(usize, u64, u64)>)> = std::mem::take(&mut self.stalls);
+
+        let mut episodes: Vec<FaultEpisode> = Vec::new();
+        for (k, log) in self.faults.iter().enumerate() {
+            episodes.extend(build_episodes(k, log, &self.chips[k].drains));
+        }
+
+        // join spans onto episodes: a span's stall segment on chip k
+        // charges the episode whose drain intervals it overlaps
+        for ep in &mut episodes {
+            let ep_end = ep.end_cycle.unwrap_or(u64::MAX);
+            let drains: Vec<(u64, u64)> = self.chips[ep.chip]
+                .drains
+                .iter()
+                .copied()
+                .filter(|&(ds, _)| ds >= ep.start_cycle && ds < ep_end)
+                .collect();
+            for (_idx, segs) in &stalls {
+                let mut lost = 0u64;
+                for &(chip, s0, e0) in segs {
+                    if chip != ep.chip {
+                        continue;
+                    }
+                    for &(ds, de) in &drains {
+                        let lo = s0.max(ds);
+                        let hi = e0.min(de);
+                        if hi > lo {
+                            lost += hi - lo;
+                        }
+                    }
+                }
+                if lost > 0 {
+                    ep.requests_stalled += 1;
+                    ep.cycles_lost += lost;
+                }
+            }
+            // accuracy-dip window: completions on this chip inside
+            // the episode
+            for sp in &self.spans {
+                if sp.chip == ep.chip
+                    && sp.complete_cycle >= ep.start_cycle
+                    && sp.complete_cycle < ep_end
+                {
+                    ep.dip_requests += 1;
+                    if correct.get(sp.id).copied().unwrap_or(false) {
+                        ep.dip_correct += 1;
+                    }
+                }
+            }
+        }
+
+        let chips: Vec<ChipSummary> = self
+            .chips
+            .iter()
+            .enumerate()
+            .map(|(k, c)| ChipSummary {
+                chip: k,
+                lanes: c.lanes,
+                busy_lane_cycles: c.busy_cum + c.busy as u64 * horizon.saturating_sub(c.last),
+                hol_cycles: c.allbusy_at(horizon),
+                drained_cycles: c.drained_at(horizon),
+                served: c.served,
+            })
+            .collect();
+
+        AuditReport { spans: self.spans, episodes, chips, horizon }
+    }
+}
+
+impl TraceSink for SpanLedger {
+    fn enabled(&self) -> bool {
+        true
+    }
+
+    fn emit(&mut self, cycle: u64, event: TraceEvent) {
+        self.observe(cycle, event);
+    }
+}
+
+/// Resolve one chip's fault log + drain intervals into episodes:
+/// live-fault intervals (count > 0), extended to the re-admit cycle of
+/// any drain starting inside them, then merged where the extensions
+/// overlap.
+fn build_episodes(chip: usize, log: &FaultLog, drains: &[(u64, u64)]) -> Vec<FaultEpisode> {
+    // The emitters produce each chip's fault history chronologically
+    // (the scan-agent timeline is pre-sorted, arrival before detection
+    // at a tied cycle); the stable sort makes the live counter robust
+    // to any sink that interleaved streams, without reordering ties.
+    let mut events = log.events.clone();
+    events.sort_by_key(|e| e.0);
+    // live intervals from the arrival/remap counter
+    let mut live = 0i64;
+    let mut intervals: Vec<(u64, u64)> = Vec::new();
+    let mut start = 0u64;
+    for &(cycle, _, _, is_arrival) in &events {
+        if is_arrival {
+            if live == 0 {
+                start = cycle;
+            }
+            live += 1;
+        } else {
+            live -= 1;
+            if live == 0 {
+                intervals.push((start, cycle));
+            }
+        }
+    }
+    if live > 0 {
+        intervals.push((start, u64::MAX)); // unrepaired: never resolves
+    }
+    // extend by drains that start inside the live interval
+    for iv in &mut intervals {
+        for &(ds, de) in drains {
+            if ds >= iv.0 && ds < iv.1 {
+                iv.1 = iv.1.max(de);
+            }
+        }
+    }
+    // merge overlapping extended intervals
+    let mut merged: Vec<(u64, u64)> = Vec::new();
+    for iv in intervals {
+        match merged.last_mut() {
+            Some(m) if iv.0 <= m.1 => m.1 = m.1.max(iv.1),
+            _ => merged.push(iv),
+        }
+    }
+    // price each episode: faults/remaps/remap latency inside the window
+    // (coord-matched FIFO so repeated faults at one PE stay paired)
+    let mut out = Vec::new();
+    for (s, e) in merged {
+        let mut ep = FaultEpisode {
+            chip,
+            start_cycle: s,
+            end_cycle: if e == u64::MAX { None } else { Some(e) },
+            faults: 0,
+            remaps: 0,
+            remap_latency_total: 0,
+            remap_latency_max: 0,
+            requests_stalled: 0,
+            cycles_lost: 0,
+            dip_requests: 0,
+            dip_correct: 0,
+        };
+        let mut pending: BTreeMap<(u16, u16), Vec<u64>> = BTreeMap::new();
+        // the pricing window is inclusive at `e`: when the episode ends
+        // at its closing remap (no drain extension), that remap *is*
+        // the resolution and must be priced. Merged intervals are
+        // strictly disjoint, so inclusive ends never double-count.
+        for &(cycle, row, col, is_arrival) in &events {
+            if cycle < s || cycle > e {
+                continue;
+            }
+            if is_arrival {
+                ep.faults += 1;
+                pending.entry((row, col)).or_default().push(cycle);
+            } else {
+                ep.remaps += 1;
+                if let Some(q) = pending.get_mut(&(row, col)) {
+                    if !q.is_empty() {
+                        let arr = q.remove(0);
+                        let lat = cycle - arr;
+                        ep.remap_latency_total += lat;
+                        ep.remap_latency_max = ep.remap_latency_max.max(lat);
+                    }
+                }
+            }
+        }
+        out.push(ep);
+    }
+    out
+}

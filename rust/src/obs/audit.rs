@@ -1,0 +1,511 @@
+//! Bench regression auditor: `repro diff <old.json> <new.json>`
+//! (DESIGN.md §11).
+//!
+//! Every `BENCH_*.json` baseline this repo emits is (by contract) a
+//! pure function of the master seed — except the sections that are
+//! nondeterministic *by design* and say so in their schema (the
+//! wall-clock `timing` section of `BENCH_perf.json`). The auditor
+//! makes that contract executable: it parses two bench files with the
+//! in-repo JSON reader (no external crates), looks the schema's
+//! **typed tolerance rules** up, walks both documents and reports
+//! every divergence. Deterministic fields compare exactly; derived
+//! floats carry a tiny relative tolerance so a renderer change
+//! (`0.5` vs `0.500000`) is not a regression; nondeterministic
+//! sections are ignored wholesale.
+//!
+//! Severity model (what makes the exit code nonzero):
+//!
+//! * changed value outside its tolerance — **regression**
+//! * key present in old, missing in new — **regression** (a schema
+//!   must only grow)
+//! * array length change, type change — **regression**
+//! * key added in new — *notice* (additive evolution is allowed)
+//! * changed value inside its tolerance, ignored section — *notice*
+//!
+//! Comparison is structural, not textual: re-formatting a file through
+//! `jq` diffs clean, which is exactly what lets CI tamper a copy with
+//! `jq` to prove the gate fails loudly (see `.github/workflows/ci.yml`).
+
+use anyhow::{bail, Context, Result};
+
+/// A parsed JSON value. Object member order is preserved (findings
+/// print in document order) but comparison is key-based.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(members) => members.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    fn kind(&self) -> &'static str {
+        match self {
+            Json::Null => "null",
+            Json::Bool(_) => "bool",
+            Json::Num(_) => "number",
+            Json::Str(_) => "string",
+            Json::Arr(_) => "array",
+            Json::Obj(_) => "object",
+        }
+    }
+}
+
+/// Minimal recursive-descent JSON parser — enough for the bench files
+/// plus anything `jq` re-emits. Numbers parse as `f64` (bench integers
+/// are far below 2^53, so exact comparison is sound).
+pub fn parse(text: &str) -> Result<Json> {
+    let bytes = text.as_bytes();
+    let mut pos = 0usize;
+    let value = parse_value(bytes, &mut pos)?;
+    skip_ws(bytes, &mut pos);
+    if pos != bytes.len() {
+        bail!("trailing characters at byte {pos}");
+    }
+    Ok(value)
+}
+
+fn skip_ws(b: &[u8], pos: &mut usize) {
+    while *pos < b.len() && matches!(b[*pos], b' ' | b'\t' | b'\n' | b'\r') {
+        *pos += 1;
+    }
+}
+
+fn parse_value(b: &[u8], pos: &mut usize) -> Result<Json> {
+    skip_ws(b, pos);
+    let Some(&c) = b.get(*pos) else { bail!("unexpected end of input") };
+    match c {
+        b'{' => parse_obj(b, pos),
+        b'[' => parse_arr(b, pos),
+        b'"' => Ok(Json::Str(parse_string(b, pos)?)),
+        b't' => parse_lit(b, pos, "true", Json::Bool(true)),
+        b'f' => parse_lit(b, pos, "false", Json::Bool(false)),
+        b'n' => parse_lit(b, pos, "null", Json::Null),
+        b'-' | b'0'..=b'9' => parse_num(b, pos),
+        other => bail!("unexpected byte {:?} at {}", other as char, *pos),
+    }
+}
+
+fn parse_lit(b: &[u8], pos: &mut usize, lit: &str, value: Json) -> Result<Json> {
+    if b[*pos..].starts_with(lit.as_bytes()) {
+        *pos += lit.len();
+        Ok(value)
+    } else {
+        bail!("invalid literal at byte {}", *pos)
+    }
+}
+
+fn parse_num(b: &[u8], pos: &mut usize) -> Result<Json> {
+    let start = *pos;
+    while *pos < b.len() && matches!(b[*pos], b'-' | b'+' | b'.' | b'e' | b'E' | b'0'..=b'9') {
+        *pos += 1;
+    }
+    let s = std::str::from_utf8(&b[start..*pos]).expect("ascii number bytes");
+    let v: f64 = s.parse().with_context(|| format!("bad number {s:?} at byte {start}"))?;
+    Ok(Json::Num(v))
+}
+
+fn parse_string(b: &[u8], pos: &mut usize) -> Result<String> {
+    debug_assert_eq!(b[*pos], b'"');
+    *pos += 1;
+    let mut out = String::new();
+    loop {
+        let Some(&c) = b.get(*pos) else { bail!("unterminated string") };
+        *pos += 1;
+        match c {
+            b'"' => return Ok(out),
+            b'\\' => {
+                let Some(&esc) = b.get(*pos) else { bail!("unterminated escape") };
+                *pos += 1;
+                match esc {
+                    b'"' => out.push('"'),
+                    b'\\' => out.push('\\'),
+                    b'/' => out.push('/'),
+                    b'b' => out.push('\u{0008}'),
+                    b'f' => out.push('\u{000C}'),
+                    b'n' => out.push('\n'),
+                    b'r' => out.push('\r'),
+                    b't' => out.push('\t'),
+                    b'u' => {
+                        if *pos + 4 > b.len() {
+                            bail!("truncated \\u escape");
+                        }
+                        let hex = std::str::from_utf8(&b[*pos..*pos + 4])
+                            .ok()
+                            .and_then(|h| u32::from_str_radix(h, 16).ok())
+                            .context("bad \\u escape")?;
+                        *pos += 4;
+                        // bench files are ASCII; surrogate pairs fold
+                        // to the replacement char rather than erroring
+                        out.push(char::from_u32(hex).unwrap_or('\u{FFFD}'));
+                    }
+                    other => bail!("bad escape \\{}", other as char),
+                }
+            }
+            _ => {
+                // copy the raw UTF-8 byte run through
+                let start = *pos - 1;
+                while *pos < b.len() && b[*pos] != b'"' && b[*pos] != b'\\' {
+                    *pos += 1;
+                }
+                out.push_str(std::str::from_utf8(&b[start..*pos]).context("invalid UTF-8")?);
+            }
+        }
+    }
+}
+
+fn parse_obj(b: &[u8], pos: &mut usize) -> Result<Json> {
+    *pos += 1; // '{'
+    let mut members = Vec::new();
+    skip_ws(b, pos);
+    if b.get(*pos) == Some(&b'}') {
+        *pos += 1;
+        return Ok(Json::Obj(members));
+    }
+    loop {
+        skip_ws(b, pos);
+        let key = parse_string(b, pos).context("object key")?;
+        skip_ws(b, pos);
+        if b.get(*pos) != Some(&b':') {
+            bail!("expected ':' at byte {}", *pos);
+        }
+        *pos += 1;
+        let value = parse_value(b, pos)?;
+        members.push((key, value));
+        skip_ws(b, pos);
+        match b.get(*pos) {
+            Some(&b',') => *pos += 1,
+            Some(&b'}') => {
+                *pos += 1;
+                return Ok(Json::Obj(members));
+            }
+            _ => bail!("expected ',' or '}}' at byte {}", *pos),
+        }
+    }
+}
+
+fn parse_arr(b: &[u8], pos: &mut usize) -> Result<Json> {
+    *pos += 1; // '['
+    let mut items = Vec::new();
+    skip_ws(b, pos);
+    if b.get(*pos) == Some(&b']') {
+        *pos += 1;
+        return Ok(Json::Arr(items));
+    }
+    loop {
+        items.push(parse_value(b, pos)?);
+        skip_ws(b, pos);
+        match b.get(*pos) {
+            Some(&b',') => *pos += 1,
+            Some(&b']') => {
+                *pos += 1;
+                return Ok(Json::Arr(items));
+            }
+            _ => bail!("expected ',' or ']' at byte {}", *pos),
+        }
+    }
+}
+
+/// How a matched field is allowed to move between two runs.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Tolerance {
+    /// Bit-equal (the default for everything unmatched).
+    Exact,
+    /// |old − new| ≤ tol.
+    AbsTol(f64),
+    /// |old − new| ≤ tol · max(|old|, |new|).
+    RelTol(f64),
+    /// Skip the whole subtree (nondeterministic by design).
+    Ignore,
+}
+
+/// One typed tolerance rule: a dot path (segments; `*` matches any one
+/// segment, array indices are plain numbers) and the tolerance applied
+/// at the matched node. `Ignore` rules match a subtree root; the
+/// others match leaves.
+#[derive(Debug, Clone, Copy)]
+pub struct Rule {
+    pub path: &'static str,
+    pub tol: Tolerance,
+    pub why: &'static str,
+}
+
+const REL: f64 = 1e-9;
+
+/// The per-schema rule tables (documented in EXPERIMENTS.md). Every
+/// field not matched by a rule compares exactly.
+pub fn rules_for(schema: &str) -> &'static [Rule] {
+    match schema {
+        "hyca-serve-bench-v1" => &[Rule {
+            path: "grid.*.throughput_imgs_per_mcycle",
+            tol: Tolerance::RelTol(REL),
+            why: "derived float (renderer formatting)",
+        }],
+        "hyca-fleet-bench-v2" => &[
+            Rule {
+                path: "grid.*.throughput_imgs_per_mcycle",
+                tol: Tolerance::RelTol(REL),
+                why: "derived float",
+            },
+            Rule { path: "grid.*.accuracy", tol: Tolerance::RelTol(REL), why: "derived float" },
+            Rule {
+                path: "mixed_fleet.*.throughput_imgs_per_mcycle",
+                tol: Tolerance::RelTol(REL),
+                why: "derived float",
+            },
+            Rule {
+                path: "mixed_fleet.*.accuracy",
+                tol: Tolerance::RelTol(REL),
+                why: "derived float",
+            },
+            Rule {
+                path: "mixed_fleet.*.load_imbalance",
+                tol: Tolerance::RelTol(REL),
+                why: "derived float",
+            },
+        ],
+        "hyca-traffic-bench-v2" | "hyca-traffic-bench-v3" => &[
+            Rule { path: "scenarios.*.shed_rate", tol: Tolerance::RelTol(REL), why: "derived float" },
+            Rule {
+                path: "scenarios.*.goodput_imgs_per_mcycle",
+                tol: Tolerance::RelTol(REL),
+                why: "derived float",
+            },
+            Rule {
+                path: "scenarios.*.slo_attainment",
+                tol: Tolerance::RelTol(REL),
+                why: "derived float",
+            },
+            Rule { path: "scenarios.*.accuracy", tol: Tolerance::RelTol(REL), why: "derived float" },
+        ],
+        "hyca-perf-bench-v1" => &[
+            Rule {
+                path: "timing",
+                tol: Tolerance::Ignore,
+                why: "wall-clock section, nondeterministic by design",
+            },
+            Rule {
+                path: "host",
+                tol: Tolerance::Ignore,
+                why: "machine identity, not a metric",
+            },
+        ],
+        "hyca-audit-bench-v1" => &[
+            Rule {
+                path: "presets.*.chips.*.utilization",
+                tol: Tolerance::RelTol(REL),
+                why: "derived float",
+            },
+            Rule {
+                path: "presets.*.episodes.*.mean_remap_latency",
+                tol: Tolerance::RelTol(REL),
+                why: "derived float",
+            },
+            Rule {
+                path: "presets.*.episodes.*.dip_accuracy",
+                tol: Tolerance::RelTol(REL),
+                why: "derived float",
+            },
+        ],
+        _ => &[],
+    }
+}
+
+fn path_matches(rule: &str, path: &[String]) -> bool {
+    let segs: Vec<&str> = rule.split('.').collect();
+    segs.len() == path.len() && segs.iter().zip(path).all(|(r, p)| *r == "*" || *r == p.as_str())
+}
+
+/// One divergence between the two documents.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    pub path: String,
+    pub detail: String,
+    /// `true` → the finding fails the gate.
+    pub regression: bool,
+}
+
+/// The structural comparison of two bench files sharing a schema.
+#[derive(Debug, Clone)]
+pub struct DiffReport {
+    pub schema: String,
+    pub findings: Vec<Finding>,
+}
+
+impl DiffReport {
+    pub fn regressions(&self) -> usize {
+        self.findings.iter().filter(|f| f.regression).count()
+    }
+
+    pub fn notices(&self) -> usize {
+        self.findings.len() - self.regressions()
+    }
+
+    /// Human-readable report, one finding per line, regressions first
+    /// in document order.
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        for f in self.findings.iter().filter(|f| f.regression) {
+            s.push_str(&format!("REGRESSION  {}: {}\n", f.path, f.detail));
+        }
+        for f in self.findings.iter().filter(|f| !f.regression) {
+            s.push_str(&format!("note        {}: {}\n", f.path, f.detail));
+        }
+        s.push_str(&format!(
+            "schema {}: {} regression(s), {} notice(s)\n",
+            self.schema,
+            self.regressions(),
+            self.notices()
+        ));
+        s
+    }
+}
+
+/// Compare two parsed bench files. Errors (not findings) when either
+/// misses a `schema` string or the schemas differ — files of different
+/// schemas are incomparable, not regressed.
+pub fn diff(old: &Json, new: &Json) -> Result<DiffReport> {
+    let old_schema = old
+        .get("schema")
+        .and_then(Json::as_str)
+        .context("old file has no \"schema\" string — not a bench baseline")?;
+    let new_schema = new
+        .get("schema")
+        .and_then(Json::as_str)
+        .context("new file has no \"schema\" string — not a bench baseline")?;
+    if old_schema != new_schema {
+        bail!(
+            "schema mismatch: {old_schema:?} vs {new_schema:?} — bench files of \
+             different schemas are incomparable"
+        );
+    }
+    let rules = rules_for(old_schema);
+    let mut findings = Vec::new();
+    let mut path: Vec<String> = Vec::new();
+    walk(old, new, &mut path, rules, &mut findings);
+    Ok(DiffReport { schema: old_schema.to_string(), findings })
+}
+
+fn fmt_path(path: &[String]) -> String {
+    if path.is_empty() {
+        "(root)".to_string()
+    } else {
+        path.join(".")
+    }
+}
+
+fn walk(old: &Json, new: &Json, path: &mut Vec<String>, rules: &[Rule], out: &mut Vec<Finding>) {
+    if let Some(rule) = rules.iter().find(|r| path_matches(r.path, path)) {
+        if rule.tol == Tolerance::Ignore {
+            out.push(Finding {
+                path: fmt_path(path),
+                detail: format!("ignored ({})", rule.why),
+                regression: false,
+            });
+            return;
+        }
+    }
+    match (old, new) {
+        (Json::Obj(om), Json::Obj(nm)) => {
+            for (k, nv) in nm {
+                path.push(k.clone());
+                match old.get(k) {
+                    Some(ov) => walk(ov, nv, path, rules, out),
+                    None => out.push(Finding {
+                        path: fmt_path(path),
+                        detail: "added in new (additive evolution)".to_string(),
+                        regression: false,
+                    }),
+                }
+                path.pop();
+            }
+            for (k, _) in om {
+                if new.get(k).is_none() {
+                    path.push(k.clone());
+                    out.push(Finding {
+                        path: fmt_path(path),
+                        detail: "missing in new — schemas must only grow".to_string(),
+                        regression: true,
+                    });
+                    path.pop();
+                }
+            }
+        }
+        (Json::Arr(oa), Json::Arr(na)) => {
+            if oa.len() != na.len() {
+                out.push(Finding {
+                    path: fmt_path(path),
+                    detail: format!("array length {} → {}", oa.len(), na.len()),
+                    regression: true,
+                });
+            }
+            for (i, (ov, nv)) in oa.iter().zip(na).enumerate() {
+                path.push(i.to_string());
+                walk(ov, nv, path, rules, out);
+                path.pop();
+            }
+        }
+        (Json::Num(o), Json::Num(n)) => {
+            if o == n {
+                return;
+            }
+            let tol = rules
+                .iter()
+                .find(|r| path_matches(r.path, path))
+                .map(|r| r.tol)
+                .unwrap_or(Tolerance::Exact);
+            let (ok, bound) = match tol {
+                Tolerance::Exact => (false, "exact".to_string()),
+                Tolerance::AbsTol(t) => ((o - n).abs() <= t, format!("abs ±{t:e}")),
+                Tolerance::RelTol(t) => {
+                    ((o - n).abs() <= t * o.abs().max(n.abs()), format!("rel ±{t:e}"))
+                }
+                Tolerance::Ignore => unreachable!("handled at subtree root"),
+            };
+            out.push(Finding {
+                path: fmt_path(path),
+                detail: format!("{o} → {n} ({bound})"),
+                regression: !ok,
+            });
+        }
+        _ if old.kind() != new.kind() => out.push(Finding {
+            path: fmt_path(path),
+            detail: format!("type {} → {}", old.kind(), new.kind()),
+            regression: true,
+        }),
+        (Json::Str(o), Json::Str(n)) if o != n => out.push(Finding {
+            path: fmt_path(path),
+            detail: format!("{o:?} → {n:?}"),
+            regression: true,
+        }),
+        (Json::Bool(o), Json::Bool(n)) if o != n => out.push(Finding {
+            path: fmt_path(path),
+            detail: format!("{o} → {n}"),
+            regression: true,
+        }),
+        _ => {}
+    }
+}
+
+/// Convenience: parse both texts and diff them.
+pub fn diff_text(old: &str, new: &str) -> Result<DiffReport> {
+    let o = parse(old).context("parsing old bench file")?;
+    let n = parse(new).context("parsing new bench file")?;
+    diff(&o, &n)
+}

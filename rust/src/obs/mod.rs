@@ -27,6 +27,13 @@
 //! * [`trace_export`] — a Chrome-trace-event JSON exporter
 //!   (Perfetto-loadable) behind `--trace <path>` on
 //!   `repro serve|fleet|traffic`.
+//! * [`attrib`] — a streaming per-request span ledger (`repro audit`,
+//!   DESIGN.md §11): every admitted request's end-to-end latency
+//!   decomposed into wait components that **sum exactly**, plus
+//!   per-episode fault forensics and per-chip occupancy summaries.
+//! * [`audit`] — a dependency-free JSON parser + typed-tolerance bench
+//!   comparator (`repro diff`): regression gating for every
+//!   `BENCH_*.json` schema.
 //!
 //! **The nondeterministic channel.** Executor steals are decided by OS
 //! scheduling, so they must never reach a byte-compared artifact. They
@@ -35,12 +42,15 @@
 //! [`Counters`] registry (read by `fleet::metrics::assemble` into
 //! `ChipStat::executor_steals`, which `digest()` deliberately omits).
 
+pub mod attrib;
+pub mod audit;
 pub mod recorder;
 pub mod timeseries;
 pub mod trace_export;
 
 use std::collections::BTreeMap;
 
+pub use attrib::SpanLedger;
 pub use recorder::FlightRecorder;
 pub use timeseries::TimeSeries;
 
@@ -208,10 +218,34 @@ impl TraceSink for NullSink {
 /// In-memory capture. The deterministic stream lands in `events`; the
 /// wall-clock channel is quarantined in `nondet` (exporters and the
 /// timeseries collector read `events` only).
+///
+/// The default sink is unbounded (the bench drivers buffer one run and
+/// drop the sink). Long-horizon callers use [`MemorySink::bounded`]:
+/// once a channel holds `capacity` events further emissions are
+/// **dropped and counted** in [`MemorySink::overflow`], so a capture
+/// that silently lost its tail is detectable instead of looking like a
+/// short run. Streaming consumers (the span ledger,
+/// [`crate::obs::attrib`]) avoid the buffer entirely.
 #[derive(Debug, Default)]
 pub struct MemorySink {
     pub events: Vec<TracedEvent>,
     pub nondet: Vec<TracedEvent>,
+    /// Per-channel capacity (`None` = unbounded).
+    capacity: Option<usize>,
+    /// Events dropped because a channel was full.
+    pub overflow: u64,
+}
+
+impl MemorySink {
+    /// A sink that keeps at most `capacity` events per channel and
+    /// counts everything it had to drop.
+    pub fn bounded(capacity: usize) -> Self {
+        Self { capacity: Some(capacity), ..Self::default() }
+    }
+
+    pub fn capacity(&self) -> Option<usize> {
+        self.capacity
+    }
 }
 
 impl TraceSink for MemorySink {
@@ -220,11 +254,47 @@ impl TraceSink for MemorySink {
     }
 
     fn emit(&mut self, cycle: u64, event: TraceEvent) {
-        self.events.push(TracedEvent { cycle, event });
+        match self.capacity {
+            Some(cap) if self.events.len() >= cap => self.overflow += 1,
+            _ => self.events.push(TracedEvent { cycle, event }),
+        }
     }
 
     fn emit_nondet(&mut self, cycle: u64, event: TraceEvent) {
-        self.nondet.push(TracedEvent { cycle, event });
+        match self.capacity {
+            Some(cap) if self.nondet.len() >= cap => self.overflow += 1,
+            _ => self.nondet.push(TracedEvent { cycle, event }),
+        }
+    }
+}
+
+/// Fan one emission stream out to two sinks — how a driver attaches a
+/// streaming consumer (the span ledger) *and* a buffering one (the
+/// timeseries capture) to a single traced run. Forwarding preserves
+/// emission order on both, so neither side of the tee can observe a
+/// stream the other didn't.
+pub struct TeeSink<'a> {
+    pub a: &'a mut dyn TraceSink,
+    pub b: &'a mut dyn TraceSink,
+}
+
+impl TraceSink for TeeSink<'_> {
+    fn enabled(&self) -> bool {
+        self.a.enabled() || self.b.enabled()
+    }
+
+    fn emit(&mut self, cycle: u64, event: TraceEvent) {
+        if self.a.enabled() {
+            self.a.emit(cycle, event);
+        }
+        if self.b.enabled() {
+            self.b.emit(cycle, event);
+        }
+    }
+
+    fn emit_nondet(&mut self, cycle: u64, event: TraceEvent) {
+        self.a.emit_nondet(cycle, event);
+        self.b.emit_nondet(cycle, event);
     }
 }
 
@@ -319,6 +389,40 @@ mod tests {
         assert_eq!(sink.events.len(), 1);
         assert_eq!(sink.nondet.len(), 1);
         assert_eq!(sink.events[0].cycle, 5);
+    }
+
+    #[test]
+    fn bounded_sink_counts_overflow_instead_of_growing() {
+        let mut sink = MemorySink::bounded(2);
+        for i in 0..5 {
+            sink.emit(i, TraceEvent::ScanStart { chip: 0 });
+        }
+        assert_eq!(sink.events.len(), 2, "capacity caps the buffer");
+        assert_eq!(sink.overflow, 3, "every drop is counted");
+        assert_eq!(sink.capacity(), Some(2));
+        // channels are bounded independently
+        sink.emit_nondet(0, TraceEvent::ExecutorSteal { job: 1 });
+        assert_eq!(sink.nondet.len(), 1);
+        assert_eq!(sink.overflow, 3);
+        let unbounded = MemorySink::default();
+        assert_eq!(unbounded.capacity(), None);
+    }
+
+    #[test]
+    fn tee_forwards_both_channels_to_both_sinks_in_order() {
+        let mut a = MemorySink::default();
+        let mut b = MemorySink::default();
+        {
+            let mut tee = TeeSink { a: &mut a, b: &mut b };
+            assert!(tee.enabled());
+            tee.emit(1, TraceEvent::ScanStart { chip: 0 });
+            tee.emit(2, TraceEvent::ChipDrain { chip: 0 });
+            tee.emit_nondet(0, TraceEvent::ExecutorSteal { job: 7 });
+        }
+        assert_eq!(render_stream(&a.events), render_stream(&b.events));
+        assert_eq!(a.events.len(), 2);
+        assert_eq!(a.nondet.len(), 1);
+        assert_eq!(b.nondet.len(), 1);
     }
 
     #[test]

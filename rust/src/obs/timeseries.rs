@@ -46,6 +46,12 @@ pub struct Window {
     pub live_faults: u64,
     /// Per-chip goodput: requests completed per chip in this window.
     pub per_chip_completed: Vec<u64>,
+    /// Per-chip lane occupancy: ∫ busy-lane-count dt accrued inside
+    /// the window (lane·cycles, from `BatchFormed`/`LaneFree`). Window
+    /// utilization of chip `k` = `per_chip_busy_lane_cycles[k] /
+    /// (lanes_k · window_cycles)` — the collector-derived gauge the
+    /// audit report prices utilization from.
+    pub per_chip_busy_lane_cycles: Vec<u64>,
 }
 
 /// The full windowed series for one run.
@@ -78,6 +84,17 @@ pub fn collect(
     let mut in_flight: i64 = 0;
     let mut active: i64 = initial_active as i64;
     let mut live_faults: i64 = 0;
+    // per-chip lane-occupancy integral: busy lane count, the cycle it
+    // last accrued at, and the running ∫ busy dt
+    let mut busy: Vec<u64> = vec![0; n_chips];
+    let mut busy_last: Vec<u64> = vec![0; n_chips];
+    let mut busy_cum: Vec<u64> = vec![0; n_chips];
+    let accrue = |busy: &[u64], last: &mut [u64], cum: &mut [u64], k: usize, t: u64| {
+        if t > last[k] {
+            cum[k] += busy[k] * (t - last[k]);
+            last[k] = t;
+        }
+    };
 
     let mut windows = Vec::with_capacity(n_windows);
     let mut it = sorted.iter().peekable();
@@ -98,7 +115,9 @@ pub fn collect(
             active_chips: 0,
             live_faults: 0,
             per_chip_completed: vec![0; n_chips],
+            per_chip_busy_lane_cycles: vec![0; n_chips],
         };
+        let busy_cum0 = busy_cum.clone();
         while let Some(e) = it.peek() {
             if e.cycle >= end_cycle && !last {
                 break;
@@ -127,8 +146,23 @@ pub fn collect(
                 TraceEvent::RemapApplied { .. } => live_faults -= 1,
                 TraceEvent::ScaleUp { .. } => active += 1,
                 TraceEvent::ScaleDown { .. } => active -= 1,
+                TraceEvent::BatchFormed { chip, .. } if chip < n_chips => {
+                    accrue(&busy, &mut busy_last, &mut busy_cum, chip, e.cycle);
+                    busy[chip] += 1;
+                }
+                TraceEvent::LaneFree { chip, .. } if chip < n_chips => {
+                    accrue(&busy, &mut busy_last, &mut busy_cum, chip, e.cycle);
+                    busy[chip] = busy[chip].saturating_sub(1);
+                }
                 _ => {}
             }
+        }
+        // occupancy accrues through event-free stretches too: close the
+        // integral at the window boundary (events already clamped past
+        // it in the last window can't rewind — accrue is monotone)
+        for k in 0..n_chips {
+            accrue(&busy, &mut busy_last, &mut busy_cum, k, end_cycle);
+            w.per_chip_busy_lane_cycles[k] = busy_cum[k] - busy_cum0[k];
         }
         w.queue_depth = queue_depth.max(0) as u64;
         w.in_flight = in_flight.max(0) as u64;
@@ -149,13 +183,16 @@ fn series<F: Fn(&Window) -> u64>(ts: &TimeSeries, f: F) -> String {
 /// section; `sep` is the trailing `,` between array elements).
 pub fn render_json(ts: &TimeSeries, scenario: &str, sep: &str) -> String {
     let n_chips = ts.windows.first().map_or(0, |w| w.per_chip_completed.len());
-    let per_chip: Vec<String> = (0..n_chips)
-        .map(|k| {
-            let vals: Vec<String> =
-                ts.windows.iter().map(|w| w.per_chip_completed[k].to_string()).collect();
-            format!("[{}]", vals.join(", "))
-        })
-        .collect();
+    let per_chip_series = |f: &dyn Fn(&Window, usize) -> u64| -> String {
+        (0..n_chips)
+            .map(|k| {
+                let vals: Vec<String> =
+                    ts.windows.iter().map(|w| f(w, k).to_string()).collect();
+                format!("[{}]", vals.join(", "))
+            })
+            .collect::<Vec<String>>()
+            .join(", ")
+    };
     format!(
         "    {{\"scenario\": \"{scenario}\", \"window_cycles\": {}, \"windows\": {},\n     \
          \"active_chips\": [{}],\n     \
@@ -165,7 +202,8 @@ pub fn render_json(ts: &TimeSeries, scenario: &str, sep: &str) -> String {
          \"completed\": [{}],\n     \
          \"shed\": [{}],\n     \
          \"live_faults\": [{}],\n     \
-         \"per_chip_completed\": [{}]}}{sep}\n",
+         \"per_chip_completed\": [{}],\n     \
+         \"per_chip_busy_lane_cycles\": [{}]}}{sep}\n",
         ts.window_cycles,
         ts.windows.len(),
         series(ts, |w| w.active_chips as u64),
@@ -175,7 +213,8 @@ pub fn render_json(ts: &TimeSeries, scenario: &str, sep: &str) -> String {
         series(ts, |w| w.completed),
         series(ts, |w| w.shed),
         series(ts, |w| w.live_faults),
-        per_chip.join(", "),
+        per_chip_series(&|w, k| w.per_chip_completed[k]),
+        per_chip_series(&|w, k| w.per_chip_busy_lane_cycles[k]),
     )
 }
 
@@ -217,6 +256,27 @@ mod tests {
         assert_eq!(w1.live_faults, 0);
         assert_eq!(w1.active_chips, 2, "the scale-up moved the gauge");
         assert_eq!(w1.per_chip_completed, vec![1, 0]);
+    }
+
+    #[test]
+    fn busy_lane_integral_accrues_across_window_boundaries() {
+        // one lane busy from cycle 4 to 16 over two 10-cycle windows:
+        // 6 lane·cycles land in w0, 6 in w1; a second lane busy [12,16)
+        // adds 4 more to w1
+        let evs = vec![
+            at(4, E::BatchFormed { batch: 0, chip: 0, lane: 0, size: 1 }),
+            at(12, E::BatchFormed { batch: 1, chip: 0, lane: 1, size: 1 }),
+            at(16, E::LaneFree { chip: 0, lane: 0 }),
+            at(16, E::LaneFree { chip: 0, lane: 1 }),
+        ];
+        let ts = collect(&evs, 20, 2, 1, 1);
+        assert_eq!(ts.windows[0].per_chip_busy_lane_cycles, vec![6]);
+        assert_eq!(ts.windows[1].per_chip_busy_lane_cycles, vec![10]);
+        // total occupancy == sum of lane-busy spans: (16-4) + (16-12)
+        let total: u64 = ts.windows.iter().map(|w| w.per_chip_busy_lane_cycles[0]).sum();
+        assert_eq!(total, 16);
+        let j = render_json(&ts, "x", "");
+        assert!(j.contains("\"per_chip_busy_lane_cycles\": [[6, 10]]"), "missing series:\n{j}");
     }
 
     #[test]
@@ -265,6 +325,7 @@ mod tests {
             "shed",
             "live_faults",
             "per_chip_completed",
+            "per_chip_busy_lane_cycles",
         ] {
             assert!(j.contains(&format!("\"{key}\": [")), "missing series {key}");
         }

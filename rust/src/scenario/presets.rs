@@ -35,6 +35,13 @@
 //!   2→4 chips and shrinks back after the spike drains;
 //! * `open_diurnal` — 4 chips under a sinusoidal day/night rate with
 //!   the autoscaler tracking the curve between 2 and 4 active chips.
+//!
+//! Four of these (`degraded_continuity`, `open_steady`, `flash_crowd`,
+//! `open_diurnal`) are additionally replayed through the span ledger by
+//! `repro audit` (DESIGN.md §11): `degraded_continuity` supplies the
+//! fault-forensics story (drain → episode → remap pricing), the open
+//! trio the admission/queueing attribution under load
+//! (`BENCH_audit.json`).
 
 use crate::array::Dims;
 use crate::fleet::RoutingPolicy;

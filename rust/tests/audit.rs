@@ -1,0 +1,502 @@
+//! Acceptance tests for the attribution ledger and the bench auditor
+//! (DESIGN.md §11).
+//!
+//! 1. **Exact-sum invariant**: for every completed request of a random
+//!    fleet run, `admission + batch + queue + fault + execution ==
+//!    end-to-end` — cycles, not approximations.
+//! 2. **Worker invariance**: the rendered ledger and `BENCH_audit.json`
+//!    are byte-identical at any executor width.
+//! 3. **Episode boundaries**: synthetic streams pin the window
+//!    semantics — drain extension to re-admit, unresolved drains,
+//!    unrepaired faults, the closing remap being priced.
+//! 4. **Diff gate**: identical inputs pass, seeded regressions fail
+//!    with a nonzero count, tolerances and severity classes behave as
+//!    documented in EXPERIMENTS.md.
+
+use hyca::array::Dims;
+use hyca::coordinator::{exp_audit, RunOpts};
+use hyca::fleet::{self, ChipSpec, FaultPlan, FleetConfig, LifecyclePolicy, RoutingPolicy};
+use hyca::inference::Engine;
+use hyca::obs::attrib::{render_ledger, SpanLedger};
+use hyca::obs::{audit, TraceEvent as E};
+use hyca::testkit::{check, Gen};
+use std::sync::Arc;
+
+const SEED: u64 = 0xC0FFEE;
+
+fn opts(seed: u64, threads: usize) -> RunOpts {
+    RunOpts {
+        seed,
+        threads,
+        out_dir: std::env::temp_dir().join("hyca_audit_results"),
+        builtin_model: true,
+        ..RunOpts::default()
+    }
+}
+
+// ---------------------------------------------------------------- ledger
+
+fn random_fleet_cfg(g: &mut Gen) -> FleetConfig {
+    let n_chips = g.usize_in(1, 4);
+    let clients = g.usize_in(1, 3) * n_chips;
+    let faults = if g.bool(0.5) {
+        Some(FaultPlan {
+            mean_interarrival_cycles: 20_000.0,
+            horizon_cycles: 60_000,
+            scan_period_cycles: 4_000,
+            group_width: 8,
+            fpt_capacity: 8,
+            max_arrivals: g.usize_in(1, 4),
+            spatial: hyca::faults::Spatial::Random,
+        })
+    } else {
+        None
+    };
+    FleetConfig {
+        seed: g.usize_in(0, 1 << 20) as u64,
+        chips: vec![ChipSpec { dims: Dims::new(8, 8), lanes: g.usize_in(1, 3) }; n_chips],
+        policy: *g.choose(&RoutingPolicy::all()),
+        max_batch: g.usize_in(1, 5),
+        max_wait_cycles: g.usize_in(0, 10_000) as u64,
+        clients,
+        think_cycles: g.usize_in(0, 1_000) as u64,
+        total_requests: g.usize_in(4, 8 * n_chips),
+        queue_cap: clients,
+        executor_threads: 1,
+        windows: 4,
+        faults,
+        lifecycle: LifecyclePolicy::NEVER,
+        open_loop: None,
+        admission: None,
+        autoscale: None,
+    }
+}
+
+#[test]
+fn prop_ledger_sums_exactly_and_is_worker_invariant() {
+    // The attribution contract on random fleets: the five components
+    // sum to end-to-end on every span, every admitted request closes a
+    // span, and the rendered ledger is a pure function of the seed —
+    // byte-identical at any executor width.
+    check("ledger exact sums + worker invariance", 6, |g| {
+        let engine = Arc::new(Engine::builtin());
+        let cfg = random_fleet_cfg(g);
+        let run = |threads: usize| {
+            let mut c = cfg.clone();
+            c.executor_threads = threads;
+            let mut ledger = SpanLedger::new(&c.lane_counts());
+            let report = fleet::run_traced(&engine, &c, &mut ledger).unwrap();
+            (ledger.finish(report.total_cycles, &report.correct), report)
+        };
+        let (audit, report) = run(1);
+        assert_eq!(
+            audit.spans.len(),
+            report.total_requests,
+            "every admitted request must close a span"
+        );
+        for sp in &audit.spans {
+            assert_eq!(
+                sp.components_sum(),
+                sp.end_to_end(),
+                "attribution leak on request {}",
+                sp.id
+            );
+            assert!(sp.enqueue_cycle <= sp.dispatch_cycle);
+            assert!(sp.dispatch_cycle <= sp.complete_cycle);
+        }
+        // the totals invariant lifts from the spans
+        let (e2e, adm, batch, queue, fault, exec) = audit.totals();
+        assert_eq!(e2e, adm + batch + queue + fault + exec);
+        // Σ episode cycles_lost is exactly Σ span fault_stall: every
+        // drain interval belongs to exactly one episode
+        let span_stall: u64 = audit.spans.iter().map(|s| s.fault_stall).sum();
+        let ep_lost: u64 = audit.episodes.iter().map(|e| e.cycles_lost).sum();
+        assert_eq!(ep_lost, span_stall, "stall cycles must attribute to episodes");
+        let (wide, _) = run(g.usize_in(2, 6));
+        assert_eq!(
+            render_ledger(&audit),
+            render_ledger(&wide),
+            "executor width leaked into the ledger"
+        );
+    });
+}
+
+/// Feed a synthetic stream into a fresh ledger over `lanes`-wide chips.
+fn fold(lane_counts: &[usize], events: &[(u64, E)], horizon: u64) -> hyca::obs::attrib::AuditReport {
+    let mut ledger = SpanLedger::new(lane_counts);
+    for &(cycle, event) in events {
+        ledger.observe(cycle, event);
+    }
+    ledger.finish(horizon, &[])
+}
+
+#[test]
+fn queue_wait_is_the_all_lanes_busy_measure() {
+    // one lane, occupied [0, 30): a request enqueued at 10 waits 20
+    // cycles head-of-line + 10 cycles batch formation, then executes 10
+    let report = fold(
+        &[1],
+        &[
+            (0, E::BatchFormed { batch: 0, chip: 0, lane: 0, size: 1 }),
+            (10, E::RequestEnqueue { id: 7, chip: 0 }),
+            (30, E::LaneFree { chip: 0, lane: 0 }),
+            (40, E::BatchFormed { batch: 1, chip: 0, lane: 0, size: 1 }),
+            (40, E::RequestDispatch { id: 7, chip: 0, batch: 1 }),
+            (50, E::RequestComplete { id: 7, chip: 0, batch: 1 }),
+            (50, E::LaneFree { chip: 0, lane: 0 }),
+        ],
+        50,
+    );
+    assert_eq!(report.spans.len(), 1);
+    let sp = &report.spans[0];
+    assert_eq!((sp.queue_wait, sp.batch_wait, sp.fault_stall), (20, 10, 0));
+    assert_eq!(sp.execution, 10);
+    assert_eq!(sp.components_sum(), sp.end_to_end());
+    // the chip summary integrates the same measures
+    assert_eq!(report.chips[0].hol_cycles, 40, "[0,30) + [40,50)");
+    assert_eq!(report.chips[0].busy_lane_cycles, 40);
+    assert_eq!(report.chips[0].served, 1);
+}
+
+#[test]
+fn drain_overlap_counts_as_fault_stall_not_queue_wait() {
+    // the chip drains [20, 60) while its only lane is busy [0, 70):
+    // the overlap charges fault_stall (drain takes precedence), the
+    // rest of the busy window charges queue_wait
+    let report = fold(
+        &[1],
+        &[
+            (0, E::BatchFormed { batch: 0, chip: 0, lane: 0, size: 1 }),
+            (10, E::RequestEnqueue { id: 0, chip: 0 }),
+            (20, E::ChipDrain { chip: 0 }),
+            (60, E::ChipReadmit { chip: 0 }),
+            (70, E::LaneFree { chip: 0, lane: 0 }),
+            (80, E::BatchFormed { batch: 1, chip: 0, lane: 0, size: 1 }),
+            (80, E::RequestDispatch { id: 0, chip: 0, batch: 1 }),
+            (95, E::RequestComplete { id: 0, chip: 0, batch: 1 }),
+            (95, E::LaneFree { chip: 0, lane: 0 }),
+        ],
+        100,
+    );
+    let sp = &report.spans[0];
+    // wait [10, 80): drained 40, all-busy-not-drained [10,20)+[60,70)=20,
+    // remainder [70, 80) = 10
+    assert_eq!((sp.fault_stall, sp.queue_wait, sp.batch_wait), (40, 20, 10));
+    assert_eq!(sp.components_sum(), sp.end_to_end());
+    assert_eq!(report.chips[0].drained_cycles, 40);
+}
+
+#[test]
+fn reshard_accrues_stall_on_the_chip_actually_held() {
+    // enqueued on a draining chip 0, re-sharded to healthy chip 1 at
+    // 30: stall accrues only for the [10, 30) segment on chip 0
+    let report = fold(
+        &[1, 1],
+        &[
+            (5, E::ChipDrain { chip: 0 }),
+            (10, E::RequestEnqueue { id: 3, chip: 0 }),
+            (30, E::RequestReshard { id: 3, from: 0, to: 1 }),
+            (45, E::BatchFormed { batch: 0, chip: 1, lane: 0, size: 1 }),
+            (45, E::RequestDispatch { id: 3, chip: 1, batch: 0 }),
+            (55, E::RequestComplete { id: 3, chip: 1, batch: 0 }),
+            (55, E::LaneFree { chip: 1, lane: 0 }),
+        ],
+        60,
+    );
+    let sp = &report.spans[0];
+    assert_eq!(sp.chip, 1, "the span reports the serving chip");
+    assert_eq!(sp.reshards, 1);
+    assert_eq!(sp.fault_stall, 20, "[10,30) on the drained chip");
+    assert_eq!(sp.batch_wait, 15, "[30,45) on the healthy chip");
+    assert_eq!(sp.components_sum(), sp.end_to_end());
+}
+
+// -------------------------------------------------------------- episodes
+
+#[test]
+fn episode_extends_to_readmit_when_a_drain_starts_inside() {
+    // fault at 100 drains the chip at 120; the remap lands at 150 but
+    // the chip only re-admits at 200 — the episode covers the drain
+    let report = fold(
+        &[1],
+        &[
+            (100, E::FaultArrival { chip: 0, row: 1, col: 2 }),
+            (120, E::ChipDrain { chip: 0 }),
+            (150, E::RemapApplied { chip: 0, row: 1, col: 2 }),
+            (200, E::ChipReadmit { chip: 0 }),
+        ],
+        300,
+    );
+    assert_eq!(report.episodes.len(), 1);
+    let ep = &report.episodes[0];
+    assert_eq!(ep.start_cycle, 100);
+    assert_eq!(ep.end_cycle, Some(200), "extended to the re-admit cycle");
+    assert_eq!((ep.faults, ep.remaps), (1, 1));
+    assert_eq!(ep.mean_remap_latency(), Some(50.0));
+}
+
+#[test]
+fn unresolved_drain_and_unrepaired_fault_leave_the_episode_open() {
+    // a drain that never re-admits: the episode never ends
+    let report = fold(
+        &[1],
+        &[
+            (100, E::FaultArrival { chip: 0, row: 0, col: 0 }),
+            (120, E::ChipDrain { chip: 0 }),
+            (150, E::RemapApplied { chip: 0, row: 0, col: 0 }),
+        ],
+        300,
+    );
+    assert_eq!(report.episodes.len(), 1);
+    assert_eq!(report.episodes[0].end_cycle, None, "open drain ⇒ open episode");
+    // an unrepaired fault (no remap at all) is open too
+    let report = fold(&[1], &[(80, E::FaultArrival { chip: 0, row: 3, col: 3 })], 300);
+    assert_eq!(report.episodes.len(), 1);
+    assert_eq!(report.episodes[0].start_cycle, 80);
+    assert_eq!(report.episodes[0].end_cycle, None);
+    assert_eq!(report.episodes[0].remaps, 0);
+    assert_eq!(report.episodes[0].mean_remap_latency(), None);
+}
+
+#[test]
+fn the_closing_remap_is_priced_and_distinct_episodes_stay_separate() {
+    // two well-separated fault→remap pairs on one chip = two episodes,
+    // each pricing its own closing remap
+    let report = fold(
+        &[1],
+        &[
+            (100, E::FaultArrival { chip: 0, row: 1, col: 1 }),
+            (150, E::RemapApplied { chip: 0, row: 1, col: 1 }),
+            (5_000, E::FaultArrival { chip: 0, row: 2, col: 2 }),
+            (5_080, E::RemapApplied { chip: 0, row: 2, col: 2 }),
+        ],
+        10_000,
+    );
+    assert_eq!(report.episodes.len(), 2, "separated faults are separate episodes");
+    assert_eq!(report.episodes[0].end_cycle, Some(150));
+    assert_eq!(report.episodes[0].remaps, 1, "the closing remap is inside the window");
+    assert_eq!(report.episodes[0].mean_remap_latency(), Some(50.0));
+    assert_eq!(report.episodes[1].end_cycle, Some(5_080));
+    assert_eq!(report.episodes[1].mean_remap_latency(), Some(80.0));
+}
+
+#[test]
+fn overlapping_faults_merge_into_one_episode() {
+    // a second fault arrives while the first is live: one episode, two
+    // faults, latency priced per coord-matched FIFO pair
+    let report = fold(
+        &[1],
+        &[
+            (100, E::FaultArrival { chip: 0, row: 1, col: 1 }),
+            (110, E::FaultArrival { chip: 0, row: 2, col: 2 }),
+            (150, E::RemapApplied { chip: 0, row: 1, col: 1 }),
+            (180, E::RemapApplied { chip: 0, row: 2, col: 2 }),
+        ],
+        1_000,
+    );
+    assert_eq!(report.episodes.len(), 1);
+    let ep = &report.episodes[0];
+    assert_eq!((ep.start_cycle, ep.end_cycle), (100, Some(180)));
+    assert_eq!((ep.faults, ep.remaps), (2, 2));
+    assert_eq!(ep.remap_latency_total, 50 + 70);
+    assert_eq!(ep.remap_latency_max, 70);
+}
+
+#[test]
+fn episode_charges_the_requests_it_stalled() {
+    // the drain [120, 200) stalls a request for its whole second half
+    let report = fold(
+        &[1],
+        &[
+            (100, E::FaultArrival { chip: 0, row: 1, col: 1 }),
+            (120, E::ChipDrain { chip: 0 }),
+            (130, E::RequestEnqueue { id: 0, chip: 0 }),
+            (150, E::RemapApplied { chip: 0, row: 1, col: 1 }),
+            (200, E::ChipReadmit { chip: 0 }),
+            (210, E::BatchFormed { batch: 0, chip: 0, lane: 0, size: 1 }),
+            (210, E::RequestDispatch { id: 0, chip: 0, batch: 0 }),
+            (230, E::RequestComplete { id: 0, chip: 0, batch: 0 }),
+            (230, E::LaneFree { chip: 0, lane: 0 }),
+        ],
+        300,
+    );
+    assert_eq!(report.spans[0].fault_stall, 70, "[130, 200) on the drained chip");
+    let ep = &report.episodes[0];
+    assert_eq!(ep.requests_stalled, 1);
+    assert_eq!(ep.cycles_lost, 70, "episode cost == the stall it caused");
+}
+
+// ------------------------------------------------------------ the bench
+
+#[test]
+fn bench_json_is_byte_identical_at_any_worker_count() {
+    let narrow = exp_audit::bench_json(&opts(SEED, 1), true).unwrap();
+    let wide = exp_audit::bench_json(&opts(SEED, 8), true).unwrap();
+    assert_eq!(narrow, wide, "worker count leaked into the audit bench");
+    let again = exp_audit::bench_json(&opts(SEED, 1), true).unwrap();
+    assert_eq!(narrow, again);
+    // the seed matters
+    let other = exp_audit::bench_json(&opts(0xBEEF, 1), true).unwrap();
+    assert_ne!(narrow, other);
+}
+
+#[test]
+fn bench_json_has_the_documented_schema_and_diffs_clean_against_itself() {
+    let json = exp_audit::bench_json(&opts(SEED, 2), true).unwrap();
+    for key in [
+        "\"schema\": \"hyca-audit-bench-v1\"",
+        "\"presets\": [",
+        "\"scenario\": \"degraded_continuity\"",
+        "\"scenario\": \"open_steady\"",
+        "\"scenario\": \"flash_crowd\"",
+        "\"scenario\": \"open_diurnal\"",
+        "\"spec_hash\":",
+        "\"attribution\":",
+        "\"end_to_end_cycles\":",
+        "\"admission_wait_cycles\":",
+        "\"batch_wait_cycles\":",
+        "\"queue_wait_cycles\":",
+        "\"fault_stall_cycles\":",
+        "\"execution_cycles\":",
+        "\"episodes\":",
+        "\"chips\": [",
+        "\"utilization\":",
+        "\"hol_cycles\":",
+    ] {
+        assert!(json.contains(key), "missing {key} in:\n{json}");
+    }
+    // everything is simulated time — wall-clock fields are forbidden
+    for forbidden in ["seconds", "wall", "ns_per"] {
+        assert!(!json.contains(forbidden), "wall-clock field {forbidden:?}");
+    }
+    // the bench parses with the in-repo reader, and the exact-sum
+    // invariant is visible in the rendered numbers
+    let doc = audit::parse(&json).unwrap();
+    let presets = match doc.get("presets") {
+        Some(audit::Json::Arr(items)) => items,
+        other => panic!("presets must be an array, got {other:?}"),
+    };
+    assert_eq!(presets.len(), 4);
+    for p in presets {
+        let attr = p.get("attribution").expect("attribution object");
+        let n = |key: &str| match attr.get(key) {
+            Some(audit::Json::Num(v)) => *v,
+            other => panic!("{key} must be a number, got {other:?}"),
+        };
+        assert_eq!(
+            n("end_to_end_cycles"),
+            n("admission_wait_cycles")
+                + n("batch_wait_cycles")
+                + n("queue_wait_cycles")
+                + n("fault_stall_cycles")
+                + n("execution_cycles"),
+            "rendered components must sum exactly"
+        );
+    }
+    // a bench diffed against itself is clean
+    let report = audit::diff_text(&json, &json).unwrap();
+    assert_eq!(report.regressions(), 0);
+    assert_eq!(report.notices(), 0);
+}
+
+#[test]
+fn degraded_continuity_audit_actually_shows_fault_forensics() {
+    // the drain preset is the forensics anchor: its audit must contain
+    // at least one episode with a measured remap
+    let engine = Arc::new(Engine::builtin());
+    let run = exp_audit::run_preset(&engine, "degraded_continuity", &opts(SEED, 1), true).unwrap();
+    assert!(!run.audit.episodes.is_empty(), "the drain scenario must produce episodes");
+    assert!(run.audit.episodes.iter().any(|e| e.remaps > 0), "remaps must be priced");
+}
+
+// ------------------------------------------------------------- the diff
+
+#[test]
+fn diff_passes_identical_and_reformatted_inputs() {
+    let old = r#"{"schema": "hyca-audit-bench-v1", "seed": 12648430, "x": [1, 2.5, "s"]}"#;
+    // jq-style reformat: different whitespace, same structure
+    let new = "{\n  \"schema\":\"hyca-audit-bench-v1\",\n  \"seed\":12648430,\n  \
+               \"x\":[1,2.5,\"s\"]\n}\n";
+    let report = audit::diff_text(old, new).unwrap();
+    assert_eq!(report.regressions(), 0, "reformatting is not a regression:\n{}", report.render());
+    assert_eq!(report.notices(), 0);
+}
+
+#[test]
+fn diff_flags_a_perturbed_value_as_regression() {
+    let old = r#"{"schema": "hyca-audit-bench-v1", "presets": [{"requests": 100}]}"#;
+    let new = r#"{"schema": "hyca-audit-bench-v1", "presets": [{"requests": 101}]}"#;
+    let report = audit::diff_text(old, new).unwrap();
+    assert_eq!(report.regressions(), 1);
+    assert!(report.render().contains("REGRESSION"));
+    assert!(report.render().contains("presets.0.requests"));
+}
+
+#[test]
+fn diff_severity_classes_match_the_documentation() {
+    // missing key = regression; added key = notice
+    let old = r#"{"schema": "hyca-audit-bench-v1", "a": 1, "b": 2}"#;
+    let new = r#"{"schema": "hyca-audit-bench-v1", "a": 1, "c": 3}"#;
+    let report = audit::diff_text(old, new).unwrap();
+    assert_eq!(report.regressions(), 1, "dropping a key fails the gate");
+    assert_eq!(report.notices(), 1, "adding a key is additive evolution");
+    // array length change = regression
+    let old = r#"{"schema": "hyca-audit-bench-v1", "xs": [1, 2]}"#;
+    let new = r#"{"schema": "hyca-audit-bench-v1", "xs": [1]}"#;
+    assert_eq!(audit::diff_text(old, new).unwrap().regressions(), 1);
+    // type change = regression
+    let old = r#"{"schema": "hyca-audit-bench-v1", "v": 1}"#;
+    let new = r#"{"schema": "hyca-audit-bench-v1", "v": "1"}"#;
+    assert_eq!(audit::diff_text(old, new).unwrap().regressions(), 1);
+}
+
+#[test]
+fn diff_applies_the_typed_tolerance_rules() {
+    // utilization carries a 1e-9 relative tolerance: formatting jitter
+    // passes, real drift fails
+    let old = r#"{"schema": "hyca-audit-bench-v1",
+                  "presets": [{"chips": [{"utilization": 0.5}]}]}"#;
+    let close = r#"{"schema": "hyca-audit-bench-v1",
+                  "presets": [{"chips": [{"utilization": 0.5000000000001}]}]}"#;
+    let report = audit::diff_text(old, close).unwrap();
+    assert_eq!(report.regressions(), 0, "inside rel tol:\n{}", report.render());
+    assert_eq!(report.notices(), 1, "within-tolerance drift is still reported");
+    let far = r#"{"schema": "hyca-audit-bench-v1",
+                  "presets": [{"chips": [{"utilization": 0.51}]}]}"#;
+    assert_eq!(audit::diff_text(old, far).unwrap().regressions(), 1);
+    // the perf schema ignores its wall-clock section wholesale
+    let old = r#"{"schema": "hyca-perf-bench-v1", "timing": {"wall_ms": 10}, "d": 1}"#;
+    let new = r#"{"schema": "hyca-perf-bench-v1", "timing": {"wall_ms": 99}, "d": 1}"#;
+    let report = audit::diff_text(old, new).unwrap();
+    assert_eq!(report.regressions(), 0, "timing is nondeterministic by design");
+    assert_eq!(report.notices(), 1, "the ignored subtree is disclosed");
+}
+
+#[test]
+fn diff_refuses_incomparable_inputs() {
+    // different schemas are an error, not a regression count
+    let a = r#"{"schema": "hyca-audit-bench-v1"}"#;
+    let b = r#"{"schema": "hyca-traffic-bench-v3"}"#;
+    assert!(audit::diff_text(a, b).is_err());
+    // a schema-less file is not a bench baseline
+    assert!(audit::diff_text(r#"{"x": 1}"#, a).is_err());
+    // parse errors propagate
+    assert!(audit::diff_text("{", a).is_err());
+    assert!(audit::diff_text(a, r#"{"schema": "hyca-audit-bench-v1"} trailing"#).is_err());
+}
+
+#[test]
+fn json_parser_handles_the_bench_grammar() {
+    let doc = audit::parse(
+        r#"{"s": "a\"b\\cA", "n": -1.5e3, "t": true, "f": false, "z": null,
+            "arr": [[]], "obj": {"k": 0}}"#,
+    )
+    .unwrap();
+    assert_eq!(doc.get("s").and_then(audit::Json::as_str), Some("a\"b\\cA"));
+    assert_eq!(doc.get("n"), Some(&audit::Json::Num(-1500.0)));
+    assert_eq!(doc.get("t"), Some(&audit::Json::Bool(true)));
+    assert_eq!(doc.get("z"), Some(&audit::Json::Null));
+    assert!(matches!(doc.get("arr"), Some(audit::Json::Arr(a)) if a.len() == 1));
+    assert!(audit::parse("[1, 2, ]").is_err(), "trailing commas are not JSON");
+    assert!(audit::parse("").is_err());
+}

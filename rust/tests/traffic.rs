@@ -46,7 +46,7 @@ fn bench_json_is_byte_identical_at_any_worker_count() {
 fn bench_json_has_the_documented_schema() {
     let json = exp_traffic::bench_json(&opts(SEED, 2), true).unwrap();
     for key in [
-        "\"schema\": \"hyca-traffic-bench-v2\"",
+        "\"schema\": \"hyca-traffic-bench-v3\"",
         "\"scenarios\": [",
         "\"scenario\": \"open_steady\"",
         "\"scenario\": \"flash_crowd\"",
@@ -68,6 +68,9 @@ fn bench_json_has_the_documented_schema() {
         "\"completed\":",
         "\"live_faults\":",
         "\"per_chip_completed\":",
+        // v3: the per-chip lane-occupancy series (the collector gauge
+        // `repro audit` prices utilization from)
+        "\"per_chip_busy_lane_cycles\":",
     ] {
         assert!(json.contains(key), "missing {key} in:\n{json}");
     }
