@@ -1,0 +1,642 @@
+//! `replay` — event-sourced replay, snapshot/restore and time-travel
+//! branching over the cluster engine (`repro replay`, DESIGN.md §12).
+//!
+//! A fleet scenario runs on [`crate::engine::ClusterEngine`], which
+//! appends every state change to a typed event log and captures a full
+//! snapshot at every `[engine] snapshot_every_cycles` boundary. This
+//! driver then *proves* the event-sourcing contract at runtime, on
+//! every invocation:
+//!
+//! * **resume** — rebuild the engine from the chosen snapshot and
+//!   replay to completion; the replayed tail must equal the
+//!   uninterrupted log tail event-for-event and the finished timeline
+//!   must hash to the same digest (a hard error otherwise);
+//! * **fork-free branch** — an empty override set replayed from the
+//!   fork must reproduce the base run bit-for-bit before any branch
+//!   diff is trusted;
+//! * **crash restart** — with `--run-dir`, the log + snapshots persist
+//!   to disk; a rerun against a truncated log resumes from the last
+//!   usable snapshot, verifies the surviving overlap, heals the log
+//!   and emits a `BENCH_replay.json` byte-identical to the
+//!   uninterrupted run's.
+//!
+//! `--branch <file>` replays a `[branch]` override set (kill a chip,
+//! rescale the arrival tail) from the fork point and locates the first
+//! divergent cycle by folding both event logs through the span ledger
+//! ([`crate::obs::attrib::SpanLedger`]) — the same projection `repro
+//! audit` prices latency from, so a branch diff and an audit can never
+//! disagree about what happened.
+//!
+//! The baseline (`BENCH_replay.json`, schema `hyca-replay-bench-v1`)
+//! holds only integers and the timeline digest — every field compares
+//! exactly under `repro diff`, and the bytes are identical whether the
+//! run was uninterrupted, resumed in-process, or crash-restarted from
+//! disk, at any `--workers` value.
+
+use std::fmt::Write as _;
+use std::path::Path;
+
+use super::{Experiment, RunOpts};
+use crate::engine::{
+    self, branch, project, BranchOverrides, ClusterEngine, Event, Snapshot,
+};
+use crate::fleet::{FleetConfig, FleetTimeline};
+use crate::inference::Engine;
+use crate::obs::attrib::AuditReport;
+use crate::obs::{recorder, FlightRecorder, NullSink, Probe, SpanLedger};
+use crate::scenario::{self, Cell, ScenarioSpec, TrafficMode};
+use crate::util::table::Table;
+use anyhow::{anyhow, ensure, Context, Result};
+
+pub struct ReplayExp;
+
+/// The canonical replay scenario: a ≥100M-cycle diurnal horizon that
+/// is only smoke-runnable *because* of snapshot/resume.
+pub const DEFAULT_PRESET: &str = "long_diurnal";
+
+/// Resolve a replay target: a registered preset name or a `.scn` path.
+pub fn replay_spec(target: &str) -> Result<ScenarioSpec> {
+    if let Some(spec) = scenario::preset(target) {
+        return Ok(spec);
+    }
+    let text = std::fs::read_to_string(target)
+        .with_context(|| format!("no preset or readable .scn file named {target:?}"))?;
+    Ok(ScenarioSpec::parse(&text)?)
+}
+
+/// Lower a replay spec into its runnable [`FleetConfig`] (public so
+/// the integration tests run exactly what the bench reports).
+pub fn replay_config(spec: &ScenarioSpec, seed: u64, smoke: bool, threads: usize) -> FleetConfig {
+    scenario::lower_fleet(spec, &Cell::base(spec), smoke, seed, threads)
+}
+
+/// The snapshot cadence: the spec's `[engine] snapshot_every_cycles`
+/// knob, or an eighth of the open-loop horizon (closed loop: 20k
+/// cycles) when the section is absent.
+pub fn snapshot_cadence(spec: &ScenarioSpec, smoke: bool) -> u64 {
+    match &spec.engine {
+        Some(eng) => *eng.snapshot_every_cycles.at(smoke),
+        None => match spec.workload.mode {
+            TrafficMode::Open { horizon_cycles, .. } => (horizon_cycles.at(smoke) / 8).max(1),
+            TrafficMode::Closed => 20_000,
+        },
+    }
+}
+
+/// FNV-1a over a canonical rendering of everything deterministic in a
+/// finished timeline: request records, dispatched batches, the merged
+/// cluster event history and the shed log. Two runs are byte-identical
+/// iff their digests match (masks are static context recomputed from
+/// the config, so they are covered by the batch coordinates).
+pub fn timeline_digest(t: &FleetTimeline) -> u64 {
+    let mut s = String::with_capacity(128 + 48 * (t.requests.len() + t.jobs.len()));
+    let _ = write!(
+        s,
+        "cycles={};offered={};max_pending={};initial_active={};unrepaired={}",
+        t.total_cycles, t.offered, t.max_pending, t.initial_active, t.unrepaired
+    );
+    for r in &t.requests {
+        let _ = write!(
+            s,
+            ";r{},{},{},{},{},{},{},{}",
+            r.id,
+            r.client,
+            r.image_idx,
+            r.enqueue_cycle,
+            r.start_cycle,
+            r.complete_cycle,
+            r.batch_id,
+            r.slot
+        );
+    }
+    for j in &t.jobs {
+        let _ = write!(
+            s,
+            ";j{},{},{},{},{}",
+            j.chip, j.job.id, j.job.start_cycle, j.job.end_cycle, j.job.lane
+        );
+        for &ix in &j.job.image_idxs {
+            let _ = write!(s, ",{ix}");
+        }
+    }
+    for e in &t.events {
+        let (k, a, b) = e.kind.sort_key();
+        let _ = write!(s, ";e{},{},{},{},{}", e.cycle, e.chip, k, a, b);
+    }
+    for c in &t.shed_cycles {
+        let _ = write!(s, ";s{c}");
+    }
+    engine::fnv1a(s.as_bytes())
+}
+
+/// One uninterrupted engine run with periodic snapshots: the reference
+/// every resume/branch is verified against.
+pub struct BaseRun {
+    pub snaps: Vec<Snapshot>,
+    pub log: Vec<Event>,
+    pub timeline: FleetTimeline,
+    pub digest: u64,
+}
+
+/// Run `cfg` to completion on the cluster engine, snapshotting every
+/// `every` cycles.
+pub fn run_base(engine: &Engine, cfg: &FleetConfig, every: u64) -> BaseRun {
+    let mut rec = FlightRecorder::new(recorder::DEFAULT_CAPACITY);
+    let mut sink = NullSink;
+    let mut probe = Probe { sink: &mut sink, rec: &mut rec };
+    let mut core = ClusterEngine::new(engine, cfg, &mut probe);
+    let snaps = core.run_with_snapshots(&mut probe, every);
+    let log = core.log().to_vec();
+    let timeline = core.finish(&mut probe);
+    let digest = timeline_digest(&timeline);
+    BaseRun { snaps, log, timeline, digest }
+}
+
+/// The in-process resume proof: rebuild from `snap`, replay to the
+/// end, and hard-fail unless the replayed tail equals the
+/// uninterrupted log tail and the finished timeline hashes to the base
+/// digest.
+pub fn resume_and_verify(
+    engine: &Engine,
+    cfg: &FleetConfig,
+    snap: &Snapshot,
+    base: &BaseRun,
+) -> Result<usize> {
+    let mut core = ClusterEngine::resume(engine, cfg, snap)
+        .map_err(|e| anyhow!("resume from snapshot @{}: {e}", snap.label_cycle))?;
+    let mut rec = FlightRecorder::new(recorder::DEFAULT_CAPACITY);
+    let mut sink = NullSink;
+    let mut probe = Probe { sink: &mut sink, rec: &mut rec };
+    core.run(&mut probe);
+    let off = snap.events_logged as usize;
+    ensure!(
+        off <= base.log.len(),
+        "snapshot @{} points past the log ({} > {} events)",
+        snap.label_cycle,
+        off,
+        base.log.len()
+    );
+    ensure!(
+        core.log() == &base.log[off..],
+        "resume from cycle {} is NOT byte-identical: replayed tail diverges \
+         from the uninterrupted event log",
+        snap.label_cycle
+    );
+    let tail_events = core.log().len();
+    let timeline = core.finish(&mut probe);
+    ensure!(
+        timeline_digest(&timeline) == base.digest,
+        "resume from cycle {}: timeline digest mismatch vs the uninterrupted run",
+        snap.label_cycle
+    );
+    Ok(tail_events)
+}
+
+/// Fold an event log through the span ledger into the audit report the
+/// branch diff compares (the exact projection the trace bus carries).
+fn ledger_report(cfg: &FleetConfig, events: &[Event], horizon: u64, requests: usize) -> AuditReport {
+    let mut ledger = SpanLedger::new(&cfg.lane_counts());
+    for e in events {
+        ledger.observe(e.cycle, project(e));
+    }
+    ledger.finish(horizon, &vec![true; requests])
+}
+
+/// A branched timeline replayed from a fork snapshot under overrides.
+pub struct BranchRun {
+    pub fork_cycle: u64,
+    pub overrides: BranchOverrides,
+    /// Full branched history: shared prefix + replayed tail.
+    pub events: Vec<Event>,
+    pub timeline: FleetTimeline,
+    pub digest: u64,
+    /// First cycle where the branch's span ledger disagrees with the
+    /// base run's (`None`: timelines identical through the horizon).
+    pub divergence: Option<u64>,
+}
+
+/// Replay a branch: fork at the latest snapshot at or before the fork
+/// cycle, apply the overrides, run to completion, and diff the two
+/// timelines through the span ledger. An empty override set is
+/// asserted to reproduce the base run bit-for-bit.
+pub fn run_branch(
+    engine: &Engine,
+    cfg: &FleetConfig,
+    base: &BaseRun,
+    ov: &BranchOverrides,
+    from_cycle: Option<u64>,
+) -> Result<BranchRun> {
+    let fork = ov
+        .fork_cycle
+        .or(from_cycle)
+        .or_else(|| base.snaps.last().map(|s| s.label_cycle))
+        .ok_or_else(|| anyhow!("no snapshot to fork from"))?;
+    let snap = base
+        .snaps
+        .iter()
+        .rev()
+        .find(|s| s.label_cycle <= fork)
+        .ok_or_else(|| {
+            anyhow!(
+                "no snapshot at or before cycle {fork} — first boundary is @{}",
+                base.snaps.first().map_or(0, |s| s.label_cycle)
+            )
+        })?;
+    let mut core = ClusterEngine::resume(engine, cfg, snap)
+        .map_err(|e| anyhow!("branch fork from snapshot @{}: {e}", snap.label_cycle))?;
+    branch::apply(&mut core, ov, fork).map_err(|e| anyhow!("branch overrides: {e}"))?;
+    let mut rec = FlightRecorder::new(recorder::DEFAULT_CAPACITY);
+    let mut sink = NullSink;
+    let mut probe = Probe { sink: &mut sink, rec: &mut rec };
+    core.run(&mut probe);
+    let off = snap.events_logged as usize;
+    let mut events = base.log[..off].to_vec();
+    events.extend_from_slice(core.log());
+    let timeline = core.finish(&mut probe);
+    let digest = timeline_digest(&timeline);
+    if ov.is_empty() {
+        // the branch identity contract: forking without overrides must
+        // reproduce the base run bit-for-bit — asserted before any
+        // branch diff is trusted
+        ensure!(
+            events == base.log && digest == base.digest,
+            "fork-free branch replay from cycle {} is NOT byte-identical to the base run",
+            snap.label_cycle
+        );
+    }
+    let divergence = engine::first_divergence(
+        &ledger_report(cfg, &base.log, base.timeline.total_cycles, base.timeline.requests.len()),
+        &ledger_report(cfg, &events, timeline.total_cycles, timeline.requests.len()),
+    );
+    if ov.is_empty() {
+        ensure!(
+            divergence.is_none(),
+            "fork-free branch reported a divergence at cycle {:?}",
+            divergence
+        );
+    }
+    Ok(BranchRun { fork_cycle: fork, overrides: *ov, events, timeline, digest, divergence })
+}
+
+/// Persist a base run's artifacts: the framed event log plus one
+/// `snap_<cycle>.bin` per snapshot boundary.
+pub fn write_artifacts(dir: &Path, base: &BaseRun) -> Result<()> {
+    std::fs::create_dir_all(dir)
+        .with_context(|| format!("creating run dir {}", dir.display()))?;
+    std::fs::write(dir.join("events.log"), engine::encode_log(&base.log))
+        .context("writing events.log")?;
+    for snap in &base.snaps {
+        let name = format!("snap_{:012}.bin", snap.label_cycle);
+        std::fs::write(dir.join(&name), snap.to_bytes())
+            .with_context(|| format!("writing {name}"))?;
+    }
+    Ok(())
+}
+
+/// A crash-restarted run: resumed from on-disk artifacts with a
+/// possibly-truncated event log.
+pub struct RestartRun {
+    pub survived_events: usize,
+    pub truncated: bool,
+    pub snaps_on_disk: usize,
+    pub resumed_from: u64,
+    /// Surviving post-snapshot events the replay re-verified.
+    pub overlap: usize,
+    pub log_events: u64,
+    pub timeline: FleetTimeline,
+    pub digest: u64,
+}
+
+/// Restart from `dir`: decode the longest valid log prefix, pick the
+/// latest snapshot the surviving events still cover, replay to
+/// completion (verifying the overlap event-for-event) and heal the
+/// on-disk log. The finished run is bit-identical to an uninterrupted
+/// one, so the bench it produces is too.
+pub fn run_restart(engine: &Engine, cfg: &FleetConfig, dir: &Path) -> Result<RestartRun> {
+    let bytes = std::fs::read(dir.join("events.log"))
+        .with_context(|| format!("reading {}/events.log", dir.display()))?;
+    let (events, truncated) = engine::decode_log(&bytes);
+    let mut snaps: Vec<Snapshot> = Vec::new();
+    let mut entries: Vec<_> = std::fs::read_dir(dir)
+        .with_context(|| format!("listing {}", dir.display()))?
+        .collect::<std::io::Result<Vec<_>>>()?;
+    entries.sort_by_key(|e| e.file_name());
+    for entry in entries {
+        let name = entry.file_name().to_string_lossy().into_owned();
+        if !(name.starts_with("snap_") && name.ends_with(".bin")) {
+            continue;
+        }
+        match Snapshot::from_bytes(&std::fs::read(entry.path())?) {
+            Ok(s) => snaps.push(s),
+            // a corrupt snapshot is a degraded restart, not a failed
+            // one — the integrity hash caught it, fall back to an
+            // earlier boundary
+            Err(e) => eprintln!("[repro] replay: skipping corrupt snapshot {name}: {e}"),
+        }
+    }
+    snaps.sort_by_key(|s| s.label_cycle);
+    let snaps_on_disk = snaps.len();
+    let snap = snaps
+        .iter()
+        .rev()
+        .find(|s| (s.events_logged as usize) <= events.len())
+        .ok_or_else(|| {
+            anyhow!(
+                "no usable snapshot precedes the {} surviving log events — cannot restart",
+                events.len()
+            )
+        })?;
+    let mut core = ClusterEngine::resume(engine, cfg, snap)
+        .map_err(|e| anyhow!("restart resume from snapshot @{}: {e}", snap.label_cycle))?;
+    let mut rec = FlightRecorder::new(recorder::DEFAULT_CAPACITY);
+    let mut sink = NullSink;
+    let mut probe = Probe { sink: &mut sink, rec: &mut rec };
+    core.run(&mut probe);
+    let off = snap.events_logged as usize;
+    let overlap = &events[off..];
+    ensure!(
+        core.log().len() >= overlap.len() && &core.log()[..overlap.len()] == overlap,
+        "restart replay diverges from the surviving log tail — snapshot @{} does \
+         not belong to this event log (wrong seed or config?)",
+        snap.label_cycle
+    );
+    let log_events = core.events_recorded();
+    // heal the log: shared prefix + replayed tail is the complete
+    // history an uninterrupted run would have written
+    let mut full = events[..off].to_vec();
+    full.extend_from_slice(core.log());
+    std::fs::write(dir.join("events.log"), engine::encode_log(&full))
+        .context("rewriting healed events.log")?;
+    let timeline = core.finish(&mut probe);
+    let digest = timeline_digest(&timeline);
+    Ok(RestartRun {
+        survived_events: events.len(),
+        truncated,
+        snaps_on_disk,
+        resumed_from: snap.label_cycle,
+        overlap: overlap.len(),
+        log_events,
+        timeline,
+        digest,
+    })
+}
+
+/// The machine-readable baseline: integers and the timeline digest
+/// only, so `repro diff` compares every field exactly and the bytes
+/// are mode-invariant (uninterrupted, resumed, crash-restarted).
+fn bench_json(
+    scenario: &str,
+    hash: &str,
+    seed: u64,
+    smoke: bool,
+    every: u64,
+    tl: &FleetTimeline,
+    log_events: u64,
+    digest: u64,
+) -> String {
+    format!(
+        "{{\n  \"schema\": \"hyca-replay-bench-v1\",\n  \"scenario\": \"{scenario}\",\n  \
+         \"spec_hash\": \"{hash}\",\n  \"seed\": {seed},\n  \"smoke\": {smoke},\n  \
+         \"snapshot_every_cycles\": {every},\n  \"total_cycles\": {},\n  \
+         \"offered\": {},\n  \"admitted\": {},\n  \"shed\": {},\n  \"batches\": {},\n  \
+         \"max_pending\": {},\n  \"log_events\": {log_events},\n  \
+         \"digest\": \"{digest:016x}\"\n}}\n",
+        tl.total_cycles,
+        tl.offered,
+        tl.requests.len(),
+        tl.shed_cycles.len(),
+        tl.jobs.len(),
+        tl.max_pending,
+    )
+}
+
+fn describe(ov: &BranchOverrides) -> String {
+    if ov.is_empty() {
+        return "identity".to_string();
+    }
+    let mut parts = Vec::new();
+    if let Some((chip, at)) = ov.kill_chip {
+        parts.push(format!("kill_chip={chip}@{at}"));
+    }
+    if let Some(s) = ov.rate_scale {
+        parts.push(format!("rate_scale={s}"));
+    }
+    parts.join(" ")
+}
+
+fn verify_table(
+    name: &str,
+    mode: &str,
+    every: u64,
+    snapshots: usize,
+    resumed_from: u64,
+    tail_events: usize,
+    log_events: u64,
+    tl: &FleetTimeline,
+    digest: u64,
+) -> Table {
+    let mut t = Table::new(
+        "replay — snapshot/resume verification (resume + fork-free branch \
+         asserted byte-identical at runtime; cycles are simulated)",
+        &[
+            "scenario",
+            "mode",
+            "every_cycles",
+            "snapshots",
+            "resumed_from",
+            "tail_events",
+            "log_events",
+            "total_cycles",
+            "admitted",
+            "shed",
+            "digest",
+        ],
+    );
+    t.push_row(vec![
+        name.to_string(),
+        mode.to_string(),
+        every.to_string(),
+        snapshots.to_string(),
+        resumed_from.to_string(),
+        tail_events.to_string(),
+        log_events.to_string(),
+        tl.total_cycles.to_string(),
+        tl.requests.len().to_string(),
+        tl.shed_cycles.len().to_string(),
+        format!("{digest:016x}"),
+    ]);
+    t
+}
+
+fn branch_table(runs: &[&BranchRun]) -> Table {
+    let mut t = Table::new(
+        "time-travel branches — overrides replayed from the fork snapshot, \
+         diffed against the base run through the span ledger",
+        &["fork_cycle", "overrides", "log_events", "admitted", "shed", "first_divergence"],
+    );
+    for b in runs {
+        t.push_row(vec![
+            b.fork_cycle.to_string(),
+            describe(&b.overrides),
+            b.events.len().to_string(),
+            b.timeline.requests.len().to_string(),
+            b.timeline.shed_cycles.len().to_string(),
+            b.divergence.map_or("-".to_string(), |c| c.to_string()),
+        ]);
+    }
+    t
+}
+
+/// The whole `repro replay` pipeline. `branch` carries parsed
+/// `[branch]` overrides (the CLI reads the file); `run_dir` switches
+/// between persist (fresh) and crash-restart (artifacts present).
+pub fn run_cli(
+    opts: &RunOpts,
+    smoke: bool,
+    target: &str,
+    from_cycle: Option<u64>,
+    branch: Option<BranchOverrides>,
+    run_dir: Option<&str>,
+) -> Result<(Vec<Table>, String)> {
+    let spec = replay_spec(target)?;
+    ensure!(
+        spec.driver.id() == "fleet",
+        "repro replay drives fleet scenarios (got driver {:?} from {target:?})",
+        spec.driver.id()
+    );
+    let hash = spec.spec_hash();
+    let cfg = replay_config(&spec, opts.seed, smoke, opts.threads);
+    let every = snapshot_cadence(&spec, smoke);
+    let engine = Engine::builtin();
+
+    // crash-restart mode: the run dir already holds a (possibly
+    // truncated) event log from a previous invocation
+    if let Some(dir) = run_dir {
+        let dir = Path::new(dir);
+        if dir.join("events.log").exists() {
+            ensure!(
+                branch.is_none(),
+                "--branch needs a fresh run — restarting from {} artifacts",
+                dir.display()
+            );
+            let r = run_restart(&engine, &cfg, dir)?;
+            eprintln!(
+                "[repro] replay: restarted from snapshot @{} ({} of {} surviving \
+                 events re-verified{})",
+                r.resumed_from,
+                r.overlap,
+                r.survived_events,
+                if r.truncated { ", log was truncated mid-frame" } else { "" }
+            );
+            let json = bench_json(
+                &spec.name, &hash, opts.seed, smoke, every, &r.timeline, r.log_events, r.digest,
+            );
+            let t = verify_table(
+                &spec.name,
+                "crash-restart",
+                every,
+                r.snaps_on_disk,
+                r.resumed_from,
+                r.overlap,
+                r.log_events,
+                &r.timeline,
+                r.digest,
+            );
+            return Ok((vec![t], json));
+        }
+    }
+
+    // fresh run with periodic snapshots
+    let base = run_base(&engine, &cfg, every);
+    ensure!(
+        !base.snaps.is_empty(),
+        "run finished before the first snapshot boundary ({every} cycles) — \
+         lower [engine] snapshot_every_cycles"
+    );
+
+    // the resume proof, from the requested cycle (default: the last
+    // snapshot, the longest-lived state)
+    let snap = match from_cycle {
+        Some(n) => base.snaps.iter().rev().find(|s| s.label_cycle <= n).ok_or_else(|| {
+            anyhow!(
+                "no snapshot at or before cycle {n} — first boundary is @{}",
+                base.snaps[0].label_cycle
+            )
+        })?,
+        None => base.snaps.last().expect("non-empty"),
+    };
+    let tail_events = resume_and_verify(&engine, &cfg, snap, &base)?;
+
+    // the fork-free branch proof — always on, independent of --branch
+    let identity =
+        run_branch(&engine, &cfg, &base, &BranchOverrides::default(), Some(snap.label_cycle))?;
+    let mut branches = vec![identity];
+    if let Some(ov) = branch {
+        branches.push(run_branch(&engine, &cfg, &base, &ov, from_cycle)?);
+    }
+
+    if let Some(dir) = run_dir {
+        write_artifacts(Path::new(dir), &base)?;
+        eprintln!(
+            "[repro] replay: {} events + {} snapshots persisted to {dir}",
+            base.log.len(),
+            base.snaps.len()
+        );
+    }
+
+    let json = bench_json(
+        &spec.name,
+        &hash,
+        opts.seed,
+        smoke,
+        every,
+        &base.timeline,
+        base.log.len() as u64,
+        base.digest,
+    );
+    let tables = vec![
+        verify_table(
+            &spec.name,
+            "fresh",
+            every,
+            base.snaps.len(),
+            snap.label_cycle,
+            tail_events,
+            base.log.len() as u64,
+            &base.timeline,
+            base.digest,
+        ),
+        branch_table(&branches.iter().collect::<Vec<_>>()),
+    ];
+    Ok((tables, json))
+}
+
+/// Full run on the default preset, with a demonstration fault branch
+/// (chip 0 forced drained at the fork) alongside the always-on resume
+/// and identity proofs.
+pub fn run_full(opts: &RunOpts, smoke: bool) -> Result<(Vec<Table>, String)> {
+    let demo = BranchOverrides { fork_cycle: None, kill_chip: Some((0, 0)), rate_scale: None };
+    run_cli(opts, smoke, DEFAULT_PRESET, None, Some(demo), None)
+}
+
+/// The JSON baseline alone (what `BENCH_replay.json` holds and the
+/// golden test compares across `--workers` values and resume modes).
+pub fn bench_json_only(opts: &RunOpts, smoke: bool) -> Result<String> {
+    let (_tables, json) = run_cli(opts, smoke, DEFAULT_PRESET, None, None, None)?;
+    Ok(json)
+}
+
+impl Experiment for ReplayExp {
+    fn id(&self) -> &'static str {
+        "replay"
+    }
+
+    fn title(&self) -> &'static str {
+        "Replay: event-sourced engine — snapshot/restore + time-travel branching"
+    }
+
+    fn run(&self, opts: &RunOpts) -> Result<Vec<Table>> {
+        let (tables, _json) = run_full(opts, opts.fast)?;
+        Ok(tables)
+    }
+}

@@ -18,6 +18,7 @@ pub mod exp_fig15;
 pub mod exp_audit;
 pub mod exp_fleet;
 pub mod exp_perf;
+pub mod exp_replay;
 pub mod exp_scenario;
 pub mod exp_serve;
 pub mod exp_table1;
@@ -110,6 +111,7 @@ pub fn registry() -> Vec<Box<dyn Experiment>> {
         Box::new(exp_traffic::TrafficExp),
         Box::new(exp_perf::PerfExp),
         Box::new(exp_audit::AuditExp),
+        Box::new(exp_replay::ReplayExp),
     ]
 }
 
@@ -129,7 +131,7 @@ mod tests {
         assert_eq!(ids.len(), set.len());
         for want in [
             "fig2", "fig3", "fig9", "fig10", "fig11", "fig12", "fig13", "fig14", "fig15",
-            "table1", "serve", "fleet", "traffic", "perf", "audit",
+            "table1", "serve", "fleet", "traffic", "perf", "audit", "replay",
         ] {
             assert!(ids.contains(&want), "missing {want}");
         }

@@ -1,0 +1,309 @@
+//! Time-travel branching: fork a run at a snapshot, override the
+//! fault or traffic streams from the fork point, and diff the two
+//! timelines through the span ledger.
+//!
+//! A branch is a resumed [`ClusterEngine`] whose *static context* is
+//! edited before the run continues: [`BranchOverrides::kill_chip`]
+//! forces a chip drained from a cycle onward (the "what if chip k died
+//! at C" counterfactual), [`BranchOverrides::rate_scale`] regenerates
+//! the open-loop arrival tail from the fork point under a scaled rate
+//! curve (the "what if demand doubled" counterfactual). Everything
+//! before the fork is shared history — byte-identical by construction
+//! — so [`first_divergence`] of the two span-ledger reports localizes
+//! exactly when the counterfactual starts to matter. An **empty**
+//! override set must reproduce the base run bit-for-bit; `repro
+//! replay --branch` asserts that at runtime before trusting any diff.
+
+use std::cmp::Reverse;
+
+use crate::obs::attrib::{AuditReport, FaultEpisode};
+use crate::serve::loadgen;
+
+use super::command::{EV_CHIP_DRAIN, EV_CHIP_READMIT, EV_CLIENT_READY};
+use super::engine::ClusterEngine;
+
+/// What a branch changes from the fork point on. Parsed from a small
+/// `[branch]` override file (see [`BranchOverrides::parse`]).
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct BranchOverrides {
+    /// Fork at this cycle (must name a snapshot boundary); `None`
+    /// defers to the driver's `--from-cycle` / last-snapshot default.
+    pub fork_cycle: Option<u64>,
+    /// Force chip `.0` drained from cycle `.1` (clamped to the fork)
+    /// to the end of the run.
+    pub kill_chip: Option<(usize, u64)>,
+    /// Regenerate the open-loop arrival tail under `curve.scaled(s)`.
+    pub rate_scale: Option<f64>,
+}
+
+impl BranchOverrides {
+    /// Does this override set change anything? An empty set is the
+    /// identity branch — the replay driver uses it to verify the
+    /// fork machinery against the base run byte-for-byte.
+    pub fn is_empty(&self) -> bool {
+        self.kill_chip.is_none() && self.rate_scale.is_none()
+    }
+
+    /// Parse an override file:
+    ///
+    /// ```text
+    /// # what if chip 2 died mid-crowd?
+    /// [branch]
+    /// fork_cycle = 40000
+    /// kill_chip  = 2 at 45000
+    /// rate_scale = 2.0
+    /// ```
+    ///
+    /// `#` starts a comment; every key is optional.
+    pub fn parse(text: &str) -> Result<BranchOverrides, String> {
+        let mut ov = BranchOverrides::default();
+        let mut in_section = false;
+        for (idx, raw) in text.lines().enumerate() {
+            let ln = idx + 1;
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            if line == "[branch]" {
+                in_section = true;
+                continue;
+            }
+            if line.starts_with('[') {
+                return Err(format!("line {ln}: unknown section `{line}`"));
+            }
+            if !in_section {
+                return Err(format!("line {ln}: expected `[branch]` before keys"));
+            }
+            let (key, value) = line
+                .split_once('=')
+                .ok_or_else(|| format!("line {ln}: expected `key = value`"))?;
+            let value = value.trim();
+            match key.trim() {
+                "fork_cycle" => {
+                    let c: u64 = value
+                        .parse()
+                        .map_err(|_| format!("line {ln}: fork_cycle wants a cycle count"))?;
+                    ov.fork_cycle = Some(c);
+                }
+                "kill_chip" => {
+                    let (chip, at) = value
+                        .split_once(" at ")
+                        .ok_or_else(|| format!("line {ln}: kill_chip wants `<chip> at <cycle>`"))?;
+                    let chip: usize = chip
+                        .trim()
+                        .parse()
+                        .map_err(|_| format!("line {ln}: kill_chip wants a chip index"))?;
+                    let at: u64 = at
+                        .trim()
+                        .parse()
+                        .map_err(|_| format!("line {ln}: kill_chip wants a cycle count"))?;
+                    ov.kill_chip = Some((chip, at));
+                }
+                "rate_scale" => {
+                    let s: f64 = value
+                        .parse()
+                        .map_err(|_| format!("line {ln}: rate_scale wants a number"))?;
+                    if !(s.is_finite() && s > 0.0) {
+                        return Err(format!("line {ln}: rate_scale must be finite and positive"));
+                    }
+                    ov.rate_scale = Some(s);
+                }
+                k => return Err(format!("line {ln}: unknown key `{k}`")),
+            }
+        }
+        Ok(ov)
+    }
+}
+
+/// Apply `ov` to a just-resumed engine standing at the `fork` cycle
+/// boundary. Edits the static context (lifecycle, arrival stream) and
+/// the outstanding command set consistently; the apply-loop itself is
+/// untouched, so a branched run obeys every invariant a normal run
+/// does.
+pub fn apply(eng: &mut ClusterEngine, ov: &BranchOverrides, fork: u64) -> Result<(), String> {
+    if let Some(s) = ov.rate_scale {
+        let Some(o) = eng.cfg.open_loop else {
+            return Err("rate_scale needs an open-loop scenario".into());
+        };
+        // Drop every not-yet-offered arrival (in open mode all pending
+        // ClientReady commands are future arrivals), regenerate the
+        // stream under the scaled curve, and splice in its post-fork
+        // tail. The offered prefix is shared history and stays.
+        let kept: Vec<(u64, u8, u64)> = eng
+            .heap
+            .iter()
+            .map(|r| r.0)
+            .filter(|&(_, kind, _)| kind != EV_CLIENT_READY)
+            .collect();
+        eng.heap = kept.into_iter().map(Reverse).collect();
+        eng.open_arrivals.truncate(eng.offered);
+        let scaled = loadgen::open_arrivals(
+            eng.cfg.seed,
+            loadgen::OPEN_ARRIVAL_STREAM,
+            &o.curve.scaled(s),
+            o.horizon_cycles,
+            eng.eval_n,
+            o.max_arrivals,
+        );
+        for a in scaled.into_iter().filter(|a| a.cycle >= fork) {
+            if eng.open_arrivals.len() >= o.max_arrivals {
+                break; // the spec's request budget still bounds the branch
+            }
+            let idx = eng.open_arrivals.len() as u64;
+            eng.heap.push(Reverse((a.cycle, EV_CLIENT_READY, idx)));
+            eng.open_arrivals.push(a);
+        }
+    }
+    if let Some((chip, at)) = ov.kill_chip {
+        if chip >= eng.chips.len() {
+            return Err(format!(
+                "kill_chip {chip} out of range (fleet has {} chips)",
+                eng.chips.len()
+            ));
+        }
+        let at = at.max(fork);
+        // Scheduled lifecycle wake-ups at or after the kill belong to
+        // episodes the forced drain supersedes — drop them, then
+        // schedule the forced drain itself.
+        let kept: Vec<(u64, u8, u64)> = eng
+            .heap
+            .iter()
+            .map(|r| r.0)
+            .filter(|&(cycle, kind, key)| {
+                !((kind == EV_CHIP_DRAIN || kind == EV_CHIP_READMIT)
+                    && key == chip as u64
+                    && cycle >= at)
+            })
+            .collect();
+        eng.heap = kept.into_iter().map(Reverse).collect();
+        eng.chips[chip].lifecycle.force_drain_from(at);
+        eng.heap.push(Reverse((at, EV_CHIP_DRAIN, chip as u64)));
+    }
+    Ok(())
+}
+
+/// The cycle stamp where two episodes stop agreeing.
+fn episode_candidate(a: &FaultEpisode, b: &FaultEpisode) -> u64 {
+    if a.start_cycle != b.start_cycle {
+        return a.start_cycle.min(b.start_cycle);
+    }
+    if a.end_cycle != b.end_cycle {
+        return match (a.end_cycle, b.end_cycle) {
+            (Some(x), Some(y)) => x.min(y),
+            (Some(x), None) | (None, Some(x)) => x,
+            (None, None) => a.start_cycle,
+        };
+    }
+    a.start_cycle
+}
+
+/// Earliest cycle at which two span-ledger reports disagree — the
+/// observable onset of a branch's counterfactual (`None`: the
+/// timelines are identical through the ledger's lens). Spans are
+/// compared in id order, episodes in (chip, start) order; for a
+/// differing pair the candidate is the first cycle stamp that
+/// disagrees, so shared pre-fork history never contributes.
+pub fn first_divergence(base: &AuditReport, branch: &AuditReport) -> Option<u64> {
+    let mut candidates: Vec<u64> = Vec::new();
+    let n = base.spans.len().max(branch.spans.len());
+    for i in 0..n {
+        match (base.spans.get(i), branch.spans.get(i)) {
+            (Some(a), Some(b)) if a == b => {}
+            (Some(a), Some(b)) => {
+                let c = if a.enqueue_cycle != b.enqueue_cycle {
+                    a.enqueue_cycle.min(b.enqueue_cycle)
+                } else if a.dispatch_cycle != b.dispatch_cycle {
+                    a.dispatch_cycle.min(b.dispatch_cycle)
+                } else if a.complete_cycle != b.complete_cycle {
+                    a.complete_cycle.min(b.complete_cycle)
+                } else {
+                    // same stamps, different derived fields (chip,
+                    // waits, reshards): the divergence is inside the
+                    // span's lifetime
+                    a.enqueue_cycle
+                };
+                candidates.push(c);
+            }
+            (Some(x), None) | (None, Some(x)) => candidates.push(x.enqueue_cycle),
+            (None, None) => {}
+        }
+    }
+    let n = base.episodes.len().max(branch.episodes.len());
+    for i in 0..n {
+        match (base.episodes.get(i), branch.episodes.get(i)) {
+            (Some(a), Some(b)) if a == b => {}
+            (Some(a), Some(b)) => candidates.push(episode_candidate(a, b)),
+            (Some(x), None) | (None, Some(x)) => candidates.push(x.start_cycle),
+            (None, None) => {}
+        }
+    }
+    candidates.into_iter().min()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn override_files_parse_and_default_to_identity() {
+        let ov = BranchOverrides::parse(
+            "# counterfactual\n[branch]\nfork_cycle = 40000\nkill_chip = 2 at 45000\n\
+             rate_scale = 2.0  # double demand\n",
+        )
+        .unwrap();
+        assert_eq!(ov.fork_cycle, Some(40_000));
+        assert_eq!(ov.kill_chip, Some((2, 45_000)));
+        assert_eq!(ov.rate_scale, Some(2.0));
+        assert!(!ov.is_empty());
+
+        let empty = BranchOverrides::parse("[branch]\n# nothing overridden\n").unwrap();
+        assert!(empty.is_empty());
+        assert_eq!(BranchOverrides::parse("").unwrap(), BranchOverrides::default());
+    }
+
+    #[test]
+    fn malformed_override_files_are_rejected_with_line_numbers() {
+        for (text, needle) in [
+            ("kill_chip = 1 at 5", "[branch]"),
+            ("[branch]\nkill_chip = 1", "at"),
+            ("[branch]\nrate_scale = -1", "positive"),
+            ("[branch]\nrate_scale = nan", "positive"),
+            ("[branch]\nwarp_factor = 9", "unknown key"),
+            ("[other]\n", "unknown section"),
+            ("[branch]\nfork_cycle", "key = value"),
+        ] {
+            let err = BranchOverrides::parse(text).unwrap_err();
+            assert!(err.contains(needle), "{text:?} -> {err}");
+            assert!(err.starts_with("line "), "{err}");
+        }
+    }
+
+    #[test]
+    fn identical_reports_have_no_divergence() {
+        let empty = AuditReport { spans: vec![], episodes: vec![], chips: vec![], horizon: 0 };
+        assert_eq!(first_divergence(&empty, &empty), None);
+    }
+
+    #[test]
+    fn episode_candidates_prefer_the_first_differing_stamp() {
+        let base = FaultEpisode {
+            chip: 0,
+            start_cycle: 100,
+            end_cycle: Some(500),
+            faults: 1,
+            remaps: 1,
+            remap_latency_total: 10,
+            remap_latency_max: 10,
+            requests_stalled: 0,
+            cycles_lost: 0,
+            dip_requests: 0,
+            dip_correct: 0,
+        };
+        let mut shifted = base.clone();
+        shifted.start_cycle = 300;
+        assert_eq!(episode_candidate(&base, &shifted), 100);
+        let mut extended = base.clone();
+        extended.end_cycle = None;
+        assert_eq!(episode_candidate(&base, &extended), 500, "open end diverges at the close");
+    }
+}

@@ -1,0 +1,140 @@
+//! Typed commands: the *scheduled work* of the cluster event loop.
+//!
+//! The engine's pending-work heap stores raw `(cycle, kind, key)`
+//! triples — the tuple ordering **is** the deterministic processing
+//! order (ascending cycle, then kind, then key), and the first three
+//! kinds collapse to serve's single-chip encoding on a 1-chip fleet,
+//! which is what makes the degeneracy contract hold bit-for-bit.
+//! [`Command`] is the typed view of one triple: snapshots serialize
+//! the heap as triples (the canonical wire form), tooling and tests
+//! decode them for inspection.
+//!
+//! Commands are *intent* (work scheduled for a future cycle); the
+//! facts of what actually happened are [`super::event::Event`]s.
+//! A snapshot therefore carries the outstanding commands, while the
+//! event log carries the history — together they reconstruct a run
+//! exactly.
+
+/// Version of the command encoding (bumped if the triple semantics or
+/// the kind numbering ever change; snapshots embed it transitively via
+/// [`super::snapshot::SNAPSHOT_VERSION`]).
+pub const COMMAND_VERSION: u16 = 1;
+
+/// A client (closed loop) or arrival index (open loop) is ready.
+pub const EV_CLIENT_READY: u8 = 0;
+/// A lane finished its batch and frees up.
+pub const EV_LANE_FREE: u8 = 1;
+/// A request's batcher deadline expires (dispatch attempt).
+pub const EV_BATCH_DEADLINE: u8 = 2;
+/// A chip's drain episode starts (re-shard its queue).
+pub const EV_CHIP_DRAIN: u8 = 3;
+/// A drained chip re-admits.
+pub const EV_CHIP_READMIT: u8 = 4;
+/// Periodic autoscaler evaluation tick.
+pub const EV_SCALE_TICK: u8 = 5;
+
+/// Key encoding for [`EV_LANE_FREE`]: chip in the high 32 bits, lane
+/// in the low 32. Chip 0's keys are bare lane ids — serve's encoding.
+pub fn lane_key(chip: usize, lane: usize) -> u64 {
+    ((chip as u64) << 32) | lane as u64
+}
+
+/// The typed view of one heap triple.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Command {
+    /// Closed loop: client `key` issues its next request. Open loop:
+    /// arrival index `key` hits the front door (admit or shed).
+    ClientReady { cycle: u64, key: u64 },
+    LaneFree { cycle: u64, chip: usize, lane: usize },
+    BatchDeadline { cycle: u64, request: usize },
+    ChipDrain { cycle: u64, chip: usize },
+    ChipReadmit { cycle: u64, chip: usize },
+    ScaleTick { cycle: u64 },
+}
+
+impl Command {
+    /// Decode a heap triple; `None` for an unknown kind byte.
+    pub fn decode(cycle: u64, kind: u8, key: u64) -> Option<Command> {
+        Some(match kind {
+            EV_CLIENT_READY => Command::ClientReady { cycle, key },
+            EV_LANE_FREE => Command::LaneFree {
+                cycle,
+                chip: (key >> 32) as usize,
+                lane: (key & 0xFFFF_FFFF) as usize,
+            },
+            EV_BATCH_DEADLINE => Command::BatchDeadline { cycle, request: key as usize },
+            EV_CHIP_DRAIN => Command::ChipDrain { cycle, chip: key as usize },
+            EV_CHIP_READMIT => Command::ChipReadmit { cycle, chip: key as usize },
+            EV_SCALE_TICK => Command::ScaleTick { cycle },
+            _ => return None,
+        })
+    }
+
+    /// The `(cycle, kind, key)` triple this command schedules as.
+    pub fn encode(&self) -> (u64, u8, u64) {
+        match *self {
+            Command::ClientReady { cycle, key } => (cycle, EV_CLIENT_READY, key),
+            Command::LaneFree { cycle, chip, lane } => {
+                (cycle, EV_LANE_FREE, lane_key(chip, lane))
+            }
+            Command::BatchDeadline { cycle, request } => {
+                (cycle, EV_BATCH_DEADLINE, request as u64)
+            }
+            Command::ChipDrain { cycle, chip } => (cycle, EV_CHIP_DRAIN, chip as u64),
+            Command::ChipReadmit { cycle, chip } => (cycle, EV_CHIP_READMIT, chip as u64),
+            Command::ScaleTick { cycle } => (cycle, EV_SCALE_TICK, 0),
+        }
+    }
+
+    /// The cycle this command fires at.
+    pub fn cycle(&self) -> u64 {
+        self.encode().0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_command_round_trips_through_its_triple() {
+        let cmds = [
+            Command::ClientReady { cycle: 7, key: 3 },
+            Command::LaneFree { cycle: 100, chip: 2, lane: 1 },
+            Command::BatchDeadline { cycle: 5_000, request: 42 },
+            Command::ChipDrain { cycle: 9, chip: 0 },
+            Command::ChipReadmit { cycle: 10, chip: 3 },
+            Command::ScaleTick { cycle: 4_000 },
+        ];
+        for c in cmds {
+            let (cycle, kind, key) = c.encode();
+            assert_eq!(Command::decode(cycle, kind, key), Some(c));
+            assert_eq!(c.cycle(), cycle);
+        }
+        assert_eq!(Command::decode(0, 200, 0), None, "unknown kind byte");
+    }
+
+    #[test]
+    fn lane_keys_collapse_to_bare_lane_ids_on_chip_zero() {
+        assert_eq!(lane_key(0, 3), 3, "serve's encoding on chip 0");
+        assert_eq!(lane_key(2, 1), (2u64 << 32) | 1);
+        // the key round-trips through the LaneFree decode split
+        let c = Command::decode(0, EV_LANE_FREE, lane_key(7, 5)).unwrap();
+        assert_eq!(c, Command::LaneFree { cycle: 0, chip: 7, lane: 5 });
+    }
+
+    #[test]
+    fn triple_order_is_cycle_then_kind_then_key() {
+        let mut triples = vec![
+            Command::ScaleTick { cycle: 10 }.encode(),
+            Command::ClientReady { cycle: 10, key: 0 }.encode(),
+            Command::LaneFree { cycle: 9, chip: 0, lane: 0 }.encode(),
+            Command::ClientReady { cycle: 10, key: 1 }.encode(),
+        ];
+        triples.sort_unstable();
+        assert_eq!(triples[0].1, EV_LANE_FREE, "earlier cycle first");
+        assert_eq!((triples[1].1, triples[1].2), (EV_CLIENT_READY, 0));
+        assert_eq!((triples[2].1, triples[2].2), (EV_CLIENT_READY, 1));
+        assert_eq!(triples[3].1, EV_SCALE_TICK);
+    }
+}

@@ -1,0 +1,721 @@
+//! The apply-loop: [`ClusterEngine`] owns every piece of mutable fleet
+//! state and advances it one command at a time, recording each state
+//! change as an [`Event`] before anything downstream observes it.
+//!
+//! The loop body is the PR 5–8 fleet simulation verbatim — the same
+//! command ordering, the same RNG draw sites, the same emission order —
+//! restructured so the state lives in a struct instead of a stack
+//! frame. That split is what snapshot/restore needs: *static* context
+//! (fault timelines, lifecycles, cost models, the precomputed open
+//! arrival stream) is a pure function of the config and is rebuilt on
+//! resume; only the *mutable cursors* (queues, lanes, RNG positions,
+//! controller state) are serialized. `fleet::simulate_fleet_traced`
+//! is now a thin driver over this type, so every existing entry point
+//! — and every golden trace — is unchanged.
+//!
+//! Determinism contract: `new` + `run` + `finish` is bit-identical to
+//! the old closed-form loop; `resume(snapshot, …)` + `run` + `finish`
+//! is bit-identical to an uninterrupted run (pinned by
+//! `rust/tests/replay.rs` and asserted at runtime by `repro replay`
+//! via the logged-tail cross-check).
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+use std::sync::Arc;
+
+use crate::fleet::{
+    ChipSim, FleetBatchJob, FleetConfig, FleetEvent, FleetEventKind, FleetTimeline, Router,
+};
+use crate::inference::Engine;
+use crate::obs::Probe;
+use crate::serve::loadgen::{self, LoadGen, OpenArrival};
+use crate::serve::scan_agent::EventKind as ScanEventKind;
+use crate::serve::{BatchJob, RequestRecord};
+
+use super::command::{
+    lane_key, EV_BATCH_DEADLINE, EV_CHIP_DRAIN, EV_CHIP_READMIT, EV_CLIENT_READY, EV_LANE_FREE,
+    EV_SCALE_TICK,
+};
+use super::event::{project, Event, EventKind};
+use super::snapshot::Snapshot;
+
+/// The chips the router may target at `t`: the active-and-healthy set
+/// when nonempty, then the active set, then the whole fleet (degraded
+/// continuity — with no autoscaler every chip is active, so this is
+/// exactly the old healthy-else-all rule). The set only changes at
+/// lifecycle/scaling boundaries, so callers compute it once per
+/// command and route any number of requests against it.
+pub fn admissible(chips: &[ChipSim], active: &[bool], t: u64) -> Vec<usize> {
+    let up: Vec<usize> = (0..chips.len())
+        .filter(|&k| active[k] && chips[k].healthy_at(t))
+        .collect();
+    if !up.is_empty() {
+        return up;
+    }
+    let act: Vec<usize> = (0..chips.len()).filter(|&k| active[k]).collect();
+    if act.is_empty() {
+        (0..chips.len()).collect()
+    } else {
+        act
+    }
+}
+
+/// Conservative queueing-delay bound for one more request on `chip`:
+/// it may sit out a full batcher deadline, then every batch ahead of
+/// it — plus its own — at the full-batch service time **on this chip's
+/// own cost model** (heterogeneous fleets price each chip by its own
+/// array). Deliberately pessimistic (ignores idle lanes), so admitted
+/// traffic holds its SLO with slack at the cost of a slightly earlier
+/// shed onset.
+pub fn predicted_wait(chip: &ChipSim, max_batch: usize, max_wait_cycles: u64) -> u64 {
+    let batches_ahead = chip.depth().div_ceil(max_batch) as u64;
+    max_wait_cycles + (batches_ahead + 1) * chip.cost.batch_cycles(max_batch)
+}
+
+/// The event-sourced cluster core. All mutable state of a fleet run
+/// lives here; [`ClusterEngine::step`] applies one command and records
+/// the resulting events, so that `snapshot` + replayed `step`s
+/// reconstruct any point of the timeline bit-identically.
+pub struct ClusterEngine {
+    pub(crate) cfg: FleetConfig,
+    /// Evaluation-set size (image index domain of the load generators).
+    pub(crate) eval_n: usize,
+    /// The precomputed open-loop arrival stream (static context; empty
+    /// in closed-loop mode). Branch overrides may rewrite its tail.
+    pub(crate) open_arrivals: Vec<OpenArrival>,
+    pub(crate) chips: Vec<ChipSim>,
+    pub(crate) gen: LoadGen,
+    pub(crate) router: Router,
+    /// Outstanding commands as `(cycle, kind, key)` triples; the tuple
+    /// ordering is the deterministic processing order.
+    pub(crate) heap: BinaryHeap<Reverse<(u64, u8, u64)>>,
+    pub(crate) active: Vec<bool>,
+    pub(crate) last_scale: u64,
+    pub(crate) scale_events: Vec<FleetEvent>,
+    pub(crate) offered: usize,
+    pub(crate) shed_cycles: Vec<u64>,
+    /// Sheds already counted by a past scale tick (tick-window marker).
+    pub(crate) shed_seen_by_tick: usize,
+    pub(crate) jobs: Vec<FleetBatchJob>,
+    pub(crate) requests: Vec<RequestRecord>,
+    pub(crate) pending_total: usize,
+    pub(crate) max_pending: usize,
+    pub(crate) initial_active: usize,
+    /// Cycle of the last processed command.
+    pub(crate) cycle: u64,
+    /// Events recorded by THIS instance (a resumed engine records only
+    /// its own tail; see `log_offset`).
+    pub(crate) log: Vec<Event>,
+    /// Events recorded on this timeline before `log` began: zero for a
+    /// fresh run, the snapshot's event count after a resume.
+    pub(crate) log_offset: u64,
+}
+
+impl ClusterEngine {
+    /// Genesis: build the full static context from `cfg` and schedule
+    /// the initial command set. Fault histories are *recorded* (they
+    /// are facts of the timeline), so the trace bus is a projection of
+    /// the event log from cycle 0 on.
+    pub fn new(engine: &Engine, cfg: &FleetConfig, probe: &mut Probe) -> Self {
+        assert!(!cfg.chips.is_empty(), "need at least one chip");
+        assert!(cfg.total_requests >= 1, "need at least one request");
+        if cfg.open_loop.is_none() {
+            assert!(
+                cfg.queue_cap >= cfg.clients,
+                "closed-loop pending set (≤ clients) must fit the fleet queue bound"
+            );
+        }
+        let mut geometry = engine.geometry();
+        geometry.batch = cfg.max_batch;
+        let chips: Vec<ChipSim> = cfg
+            .chips
+            .iter()
+            .enumerate()
+            .map(|(k, spec)| {
+                ChipSim::build(
+                    &engine.params,
+                    &geometry,
+                    *spec,
+                    k,
+                    cfg.seed,
+                    cfg.faults.as_ref(),
+                    cfg.lifecycle,
+                    cfg.max_batch,
+                    cfg.max_wait_cycles,
+                )
+            })
+            .collect();
+        let gen = LoadGen::new(
+            cfg.seed,
+            cfg.clients,
+            engine.eval.images.len(),
+            cfg.think_cycles,
+            cfg.total_requests,
+        );
+        // Open mode precomputes the whole arrival stream (a pure
+        // function of the master seed, independent of service state)
+        // and keys each ClientReady by arrival index; the closed loop
+        // keys by client.
+        let open_arrivals: Vec<OpenArrival> = match &cfg.open_loop {
+            Some(o) => loadgen::open_arrivals(
+                cfg.seed,
+                loadgen::OPEN_ARRIVAL_STREAM,
+                &o.curve,
+                o.horizon_cycles,
+                engine.eval.images.len(),
+                o.max_arrivals,
+            ),
+            None => Vec::new(),
+        };
+        // Autoscale overlay: which chips the router may currently
+        // target. Without an autoscaler every chip is active and every
+        // path below reduces to the pre-autoscale behaviour.
+        let initial_active = match &cfg.autoscale {
+            Some(a) => a.min_chips.clamp(1, chips.len()),
+            None => chips.len(),
+        };
+        let active: Vec<bool> = (0..chips.len()).map(|k| k < initial_active).collect();
+
+        let mut this = Self {
+            cfg: cfg.clone(),
+            eval_n: engine.eval.images.len(),
+            open_arrivals,
+            chips,
+            gen,
+            router: Router::new(cfg.policy),
+            heap: BinaryHeap::new(),
+            active,
+            last_scale: 0,
+            scale_events: Vec::new(),
+            offered: 0,
+            shed_cycles: Vec::new(),
+            shed_seen_by_tick: 0,
+            jobs: Vec::new(),
+            requests: Vec::new(),
+            pending_total: 0,
+            max_pending: 0,
+            initial_active,
+            cycle: 0,
+            log: Vec::new(),
+            log_offset: 0,
+        };
+
+        for k in 0..this.chips.len() {
+            // dwell invariant: `Lifecycle::with_policy` defers
+            // re-admits to `start + min_dwell`, so a short closed
+            // episode means the precomputed health history is corrupt —
+            // dump and stop before it drives routing decisions
+            if let Some((s, e)) = this.chips[k].lifecycle.dwell_violation() {
+                eprintln!(
+                    "{}",
+                    probe.rec.dump(&format!(
+                        "lifecycle dwell violation on chip {k}: episode [{s}, {e}) is shorter \
+                         than the minimum dwell"
+                    ))
+                );
+                panic!("lifecycle dwell invariant violated on chip {k}");
+            }
+            this.record_fault_history(probe, k);
+        }
+
+        if this.cfg.open_loop.is_some() {
+            for i in 0..this.open_arrivals.len() {
+                let at = this.open_arrivals[i].cycle;
+                this.heap.push(Reverse((at, EV_CLIENT_READY, i as u64)));
+            }
+        } else {
+            for c in 0..this.cfg.clients {
+                let at = this.gen.think(c);
+                this.heap.push(Reverse((at, EV_CLIENT_READY, c as u64)));
+            }
+        }
+        if let Some(a) = &this.cfg.autoscale {
+            assert!(a.eval_period_cycles >= 1, "autoscale tick needs a period");
+            this.heap.push(Reverse((a.eval_period_cycles, EV_SCALE_TICK, 0)));
+        }
+        // lifecycle wake-ups: re-shard at drain starts, dispatch +
+        // re-shard at re-admissions
+        for (k, chip) in this.chips.iter().enumerate() {
+            for &(start, end) in chip.lifecycle.drained_intervals() {
+                this.heap.push(Reverse((start, EV_CHIP_DRAIN, k as u64)));
+                if end != u64::MAX {
+                    this.heap.push(Reverse((end, EV_CHIP_READMIT, k as u64)));
+                }
+            }
+        }
+        this
+    }
+
+    /// Append one fact to the event log and emit its trace-bus
+    /// projection — the single write path for both (the bus can never
+    /// see an event the log doesn't hold).
+    fn record(&mut self, probe: &mut Probe, cycle: u64, kind: EventKind) {
+        let ev = Event { cycle, kind };
+        probe.emit(cycle, project(&ev));
+        self.log.push(ev);
+    }
+
+    /// Record chip `chip`'s precomputed fault/detect/remap history
+    /// (the event-log counterpart of `serve::emit_fault_history`, same
+    /// scan-start dedup rule).
+    fn record_fault_history(&mut self, probe: &mut Probe, chip: usize) {
+        let events = self.chips[chip].faults.events.clone();
+        let mut last_scan = u64::MAX;
+        for e in &events {
+            match e.kind {
+                ScanEventKind::FaultArrival(c) => {
+                    self.record(
+                        probe,
+                        e.cycle,
+                        EventKind::FaultArrival { chip, row: c.row, col: c.col },
+                    );
+                }
+                ScanEventKind::ScanDetection(c) => {
+                    if last_scan != e.cycle {
+                        self.record(probe, e.cycle, EventKind::ScanStart { chip });
+                        last_scan = e.cycle;
+                    }
+                    self.record(
+                        probe,
+                        e.cycle,
+                        EventKind::ScanDetect { chip, row: c.row, col: c.col },
+                    );
+                    self.record(
+                        probe,
+                        e.cycle,
+                        EventKind::RemapApplied { chip, row: c.row, col: c.col },
+                    );
+                }
+            }
+        }
+    }
+
+    /// Cycle of the next outstanding command (`None` = run complete).
+    /// The replay driver consults this to place snapshot boundaries: a
+    /// snapshot labeled `S` is taken when `next_cycle() >= S`, i.e.
+    /// after every command with `cycle < S` has been applied.
+    pub fn next_cycle(&self) -> Option<u64> {
+        self.heap.peek().map(|Reverse((t, _, _))| *t)
+    }
+
+    /// Cycle of the last applied command.
+    pub fn current_cycle(&self) -> u64 {
+        self.cycle
+    }
+
+    /// Events recorded by this instance (post-resume tail for a
+    /// resumed engine).
+    pub fn log(&self) -> &[Event] {
+        &self.log
+    }
+
+    /// Events recorded on this timeline before `log()` began.
+    pub fn log_offset(&self) -> u64 {
+        self.log_offset
+    }
+
+    /// Total events ever recorded on this timeline.
+    pub fn events_recorded(&self) -> u64 {
+        self.log_offset + self.log.len() as u64
+    }
+
+    pub fn config(&self) -> &FleetConfig {
+        &self.cfg
+    }
+
+    /// Apply the next command; `false` when the run is complete.
+    pub fn step(&mut self, probe: &mut Probe) -> bool {
+        let Some(Reverse((t, kind, key))) = self.heap.pop() else {
+            return false;
+        };
+        self.cycle = t;
+        match kind {
+            EV_CLIENT_READY if self.cfg.open_loop.is_some() => {
+                self.open_arrival(probe, t, key as usize);
+            }
+            EV_CLIENT_READY => {
+                self.closed_arrival(probe, t, key as usize);
+            }
+            EV_LANE_FREE => {
+                let (chip, lane) = ((key >> 32) as usize, (key & 0xFFFF_FFFF) as usize);
+                self.chips[chip].complete_lane(lane);
+                self.record(probe, t, EventKind::LaneFree { chip, lane });
+            }
+            EV_CHIP_DRAIN => {
+                self.record(probe, t, EventKind::ChipDrain { chip: key as usize });
+                self.reshard(probe, t);
+            }
+            EV_CHIP_READMIT => {
+                self.record(probe, t, EventKind::ChipReadmit { chip: key as usize });
+                self.reshard(probe, t);
+            }
+            EV_SCALE_TICK => {
+                self.scale_tick(probe, t);
+            }
+            _ => {} // EV_BATCH_DEADLINE: dispatch attempt below
+        }
+        self.dispatch(probe, t);
+        true
+    }
+
+    /// Apply commands until the heap is empty.
+    pub fn run(&mut self, probe: &mut Probe) {
+        while self.step(probe) {}
+    }
+
+    /// [`ClusterEngine::run`], capturing a snapshot at every multiple
+    /// of `every` cycles the command stream crosses (snapshot `S` =
+    /// state after all commands with `cycle < S`).
+    pub fn run_with_snapshots(&mut self, probe: &mut Probe, every: u64) -> Vec<Snapshot> {
+        assert!(every >= 1, "snapshot period must be at least one cycle");
+        let mut snaps = Vec::new();
+        let mut next = (self.cycle / every + 1) * every;
+        while let Some(t) = self.next_cycle() {
+            while t >= next {
+                snaps.push(self.snapshot(next));
+                next += every;
+            }
+            self.step(probe);
+        }
+        snaps
+    }
+
+    /// One open arrival (`idx` = arrival index): admit or shed.
+    fn open_arrival(&mut self, probe: &mut Probe, t: u64, idx: usize) {
+        let arrival = self.open_arrivals[idx];
+        self.offered += 1;
+        let candidates = admissible(&self.chips, &self.active, t);
+        // Route first, then admit: the shed decision prices the
+        // queueing delay of the chip this request would actually land
+        // on — under its own cost model — so heterogeneous fleets
+        // admit correctly. (The old bound took the minimum over all
+        // candidates, under-pricing any arrival the router then sent
+        // to a slower chip.) On homogeneous JSQ fleets the two rules
+        // coincide: the min-depth pick is the min-predicted-wait chip.
+        let target = self.router.pick(&candidates, &self.chips, t);
+        let shed = self.cfg.admission.as_ref().is_some_and(|adm| {
+            predicted_wait(&self.chips[target], self.cfg.max_batch, self.cfg.max_wait_cycles)
+                > adm.target_latency_cycles
+        });
+        if shed {
+            self.record(probe, t, EventKind::RequestShed { seq: self.shed_cycles.len() });
+            self.shed_cycles.push(t);
+        } else {
+            let id = self.requests.len();
+            self.requests.push(RequestRecord {
+                id,
+                client: 0, // open arrivals have no client identity
+                image_idx: arrival.image_idx,
+                enqueue_cycle: t,
+                start_cycle: 0,
+                complete_cycle: 0,
+                batch_id: 0,
+                slot: 0,
+            });
+            self.chips[target].assigned += 1;
+            self.chips[target].batcher.push(t, id);
+            self.record(probe, t, EventKind::RequestEnqueue { id, chip: target });
+            self.admit_bookkeeping(t, id);
+        }
+    }
+
+    /// One closed-loop client wake-up.
+    fn closed_arrival(&mut self, probe: &mut Probe, t: u64, client: usize) {
+        let Some(image_idx) = self.gen.next_image(client) else {
+            return;
+        };
+        let id = self.requests.len();
+        self.requests.push(RequestRecord {
+            id,
+            client,
+            image_idx,
+            enqueue_cycle: t,
+            start_cycle: 0,
+            complete_cycle: 0,
+            batch_id: 0,
+            slot: 0,
+        });
+        let candidates = admissible(&self.chips, &self.active, t);
+        let target = self.router.pick(&candidates, &self.chips, t);
+        self.chips[target].assigned += 1;
+        self.chips[target].batcher.push(t, id);
+        self.record(probe, t, EventKind::RequestEnqueue { id, chip: target });
+        self.admit_bookkeeping(t, id);
+    }
+
+    /// Pending-set accounting + batcher deadline for a just-admitted
+    /// request.
+    fn admit_bookkeeping(&mut self, t: u64, id: usize) {
+        self.pending_total += 1;
+        self.max_pending = self.max_pending.max(self.pending_total);
+        assert!(
+            self.pending_total <= self.cfg.queue_cap,
+            "fleet-wide pending set overflowed its bound"
+        );
+        self.heap
+            .push(Reverse((t + self.cfg.max_wait_cycles, EV_BATCH_DEADLINE, id as u64)));
+    }
+
+    /// Re-shard the pending queue of every chip that is currently
+    /// drained or deactivated through the router (drain starts,
+    /// re-admissions, scale-downs — whenever the routable set
+    /// changes). Re-pushed requests keep their identity and original
+    /// enqueue cycle in the records; their batcher deadline restarts
+    /// at `t`.
+    fn reshard(&mut self, probe: &mut Probe, t: u64) {
+        if !(0..self.chips.len()).any(|k| self.active[k] && self.chips[k].healthy_at(t)) {
+            return; // nowhere better to go — degraded continuity serves in place
+        }
+        let candidates = admissible(&self.chips, &self.active, t);
+        for k in 0..self.chips.len() {
+            if (self.active[k] && self.chips[k].healthy_at(t)) || self.chips[k].batcher.is_empty()
+            {
+                continue;
+            }
+            let moved = self.chips[k].batcher.drain_all();
+            for (_, rid) in moved {
+                // the request leaves this chip's assignment ledger so
+                // the deficit-weighted policy restores its fair share
+                // once it re-admits (otherwise phantom assignments
+                // starve it)
+                self.chips[k].assigned -= 1;
+                let target = self.router.pick(&candidates, &self.chips, t);
+                self.chips[target].assigned += 1;
+                self.chips[target].batcher.push(t, rid);
+                self.record(probe, t, EventKind::RequestReshard { id: rid, from: k, to: target });
+                self.heap
+                    .push(Reverse((t + self.cfg.max_wait_cycles, EV_BATCH_DEADLINE, rid as u64)));
+            }
+        }
+    }
+
+    /// One autoscaler evaluation tick.
+    fn scale_tick(&mut self, probe: &mut Probe, t: u64) {
+        let a = *self.cfg.autoscale.as_ref().expect("tick only armed with a policy");
+        let n_active = self.active.iter().filter(|&&b| b).count();
+        let outstanding: usize = self.chips.iter().map(|c| c.depth()).sum();
+        // Queued depth alone is blind under admission control: the
+        // controller caps every queue just below the shed boundary, so
+        // a saturated fleet can look calm. Arrivals shed since the
+        // last tick are demand the queues could not hold — they count
+        // as pressure too.
+        let recent_shed = self.shed_cycles.len() - self.shed_seen_by_tick;
+        self.shed_seen_by_tick = self.shed_cycles.len();
+        let per = (outstanding + recent_shed) / n_active.max(1);
+        self.record(probe, t, EventKind::AutoscaleTick { active: n_active, pressure: per });
+        if t.saturating_sub(self.last_scale) >= a.dwell_cycles {
+            if per > a.up_pending_per_chip && n_active < a.max_chips.min(self.chips.len()) {
+                // activate the lowest-index spare chip
+                if let Some(k) = (0..self.chips.len()).find(|&k| !self.active[k]) {
+                    self.active[k] = true;
+                    self.last_scale = t;
+                    self.record(probe, t, EventKind::ScaleUp { chip: k });
+                    self.scale_events.push(FleetEvent {
+                        cycle: t,
+                        chip: k,
+                        kind: FleetEventKind::ScaledUp,
+                    });
+                }
+            } else if per < a.down_pending_per_chip && n_active > a.min_chips.max(1) {
+                // deactivate the highest-index active chip — but only
+                // if the remaining active set can absorb its queue
+                // right now
+                if let Some(k) = (0..self.chips.len()).rev().find(|&k| self.active[k]) {
+                    let rest_serves = (0..self.chips.len())
+                        .any(|j| j != k && self.active[j] && self.chips[j].healthy_at(t));
+                    if rest_serves {
+                        self.active[k] = false;
+                        self.last_scale = t;
+                        self.record(probe, t, EventKind::ScaleDown { chip: k });
+                        self.scale_events.push(FleetEvent {
+                            cycle: t,
+                            chip: k,
+                            kind: FleetEventKind::ScaledDown,
+                        });
+                        self.reshard(probe, t);
+                    }
+                }
+            }
+        }
+        // keep ticking while traffic can still arrive or drain
+        let more_arrivals = if self.cfg.open_loop.is_some() {
+            self.offered < self.open_arrivals.len()
+        } else {
+            self.requests.len() < self.cfg.total_requests
+        };
+        if more_arrivals || outstanding > 0 {
+            self.heap.push(Reverse((t + a.eval_period_cycles, EV_SCALE_TICK, 0)));
+        }
+    }
+
+    /// Dispatch whatever is releasable at `t` on every admitted chip
+    /// (mirrors [`admissible`]: active-and-healthy chips, else active,
+    /// else everyone — degraded continuity).
+    fn dispatch(&mut self, probe: &mut Probe, t: u64) {
+        let any_up = (0..self.chips.len()).any(|k| self.active[k] && self.chips[k].healthy_at(t));
+        for k in 0..self.chips.len() {
+            if any_up && !(self.active[k] && self.chips[k].healthy_at(t)) {
+                continue;
+            }
+            if !any_up && !self.active[k] {
+                continue;
+            }
+            while !self.chips[k].free_lanes.is_empty() {
+                let Some(batch) = self.chips[k].batcher.take(t) else { break };
+                let lane = *self.chips[k].free_lanes.iter().next().unwrap();
+                self.chips[k].free_lanes.remove(&lane);
+                let b = batch.len();
+                let start = t;
+                let end = start + self.chips[k].cost.batch_cycles(b);
+                let masks = {
+                    let epoch_masks = self.chips[k].faults.masks_at(start);
+                    if b == self.cfg.max_batch {
+                        Arc::clone(epoch_masks)
+                    } else {
+                        Arc::new(epoch_masks.with_fc_rows(b))
+                    }
+                };
+                let job_id = self.jobs.len();
+                self.record(
+                    probe,
+                    start,
+                    EventKind::BatchFormed { batch: job_id, chip: k, lane, size: b },
+                );
+                let mut image_idxs = Vec::with_capacity(b);
+                for (slot, (_, rid)) in batch.iter().enumerate() {
+                    let client = {
+                        let r = &mut self.requests[*rid];
+                        r.start_cycle = start;
+                        r.complete_cycle = end;
+                        r.batch_id = job_id;
+                        r.slot = slot;
+                        image_idxs.push(r.image_idx);
+                        r.client
+                    };
+                    self.record(
+                        probe,
+                        start,
+                        EventKind::RequestDispatch { id: *rid, chip: k, batch: job_id },
+                    );
+                    // completion is fixed at dispatch by the cycle
+                    // model, so the complete event carries the batch
+                    // end
+                    self.record(
+                        probe,
+                        end,
+                        EventKind::RequestComplete { id: *rid, chip: k, batch: job_id },
+                    );
+                    // only the closed loop re-arms a client; open-loop
+                    // arrivals were all scheduled up front
+                    if self.cfg.open_loop.is_none() {
+                        let think = self.gen.think(client);
+                        self.heap.push(Reverse((end + think, EV_CLIENT_READY, client as u64)));
+                    }
+                }
+                self.pending_total -= b;
+                self.chips[k].occupy_lane(lane, b);
+                self.jobs.push(FleetBatchJob {
+                    chip: k,
+                    job: BatchJob {
+                        id: job_id,
+                        image_idxs,
+                        masks,
+                        start_cycle: start,
+                        end_cycle: end,
+                        lane,
+                    },
+                });
+                self.heap.push(Reverse((end, EV_LANE_FREE, lane_key(k, lane))));
+            }
+        }
+    }
+
+    /// Close the run: verify the traffic-accounting invariants, merge
+    /// the cluster event history and hand back the timeline. Consumes
+    /// the engine (the chips move into the timeline for metrics).
+    pub fn finish(self, probe: &mut Probe) -> FleetTimeline {
+        let ClusterEngine {
+            cfg,
+            chips,
+            jobs,
+            requests,
+            offered,
+            shed_cycles,
+            scale_events,
+            max_pending,
+            initial_active,
+            ..
+        } = self;
+        if cfg.open_loop.is_some() {
+            assert_eq!(
+                requests.len() + shed_cycles.len(),
+                offered,
+                "every offered arrival is either admitted or shed"
+            );
+            assert!(
+                requests.len() <= cfg.total_requests,
+                "open loop must respect the request budget"
+            );
+        } else {
+            assert_eq!(
+                requests.len(),
+                cfg.total_requests,
+                "closed loop must issue every budgeted request"
+            );
+        }
+        // queue deadlock watchdog: a request the loop never dispatched
+        // means the routing/lifecycle interplay wedged — dump the
+        // flight recorder so the last events before the wedge are
+        // visible
+        if requests.iter().any(|r| r.complete_cycle <= r.enqueue_cycle) {
+            eprintln!(
+                "{}",
+                probe.rec.dump("fleet deadlock watchdog: request(s) left unserved")
+            );
+            panic!(
+                "fleet stalled: requests left unserved (every chip drained with \
+                 unrepairable faults?) — degraded continuity should prevent this"
+            );
+        }
+        let total_cycles = jobs.iter().map(|j| j.job.end_cycle).max().unwrap_or(0);
+
+        // merge per-chip fault events and lifecycle transitions
+        let mut events: Vec<FleetEvent> = Vec::new();
+        for (k, chip) in chips.iter().enumerate() {
+            for e in &chip.faults.events {
+                let kind = match e.kind {
+                    ScanEventKind::FaultArrival(c) => FleetEventKind::FaultArrival(c),
+                    ScanEventKind::ScanDetection(c) => FleetEventKind::ScanDetection(c),
+                };
+                events.push(FleetEvent { cycle: e.cycle, chip: k, kind });
+            }
+            for &(start, end) in chip.lifecycle.drained_intervals() {
+                events.push(FleetEvent { cycle: start, chip: k, kind: FleetEventKind::Drained });
+                if end != u64::MAX {
+                    events.push(FleetEvent {
+                        cycle: end,
+                        chip: k,
+                        kind: FleetEventKind::Readmitted,
+                    });
+                }
+            }
+        }
+        events.extend(scale_events);
+        events.sort_by_key(|e| (e.cycle, e.chip, e.kind.sort_key()));
+        let unrepaired = chips.iter().map(|c| c.faults.unrepaired).sum();
+        let offered = if cfg.open_loop.is_some() { offered } else { requests.len() };
+
+        FleetTimeline {
+            jobs,
+            requests,
+            total_cycles,
+            events,
+            unrepaired,
+            max_pending,
+            chip_state: chips,
+            offered,
+            shed_cycles,
+            initial_active,
+        }
+    }
+}

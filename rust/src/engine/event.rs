@@ -1,0 +1,393 @@
+//! Typed, versioned event records: the *facts* of a fleet run.
+//!
+//! Every state change the cluster engine makes appends exactly one
+//! [`Event`] to its log before anything else observes it — the PR 7
+//! trace bus is a **projection** of this log ([`project`] maps each
+//! event 1:1 onto the deterministic [`TraceEvent`] vocabulary), and a
+//! snapshot plus the log tail reconstructs any run bit-identically.
+//! The wall-clock-domain `ExecutorSteal` trace event has no event-log
+//! counterpart on purpose: the log holds only simulated-cycle facts,
+//! so replaying it is deterministic by construction.
+//!
+//! The on-disk form ([`encode_log`]) is a dependency-free canonical
+//! little-endian byte format: an 8-byte magic, a `u16` version, then
+//! one `[u32 len][payload]` frame per record. [`decode_log`] tolerates
+//! a truncated final frame — that is the crash-restart contract: a log
+//! cut mid-write decodes to the longest valid prefix and reports the
+//! truncation, and the replay driver resumes from the last snapshot
+//! covered by that prefix.
+
+use crate::obs::TraceEvent;
+
+/// Version of the event record encoding. Bumped on any change to the
+/// variant set, field layout, or framing; [`decode_log`] refuses logs
+/// from other versions rather than guessing.
+pub const EVENT_VERSION: u16 = 1;
+
+/// Leading magic of an encoded event log.
+pub const LOG_MAGIC: [u8; 8] = *b"HYCAELOG";
+
+/// What happened (the deterministic trace vocabulary, minus the
+/// wall-clock `ExecutorSteal` channel). Field meanings are documented
+/// on [`TraceEvent`]; the two enums correspond 1:1 via [`project`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EventKind {
+    RequestEnqueue { id: usize, chip: usize },
+    RequestShed { seq: usize },
+    RequestReshard { id: usize, from: usize, to: usize },
+    RequestDispatch { id: usize, chip: usize, batch: usize },
+    RequestComplete { id: usize, chip: usize, batch: usize },
+    BatchFormed { batch: usize, chip: usize, lane: usize, size: usize },
+    LaneFree { chip: usize, lane: usize },
+    FaultArrival { chip: usize, row: u16, col: u16 },
+    ScanStart { chip: usize },
+    ScanDetect { chip: usize, row: u16, col: u16 },
+    RemapApplied { chip: usize, row: u16, col: u16 },
+    ChipDrain { chip: usize },
+    ChipReadmit { chip: usize },
+    AutoscaleTick { active: usize, pressure: usize },
+    ScaleUp { chip: usize },
+    ScaleDown { chip: usize },
+}
+
+/// One cycle-stamped fact. The log is append-ordered (the engine's
+/// deterministic processing order), **not** cycle-sorted: a request's
+/// completion is a consequence of its dispatch, so both are recorded
+/// at dispatch time and the completion carries a future stamp. Log
+/// positions — not cycles — are therefore the resume coordinate.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Event {
+    pub cycle: u64,
+    pub kind: EventKind,
+}
+
+/// Project an event onto the trace-bus vocabulary.
+pub fn project(e: &Event) -> TraceEvent {
+    match e.kind {
+        EventKind::RequestEnqueue { id, chip } => TraceEvent::RequestEnqueue { id, chip },
+        EventKind::RequestShed { seq } => TraceEvent::RequestShed { seq },
+        EventKind::RequestReshard { id, from, to } => TraceEvent::RequestReshard { id, from, to },
+        EventKind::RequestDispatch { id, chip, batch } => {
+            TraceEvent::RequestDispatch { id, chip, batch }
+        }
+        EventKind::RequestComplete { id, chip, batch } => {
+            TraceEvent::RequestComplete { id, chip, batch }
+        }
+        EventKind::BatchFormed { batch, chip, lane, size } => {
+            TraceEvent::BatchFormed { batch, chip, lane, size }
+        }
+        EventKind::LaneFree { chip, lane } => TraceEvent::LaneFree { chip, lane },
+        EventKind::FaultArrival { chip, row, col } => TraceEvent::FaultArrival { chip, row, col },
+        EventKind::ScanStart { chip } => TraceEvent::ScanStart { chip },
+        EventKind::ScanDetect { chip, row, col } => TraceEvent::ScanDetect { chip, row, col },
+        EventKind::RemapApplied { chip, row, col } => TraceEvent::RemapApplied { chip, row, col },
+        EventKind::ChipDrain { chip } => TraceEvent::ChipDrain { chip },
+        EventKind::ChipReadmit { chip } => TraceEvent::ChipReadmit { chip },
+        EventKind::AutoscaleTick { active, pressure } => {
+            TraceEvent::AutoscaleTick { active, pressure }
+        }
+        EventKind::ScaleUp { chip } => TraceEvent::ScaleUp { chip },
+        EventKind::ScaleDown { chip } => TraceEvent::ScaleDown { chip },
+    }
+}
+
+impl Event {
+    /// `(tag, field values, field count)` of the record payload.
+    fn parts(&self) -> (u8, [u64; 4], usize) {
+        let mut f = [0u64; 4];
+        let (tag, n) = match self.kind {
+            EventKind::RequestEnqueue { id, chip } => {
+                f[0] = id as u64;
+                f[1] = chip as u64;
+                (0, 2)
+            }
+            EventKind::RequestShed { seq } => {
+                f[0] = seq as u64;
+                (1, 1)
+            }
+            EventKind::RequestReshard { id, from, to } => {
+                f[0] = id as u64;
+                f[1] = from as u64;
+                f[2] = to as u64;
+                (2, 3)
+            }
+            EventKind::RequestDispatch { id, chip, batch } => {
+                f[0] = id as u64;
+                f[1] = chip as u64;
+                f[2] = batch as u64;
+                (3, 3)
+            }
+            EventKind::RequestComplete { id, chip, batch } => {
+                f[0] = id as u64;
+                f[1] = chip as u64;
+                f[2] = batch as u64;
+                (4, 3)
+            }
+            EventKind::BatchFormed { batch, chip, lane, size } => {
+                f[0] = batch as u64;
+                f[1] = chip as u64;
+                f[2] = lane as u64;
+                f[3] = size as u64;
+                (5, 4)
+            }
+            EventKind::LaneFree { chip, lane } => {
+                f[0] = chip as u64;
+                f[1] = lane as u64;
+                (6, 2)
+            }
+            EventKind::FaultArrival { chip, row, col } => {
+                f[0] = chip as u64;
+                f[1] = row as u64;
+                f[2] = col as u64;
+                (7, 3)
+            }
+            EventKind::ScanStart { chip } => {
+                f[0] = chip as u64;
+                (8, 1)
+            }
+            EventKind::ScanDetect { chip, row, col } => {
+                f[0] = chip as u64;
+                f[1] = row as u64;
+                f[2] = col as u64;
+                (9, 3)
+            }
+            EventKind::RemapApplied { chip, row, col } => {
+                f[0] = chip as u64;
+                f[1] = row as u64;
+                f[2] = col as u64;
+                (10, 3)
+            }
+            EventKind::ChipDrain { chip } => {
+                f[0] = chip as u64;
+                (11, 1)
+            }
+            EventKind::ChipReadmit { chip } => {
+                f[0] = chip as u64;
+                (12, 1)
+            }
+            EventKind::AutoscaleTick { active, pressure } => {
+                f[0] = active as u64;
+                f[1] = pressure as u64;
+                (13, 2)
+            }
+            EventKind::ScaleUp { chip } => {
+                f[0] = chip as u64;
+                (14, 1)
+            }
+            EventKind::ScaleDown { chip } => {
+                f[0] = chip as u64;
+                (15, 1)
+            }
+        };
+        (tag, f, n)
+    }
+
+    /// Append this record's `[u32 len][payload]` frame to `out`.
+    fn encode_into(&self, out: &mut Vec<u8>) {
+        let (tag, fields, n) = self.parts();
+        let len = 1 + 8 + 8 * n;
+        out.extend_from_slice(&(len as u32).to_le_bytes());
+        out.push(tag);
+        out.extend_from_slice(&self.cycle.to_le_bytes());
+        for field in &fields[..n] {
+            out.extend_from_slice(&field.to_le_bytes());
+        }
+    }
+
+    /// Decode one frame payload; `None` if the tag or arity is wrong.
+    fn decode_payload(p: &[u8]) -> Option<Event> {
+        if p.len() < 9 || (p.len() - 9) % 8 != 0 {
+            return None;
+        }
+        let tag = p[0];
+        let cycle = u64::from_le_bytes(p[1..9].try_into().unwrap());
+        let f: Vec<u64> = p[9..]
+            .chunks_exact(8)
+            .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        let kind = match (tag, f.len()) {
+            (0, 2) => EventKind::RequestEnqueue { id: f[0] as usize, chip: f[1] as usize },
+            (1, 1) => EventKind::RequestShed { seq: f[0] as usize },
+            (2, 3) => EventKind::RequestReshard {
+                id: f[0] as usize,
+                from: f[1] as usize,
+                to: f[2] as usize,
+            },
+            (3, 3) => EventKind::RequestDispatch {
+                id: f[0] as usize,
+                chip: f[1] as usize,
+                batch: f[2] as usize,
+            },
+            (4, 3) => EventKind::RequestComplete {
+                id: f[0] as usize,
+                chip: f[1] as usize,
+                batch: f[2] as usize,
+            },
+            (5, 4) => EventKind::BatchFormed {
+                batch: f[0] as usize,
+                chip: f[1] as usize,
+                lane: f[2] as usize,
+                size: f[3] as usize,
+            },
+            (6, 2) => EventKind::LaneFree { chip: f[0] as usize, lane: f[1] as usize },
+            (7, 3) => EventKind::FaultArrival {
+                chip: f[0] as usize,
+                row: f[1] as u16,
+                col: f[2] as u16,
+            },
+            (8, 1) => EventKind::ScanStart { chip: f[0] as usize },
+            (9, 3) => EventKind::ScanDetect {
+                chip: f[0] as usize,
+                row: f[1] as u16,
+                col: f[2] as u16,
+            },
+            (10, 3) => EventKind::RemapApplied {
+                chip: f[0] as usize,
+                row: f[1] as u16,
+                col: f[2] as u16,
+            },
+            (11, 1) => EventKind::ChipDrain { chip: f[0] as usize },
+            (12, 1) => EventKind::ChipReadmit { chip: f[0] as usize },
+            (13, 2) => EventKind::AutoscaleTick { active: f[0] as usize, pressure: f[1] as usize },
+            (14, 1) => EventKind::ScaleUp { chip: f[0] as usize },
+            (15, 1) => EventKind::ScaleDown { chip: f[0] as usize },
+            _ => return None,
+        };
+        Some(Event { cycle, kind })
+    }
+}
+
+/// Serialize an event log in the canonical byte format.
+pub fn encode_log(events: &[Event]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(10 + events.len() * 45);
+    out.extend_from_slice(&LOG_MAGIC);
+    out.extend_from_slice(&EVENT_VERSION.to_le_bytes());
+    for e in events {
+        e.encode_into(&mut out);
+    }
+    out
+}
+
+/// Decode an event log, returning the longest valid prefix and whether
+/// the input was truncated or corrupt past that prefix. A missing or
+/// foreign header decodes to `(empty, truncated)`.
+pub fn decode_log(bytes: &[u8]) -> (Vec<Event>, bool) {
+    if bytes.len() < 10
+        || bytes[..8] != LOG_MAGIC
+        || u16::from_le_bytes([bytes[8], bytes[9]]) != EVENT_VERSION
+    {
+        return (Vec::new(), true);
+    }
+    let mut events = Vec::new();
+    let mut i = 10usize;
+    loop {
+        if i == bytes.len() {
+            return (events, false);
+        }
+        if bytes.len() - i < 4 {
+            return (events, true);
+        }
+        let len = u32::from_le_bytes(bytes[i..i + 4].try_into().unwrap()) as usize;
+        i += 4;
+        if bytes.len() - i < len {
+            return (events, true);
+        }
+        match Event::decode_payload(&bytes[i..i + len]) {
+            Some(e) => events.push(e),
+            None => return (events, true),
+        }
+        i += len;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::event_name;
+
+    fn one_of_each() -> Vec<Event> {
+        vec![
+            Event { cycle: 0, kind: EventKind::FaultArrival { chip: 1, row: 3, col: 7 } },
+            Event { cycle: 5, kind: EventKind::ScanStart { chip: 1 } },
+            Event { cycle: 5, kind: EventKind::ScanDetect { chip: 1, row: 3, col: 7 } },
+            Event { cycle: 5, kind: EventKind::RemapApplied { chip: 1, row: 3, col: 7 } },
+            Event { cycle: 9, kind: EventKind::RequestEnqueue { id: 0, chip: 2 } },
+            Event { cycle: 9, kind: EventKind::RequestShed { seq: 0 } },
+            Event { cycle: 10, kind: EventKind::RequestReshard { id: 0, from: 2, to: 0 } },
+            Event { cycle: 12, kind: EventKind::BatchFormed { batch: 0, chip: 0, lane: 1, size: 4 } },
+            Event { cycle: 12, kind: EventKind::RequestDispatch { id: 0, chip: 0, batch: 0 } },
+            Event { cycle: 90, kind: EventKind::RequestComplete { id: 0, chip: 0, batch: 0 } },
+            Event { cycle: 90, kind: EventKind::LaneFree { chip: 0, lane: 1 } },
+            Event { cycle: 91, kind: EventKind::ChipDrain { chip: 1 } },
+            Event { cycle: 99, kind: EventKind::ChipReadmit { chip: 1 } },
+            Event { cycle: 100, kind: EventKind::AutoscaleTick { active: 2, pressure: 11 } },
+            Event { cycle: 100, kind: EventKind::ScaleUp { chip: 3 } },
+            Event { cycle: 200, kind: EventKind::ScaleDown { chip: 3 } },
+        ]
+    }
+
+    #[test]
+    fn every_kind_round_trips_through_the_log_encoding() {
+        let events = one_of_each();
+        let bytes = encode_log(&events);
+        let (back, truncated) = decode_log(&bytes);
+        assert!(!truncated);
+        assert_eq!(back, events);
+    }
+
+    #[test]
+    fn projection_covers_the_deterministic_trace_vocabulary() {
+        // 16 distinct trace-bus names: the full deterministic set
+        // (ExecutorSteal, the wall-clock channel, is deliberately
+        // absent from the event log).
+        let names: std::collections::BTreeSet<&str> =
+            one_of_each().iter().map(|e| event_name(&project(e))).collect();
+        assert_eq!(names.len(), 16);
+        assert!(!names.contains("executor_steal"));
+    }
+
+    #[test]
+    fn projection_preserves_cycle_and_fields() {
+        let e = Event { cycle: 42, kind: EventKind::RequestDispatch { id: 7, chip: 1, batch: 3 } };
+        assert_eq!(project(&e), TraceEvent::RequestDispatch { id: 7, chip: 1, batch: 3 });
+    }
+
+    #[test]
+    fn truncated_logs_decode_to_the_longest_valid_prefix() {
+        let events = one_of_each();
+        let bytes = encode_log(&events);
+        // cut mid-record: every proper prefix decodes cleanly to some
+        // prefix of the events and reports truncation
+        for cut in 11..bytes.len() {
+            let (prefix, truncated) = decode_log(&bytes[..cut]);
+            assert!(truncated, "cut at {cut} must report truncation");
+            assert!(prefix.len() <= events.len());
+            assert_eq!(prefix[..], events[..prefix.len()], "cut at {cut}");
+        }
+        // empty log (header only) is valid and complete
+        let (empty, truncated) = decode_log(&encode_log(&[]));
+        assert!(empty.is_empty() && !truncated);
+    }
+
+    #[test]
+    fn foreign_headers_are_rejected() {
+        let (e, t) = decode_log(b"NOTALOG!");
+        assert!(e.is_empty() && t);
+        let mut wrong_version = encode_log(&[]);
+        wrong_version[8] = 0xFF;
+        let (e, t) = decode_log(&wrong_version);
+        assert!(e.is_empty() && t);
+    }
+
+    #[test]
+    fn garbage_tags_stop_the_decode() {
+        let mut bytes = encode_log(&one_of_each()[..3]);
+        // append a frame with an undefined tag
+        bytes.extend_from_slice(&9u32.to_le_bytes());
+        bytes.push(0xEE);
+        bytes.extend_from_slice(&0u64.to_le_bytes());
+        let (events, truncated) = decode_log(&bytes);
+        assert_eq!(events.len(), 3);
+        assert!(truncated);
+    }
+}

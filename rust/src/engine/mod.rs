@@ -1,0 +1,46 @@
+//! `engine` — the event-sourced cluster core (DESIGN.md §12,
+//! `repro replay`).
+//!
+//! The fleet simulation used to be a closed-form loop: state on a
+//! stack frame, mutated in place, gone when the function returned.
+//! This module restructures it as a **command/event-log discrete-event
+//! core**:
+//!
+//! * [`command`] — the *intent*: typed, versioned `(cycle, kind, key)`
+//!   records for everything the loop schedules (arrivals, lane frees,
+//!   batch deadlines, drains, re-admits, autoscale ticks);
+//! * [`event`] — the *facts*: every state change appends one typed,
+//!   cycle-stamped [`Event`] to the run's log before anything else
+//!   observes it; the PR 7 trace bus is a projection of this log
+//!   ([`project`]);
+//! * [`engine`] — the apply-loop: [`ClusterEngine`] owns all mutable
+//!   state and advances one command per [`ClusterEngine::step`], with
+//!   per-subsystem seeded RNG streams (per-chip fault timelines,
+//!   per-client think streams, the open-arrival thinning sampler), so
+//!   replaying a log is bit-identical at any `--workers` value;
+//! * [`snapshot`] — periodic full-state snapshots in a
+//!   dependency-free canonical byte format with an FNV-1a integrity
+//!   trailer; `resume(snapshot, log_tail)` continues bit-identically
+//!   to an uninterrupted run (the crash-restart contract);
+//! * [`branch`] — time travel: fork at any snapshot, override the
+//!   fault or traffic streams from the fork point, and localize the
+//!   first observable divergence through the span ledger.
+//!
+//! `fleet::simulate_fleet_traced` is a thin driver over this module —
+//! the golden traces, the degeneracy contract and every existing
+//! entry point are unchanged.
+
+pub mod branch;
+pub mod command;
+pub mod event;
+#[allow(clippy::module_inception)]
+pub mod engine;
+pub mod snapshot;
+
+pub use branch::{first_divergence, BranchOverrides};
+pub use command::{lane_key, Command, COMMAND_VERSION};
+pub use engine::{admissible, predicted_wait, ClusterEngine};
+pub use event::{decode_log, encode_log, project, Event, EventKind, EVENT_VERSION};
+pub use snapshot::{
+    config_fingerprint, fnv1a, Snapshot, SnapshotError, SNAPSHOT_VERSION,
+};

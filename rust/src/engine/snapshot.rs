@@ -1,0 +1,688 @@
+//! Periodic full-state snapshots: the mutable cursors of a
+//! [`ClusterEngine`], serialized in a dependency-free canonical byte
+//! format with an FNV-1a integrity trailer.
+//!
+//! A snapshot holds **only** state that is not a pure function of the
+//! config: outstanding commands, per-chip queues/lanes/counters, RNG
+//! positions, controller state, and the completed request/job history.
+//! Static context (fault timelines, lifecycles, cost models, the open
+//! arrival stream) is rebuilt from the config on
+//! [`ClusterEngine::resume`], and batch masks are recomputed from each
+//! chip's mask epochs — so a snapshot stays small and can never
+//! disagree with the config that produced it (a config mismatch is
+//! caught by the embedded fingerprint instead).
+//!
+//! Integrity: [`Snapshot::from_bytes`] verifies magic → version →
+//! FNV-1a hash over everything before the trailer **before** parsing
+//! any field, so a corrupt length prefix can't trigger a huge
+//! allocation and any single-bit flip is rejected (property-tested in
+//! `rust/tests/replay.rs` and `proptests.rs`).
+
+use std::cmp::Reverse;
+use std::fmt;
+use std::sync::Arc;
+
+use crate::fleet::{FleetBatchJob, FleetConfig, FleetEvent, FleetEventKind};
+use crate::inference::Engine;
+use crate::obs::{recorder, FlightRecorder, NullSink, Probe};
+use crate::serve::{BatchJob, RequestRecord};
+
+use super::engine::ClusterEngine;
+
+/// Version of the snapshot byte format.
+pub const SNAPSHOT_VERSION: u16 = 1;
+
+/// Leading magic of an encoded snapshot.
+pub const SNAPSHOT_MAGIC: [u8; 8] = *b"HYCASNAP";
+
+/// FNV-1a over a byte string — the same dependency-free hash the
+/// scenario layer uses for spec fingerprints, reused here for snapshot
+/// integrity and replay-bench digests.
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Fingerprint of a fleet config (FNV-1a of its canonical debug
+/// rendering). A snapshot only resumes against the exact config that
+/// produced it — anything else would silently diverge.
+pub fn config_fingerprint(cfg: &FleetConfig) -> u64 {
+    fnv1a(format!("{cfg:?}").as_bytes())
+}
+
+/// Serialized mutable state of one chip.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ChipState {
+    /// Pending batcher entries as `(enqueue_cycle, request_id)`, FIFO.
+    pub batcher: Vec<(u64, u64)>,
+    /// Idle lane ids, ascending.
+    pub free_lanes: Vec<u64>,
+    /// Per-lane occupancy: `u64::MAX` = idle, else the occupying
+    /// batch's request count (`in_flight` is recomputed from this).
+    pub lanes: Vec<u64>,
+    /// Requests routed here so far (deficit-weighted routing input).
+    pub assigned: u64,
+}
+
+/// Serialized dispatched batch (`masks` are recomputed from the chip's
+/// mask epochs on restore — they are static context, not state).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct JobState {
+    pub chip: u64,
+    pub id: u64,
+    pub start_cycle: u64,
+    pub end_cycle: u64,
+    pub lane: u64,
+    pub image_idxs: Vec<u64>,
+}
+
+/// A full-state snapshot of a [`ClusterEngine`] at a cycle boundary:
+/// the engine's state after every command with `cycle < label_cycle`
+/// was applied.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Snapshot {
+    /// The cycle boundary this snapshot labels.
+    pub label_cycle: u64,
+    /// Events recorded on the timeline up to this point — the resume
+    /// coordinate into the event log (the log is append-ordered, not
+    /// cycle-sorted, so positions split it, cycles don't).
+    pub events_logged: u64,
+    /// [`config_fingerprint`] of the producing config.
+    pub config_fingerprint: u64,
+    /// Outstanding commands, ascending `(cycle, kind, key)`.
+    pub heap: Vec<(u64, u8, u64)>,
+    pub chips: Vec<ChipState>,
+    pub router_cursor: u64,
+    /// Per-client PCG `(state, inc)` pairs of the load generator.
+    pub gen_clients: Vec<(u64, u64)>,
+    pub gen_issued: u64,
+    pub active: Vec<bool>,
+    pub last_scale: u64,
+    /// Autoscaler decisions so far: `(cycle, chip, scaled_up)`.
+    pub scale_events: Vec<(u64, u64, bool)>,
+    pub offered: u64,
+    pub shed_cycles: Vec<u64>,
+    pub shed_seen_by_tick: u64,
+    pub jobs: Vec<JobState>,
+    /// Request records as `[id, client, image_idx, enqueue, start,
+    /// complete, batch_id, slot]`.
+    pub requests: Vec<[u64; 8]>,
+    pub pending_total: u64,
+    pub max_pending: u64,
+}
+
+/// Why a snapshot failed to load or resume.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SnapshotError {
+    /// The leading magic is not `HYCASNAP`.
+    BadMagic,
+    /// The format version is not [`SNAPSHOT_VERSION`].
+    BadVersion,
+    /// The FNV-1a trailer doesn't match the body (bit rot / tamper).
+    BadHash,
+    /// The byte string ends before the encoded structure does.
+    Truncated,
+    /// The snapshot was produced by a different fleet config.
+    ConfigMismatch,
+}
+
+impl fmt::Display for SnapshotError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SnapshotError::BadMagic => write!(f, "not a snapshot (bad magic)"),
+            SnapshotError::BadVersion => write!(f, "unsupported snapshot version"),
+            SnapshotError::BadHash => write!(f, "snapshot integrity hash mismatch"),
+            SnapshotError::Truncated => write!(f, "snapshot truncated"),
+            SnapshotError::ConfigMismatch => {
+                write!(f, "snapshot was produced by a different fleet config")
+            }
+        }
+    }
+}
+
+impl std::error::Error for SnapshotError {}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_len(out: &mut Vec<u8>, n: usize) {
+    put_u64(out, n as u64);
+}
+
+/// Bounds-checked little-endian reader over the snapshot body.
+struct Reader<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn u8(&mut self) -> Result<u8, SnapshotError> {
+        let b = *self.bytes.get(self.pos).ok_or(SnapshotError::Truncated)?;
+        self.pos += 1;
+        Ok(b)
+    }
+
+    fn u64(&mut self) -> Result<u64, SnapshotError> {
+        let end = self.pos.checked_add(8).ok_or(SnapshotError::Truncated)?;
+        let s = self.bytes.get(self.pos..end).ok_or(SnapshotError::Truncated)?;
+        self.pos = end;
+        Ok(u64::from_le_bytes(s.try_into().unwrap()))
+    }
+
+    fn len(&mut self) -> Result<usize, SnapshotError> {
+        let n = self.u64()?;
+        // the hash already vouches for the body; this is a belt-and-
+        // braces bound so no length field can exceed the bytes present
+        if n > self.bytes.len() as u64 {
+            return Err(SnapshotError::Truncated);
+        }
+        Ok(n as usize)
+    }
+
+    fn u64s(&mut self) -> Result<Vec<u64>, SnapshotError> {
+        let n = self.len()?;
+        (0..n).map(|_| self.u64()).collect()
+    }
+
+    fn done(&self) -> bool {
+        self.pos == self.bytes.len()
+    }
+}
+
+impl Snapshot {
+    /// Serialize in the canonical byte format: magic, version,
+    /// little-endian length-prefixed fields, FNV-1a trailer over
+    /// everything before it.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(256);
+        out.extend_from_slice(&SNAPSHOT_MAGIC);
+        out.extend_from_slice(&SNAPSHOT_VERSION.to_le_bytes());
+        put_u64(&mut out, self.config_fingerprint);
+        put_u64(&mut out, self.label_cycle);
+        put_u64(&mut out, self.events_logged);
+        put_len(&mut out, self.heap.len());
+        for &(cycle, kind, key) in &self.heap {
+            put_u64(&mut out, cycle);
+            out.push(kind);
+            put_u64(&mut out, key);
+        }
+        put_len(&mut out, self.chips.len());
+        for c in &self.chips {
+            put_len(&mut out, c.batcher.len());
+            for &(cycle, rid) in &c.batcher {
+                put_u64(&mut out, cycle);
+                put_u64(&mut out, rid);
+            }
+            put_len(&mut out, c.free_lanes.len());
+            for &l in &c.free_lanes {
+                put_u64(&mut out, l);
+            }
+            put_len(&mut out, c.lanes.len());
+            for &n in &c.lanes {
+                put_u64(&mut out, n);
+            }
+            put_u64(&mut out, c.assigned);
+        }
+        put_u64(&mut out, self.router_cursor);
+        put_len(&mut out, self.gen_clients.len());
+        for &(state, inc) in &self.gen_clients {
+            put_u64(&mut out, state);
+            put_u64(&mut out, inc);
+        }
+        put_u64(&mut out, self.gen_issued);
+        put_len(&mut out, self.active.len());
+        for &a in &self.active {
+            out.push(a as u8);
+        }
+        put_u64(&mut out, self.last_scale);
+        put_len(&mut out, self.scale_events.len());
+        for &(cycle, chip, up) in &self.scale_events {
+            put_u64(&mut out, cycle);
+            put_u64(&mut out, chip);
+            out.push(up as u8);
+        }
+        put_u64(&mut out, self.offered);
+        put_len(&mut out, self.shed_cycles.len());
+        for &c in &self.shed_cycles {
+            put_u64(&mut out, c);
+        }
+        put_u64(&mut out, self.shed_seen_by_tick);
+        put_len(&mut out, self.jobs.len());
+        for j in &self.jobs {
+            put_u64(&mut out, j.chip);
+            put_u64(&mut out, j.id);
+            put_u64(&mut out, j.start_cycle);
+            put_u64(&mut out, j.end_cycle);
+            put_u64(&mut out, j.lane);
+            put_len(&mut out, j.image_idxs.len());
+            for &i in &j.image_idxs {
+                put_u64(&mut out, i);
+            }
+        }
+        put_len(&mut out, self.requests.len());
+        for r in &self.requests {
+            for &v in r {
+                put_u64(&mut out, v);
+            }
+        }
+        put_u64(&mut out, self.pending_total);
+        put_u64(&mut out, self.max_pending);
+        let hash = fnv1a(&out);
+        put_u64(&mut out, hash);
+        out
+    }
+
+    /// Parse and verify a snapshot. Order matters: magic, then
+    /// version, then the integrity hash over `bytes[..len-8]`, and
+    /// only then the fields — so corrupt bytes are rejected before any
+    /// length field is trusted.
+    pub fn from_bytes(bytes: &[u8]) -> Result<Snapshot, SnapshotError> {
+        if bytes.len() < SNAPSHOT_MAGIC.len() {
+            return Err(SnapshotError::BadMagic);
+        }
+        if bytes[..8] != SNAPSHOT_MAGIC {
+            return Err(SnapshotError::BadMagic);
+        }
+        if bytes.len() < 8 + 2 + 8 {
+            return Err(SnapshotError::Truncated);
+        }
+        if u16::from_le_bytes([bytes[8], bytes[9]]) != SNAPSHOT_VERSION {
+            return Err(SnapshotError::BadVersion);
+        }
+        let (body, trailer) = bytes.split_at(bytes.len() - 8);
+        let stored = u64::from_le_bytes(trailer.try_into().unwrap());
+        if fnv1a(body) != stored {
+            return Err(SnapshotError::BadHash);
+        }
+        let mut r = Reader { bytes: &body[10..], pos: 0 };
+        let config_fingerprint = r.u64()?;
+        let label_cycle = r.u64()?;
+        let events_logged = r.u64()?;
+        let n = r.len()?;
+        let mut heap = Vec::with_capacity(n);
+        for _ in 0..n {
+            let cycle = r.u64()?;
+            let kind = r.u8()?;
+            let key = r.u64()?;
+            heap.push((cycle, kind, key));
+        }
+        let n = r.len()?;
+        let mut chips = Vec::with_capacity(n);
+        for _ in 0..n {
+            let nb = r.len()?;
+            let mut batcher = Vec::with_capacity(nb);
+            for _ in 0..nb {
+                let cycle = r.u64()?;
+                let rid = r.u64()?;
+                batcher.push((cycle, rid));
+            }
+            let free_lanes = r.u64s()?;
+            let lanes = r.u64s()?;
+            let assigned = r.u64()?;
+            chips.push(ChipState { batcher, free_lanes, lanes, assigned });
+        }
+        let router_cursor = r.u64()?;
+        let n = r.len()?;
+        let mut gen_clients = Vec::with_capacity(n);
+        for _ in 0..n {
+            let state = r.u64()?;
+            let inc = r.u64()?;
+            gen_clients.push((state, inc));
+        }
+        let gen_issued = r.u64()?;
+        let n = r.len()?;
+        let mut active = Vec::with_capacity(n);
+        for _ in 0..n {
+            active.push(r.u8()? != 0);
+        }
+        let last_scale = r.u64()?;
+        let n = r.len()?;
+        let mut scale_events = Vec::with_capacity(n);
+        for _ in 0..n {
+            let cycle = r.u64()?;
+            let chip = r.u64()?;
+            let up = r.u8()? != 0;
+            scale_events.push((cycle, chip, up));
+        }
+        let offered = r.u64()?;
+        let shed_cycles = r.u64s()?;
+        let shed_seen_by_tick = r.u64()?;
+        let n = r.len()?;
+        let mut jobs = Vec::with_capacity(n);
+        for _ in 0..n {
+            let chip = r.u64()?;
+            let id = r.u64()?;
+            let start_cycle = r.u64()?;
+            let end_cycle = r.u64()?;
+            let lane = r.u64()?;
+            let image_idxs = r.u64s()?;
+            jobs.push(JobState { chip, id, start_cycle, end_cycle, lane, image_idxs });
+        }
+        let n = r.len()?;
+        let mut requests = Vec::with_capacity(n);
+        for _ in 0..n {
+            let mut rec = [0u64; 8];
+            for v in rec.iter_mut() {
+                *v = r.u64()?;
+            }
+            requests.push(rec);
+        }
+        let pending_total = r.u64()?;
+        let max_pending = r.u64()?;
+        if !r.done() {
+            return Err(SnapshotError::Truncated);
+        }
+        Ok(Snapshot {
+            label_cycle,
+            events_logged,
+            config_fingerprint,
+            heap,
+            chips,
+            router_cursor,
+            gen_clients,
+            gen_issued,
+            active,
+            last_scale,
+            scale_events,
+            offered,
+            shed_cycles,
+            shed_seen_by_tick,
+            jobs,
+            requests,
+            pending_total,
+            max_pending,
+        })
+    }
+}
+
+impl ClusterEngine {
+    /// Capture the engine's mutable state at the `label_cycle`
+    /// boundary (the caller guarantees every command with
+    /// `cycle < label_cycle` has been applied — see
+    /// [`ClusterEngine::run_with_snapshots`]).
+    pub fn snapshot(&self, label_cycle: u64) -> Snapshot {
+        let mut heap: Vec<(u64, u8, u64)> = self.heap.iter().map(|r| r.0).collect();
+        heap.sort_unstable();
+        let (gen_clients, gen_issued) = self.gen.state_parts();
+        Snapshot {
+            label_cycle,
+            events_logged: self.events_recorded(),
+            config_fingerprint: config_fingerprint(&self.cfg),
+            heap,
+            chips: self
+                .chips
+                .iter()
+                .map(|c| ChipState {
+                    batcher: c
+                        .batcher
+                        .pending_entries()
+                        .map(|&(cycle, rid)| (cycle, rid as u64))
+                        .collect(),
+                    free_lanes: c.free_lanes.iter().map(|&l| l as u64).collect(),
+                    lanes: c
+                        .lane_occupancy()
+                        .iter()
+                        .map(|o| o.map_or(u64::MAX, |n| n as u64))
+                        .collect(),
+                    assigned: c.assigned,
+                })
+                .collect(),
+            router_cursor: self.router.cursor(),
+            gen_clients,
+            gen_issued: gen_issued as u64,
+            active: self.active.clone(),
+            last_scale: self.last_scale,
+            scale_events: self
+                .scale_events
+                .iter()
+                .map(|e| {
+                    (e.cycle, e.chip as u64, matches!(e.kind, FleetEventKind::ScaledUp))
+                })
+                .collect(),
+            offered: self.offered as u64,
+            shed_cycles: self.shed_cycles.clone(),
+            shed_seen_by_tick: self.shed_seen_by_tick as u64,
+            jobs: self
+                .jobs
+                .iter()
+                .map(|j| JobState {
+                    chip: j.chip as u64,
+                    id: j.job.id as u64,
+                    start_cycle: j.job.start_cycle,
+                    end_cycle: j.job.end_cycle,
+                    lane: j.job.lane as u64,
+                    image_idxs: j.job.image_idxs.iter().map(|&i| i as u64).collect(),
+                })
+                .collect(),
+            requests: self
+                .requests
+                .iter()
+                .map(|r| {
+                    [
+                        r.id as u64,
+                        r.client as u64,
+                        r.image_idx as u64,
+                        r.enqueue_cycle,
+                        r.start_cycle,
+                        r.complete_cycle,
+                        r.batch_id as u64,
+                        r.slot as u64,
+                    ]
+                })
+                .collect(),
+            pending_total: self.pending_total as u64,
+            max_pending: self.max_pending as u64,
+        }
+    }
+
+    /// Rebuild an engine at `snap`'s boundary: genesis from the config
+    /// (static context), then overwrite every mutable cursor from the
+    /// snapshot. Continuing the run is bit-identical to an
+    /// uninterrupted one. The genesis events are recorded into a
+    /// throwaway probe — they are already in the persisted log prefix,
+    /// and the resumed instance's `log_offset` points past them.
+    pub fn resume(
+        engine: &Engine,
+        cfg: &FleetConfig,
+        snap: &Snapshot,
+    ) -> Result<ClusterEngine, SnapshotError> {
+        if snap.config_fingerprint != config_fingerprint(cfg) {
+            return Err(SnapshotError::ConfigMismatch);
+        }
+        let mut rec = FlightRecorder::new(recorder::DEFAULT_CAPACITY);
+        let mut sink = NullSink;
+        let mut eng = ClusterEngine::new(
+            engine,
+            cfg,
+            &mut Probe { sink: &mut sink, rec: &mut rec },
+        );
+        eng.restore(snap);
+        Ok(eng)
+    }
+
+    /// Overwrite every mutable cursor from `snap` (the second half of
+    /// [`ClusterEngine::resume`]).
+    fn restore(&mut self, snap: &Snapshot) {
+        assert_eq!(snap.chips.len(), self.chips.len(), "chip count mismatch");
+        self.heap = snap.heap.iter().map(|&e| Reverse(e)).collect();
+        for (chip, cs) in self.chips.iter_mut().zip(&snap.chips) {
+            chip.batcher.restore_pending(
+                cs.batcher.iter().map(|&(cycle, rid)| (cycle, rid as usize)).collect(),
+            );
+            chip.free_lanes = cs.free_lanes.iter().map(|&l| l as usize).collect();
+            chip.restore_lanes(
+                cs.lanes
+                    .iter()
+                    .map(|&n| if n == u64::MAX { None } else { Some(n as usize) })
+                    .collect(),
+            );
+            chip.assigned = cs.assigned;
+        }
+        self.router.set_cursor(snap.router_cursor);
+        self.gen.restore(snap.gen_clients.clone(), snap.gen_issued as usize);
+        self.active = snap.active.clone();
+        self.last_scale = snap.last_scale;
+        self.scale_events = snap
+            .scale_events
+            .iter()
+            .map(|&(cycle, chip, up)| FleetEvent {
+                cycle,
+                chip: chip as usize,
+                kind: if up { FleetEventKind::ScaledUp } else { FleetEventKind::ScaledDown },
+            })
+            .collect();
+        self.offered = snap.offered as usize;
+        self.shed_cycles = snap.shed_cycles.clone();
+        self.shed_seen_by_tick = snap.shed_seen_by_tick as usize;
+        // masks are static context: recompute each job's from its
+        // chip's mask epochs at dispatch time, exactly as the dispatch
+        // path did (full batches share the epoch Arc, short batches
+        // get a trimmed copy)
+        self.jobs = snap
+            .jobs
+            .iter()
+            .map(|j| {
+                let b = j.image_idxs.len();
+                let masks = {
+                    let epoch = self.chips[j.chip as usize].faults.masks_at(j.start_cycle);
+                    if b == self.cfg.max_batch {
+                        Arc::clone(epoch)
+                    } else {
+                        Arc::new(epoch.with_fc_rows(b))
+                    }
+                };
+                FleetBatchJob {
+                    chip: j.chip as usize,
+                    job: BatchJob {
+                        id: j.id as usize,
+                        image_idxs: j.image_idxs.iter().map(|&i| i as usize).collect(),
+                        masks,
+                        start_cycle: j.start_cycle,
+                        end_cycle: j.end_cycle,
+                        lane: j.lane as usize,
+                    },
+                }
+            })
+            .collect();
+        self.requests = snap
+            .requests
+            .iter()
+            .map(|r| RequestRecord {
+                id: r[0] as usize,
+                client: r[1] as usize,
+                image_idx: r[2] as usize,
+                enqueue_cycle: r[3],
+                start_cycle: r[4],
+                complete_cycle: r[5],
+                batch_id: r[6] as usize,
+                slot: r[7] as usize,
+            })
+            .collect();
+        self.pending_total = snap.pending_total as usize;
+        self.max_pending = snap.max_pending as usize;
+        self.cycle = snap.label_cycle;
+        self.log.clear();
+        self.log_offset = snap.events_logged;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Snapshot {
+        Snapshot {
+            label_cycle: 20_000,
+            events_logged: 137,
+            config_fingerprint: 0xDEAD_BEEF_CAFE_F00D,
+            heap: vec![(20_500, 0, 3), (21_000, 1, (2 << 32) | 1), (22_000, 5, 0)],
+            chips: vec![
+                ChipState {
+                    batcher: vec![(19_900, 7), (19_950, 8)],
+                    free_lanes: vec![1],
+                    lanes: vec![4, u64::MAX],
+                    assigned: 9,
+                },
+                ChipState {
+                    batcher: vec![],
+                    free_lanes: vec![0, 1],
+                    lanes: vec![u64::MAX, u64::MAX],
+                    assigned: 4,
+                },
+            ],
+            router_cursor: 13,
+            gen_clients: vec![(0x1234, 0x5677), (0x9ABC, 0xDEF1)],
+            gen_issued: 11,
+            active: vec![true, false],
+            last_scale: 16_000,
+            scale_events: vec![(8_000, 1, true), (16_000, 1, false)],
+            offered: 15,
+            shed_cycles: vec![12_000, 12_500],
+            shed_seen_by_tick: 2,
+            jobs: vec![JobState {
+                chip: 0,
+                id: 0,
+                start_cycle: 500,
+                end_cycle: 3_000,
+                lane: 0,
+                image_idxs: vec![3, 1, 4],
+            }],
+            requests: vec![[0, 0, 3, 100, 500, 3_000, 0, 0]],
+            pending_total: 2,
+            max_pending: 6,
+        }
+    }
+
+    #[test]
+    fn snapshot_round_trips_through_bytes() {
+        let s = sample();
+        let bytes = s.to_bytes();
+        assert_eq!(Snapshot::from_bytes(&bytes).unwrap(), s);
+    }
+
+    #[test]
+    fn every_single_bit_flip_is_detected() {
+        let bytes = sample().to_bytes();
+        for byte in 0..bytes.len() {
+            let mut corrupt = bytes.clone();
+            corrupt[byte] ^= 1 << (byte % 8);
+            assert!(
+                Snapshot::from_bytes(&corrupt).is_err(),
+                "bit flip in byte {byte} went undetected"
+            );
+        }
+    }
+
+    #[test]
+    fn error_taxonomy_is_precise() {
+        let bytes = sample().to_bytes();
+        assert_eq!(Snapshot::from_bytes(b"WRONGMAGIC......."), Err(SnapshotError::BadMagic));
+        assert_eq!(Snapshot::from_bytes(&bytes[..4]), Err(SnapshotError::BadMagic));
+        let mut wrong_version = bytes.clone();
+        wrong_version[8] = 0xFF;
+        assert_eq!(Snapshot::from_bytes(&wrong_version), Err(SnapshotError::BadVersion));
+        // truncation breaks the hash (the trailer moves), caught as
+        // BadHash before any parsing happens
+        assert_eq!(
+            Snapshot::from_bytes(&bytes[..bytes.len() - 1]),
+            Err(SnapshotError::BadHash)
+        );
+        let mut flipped = bytes.clone();
+        let mid = flipped.len() / 2;
+        flipped[mid] ^= 0x10;
+        assert_eq!(Snapshot::from_bytes(&flipped), Err(SnapshotError::BadHash));
+    }
+
+    #[test]
+    fn fnv1a_matches_the_reference_vectors() {
+        // standard FNV-1a 64-bit test vectors
+        assert_eq!(fnv1a(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv1a(b"foobar"), 0x85944171f73967e8);
+    }
+}

@@ -165,6 +165,20 @@ impl ChipSim {
         self.in_flight += n;
     }
 
+    /// Per-lane occupancy (`None` = idle) — serialized by the engine's
+    /// snapshots alongside `free_lanes`.
+    pub fn lane_occupancy(&self) -> &[Option<usize>] {
+        &self.active
+    }
+
+    /// Restore serialized lane occupancy; the in-flight count is
+    /// recomputed from it (the two are one datum, kept consistent).
+    pub fn restore_lanes(&mut self, occupancy: Vec<Option<usize>>) {
+        assert_eq!(occupancy.len(), self.spec.lanes, "lane count mismatch");
+        self.in_flight = occupancy.iter().flatten().sum();
+        self.active = occupancy;
+    }
+
     /// A lane finished its batch: free it and drop its in-flight count.
     pub fn complete_lane(&mut self, lane: usize) {
         let n = self.active[lane].take().expect("completing an idle lane");

@@ -196,6 +196,19 @@ impl Lifecycle {
             .sum()
     }
 
+    /// Branch override: force the chip drained from `cycle` to the end
+    /// of time — the "kill chip k at cycle C" what-if of `repro replay
+    /// --branch`. Episodes starting at or after `cycle` collapse into
+    /// the forced one; an episode already open at `cycle` is extended
+    /// instead of double-counted.
+    pub fn force_drain_from(&mut self, cycle: u64) {
+        self.drained.retain(|&(s, _)| s < cycle);
+        match self.drained.last_mut() {
+            Some(last) if last.1 > cycle => last.1 = u64::MAX,
+            _ => self.drained.push((cycle, u64::MAX)),
+        }
+    }
+
     /// Defense in depth for the fleet's flight recorder: the first
     /// closed drain episode shorter than the policy's minimum dwell,
     /// if any. [`Lifecycle::with_policy`] guarantees `None` by

@@ -56,20 +56,15 @@ pub mod lifecycle;
 pub mod metrics;
 pub mod router;
 
-use std::cmp::Reverse;
-use std::collections::BinaryHeap;
 use std::sync::Arc;
 
 use anyhow::Result;
 
 use crate::faults::Coord;
 use crate::inference::Engine;
-use crate::obs::{
-    recorder, steal_key, Counters, FlightRecorder, NullSink, Probe, TraceEvent, TraceSink,
-};
+use crate::obs::{recorder, steal_key, Counters, FlightRecorder, NullSink, Probe, TraceSink};
 use crate::serve::executor::{self, ExecMode};
-use crate::serve::loadgen::{self, RateCurve};
-use crate::serve::scan_agent::EventKind;
+use crate::serve::loadgen::RateCurve;
 use crate::serve::{BatchJob, FaultPlan, RequestRecord};
 
 pub use chip::{chip_seed, ChipSim, ChipSpec};
@@ -220,7 +215,7 @@ pub enum FleetEventKind {
 }
 
 impl FleetEventKind {
-    fn sort_key(&self) -> (u8, u16, u16) {
+    pub(crate) fn sort_key(&self) -> (u8, u16, u16) {
         match *self {
             FleetEventKind::FaultArrival(c) => (0, c.col, c.row),
             FleetEventKind::ScanDetection(c) => (1, c.col, c.row),
@@ -263,95 +258,6 @@ pub struct FleetTimeline {
     pub initial_active: usize,
 }
 
-// Event kinds; the (cycle, kind, key) triple is the deterministic
-// processing order. The first three collapse to serve's encoding for a
-// 1-chip fleet (chip 0's lane keys are bare lane ids).
-const EV_CLIENT_READY: u8 = 0;
-const EV_LANE_FREE: u8 = 1;
-const EV_BATCH_DEADLINE: u8 = 2;
-const EV_CHIP_DRAIN: u8 = 3;
-const EV_CHIP_READMIT: u8 = 4;
-const EV_SCALE_TICK: u8 = 5;
-
-fn lane_key(chip: usize, lane: usize) -> u64 {
-    ((chip as u64) << 32) | lane as u64
-}
-
-/// The chips the router may target at `t`: the active-and-healthy set
-/// when nonempty, then the active set, then the whole fleet (degraded
-/// continuity — with no autoscaler every chip is active, so this is
-/// exactly the old healthy-else-all rule). The set only changes at
-/// lifecycle/scaling boundaries, so callers compute it once per event
-/// and route any number of requests against it.
-fn admissible(chips: &[ChipSim], active: &[bool], t: u64) -> Vec<usize> {
-    let up: Vec<usize> = (0..chips.len())
-        .filter(|&k| active[k] && chips[k].healthy_at(t))
-        .collect();
-    if !up.is_empty() {
-        return up;
-    }
-    let act: Vec<usize> = (0..chips.len()).filter(|&k| active[k]).collect();
-    if act.is_empty() {
-        (0..chips.len()).collect()
-    } else {
-        act
-    }
-}
-
-/// Conservative queueing-delay bound for one more request on `chip`:
-/// it may sit out a full batcher deadline, then every batch ahead of
-/// it — plus its own — at the full-batch service time. Deliberately
-/// pessimistic (ignores idle lanes), so admitted traffic holds its SLO
-/// with slack at the cost of a slightly earlier shed onset.
-fn predicted_wait(chip: &ChipSim, max_batch: usize, max_wait_cycles: u64) -> u64 {
-    let batches_ahead = chip.depth().div_ceil(max_batch) as u64;
-    max_wait_cycles + (batches_ahead + 1) * chip.cost.batch_cycles(max_batch)
-}
-
-/// Route one request among `candidates` at `t`; increments the
-/// winner's `assigned` counter.
-fn route(router: &mut Router, chips: &mut [ChipSim], candidates: &[usize], t: u64) -> usize {
-    let target = router.pick(candidates, chips, t);
-    chips[target].assigned += 1;
-    target
-}
-
-/// Re-shard the pending queue of every chip that is currently drained
-/// or deactivated through the router (called on drain starts,
-/// re-admissions and scale-downs, when the routable set changes).
-/// Re-pushed requests keep their identity and original enqueue cycle
-/// in the records; their batcher deadline restarts at `t`.
-fn reshard(
-    router: &mut Router,
-    chips: &mut [ChipSim],
-    active: &[bool],
-    heap: &mut BinaryHeap<Reverse<(u64, u8, u64)>>,
-    t: u64,
-    max_wait_cycles: u64,
-    probe: &mut Probe,
-) {
-    if !(0..chips.len()).any(|k| active[k] && chips[k].healthy_at(t)) {
-        return; // nowhere better to go — degraded continuity serves in place
-    }
-    let candidates = admissible(chips, active, t);
-    for k in 0..chips.len() {
-        if (active[k] && chips[k].healthy_at(t)) || chips[k].batcher.is_empty() {
-            continue;
-        }
-        let moved = chips[k].batcher.drain_all();
-        for (_, rid) in moved {
-            // the request leaves this chip's assignment ledger so the
-            // deficit-weighted policy restores its fair share once it
-            // re-admits (otherwise phantom assignments starve it)
-            chips[k].assigned -= 1;
-            let target = route(router, chips, &candidates, t);
-            chips[target].batcher.push(t, rid);
-            probe.emit(t, TraceEvent::RequestReshard { id: rid, from: k, to: target });
-            heap.push(Reverse((t + max_wait_cycles, EV_BATCH_DEADLINE, rid as u64)));
-        }
-    }
-}
-
 /// Run the deterministic discrete-event simulation of the whole fleet
 /// in cycle time. Pure: depends only on `engine`'s model/eval data and
 /// `cfg` (not on `cfg.executor_threads`).
@@ -367,430 +273,20 @@ pub fn simulate_fleet(engine: &Engine, cfg: &FleetConfig) -> FleetTimeline {
 /// identical to the untraced path; the probe's flight recorder is
 /// dumped to stderr when an invariant trips (queue deadlock watchdog,
 /// lifecycle dwell violation).
+///
+/// Since the event-sourcing refactor (DESIGN.md §12) this is a thin
+/// driver over [`crate::engine::ClusterEngine`]: every state change
+/// appends a typed event to the run's log, and the trace stream `probe`
+/// sees is a projection of that log. `repro replay` exposes the log,
+/// snapshot/restore and time-travel branching on top of the same core.
 pub fn simulate_fleet_traced(
     engine: &Engine,
     cfg: &FleetConfig,
     probe: &mut Probe,
 ) -> FleetTimeline {
-    assert!(!cfg.chips.is_empty(), "need at least one chip");
-    assert!(cfg.total_requests >= 1, "need at least one request");
-    if cfg.open_loop.is_none() {
-        assert!(
-            cfg.queue_cap >= cfg.clients,
-            "closed-loop pending set (≤ clients) must fit the fleet queue bound"
-        );
-    }
-    let mut geometry = engine.geometry();
-    geometry.batch = cfg.max_batch;
-    let mut chips: Vec<ChipSim> = cfg
-        .chips
-        .iter()
-        .enumerate()
-        .map(|(k, spec)| {
-            ChipSim::build(
-                &engine.params,
-                &geometry,
-                *spec,
-                k,
-                cfg.seed,
-                cfg.faults.as_ref(),
-                cfg.lifecycle,
-                cfg.max_batch,
-                cfg.max_wait_cycles,
-            )
-        })
-        .collect();
-    for (k, chip) in chips.iter().enumerate() {
-        // dwell invariant: `Lifecycle::with_policy` defers re-admits to
-        // `start + min_dwell`, so a short closed episode means the
-        // precomputed health history is corrupt — dump and stop before
-        // the corrupt lifecycle drives routing decisions
-        if let Some((s, e)) = chip.lifecycle.dwell_violation() {
-            eprintln!(
-                "{}",
-                probe.rec.dump(&format!(
-                    "lifecycle dwell violation on chip {k}: episode [{s}, {e}) is shorter \
-                     than the minimum dwell"
-                ))
-            );
-            panic!("lifecycle dwell invariant violated on chip {k}");
-        }
-        crate::serve::emit_fault_history(probe, k, &chip.faults.events);
-    }
-
-    let mut gen = crate::serve::loadgen::LoadGen::new(
-        cfg.seed,
-        cfg.clients,
-        engine.eval.images.len(),
-        cfg.think_cycles,
-        cfg.total_requests,
-    );
-    let mut router = Router::new(cfg.policy);
-    let mut heap: BinaryHeap<Reverse<(u64, u8, u64)>> = BinaryHeap::new();
-    // Open mode precomputes the whole arrival stream (a pure function
-    // of the master seed, independent of service state) and keys each
-    // EV_CLIENT_READY by arrival index; the closed loop keys by client.
-    let open_arrivals: Vec<loadgen::OpenArrival> = match &cfg.open_loop {
-        Some(o) => loadgen::open_arrivals(
-            cfg.seed,
-            loadgen::OPEN_ARRIVAL_STREAM,
-            &o.curve,
-            o.horizon_cycles,
-            engine.eval.images.len(),
-            o.max_arrivals,
-        ),
-        None => Vec::new(),
-    };
-    if cfg.open_loop.is_some() {
-        for (i, a) in open_arrivals.iter().enumerate() {
-            heap.push(Reverse((a.cycle, EV_CLIENT_READY, i as u64)));
-        }
-    } else {
-        for c in 0..cfg.clients {
-            let at = gen.think(c);
-            heap.push(Reverse((at, EV_CLIENT_READY, c as u64)));
-        }
-    }
-    // Autoscale overlay: which chips the router may currently target.
-    // Without an autoscaler every chip is active and every path below
-    // reduces to the pre-autoscale behaviour (degeneracy contract).
-    let initial_active = match &cfg.autoscale {
-        Some(a) => a.min_chips.clamp(1, chips.len()),
-        None => chips.len(),
-    };
-    let mut active: Vec<bool> = (0..chips.len()).map(|k| k < initial_active).collect();
-    let mut last_scale: u64 = 0;
-    let mut scale_events: Vec<FleetEvent> = Vec::new();
-    if let Some(a) = &cfg.autoscale {
-        assert!(a.eval_period_cycles >= 1, "autoscale tick needs a period");
-        heap.push(Reverse((a.eval_period_cycles, EV_SCALE_TICK, 0)));
-    }
-    let mut offered = 0usize;
-    let mut shed_cycles: Vec<u64> = Vec::new();
-    // sheds already counted by a past scale tick (the tick-window marker)
-    let mut shed_seen_by_tick = 0usize;
-    // lifecycle wake-ups: re-shard at drain starts, dispatch+re-shard
-    // at re-admissions
-    for (k, chip) in chips.iter().enumerate() {
-        for &(start, end) in chip.lifecycle.drained_intervals() {
-            heap.push(Reverse((start, EV_CHIP_DRAIN, k as u64)));
-            if end != u64::MAX {
-                heap.push(Reverse((end, EV_CHIP_READMIT, k as u64)));
-            }
-        }
-    }
-
-    let mut jobs: Vec<FleetBatchJob> = Vec::new();
-    let mut requests: Vec<RequestRecord> = Vec::new();
-    let mut pending_total = 0usize;
-    let mut max_pending = 0usize;
-
-    while let Some(Reverse((t, kind, key))) = heap.pop() {
-        match kind {
-            EV_CLIENT_READY if cfg.open_loop.is_some() => {
-                // one open arrival (key = arrival index): admit or shed
-                let arrival = open_arrivals[key as usize];
-                offered += 1;
-                let candidates = admissible(&chips, &active, t);
-                let shed = cfg.admission.as_ref().is_some_and(|adm| {
-                    let best = candidates
-                        .iter()
-                        .map(|&k| predicted_wait(&chips[k], cfg.max_batch, cfg.max_wait_cycles))
-                        .min()
-                        .expect("candidate set is never empty");
-                    best > adm.target_latency_cycles
-                });
-                if shed {
-                    probe.emit(t, TraceEvent::RequestShed { seq: shed_cycles.len() });
-                    shed_cycles.push(t);
-                } else {
-                    let id = requests.len();
-                    requests.push(RequestRecord {
-                        id,
-                        client: 0, // open arrivals have no client identity
-                        image_idx: arrival.image_idx,
-                        enqueue_cycle: t,
-                        start_cycle: 0,
-                        complete_cycle: 0,
-                        batch_id: 0,
-                        slot: 0,
-                    });
-                    let target = route(&mut router, &mut chips, &candidates, t);
-                    chips[target].batcher.push(t, id);
-                    probe.emit(t, TraceEvent::RequestEnqueue { id, chip: target });
-                    pending_total += 1;
-                    max_pending = max_pending.max(pending_total);
-                    assert!(
-                        pending_total <= cfg.queue_cap,
-                        "fleet-wide pending set overflowed its bound"
-                    );
-                    heap.push(Reverse((
-                        t + cfg.max_wait_cycles,
-                        EV_BATCH_DEADLINE,
-                        id as u64,
-                    )));
-                }
-            }
-            EV_CLIENT_READY => {
-                let client = key as usize;
-                if let Some(image_idx) = gen.next_image(client) {
-                    let id = requests.len();
-                    requests.push(RequestRecord {
-                        id,
-                        client,
-                        image_idx,
-                        enqueue_cycle: t,
-                        start_cycle: 0,
-                        complete_cycle: 0,
-                        batch_id: 0,
-                        slot: 0,
-                    });
-                    let candidates = admissible(&chips, &active, t);
-                    let target = route(&mut router, &mut chips, &candidates, t);
-                    chips[target].batcher.push(t, id);
-                    probe.emit(t, TraceEvent::RequestEnqueue { id, chip: target });
-                    pending_total += 1;
-                    max_pending = max_pending.max(pending_total);
-                    assert!(
-                        pending_total <= cfg.queue_cap,
-                        "fleet-wide pending set overflowed its bound"
-                    );
-                    heap.push(Reverse((
-                        t + cfg.max_wait_cycles,
-                        EV_BATCH_DEADLINE,
-                        id as u64,
-                    )));
-                }
-            }
-            EV_LANE_FREE => {
-                let (chip, lane) = ((key >> 32) as usize, (key & 0xFFFF_FFFF) as usize);
-                chips[chip].complete_lane(lane);
-                probe.emit(t, TraceEvent::LaneFree { chip, lane });
-            }
-            EV_CHIP_DRAIN => {
-                probe.emit(t, TraceEvent::ChipDrain { chip: key as usize });
-                reshard(&mut router, &mut chips, &active, &mut heap, t, cfg.max_wait_cycles, probe);
-            }
-            EV_CHIP_READMIT => {
-                probe.emit(t, TraceEvent::ChipReadmit { chip: key as usize });
-                reshard(&mut router, &mut chips, &active, &mut heap, t, cfg.max_wait_cycles, probe);
-            }
-            EV_SCALE_TICK => {
-                let a = cfg.autoscale.as_ref().expect("tick only armed with a policy");
-                let n_active = active.iter().filter(|&&b| b).count();
-                let outstanding: usize = chips.iter().map(|c| c.depth()).sum();
-                // Queued depth alone is blind under admission control:
-                // the controller caps every queue just below the shed
-                // boundary, so a saturated fleet can look calm. Arrivals
-                // shed since the last tick are demand the queues could
-                // not hold — they count as pressure too.
-                let recent_shed = shed_cycles.len() - shed_seen_by_tick;
-                shed_seen_by_tick = shed_cycles.len();
-                let per = (outstanding + recent_shed) / n_active.max(1);
-                probe.emit(t, TraceEvent::AutoscaleTick { active: n_active, pressure: per });
-                if t.saturating_sub(last_scale) >= a.dwell_cycles {
-                    if per > a.up_pending_per_chip && n_active < a.max_chips.min(chips.len()) {
-                        // activate the lowest-index spare chip
-                        if let Some(k) = (0..chips.len()).find(|&k| !active[k]) {
-                            active[k] = true;
-                            last_scale = t;
-                            probe.emit(t, TraceEvent::ScaleUp { chip: k });
-                            scale_events.push(FleetEvent {
-                                cycle: t,
-                                chip: k,
-                                kind: FleetEventKind::ScaledUp,
-                            });
-                        }
-                    } else if per < a.down_pending_per_chip && n_active > a.min_chips.max(1) {
-                        // deactivate the highest-index active chip —
-                        // but only if the remaining active set can
-                        // absorb its queue right now
-                        if let Some(k) = (0..chips.len()).rev().find(|&k| active[k]) {
-                            let rest_serves = (0..chips.len())
-                                .any(|j| j != k && active[j] && chips[j].healthy_at(t));
-                            if rest_serves {
-                                active[k] = false;
-                                last_scale = t;
-                                probe.emit(t, TraceEvent::ScaleDown { chip: k });
-                                scale_events.push(FleetEvent {
-                                    cycle: t,
-                                    chip: k,
-                                    kind: FleetEventKind::ScaledDown,
-                                });
-                                reshard(
-                                    &mut router,
-                                    &mut chips,
-                                    &active,
-                                    &mut heap,
-                                    t,
-                                    cfg.max_wait_cycles,
-                                    probe,
-                                );
-                            }
-                        }
-                    }
-                }
-                // keep ticking while traffic can still arrive or drain
-                let more_arrivals = if cfg.open_loop.is_some() {
-                    offered < open_arrivals.len()
-                } else {
-                    requests.len() < cfg.total_requests
-                };
-                if more_arrivals || outstanding > 0 {
-                    heap.push(Reverse((t + a.eval_period_cycles, EV_SCALE_TICK, 0)));
-                }
-            }
-            _ => {} // deadline: dispatch attempt below
-        }
-        // dispatch whatever is releasable at `t` on every admitted chip
-        // (mirrors `admissible`: active-and-healthy chips, else active,
-        // else everyone — degraded continuity)
-        let any_up = (0..chips.len()).any(|k| active[k] && chips[k].healthy_at(t));
-        for k in 0..chips.len() {
-            if any_up && !(active[k] && chips[k].healthy_at(t)) {
-                continue;
-            }
-            if !any_up && !active[k] {
-                continue;
-            }
-            while !chips[k].free_lanes.is_empty() {
-                let Some(batch) = chips[k].batcher.take(t) else { break };
-                let lane = *chips[k].free_lanes.iter().next().unwrap();
-                chips[k].free_lanes.remove(&lane);
-                let b = batch.len();
-                let start = t;
-                let end = start + chips[k].cost.batch_cycles(b);
-                let epoch_masks = chips[k].faults.masks_at(start);
-                let masks = if b == cfg.max_batch {
-                    Arc::clone(epoch_masks)
-                } else {
-                    Arc::new(epoch_masks.with_fc_rows(b))
-                };
-                let job_id = jobs.len();
-                probe.emit(
-                    start,
-                    TraceEvent::BatchFormed { batch: job_id, chip: k, lane, size: b },
-                );
-                let mut image_idxs = Vec::with_capacity(b);
-                for (slot, (_, rid)) in batch.iter().enumerate() {
-                    let client = {
-                        let r = &mut requests[*rid];
-                        r.start_cycle = start;
-                        r.complete_cycle = end;
-                        r.batch_id = job_id;
-                        r.slot = slot;
-                        image_idxs.push(r.image_idx);
-                        r.client
-                    };
-                    probe.emit(
-                        start,
-                        TraceEvent::RequestDispatch { id: *rid, chip: k, batch: job_id },
-                    );
-                    // completion is fixed at dispatch by the cycle
-                    // model, so the complete event carries the batch end
-                    probe.emit(
-                        end,
-                        TraceEvent::RequestComplete { id: *rid, chip: k, batch: job_id },
-                    );
-                    // only the closed loop re-arms a client; open-loop
-                    // arrivals were all scheduled up front
-                    if cfg.open_loop.is_none() {
-                        let think = gen.think(client);
-                        heap.push(Reverse((end + think, EV_CLIENT_READY, client as u64)));
-                    }
-                }
-                pending_total -= b;
-                chips[k].occupy_lane(lane, b);
-                jobs.push(FleetBatchJob {
-                    chip: k,
-                    job: BatchJob {
-                        id: job_id,
-                        image_idxs,
-                        masks,
-                        start_cycle: start,
-                        end_cycle: end,
-                        lane,
-                    },
-                });
-                heap.push(Reverse((end, EV_LANE_FREE, lane_key(k, lane))));
-            }
-        }
-    }
-
-    if cfg.open_loop.is_some() {
-        assert_eq!(
-            requests.len() + shed_cycles.len(),
-            offered,
-            "every offered arrival is either admitted or shed"
-        );
-        assert!(
-            requests.len() <= cfg.total_requests,
-            "open loop must respect the request budget"
-        );
-    } else {
-        assert_eq!(
-            requests.len(),
-            cfg.total_requests,
-            "closed loop must issue every budgeted request"
-        );
-    }
-    // queue deadlock watchdog: a request the loop never dispatched
-    // means the routing/lifecycle interplay wedged — dump the flight
-    // recorder so the last events before the wedge are visible
-    if requests.iter().any(|r| r.complete_cycle <= r.enqueue_cycle) {
-        eprintln!(
-            "{}",
-            probe.rec.dump("fleet deadlock watchdog: request(s) left unserved")
-        );
-        panic!(
-            "fleet stalled: requests left unserved (every chip drained with \
-             unrepairable faults?) — degraded continuity should prevent this"
-        );
-    }
-    let total_cycles = jobs.iter().map(|j| j.job.end_cycle).max().unwrap_or(0);
-
-    // merge per-chip fault events and lifecycle transitions
-    let mut events: Vec<FleetEvent> = Vec::new();
-    for (k, chip) in chips.iter().enumerate() {
-        for e in &chip.faults.events {
-            let kind = match e.kind {
-                EventKind::FaultArrival(c) => FleetEventKind::FaultArrival(c),
-                EventKind::ScanDetection(c) => FleetEventKind::ScanDetection(c),
-            };
-            events.push(FleetEvent { cycle: e.cycle, chip: k, kind });
-        }
-        for &(start, end) in chip.lifecycle.drained_intervals() {
-            events.push(FleetEvent {
-                cycle: start,
-                chip: k,
-                kind: FleetEventKind::Drained,
-            });
-            if end != u64::MAX {
-                events.push(FleetEvent {
-                    cycle: end,
-                    chip: k,
-                    kind: FleetEventKind::Readmitted,
-                });
-            }
-        }
-    }
-    events.extend(scale_events);
-    events.sort_by_key(|e| (e.cycle, e.chip, e.kind.sort_key()));
-    let unrepaired = chips.iter().map(|c| c.faults.unrepaired).sum();
-    let offered = if cfg.open_loop.is_some() { offered } else { requests.len() };
-
-    FleetTimeline {
-        jobs,
-        requests,
-        total_cycles,
-        events,
-        unrepaired,
-        max_pending,
-        chip_state: chips,
-        offered,
-        shed_cycles,
-        initial_active,
-    }
+    let mut core = crate::engine::ClusterEngine::new(engine, cfg, probe);
+    core.run(probe);
+    core.finish(probe)
 }
 
 /// End to end: simulate the fleet timeline, execute every chip's
@@ -872,6 +368,7 @@ pub fn run_traced(
 mod tests {
     use super::*;
     use crate::array::Dims;
+    use crate::serve::scan_agent::EventKind;
     use crate::serve::{simulate_timeline, ServeConfig};
 
     fn serve_cfg() -> ServeConfig {
@@ -1206,6 +703,56 @@ mod tests {
                 r.complete_cycle - r.enqueue_cycle
             );
         }
+    }
+
+    #[test]
+    fn admission_prices_the_routed_chip_on_a_heterogeneous_fleet() {
+        let engine = Engine::builtin();
+        // One big fast chip next to a small slow one. On such a fleet
+        // the JSQ depth minimum is not the predicted-wait minimum, so
+        // the old controller — which priced the *cheapest* candidate
+        // and then let the router pick freely — could admit a request
+        // the router parks on the slow chip past the SLO. The fixed
+        // controller routes first and prices the routed chip, so every
+        // admitted request must hold its own chip's bound.
+        let mut cfg = open_cfg(
+            2,
+            RoutingPolicy::JoinShortestQueue,
+            RateCurve::Constant { per_kcycle: 5.0 },
+        );
+        cfg.chips = vec![
+            ChipSpec { dims: Dims::new(16, 16), lanes: 2 },
+            ChipSpec { dims: Dims::new(8, 8), lanes: 2 },
+        ];
+        let target = 40_000;
+        cfg.admission = Some(AdmissionConfig { target_latency_cycles: target });
+        let t = simulate_fleet(&engine, &cfg);
+        assert!(!t.shed_cycles.is_empty(), "overload must shed");
+        assert!(!t.requests.is_empty(), "shedding must not starve admission");
+        assert_eq!(t.offered, t.requests.len() + t.shed_cycles.len());
+        let service: Vec<u64> = cfg
+            .chips
+            .iter()
+            .map(|s| {
+                crate::serve::CostModel::of(&engine.params, s.dims).batch_cycles(cfg.max_batch)
+            })
+            .collect();
+        assert!(service[0] < service[1], "16×16 must out-run 8×8 per batch");
+        let mut served = vec![0usize; cfg.chips.len()];
+        for r in &t.requests {
+            let chip = t.jobs[r.batch_id].chip;
+            served[chip] += 1;
+            assert!(
+                r.complete_cycle - r.enqueue_cycle <= target + 2 * service[chip],
+                "request {} on chip {chip}: latency {} broke that chip's admission bound",
+                r.id,
+                r.complete_cycle - r.enqueue_cycle
+            );
+        }
+        assert!(
+            served.iter().all(|&n| n > 0),
+            "both chip classes must serve admitted traffic: {served:?}"
+        );
     }
 
     #[test]

@@ -75,6 +75,16 @@ impl Router {
         self.policy
     }
 
+    /// The round-robin cursor — serialized by the engine's snapshots.
+    pub fn cursor(&self) -> u64 {
+        self.cursor
+    }
+
+    /// Restore a serialized cursor position.
+    pub fn set_cursor(&mut self, cursor: u64) {
+        self.cursor = cursor;
+    }
+
     /// Pick the chip for one request at `now`. `candidates` is the
     /// non-empty, ascending list of admissible chip ids (the healthy
     /// set, or every chip when none is healthy — degraded continuity).

@@ -37,6 +37,9 @@
 //! work-stealing executor ([`serve::executor`]: per-worker deques,
 //! per-chip affinity, zero-copy image access, transposed-mask
 //! caching), measured wall-clock by `repro perf` (DESIGN.md §8).
+//! The fleet loop itself runs on [`engine`] — an event-sourced
+//! command/event-log core with snapshot/restore and time-travel
+//! branching (`repro replay`, DESIGN.md §12).
 //!
 //! Start at [`coordinator`] for the experiment registry, or run
 //! `cargo run --release -- list`.
@@ -45,6 +48,7 @@ pub mod area;
 pub mod array;
 pub mod benchkit;
 pub mod coordinator;
+pub mod engine;
 pub mod faults;
 pub mod fleet;
 pub mod hyca;

@@ -25,6 +25,15 @@
 //!                                #   over the trace bus; the full run writes
 //!                                #   BENCH_audit.json (run from repo root),
 //!                                #   a single preset prints tables only
+//! repro replay [scenario] [flags]
+//!                                # event-sourced replay (default scenario:
+//!                                #   long_diurnal): run a fleet preset on the
+//!                                #   cluster engine, snapshot on the [engine]
+//!                                #   cadence, prove resume + fork-free branch
+//!                                #   byte-identical at runtime; writes
+//!                                #   BENCH_replay.json. With --run-dir the
+//!                                #   event log + snapshots persist, and a
+//!                                #   rerun crash-restarts from them
 //! repro diff <old.json> <new.json>
 //!                                # compare two BENCH baselines under the
 //!                                #   schema's typed tolerance rules; exit 1
@@ -50,6 +59,12 @@
 //! fleet-only flags:
 //!        --chips N     restrict the fleet grid to one cluster size
 //!                      (default sweep: {1, 2, 4, 8} chips × routing policy)
+//! replay-only flags:
+//!        --from-cycle N  resume/fork from the latest snapshot at or before N
+//!        --branch FILE   time-travel branch: replay the [branch] overrides in
+//!                        FILE from the fork, diff through the span ledger
+//!        --run-dir DIR   persist the event log + snapshots to DIR, or
+//!                        crash-restart from a DIR that already holds them
 //! ```
 
 use anyhow::{bail, Context, Result};
@@ -379,6 +394,96 @@ fn cmd_audit(rest: &[String]) -> Result<()> {
     Ok(())
 }
 
+fn replay_flag_specs() -> Vec<FlagSpec> {
+    let mut specs = flag_specs();
+    specs.push(FlagSpec {
+        name: "workers",
+        takes_value: true,
+        help: "executor thread-pool width (metrics identical at any value)",
+    });
+    specs.push(FlagSpec {
+        name: "smoke",
+        takes_value: false,
+        help: "reduced horizon for CI (the smoke side of every [engine] knob)",
+    });
+    specs.push(FlagSpec {
+        name: "from-cycle",
+        takes_value: true,
+        help: "resume/fork from the latest snapshot at or before this cycle",
+    });
+    specs.push(FlagSpec {
+        name: "branch",
+        takes_value: true,
+        help: "replay a branched timeline from the [branch] overrides in this file",
+    });
+    specs.push(FlagSpec {
+        name: "run-dir",
+        takes_value: true,
+        help: "persist event-log + snapshot artifacts, or crash-restart from them",
+    });
+    specs
+}
+
+fn cmd_replay(rest: &[String]) -> Result<()> {
+    let args = Args::parse(rest, &replay_flag_specs())?;
+    let mut opts = opts_from(&args)?;
+    opts.threads = args.get_parse("workers", opts.threads)?;
+    let smoke = args.has("smoke") || opts.fast;
+    let target = args
+        .positionals
+        .first()
+        .map(|s| s.as_str())
+        .unwrap_or(coordinator::exp_replay::DEFAULT_PRESET);
+    let from_cycle: Option<u64> = match args.get("from-cycle") {
+        Some(_) => Some(args.get_parse("from-cycle", 0u64)?),
+        None => None,
+    };
+    let branch = match args.get("branch") {
+        Some(path) => {
+            let text = std::fs::read_to_string(path)
+                .with_context(|| format!("reading branch overrides {path}"))?;
+            Some(
+                hyca::engine::BranchOverrides::parse(&text)
+                    .map_err(|e| anyhow::anyhow!("parsing {path}: {e}"))?,
+            )
+        }
+        None => None,
+    };
+    eprintln!(
+        "[repro] replay {target} — {} run (seed={:#x}, workers={}{}{})",
+        if smoke { "smoke" } else { "full" },
+        opts.seed,
+        opts.threads,
+        match from_cycle {
+            Some(n) => format!(", from-cycle={n}"),
+            None => String::new(),
+        },
+        match args.get("run-dir") {
+            Some(d) => format!(", run-dir={d}"),
+            None => String::new(),
+        }
+    );
+    let t0 = std::time::Instant::now();
+    let (tables, json) = coordinator::exp_replay::run_cli(
+        &opts,
+        smoke,
+        target,
+        from_cycle,
+        branch,
+        args.get("run-dir"),
+    )?;
+    report::emit(&opts.out_dir, "replay", &tables)?;
+    // Like the other bench baselines, the file lands in the current
+    // directory — run from the repo root. Byte-identical whether the
+    // run was uninterrupted or crash-restarted from --run-dir.
+    std::fs::write("BENCH_replay.json", &json).context("writing BENCH_replay.json")?;
+    eprintln!(
+        "[repro] replay done in {:.1}s — baseline written to BENCH_replay.json",
+        t0.elapsed().as_secs_f64()
+    );
+    Ok(())
+}
+
 fn cmd_diff(rest: &[String]) -> Result<()> {
     let args = Args::parse(rest, &[])?;
     let [old_path, new_path] = args.positionals.as_slice() else {
@@ -465,7 +570,7 @@ fn main() -> Result<()> {
                  JSON of the canonical scenario\n  --chips <value>    \
                  fleet only: restrict the grid to one cluster size\n",
                 usage(
-                    "repro <list|exp|all|serve|fleet|scenario|traffic|perf|audit|diff|info>",
+                    "repro <list|exp|all|serve|fleet|scenario|traffic|perf|audit|replay|diff|info>",
                     "HyCA reproduction CLI",
                     &flag_specs()
                 )
@@ -483,6 +588,7 @@ fn main() -> Result<()> {
         "traffic" => cmd_traffic(rest)?,
         "perf" => cmd_perf(rest)?,
         "audit" => cmd_audit(rest)?,
+        "replay" => cmd_replay(rest)?,
         "diff" => cmd_diff(rest)?,
         "exp" => {
             let args = Args::parse(rest, &flag_specs())?;

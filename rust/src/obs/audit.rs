@@ -306,6 +306,8 @@ pub fn rules_for(schema: &str) -> &'static [Rule] {
                 why: "machine identity, not a metric",
             },
         ],
+        // all-integer + digest schema: every field compares exactly
+        "hyca-replay-bench-v1" => &[],
         "hyca-audit-bench-v1" => &[
             Rule {
                 path: "presets.*.chips.*.utilization",

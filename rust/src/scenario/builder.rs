@@ -21,8 +21,8 @@ use crate::fleet::RoutingPolicy;
 use crate::serve::loadgen::RateCurve;
 
 use super::{
-    AutoscalePolicy, ChipDef, ClientLoad, Driver, FaultEnv, Knob, Redundancy, RequestBudget,
-    ScenarioError, ScenarioSpec, SloPolicy, SweepAxis, TrafficMode, Workload,
+    AutoscalePolicy, ChipDef, ClientLoad, Driver, EnginePolicy, FaultEnv, Knob, Redundancy,
+    RequestBudget, ScenarioError, ScenarioSpec, SloPolicy, SweepAxis, TrafficMode, Workload,
 };
 
 /// Builder over [`ScenarioSpec`] with the registry's shared defaults:
@@ -61,6 +61,7 @@ impl ScenarioBuilder {
                 router: RoutingPolicy::RoundRobin,
                 lifecycle: LifecyclePolicy::NEVER,
                 slo: None,
+                engine: None,
                 sweep: Vec::new(),
             },
         }
@@ -227,6 +228,15 @@ impl ScenarioBuilder {
             dwell_cycles,
             eval_period_cycles,
         });
+        self
+    }
+
+    /// Snapshot cadence of the event-sourced engine (`repro replay`):
+    /// capture a full-state snapshot every so many cycles (full /
+    /// `--smoke`). Without this the replay driver falls back to a
+    /// horizon-derived default.
+    pub fn snapshot_every(mut self, full: u64, smoke: u64) -> Self {
+        self.spec.engine = Some(EnginePolicy { snapshot_every_cycles: Knob::split(full, smoke) });
         self
     }
 

@@ -40,6 +40,9 @@
 //! admission = on | off
 //! autoscale = <min>..<max> up=<n> down=<n> dwell=<u64> period=<u64>
 //!
+//! [engine]                           # optional section = no snapshots
+//! snapshot_every_cycles = <u64> [smoke <u64>]
+//!
 //! [redundancy]
 //! group_width = <n>
 //! fpt_capacity = <n>
@@ -63,10 +66,10 @@
 //! rate_scale = <f64>,... [smoke ...]  # open mode only
 //! ```
 //!
-//! New-in-v1.1 keys (`mode`, `spatial`, the `[slo]` section) are
-//! rendered **only when they differ from their defaults**, so the
-//! canonical strings — and therefore the spec hashes — of pre-existing
-//! specs are unchanged.
+//! New-in-v1.1 keys (`mode`, `spatial`, the `[slo]` section) and the
+//! v1.2 `[engine]` section are rendered **only when they differ from
+//! their defaults**, so the canonical strings — and therefore the spec
+//! hashes — of pre-existing specs are unchanged.
 
 use crate::array::Dims;
 use crate::faults::Spatial;
@@ -76,8 +79,8 @@ use crate::serve::loadgen::RateCurve;
 
 use super::builder::ScenarioBuilder;
 use super::{
-    AutoscalePolicy, ChipDef, ClientLoad, Driver, FaultEnv, Knob, ScenarioError, ScenarioSpec,
-    SloPolicy, SweepAxis, TrafficMode,
+    AutoscalePolicy, ChipDef, ClientLoad, Driver, EnginePolicy, FaultEnv, Knob, ScenarioError,
+    ScenarioSpec, SloPolicy, SweepAxis, TrafficMode,
 };
 
 fn knob_str<T: std::fmt::Display + PartialEq>(k: &Knob<T>) -> String {
@@ -196,6 +199,13 @@ pub fn to_canonical_string(spec: &ScenarioSpec) -> String {
                 a.eval_period_cycles
             ));
         }
+    }
+    if let Some(eng) = &spec.engine {
+        s.push_str("\n[engine]\n");
+        s.push_str(&format!(
+            "snapshot_every_cycles = {}\n",
+            knob_str(&eng.snapshot_every_cycles)
+        ));
     }
     if !spec.sweep.is_empty() {
         s.push_str("\n[sweep]\n");
@@ -336,6 +346,8 @@ pub fn parse(text: &str) -> Result<ScenarioSpec, ScenarioError> {
     let mut slo_target: Option<u64> = None;
     let mut slo_admission = true;
     let mut slo_autoscale: Option<AutoscalePolicy> = None;
+    let mut saw_engine = false;
+    let mut engine_snapshot: Option<Knob<u64>> = None;
 
     for (i, raw) in text.lines().enumerate() {
         let line = i + 1;
@@ -357,8 +369,17 @@ pub fn parse(text: &str) -> Result<ScenarioSpec, ScenarioError> {
             continue;
         }
         if let Some(sec) = l.strip_prefix('[').and_then(|r| r.strip_suffix(']')) {
-            const SECTIONS: [&str; 8] =
-                ["meta", "topology", "workload", "faults", "redundancy", "policy", "slo", "sweep"];
+            const SECTIONS: [&str; 9] = [
+                "meta",
+                "topology",
+                "workload",
+                "faults",
+                "redundancy",
+                "policy",
+                "slo",
+                "engine",
+                "sweep",
+            ];
             if !SECTIONS.contains(&sec) {
                 return Err(perr(line, format!("unknown section [{sec}]")));
             }
@@ -372,6 +393,9 @@ pub fn parse(text: &str) -> Result<ScenarioSpec, ScenarioError> {
             }
             if sec == "slo" {
                 saw_slo = true;
+            }
+            if sec == "engine" {
+                saw_engine = true;
             }
             section = Some(sec);
             continue;
@@ -582,6 +606,9 @@ pub fn parse(text: &str) -> Result<ScenarioSpec, ScenarioError> {
                     eval_period_cycles: period.ok_or_else(|| miss("period"))?,
                 });
             }
+            ("engine", "snapshot_every_cycles") => {
+                engine_snapshot = Some(parse_knob(value, line, parse_u64)?);
+            }
             ("sweep", key) => {
                 let axis = match key {
                     "lanes" => SweepAxis::Lanes(parse_knob(value, line, |v, l| {
@@ -629,6 +656,12 @@ pub fn parse(text: &str) -> Result<ScenarioSpec, ScenarioError> {
                 .ok_or_else(|| perr(0, "[slo] needs target_latency_cycles"))?,
             admission: slo_admission,
             autoscale: slo_autoscale,
+        });
+    }
+    if saw_engine {
+        spec.engine = Some(EnginePolicy {
+            snapshot_every_cycles: engine_snapshot
+                .ok_or_else(|| perr(0, "[engine] needs snapshot_every_cycles"))?,
         });
     }
     spec.faults = faults;
@@ -787,6 +820,33 @@ chip = 16x16 lanes=1
         assert!(!canon.contains("mode ="), "{canon}");
         assert!(!canon.contains("spatial"), "{canon}");
         assert!(!canon.contains("[slo]"), "{canon}");
+        assert!(!canon.contains("[engine]"), "{canon}");
+    }
+
+    #[test]
+    fn engine_section_round_trips_and_is_validated() {
+        let base = "scenario \"x\"\n[topology]\nchip = 8x8 lanes=2\n";
+        let spec = ScenarioSpec::parse(&format!(
+            "{base}[engine]\nsnapshot_every_cycles = 20000 smoke 4000\n"
+        ))
+        .unwrap();
+        assert_eq!(
+            spec.engine.unwrap().snapshot_every_cycles,
+            Knob::split(20_000, 4_000)
+        );
+        let canon = spec.to_canonical_string();
+        let back = ScenarioSpec::parse(&canon).unwrap();
+        assert_eq!(back, spec);
+        assert_eq!(back.to_canonical_string(), canon);
+        // an empty [engine] section has no cadence to snapshot at
+        let e = ScenarioSpec::parse(&format!("{base}[engine]\n")).unwrap_err();
+        assert!(matches!(e, ScenarioError::Parse { .. }), "{e}");
+        // zero cadence is a typed validation error
+        let e = ScenarioSpec::parse(&format!(
+            "{base}[engine]\nsnapshot_every_cycles = 0\n"
+        ))
+        .unwrap_err();
+        assert_eq!(e, ScenarioError::ZeroSnapshotPeriod);
     }
 
     #[test]

@@ -212,6 +212,16 @@ pub struct AutoscalePolicy {
     pub eval_period_cycles: u64,
 }
 
+/// Event-sourced engine policy (DESIGN.md §12, `repro replay`): how
+/// often the [`crate::engine::ClusterEngine`] captures a full-state
+/// snapshot while running. Snapshots bound crash-restart replay work
+/// and are the fork points for time-travel branches.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct EnginePolicy {
+    /// Cycles between snapshot captures (full / `--smoke`).
+    pub snapshot_every_cycles: Knob<u64>,
+}
+
 /// Per-spec service-level objective: the latency target the admission
 /// controller sheds against, plus the optional autoscaler.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -266,6 +276,8 @@ pub struct ScenarioSpec {
     pub lifecycle: LifecyclePolicy,
     /// SLO target + admission + autoscaling (fleet driver only).
     pub slo: Option<SloPolicy>,
+    /// Event-sourced engine snapshot cadence (`repro replay`).
+    pub engine: Option<EnginePolicy>,
     /// Grid axes, first axis outermost.
     pub sweep: Vec<SweepAxis>,
 }
@@ -331,6 +343,8 @@ pub enum ScenarioError {
     ZeroAutoscalePeriod,
     #[error("sweep axis rate_scale requires open traffic mode")]
     RateScaleWithoutOpen,
+    #[error("engine snapshot_every_cycles must be at least 1 in both full and smoke modes")]
+    ZeroSnapshotPeriod,
     #[error("line {line}: {msg}")]
     Parse { line: usize, msg: String },
 }
@@ -419,6 +433,11 @@ impl ScenarioSpec {
                 if a.eval_period_cycles == 0 {
                     return Err(ScenarioError::ZeroAutoscalePeriod);
                 }
+            }
+        }
+        if let Some(eng) = &self.engine {
+            if eng.snapshot_every_cycles.full == 0 || eng.snapshot_every_cycles.smoke == 0 {
+                return Err(ScenarioError::ZeroSnapshotPeriod);
             }
         }
         if let Some(env) = &self.faults {

@@ -34,7 +34,13 @@
 //!   controller sheds to protect the SLO and the autoscaler grows
 //!   2→4 chips and shrinks back after the spike drains;
 //! * `open_diurnal` — 4 chips under a sinusoidal day/night rate with
-//!   the autoscaler tracking the curve between 2 and 4 active chips.
+//!   the autoscaler tracking the curve between 2 and 4 active chips;
+//! * `long_diurnal` — the same shape stretched to a ≥100M-cycle
+//!   horizon (six slow day/night periods at a proportionally lower
+//!   rate) with an `[engine]` snapshot cadence: the crash-restart /
+//!   time-travel showcase for `repro replay` (DESIGN.md §12). Too long
+//!   to re-run from cycle 0 casually — in smoke form CI exercises it
+//!   only through snapshot/resume.
 //!
 //! Four of these (`degraded_continuity`, `open_steady`, `flash_crowd`,
 //! `open_diurnal`) are additionally replayed through the span ledger by
@@ -61,6 +67,7 @@ pub fn names() -> &'static [&'static str] {
         "open_steady",
         "flash_crowd",
         "open_diurnal",
+        "long_diurnal",
     ]
 }
 
@@ -76,6 +83,7 @@ pub fn preset(name: &str) -> Option<ScenarioSpec> {
         "open_steady" => open_steady(),
         "flash_crowd" => flash_crowd(),
         "open_diurnal" => open_diurnal(),
+        "long_diurnal" => long_diurnal(),
         _ => return None,
     };
     Some(spec.expect("preset specs validate by construction"))
@@ -232,6 +240,33 @@ fn open_diurnal() -> Built {
         .build()
 }
 
+fn long_diurnal() -> Built {
+    // open_diurnal stretched three orders of magnitude in time: six
+    // 20M-cycle day/night periods over a 120M-cycle horizon, offered
+    // rate scaled down (0.03/kcycle ≈ 3600 arrivals full, ≈ 90 smoke)
+    // so the request budget stays bench-sized while the *cycle* span
+    // is deep enough that re-running from cycle 0 is the expensive
+    // path snapshots exist to avoid.
+    ScenarioBuilder::new("long_diurnal")
+        .chips(4, 8, 8, 2)
+        .router(RoutingPolicy::JoinShortestQueue)
+        .open_mode(
+            RateCurve::Diurnal {
+                base_per_kcycle: 0.03,
+                amplitude: 0.6,
+                period_cycles: 20_000_000,
+            },
+            120_000_000,
+            3_000_000,
+        )
+        .requests(4096, 512)
+        .windows(8)
+        .slo(60_000)
+        .autoscale(2, 4, 10, 4, 20_000, 4_000)
+        .snapshot_every(15_000_000, 400_000)
+        .build()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -257,6 +292,28 @@ mod tests {
         assert_eq!(preset("open_steady").unwrap().driver, Driver::Fleet);
         assert_eq!(preset("flash_crowd").unwrap().driver, Driver::Fleet);
         assert_eq!(preset("open_diurnal").unwrap().driver, Driver::Fleet);
+        assert_eq!(preset("long_diurnal").unwrap().driver, Driver::Fleet);
+    }
+
+    #[test]
+    fn long_diurnal_is_a_snapshot_scale_scenario() {
+        let spec = preset("long_diurnal").unwrap();
+        assert!(spec.workload.mode.is_open());
+        let crate::scenario::TrafficMode::Open { horizon_cycles, .. } = spec.workload.mode else {
+            unreachable!()
+        };
+        assert!(
+            horizon_cycles.full >= 100_000_000,
+            "the replay showcase needs a ≥100M-cycle horizon (got {})",
+            horizon_cycles.full
+        );
+        // the snapshot cadence is spec data, and it divides the run
+        // into several resumable segments in both modes
+        let every = spec.engine.expect("long_diurnal sets [engine]").snapshot_every_cycles;
+        assert!(every.full >= 1 && horizon_cycles.full / every.full >= 4);
+        assert!(every.smoke >= 1 && horizon_cycles.smoke / every.smoke >= 4);
+        assert_eq!(spec.cells(false).len(), 1);
+        assert_eq!(spec.cells(true).len(), 1);
     }
 
     #[test]

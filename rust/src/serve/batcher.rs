@@ -72,6 +72,20 @@ impl<T> Batcher<T> {
         self.pending.drain(..).collect()
     }
 
+    /// The pending queue as `(enqueue_cycle, item)` pairs in FIFO
+    /// order — serialized by the engine's snapshots.
+    pub fn pending_entries(&self) -> impl Iterator<Item = &(u64, T)> {
+        self.pending.iter()
+    }
+
+    /// Replace the pending queue with serialized entries (which must
+    /// be in non-decreasing cycle order, as `push` would have left
+    /// them).
+    pub fn restore_pending(&mut self, entries: Vec<(u64, T)>) {
+        debug_assert!(entries.windows(2).all(|w| w[0].0 <= w[1].0));
+        self.pending = entries.into();
+    }
+
     /// Release a batch at `cycle` if a trigger condition holds: size
     /// (`pending ≥ max_batch`) or deadline (oldest waited `max_wait`).
     /// Returns up to `max_batch` requests in FIFO order with their

@@ -185,6 +185,27 @@ impl LoadGen {
         self.issued
     }
 
+    /// Serialized generator state: per-client `(state, inc)` PCG pairs
+    /// plus the issued counter — everything a resumed run needs to
+    /// continue every client's stream exactly where it stopped.
+    pub fn state_parts(&self) -> (Vec<(u64, u64)>, usize) {
+        (
+            self.per_client.iter().map(|r| r.state_parts()).collect(),
+            self.issued,
+        )
+    }
+
+    /// Restore from [`LoadGen::state_parts`] output. The client count
+    /// must match the generator's construction.
+    pub fn restore(&mut self, clients: Vec<(u64, u64)>, issued: usize) {
+        assert_eq!(clients.len(), self.per_client.len(), "client count mismatch");
+        self.per_client = clients
+            .into_iter()
+            .map(|(state, inc)| Pcg32::from_parts(state, inc))
+            .collect();
+        self.issued = issued;
+    }
+
     /// Draw the next request's image index for `client`, or `None` once
     /// the run's request budget is exhausted (the client retires).
     pub fn next_image(&mut self, client: usize) -> Option<usize> {

@@ -67,6 +67,17 @@ impl Pcg32 {
         Self::new(seed, stream)
     }
 
+    /// The raw `(state, inc)` pair — the engine's snapshots serialize
+    /// generator positions so a resumed run continues the exact stream.
+    pub fn state_parts(&self) -> (u64, u64) {
+        (self.state, self.inc)
+    }
+
+    /// Rebuild a generator from a serialized `(state, inc)` pair.
+    pub fn from_parts(state: u64, inc: u64) -> Self {
+        Self { state, inc }
+    }
+
     /// Next raw 32-bit output.
     #[inline]
     pub fn next_u32(&mut self) -> u32 {

@@ -786,6 +786,112 @@ fn prop_tracing_is_inert_and_deterministic() {
 }
 
 #[test]
+fn prop_snapshot_resume_equals_the_uninterrupted_run() {
+    // The event-sourcing contract (DESIGN.md §12): for random fleet
+    // configurations and a random snapshot cadence, resuming from any
+    // captured snapshot and replaying the rest of the run is
+    // byte-identical to the uninterrupted run — same event-log tail,
+    // same request records, same dispatched batches (mask epochs
+    // included) — and the snapshot byte format round-trips while its
+    // FNV-1a integrity hash rejects a random single-bit flip.
+    use hyca::engine::{ClusterEngine, Snapshot};
+    use hyca::obs::{recorder, FlightRecorder, NullSink, Probe};
+    check("snapshot/resume ≡ full run", 6, |g| {
+        let engine = std::sync::Arc::new(hyca::inference::Engine::builtin());
+        let n_chips = g.usize_in(1, 4);
+        let clients = g.usize_in(1, 3) * n_chips;
+        let faults = if g.bool(0.4) {
+            Some(hyca::serve::FaultPlan {
+                mean_interarrival_cycles: g.usize_in(2_000, 30_000) as f64,
+                horizon_cycles: g.usize_in(0, 60_000) as u64,
+                scan_period_cycles: g.usize_in(1_000, 8_000) as u64,
+                group_width: 8,
+                fpt_capacity: g.usize_in(1, 8),
+                max_arrivals: g.usize_in(0, 6),
+                spatial: if g.bool(0.5) {
+                    hyca::faults::Spatial::Clustered
+                } else {
+                    hyca::faults::Spatial::Random
+                },
+            })
+        } else {
+            None
+        };
+        let cfg = hyca::fleet::FleetConfig {
+            seed: g.usize_in(0, 1 << 20) as u64,
+            chips: vec![
+                hyca::fleet::ChipSpec {
+                    dims: Dims::new(8, 8),
+                    lanes: g.usize_in(1, 3),
+                };
+                n_chips
+            ],
+            policy: *g.choose(&hyca::fleet::RoutingPolicy::all()),
+            max_batch: g.usize_in(1, 5),
+            max_wait_cycles: g.usize_in(0, 10_000) as u64,
+            clients,
+            think_cycles: g.usize_in(0, 1_000) as u64,
+            total_requests: g.usize_in(8, 8 * n_chips.max(2)),
+            queue_cap: clients,
+            executor_threads: 1,
+            windows: 4,
+            faults,
+            lifecycle: hyca::fleet::LifecyclePolicy::NEVER,
+            open_loop: None,
+            admission: None,
+            autoscale: None,
+        };
+        let mut rec = FlightRecorder::new(recorder::DEFAULT_CAPACITY);
+        let mut sink = NullSink;
+        let mut probe = Probe { sink: &mut sink, rec: &mut rec };
+        let mut core = ClusterEngine::new(&engine, &cfg, &mut probe);
+        let every = g.usize_in(1, 25) as u64 * 1_000;
+        let snaps = core.run_with_snapshots(&mut probe, every);
+        let log = core.log().to_vec();
+        let base = core.finish(&mut probe);
+        for snap in &snaps {
+            // byte round-trip + corruption detection
+            let bytes = snap.to_bytes();
+            assert_eq!(&Snapshot::from_bytes(&bytes).expect("round-trip"), snap);
+            let bit = g.usize_in(0, bytes.len() * 8 - 1);
+            let mut bad = bytes.clone();
+            bad[bit / 8] ^= 1 << (bit % 8);
+            assert!(
+                Snapshot::from_bytes(&bad).is_err(),
+                "single-bit flip at bit {bit} went undetected"
+            );
+            // resume ≡ full run, event-for-event and job-for-job
+            let mut rec2 = FlightRecorder::new(recorder::DEFAULT_CAPACITY);
+            let mut sink2 = NullSink;
+            let mut probe2 = Probe { sink: &mut sink2, rec: &mut rec2 };
+            let mut resumed = ClusterEngine::resume(&engine, &cfg, snap).expect("resume");
+            resumed.run(&mut probe2);
+            let off = snap.events_logged as usize;
+            assert_eq!(
+                resumed.log(),
+                &log[off..],
+                "tail diverged resuming @{} (every={every})",
+                snap.label_cycle
+            );
+            let t = resumed.finish(&mut probe2);
+            assert_eq!(t.requests, base.requests);
+            assert_eq!(t.total_cycles, base.total_cycles);
+            assert_eq!(t.events, base.events);
+            assert_eq!(t.jobs.len(), base.jobs.len());
+            for (r, b) in t.jobs.iter().zip(&base.jobs) {
+                assert_eq!((r.chip, r.job.id, r.job.lane), (b.chip, b.job.id, b.job.lane));
+                assert_eq!(r.job.image_idxs, b.job.image_idxs);
+                assert_eq!(
+                    (r.job.start_cycle, r.job.end_cycle),
+                    (b.job.start_cycle, b.job.end_cycle)
+                );
+                assert_eq!(*r.job.masks, *b.job.masks, "mask epochs diverged");
+            }
+        }
+    });
+}
+
+#[test]
 fn prop_one_chip_fleet_degenerates_to_serve() {
     // The fleet degeneracy contract: for random serving configurations
     // — load shape, batcher settings, lanes, and optional mid-run

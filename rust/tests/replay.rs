@@ -1,0 +1,248 @@
+//! Event-sourcing acceptance tests (`repro replay`, DESIGN.md §12).
+//!
+//! 1. **Resume identity**: `resume(snapshot, log_tail)` is
+//!    byte-identical to the uninterrupted run — from *every* snapshot
+//!    boundary, on an open-loop diurnal scenario and on a closed-loop
+//!    fault/drain scenario (mask epochs included).
+//! 2. **Golden determinism**: `BENCH_replay.json` is a pure function
+//!    of the master seed — byte-identical at any `--workers` value.
+//! 3. **Branch identity**: a fork-free branch reproduces the base run
+//!    bit-for-bit; a fault-override branch shares the pre-fork prefix
+//!    and its span-ledger divergence lands at or after the fork.
+//! 4. **Integrity**: the snapshot byte format round-trips, and the
+//!    FNV-1a integrity hash rejects corruption; the event-log codec
+//!    round-trips and truncation recovers the longest valid prefix.
+
+use hyca::coordinator::{exp_replay, RunOpts};
+use hyca::engine::{
+    decode_log, encode_log, BranchOverrides, ClusterEngine, Snapshot, SnapshotError,
+};
+use hyca::inference::Engine;
+use hyca::obs::{recorder, FlightRecorder, NullSink, Probe};
+
+const SEED: u64 = 0xC0FFEE;
+
+fn opts(seed: u64, threads: usize) -> RunOpts {
+    RunOpts {
+        seed,
+        threads,
+        out_dir: std::env::temp_dir().join("hyca_replay_results"),
+        builtin_model: true,
+        ..RunOpts::default()
+    }
+}
+
+#[test]
+fn resume_from_every_snapshot_is_byte_identical() {
+    let engine = Engine::builtin();
+    // one open-loop scenario with autoscaling (the canonical replay
+    // preset, smoke horizon) and one closed-loop scenario with fault
+    // episodes + drain/re-admit, so resumed mask epochs are exercised
+    for (preset, every) in [("long_diurnal", 0u64), ("degraded_continuity", 10_000)] {
+        let spec = exp_replay::replay_spec(preset).unwrap();
+        let cadence = if every == 0 { exp_replay::snapshot_cadence(&spec, true) } else { every };
+        let cfg = exp_replay::replay_config(&spec, SEED, true, 1);
+        let base = exp_replay::run_base(&engine, &cfg, cadence);
+        assert!(
+            base.snaps.len() >= 2,
+            "{preset}: need several snapshot boundaries, got {}",
+            base.snaps.len()
+        );
+        for snap in &base.snaps {
+            // hard-fails unless the replayed tail equals the
+            // uninterrupted log tail and the digests match
+            exp_replay::resume_and_verify(&engine, &cfg, snap, &base)
+                .unwrap_or_else(|e| panic!("{preset}: {e}"));
+        }
+    }
+}
+
+#[test]
+fn resumed_timeline_matches_piecewise_including_masks() {
+    let engine = Engine::builtin();
+    let spec = exp_replay::replay_spec("degraded_continuity").unwrap();
+    let cfg = exp_replay::replay_config(&spec, SEED, true, 1);
+    let base = exp_replay::run_base(&engine, &cfg, 10_000);
+    let snap = &base.snaps[base.snaps.len() / 2];
+    let mut core = ClusterEngine::resume(&engine, &cfg, snap).unwrap();
+    let mut rec = FlightRecorder::new(recorder::DEFAULT_CAPACITY);
+    let mut sink = NullSink;
+    let mut probe = Probe { sink: &mut sink, rec: &mut rec };
+    core.run(&mut probe);
+    let resumed = core.finish(&mut probe);
+    assert_eq!(resumed.requests, base.timeline.requests, "request records diverged");
+    assert_eq!(resumed.total_cycles, base.timeline.total_cycles);
+    assert_eq!(resumed.events, base.timeline.events, "cluster events diverged");
+    assert_eq!(resumed.shed_cycles, base.timeline.shed_cycles);
+    assert_eq!(resumed.max_pending, base.timeline.max_pending);
+    assert_eq!(resumed.jobs.len(), base.timeline.jobs.len());
+    for (r, b) in resumed.jobs.iter().zip(&base.timeline.jobs) {
+        assert_eq!(r.chip, b.chip);
+        assert_eq!(r.job.id, b.job.id);
+        assert_eq!(r.job.image_idxs, b.job.image_idxs);
+        assert_eq!((r.job.start_cycle, r.job.end_cycle), (b.job.start_cycle, b.job.end_cycle));
+        assert_eq!(r.job.lane, b.job.lane);
+        // the load-bearing part of resume: mask epochs are static
+        // context recomputed from the config, and must match the
+        // epochs the uninterrupted run dispatched with
+        assert_eq!(*r.job.masks, *b.job.masks, "mask epochs diverged on job {}", b.job.id);
+    }
+}
+
+#[test]
+fn bench_json_is_byte_identical_at_any_worker_count() {
+    let narrow = exp_replay::bench_json_only(&opts(SEED, 1), true).unwrap();
+    let wide = exp_replay::bench_json_only(&opts(SEED, 8), true).unwrap();
+    assert_eq!(narrow, wide, "worker count leaked into the replay bench");
+    let again = exp_replay::bench_json_only(&opts(SEED, 1), true).unwrap();
+    assert_eq!(narrow, again);
+    let other = exp_replay::bench_json_only(&opts(0xBEEF, 1), true).unwrap();
+    assert_ne!(narrow, other, "the seed must reach the event stream");
+    for key in [
+        "\"schema\": \"hyca-replay-bench-v1\"",
+        "\"scenario\": \"long_diurnal\"",
+        "\"spec_hash\":",
+        "\"snapshot_every_cycles\":",
+        "\"total_cycles\":",
+        "\"offered\":",
+        "\"admitted\":",
+        "\"shed\":",
+        "\"batches\":",
+        "\"log_events\":",
+        "\"digest\":",
+    ] {
+        assert!(narrow.contains(key), "missing {key} in:\n{narrow}");
+    }
+    for forbidden in ["seconds", "wall", "ns_per"] {
+        assert!(!narrow.contains(forbidden), "wall-clock field {forbidden:?}");
+    }
+}
+
+#[test]
+fn branches_fork_free_identity_and_fault_override_diverges_after_fork() {
+    let engine = Engine::builtin();
+    let spec = exp_replay::replay_spec(exp_replay::DEFAULT_PRESET).unwrap();
+    let cfg = exp_replay::replay_config(&spec, SEED, true, 1);
+    let every = exp_replay::snapshot_cadence(&spec, true);
+    let base = exp_replay::run_base(&engine, &cfg, every);
+    assert!(base.snaps.len() >= 3, "need an early fork with post-fork traffic");
+    let fork = base.snaps[1].label_cycle;
+
+    // fork-free: run_branch itself asserts bit-identity before
+    // returning; the ledger must agree nothing diverged
+    let id = exp_replay::run_branch(&engine, &cfg, &base, &BranchOverrides::default(), Some(fork))
+        .unwrap();
+    assert!(id.divergence.is_none());
+    assert_eq!(id.digest, base.digest);
+    assert_eq!(id.events.len(), base.log.len());
+
+    // counterfactual: chip 0 forced drained at the fork
+    let ov = BranchOverrides {
+        fork_cycle: Some(fork),
+        kill_chip: Some((0, fork)),
+        rate_scale: None,
+    };
+    let b = exp_replay::run_branch(&engine, &cfg, &base, &ov, None).unwrap();
+    assert_ne!(b.digest, base.digest, "killing a chip must change the timeline");
+    // the shared prefix really is shared: every event logged before
+    // the fork snapshot is bit-identical
+    let off = base
+        .snaps
+        .iter()
+        .rev()
+        .find(|s| s.label_cycle <= fork)
+        .unwrap()
+        .events_logged as usize;
+    assert_eq!(&b.events[..off], &base.log[..off], "pre-fork history must be untouched");
+    // and the observable onset of the counterfactual is at/after the
+    // fork cycle in the span ledger
+    let d = b.divergence.expect("the span ledgers must disagree somewhere");
+    assert!(d >= fork, "divergence at cycle {d} precedes the fork at {fork}");
+}
+
+#[test]
+fn snapshot_bytes_round_trip_and_corruption_is_rejected() {
+    let engine = Engine::builtin();
+    let spec = exp_replay::replay_spec(exp_replay::DEFAULT_PRESET).unwrap();
+    let cfg = exp_replay::replay_config(&spec, SEED, true, 1);
+    let every = exp_replay::snapshot_cadence(&spec, true);
+    let base = exp_replay::run_base(&engine, &cfg, every);
+    let snap = base.snaps.last().unwrap();
+    let bytes = snap.to_bytes();
+    let back = Snapshot::from_bytes(&bytes).unwrap();
+    assert_eq!(&back, snap, "byte round-trip changed the snapshot");
+    // flip one bit in a spread of positions: the integrity hash (or
+    // the magic/version check) must reject every one
+    let step = (bytes.len() * 8 / 64).max(1);
+    for bit in (0..bytes.len() * 8).step_by(step) {
+        let mut bad = bytes.clone();
+        bad[bit / 8] ^= 1 << (bit % 8);
+        assert!(
+            Snapshot::from_bytes(&bad).is_err(),
+            "single-bit flip at bit {bit} went undetected"
+        );
+    }
+    // truncation is its own error, not a panic
+    assert!(matches!(
+        Snapshot::from_bytes(&bytes[..bytes.len() / 2]),
+        Err(SnapshotError::BadHash | SnapshotError::Truncated)
+    ));
+}
+
+#[test]
+fn event_log_codec_round_trips_and_truncation_keeps_the_valid_prefix() {
+    let engine = Engine::builtin();
+    let spec = exp_replay::replay_spec(exp_replay::DEFAULT_PRESET).unwrap();
+    let cfg = exp_replay::replay_config(&spec, SEED, true, 1);
+    let every = exp_replay::snapshot_cadence(&spec, true);
+    let base = exp_replay::run_base(&engine, &cfg, every);
+    assert!(!base.log.is_empty());
+    let bytes = encode_log(&base.log);
+    let (decoded, truncated) = decode_log(&bytes);
+    assert!(!truncated);
+    assert_eq!(decoded, base.log, "codec round-trip changed the log");
+    // chop mid-frame: the decoder keeps the longest valid prefix and
+    // reports the truncation (the crash-restart path relies on both)
+    let (partial, cut) = decode_log(&bytes[..bytes.len() / 2]);
+    assert!(cut, "a mid-frame cut must be reported");
+    assert!(partial.len() < base.log.len());
+    assert_eq!(&partial[..], &base.log[..partial.len()], "surviving prefix must be intact");
+}
+
+#[test]
+fn crash_restart_from_run_dir_produces_the_uninterrupted_bench() {
+    // the CI smoke in miniature, in-process: fresh run persists
+    // artifacts, the log is truncated mid-frame, the restart resumes
+    // from the last usable snapshot and the bench bytes come out
+    // identical to the uninterrupted run's
+    let dir = std::env::temp_dir().join(format!("hyca_replay_restart_{SEED:x}"));
+    let _ = std::fs::remove_dir_all(&dir);
+    let o = opts(SEED, 2);
+    let (_t, fresh) = exp_replay::run_cli(
+        &o,
+        true,
+        exp_replay::DEFAULT_PRESET,
+        None,
+        None,
+        Some(dir.to_str().unwrap()),
+    )
+    .unwrap();
+    let log_path = dir.join("events.log");
+    let bytes = std::fs::read(&log_path).unwrap();
+    std::fs::write(&log_path, &bytes[..bytes.len() / 2]).unwrap();
+    let (_t2, restarted) = exp_replay::run_cli(
+        &o,
+        true,
+        exp_replay::DEFAULT_PRESET,
+        None,
+        None,
+        Some(dir.to_str().unwrap()),
+    )
+    .unwrap();
+    assert_eq!(fresh, restarted, "crash-restart bench must be byte-identical");
+    // the restart healed the log: a full decode succeeds untruncated
+    let (healed, truncated) = decode_log(&std::fs::read(&log_path).unwrap());
+    assert!(!truncated, "healed log must decode cleanly");
+    assert!(!healed.is_empty());
+    let _ = std::fs::remove_dir_all(&dir);
+}

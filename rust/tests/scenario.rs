@@ -347,6 +347,7 @@ fn spec_files_and_registry_agree_on_the_cli_surface() {
             "open_steady",
             "flash_crowd",
             "open_diurnal",
+            "long_diurnal",
         ]
     );
     // parse errors carry line numbers for CLI diagnostics
