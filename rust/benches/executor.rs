@@ -1,15 +1,17 @@
-//! Executor bench: shared-queue vs work-stealing (steal on/off) at
-//! 1/2/4/8 threads on a fleet_default-shaped job mix — the micro-level
-//! companion of `repro perf` (which sweeps chip counts and persists
-//! BENCH_perf.json; this harness gives benchkit-quality per-topology
-//! deltas against the previous run's baseline).
+//! Executor bench: shared-queue vs static partition vs mutex vs
+//! lock-free work stealing at 1/2/4/8 threads on a fleet_default-shaped
+//! job mix — the micro-level companion of `repro perf` (which sweeps
+//! chip counts and persists BENCH_perf.json; this harness gives
+//! benchkit-quality per-plan deltas against the previous run's
+//! baseline). The `mutex/*` vs `lockfree/*` pairs are the headline:
+//! same jobs, same homes, only the deque differs.
 use std::sync::Arc;
 
 use hyca::benchkit::Bench;
 use hyca::coordinator::exp_fleet::fleet_cell;
 use hyca::fleet::{simulate_fleet, RoutingPolicy};
 use hyca::inference::Engine;
-use hyca::serve::executor::{self, ExecMode};
+use hyca::serve::executor::{self, DequeImpl, ExecMode, ExecPlan};
 use hyca::serve::BatchJob;
 
 fn main() {
@@ -24,43 +26,33 @@ fn main() {
     let affinity: Vec<usize> = timeline.jobs.iter().map(|j| j.chip).collect();
     let served: usize = jobs.iter().map(|j| j.image_idxs.len()).sum();
 
+    // (mode, deque, home_set) plans, baseline first — labels match the
+    // BENCH_perf.json executor column, with the home-set row suffixed
+    let plans: [(ExecMode, DequeImpl, usize, &str); 5] = [
+        (ExecMode::SharedQueue, DequeImpl::LockFree, 1, "shared"),
+        (ExecMode::WorkSteal { steal: false }, DequeImpl::LockFree, 1, "steal_off"),
+        (ExecMode::WorkSteal { steal: true }, DequeImpl::Mutex, 1, "mutex"),
+        (ExecMode::WorkSteal { steal: true }, DequeImpl::LockFree, 1, "lockfree"),
+        (ExecMode::WorkSteal { steal: true }, DequeImpl::LockFree, 2, "lockfree_hs2"),
+    ];
+
     for threads in [1usize, 2, 4, 8] {
-        b.bench_units(
-            format!("shared/t{threads}"),
-            Some(served as f64),
-            || {
-                std::hint::black_box(
-                    executor::execute(
-                        &engine,
-                        &jobs,
-                        None,
-                        threads,
-                        ExecMode::SharedQueue,
-                        cfg.queue_cap,
-                    )
-                    .unwrap(),
-                );
-            },
-        );
-        for steal in [false, true] {
-            let mode = ExecMode::WorkSteal { steal };
-            b.bench_units(
-                format!("{}/t{threads}", mode.label()),
-                Some(served as f64),
-                || {
-                    std::hint::black_box(
-                        executor::execute(
-                            &engine,
-                            &jobs,
-                            Some(&affinity),
-                            threads,
-                            mode,
-                            cfg.queue_cap,
-                        )
-                        .unwrap(),
-                    );
-                },
-            );
+        for (mode, deque, home_set, name) in plans {
+            let aff = match mode {
+                ExecMode::SharedQueue => None,
+                ExecMode::WorkSteal { .. } => Some(affinity.as_slice()),
+            };
+            let plan = ExecPlan {
+                threads,
+                mode,
+                deque,
+                affinity: aff,
+                home_set,
+                queue_cap: cfg.queue_cap,
+            };
+            b.bench_units(format!("{name}/t{threads}"), Some(served as f64), || {
+                std::hint::black_box(executor::execute_plan(&engine, &jobs, &plan).unwrap());
+            });
         }
     }
 

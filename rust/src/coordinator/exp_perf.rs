@@ -2,18 +2,24 @@
 //! first experiment whose headline is a *measured* number, not a
 //! simulated one (DESIGN.md §8).
 //!
-//! The grid times the three executor topologies — the legacy
-//! `SharedQueue`, the statically-partitioned `WorkSteal{steal:false}`,
-//! and the full work-stealing `WorkSteal{steal:true}` — over
-//! `{1,2,4,8}` threads × `{1,4,16}` chips on fleet_default-shaped job
-//! mixes (the exact workload `BENCH_fleet.json` reports, lowered
+//! The grid times five executor plans — the legacy `SharedQueue`, the
+//! statically-partitioned `WorkSteal{steal:false}`, work stealing over
+//! the PR-5 **mutex** deque, work stealing over the **lock-free**
+//! Chase-Lev deque, and lock-free stealing with a 2-wide home set —
+//! over `{1,2,4,8}` threads × `{1,4,16}` chips on fleet_default-shaped
+//! job mixes (the exact workload `BENCH_fleet.json` reports, lowered
 //! through `exp_fleet::fleet_cell`), and writes `BENCH_perf.json`
-//! (schema `hyca-perf-bench-v1`).
+//! (schema `hyca-perf-bench-v2`; v1 had no deque axis — its
+//! `steal_on` rows are v2's `mutex` rows). The mutex-vs-lockfree rows
+//! at matching cells are the evidence the lock-free port pays for
+//! itself; the home-set row prices the affinity spread.
 //!
 //! **Determinism split, explicit in the schema:** the `deterministic`
 //! section (job/image counts, simulated cycles) is a pure function of
 //! the seed and byte-identical everywhere — the same contract as every
-//! other bench file. The `timing` section is wall-clock and therefore
+//! other bench file, **and byte-frozen across the v1 → v2 schema bump**
+//! (the timing section grew rows; the workload descriptions did not
+//! change). The `timing` section is wall-clock and therefore
 //! **nondeterministic by nature** (machine, load, scheduler); it is
 //! marked `"nondeterministic": true` and no determinism lint or golden
 //! test ever compares it. Every timed cell re-asserts the invariance
@@ -28,7 +34,7 @@ use anyhow::Result;
 use super::{exp_fleet, Experiment, RunOpts};
 use crate::fleet::{self, RoutingPolicy};
 use crate::inference::Engine;
-use crate::serve::executor::{self, ExecMode};
+use crate::serve::executor::{self, DequeImpl, ExecMode, ExecPlan};
 use crate::serve::BatchJob;
 use crate::util::table::{f, Table};
 
@@ -47,12 +53,41 @@ pub fn chip_sweep(smoke: bool) -> Vec<usize> {
     }
 }
 
-/// The executor topologies under measurement, baseline first.
-pub fn mode_sweep() -> [ExecMode; 3] {
+/// One measured executor plan: mode, deque, home-set width.
+#[derive(Debug, Clone, Copy)]
+pub struct PlanCell {
+    pub mode: ExecMode,
+    pub deque: DequeImpl,
+    pub home_set: usize,
+}
+
+/// The executor plans under measurement, baseline first. `mutex` and
+/// `lockfree` differ only in the deque, so their delta at matching
+/// cells isolates the cost of the PR-5 mutex; the final row prices
+/// home-set spreading on the lock-free deque.
+pub fn plan_sweep() -> [PlanCell; 5] {
     [
-        ExecMode::SharedQueue,
-        ExecMode::WorkSteal { steal: false },
-        ExecMode::WorkSteal { steal: true },
+        PlanCell { mode: ExecMode::SharedQueue, deque: DequeImpl::LockFree, home_set: 1 },
+        PlanCell {
+            mode: ExecMode::WorkSteal { steal: false },
+            deque: DequeImpl::LockFree,
+            home_set: 1,
+        },
+        PlanCell {
+            mode: ExecMode::WorkSteal { steal: true },
+            deque: DequeImpl::Mutex,
+            home_set: 1,
+        },
+        PlanCell {
+            mode: ExecMode::WorkSteal { steal: true },
+            deque: DequeImpl::LockFree,
+            home_set: 1,
+        },
+        PlanCell {
+            mode: ExecMode::WorkSteal { steal: true },
+            deque: DequeImpl::LockFree,
+            home_set: 2,
+        },
     ]
 }
 
@@ -72,11 +107,12 @@ pub struct TimingRow {
     pub chips: usize,
     pub threads: usize,
     pub executor: &'static str,
+    pub home_set: usize,
     /// Best-of-reps wall time of one full executor pass.
     pub wall_ms: f64,
     pub jobs_per_sec: f64,
     pub imgs_per_sec: f64,
-    /// Steals of the last rep (0 for shared/steal_off).
+    /// Steals of the best rep (0 for shared/steal_off).
     pub steals: u64,
 }
 
@@ -88,7 +124,7 @@ pub struct PerfRun {
 }
 
 /// Simulate each chip count's workload once, then time every
-/// (threads × mode) cell `reps` times keeping the best wall time.
+/// (threads × plan) cell `reps` times keeping the best wall time.
 /// Every cell's predictions are asserted equal to the 1-thread
 /// shared-queue reference — the bit-exactness contract, enforced at
 /// measurement time.
@@ -119,24 +155,32 @@ pub fn run_perf(opts: &RunOpts, smoke: bool, reps: usize) -> Result<PerfRun> {
         )?
         .predictions;
         for threads in THREAD_SWEEP {
-            for mode in mode_sweep() {
+            for cell in plan_sweep() {
                 // the shared queue ignores affinity; the stealing modes
-                // home each chip's jobs on chip % threads
-                let aff = match mode {
+                // home each chip's jobs on the home set at chip % threads
+                let aff = match cell.mode {
                     ExecMode::SharedQueue => None,
                     ExecMode::WorkSteal { .. } => Some(affinity.as_slice()),
+                };
+                let plan = ExecPlan {
+                    threads,
+                    mode: cell.mode,
+                    deque: cell.deque,
+                    affinity: aff,
+                    home_set: cell.home_set,
+                    queue_cap: cfg.queue_cap,
                 };
                 let mut best_nanos = u128::MAX;
                 let mut steals = 0u64;
                 for _ in 0..reps {
-                    let rep =
-                        executor::execute(&engine, &jobs, aff, threads, mode, cfg.queue_cap)?;
+                    let rep = executor::execute_plan(&engine, &jobs, &plan)?;
                     anyhow::ensure!(
                         rep.predictions == reference,
-                        "executor {} at {} threads diverged from the 1-thread \
-                         shared-queue reference on the {chips}-chip workload — \
+                        "executor {} (home_set {}) at {} threads diverged from the \
+                         1-thread shared-queue reference on the {chips}-chip workload — \
                          the bit-exactness contract is broken",
-                        mode.label(),
+                        plan.label(),
+                        cell.home_set,
                         threads
                     );
                     // wall_ms and steals must describe the SAME rep (the
@@ -151,7 +195,8 @@ pub fn run_perf(opts: &RunOpts, smoke: bool, reps: usize) -> Result<PerfRun> {
                 timing.push(TimingRow {
                     chips,
                     threads,
-                    executor: mode.label(),
+                    executor: plan.label(),
+                    home_set: cell.home_set,
                     wall_ms: best_nanos as f64 / 1e6,
                     jobs_per_sec: jobs.len() as f64 / secs.max(1e-12),
                     imgs_per_sec: images as f64 / secs.max(1e-12),
@@ -164,7 +209,9 @@ pub fn run_perf(opts: &RunOpts, smoke: bool, reps: usize) -> Result<PerfRun> {
 }
 
 /// The deterministic `grid` section alone — what a byte-comparison
-/// across `--workers` values (or repeated runs) may look at.
+/// across `--workers` values (or repeated runs) may look at. Frozen
+/// across the v1 → v2 schema bump: the rendering below is
+/// byte-identical to v1's.
 pub fn det_json(seed: u64, smoke: bool, det: &[DetRow]) -> String {
     let mut s = String::new();
     s.push_str("  \"deterministic\": {\n");
@@ -201,9 +248,16 @@ fn timing_json(timing: &[TimingRow]) -> String {
         let sep = if i + 1 == timing.len() { "" } else { "," };
         s.push_str(&format!(
             "      {{\"chips\": {}, \"threads\": {}, \"executor\": \"{}\", \
-             \"wall_ms\": {:.3}, \"jobs_per_sec\": {:.1}, \
+             \"home_set\": {}, \"wall_ms\": {:.3}, \"jobs_per_sec\": {:.1}, \
              \"imgs_per_sec\": {:.1}, \"steals\": {}}}{sep}\n",
-            t.chips, t.threads, t.executor, t.wall_ms, t.jobs_per_sec, t.imgs_per_sec, t.steals
+            t.chips,
+            t.threads,
+            t.executor,
+            t.home_set,
+            t.wall_ms,
+            t.jobs_per_sec,
+            t.imgs_per_sec,
+            t.steals
         ));
     }
     s.push_str("    ]\n  }");
@@ -214,7 +268,7 @@ fn timing_json(timing: &[TimingRow]) -> String {
 pub fn perf_json(seed: u64, smoke: bool, run: &PerfRun) -> String {
     let mut s = String::new();
     s.push_str("{\n");
-    s.push_str("  \"schema\": \"hyca-perf-bench-v1\",\n");
+    s.push_str("  \"schema\": \"hyca-perf-bench-v2\",\n");
     s.push_str(&det_json(seed, smoke, &run.det));
     s.push_str(",\n");
     s.push_str(&timing_json(&run.timing));
@@ -224,13 +278,14 @@ pub fn perf_json(seed: u64, smoke: bool, run: &PerfRun) -> String {
 
 fn perf_table(run: &PerfRun) -> Table {
     let mut t = Table::new(
-        "executor wall-clock grid — shared queue vs work stealing \
-         (best-of-reps; NONDETERMINISTIC wall time, predictions \
-         asserted bit-identical to the 1-thread reference)",
+        "executor wall-clock grid — shared queue vs mutex vs lock-free \
+         work stealing (best-of-reps; NONDETERMINISTIC wall time, \
+         predictions asserted bit-identical to the 1-thread reference)",
         &[
             "chips",
             "threads",
             "executor",
+            "home_set",
             "wall_ms",
             "jobs_per_sec",
             "imgs_per_sec",
@@ -249,6 +304,7 @@ fn perf_table(run: &PerfRun) -> Table {
             row.chips.to_string(),
             row.threads.to_string(),
             row.executor.to_string(),
+            row.home_set.to_string(),
             f(row.wall_ms, 3),
             f(row.jobs_per_sec, 1),
             f(row.imgs_per_sec, 1),
@@ -290,7 +346,7 @@ impl Experiment for PerfExp {
     }
 
     fn title(&self) -> &'static str {
-        "Perf: wall-clock executor grid — shared queue vs work stealing, threads × chips"
+        "Perf: wall-clock executor grid — shared queue vs mutex vs lock-free stealing, threads × chips"
     }
 
     fn run(&self, opts: &RunOpts) -> Result<Vec<Table>> {

@@ -467,6 +467,7 @@ mod tests {
             total_requests: 12 * chips,
             queue_cap: 4 * chips,
             executor_threads: 3,
+            home_set: 1,
             windows: 6,
             faults: None,
             lifecycle: LifecyclePolicy::NEVER,

@@ -139,6 +139,13 @@ pub struct FleetConfig {
     pub queue_cap: usize,
     /// Real worker threads executing the inference jobs.
     pub executor_threads: usize,
+    /// Home-*set* width of the executor's per-chip affinity: chip `k`'s
+    /// jobs spread over `home_set` adjacent workers starting at
+    /// `k % threads` instead of serializing on one (see
+    /// [`crate::serve::executor::ExecPlan::home_set`]). `1` is the
+    /// legacy single-home placement. Wall-clock only — never observable
+    /// in any metric (the timeline ignores it like `executor_threads`).
+    pub home_set: usize,
     /// Accuracy/goodput windows in the report.
     pub windows: usize,
     /// Optional mid-run fault injection (per chip, independent
@@ -176,6 +183,7 @@ impl FleetConfig {
             total_requests: cfg.total_requests,
             queue_cap: cfg.queue_cap,
             executor_threads: cfg.executor_threads,
+            home_set: 1,
             windows: cfg.windows,
             faults: cfg.faults,
             lifecycle: LifecyclePolicy::NEVER,
@@ -290,11 +298,12 @@ pub fn simulate_fleet_traced(
 }
 
 /// End to end: simulate the fleet timeline, execute every chip's
-/// batches on the work-stealing executor with **per-chip affinity**
-/// (chip `k`'s jobs home on worker `k % threads`, so each chip's mask
-/// epochs stay cache-warm on one worker and dry workers steal across
-/// chips), assemble the cluster report. The per-chip steal counts land
-/// in `ChipStat::executor_steals` — observability only, excluded from
+/// batches on the lock-free work-stealing executor with **per-chip
+/// affinity** (chip `k`'s jobs home on the `cfg.home_set` workers from
+/// `k % threads`, so each chip's mask epochs stay cache-warm on a small
+/// worker set and dry workers steal across chips), assemble the
+/// cluster report. The per-chip steal counts land in
+/// `ChipStat::executor_steals` — observability only, excluded from
 /// every byte-compared metric.
 pub fn run(engine: &Arc<Engine>, cfg: &FleetConfig) -> Result<metrics::FleetReport> {
     run_traced(engine, cfg, &mut NullSink)
@@ -315,13 +324,17 @@ pub fn run_traced(
         simulate_fleet_traced(engine, cfg, &mut Probe { sink: &mut *sink, rec: &mut rec });
     let job_refs: Vec<&BatchJob> = timeline.jobs.iter().map(|j| &j.job).collect();
     let affinity: Vec<usize> = timeline.jobs.iter().map(|j| j.chip).collect();
-    let report = executor::execute(
+    let report = executor::execute_plan(
         engine,
         &job_refs,
-        Some(&affinity),
-        cfg.executor_threads,
-        ExecMode::WorkSteal { steal: true },
-        cfg.queue_cap,
+        &executor::ExecPlan {
+            threads: cfg.executor_threads,
+            mode: ExecMode::WorkSteal { steal: true },
+            deque: executor::DequeImpl::LockFree,
+            affinity: Some(&affinity),
+            home_set: cfg.home_set,
+            queue_cap: cfg.queue_cap,
+        },
     )?;
     executor::report_steals(&report.stats, sink);
     let mut counters = Counters::new();
@@ -406,6 +419,7 @@ mod tests {
             total_requests: 16 * n_chips,
             queue_cap: 4 * n_chips,
             executor_threads: 2,
+            home_set: 1,
             windows: 4,
             faults: None,
             lifecycle: LifecyclePolicy::NEVER,

@@ -53,6 +53,7 @@ pub mod faults;
 pub mod fleet;
 pub mod hyca;
 pub mod inference;
+pub mod loomsim;
 pub mod obs;
 pub mod perfmodel;
 pub mod redundancy;

@@ -1,0 +1,150 @@
+//! Instrumented atomics: every operation is a scheduler yield point.
+//!
+//! Each wrapper delegates to the matching `std::sync::atomic` type;
+//! the only addition is a call to the session yield point *before* the
+//! operation, which is what lets the explorer serialize threads at
+//! atomic-op granularity. Outside a model run the yield point is a
+//! single thread-local read, so these types are usable (cheaply) in
+//! ordinary tests too.
+//!
+//! `compare_exchange_weak` maps to the strong variant: the model
+//! explores interleavings, not spurious LL/SC failures — a weak CAS
+//! used in a retry loop behaves identically under that lens.
+
+use std::sync::atomic::Ordering;
+
+use super::sched::yield_point;
+
+macro_rules! instrumented_atomic {
+    ($name:ident, $std:ty, $val:ty) => {
+        #[derive(Debug, Default)]
+        pub struct $name($std);
+
+        impl $name {
+            pub const fn new(v: $val) -> Self {
+                Self(<$std>::new(v))
+            }
+
+            pub fn into_inner(self) -> $val {
+                self.0.into_inner()
+            }
+
+            pub fn load(&self, order: Ordering) -> $val {
+                yield_point();
+                self.0.load(order)
+            }
+
+            pub fn store(&self, v: $val, order: Ordering) {
+                yield_point();
+                self.0.store(v, order)
+            }
+
+            pub fn swap(&self, v: $val, order: Ordering) -> $val {
+                yield_point();
+                self.0.swap(v, order)
+            }
+
+            pub fn compare_exchange(
+                &self,
+                current: $val,
+                new: $val,
+                success: Ordering,
+                failure: Ordering,
+            ) -> Result<$val, $val> {
+                yield_point();
+                self.0.compare_exchange(current, new, success, failure)
+            }
+
+            pub fn compare_exchange_weak(
+                &self,
+                current: $val,
+                new: $val,
+                success: Ordering,
+                failure: Ordering,
+            ) -> Result<$val, $val> {
+                yield_point();
+                self.0.compare_exchange(current, new, success, failure)
+            }
+        }
+    };
+}
+
+macro_rules! instrumented_int_ops {
+    ($name:ident, $val:ty) => {
+        impl $name {
+            pub fn fetch_add(&self, v: $val, order: Ordering) -> $val {
+                yield_point();
+                self.0.fetch_add(v, order)
+            }
+
+            pub fn fetch_sub(&self, v: $val, order: Ordering) -> $val {
+                yield_point();
+                self.0.fetch_sub(v, order)
+            }
+
+            pub fn fetch_max(&self, v: $val, order: Ordering) -> $val {
+                yield_point();
+                self.0.fetch_max(v, order)
+            }
+        }
+    };
+}
+
+instrumented_atomic!(AtomicUsize, std::sync::atomic::AtomicUsize, usize);
+instrumented_atomic!(AtomicIsize, std::sync::atomic::AtomicIsize, isize);
+instrumented_atomic!(AtomicU32, std::sync::atomic::AtomicU32, u32);
+instrumented_atomic!(AtomicU64, std::sync::atomic::AtomicU64, u64);
+instrumented_atomic!(AtomicBool, std::sync::atomic::AtomicBool, bool);
+
+instrumented_int_ops!(AtomicUsize, usize);
+instrumented_int_ops!(AtomicIsize, isize);
+instrumented_int_ops!(AtomicU32, u32);
+instrumented_int_ops!(AtomicU64, u64);
+
+impl AtomicBool {
+    pub fn fetch_or(&self, v: bool, order: Ordering) -> bool {
+        yield_point();
+        self.0.fetch_or(v, order)
+    }
+}
+
+#[derive(Debug)]
+pub struct AtomicPtr<T>(std::sync::atomic::AtomicPtr<T>);
+
+impl<T> AtomicPtr<T> {
+    pub const fn new(p: *mut T) -> Self {
+        Self(std::sync::atomic::AtomicPtr::new(p))
+    }
+
+    pub fn load(&self, order: Ordering) -> *mut T {
+        yield_point();
+        self.0.load(order)
+    }
+
+    pub fn store(&self, p: *mut T, order: Ordering) {
+        yield_point();
+        self.0.store(p, order)
+    }
+
+    pub fn swap(&self, p: *mut T, order: Ordering) -> *mut T {
+        yield_point();
+        self.0.swap(p, order)
+    }
+
+    pub fn compare_exchange(
+        &self,
+        current: *mut T,
+        new: *mut T,
+        success: Ordering,
+        failure: Ordering,
+    ) -> Result<*mut T, *mut T> {
+        yield_point();
+        self.0.compare_exchange(current, new, success, failure)
+    }
+}
+
+/// Instrumented memory fence — a yield point, then the real fence.
+pub fn fence(order: Ordering) {
+    yield_point();
+    std::sync::atomic::fence(order)
+}

@@ -1,0 +1,40 @@
+//! Instrumented `UnsafeCell`: non-atomic payload accesses become
+//! yield points too, so the explorer can interleave a thief's payload
+//! read against the owner's overwrite — the exact hazard window the
+//! Chase-Lev top-CAS exists to close.
+//!
+//! The API is access-scoped (`with`/`with_mut` instead of a bare
+//! `get`) so every dereference site is visible in the source and
+//! yields exactly once.
+
+use super::sched::yield_point;
+
+#[derive(Debug, Default)]
+pub struct UnsafeCell<T>(std::cell::UnsafeCell<T>);
+
+impl<T> UnsafeCell<T> {
+    pub const fn new(v: T) -> Self {
+        Self(std::cell::UnsafeCell::new(v))
+    }
+
+    pub fn into_inner(self) -> T {
+        self.0.into_inner()
+    }
+
+    /// Immutable access to the payload pointer.
+    ///
+    /// # Safety contract (caller)
+    /// The closure must not dereference the pointer beyond the
+    /// protocol's published bounds — same rules as a raw
+    /// `UnsafeCell::get`.
+    pub fn with<R>(&self, f: impl FnOnce(*const T) -> R) -> R {
+        yield_point();
+        f(self.0.get() as *const T)
+    }
+
+    /// Mutable access to the payload pointer (same contract).
+    pub fn with_mut<R>(&self, f: impl FnOnce(*mut T) -> R) -> R {
+        yield_point();
+        f(self.0.get())
+    }
+}

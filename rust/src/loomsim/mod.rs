@@ -1,0 +1,50 @@
+//! # loomsim — in-repo loom-style exhaustive interleaving exploration
+//!
+//! The lock-free executor hot path (`serve::deque`, `serve::slot`,
+//! DESIGN.md §8) deletes the mutexes PR 5 left around the Chase-Lev
+//! deques. Deleting a mutex is only safe *after* the protocol is
+//! proved, and the ROADMAP names "loom-style interleaving exploration"
+//! as the proof vehicle. This crate is dependency-free by policy, so
+//! instead of the external `loom` crate this module implements the
+//! same idea from scratch:
+//!
+//! * [`model`] runs a closure **once per schedule** until every
+//!   sequentially-consistent interleaving of its threads has been
+//!   explored. Threads are real OS threads, but only one runs at a
+//!   time: every instrumented operation is a *yield point* where the
+//!   scheduler picks which thread steps next.
+//! * [`atomic`] provides instrumented `AtomicUsize`/`AtomicIsize`/…
+//!   wrappers and [`atomic::fence`]; [`cell::UnsafeCell`] marks
+//!   non-atomic payload accesses. Outside a model run they pass
+//!   straight through to `std` (one thread-local check), so the same
+//!   code path is exercised in ordinary tests.
+//! * [`sync`] is the facade the production code compiles against:
+//!   plain `std::sync::atomic` types in release builds (zero cost),
+//!   the instrumented wrappers under `cfg(any(test, loom))` — so the
+//!   deque/slot proofs run inside plain `cargo test` *and* as the
+//!   dedicated `--cfg loom` CI job (`rust/tests/loom_executor.rs`).
+//!
+//! Exploration is a depth-first search over scheduler decisions: each
+//! run records, at every yield point, which runnable thread was picked
+//! out of how many; the next run replays the deepest prefix with an
+//! untried alternative. Same program + same choices ⇒ same state, so
+//! the search is exhaustive for deterministic closures. A failed
+//! assertion aborts the search and re-panics **with the schedule
+//! trace**, which is the counterexample.
+//!
+//! **Scope honesty.** This explores every interleaving at atomic-op
+//! granularity under *sequential consistency*. It proves the protocol
+//! logic — the steal/pop boundary race, slot-reuse ABA across ring
+//! wrap-around, the one-shot result-slot race — but it cannot observe
+//! weak-memory reorderings, so the `Acquire`/`Release` pairings are
+//! argued in DESIGN.md §8 (orderings table) rather than model-checked.
+//! That matches what the mutex deletion needs: the mutexes never
+//! provided more than SC over the same critical sections.
+
+pub mod atomic;
+pub mod cell;
+mod sched;
+pub mod sync;
+pub mod thread;
+
+pub use sched::{active, model, model_bounded, Explored};

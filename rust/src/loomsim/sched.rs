@@ -1,0 +1,524 @@
+//! The exploration scheduler: one baton, real threads, DFS over every
+//! sequentially-consistent schedule.
+//!
+//! A *session* owns the per-run state: one entry per model thread
+//! (waiting at a yield point / running / blocked on a join /
+//! finished), the baton (`turn`), and the decision trace. Exactly one
+//! thread holds the baton at any instant; it runs undisturbed until
+//! its next instrumented operation, where it parks and hands control
+//! back. The scheduler then promotes joins whose target finished,
+//! collects the runnable set, and picks the next thread — by replaying
+//! the recorded prefix, or defaulting to the lowest index past it.
+//! Every pick is recorded as `(picked, out_of)`; the DFS driver
+//! backtracks over that trace.
+
+use std::cell::RefCell;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::{Arc, Condvar, Mutex};
+
+/// Marker payload for the internal "session aborted" unwind — used to
+/// tear worker threads down after another thread's assertion failed,
+/// without mistaking the teardown for a second failure.
+struct AbortToken;
+
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+enum TState {
+    /// Parked at a yield point, runnable.
+    Waiting,
+    /// Holds the baton (or has been granted it and will wake).
+    Running,
+    /// Parked in `JoinHandle::join` until the target finishes.
+    Blocked { on: usize },
+    Finished,
+}
+
+struct SessState {
+    threads: Vec<TState>,
+    /// The baton: which thread may take its next step.
+    turn: Option<usize>,
+    /// First assertion failure (panic payload rendered to text).
+    panic: Option<String>,
+    /// Set when tearing down after a failure: parked threads unwind.
+    aborted: bool,
+    /// Real join handles, reaped at end of run.
+    handles: Vec<Option<std::thread::JoinHandle<()>>>,
+}
+
+pub(crate) struct Session {
+    m: Mutex<SessState>,
+    cv: Condvar,
+}
+
+thread_local! {
+    /// The ambient session of the current OS thread, if it is a model
+    /// thread of an active exploration (`(session, thread index)`).
+    static CURRENT: RefCell<Option<(Arc<Session>, usize)>> = const { RefCell::new(None) };
+}
+
+/// `true` while the calling thread is a controlled model thread.
+pub fn active() -> bool {
+    CURRENT.with(|c| c.borrow().is_some())
+}
+
+/// Instrumented operations call this before executing: outside a
+/// model run it is one thread-local read; inside, the thread parks and
+/// the scheduler decides who steps next.
+pub(crate) fn yield_point() {
+    let cur = CURRENT.with(|c| c.borrow().clone());
+    if let Some((sess, tid)) = cur {
+        sess.pause(tid);
+    }
+}
+
+impl Session {
+    fn new() -> Self {
+        Session {
+            m: Mutex::new(SessState {
+                threads: Vec::new(),
+                turn: None,
+                panic: None,
+                aborted: false,
+                handles: Vec::new(),
+            }),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Park at a yield point and wait for the baton.
+    fn pause(&self, tid: usize) {
+        let mut st = self.m.lock().unwrap();
+        st.threads[tid] = TState::Waiting;
+        self.cv.notify_all();
+        loop {
+            if st.aborted {
+                drop(st);
+                std::panic::panic_any(AbortToken);
+            }
+            if st.turn == Some(tid) {
+                st.turn = None;
+                // `Running` was already set by the scheduler at grant
+                // time so it never observes a window where nobody is
+                // running; just consume the baton.
+                return;
+            }
+            st = self.cv.wait(st).unwrap();
+        }
+    }
+
+    /// First wait of a freshly spawned thread (registered `Waiting` by
+    /// its parent; identical to the tail of [`Session::pause`]).
+    fn wait_for_first_grant(&self, tid: usize) {
+        let mut st = self.m.lock().unwrap();
+        loop {
+            if st.aborted {
+                drop(st);
+                std::panic::panic_any(AbortToken);
+            }
+            if st.turn == Some(tid) {
+                st.turn = None;
+                return;
+            }
+            st = self.cv.wait(st).unwrap();
+        }
+    }
+
+    /// Register a child thread (caller holds the baton). Returns its
+    /// index; the matching real join handle lands via [`Session::set_handle`].
+    pub(crate) fn register(&self) -> usize {
+        let mut st = self.m.lock().unwrap();
+        st.threads.push(TState::Waiting);
+        st.handles.push(None);
+        st.threads.len() - 1
+    }
+
+    pub(crate) fn set_handle(&self, tid: usize, h: std::thread::JoinHandle<()>) {
+        self.m.lock().unwrap().handles[tid] = Some(h);
+    }
+
+    /// Mark `tid` finished (normal return or panic) and wake the
+    /// scheduler.
+    fn finish(&self, tid: usize, panic_msg: Option<String>) {
+        let mut st = self.m.lock().unwrap();
+        st.threads[tid] = TState::Finished;
+        if let Some(msg) = panic_msg {
+            if st.panic.is_none() {
+                st.panic = Some(msg);
+            }
+        }
+        self.cv.notify_all();
+    }
+
+    /// Block the caller until `target` finishes (join semantics).
+    pub(crate) fn join_wait(&self, me: usize, target: usize) {
+        let mut st = self.m.lock().unwrap();
+        if st.threads[target] == TState::Finished {
+            return; // no yield: join of a finished thread is immediate
+        }
+        st.threads[me] = TState::Blocked { on: target };
+        self.cv.notify_all();
+        loop {
+            if st.aborted {
+                drop(st);
+                std::panic::panic_any(AbortToken);
+            }
+            if st.turn == Some(me) {
+                st.turn = None;
+                return;
+            }
+            st = self.cv.wait(st).unwrap();
+        }
+    }
+}
+
+/// The OS-thread body shared by the root closure and spawned threads.
+pub(crate) fn run_controlled<F: FnOnce() + std::panic::UnwindSafe>(
+    sess: Arc<Session>,
+    tid: usize,
+    f: F,
+) {
+    CURRENT.with(|c| *c.borrow_mut() = Some((Arc::clone(&sess), tid)));
+    sess.wait_for_first_grant(tid);
+    let result = catch_unwind(f);
+    let panic_msg = match result {
+        Ok(()) => None,
+        Err(e) => {
+            if e.downcast_ref::<AbortToken>().is_some() {
+                None // teardown unwind, not a failure
+            } else if let Some(s) = e.downcast_ref::<&str>() {
+                Some((*s).to_string())
+            } else if let Some(s) = e.downcast_ref::<String>() {
+                Some(s.clone())
+            } else {
+                Some("model thread panicked (non-string payload)".to_string())
+            }
+        }
+    };
+    CURRENT.with(|c| *c.borrow_mut() = None);
+    sess.finish(tid, panic_msg);
+}
+
+pub(crate) fn current() -> Option<(Arc<Session>, usize)> {
+    CURRENT.with(|c| c.borrow().clone())
+}
+
+/// One scheduler decision: which runnable thread was picked, out of
+/// how many options (options are thread indices in ascending order, so
+/// `picked` is an index into that deterministic list).
+#[derive(Clone, Copy, Debug)]
+struct Choice {
+    picked: usize,
+    options: usize,
+}
+
+/// Outcome of one full exploration.
+#[derive(Debug, Clone, Copy)]
+pub struct Explored {
+    /// Schedules actually run.
+    pub schedules: usize,
+    /// `true` when the DFS exhausted the space (vs hit the run budget).
+    pub complete: bool,
+}
+
+/// Hard cap on decisions per schedule — a schedule this long means a
+/// livelock (or an unbounded loop) in the modeled code.
+const MAX_STEPS_PER_RUN: usize = 50_000;
+
+struct RunOutcome {
+    choices: Vec<Choice>,
+    panic: Option<String>,
+}
+
+fn run_once(f: Arc<dyn Fn() + Send + Sync>, prefix: &[usize]) -> RunOutcome {
+    let sess = Arc::new(Session::new());
+    {
+        let mut st = sess.m.lock().unwrap();
+        st.threads.push(TState::Waiting); // root = thread 0
+        st.handles.push(None);
+    }
+    let root_sess = Arc::clone(&sess);
+    let root = std::thread::spawn(move || {
+        let g = AssertUnwindSafe(move || f());
+        run_controlled(Arc::clone(&root_sess), 0, g)
+    });
+    sess.m.lock().unwrap().handles[0] = Some(root);
+
+    let mut choices: Vec<Choice> = Vec::new();
+    let panic_msg = loop {
+        let mut st = sess.m.lock().unwrap();
+        // wait until the granted thread has parked again (or finished)
+        st = self::wait_quiescent(&sess, st);
+        if st.panic.is_some() {
+            break st.panic.clone();
+        }
+        // promote joins whose target has finished
+        for i in 0..st.threads.len() {
+            if let TState::Blocked { on } = st.threads[i] {
+                if st.threads[on] == TState::Finished {
+                    st.threads[i] = TState::Waiting;
+                }
+            }
+        }
+        let enabled: Vec<usize> = (0..st.threads.len())
+            .filter(|&i| st.threads[i] == TState::Waiting)
+            .collect();
+        if enabled.is_empty() {
+            if st.threads.iter().all(|&t| t == TState::Finished) {
+                break None; // schedule fully executed
+            }
+            break Some("deadlock: every live thread is blocked on a join".to_string());
+        }
+        if choices.len() >= MAX_STEPS_PER_RUN {
+            break Some(format!(
+                "schedule exceeded {MAX_STEPS_PER_RUN} decisions — livelock in modeled code?"
+            ));
+        }
+        let pick = prefix.get(choices.len()).copied().unwrap_or(0).min(enabled.len() - 1);
+        choices.push(Choice { picked: pick, options: enabled.len() });
+        let t = enabled[pick];
+        st.threads[t] = TState::Running;
+        st.turn = Some(t);
+        sess.cv.notify_all();
+        drop(st);
+    };
+
+    if panic_msg.is_some() {
+        // teardown: unpark every surviving thread into an abort unwind
+        let mut st = sess.m.lock().unwrap();
+        st.aborted = true;
+        sess.cv.notify_all();
+        drop(st);
+    }
+    // reap: every thread either finished normally or unwinds on abort
+    let handles: Vec<_> = {
+        let mut st = sess.m.lock().unwrap();
+        st.handles.iter_mut().map(|h| h.take()).collect()
+    };
+    for h in handles.into_iter().flatten() {
+        let _ = h.join(); // panicked model threads already reported
+    }
+    RunOutcome { choices, panic: panic_msg }
+}
+
+fn wait_quiescent<'a>(
+    sess: &'a Session,
+    guard: std::sync::MutexGuard<'a, SessState>,
+) -> std::sync::MutexGuard<'a, SessState> {
+    sess.cv
+        .wait_while(guard, |s| {
+            s.panic.is_none()
+                && (s.turn.is_some() || s.threads.iter().any(|&t| t == TState::Running))
+        })
+        .unwrap()
+}
+
+/// Explore every schedule of `f`, or panic with the counterexample
+/// trace. Panics if the space exceeds the default budget — split the
+/// scenario instead of raising it.
+pub fn model<F: Fn() + Send + Sync + 'static>(f: F) -> Explored {
+    const DEFAULT_BUDGET: usize = 1_000_000;
+    let explored = model_bounded(f, DEFAULT_BUDGET);
+    assert!(
+        explored.complete,
+        "loomsim: schedule space exceeded the {DEFAULT_BUDGET}-run budget — \
+         shrink the scenario so the proof stays exhaustive"
+    );
+    explored
+}
+
+/// [`model`] with an explicit run budget; returns whether the DFS
+/// completed. A failure still panics with the schedule trace.
+pub fn model_bounded<F: Fn() + Send + Sync + 'static>(f: F, max_runs: usize) -> Explored {
+    let f: Arc<dyn Fn() + Send + Sync> = Arc::new(f);
+    let mut prefix: Vec<usize> = Vec::new();
+    let mut runs = 0usize;
+    loop {
+        runs += 1;
+        let out = run_once(Arc::clone(&f), &prefix);
+        if let Some(msg) = out.panic {
+            let trace: Vec<usize> = out.choices.iter().map(|c| c.picked).collect();
+            panic!(
+                "loomsim: failure under schedule {trace:?} (run {runs}): {msg}\n\
+                 (each entry picks the n-th runnable thread at that decision point)"
+            );
+        }
+        // DFS backtrack: deepest decision with an untried alternative
+        let mut stack = out.choices;
+        while let Some(last) = stack.last() {
+            if last.picked + 1 < last.options {
+                break;
+            }
+            stack.pop();
+        }
+        match stack.last_mut() {
+            None => return Explored { schedules: runs, complete: true },
+            Some(last) => last.picked += 1,
+        }
+        prefix = stack.iter().map(|c| c.picked).collect();
+        if runs >= max_runs {
+            return Explored { schedules: runs, complete: false };
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::loomsim::atomic::AtomicUsize;
+    use crate::loomsim::thread;
+    use std::sync::atomic::Ordering;
+
+    #[test]
+    fn a_single_thread_has_exactly_one_schedule() {
+        let e = model(|| {
+            let a = AtomicUsize::new(0);
+            a.store(1, Ordering::SeqCst);
+            assert_eq!(a.load(Ordering::SeqCst), 1);
+        });
+        assert_eq!(e.schedules, 1, "no concurrency, no branching");
+    }
+
+    // Schedule counts below: a spawned thread's first grant only
+    // advances it from "not started" to "parked at its first op" — an
+    // *activation* step that interleaves like an op of its own. A child
+    // with k instrumented ops therefore contributes k+1 tokens.
+
+    #[test]
+    fn two_single_op_threads_explore_both_orders() {
+        // root: [store]; child: [activate, store] → C(3,1) = 3
+        // schedules, covering both store orders (one is reached twice).
+        let e = model(|| {
+            let a = std::sync::Arc::new(AtomicUsize::new(0));
+            let a2 = std::sync::Arc::clone(&a);
+            let t = thread::spawn(move || a2.store(1, Ordering::SeqCst));
+            a.store(2, Ordering::SeqCst);
+            t.join();
+        });
+        assert_eq!(e.schedules, 3);
+    }
+
+    #[test]
+    fn interleaving_count_matches_the_binomial() {
+        // root: 2 ops; child: activate + 2 ops → C(5,2) = 10
+        let e = model(|| {
+            let a = std::sync::Arc::new(AtomicUsize::new(0));
+            let a2 = std::sync::Arc::clone(&a);
+            let t = thread::spawn(move || {
+                a2.fetch_add(1, Ordering::SeqCst);
+                a2.fetch_add(1, Ordering::SeqCst);
+            });
+            a.fetch_add(10, Ordering::SeqCst);
+            a.fetch_add(10, Ordering::SeqCst);
+            let _ = t.join();
+        });
+        assert_eq!(e.schedules, 10);
+    }
+
+    #[test]
+    fn exploration_finds_the_lost_update() {
+        // the canonical non-atomic increment: load, then store(x+1).
+        // Exhaustive exploration must observe BOTH outcomes: 2 (serial)
+        // and 1 (both loads before either store — the lost update).
+        use std::sync::Mutex as StdMutex;
+        let outcomes = std::sync::Arc::new(StdMutex::new(std::collections::BTreeSet::new()));
+        let sink = std::sync::Arc::clone(&outcomes);
+        model(move || {
+            let a = std::sync::Arc::new(AtomicUsize::new(0));
+            let (a1, a2) = (std::sync::Arc::clone(&a), std::sync::Arc::clone(&a));
+            let inc = |x: std::sync::Arc<AtomicUsize>| {
+                let v = x.load(Ordering::SeqCst);
+                x.store(v + 1, Ordering::SeqCst);
+            };
+            let t1 = thread::spawn(move || inc(a1));
+            let t2 = thread::spawn(move || inc(a2));
+            t1.join();
+            t2.join();
+            sink.lock().unwrap().insert(a.load(Ordering::SeqCst));
+        });
+        let seen = outcomes.lock().unwrap();
+        assert!(seen.contains(&1), "must find the lost-update interleaving, saw {seen:?}");
+        assert!(seen.contains(&2), "must find the serial interleaving, saw {seen:?}");
+    }
+
+    #[test]
+    fn cas_makes_the_increment_exact_under_every_schedule() {
+        // the fixed version of the test above: a CAS retry loop always
+        // ends at 2 — the assertion runs inside every explored schedule
+        model(|| {
+            let a = std::sync::Arc::new(AtomicUsize::new(0));
+            let (a1, a2) = (std::sync::Arc::clone(&a), std::sync::Arc::clone(&a));
+            let inc = |x: std::sync::Arc<AtomicUsize>| loop {
+                let v = x.load(Ordering::SeqCst);
+                if x.compare_exchange(v, v + 1, Ordering::SeqCst, Ordering::Relaxed).is_ok() {
+                    break;
+                }
+            };
+            let t1 = thread::spawn(move || inc(a1));
+            let t2 = thread::spawn(move || inc(a2));
+            t1.join();
+            t2.join();
+            assert_eq!(a.load(Ordering::SeqCst), 2);
+        });
+    }
+
+    #[test]
+    fn join_returns_the_child_value_and_orders_after_it() {
+        model(|| {
+            let a = std::sync::Arc::new(AtomicUsize::new(0));
+            let a2 = std::sync::Arc::clone(&a);
+            let t = thread::spawn(move || {
+                a2.store(7, Ordering::SeqCst);
+                41
+            });
+            let v = t.join();
+            assert_eq!(v, 41);
+            assert_eq!(a.load(Ordering::SeqCst), 7, "join is a happens-before edge");
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "loomsim: failure under schedule")]
+    fn a_failing_assertion_reports_its_schedule() {
+        model(|| {
+            let a = std::sync::Arc::new(AtomicUsize::new(0));
+            let a2 = std::sync::Arc::clone(&a);
+            let t = thread::spawn(move || a2.store(1, Ordering::SeqCst));
+            let seen = a.load(Ordering::SeqCst);
+            t.join();
+            // fails on the schedule where the child ran first
+            assert_eq!(seen, 0, "deliberate failure for the trace test");
+        });
+    }
+
+    #[test]
+    fn instrumented_atomics_pass_through_outside_a_model() {
+        assert!(!active());
+        let a = AtomicUsize::new(5);
+        assert_eq!(a.fetch_add(2, Ordering::SeqCst), 5);
+        assert_eq!(a.load(Ordering::SeqCst), 7);
+    }
+
+    #[test]
+    fn bounded_exploration_reports_incompleteness_honestly() {
+        // root 6 ops vs child activate+6 ops = C(13,6) = 1716
+        // schedules; a budget of 10 must come back incomplete (and not
+        // panic)
+        let e = model_bounded(
+            || {
+                let a = std::sync::Arc::new(AtomicUsize::new(0));
+                let a2 = std::sync::Arc::clone(&a);
+                let t = thread::spawn(move || {
+                    for _ in 0..6 {
+                        a2.fetch_add(1, Ordering::SeqCst);
+                    }
+                });
+                for _ in 0..6 {
+                    a.fetch_add(1, Ordering::SeqCst);
+                }
+                t.join();
+            },
+            10,
+        );
+        assert!(!e.complete);
+        assert_eq!(e.schedules, 10);
+    }
+}

@@ -1,0 +1,58 @@
+//! The facade `serve::deque` / `serve::slot` compile against.
+//!
+//! * **Release builds** (`cfg(not(any(test, loom)))`): plain
+//!   `std::sync::atomic` re-exports plus a zero-cost `UnsafeCell`
+//!   wrapper with the same access-scoped API — the hot path pays
+//!   nothing for being model-checkable.
+//! * **`cargo test` and `--cfg loom`**: the instrumented wrappers from
+//!   [`super::atomic`] / [`super::cell`], so the interleaving proofs
+//!   run inside ordinary unit tests *and* the dedicated loom CI job.
+//!
+//! Code written against this module must go through `with`/`with_mut`
+//! for payload access and use only the atomic-op subset both sides
+//! provide.
+
+pub use std::sync::atomic::Ordering;
+
+#[cfg(any(test, loom))]
+pub use super::atomic::{
+    fence, AtomicBool, AtomicIsize, AtomicPtr, AtomicU32, AtomicU64, AtomicUsize,
+};
+#[cfg(any(test, loom))]
+pub use super::cell::UnsafeCell;
+
+#[cfg(not(any(test, loom)))]
+pub use std::sync::atomic::{
+    fence, AtomicBool, AtomicIsize, AtomicPtr, AtomicU32, AtomicU64, AtomicUsize,
+};
+
+#[cfg(not(any(test, loom)))]
+mod plain_cell {
+    /// Zero-cost stand-in for the instrumented cell: identical API,
+    /// compiles down to raw `UnsafeCell` accesses.
+    #[derive(Debug, Default)]
+    pub struct UnsafeCell<T>(std::cell::UnsafeCell<T>);
+
+    impl<T> UnsafeCell<T> {
+        pub const fn new(v: T) -> Self {
+            Self(std::cell::UnsafeCell::new(v))
+        }
+
+        pub fn into_inner(self) -> T {
+            self.0.into_inner()
+        }
+
+        #[inline(always)]
+        pub fn with<R>(&self, f: impl FnOnce(*const T) -> R) -> R {
+            f(self.0.get() as *const T)
+        }
+
+        #[inline(always)]
+        pub fn with_mut<R>(&self, f: impl FnOnce(*mut T) -> R) -> R {
+            f(self.0.get())
+        }
+    }
+}
+
+#[cfg(not(any(test, loom)))]
+pub use plain_cell::UnsafeCell;

@@ -1,0 +1,78 @@
+//! Model-aware `thread::spawn`/`join`.
+//!
+//! Inside a [`crate::loomsim::model`] run, spawned closures become
+//! *model threads*: real OS threads registered with the session, gated
+//! so only the baton holder executes, with `join` expressed as a
+//! scheduler-visible blocked state (a happens-before edge the explorer
+//! respects). Outside a model run everything passes straight through
+//! to `std::thread`, so the same test helper works in ordinary stress
+//! tests.
+
+use std::panic::AssertUnwindSafe;
+use std::sync::{Arc, Mutex};
+
+use super::sched;
+
+enum Inner<T> {
+    /// A thread of an active exploration session.
+    Model {
+        sess: Arc<sched::Session>,
+        tid: usize,
+        result: Arc<Mutex<Option<T>>>,
+    },
+    /// Plain OS thread (spawned outside any model run).
+    Os(std::thread::JoinHandle<T>),
+}
+
+pub struct JoinHandle<T> {
+    inner: Inner<T>,
+}
+
+/// Spawn a thread. Under a model run the child is registered with the
+/// session and starts parked; it takes its first step only when the
+/// scheduler grants it the baton.
+pub fn spawn<F, T>(f: F) -> JoinHandle<T>
+where
+    F: FnOnce() -> T + Send + 'static,
+    T: Send + 'static,
+{
+    match sched::current() {
+        None => JoinHandle { inner: Inner::Os(std::thread::spawn(f)) },
+        Some((sess, _me)) => {
+            let tid = sess.register();
+            let result: Arc<Mutex<Option<T>>> = Arc::new(Mutex::new(None));
+            let sink = Arc::clone(&result);
+            let child_sess = Arc::clone(&sess);
+            let h = std::thread::spawn(move || {
+                let body = AssertUnwindSafe(move || {
+                    let v = f();
+                    *sink.lock().unwrap() = Some(v);
+                });
+                sched::run_controlled(child_sess, tid, body);
+            });
+            sess.set_handle(tid, h);
+            JoinHandle { inner: Inner::Model { sess, tid, result } }
+        }
+    }
+}
+
+impl<T> JoinHandle<T> {
+    /// Wait for the thread and return its value. Model join is a
+    /// scheduler-visible block: the caller is unrunnable until the
+    /// target finishes, then resumes when granted the baton.
+    pub fn join(self) -> T {
+        match self.inner {
+            Inner::Os(h) => h.join().expect("loomsim: joined thread panicked"),
+            Inner::Model { sess, tid, result } => {
+                let (_, me) = sched::current()
+                    .expect("loomsim: model JoinHandle joined from outside its model run");
+                sess.join_wait(me, tid);
+                result
+                    .lock()
+                    .unwrap()
+                    .take()
+                    .expect("loomsim: joined model thread panicked before producing a value")
+            }
+        }
+    }
+}

@@ -294,7 +294,10 @@ pub fn rules_for(schema: &str) -> &'static [Rule] {
             },
             Rule { path: "scenarios.*.accuracy", tol: Tolerance::RelTol(REL), why: "derived float" },
         ],
-        "hyca-perf-bench-v1" => &[
+        // v2 added the deque axis (mutex/lockfree rows) and a home_set
+        // column to the timing section; the deterministic section is
+        // byte-frozen across the bump, so the rules are identical
+        "hyca-perf-bench-v1" | "hyca-perf-bench-v2" => &[
             Rule {
                 path: "timing",
                 tol: Tolerance::Ignore,

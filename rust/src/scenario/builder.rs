@@ -43,6 +43,7 @@ impl ScenarioBuilder {
                 driver: Driver::Fleet,
                 seed: 0xC0FFEE,
                 topology: Vec::new(),
+                home_set: 1,
                 workload: Workload {
                     mode: TrafficMode::Closed,
                     clients: ClientLoad::Saturate { per_lane_slot: 1, min: 8 },
@@ -88,6 +89,14 @@ impl ScenarioBuilder {
         for _ in 0..n {
             self = self.chip(rows, cols, lanes);
         }
+        self
+    }
+
+    /// Executor home-set width: each chip's jobs spread over this many
+    /// adjacent worker threads (wall-clock placement only; default 1 =
+    /// single-home).
+    pub fn home_set(mut self, k: usize) -> Self {
+        self.spec.home_set = k;
         self
     }
 

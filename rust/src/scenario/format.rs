@@ -15,6 +15,8 @@
 //!
 //! [topology]                         # one line per chip, in order
 //! chip = <rows>x<cols> lanes=<n>
+//! home_set = <n>                     # executor home-set width;
+//!                                    #   default 1, omitted when 1
 //!
 //! [workload]
 //! mode = closed                      # default; omitted when closed
@@ -66,10 +68,11 @@
 //! rate_scale = <f64>,... [smoke ...]  # open mode only
 //! ```
 //!
-//! New-in-v1.1 keys (`mode`, `spatial`, the `[slo]` section) and the
-//! v1.2 `[engine]` section are rendered **only when they differ from
-//! their defaults**, so the canonical strings — and therefore the spec
-//! hashes — of pre-existing specs are unchanged.
+//! New-in-v1.1 keys (`mode`, `spatial`, the `[slo]` section), the
+//! v1.2 `[engine]` section, and the v1.3 `home_set` key are rendered
+//! **only when they differ from their defaults**, so the canonical
+//! strings — and therefore the spec hashes — of pre-existing specs are
+//! unchanged.
 
 use crate::array::Dims;
 use crate::faults::Spatial;
@@ -125,6 +128,10 @@ pub fn to_canonical_string(spec: &ScenarioSpec) -> String {
     s.push_str("\n[topology]\n");
     for c in &spec.topology {
         s.push_str(&format!("chip = {} lanes={}\n", c.dims, c.lanes));
+    }
+    // rendered only when non-default so pre-v1.3 spec hashes stand
+    if spec.home_set != 1 {
+        s.push_str(&format!("home_set = {}\n", spec.home_set));
     }
     s.push_str("\n[workload]\n");
     let w = &spec.workload;
@@ -429,6 +436,7 @@ pub fn parse(text: &str) -> Result<ScenarioSpec, ScenarioError> {
                 }
                 spec.topology.push(ChipDef { dims, lanes });
             }
+            ("topology", "home_set") => spec.home_set = parse_usize(value, line)?,
             ("workload", "mode") => {
                 let toks: Vec<&str> = value.split_whitespace().collect();
                 open_curve = match toks.as_slice() {
@@ -719,6 +727,24 @@ chip = 16x16 lanes=1
         assert_eq!(spec.topology.len(), 2);
         assert_eq!(spec.topology[1].dims, Dims::new(16, 16));
         assert_eq!(spec.topology[1].lanes, 1);
+    }
+
+    #[test]
+    fn home_set_parses_round_trips_and_stays_out_of_default_renders() {
+        let base = "scenario \"x\"\n[topology]\nchip = 8x8 lanes=2\n";
+        // default 1: absent from the canonical render (hash stability)
+        let s = ScenarioSpec::parse(base).unwrap();
+        assert_eq!(s.home_set, 1);
+        assert!(!s.to_canonical_string().contains("home_set"));
+        // explicit width parses and round-trips
+        let s = ScenarioSpec::parse(&format!("{base}home_set = 3\n")).unwrap();
+        assert_eq!(s.home_set, 3);
+        let text = s.to_canonical_string();
+        assert!(text.contains("home_set = 3"));
+        assert_eq!(ScenarioSpec::parse(&text).unwrap(), s);
+        // zero is a typed validation error
+        let e = ScenarioSpec::parse(&format!("{base}home_set = 0\n")).unwrap_err();
+        assert_eq!(e, ScenarioError::ZeroHomeSet);
     }
 
     #[test]

@@ -129,6 +129,7 @@ pub fn lower_fleet(
         // every admitted request queues at once
         queue_cap: if spec.workload.mode.is_open() { total } else { clients },
         executor_threads,
+        home_set: spec.home_set,
         windows: spec.workload.windows,
         faults: fault_plan(spec, cell, smoke),
         lifecycle: spec.lifecycle,
@@ -263,6 +264,19 @@ mod tests {
             .unwrap();
         let plan = fault_plan(&spec, &Cell::base(&spec), false).unwrap();
         assert_eq!(plan.spatial, Spatial::Clustered);
+    }
+
+    #[test]
+    fn home_set_lowers_into_the_fleet_config() {
+        let spec = crate::scenario::ScenarioBuilder::new("t")
+            .chips(2, 8, 8, 2)
+            .home_set(2)
+            .build()
+            .unwrap();
+        assert_eq!(lower_fleet(&spec, &Cell::base(&spec), false, 1, 4).home_set, 2);
+        // the builder default stays at the legacy single home
+        let spec = crate::scenario::ScenarioBuilder::new("t").chips(2, 8, 8, 2).build().unwrap();
+        assert_eq!(lower_fleet(&spec, &Cell::base(&spec), false, 1, 4).home_set, 1);
     }
 
     #[test]

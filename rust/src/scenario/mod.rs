@@ -269,6 +269,13 @@ pub struct ScenarioSpec {
     /// Default master seed (`repro scenario --seed` overrides).
     pub seed: u64,
     pub topology: Vec<ChipDef>,
+    /// Executor home-*set* width: how many adjacent worker threads each
+    /// chip's jobs spread over (see
+    /// [`crate::serve::executor::ExecPlan::home_set`]). Wall-clock
+    /// placement only — never observable in any metric; rendered in
+    /// `[topology]` only when ≠ 1 so pre-existing spec hashes are
+    /// unchanged.
+    pub home_set: usize,
     pub workload: Workload,
     pub faults: Option<FaultEnv>,
     pub redundancy: Redundancy,
@@ -289,6 +296,8 @@ pub enum ScenarioError {
     BadName(String),
     #[error("scenario needs at least one chip in [topology]")]
     EmptyTopology,
+    #[error("home_set must be at least 1 (the legacy single-home placement)")]
+    ZeroHomeSet,
     #[error("chip {chip}: array {rows}x{cols} has a zero dimension")]
     BadDims { chip: usize, rows: usize, cols: usize },
     #[error("chip {chip}: needs at least one lane")]
@@ -363,6 +372,9 @@ impl ScenarioSpec {
         }
         if self.topology.is_empty() {
             return Err(ScenarioError::EmptyTopology);
+        }
+        if self.home_set == 0 {
+            return Err(ScenarioError::ZeroHomeSet);
         }
         for (chip, c) in self.topology.iter().enumerate() {
             if c.dims.rows == 0 || c.dims.cols == 0 {

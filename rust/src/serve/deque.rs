@@ -1,0 +1,583 @@
+//! Work-stealing deques: the lock-free Chase-Lev ring and the mutex
+//! baseline it is measured against (DESIGN.md §8).
+//!
+//! ## The lock-free deque
+//!
+//! [`lf_deque`] returns a single-owner [`Worker`] plus cloneable
+//! [`Stealer`] handles over one ring:
+//!
+//! * `top` and `bottom` are **monotone** `isize` indices into an
+//!   infinite virtual array; a slot is `index & (capacity - 1)` of the
+//!   current power-of-two ring. Indices never decrease (pop restores
+//!   `bottom` but the *taken* index is consumed via `top`), so there is
+//!   no index-reuse ABA on the CAS — the classic hazard lives in
+//!   **slot** reuse across wrap-around instead, and is resolved below.
+//! * The owner pushes and pops at `bottom` (LIFO); thieves race each
+//!   other and the owner's last-element pop with one CAS on `top`
+//!   (FIFO). The executor loads jobs in *reverse* id order, so the
+//!   owner's LIFO pop walks ascending job ids and thieves lift the
+//!   highest ids — observably identical to the mutex deque's
+//!   `pop_front`/`steal_back` ends.
+//! * A full ring **grows** by copying the live window into a ring of
+//!   twice the capacity and publishing it with a `Release` store of the
+//!   buffer pointer. The old ring is *parked* (owned by the new ring's
+//!   `prev` chain) rather than freed, so a thief still holding the old
+//!   pointer reads valid memory; every parked ring is freed when the
+//!   deque drops. This trades a bounded amount of memory (< 2× the
+//!   peak ring) for not needing epoch/hazard-pointer reclamation.
+//! * **Slot-reuse hazard:** a slow thief can read slot `t & mask`
+//!   *after* the owner overwrote it (wrap-around) or re-targeted the
+//!   ring (grow). Both are only possible once `top` has moved past
+//!   `t` — so the thief's `compare_exchange(top: t → t+1)` fails, the
+//!   stale value is discarded via [`std::mem::forget`] (never dropped,
+//!   never surfaced), and the thief reports [`Steal::Retry`]. A
+//!   *successful* CAS proves no other taker consumed index `t` and the
+//!   owner never reached the overwrite condition — the read was valid.
+//! * The stale read itself races the owner's slot write. The slots are
+//!   `UnsafeCell<MaybeUninit<T>>` accessed through raw pointers (the
+//!   same benign-race posture as crossbeam-deque, pending atomic
+//!   memcpy); under the loomsim model every slot access is a yield
+//!   point, so the interleaving proofs drive exactly this window.
+//!
+//! Orderings follow Lê/Pop/Cohen "Correct and Efficient Work-Stealing
+//! for Weak Memory Models" (PPoPP'13); the pairing table is in
+//! DESIGN.md §8. The interleaving proofs (`serve::proofs`, run by both
+//! `cargo test` and the `--cfg loom` CI job) explore the protocol
+//! under sequential consistency via [`crate::loomsim`].
+//!
+//! ## The mutex baseline
+//!
+//! [`MutexDeque`] is PR 5's deque — a `Mutex<VecDeque>` with owner
+//! front / thief back ends. It stays fully supported (selected by
+//! [`DequeImpl::Mutex`]) because it is the measured baseline of
+//! `repro perf`: the lockfree-vs-mutex rows in `BENCH_perf.json` are
+//! the evidence that deleting the mutex paid.
+
+use std::collections::VecDeque;
+use std::marker::PhantomData;
+use std::mem::MaybeUninit;
+use std::sync::{Arc, Mutex};
+
+use crate::loomsim::sync::{fence, AtomicIsize, AtomicPtr, Ordering, UnsafeCell};
+
+/// Which deque implementation the work-stealing executor runs on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DequeImpl {
+    /// PR 5's `Mutex<VecDeque>` — the measured baseline.
+    Mutex,
+    /// The Chase-Lev atomic ring (this module's [`Worker`]/[`Stealer`]).
+    LockFree,
+}
+
+impl DequeImpl {
+    /// Stable label used in `BENCH_perf.json` rows and bench names.
+    pub fn label(&self) -> &'static str {
+        match self {
+            DequeImpl::Mutex => "mutex",
+            DequeImpl::LockFree => "lockfree",
+        }
+    }
+}
+
+/// Outcome of one steal attempt.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Steal<T> {
+    /// Took this item.
+    Done(T),
+    /// The deque was observed empty (`top >= bottom`).
+    Empty,
+    /// Lost a race (another taker moved `top` first) — the deque may
+    /// still hold work; re-scan after backoff.
+    Retry,
+}
+
+/// Default initial ring capacity (power of two; grows on demand).
+const MIN_CAP: usize = 64;
+
+/// One ring generation. `prev` parks the ring this one replaced, so
+/// pointers handed to thieves before a grow stay valid until the deque
+/// drops (retired-ring parking instead of epoch reclamation).
+struct Ring<T> {
+    cap: usize,
+    mask: usize,
+    prev: Option<Box<Ring<T>>>,
+    slots: Box<[UnsafeCell<MaybeUninit<T>>]>,
+}
+
+impl<T> Ring<T> {
+    fn new(cap: usize) -> Ring<T> {
+        debug_assert!(cap.is_power_of_two(), "ring capacity must be a power of two");
+        let slots: Box<[UnsafeCell<MaybeUninit<T>>]> =
+            (0..cap).map(|_| UnsafeCell::new(MaybeUninit::uninit())).collect();
+        Ring { cap, mask: cap - 1, prev: None, slots }
+    }
+
+    /// Write virtual index `i`. Caller must be the owner and `i` must
+    /// be outside every concurrent reader's validated window.
+    fn put(&self, i: isize, v: T) {
+        self.slots[(i as usize) & self.mask].with_mut(|p| unsafe {
+            (*p).write(v);
+        });
+    }
+
+    /// Bitwise-read virtual index `i`. The caller must either own the
+    /// index (owner pop / drop) or treat the value as unvalidated until
+    /// its `top` CAS succeeds (`mem::forget` it on failure) — the slot
+    /// may be concurrently overwritten once `top` passes `i`.
+    fn read_at(&self, i: isize) -> T {
+        self.slots[(i as usize) & self.mask].with(|p| unsafe { (*p).assume_init_read() })
+    }
+}
+
+struct Inner<T> {
+    /// Thief end: next index to steal. Only ever incremented, via CAS.
+    top: AtomicIsize,
+    /// Owner end: next index to push. Only the owner writes it.
+    bottom: AtomicIsize,
+    /// Current ring; owner-swapped on grow, parked rings chain off it.
+    buf: AtomicPtr<Ring<T>>,
+}
+
+unsafe impl<T: Send> Send for Inner<T> {}
+unsafe impl<T: Send> Sync for Inner<T> {}
+
+impl<T> Inner<T> {
+    fn with_capacity(cap: usize) -> Inner<T> {
+        let cap = cap.next_power_of_two().max(1);
+        Inner {
+            top: AtomicIsize::new(0),
+            bottom: AtomicIsize::new(0),
+            buf: AtomicPtr::new(Box::into_raw(Box::new(Ring::new(cap)))),
+        }
+    }
+
+    /// Owner-only: double the ring, copying the live `[t, b)` window.
+    /// Publishing with `Release` pairs with the thief's `Acquire` load
+    /// of `buf`, so a thief that sees the new ring sees its contents.
+    fn grow(&self, old: *mut Ring<T>, t: isize, b: isize) -> *mut Ring<T> {
+        let old_box = unsafe { Box::from_raw(old) };
+        let mut bigger = Ring::new(old_box.cap * 2);
+        for i in t..b {
+            bigger.put(i, old_box.read_at(i));
+        }
+        bigger.prev = Some(old_box); // park: stale thief pointers stay valid
+        let fresh = Box::into_raw(Box::new(bigger));
+        self.buf.store(fresh, Ordering::Release);
+        fresh
+    }
+
+    /// Owner-only push at `bottom`.
+    fn push(&self, v: T) {
+        let b = self.bottom.load(Ordering::Relaxed);
+        let t = self.top.load(Ordering::Acquire);
+        let mut ring = self.buf.load(Ordering::Relaxed);
+        if b - t >= unsafe { (*ring).cap } as isize {
+            ring = self.grow(ring, t, b);
+        }
+        unsafe { (*ring).put(b, v) };
+        // the slot write must be visible before the published `bottom`
+        // that makes it stealable (pairs with steal's SeqCst/Acquire)
+        fence(Ordering::Release);
+        self.bottom.store(b + 1, Ordering::Relaxed);
+    }
+
+    /// Owner-only pop at `bottom` (LIFO). The *last* element races the
+    /// thieves: both sides decide it through the same CAS on `top`.
+    fn pop(&self) -> Option<T> {
+        let b = self.bottom.load(Ordering::Relaxed) - 1;
+        let ring = self.buf.load(Ordering::Relaxed);
+        self.bottom.store(b, Ordering::Relaxed);
+        // the `bottom` reservation must be ordered before the `top`
+        // read — this fence against steal's fence is what makes the
+        // owner and a concurrent thief disagree on at most one index
+        fence(Ordering::SeqCst);
+        let t = self.top.load(Ordering::Relaxed);
+        if t > b {
+            // empty: undo the reservation
+            self.bottom.store(b + 1, Ordering::Relaxed);
+            return None;
+        }
+        let v = ring_read(ring, b);
+        if t == b {
+            // last element: win it against the thieves or concede it
+            let won =
+                self.top.compare_exchange(t, t + 1, Ordering::SeqCst, Ordering::Relaxed).is_ok();
+            self.bottom.store(b + 1, Ordering::Relaxed);
+            if !won {
+                std::mem::forget(v); // a thief validated this index
+                return None;
+            }
+            return Some(v);
+        }
+        Some(v)
+    }
+
+    /// Thief: take the oldest element, or report why not.
+    fn steal(&self) -> Steal<T> {
+        let t = self.top.load(Ordering::Acquire);
+        fence(Ordering::SeqCst);
+        let b = self.bottom.load(Ordering::Acquire);
+        if t >= b {
+            return Steal::Empty;
+        }
+        let ring = self.buf.load(Ordering::Acquire);
+        let v = ring_read(ring, t);
+        if self.top.compare_exchange(t, t + 1, Ordering::SeqCst, Ordering::Relaxed).is_err() {
+            // lost the index: the read above may be stale — discard it
+            // unseen (never drop a bitwise duplicate)
+            std::mem::forget(v);
+            return Steal::Retry;
+        }
+        Steal::Done(v)
+    }
+}
+
+/// Shared read helper (owner pop and thief steal): bitwise-read a slot
+/// of a ring behind a raw pointer.
+fn ring_read<T>(ring: *mut Ring<T>, i: isize) -> T {
+    unsafe { (*ring).read_at(i) }
+}
+
+impl<T> Drop for Inner<T> {
+    fn drop(&mut self) {
+        // exclusive access: drop the live window, then the ring chain
+        let t = self.top.load(Ordering::Relaxed);
+        let b = self.bottom.load(Ordering::Relaxed);
+        let ring = self.buf.load(Ordering::Relaxed);
+        for i in t..b {
+            drop(ring_read(ring, i));
+        }
+        drop(unsafe { Box::from_raw(ring) });
+    }
+}
+
+/// The owner handle: push/pop end of one lock-free deque. Exactly one
+/// per deque — not `Clone`, and `!Sync` (the `PhantomData<Cell>`), so
+/// owner-only operations are single-threaded by construction. `Send`,
+/// so the executor can load jobs on the main thread and move the
+/// worker into its OS thread.
+pub struct Worker<T> {
+    inner: Arc<Inner<T>>,
+    _single_owner: PhantomData<std::cell::Cell<()>>,
+}
+
+/// A thief handle: `Clone + Send + Sync`, any thread may steal.
+pub struct Stealer<T> {
+    inner: Arc<Inner<T>>,
+}
+
+impl<T> Clone for Stealer<T> {
+    fn clone(&self) -> Self {
+        Stealer { inner: Arc::clone(&self.inner) }
+    }
+}
+
+/// Create a lock-free deque with the default initial capacity.
+pub fn lf_deque<T>() -> (Worker<T>, Stealer<T>) {
+    lf_deque_with_capacity(MIN_CAP)
+}
+
+/// [`lf_deque`] with an explicit initial capacity (rounded up to a
+/// power of two) — lets tests start tiny to force growth/wrap-around.
+pub fn lf_deque_with_capacity<T>(cap: usize) -> (Worker<T>, Stealer<T>) {
+    let inner = Arc::new(Inner::with_capacity(cap));
+    (
+        Worker { inner: Arc::clone(&inner), _single_owner: PhantomData },
+        Stealer { inner },
+    )
+}
+
+impl<T> Worker<T> {
+    pub fn push(&self, v: T) {
+        self.inner.push(v);
+    }
+
+    /// Owner pop (LIFO end). `None` means the deque is empty *for the
+    /// owner forever* if nothing pushes again — the executor's exit
+    /// condition for a drained home deque.
+    pub fn pop(&self) -> Option<T> {
+        self.inner.pop()
+    }
+}
+
+impl<T> Stealer<T> {
+    pub fn steal(&self) -> Steal<T> {
+        self.inner.steal()
+    }
+}
+
+/// Spin→yield backoff ladder for dry workers (the steal scan): short
+/// exponential `spin_loop` bursts first (cheap, keeps the thread hot
+/// for an imminent retry), then `yield_now` so an idle worker stops
+/// burning a core at high `--workers` counts. Wall-clock only — no
+/// timers, no sleeping, no effect on any simulated-cycle metric.
+#[derive(Debug, Default)]
+pub struct Backoff {
+    step: u32,
+}
+
+impl Backoff {
+    /// Spin (2^step iterations) up to this step, yield beyond it.
+    const SPIN_LIMIT: u32 = 6;
+
+    pub fn new() -> Self {
+        Backoff { step: 0 }
+    }
+
+    /// Forget accumulated pressure (call after useful work was found).
+    pub fn reset(&mut self) {
+        self.step = 0;
+    }
+
+    /// One rung of the ladder: spin while young, yield once saturated.
+    pub fn snooze(&mut self) {
+        if self.step <= Self::SPIN_LIMIT {
+            for _ in 0..(1u32 << self.step) {
+                std::hint::spin_loop();
+            }
+            self.step += 1;
+        } else {
+            std::thread::yield_now();
+        }
+    }
+
+    /// `true` once the ladder escalated past spinning (test hook).
+    pub fn is_yielding(&self) -> bool {
+        self.step > Self::SPIN_LIMIT
+    }
+}
+
+/// PR 5's deque: owner end = front (FIFO in job-id order), thief end =
+/// back — the Chase-Lev discipline over one short mutex. Retained as
+/// the measured baseline ([`DequeImpl::Mutex`]) that the lock-free
+/// rows of `BENCH_perf.json` are compared against.
+pub struct MutexDeque<T> {
+    inner: Mutex<VecDeque<T>>,
+}
+
+impl<T> Default for MutexDeque<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T> MutexDeque<T> {
+    pub fn new() -> Self {
+        Self { inner: Mutex::new(VecDeque::new()) }
+    }
+
+    /// Enqueue at the owner's processing tail (jobs are loaded in id
+    /// order before the workers start).
+    pub fn push_back(&self, item: T) {
+        self.inner.lock().unwrap().push_back(item);
+    }
+
+    /// Owner end: next job in id order.
+    pub fn pop_front(&self) -> Option<T> {
+        self.inner.lock().unwrap().pop_front()
+    }
+
+    /// Thief end: the job farthest from the owner's current locality.
+    pub fn steal_back(&self) -> Option<T> {
+        self.inner.lock().unwrap().pop_back()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn owner_pops_lifo_and_thief_steals_fifo() {
+        let (w, s) = lf_deque::<u32>();
+        w.push(1);
+        w.push(2);
+        w.push(3);
+        assert_eq!(s.steal(), Steal::Done(1), "thief end is the oldest push");
+        assert_eq!(w.pop(), Some(3), "owner end is the newest push");
+        assert_eq!(w.pop(), Some(2));
+        assert_eq!(w.pop(), None);
+        assert_eq!(s.steal(), Steal::Empty);
+    }
+
+    #[test]
+    fn empty_pop_and_empty_steal_are_clean() {
+        let (w, s) = lf_deque::<u32>();
+        assert_eq!(w.pop(), None);
+        assert_eq!(s.steal(), Steal::Empty);
+        // and again after a full drain cycle
+        w.push(9);
+        assert_eq!(w.pop(), Some(9));
+        assert_eq!(w.pop(), None);
+        assert_eq!(s.steal(), Steal::Empty);
+    }
+
+    #[test]
+    fn ring_growth_preserves_every_item_and_both_orders() {
+        // start at capacity 2 and push far past it: every grow must
+        // copy the live window intact
+        let (w, s) = lf_deque_with_capacity::<usize>(2);
+        for i in 0..100 {
+            w.push(i);
+        }
+        // thieves see oldest-first, owner sees newest-first
+        assert_eq!(s.steal(), Steal::Done(0));
+        assert_eq!(s.steal(), Steal::Done(1));
+        let mut owner_side = Vec::new();
+        while let Some(v) = w.pop() {
+            owner_side.push(v);
+        }
+        assert_eq!(owner_side, (2..100).rev().collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn wrap_around_reuses_slots_without_losing_items() {
+        // steady-state size 2 in a capacity-4 ring, cycled far beyond
+        // the capacity: virtual indices wrap the mask many times
+        let (w, s) = lf_deque_with_capacity::<usize>(4);
+        w.push(0);
+        w.push(1);
+        let mut taken = Vec::new();
+        for i in 2..66 {
+            w.push(i);
+            match s.steal() {
+                Steal::Done(v) => taken.push(v),
+                other => panic!("uncontended steal must succeed, got {other:?}"),
+            }
+        }
+        taken.extend(std::iter::from_fn(|| w.pop()));
+        taken.sort_unstable();
+        assert_eq!(taken, (0..66).collect::<Vec<_>>(), "every index exactly once");
+    }
+
+    #[test]
+    fn self_steal_from_the_owner_thread_cannot_deadlock() {
+        // lock-free: the owner thread may steal from its own deque (the
+        // executor never does, but nothing blocks) — opposite ends
+        let (w, s) = lf_deque::<u32>();
+        w.push(7);
+        w.push(8);
+        assert_eq!(s.steal(), Steal::Done(7));
+        assert_eq!(w.pop(), Some(8));
+        assert_eq!(s.steal(), Steal::Empty);
+    }
+
+    #[test]
+    fn dropping_a_nonempty_deque_frees_the_live_window() {
+        // droppable payloads in the live window and in parked rings:
+        // every Arc must come back down to one owner
+        let probe = Arc::new(());
+        {
+            let (w, _s) = lf_deque_with_capacity::<Arc<()>>(2);
+            for _ in 0..10 {
+                w.push(Arc::clone(&probe)); // forces grows → parked rings
+            }
+            let _ = w.pop(); // one value dropped by hand
+        }
+        assert_eq!(Arc::strong_count(&probe), 1, "no leaks, no double frees");
+    }
+
+    #[test]
+    fn stress_many_thieves_take_each_item_exactly_once() {
+        // real-thread smoke (the exhaustive version is serve::proofs):
+        // owner pushes and pops while 3 thieves steal; every item must
+        // surface exactly once across all takers
+        const ITEMS: usize = 2_000;
+        const THIEVES: usize = 3;
+        let (w, s) = lf_deque_with_capacity::<usize>(2);
+        let done = std::sync::atomic::AtomicBool::new(false);
+        let mut all: Vec<usize> = std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..THIEVES)
+                .map(|_| {
+                    let s = s.clone();
+                    let done = &done;
+                    scope.spawn(move || {
+                        let mut got = Vec::new();
+                        let mut backoff = Backoff::new();
+                        loop {
+                            match s.steal() {
+                                Steal::Done(v) => {
+                                    got.push(v);
+                                    backoff.reset();
+                                }
+                                Steal::Retry => backoff.snooze(),
+                                Steal::Empty => {
+                                    if done.load(std::sync::atomic::Ordering::Acquire) {
+                                        break;
+                                    }
+                                    backoff.snooze();
+                                }
+                            }
+                        }
+                        got
+                    })
+                })
+                .collect();
+            let mut mine = Vec::new();
+            for i in 0..ITEMS {
+                w.push(i);
+                if i % 3 == 0 {
+                    mine.extend(w.pop());
+                }
+            }
+            while let Some(v) = w.pop() {
+                mine.push(v);
+            }
+            done.store(true, std::sync::atomic::Ordering::Release);
+            for h in handles {
+                mine.extend(h.join().unwrap());
+            }
+            mine
+        });
+        all.sort_unstable();
+        assert_eq!(all, (0..ITEMS).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn backoff_ladder_escalates_from_spin_to_yield() {
+        let mut b = Backoff::new();
+        assert!(!b.is_yielding(), "fresh ladder spins");
+        for _ in 0..=Backoff::SPIN_LIMIT {
+            b.snooze();
+        }
+        assert!(b.is_yielding(), "saturated ladder yields");
+        b.snooze(); // yielding rung is sticky and cheap
+        assert!(b.is_yielding());
+        b.reset();
+        assert!(!b.is_yielding(), "reset drops back to spinning");
+    }
+
+    #[test]
+    fn mutex_deque_owner_and_thief_take_opposite_ends() {
+        let d: MutexDeque<u32> = MutexDeque::new();
+        d.push_back(1);
+        d.push_back(2);
+        d.push_back(3);
+        assert_eq!(d.pop_front(), Some(1), "owner end is the front");
+        assert_eq!(d.steal_back(), Some(3), "thief end is the back");
+        assert_eq!(d.pop_front(), Some(2));
+        assert_eq!(d.steal_back(), None);
+        assert_eq!(d.pop_front(), None);
+    }
+
+    #[test]
+    fn lockfree_ends_mirror_the_mutex_baseline_under_reverse_load() {
+        // the executor loads the lock-free deque in reverse id order;
+        // this is the equivalence that keeps both impls on one contract
+        let ids = [10u32, 11, 12, 13];
+        let m: MutexDeque<u32> = MutexDeque::new();
+        for &i in &ids {
+            m.push_back(i);
+        }
+        let (w, s) = lf_deque::<u32>();
+        for &i in ids.iter().rev() {
+            w.push(i);
+        }
+        assert_eq!(m.pop_front(), Some(10));
+        assert_eq!(w.pop(), Some(10));
+        assert_eq!(m.steal_back(), Some(13));
+        assert_eq!(s.steal(), Steal::Done(13));
+        assert_eq!(m.pop_front(), Some(11));
+        assert_eq!(w.pop(), Some(11));
+    }
+}

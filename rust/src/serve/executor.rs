@@ -3,33 +3,44 @@
 //!
 //! PR 2's pool replayed every job through **one** shared
 //! [`BoundedQueue`]: correct, but a scaling cliff — every pop crosses
-//! the same mutex, and a fleet's per-chip mask epochs ping-pong between
-//! whichever workers happen to grab them. This module replaces that hot
-//! path with **per-worker deques + Chase-Lev-style stealing**:
+//! the same mutex. PR 5 split the hot path into per-worker deques with
+//! Chase-Lev-style stealing, "over one short mutex" per deque. This
+//! revision deletes those mutexes: the deques are real lock-free
+//! Chase-Lev rings ([`super::deque`]) and the per-job result slots are
+//! one-shot atomic publications ([`super::slot`]) — with the protocol
+//! proved by exhaustive interleaving exploration first
+//! (`serve::proofs`, via [`crate::loomsim`]), because deleting a mutex
+//! is only safe *after* the protocol is. The topology:
 //!
-//! * every job has a *home worker* (`affinity[job] % threads`; the
-//!   fleet passes chip ids, so one chip's jobs stay on one worker and
-//!   its mask epochs stay cache-warm — including the native backend's
-//!   transposed-mask cache lookups, which then hit in a tight loop);
-//! * the owner drains its deque from the **front** (job-id order =
-//!   epoch order), thieves steal from the **back** (the work least
-//!   likely to share an epoch with what the owner touches next) — the
-//!   two ends of a Chase-Lev deque, here guarded by one short
-//!   uncontended mutex per deque instead of a lock-free ring, because
-//!   jobs are coarse (a whole batch inference) and the deque is touched
-//!   once per job;
-//! * a worker that runs dry scans the other deques round-robin from its
-//!   right neighbour and steals one job at a time; with stealing off it
-//!   simply exits (the static-partition baseline `repro perf` measures
-//!   stealing against).
+//! * every job has a **home set** of workers: affinity `a` with
+//!   `home_set = k` maps job `j` to worker `(a + j % k) % threads`, so
+//!   one hot chip on a wide pool spreads over `k` workers instead of
+//!   serializing on one (`k = 1` is PR 5's single-home behaviour; the
+//!   fleet passes chip ids, so a chip's mask epochs stay on a small,
+//!   warm set of workers);
+//! * the owner drains its deque in job-id order (jobs are loaded in
+//!   reverse id order, so the ring's LIFO owner end pops ascending
+//!   ids); thieves steal the highest ids — the work least likely to
+//!   share a mask epoch with what the owner touches next;
+//! * a dry worker scans the other deques — **set peers first** (the
+//!   workers within `k` of it, which share its chips' home sets), then
+//!   the rest round-robin from its right neighbour. All-`Empty` means
+//!   done (owners always drain their own deque, so no job is
+//!   orphaned); any `Retry` means a race was lost, and the worker
+//!   climbs a spin→yield [`Backoff`] ladder instead of burning a core;
+//! * [`DequeImpl`] selects the ring: [`DequeImpl::Mutex`] keeps PR 5's
+//!   mutex deque alive as the measured baseline — the mutex-vs-lockfree
+//!   rows of `BENCH_perf.json` are the evidence this revision pays —
+//!   and [`ExecMode::SharedQueue`] keeps the PR 2 single-queue
+//!   baseline.
 //!
 //! **Why bit-exactness survives:** every job is a pure function of its
-//! image indices and masks, and every result lands in a slot keyed by
-//! job id — so the prediction vector is byte-identical at any thread
-//! count, any affinity map, any steal interleaving, and under the
-//! legacy shared queue. `rust/tests/proptests.rs` pins this across
-//! random modes; `repro perf` re-asserts it at runtime on every timed
-//! cell.
+//! image indices and masks, and every result lands in the slot keyed by
+//! its job id — so the prediction vector is byte-identical at any
+//! thread count, any affinity map, any home-set width, any steal
+//! interleaving, and under every [`DequeImpl`].
+//! `rust/tests/proptests.rs` pins this across random plans; `repro
+//! perf` re-asserts it at runtime on every timed cell.
 //!
 //! This file is the **only** serve/fleet/scenario source allowed to
 //! touch `std::time::Instant` (the CI simulated-time lint exempts
@@ -40,16 +51,19 @@
 //! harness and the (digest-excluded) steal counters.
 
 use std::borrow::Borrow;
-use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use anyhow::{Context, Result};
 
+use super::deque::{lf_deque, Backoff, MutexDeque, Steal, Stealer, Worker};
 use super::queue::BoundedQueue;
+use super::slot::OnceSlot;
 use super::BatchJob;
 use crate::inference::Engine;
+
+pub use super::deque::DequeImpl;
 
 /// How the executor distributes jobs over its worker threads.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -58,20 +72,63 @@ pub enum ExecMode {
     /// worker pops from. Kept as the measured baseline of `repro perf`
     /// and `benches/executor.rs`.
     SharedQueue,
-    /// Per-worker deques with home affinity; `steal: true` lets dry
-    /// workers take from the back of other deques, `steal: false` is
-    /// the static partition (each worker serves exactly its home jobs).
+    /// Per-worker deques with home-set affinity; `steal: true` lets dry
+    /// workers take from other deques, `steal: false` is the static
+    /// partition (each worker serves exactly its home jobs).
     WorkSteal { steal: bool },
 }
 
-impl ExecMode {
-    /// Stable label used in `BENCH_perf.json` rows and bench names.
-    pub fn label(&self) -> &'static str {
-        match self {
-            ExecMode::SharedQueue => "shared",
-            ExecMode::WorkSteal { steal: false } => "steal_off",
-            ExecMode::WorkSteal { steal: true } => "steal_on",
+/// A fully-specified execution: what runs where, on which deque.
+#[derive(Debug, Clone, Copy)]
+pub struct ExecPlan<'a> {
+    /// Worker threads (clamped to ≥ 1).
+    pub threads: usize,
+    pub mode: ExecMode,
+    /// Which deque the work-stealing modes run on (ignored by
+    /// [`ExecMode::SharedQueue`]).
+    pub deque: DequeImpl,
+    /// Optional home hint per job (the fleet passes chip ids; taken
+    /// modulo the thread count). `None` round-robins by job id.
+    pub affinity: Option<&'a [usize]>,
+    /// Width of each affinity value's home *set* (clamped to
+    /// `[1, threads]`): job `j` with hint `a` homes on
+    /// `(a + j % home_set) % threads`. `1` = PR 5's single home.
+    pub home_set: usize,
+    /// Bound of the shared queue under [`ExecMode::SharedQueue`];
+    /// ignored by the work-stealing modes (jobs are pre-partitioned,
+    /// nothing ever blocks).
+    pub queue_cap: usize,
+}
+
+impl<'a> ExecPlan<'a> {
+    /// The serve-shaped default: lock-free work-stealing, no affinity,
+    /// single-worker home sets.
+    pub fn new(threads: usize) -> Self {
+        ExecPlan {
+            threads,
+            mode: ExecMode::WorkSteal { steal: true },
+            deque: DequeImpl::LockFree,
+            affinity: None,
+            home_set: 1,
+            queue_cap: 1,
         }
+    }
+
+    /// Stable executor label used in `BENCH_perf.json` rows and bench
+    /// names: `shared` | `steal_off` | `mutex` | `lockfree`.
+    pub fn label(&self) -> &'static str {
+        executor_label(self.mode, self.deque)
+    }
+}
+
+/// Label of a (mode, deque) pair — `mutex` vs `lockfree` only matters
+/// once stealing contends on the deque ends.
+pub fn executor_label(mode: ExecMode, deque: DequeImpl) -> &'static str {
+    match (mode, deque) {
+        (ExecMode::SharedQueue, _) => "shared",
+        (ExecMode::WorkSteal { steal: false }, _) => "steal_off",
+        (ExecMode::WorkSteal { steal: true }, DequeImpl::Mutex) => "mutex",
+        (ExecMode::WorkSteal { steal: true }, DequeImpl::LockFree) => "lockfree",
     }
 }
 
@@ -83,14 +140,28 @@ impl ExecMode {
 pub struct ExecStats {
     pub threads: usize,
     pub mode: ExecMode,
+    pub deque: DequeImpl,
+    /// Home-set width the plan ran with (1 under the shared queue).
+    pub home_set: usize,
     /// Successful steals (jobs executed by a non-home worker). Always 0
     /// under [`ExecMode::SharedQueue`] (no home to steal from).
     pub steals: u64,
     /// Per job id: was it executed by a thief? (All `false` under the
     /// shared queue.) The fleet folds this into per-chip counters.
     pub stolen_jobs: Vec<bool>,
+    /// Jobs executed per worker thread. Deterministic only under
+    /// `steal: false` (the home placement); scheduling-dependent
+    /// otherwise — observability, never digested.
+    pub per_worker: Vec<u64>,
     /// Wall-clock span of the whole execution in nanoseconds.
     pub wall_nanos: u128,
+}
+
+impl ExecStats {
+    /// Stable executor label of the run (see [`executor_label`]).
+    pub fn executor_label(&self) -> &'static str {
+        executor_label(self.mode, self.deque)
+    }
 }
 
 /// Predictions (per job, in job-id order) + execution stats.
@@ -99,52 +170,45 @@ pub struct ExecReport {
     pub stats: ExecStats,
 }
 
-/// Per-job result slot: `(predictions, executed-by-a-thief)`.
-type ResultSlot = Mutex<Option<(Vec<usize>, bool)>>;
-
-/// One worker's deque. Owner end = front (FIFO in job-id order, so a
-/// chip's mask epochs are visited in timeline order); thief end = back
-/// — the Chase-Lev discipline with a mutex standing in for the
-/// lock-free ring (jobs are batch-sized, the lock is touched once per
-/// job, and correctness must hold without a loom-style test harness).
-struct StealDeque<T> {
-    inner: Mutex<VecDeque<T>>,
+/// A dry worker's steal-scan order: set peers first — workers within
+/// `home_set` distance (they share home sets with this worker's
+/// chips, so their deques hold the warmest candidate work) — then the
+/// remaining workers round-robin from the right neighbour. With
+/// `home_set = 1` there are no peers and this is exactly PR 5's scan.
+fn scan_order(w: usize, threads: usize, home_set: usize) -> Vec<usize> {
+    let k = home_set.clamp(1, threads.max(1));
+    let mut peers = Vec::new();
+    let mut rest = Vec::new();
+    for off in 1..threads {
+        let target = (w + off) % threads;
+        // circular distance < k ⇒ some chip homes on both `w` and
+        // `target`
+        if off < k || threads - off < k {
+            peers.push(target);
+        } else {
+            rest.push(target);
+        }
+    }
+    peers.extend(rest);
+    peers
 }
 
-impl<T> StealDeque<T> {
-    fn new() -> Self {
-        Self { inner: Mutex::new(VecDeque::new()) }
-    }
-
-    /// Enqueue at the owner's processing tail (jobs are loaded in id
-    /// order before the workers start).
-    fn push_back(&self, item: T) {
-        self.inner.lock().unwrap().push_back(item);
-    }
-
-    /// Owner end: next job in id order.
-    fn pop_front(&self) -> Option<T> {
-        self.inner.lock().unwrap().pop_front()
-    }
-
-    /// Thief end: the job farthest from the owner's current locality.
-    fn steal_back(&self) -> Option<T> {
-        self.inner.lock().unwrap().pop_back()
+/// Home worker of job `idx` under the plan's affinity and home-set
+/// width.
+fn home_of(idx: usize, affinity: Option<&[usize]>, threads: usize, k: usize) -> usize {
+    match affinity {
+        Some(a) => (a[idx] + idx % k) % threads,
+        None => idx % threads,
     }
 }
 
 /// Execute every job; returns per-job prediction vectors in job-id
 /// order plus the (nondeterministic) execution stats.
 ///
-/// * `affinity` — optional home-worker hint per job (the fleet passes
-///   chip ids; the value is taken modulo the thread count). `None`
-///   round-robins by job id, which is the serve-shaped default.
-/// * `queue_cap` — bound of the shared queue under
-///   [`ExecMode::SharedQueue`]; ignored by the work-stealing modes
-///   (jobs are pre-partitioned, nothing ever blocks).
-///
-/// Generic over borrowed jobs exactly like the PR-2 pool so multi-chip
-/// callers can execute `&[&BatchJob]` views without cloning.
+/// Legacy signature over [`execute_plan`]: lock-free deque,
+/// single-worker home sets. Generic over borrowed jobs exactly like
+/// the PR-2 pool so multi-chip callers can execute `&[&BatchJob]`
+/// views without cloning.
 pub fn execute<J>(
     engine: &Arc<Engine>,
     jobs: &[J],
@@ -156,36 +220,67 @@ pub fn execute<J>(
 where
     J: Borrow<BatchJob> + Sync,
 {
-    let threads = threads.max(1);
-    if let Some(aff) = affinity {
+    execute_plan(
+        engine,
+        jobs,
+        &ExecPlan {
+            threads,
+            mode,
+            deque: DequeImpl::LockFree,
+            affinity,
+            home_set: 1,
+            queue_cap,
+        },
+    )
+}
+
+/// [`execute`] with the full plan: deque implementation and home-set
+/// width included.
+pub fn execute_plan<J>(engine: &Arc<Engine>, jobs: &[J], plan: &ExecPlan) -> Result<ExecReport>
+where
+    J: Borrow<BatchJob> + Sync,
+{
+    let threads = plan.threads.max(1);
+    let k = plan.home_set.clamp(1, threads);
+    if let Some(aff) = plan.affinity {
         assert_eq!(aff.len(), jobs.len(), "one affinity per job");
     }
     let t0 = Instant::now();
+    let stats = |steals, stolen_jobs, per_worker| ExecStats {
+        threads,
+        mode: plan.mode,
+        deque: plan.deque,
+        home_set: k,
+        steals,
+        stolen_jobs,
+        per_worker,
+        wall_nanos: t0.elapsed().as_nanos(),
+    };
     if jobs.is_empty() {
         return Ok(ExecReport {
             predictions: Vec::new(),
-            stats: ExecStats {
-                threads,
-                mode,
-                steals: 0,
-                stolen_jobs: Vec::new(),
-                wall_nanos: t0.elapsed().as_nanos(),
-            },
+            stats: stats(0, Vec::new(), vec![0; threads]),
         });
     }
 
-    let results: Vec<ResultSlot> = jobs.iter().map(|_| Mutex::new(None)).collect();
+    // One-shot atomic result slots (state word + payload publication —
+    // `super::slot`); each job id writes its own slot exactly once.
+    let results: Vec<OnceSlot<(Vec<usize>, bool)>> =
+        jobs.iter().map(|_| OnceSlot::new()).collect();
     let failed = AtomicBool::new(false);
     let failure: Mutex<Option<anyhow::Error>> = Mutex::new(None);
     let steal_count = AtomicU64::new(0);
+    let per_worker: Vec<AtomicU64> = (0..threads).map(|_| AtomicU64::new(0)).collect();
 
-    let run_job = |idx: usize, job: &BatchJob, stolen: bool| {
+    let run_job = |idx: usize, job: &BatchJob, stolen: bool, worker: usize| {
         if failed.load(Ordering::Acquire) {
             return; // first failure wins; stop burning cycles
         }
         match engine.predict_batch_by_index(&job.image_idxs, &job.masks) {
             Ok(preds) => {
-                *results[idx].lock().unwrap() = Some((preds, stolen));
+                let won = results[idx].publish((preds, stolen));
+                debug_assert!(won, "job {idx} executed twice");
+                per_worker[worker].fetch_add(1, Ordering::Relaxed);
             }
             Err(e) => {
                 failed.store(true, Ordering::Release);
@@ -197,16 +292,17 @@ where
         }
     };
 
-    match mode {
-        ExecMode::SharedQueue => {
-            let queue: BoundedQueue<(usize, &BatchJob)> = BoundedQueue::new(queue_cap.max(1));
+    match (plan.mode, plan.deque) {
+        (ExecMode::SharedQueue, _) => {
+            let queue: BoundedQueue<(usize, &BatchJob)> =
+                BoundedQueue::new(plan.queue_cap.max(1));
             std::thread::scope(|scope| {
                 let queue_ref = &queue;
                 let run_job = &run_job;
-                for _ in 0..threads {
+                for w in 0..threads {
                     scope.spawn(move || {
                         while let Some((idx, job)) = queue_ref.pop() {
-                            run_job(idx, job, false);
+                            run_job(idx, job, false, w);
                         }
                     });
                 }
@@ -218,46 +314,101 @@ where
                 queue_ref.close();
             });
         }
-        ExecMode::WorkSteal { steal } => {
-            let deques: Vec<StealDeque<(usize, &BatchJob)>> =
-                (0..threads).map(|_| StealDeque::new()).collect();
+        (ExecMode::WorkSteal { steal }, DequeImpl::Mutex) => {
+            let deques: Vec<MutexDeque<(usize, &BatchJob)>> =
+                (0..threads).map(|_| MutexDeque::new()).collect();
             for (idx, job) in jobs.iter().enumerate() {
-                let home = affinity.map_or(idx, |a| a[idx]) % threads;
-                deques[home].push_back((idx, job.borrow()));
+                deques[home_of(idx, plan.affinity, threads, k)].push_back((idx, job.borrow()));
             }
             std::thread::scope(|scope| {
                 let deques = &deques;
                 let run_job = &run_job;
                 let steal_count = &steal_count;
                 for w in 0..threads {
-                    scope.spawn(move || loop {
-                        // own work first (front = job-id order, keeps
-                        // this home's mask epochs warm)
-                        if let Some((idx, job)) = deques[w].pop_front() {
-                            run_job(idx, job, false);
-                            continue;
-                        }
-                        if !steal {
-                            break; // static partition: home drained, done
-                        }
-                        // dry: scan the other deques from the right
-                        // neighbour, steal one job from the back
-                        let mut found = None;
-                        for off in 1..threads {
-                            if let Some(item) = deques[(w + off) % threads].steal_back() {
-                                found = Some(item);
-                                break;
+                    let order = scan_order(w, threads, k);
+                    scope.spawn(move || {
+                        'worker: loop {
+                            // own work first (front = job-id order,
+                            // keeps this home's mask epochs warm)
+                            while let Some((idx, job)) = deques[w].pop_front() {
+                                run_job(idx, job, false, w);
                             }
-                        }
-                        match found {
-                            Some((idx, job)) => {
-                                steal_count.fetch_add(1, Ordering::Relaxed);
-                                run_job(idx, job, true);
+                            if !steal {
+                                break; // static partition: home drained, done
+                            }
+                            // dry: scan set peers first, then the rest;
+                            // steal one job from the back
+                            for &victim in &order {
+                                if let Some((idx, job)) = deques[victim].steal_back() {
+                                    steal_count.fetch_add(1, Ordering::Relaxed);
+                                    run_job(idx, job, true, w);
+                                    continue 'worker;
+                                }
                             }
                             // every deque empty: all jobs are claimed
-                            // (none is ever re-queued), so nothing is
-                            // left for this worker — exit
-                            None => break,
+                            // (none is ever re-queued) — exit
+                            break;
+                        }
+                    });
+                }
+            });
+        }
+        (ExecMode::WorkSteal { steal }, DequeImpl::LockFree) => {
+            let mut owners: Vec<Worker<(usize, &BatchJob)>> = Vec::with_capacity(threads);
+            let mut stealers: Vec<Stealer<(usize, &BatchJob)>> = Vec::with_capacity(threads);
+            for _ in 0..threads {
+                let (w, s) = lf_deque();
+                owners.push(w);
+                stealers.push(s);
+            }
+            // Load in *reverse* id order: the ring's LIFO owner end
+            // then pops ascending ids and thieves steal the highest —
+            // the same observable ends as the mutex deque.
+            for (idx, job) in jobs.iter().enumerate().rev() {
+                owners[home_of(idx, plan.affinity, threads, k)].push((idx, job.borrow()));
+            }
+            std::thread::scope(|scope| {
+                let stealers = &stealers;
+                let run_job = &run_job;
+                let steal_count = &steal_count;
+                for (w, owner) in owners.drain(..).enumerate() {
+                    let order = scan_order(w, threads, k);
+                    scope.spawn(move || {
+                        'worker: loop {
+                            while let Some((idx, job)) = owner.pop() {
+                                run_job(idx, job, false, w);
+                            }
+                            if !steal {
+                                break; // static partition: home drained, done
+                            }
+                            // dry: scan under a spin→yield backoff —
+                            // `Retry` (a lost race) re-scans, all-`Empty`
+                            // exits (owners drain their own deques, so an
+                            // all-empty scan means nothing is left to take)
+                            let mut backoff = Backoff::new();
+                            loop {
+                                let mut contended = false;
+                                let mut taken = None;
+                                for &victim in &order {
+                                    match stealers[victim].steal() {
+                                        Steal::Done(item) => {
+                                            taken = Some(item);
+                                            break;
+                                        }
+                                        Steal::Retry => contended = true,
+                                        Steal::Empty => {}
+                                    }
+                                }
+                                match taken {
+                                    Some((idx, job)) => {
+                                        steal_count.fetch_add(1, Ordering::Relaxed);
+                                        run_job(idx, job, true, w);
+                                        continue 'worker;
+                                    }
+                                    None if contended => backoff.snooze(),
+                                    None => break 'worker,
+                                }
+                            }
                         }
                     });
                 }
@@ -273,7 +424,6 @@ where
     for (idx, slot) in results.into_iter().enumerate() {
         let (preds, stolen) = slot
             .into_inner()
-            .unwrap()
             .with_context(|| format!("batch job {idx} was never executed"))?;
         predictions.push(preds);
         stolen_jobs.push(stolen);
@@ -284,15 +434,10 @@ where
         stolen_jobs.iter().filter(|&&s| s).count() as u64,
         "steal counter must agree with the per-job flags"
     );
+    let per_worker: Vec<u64> = per_worker.into_iter().map(|c| c.into_inner()).collect();
     Ok(ExecReport {
         predictions,
-        stats: ExecStats {
-            threads,
-            mode,
-            steals,
-            stolen_jobs,
-            wall_nanos: t0.elapsed().as_nanos(),
-        },
+        stats: stats(steals, stolen_jobs, per_worker),
     })
 }
 
@@ -345,7 +490,7 @@ mod tests {
     }
 
     #[test]
-    fn every_mode_and_width_produces_identical_predictions() {
+    fn every_plan_produces_identical_predictions() {
         let engine = engine();
         let timeline = simulate_timeline(&engine, &cfg());
         let reference = execute(&engine, &timeline.jobs, None, 1, ExecMode::SharedQueue, 4)
@@ -353,18 +498,50 @@ mod tests {
             .predictions;
         let affinity: Vec<usize> = timeline.jobs.iter().map(|j| j.lane).collect();
         for mode in all_modes() {
-            for threads in [1usize, 2, 3, 8] {
-                for aff in [None, Some(affinity.as_slice())] {
-                    let got = execute(&engine, &timeline.jobs, aff, threads, mode, 4).unwrap();
-                    assert_eq!(
-                        got.predictions, reference,
-                        "mode {:?} threads {threads} affinity {:?} diverged",
-                        mode,
-                        aff.is_some()
-                    );
-                    assert_eq!(got.stats.stolen_jobs.len(), timeline.jobs.len());
+            for deque in [DequeImpl::Mutex, DequeImpl::LockFree] {
+                for threads in [1usize, 2, 3, 8] {
+                    for aff in [None, Some(affinity.as_slice())] {
+                        for home_set in [1usize, 2] {
+                            let plan = ExecPlan {
+                                threads,
+                                mode,
+                                deque,
+                                affinity: aff,
+                                home_set,
+                                queue_cap: 4,
+                            };
+                            let got = execute_plan(&engine, &timeline.jobs, &plan).unwrap();
+                            assert_eq!(
+                                got.predictions, reference,
+                                "{} threads {threads} affinity {:?} home_set {home_set} diverged",
+                                plan.label(),
+                                aff.is_some()
+                            );
+                            assert_eq!(got.stats.stolen_jobs.len(), timeline.jobs.len());
+                            assert_eq!(
+                                got.stats.per_worker.iter().sum::<u64>(),
+                                timeline.jobs.len() as u64,
+                                "every job counted on exactly one worker"
+                            );
+                        }
+                    }
                 }
             }
+        }
+    }
+
+    #[test]
+    fn executor_labels_distinguish_the_four_topologies() {
+        let plans = [
+            (ExecMode::SharedQueue, DequeImpl::LockFree, "shared"),
+            (ExecMode::WorkSteal { steal: false }, DequeImpl::LockFree, "steal_off"),
+            (ExecMode::WorkSteal { steal: true }, DequeImpl::Mutex, "mutex"),
+            (ExecMode::WorkSteal { steal: true }, DequeImpl::LockFree, "lockfree"),
+        ];
+        for (mode, deque, want) in plans {
+            assert_eq!(executor_label(mode, deque), want);
+            let plan = ExecPlan { mode, deque, ..ExecPlan::new(2) };
+            assert_eq!(plan.label(), want);
         }
     }
 
@@ -375,32 +552,82 @@ mod tests {
         let report = execute(&engine, &timeline.jobs, None, 4, ExecMode::SharedQueue, 4).unwrap();
         assert_eq!(report.stats.steals, 0);
         assert!(report.stats.stolen_jobs.iter().all(|&s| !s));
-        assert_eq!(report.stats.mode.label(), "shared");
+        assert_eq!(report.stats.executor_label(), "shared");
     }
 
     #[test]
     fn steal_off_executes_everything_even_with_skewed_affinity() {
         // all jobs homed on worker 0 of 4, no stealing: worker 0 must
         // drain them alone, the rest exit immediately — no job lost, no
-        // hang (the static-partition termination edge case)
+        // hang (the static-partition termination edge case), on both
+        // deque implementations
         let engine = engine();
         let timeline = simulate_timeline(&engine, &cfg());
         let home_zero = vec![0usize; timeline.jobs.len()];
-        let got = execute(
-            &engine,
-            &timeline.jobs,
-            Some(&home_zero),
-            4,
-            ExecMode::WorkSteal { steal: false },
-            4,
-        )
-        .unwrap();
-        assert_eq!(got.predictions.len(), timeline.jobs.len());
-        assert_eq!(got.stats.steals, 0, "stealing is off");
         let reference = execute(&engine, &timeline.jobs, None, 1, ExecMode::SharedQueue, 4)
             .unwrap()
             .predictions;
-        assert_eq!(got.predictions, reference);
+        for deque in [DequeImpl::Mutex, DequeImpl::LockFree] {
+            let plan = ExecPlan {
+                threads: 4,
+                mode: ExecMode::WorkSteal { steal: false },
+                deque,
+                affinity: Some(&home_zero),
+                home_set: 1,
+                queue_cap: 4,
+            };
+            let got = execute_plan(&engine, &timeline.jobs, &plan).unwrap();
+            assert_eq!(got.predictions.len(), timeline.jobs.len());
+            assert_eq!(got.stats.steals, 0, "stealing is off");
+            assert_eq!(got.predictions, reference);
+            assert_eq!(
+                got.stats.per_worker,
+                vec![timeline.jobs.len() as u64, 0, 0, 0],
+                "static partition: worker 0 did everything ({})",
+                plan.label()
+            );
+        }
+    }
+
+    #[test]
+    fn home_set_spreads_a_hot_chip_across_the_set() {
+        // same skew, but home_set = 2 under the static partition: the
+        // hot chip's jobs must land on exactly workers {0, 1}, split by
+        // job-id parity — deterministic, because nothing is stolen
+        let engine = engine();
+        let timeline = simulate_timeline(&engine, &cfg());
+        let home_zero = vec![0usize; timeline.jobs.len()];
+        let plan = ExecPlan {
+            threads: 4,
+            mode: ExecMode::WorkSteal { steal: false },
+            deque: DequeImpl::LockFree,
+            affinity: Some(&home_zero),
+            home_set: 2,
+            queue_cap: 4,
+        };
+        let got = execute_plan(&engine, &timeline.jobs, &plan).unwrap();
+        let jobs = timeline.jobs.len() as u64;
+        assert_eq!(got.stats.per_worker[0], jobs.div_ceil(2), "even job ids");
+        assert_eq!(got.stats.per_worker[1], jobs / 2, "odd job ids");
+        assert_eq!(got.stats.per_worker[2] + got.stats.per_worker[3], 0);
+        let reference = execute(&engine, &timeline.jobs, None, 1, ExecMode::SharedQueue, 4)
+            .unwrap()
+            .predictions;
+        assert_eq!(got.predictions, reference, "spreading must not change results");
+    }
+
+    #[test]
+    fn scan_order_puts_set_peers_first() {
+        // home_set 1: plain right-neighbour round-robin (PR 5's scan)
+        assert_eq!(scan_order(1, 4, 1), vec![2, 3, 0]);
+        // home_set 2 on 6 workers: the circular-distance-1 peers come
+        // first (right then left), then the rest in scan order
+        assert_eq!(scan_order(2, 6, 2), vec![3, 1, 4, 5, 0]);
+        // width ≥ threads: everyone is a peer — order degenerates to
+        // the round-robin scan
+        assert_eq!(scan_order(0, 3, 8), vec![1, 2]);
+        // one worker: nobody to steal from
+        assert_eq!(scan_order(0, 1, 1), Vec::<usize>::new());
     }
 
     #[test]
@@ -408,27 +635,30 @@ mod tests {
         // same skew with stealing on: thieves must lift jobs off worker
         // 0 (scheduling-dependent, so assert the accounting, not a
         // specific count — with 7 thieves and a multi-job backlog at
-        // least the per-flag/counter agreement must hold)
+        // least the per-flag/counter agreement must hold), on both
+        // deque implementations
         let engine = engine();
         let timeline = simulate_timeline(&engine, &cfg());
         let home_zero = vec![0usize; timeline.jobs.len()];
-        let got = execute(
-            &engine,
-            &timeline.jobs,
-            Some(&home_zero),
-            8,
-            ExecMode::WorkSteal { steal: true },
-            4,
-        )
-        .unwrap();
-        assert_eq!(
-            got.stats.steals,
-            got.stats.stolen_jobs.iter().filter(|&&s| s).count() as u64
-        );
         let reference = execute(&engine, &timeline.jobs, None, 1, ExecMode::SharedQueue, 4)
             .unwrap()
             .predictions;
-        assert_eq!(got.predictions, reference);
+        for deque in [DequeImpl::Mutex, DequeImpl::LockFree] {
+            let plan = ExecPlan {
+                threads: 8,
+                mode: ExecMode::WorkSteal { steal: true },
+                deque,
+                affinity: Some(&home_zero),
+                home_set: 1,
+                queue_cap: 4,
+            };
+            let got = execute_plan(&engine, &timeline.jobs, &plan).unwrap();
+            assert_eq!(
+                got.stats.steals,
+                got.stats.stolen_jobs.iter().filter(|&&s| s).count() as u64
+            );
+            assert_eq!(got.predictions, reference);
+        }
     }
 
     #[test]
@@ -438,40 +668,7 @@ mod tests {
             let r = execute::<BatchJob>(&engine, &[], None, 3, mode, 4).unwrap();
             assert!(r.predictions.is_empty());
             assert_eq!(r.stats.steals, 0);
-        }
-    }
-
-    #[test]
-    fn deque_owner_and_thief_take_opposite_ends() {
-        let d: StealDeque<u32> = StealDeque::new();
-        d.push_back(1);
-        d.push_back(2);
-        d.push_back(3);
-        assert_eq!(d.pop_front(), Some(1), "owner end is the front");
-        assert_eq!(d.steal_back(), Some(3), "thief end is the back");
-        assert_eq!(d.pop_front(), Some(2));
-        // empty steal and empty pop are clean Nones
-        assert_eq!(d.steal_back(), None);
-        assert_eq!(d.pop_front(), None);
-    }
-
-    #[test]
-    fn deque_single_slot_race_hands_the_item_to_exactly_one_side() {
-        // one item, one owner popping, many thieves stealing, repeated:
-        // exactly one side wins each round, nothing is duplicated or
-        // lost (the single-slot race of the steal protocol)
-        for _ in 0..200 {
-            let d: StealDeque<u32> = StealDeque::new();
-            d.push_back(42);
-            let winners: usize = std::thread::scope(|s| {
-                let owner = s.spawn(|| usize::from(d.pop_front().is_some()));
-                let thieves: Vec<_> = (0..3)
-                    .map(|_| s.spawn(|| usize::from(d.steal_back().is_some())))
-                    .collect();
-                owner.join().unwrap()
-                    + thieves.into_iter().map(|t| t.join().unwrap()).sum::<usize>()
-            });
-            assert_eq!(winners, 1, "the single item must go to exactly one taker");
+            assert_eq!(r.stats.per_worker, vec![0, 0, 0]);
         }
     }
 
@@ -483,17 +680,19 @@ mod tests {
         // spinning on its own deque
         let engine = engine();
         let timeline = simulate_timeline(&engine, &cfg());
-        let got = execute(
-            &engine,
-            &timeline.jobs,
-            None,
-            1,
-            ExecMode::WorkSteal { steal: true },
-            4,
-        )
-        .unwrap();
-        assert_eq!(got.stats.steals, 0, "a lone worker can never steal");
-        assert_eq!(got.predictions.len(), timeline.jobs.len());
+        for deque in [DequeImpl::Mutex, DequeImpl::LockFree] {
+            let plan = ExecPlan {
+                threads: 1,
+                mode: ExecMode::WorkSteal { steal: true },
+                deque,
+                affinity: None,
+                home_set: 1,
+                queue_cap: 4,
+            };
+            let got = execute_plan(&engine, &timeline.jobs, &plan).unwrap();
+            assert_eq!(got.stats.steals, 0, "a lone worker can never steal");
+            assert_eq!(got.predictions.len(), timeline.jobs.len());
+        }
     }
 
     #[test]

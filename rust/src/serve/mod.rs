@@ -18,9 +18,11 @@
 //!   determinism lint enforces it for this directory).
 //! * *Real compute* — [`pool::execute`] replays the timeline's batch
 //!   jobs through the work-stealing executor ([`executor`]): per-worker
-//!   deques with home affinity, Chase-Lev-style back-end stealing, and
-//!   the PR-2 shared [`queue::BoundedQueue`] retained as the measured
-//!   baseline (`repro perf`). Workers share one engine and borrow its
+//!   lock-free Chase-Lev deques ([`deque`], interleaving-proved via
+//!   [`crate::loomsim`]) with home-set affinity, one-shot atomic result
+//!   slots ([`slot`]), and both the mutex deque and the PR-2 shared
+//!   [`queue::BoundedQueue`] retained as measured baselines
+//!   (`repro perf`). Workers share one engine and borrow its
 //!   eval images by index (no per-job clones); each job is pure, so
 //!   predictions are byte-identical at any `executor_threads`, any
 //!   affinity map and any steal interleaving (property-tested in
@@ -33,12 +35,16 @@
 //! `BENCH_serve.json` golden test.
 
 pub mod batcher;
+pub mod deque;
 pub mod executor;
 pub mod loadgen;
 pub mod metrics;
 pub mod pool;
+#[cfg(any(test, loom))]
+pub mod proofs;
 pub mod queue;
 pub mod scan_agent;
+pub mod slot;
 
 use std::cmp::Reverse;
 use std::collections::{BTreeSet, BinaryHeap};

@@ -7,8 +7,9 @@
 //! `SharedQueue` baseline, the clone is gone — workers borrow
 //! `eval.images` through [`crate::inference::Engine::predict_batch_by_index`]).
 //! `execute` keeps the PR-2 signature so existing callers and tests
-//! compile unchanged: round-robin home affinity by job id, stealing on,
-//! stats discarded. Each job is a pure function of its image indices
+//! compile unchanged: round-robin home affinity by job id, stealing on
+//! over the lock-free Chase-Lev deques ([`super::deque`]), stats
+//! discarded. Each job is a pure function of its image indices
 //! and masks, and results land in per-job slots keyed by job id — so
 //! the final prediction vector is byte-identical at any thread count
 //! and any scheduling interleaving, which is exactly the invariance the

@@ -1,0 +1,177 @@
+//! One-shot atomic result publication — the lock-free replacement for
+//! the executor's per-job `Mutex<Option<..>>` result slots
+//! (DESIGN.md §8).
+//!
+//! A [`OnceSlot`] goes `EMPTY → CLAIMED → READY`, exactly once:
+//!
+//! 1. a publisher CASes the state word `EMPTY → CLAIMED` — losing the
+//!    CAS means someone else owns the slot and the loser backs off with
+//!    its value untouched;
+//! 2. the winner writes the payload into the `UnsafeCell` — no other
+//!    thread reads or writes it while the state is `CLAIMED`;
+//! 3. a `Release` store of `READY` publishes the payload: any reader
+//!    whose `Acquire` load observes `READY` observes the full payload
+//!    write (the pairing the mutex used to provide).
+//!
+//! In the executor every job writes its own slot exactly once, so the
+//! CAS never actually loses — the protocol still proves the general
+//! race (`serve::proofs::slot_publish_race`) because that is what
+//! makes the *absence* of the mutex safe rather than lucky.
+
+use std::mem::MaybeUninit;
+
+use crate::loomsim::sync::{AtomicU32, Ordering, UnsafeCell};
+
+const EMPTY: u32 = 0;
+const CLAIMED: u32 = 1;
+const READY: u32 = 2;
+
+/// A write-once cell: many racing publishers, exactly one winner,
+/// readers see either nothing or the complete value.
+pub struct OnceSlot<T> {
+    state: AtomicU32,
+    value: UnsafeCell<MaybeUninit<T>>,
+}
+
+// Safety: the state machine hands the payload from the single CLAIMED
+// writer to readers only through the Release(READY)/Acquire pairing.
+unsafe impl<T: Send> Send for OnceSlot<T> {}
+unsafe impl<T: Send> Sync for OnceSlot<T> {}
+
+impl<T> Default for OnceSlot<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T> OnceSlot<T> {
+    pub fn new() -> Self {
+        OnceSlot {
+            state: AtomicU32::new(EMPTY),
+            value: UnsafeCell::new(MaybeUninit::uninit()),
+        }
+    }
+
+    /// Try to publish `v`. Returns `true` if this call won the slot;
+    /// on `false` the slot already belongs to another publisher and
+    /// `v` is dropped (the caller lost the one-shot race).
+    pub fn publish(&self, v: T) -> bool {
+        if self
+            .state
+            .compare_exchange(EMPTY, CLAIMED, Ordering::Acquire, Ordering::Relaxed)
+            .is_err()
+        {
+            return false;
+        }
+        self.value.with_mut(|p| unsafe {
+            (*p).write(v);
+        });
+        self.state.store(READY, Ordering::Release);
+        true
+    }
+
+    /// `true` once a published value is fully visible to this thread.
+    pub fn is_ready(&self) -> bool {
+        self.state.load(Ordering::Acquire) == READY
+    }
+
+    /// Consume the slot. `None` when nothing was ever published (an
+    /// in-flight `CLAIMED` cannot be observed here: consuming takes
+    /// ownership, so every publisher has returned).
+    pub fn into_inner(self) -> Option<T> {
+        let me = std::mem::ManuallyDrop::new(self);
+        if me.state.load(Ordering::Acquire) != READY {
+            return None;
+        }
+        Some(me.value.with(|p| unsafe { (*p).assume_init_read() }))
+    }
+}
+
+impl<T> Drop for OnceSlot<T> {
+    fn drop(&mut self) {
+        if self.state.load(Ordering::Relaxed) == READY {
+            self.value.with_mut(|p| unsafe {
+                (*p).assume_init_drop();
+            });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn publish_then_consume_round_trips() {
+        let slot: OnceSlot<Vec<usize>> = OnceSlot::new();
+        assert!(!slot.is_ready());
+        assert!(slot.publish(vec![1, 2, 3]));
+        assert!(slot.is_ready());
+        assert_eq!(slot.into_inner(), Some(vec![1, 2, 3]));
+    }
+
+    #[test]
+    fn the_second_publisher_loses_and_the_first_value_survives() {
+        let slot: OnceSlot<u64> = OnceSlot::new();
+        assert!(slot.publish(41));
+        assert!(!slot.publish(99), "one-shot: the slot is spoken for");
+        assert_eq!(slot.into_inner(), Some(41));
+    }
+
+    #[test]
+    fn an_unpublished_slot_consumes_to_none() {
+        let slot: OnceSlot<String> = OnceSlot::new();
+        assert_eq!(slot.into_inner(), None);
+    }
+
+    #[test]
+    fn dropping_published_and_unpublished_slots_is_leak_free() {
+        let probe = Arc::new(());
+        {
+            let published: OnceSlot<Arc<()>> = OnceSlot::new();
+            assert!(published.publish(Arc::clone(&probe)));
+            let empty: OnceSlot<Arc<()>> = OnceSlot::new();
+            drop(empty);
+        } // `published` dropped here without consumption
+        assert_eq!(Arc::strong_count(&probe), 1, "drop must free the payload");
+
+        let consumed: OnceSlot<Arc<()>> = OnceSlot::new();
+        assert!(consumed.publish(Arc::clone(&probe)));
+        let v = consumed.into_inner().unwrap();
+        drop(v);
+        assert_eq!(Arc::strong_count(&probe), 1, "no double free after take");
+    }
+
+    #[test]
+    fn losing_publishers_drop_their_value_exactly_once() {
+        let winner = Arc::new(());
+        let loser = Arc::new(());
+        let slot: OnceSlot<Arc<()>> = OnceSlot::new();
+        assert!(slot.publish(Arc::clone(&winner)));
+        assert!(!slot.publish(Arc::clone(&loser)));
+        assert_eq!(Arc::strong_count(&loser), 1, "the losing value was dropped");
+        assert_eq!(Arc::strong_count(&winner), 2, "the winning value is held");
+        drop(slot);
+        assert_eq!(Arc::strong_count(&winner), 1);
+    }
+
+    #[test]
+    fn racing_publishers_from_real_threads_produce_one_winner() {
+        for _ in 0..200 {
+            let slot = Arc::new(OnceSlot::<usize>::new());
+            let wins: usize = std::thread::scope(|s| {
+                let handles: Vec<_> = (0..4)
+                    .map(|i| {
+                        let slot = Arc::clone(&slot);
+                        s.spawn(move || usize::from(slot.publish(i)))
+                    })
+                    .collect();
+                handles.into_iter().map(|h| h.join().unwrap()).sum()
+            });
+            assert_eq!(wins, 1, "exactly one publisher may win");
+            let v = Arc::into_inner(slot).unwrap().into_inner();
+            assert!(matches!(v, Some(0..=3)));
+        }
+    }
+}

@@ -63,6 +63,7 @@ fn random_fleet_cfg(g: &mut Gen) -> FleetConfig {
         total_requests: g.usize_in(4, 8 * n_chips),
         queue_cap: clients,
         executor_threads: 1,
+        home_set: g.usize_in(1, 3),
         windows: 4,
         faults,
         lifecycle: LifecyclePolicy::NEVER,

@@ -1,0 +1,64 @@
+//! The dedicated concurrency-proof job for the lock-free executor
+//! (DESIGN.md §8, ROADMAP item 3).
+//!
+//! Compiled only under `RUSTFLAGS="--cfg loom"` — the cfg that also
+//! switches [`hyca::loomsim`]'s facade into its instrumented build for
+//! the whole library, so the deque and result slot under test here are
+//! the exact sources shipping in the executor, not copies. Run it the
+//! way CI does:
+//!
+//! ```text
+//! RUSTFLAGS="--cfg loom" cargo test --manifest-path rust/Cargo.toml \
+//!     --test loom_executor --release
+//! ```
+//!
+//! Tier-1 `cargo test` already runs five of these six proofs as unit
+//! tests (cheaply, via `cfg(test)`); this job exists to (a) run them in
+//! release mode where exploration is fast enough to go deep, and
+//! (b) add the expensive stale-read/wrap-around scenario that is too
+//! slow for the tier-1 wall-clock budget. Every proof must report a
+//! *complete* exploration — hitting a run budget would mean the proof
+//! proved nothing.
+
+#![cfg(loom)]
+
+use hyca::serve::proofs;
+
+/// Assert the exploration exhausted its schedule space and actually
+/// exercised more than one interleaving (a 1-schedule "proof" would
+/// mean the scenario lost its concurrency).
+fn proved(name: &str, e: hyca::loomsim::Explored) {
+    assert!(e.complete, "{name}: exploration hit the run budget — not a proof");
+    assert!(e.schedules > 1, "{name}: only {} schedule(s) explored", e.schedules);
+    eprintln!("[loom] {name}: {} schedules, complete", e.schedules);
+}
+
+#[test]
+fn steal_vs_pop_boundary() {
+    proved("steal_vs_pop_boundary", proofs::steal_vs_pop_boundary());
+}
+
+#[test]
+fn two_thieves_one_item() {
+    proved("two_thieves_one_item", proofs::two_thieves_one_item());
+}
+
+#[test]
+fn wrap_around_slot_reuse() {
+    proved("wrap_around_slot_reuse", proofs::wrap_around_slot_reuse());
+}
+
+#[test]
+fn grow_during_inflight_steal() {
+    proved("grow_during_inflight_steal", proofs::grow_during_inflight_steal());
+}
+
+#[test]
+fn stale_read_discarded_by_top_cas() {
+    proved("stale_read_discarded_by_top_cas", proofs::stale_read_discarded_by_top_cas());
+}
+
+#[test]
+fn slot_publish_race() {
+    proved("slot_publish_race", proofs::slot_publish_race());
+}

@@ -40,7 +40,7 @@ fn bench_json_has_the_documented_schema_and_marks_timing_nondeterministic() {
     let run = exp_perf::run_perf(&opts(0xC0FFEE), true, 1).unwrap();
     let json = exp_perf::perf_json(0xC0FFEE, true, &run);
     for key in [
-        "\"schema\": \"hyca-perf-bench-v1\"",
+        "\"schema\": \"hyca-perf-bench-v2\"",
         "\"deterministic\": {",
         "\"grid\": [",
         "\"chips\": 1",
@@ -50,7 +50,9 @@ fn bench_json_has_the_documented_schema_and_marks_timing_nondeterministic() {
         "\"nondeterministic\": true",
         "\"executor\": \"shared\"",
         "\"executor\": \"steal_off\"",
-        "\"executor\": \"steal_on\"",
+        "\"executor\": \"mutex\"",
+        "\"executor\": \"lockfree\"",
+        "\"home_set\": 2",
         "\"wall_ms\":",
         "\"jobs_per_sec\":",
         "\"steals\":",
@@ -61,22 +63,44 @@ fn bench_json_has_the_documented_schema_and_marks_timing_nondeterministic() {
 }
 
 #[test]
-fn timing_grid_covers_every_cell_and_shared_never_steals() {
+fn timing_grid_covers_every_cell_and_only_stealing_plans_steal() {
     let run = exp_perf::run_perf(&opts(0xC0FFEE), true, 1).unwrap();
     let chips = exp_perf::chip_sweep(true);
     assert_eq!(
         run.timing.len(),
-        chips.len() * exp_perf::THREAD_SWEEP.len() * exp_perf::mode_sweep().len(),
-        "one timed row per (chips × threads × executor) cell"
+        chips.len() * exp_perf::THREAD_SWEEP.len() * exp_perf::plan_sweep().len(),
+        "one timed row per (chips × threads × plan) cell"
     );
     for row in &run.timing {
         assert!(row.wall_ms > 0.0, "{row:?}");
         assert!(row.jobs_per_sec > 0.0, "{row:?}");
-        if row.executor != "steal_on" {
-            assert_eq!(row.steals, 0, "only steal_on may steal: {row:?}");
+        if row.executor != "mutex" && row.executor != "lockfree" {
+            assert_eq!(row.steals, 0, "only stealing plans may steal: {row:?}");
         }
         if row.threads == 1 {
             assert_eq!(row.steals, 0, "a lone worker cannot steal: {row:?}");
+        }
+        assert!(row.home_set >= 1, "{row:?}");
+    }
+    // both deques are measured head-to-head at every (chips, threads)
+    for &c in &chips {
+        for &t in &exp_perf::THREAD_SWEEP {
+            for exec in ["shared", "steal_off", "mutex", "lockfree"] {
+                assert!(
+                    run.timing
+                        .iter()
+                        .any(|r| r.chips == c && r.threads == t && r.executor == exec),
+                    "missing {exec} row at chips={c} threads={t}"
+                );
+            }
+            // the home-set satellite row rides on the lock-free deque
+            assert!(
+                run.timing.iter().any(|r| r.chips == c
+                    && r.threads == t
+                    && r.executor == "lockfree"
+                    && r.home_set == 2),
+                "missing lockfree home_set=2 row at chips={c} threads={t}"
+            );
         }
     }
     // the deterministic section names every swept chip count
@@ -94,5 +118,6 @@ fn perf_experiment_is_registered_and_renders_tables() {
     let workloads = tables[0].to_markdown();
     assert!(workloads.contains("total_cycles"));
     let grid = tables[1].to_markdown();
-    assert!(grid.contains("speedup_vs_shared") && grid.contains("steal_on"));
+    assert!(grid.contains("speedup_vs_shared"));
+    assert!(grid.contains("mutex") && grid.contains("lockfree"));
 }

@@ -506,11 +506,11 @@ fn prop_serve_batched_equals_sequential_and_is_worker_invariant() {
 fn prop_worksteal_executor_is_invariant_to_mode_width_and_affinity() {
     // The work-stealing extension of the executor-invariance contract:
     // for random fleet workloads, every executor topology — legacy
-    // shared queue, static partition (steal off), full work stealing —
-    // at random thread counts and random chip counts produces
-    // prediction vectors bit-identical to the 1-thread shared-queue
-    // reference.
-    use hyca::serve::executor::{self, ExecMode};
+    // shared queue, static partition (steal off), mutex work stealing,
+    // lock-free work stealing — at random thread counts, chip counts,
+    // affinity maps and home-set widths produces prediction vectors
+    // bit-identical to the 1-thread shared-queue reference.
+    use hyca::serve::executor::{self, DequeImpl, ExecMode, ExecPlan};
     check("executor modes/widths/affinity agree", 6, |g| {
         let engine = std::sync::Arc::new(hyca::inference::Engine::builtin());
         let n_chips = g.usize_in(1, 5);
@@ -532,6 +532,7 @@ fn prop_worksteal_executor_is_invariant_to_mode_width_and_affinity() {
             total_requests: g.usize_in(4, 8 * n_chips.max(1)),
             queue_cap: clients,
             executor_threads: 1,
+            home_set: 1,
             windows: 4,
             faults: None,
             lifecycle: hyca::fleet::LifecyclePolicy::NEVER,
@@ -559,12 +560,22 @@ fn prop_worksteal_executor_is_invariant_to_mode_width_and_affinity() {
                 ExecMode::WorkSteal { steal: false },
                 ExecMode::WorkSteal { steal: true },
             ]);
+            let deque = *g.choose(&[DequeImpl::Mutex, DequeImpl::LockFree]);
+            let home_set = g.usize_in(1, 3);
             let aff = if g.bool(0.5) { Some(affinity.as_slice()) } else { None };
-            let got = executor::execute(&engine, &jobs, aff, threads, mode, cfg.queue_cap)
-                .unwrap();
+            let plan = ExecPlan {
+                threads,
+                mode,
+                deque,
+                affinity: aff,
+                home_set,
+                queue_cap: cfg.queue_cap,
+            };
+            let got = executor::execute_plan(&engine, &jobs, &plan).unwrap();
             assert_eq!(
                 got.predictions, reference,
-                "mode {mode:?} threads {threads} chips {n_chips} diverged"
+                "{} threads {threads} chips {n_chips} home_set {home_set} diverged",
+                plan.label()
             );
         }
         // end to end: the fleet's affinity-driven run matches the
@@ -758,6 +769,7 @@ fn prop_tracing_is_inert_and_deterministic() {
             total_requests: g.usize_in(4, 8 * n_chips),
             queue_cap: clients,
             executor_threads: 1,
+            home_set: 1,
             windows: 4,
             faults: None,
             lifecycle: hyca::fleet::LifecyclePolicy::NEVER,
@@ -834,6 +846,7 @@ fn prop_snapshot_resume_equals_the_uninterrupted_run() {
             total_requests: g.usize_in(8, 8 * n_chips.max(2)),
             queue_cap: clients,
             executor_threads: 1,
+            home_set: 1,
             windows: 4,
             faults,
             lifecycle: hyca::fleet::LifecyclePolicy::NEVER,

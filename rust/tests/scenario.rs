@@ -98,6 +98,7 @@ fn legacy_fleet_cell(
         total_requests: if smoke { 32 * n_chips } else { 96 * n_chips },
         queue_cap: clients,
         executor_threads: threads,
+        home_set: 1,
         windows: 4,
         faults: None,
         lifecycle: LifecyclePolicy::NEVER,
@@ -121,6 +122,7 @@ fn legacy_fleet_scenario(seed: u64, smoke: bool, threads: usize) -> FleetConfig 
         total_requests: if smoke { 192 } else { 432 },
         queue_cap: 24,
         executor_threads: threads,
+        home_set: 1,
         windows: 10,
         faults: Some(FaultPlan {
             mean_interarrival_cycles: if smoke { 6_000.0 } else { 20_000.0 },
